@@ -1,0 +1,55 @@
+//! Design-space exploration: sweep the paper's two approximation knobs
+//! (M, T) jointly on the BERT/SQuAD workload and print the full
+//! accuracy ↔ cycles ↔ energy trade-off surface — the tool a system
+//! designer would use to pick an operating point (the paper picks two:
+//! conservative M=n/2/T=5 and aggressive M=n/8/T=10).
+//!
+//! ```bash
+//! cargo run --release --example design_space
+//! ```
+
+use a3::energy::{attribute, Table1};
+use a3::experiments::fig14::simulate_approx;
+use a3::experiments::sweep::{evaluate, EvalBudget};
+use a3::model::backend::{AttentionBackend, MIters};
+use a3::workloads::WorkloadKind;
+
+fn main() -> anyhow::Result<()> {
+    let budget = EvalBudget { babi_stories: 0, kb_episodes: 0, squad_queries: 96, seed: 0xDE5 };
+    let table = Table1::paper();
+
+    let exact = evaluate(WorkloadKind::Squad, AttentionBackend::Exact, budget)?;
+    println!(
+        "exact baseline: fidelity {:.4}, {} rows/query\n",
+        exact.metric, exact.mean_n
+    );
+    println!(
+        "{:>6} {:>6} | {:>9} {:>9} {:>9} | {:>11} {:>11}",
+        "M", "T%", "fidelity", "top5", "rows", "cyc/query", "nJ/query"
+    );
+
+    for m_frac in [1.0, 0.5, 0.25, 0.125] {
+        for t_pct in [1.0, 5.0, 10.0, 20.0] {
+            let backend = AttentionBackend::Approximate {
+                m: MIters::FractionOfN(m_frac),
+                t_pct,
+            };
+            let e = evaluate(WorkloadKind::Squad, backend, budget)?;
+            let report = simulate_approx(&e.samples);
+            let cycles = report.makespan as f64 / e.samples.len() as f64;
+            let energy = attribute(&table, &report).total_j() / e.samples.len() as f64;
+            println!(
+                "{:>6} {:>6} | {:>9.4} {:>9.3} {:>9.1} | {:>11.0} {:>11.1}",
+                format!("n*{m_frac}"),
+                t_pct,
+                e.metric,
+                e.topk_recall,
+                e.mean_selected,
+                cycles,
+                energy * 1e9
+            );
+        }
+    }
+    println!("\npaper operating points: conservative = (n/2, 5%), aggressive = (n/8, 10%)");
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! Quickstart: the A³ public API in one file.
+//!
+//! ```bash
+//! make artifacts          # once: python compile path
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks through: exact attention → fixed-point pipeline → approximate
+//! attention (greedy candidates + post-scoring) → cycle-level timing +
+//! energy of the same queries → running the AOT pallas kernel via PJRT.
+
+use a3::approx::{approximate_attention, SortedColumns};
+use a3::attention::{attention, quantized_attention_paper, KvPair};
+use a3::energy::{attribute, Table1};
+use a3::sim::{ApproxPipeline, ApproxQuery, BasePipeline, Dims};
+use a3::testutil::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. An attention problem at the paper's design point.
+    let (n, d) = (a3::PAPER_N, a3::PAPER_D);
+    let mut rng = Rng::new(42);
+    let kv = KvPair::new(n, d, rng.normal_vec(n * d, 1.0), rng.normal_vec(n * d, 1.0));
+    let query = rng.normal_vec(d, 1.0);
+
+    // 2. Exact soft attention (Fig. 1 of the paper).
+    let exact = attention(&kv, &query);
+    println!("exact attention     : out[0..4] = {:?}", &exact[..4]);
+
+    // 3. The base A³ fixed-point pipeline (i=4, f=4, two-LUT exponent).
+    let (quant, trace) = quantized_attention_paper(&kv, &query);
+    println!(
+        "fixed-point pipeline: out[0..4] = {:?} (expsum_q={})",
+        &quant[..4],
+        trace.expsum_q
+    );
+
+    // 4. Approximate attention: preprocess once (comprehension time),
+    //    then greedy candidate selection + post-scoring per query.
+    let sorted = SortedColumns::preprocess(&kv.key, n, d);
+    let (approx, kept, stats) =
+        approximate_attention(&kv, &sorted, &query, n / 2, 5.0);
+    println!(
+        "approximate         : out[0..4] = {:?} ({} of {} rows kept, {} greedy iters)",
+        &approx[..4],
+        kept.len(),
+        n,
+        stats.iterations
+    );
+
+    // 5. What does the accelerator charge for those?
+    let base = BasePipeline::new_untimed(Dims::paper()).run_batch(1000);
+    let approx_q = ApproxQuery { m: n / 2, candidates: kept.len() * 3, kept: kept.len() };
+    let appr = ApproxPipeline::new_untimed(Dims::paper()).run_batch(&vec![approx_q; 1000]);
+    println!(
+        "cycle simulator     : base {:.2} M queries/s | approximate {:.2} M queries/s",
+        base.throughput_qps() / 1e6,
+        appr.throughput_qps() / 1e6
+    );
+    let t1 = Table1::paper();
+    println!(
+        "energy model        : base {:.1} nJ/query | approximate {:.1} nJ/query",
+        attribute(&t1, &base).total_j() / 1000.0 * 1e9,
+        attribute(&t1, &appr).total_j() / 1000.0 * 1e9
+    );
+
+    // 6. The same computation through the AOT-compiled pallas kernel.
+    match a3::runtime::PjrtEngine::new() {
+        Ok(mut engine) => {
+            let out = engine.attention(
+                a3::runtime::ArtifactId::AttentionB1,
+                &query,
+                &kv.key,
+                &kv.value,
+                n,
+                d,
+            )?;
+            let max_diff = out
+                .iter()
+                .zip(&exact)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            println!("PJRT pallas kernel  : out[0..4] = {:?} (|diff| vs rust = {max_diff:.2e})", &out[..4]);
+        }
+        Err(e) => println!("PJRT unavailable ({e}); run `make artifacts` first"),
+    }
+    Ok(())
+}

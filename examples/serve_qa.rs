@@ -1,0 +1,162 @@
+//! End-to-end serving driver (the DESIGN.md §6 "E2E" deliverable).
+//!
+//! Loads the **trained** MemN2N artifacts, registers every test story
+//! as a KV context, and serves the full bAbI test set through the
+//! coordinator three times — exact units, then conservative and
+//! aggressive approximate units — reporting answer accuracy, host
+//! latency, and simulated accelerator throughput for each. Finally it
+//! answers a batch of stories through the AOT PJRT answer graph to
+//! prove the compiled path agrees.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_qa
+//! ```
+
+use std::time::Instant;
+
+use a3::coordinator::{KvContext, Query, Scheduler, ServeConfig, Server, UnitConfig, UnitKind};
+use a3::model::{AttentionBackend, BabiTestSet, Memn2n};
+use a3::sim::Dims;
+
+fn main() -> anyhow::Result<()> {
+    let weights = a3::model::Memn2nWeights::load_default()
+        .map_err(|e| anyhow::anyhow!("{e}\nrun `make artifacts` first"))?;
+    let test = BabiTestSet::load_default()?;
+    println!(
+        "loaded MemN2N (d={}, vocab={}, python-side training acc {:.3}) and {} test stories",
+        weights.d, weights.vocab, weights.trained_accuracy, test.count
+    );
+
+    for (label, kind, backend) in [
+        ("exact", UnitKind::Base, AttentionBackend::Exact),
+        (
+            "approx-conservative",
+            UnitKind::Approximate { backend: AttentionBackend::conservative() },
+            AttentionBackend::conservative(),
+        ),
+        (
+            "approx-aggressive",
+            UnitKind::Approximate { backend: AttentionBackend::aggressive() },
+            AttentionBackend::aggressive(),
+        ),
+    ] {
+        serve_once(&weights, &test, label, kind, backend)?;
+    }
+
+    // The compiled path: batch of stories through the AOT answer graph.
+    let model = Memn2n::new(weights.clone(), AttentionBackend::Exact);
+    let mut engine = a3::runtime::PjrtEngine::new()?;
+    let t0 = Instant::now();
+    let count = 128.min(test.count);
+    let mut hits = 0;
+    for s in 0..count {
+        let n_sent = test.n_sent[s] as usize;
+        let problem = model.story_problem(
+            test.story_tokens(s),
+            n_sent,
+            test.max_words,
+            test.story_query(s),
+        );
+        let d = weights.d;
+        let mut m = vec![0.0f32; 50 * d];
+        let mut c = vec![0.0f32; 50 * d];
+        m[..n_sent * d].copy_from_slice(&problem.kv.key);
+        c[..n_sent * d].copy_from_slice(&problem.kv.value);
+        let mut mask = vec![0.0f32; 50];
+        mask[..n_sent].fill(1.0);
+        let logits = engine.memn2n_answer(&m, &c, &problem.query, &mask)?;
+        let answer = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if answer as i32 == test.answer[s] {
+            hits += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "\nPJRT AOT answer graph: {hits}/{count} correct ({:.1}%), {:.1} queries/s end to end",
+        100.0 * hits as f64 / count as f64,
+        count as f64 / dt.as_secs_f64()
+    );
+    Ok(())
+}
+
+fn serve_once(
+    weights: &a3::model::Memn2nWeights,
+    test: &BabiTestSet,
+    label: &str,
+    kind: UnitKind,
+    backend: AttentionBackend,
+) -> anyhow::Result<()> {
+    let model = Memn2n::new(weights.clone(), backend);
+
+    // comprehension time: register every story as a KV context
+    let t0 = Instant::now();
+    let mut contexts = Vec::with_capacity(test.count);
+    let mut queries = Vec::with_capacity(test.count);
+    let mut answers = Vec::with_capacity(test.count);
+    for s in 0..test.count {
+        let problem = model.story_problem(
+            test.story_tokens(s),
+            test.n_sent[s] as usize,
+            test.max_words,
+            test.story_query(s),
+        );
+        contexts.push(KvContext::new(s as u32, problem.kv.clone()));
+        queries.push(Query {
+            id: s as u64,
+            context: s as u32,
+            embedding: problem.query.clone(),
+            arrival_ns: 0,
+        });
+        answers.push(test.answer[s]);
+    }
+    let comprehension = t0.elapsed();
+
+    let sched = Scheduler::replicated(UnitConfig { kind, dims: Dims::new(50, weights.d) }, 2);
+    // per-story contexts never batch beyond 1; answer immediately
+    let config = ServeConfig {
+        batch: a3::coordinator::BatchPolicy { max_batch: 1, max_wait_ns: 0 },
+        arrival_qps: None,
+        total_queries: queries.len(),
+    };
+    let mut server = Server::new(contexts, sched, config);
+    let report = server.serve(queries);
+
+    // classify from the served attention outputs
+    let mut hits = 0usize;
+    for r in &report.responses {
+        let s = r.id as usize;
+        let problem = model.story_problem(
+            test.story_tokens(s),
+            test.n_sent[s] as usize,
+            test.max_words,
+            test.story_query(s),
+        );
+        // logits = (o + u) W using the served attention output
+        let mut best = (0usize, f32::NEG_INFINITY);
+        for v in 0..weights.vocab {
+            let mut logit = 0.0f32;
+            for j in 0..weights.d {
+                logit += (r.output[j] + problem.query[j]) * weights.w[j * weights.vocab + v];
+            }
+            if logit > best.1 {
+                best = (v, logit);
+            }
+        }
+        if best.0 as i32 == answers[s] {
+            hits += 1;
+        }
+    }
+    println!(
+        "\n[{label}] accuracy {:.1}% | comprehension {:.0} ms | host {} | sim throughput {:.2} M queries/s",
+        100.0 * hits as f64 / report.responses.len() as f64,
+        comprehension.as_secs_f64() * 1e3,
+        report.metrics.summary(),
+        report.sim_throughput_qps() / 1e6,
+    );
+    Ok(())
+}

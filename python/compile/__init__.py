@@ -1,0 +1,5 @@
+"""A3 compile path: L1 pallas kernels + L2 jax models, AOT-lowered once.
+
+Nothing under python/ is imported at serving time; the rust binary only
+consumes the artifacts this package writes.
+"""

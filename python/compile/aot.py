@@ -1,0 +1,221 @@
+"""AOT driver: the ONE python invocation of the build (make artifacts).
+
+Produces, under --out-dir (default ../artifacts):
+
+  HLO text modules (loaded by rust/src/runtime via PJRT):
+    attention_b1_n320_d64.hlo.txt      base attention, 1 query
+    attention_b8_n320_d64.hlo.txt      base attention, 8-query batch
+    attention_b320_n320_d64.hlo.txt    BERT/SQuAD self-attention shape
+    attention_masked_b8_n320_d64.hlo.txt  approximate path (mask input)
+    attention_quant_n320_d64.hlo.txt   fixed-point i4/f4 pipeline
+    memn2n_answer_n50_d64.hlo.txt      full bAbI query-response graph
+
+  Weights / data (A3TN container, rust/src/model/weights.rs):
+    memn2n_weights.bin   trained MemN2N parameters + training log
+    babi_test.bin        held-out generated bAbI test set
+    golden_attention.bin cross-language golden vectors (all kernels,
+                         greedy candidate sets, post-scoring keeps)
+    golden_memn2n.bin    end-to-end logits for the first test stories
+    vocab.txt            bAbI vocabulary, one word per line
+
+HLO *text* is the interchange format: jax >= 0.5 serializes protos with
+64-bit instruction ids that xla_extension 0.5.1 (behind the rust `xla`
+crate) rejects; the text parser reassigns ids and round-trips cleanly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import babi, memn2n, model
+from .kernels import ref
+from .tensorio import write_tensors
+
+N_EVAL = 320  # paper's largest workload (BERT/SQuAD)
+D = 64  # paper's embedding dimension for all workloads
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides big
+    # constant arrays as `{...}`, which xla_extension 0.5.1's text
+    # parser silently reads back as zeros — the exp LUTs and the
+    # trained answer-projection matrix ride in the modules as
+    # constants, so they MUST be materialized in the text.
+    return comp.as_hlo_text(True)
+
+
+def lower_to(path: str, fn, *specs) -> None:
+    text = to_hlo_text(jax.jit(fn).lower(*specs))
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_hlo_modules(out_dir: str, params) -> None:
+    print("[aot] lowering HLO modules")
+    n, d = N_EVAL, D
+    lower_to(
+        os.path.join(out_dir, "attention_b1_n320_d64.hlo.txt"),
+        model.attention_graph,
+        spec(1, d), spec(n, d), spec(n, d),
+    )
+    lower_to(
+        os.path.join(out_dir, "attention_b8_n320_d64.hlo.txt"),
+        model.attention_graph,
+        spec(8, d), spec(n, d), spec(n, d),
+    )
+    lower_to(
+        os.path.join(out_dir, "attention_b320_n320_d64.hlo.txt"),
+        model.self_attention_graph,
+        spec(n, d), spec(n, d), spec(n, d),
+    )
+    lower_to(
+        os.path.join(out_dir, "attention_masked_b8_n320_d64.hlo.txt"),
+        model.attention_masked_graph,
+        spec(8, d), spec(n, d), spec(n, d), spec(8, n),
+    )
+    lower_to(
+        os.path.join(out_dir, "attention_quant_n320_d64.hlo.txt"),
+        model.attention_quantized_graph,
+        spec(d), spec(n, d), spec(n, d),
+    )
+    lower_to(
+        os.path.join(out_dir, "memn2n_answer_n50_d64.hlo.txt"),
+        model.memn2n_answer_graph(params["W"]),
+        spec(babi.MAX_SENT, memn2n.D_MODEL),
+        spec(babi.MAX_SENT, memn2n.D_MODEL),
+        spec(memn2n.D_MODEL),
+        spec(babi.MAX_SENT),
+    )
+
+
+def build_memn2n(out_dir: str, seed: int, steps: int):
+    print(f"[aot] training MemN2N ({steps} steps)")
+    t0 = time.time()
+    params, log = memn2n.train(np.random.default_rng(seed), steps=steps)
+    test = babi.generate_batch(np.random.default_rng(seed + 1), 500)
+    toks, n_sent, query, answer, support = test
+    acc = memn2n.accuracy(params, toks, n_sent, query, answer)
+    print(f"  trained in {time.time() - t0:.1f}s, exact-attention test acc {acc:.3f}")
+
+    weights = {k: np.asarray(v) for k, v in params.items()}
+    weights["loss_log_steps"] = np.asarray([s for s, _ in log], np.int32)
+    weights["loss_log_values"] = np.asarray([v for _, v in log], np.float32)
+    weights["test_accuracy"] = np.asarray([acc], np.float32)
+    write_tensors(os.path.join(out_dir, "memn2n_weights.bin"), weights)
+
+    write_tensors(
+        os.path.join(out_dir, "babi_test.bin"),
+        {
+            "tokens": toks,
+            "n_sent": n_sent,
+            "query": query,
+            "answer": answer,
+            "support": support,
+        },
+    )
+    with open(os.path.join(out_dir, "vocab.txt"), "w") as f:
+        f.write("\n".join(babi.VOCAB) + "\n")
+    print(f"  wrote memn2n_weights.bin, babi_test.bin, vocab.txt")
+    return params, test
+
+
+def build_golden_attention(out_dir: str, seed: int) -> None:
+    """Cross-language golden vectors: rust tests load these and must match."""
+    print("[aot] golden attention vectors")
+    rng = np.random.default_rng(seed + 2)
+    n, d, b = N_EVAL, D, 8
+    key = rng.normal(0, 1, (n, d)).astype(np.float32)
+    value = rng.normal(0, 1, (n, d)).astype(np.float32)
+    qb = rng.normal(0, 1, (b, d)).astype(np.float32)
+    q1 = qb[0]
+
+    out_base = np.asarray(ref.attention_ref(key, value, jnp.asarray(qb)))
+    mask = (rng.random((b, n)) < 0.25).astype(np.float32)
+    mask[:, 0] = 1.0
+    out_masked = np.stack(
+        [
+            np.asarray(ref.attention_masked_ref(key, value, jnp.asarray(qb[i]), jnp.asarray(mask[i])))
+            for i in range(b)
+        ]
+    )
+    out_quant, trace = ref.attention_quantized_ref(key, value, jnp.asarray(q1))
+
+    tensors = {
+        "key": key,
+        "value": value,
+        "query_batch": qb,
+        "mask": mask,
+        "out_base": out_base,
+        "out_masked": out_masked,
+        "out_quant": np.asarray(out_quant),
+        "quant_dot_q": np.asarray(trace["dot_q"], np.int32),
+        "quant_score_q": np.asarray(trace["score_q"], np.int32),
+        "quant_expsum_q": np.asarray([trace["expsum_q"]], np.int32),
+        "quant_weight_q": np.asarray(trace["weight_q"], np.int32),
+        "quant_out_q": np.asarray(trace["out_q"], np.int32),
+    }
+    # Greedy candidate sets across M, and post-scoring keeps across T.
+    for m_iters in (16, 64, 160, 320):
+        cand, gscore = ref.greedy_candidates_ref(key, q1, m_iters)
+        tensors[f"greedy_cand_m{m_iters}"] = cand.astype(np.int32)
+        tensors[f"greedy_score_m{m_iters}"] = gscore.astype(np.float32)
+    # f64 scores so the rust golden test can reproduce them bit-for-bit
+    # (f32 matmul summation order differs between numpy and a naive loop).
+    scores = key.astype(np.float64) @ q1.astype(np.float64)
+    cand_all = np.ones(n, bool)
+    for t_pct in (1, 5, 10, 20):
+        keep = ref.postscore_select_ref(scores, cand_all, float(t_pct))
+        tensors[f"postscore_keep_t{t_pct}"] = keep.astype(np.int32)
+    write_tensors(os.path.join(out_dir, "golden_attention.bin"), tensors)
+    print("  wrote golden_attention.bin")
+
+
+def build_golden_memn2n(out_dir: str, params, test) -> None:
+    print("[aot] golden MemN2N logits")
+    toks, n_sent, query, answer, _ = test
+    k = 8
+    logits, probs = memn2n.forward_batch(params, toks[:k], n_sent[:k], query[:k])
+    write_tensors(
+        os.path.join(out_dir, "golden_memn2n.bin"),
+        {
+            "logits": np.asarray(logits),
+            "attention": np.asarray(probs),
+            "n_stories": np.asarray([k], np.int32),
+        },
+    )
+    print("  wrote golden_memn2n.bin")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--steps", type=int, default=500, help="MemN2N training steps")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    params, test = build_memn2n(args.out_dir, args.seed, args.steps)
+    build_hlo_modules(args.out_dir, params)
+    build_golden_attention(args.out_dir, args.seed)
+    build_golden_memn2n(args.out_dir, params, test)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

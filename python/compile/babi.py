@@ -1,0 +1,91 @@
+"""bAbI-style story generator (substitute for Facebook bAbI QA task 1/2).
+
+The real bAbI corpus is itself program-generated; this module regenerates
+the same *structure* — entities move between locations, questions ask for
+the latest location, distractor sentences about other entities pad the
+story — so the attention profile (one or two relevant memories among up
+to 50) matches what MemN2N sees on the original task. See DESIGN.md §4.
+
+Vocabulary and token layout are shared with the rust workload generator
+via the exported vocab list in the artifacts.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+ACTORS = ["john", "mary", "sandra", "daniel", "bill", "fred"]
+VERBS = ["moved", "went", "journeyed", "travelled"]
+LOCATIONS = [
+    "garden",
+    "kitchen",
+    "hallway",
+    "bathroom",
+    "office",
+    "bedroom",
+    "park",
+    "school",
+]
+FILLER = ["to", "the", "where", "is"]
+
+VOCAB: list[str] = ["<nil>"] + ACTORS + VERBS + LOCATIONS + FILLER
+WORD2ID = {w: i for i, w in enumerate(VOCAB)}
+
+MAX_SENT = 50  # paper: bAbI max n = 50
+MAX_WORDS = 5  # "actor verb to the location"
+PAD = -1
+
+
+@dataclass
+class Story:
+    sentences: np.ndarray  # (n_sent, MAX_WORDS) int32, PAD-padded
+    query: np.ndarray  # (MAX_WORDS,) int32, PAD-padded
+    answer: int  # vocab id of the answer location
+    support: int  # index of the supporting sentence
+
+
+def _tok(words: list[str]) -> np.ndarray:
+    ids = [WORD2ID[w] for w in words]
+    ids += [PAD] * (MAX_WORDS - len(ids))
+    return np.asarray(ids, np.int32)
+
+
+def generate_story(rng: np.random.Generator, min_sent: int = 6, max_sent: int = MAX_SENT) -> Story:
+    n_sent = int(rng.integers(min_sent, max_sent + 1))
+    sents = np.full((n_sent, MAX_WORDS), PAD, np.int32)
+    last_loc: dict[str, tuple[str, int]] = {}
+    for i in range(n_sent):
+        actor = ACTORS[rng.integers(len(ACTORS))]
+        verb = VERBS[rng.integers(len(VERBS))]
+        loc = LOCATIONS[rng.integers(len(LOCATIONS))]
+        sents[i] = _tok([actor, verb, "to", "the", loc])
+        last_loc[actor] = (loc, i)
+    actor = list(last_loc)[rng.integers(len(last_loc))]
+    loc, support = last_loc[actor]
+    return Story(
+        sentences=sents,
+        query=_tok(["where", "is", actor]),
+        answer=WORD2ID[loc],
+        support=support,
+    )
+
+
+def generate_batch(rng: np.random.Generator, count: int, min_sent: int = 6, max_sent: int = MAX_SENT):
+    """Padded arrays for training: tokens (count, MAX_SENT, MAX_WORDS),
+    n_sent (count,), query (count, MAX_WORDS), answer (count,), support."""
+    toks = np.full((count, MAX_SENT, MAX_WORDS), PAD, np.int32)
+    n_sent = np.zeros(count, np.int32)
+    query = np.full((count, MAX_WORDS), PAD, np.int32)
+    answer = np.zeros(count, np.int32)
+    support = np.zeros(count, np.int32)
+    for i in range(count):
+        s = generate_story(rng, min_sent, max_sent)
+        k = s.sentences.shape[0]
+        toks[i, :k] = s.sentences
+        n_sent[i] = k
+        query[i] = s.query
+        answer[i] = s.answer
+        support[i] = s.support
+    return toks, n_sent, query, answer, support

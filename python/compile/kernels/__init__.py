@@ -1,0 +1,3 @@
+"""A3 L1 kernels: pallas attention variants + pure-jnp oracles."""
+
+from . import attention, masked, quantized, ref  # noqa: F401

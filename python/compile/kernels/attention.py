@@ -1,0 +1,106 @@
+"""L1 Pallas kernel: tiled soft attention (the functional twin of the
+base A3 pipeline, rethought for TPU — see DESIGN.md SHardware-Adaptation).
+
+A3's ASIC streams the key matrix row-by-row through d multipliers + an
+adder tree while a running max is tracked, then makes a second pass for
+the exponent and a third for the weighted sum. On a TPU the same
+HBM->local-memory streaming schedule is expressed with a BlockSpec grid
+over n-tiles, and the three passes fuse into ONE pass using the online
+(flash) softmax recurrence: per-tile scores go through the MXU
+(q @ k_tile^T), the running max / expsum / output accumulators live in
+the output blocks (VMEM-resident across grid steps).
+
+VMEM budget at the evaluation point (n=320, d=64, f32):
+  K tile (block_n x 64) + V tile + q(b x 64) + accumulators —
+  with block_n=64, b=8: 2*16KB + 2KB + ~2.2KB ~ 36KB << 16MB VMEM.
+The whole K/V (160KB) would also fit resident; we still tile so the same
+kernel scales to the n >> 320 regime the paper's SIII-C anticipates
+(DRAM-resident keys with sequential prefetch == larger grid).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU perf is estimated analytically in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_BIG = -1e30  # finite -inf stand-in: keeps exp() NaN-free on empty tiles
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, num_tiles):
+    """One grid step: fold one (block_n, d) K/V tile into the accumulators.
+
+    q_ref: (b, d)      k_ref, v_ref: (block_n, d)
+    o_ref: (b, d) accumulator; m_ref, l_ref: (b, 1) running max / expsum.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_BIG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+
+    # MXU: (b, d) @ (d, block_n) — the adder-tree dot products of module 1.
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (b, block_n)
+
+    # Online-softmax recurrence (modules 1's running max + module 2 fused).
+    m_old = m_ref[...]  # (b, 1)
+    m_new = jnp.maximum(m_old, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_old - m_new)  # rescale factor for old accumulators
+    p = jnp.exp(s - m_new)  # (b, block_n)
+
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    # MXU: (b, block_n) @ (block_n, d) — module 3's weighted accumulation.
+    o_ref[...] = o_ref[...] * alpha + jnp.dot(p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(i == num_tiles - 1)
+    def _finalize():
+        o_ref[...] = o_ref[...] / l_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def attention(query, key, value, *, block_n: int = 64):
+    """Batched soft attention via the tiled pallas kernel.
+
+    query: (b, d)   key, value: (n, d)   returns (b, d).
+    n must be a multiple of block_n (pad with NEG_BIG-scoring rows
+    upstream if needed; the aot driver only lowers aligned shapes).
+    """
+    b, d = query.shape
+    n, _ = key.shape
+    if n % block_n:
+        raise ValueError(f"n={n} not a multiple of block_n={block_n}")
+    num_tiles = n // block_n
+
+    out, _m, _l = pl.pallas_call(
+        functools.partial(_attention_kernel, num_tiles=num_tiles),
+        grid=(num_tiles,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (0, 0)),  # q: resident
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),  # K: streamed
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),  # V: streamed
+        ],
+        out_specs=[
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((b, 1), lambda i: (0, 0)),
+            pl.BlockSpec((b, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(query, key, value)
+    return out

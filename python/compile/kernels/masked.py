@@ -1,0 +1,95 @@
+"""L1 Pallas kernel: candidate-masked attention — the functional twin of
+the *approximate* A3 pipeline.
+
+The greedy candidate selector (paper SIV) is inherently sequential
+pointer-chasing over per-column sorted keys; on the ASIC it is a d-way
+comparator tree, and in this reproduction it runs on the host inside the
+L3 rust coordinator (rust/src/approx). Its output — a 0/1 candidate mask
+per query, further thinned by post-scoring selection — is what this
+kernel consumes. Rows with mask==0 contribute exactly zero weight and
+(on real hardware) their tiles can be skipped entirely; here the mask is
+applied inside the online-softmax recurrence so the kernel remains a
+single dense pipeline that XLA can fuse, which is the TPU-shaped version
+of the ASIC's "only C candidate rows enter module 1" saving.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .attention import NEG_BIG
+
+
+def _masked_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, *, num_tiles):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_BIG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    mask = mask_ref[...]  # (b, block_n) 0/1
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    s = jnp.where(mask > 0, s, NEG_BIG)
+
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_old - m_new)
+    # The extra (mask > 0) factor kills the exp(NEG_BIG - NEG_BIG) == 1
+    # artifact on tiles where nothing has been selected yet.
+    p = jnp.exp(s - m_new) * (mask > 0)
+
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = o_ref[...] * alpha + jnp.dot(p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(i == num_tiles - 1)
+    def _finalize():
+        # Guard l==0 (fully-masked query) — emit zeros rather than NaNs.
+        l = l_ref[...]
+        o_ref[...] = jnp.where(l > 0, o_ref[...] / jnp.where(l > 0, l, 1.0), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def attention_masked(query, key, value, mask, *, block_n: int = 64):
+    """Masked batched attention.
+
+    query: (b, d)  key, value: (n, d)  mask: (b, n) float 0/1 -> (b, d).
+    """
+    b, d = query.shape
+    n, _ = key.shape
+    if n % block_n:
+        raise ValueError(f"n={n} not a multiple of block_n={block_n}")
+    num_tiles = n // block_n
+
+    out, _m, _l = pl.pallas_call(
+        functools.partial(_masked_kernel, num_tiles=num_tiles),
+        grid=(num_tiles,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((b, block_n), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((b, 1), lambda i: (0, 0)),
+            pl.BlockSpec((b, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(query, key, value, mask)
+    return out

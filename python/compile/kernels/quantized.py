@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: bit-accurate fixed-point A3 pipeline (paper SIII-B).
+
+This kernel exists to validate the paper's quantization argument — that
+an i=4/f=4 fixed-point datapath with a two-LUT exponent loses no
+accuracy that matters — with the *identical integer arithmetic* the rust
+datapath model (rust/src/attention/quantized.rs) implements. It is a
+validation vehicle, not a TPU performance kernel: the whole (n, d)
+problem is taken as a single block (n=320, d=64 int32 K+V+tables is
+~170KB, comfortably VMEM-resident), mirroring the ASIC's SRAM-resident
+operation, and every arithmetic step stays on the int32 plane.
+
+The two exponent LUTs ride in as ordinary kernel operands — the moral
+equivalent of the ASIC's 2 x 256-entry SRAM tables.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import F_BITS, I_BITS, TABLE_FRAC, U_CLAMP_INT, exp_tables, quantize_q
+
+
+def _quantized_kernel(kq_ref, vq_ref, qq_ref, tint_ref, tfrac_ref, o_ref, *, f_bits):
+    """Whole-problem fixed-point attention on the int32 plane.
+
+    kq/vq: (n, d) int32   qq: (d,) int32   tables: int32 LUTs
+    o_ref: (d,) int32 output with 3f fraction bits.
+    """
+    frac = 2 * f_bits
+    kq = kq_ref[...]
+    vq = vq_ref[...]
+    qq = qq_ref[...]
+
+    # Module 1: integer dot products + running max.
+    dot = jnp.sum(kq * qq[None, :], axis=1, dtype=jnp.int32)  # (n,)
+    dmax = jnp.max(dot)
+
+    # Module 2: two-LUT exponent. u = max - dot >= 0, Q(*, 2f).
+    u = dmax - dot
+    k_idx = u >> frac
+    j_idx = u & ((1 << frac) - 1)
+    overflow = k_idx >= U_CLAMP_INT
+    k_idx = jnp.clip(k_idx, 0, U_CLAMP_INT - 1)
+    prod = tint_ref[...][k_idx] * tfrac_ref[...][j_idx]  # 2*TABLE_FRAC frac bits
+    shift = 2 * TABLE_FRAC - frac
+    score = (prod + (1 << (shift - 1))) >> shift
+    score = jnp.where(overflow, 0, score)  # Q(0, 2f)
+    expsum = jnp.sum(score)  # Q(log2 n, 2f)
+
+    # Module 3: weight = score/expsum (round half up), weighted accumulate.
+    weight = ((score << frac) + expsum // 2) // expsum  # Q(0, 2f)
+    o_ref[...] = jnp.sum(weight[:, None] * vq, axis=0, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("i_bits", "f_bits"))
+def attention_quantized(query, key, value, *, i_bits: int = I_BITS, f_bits: int = F_BITS):
+    """Fixed-point attention; floats in, floats out, int32 all the way
+    through the datapath. query: (d,), key/value: (n, d) -> (d,)."""
+    n, d = key.shape
+    kq = quantize_q(key, i_bits, f_bits)
+    vq = quantize_q(value, i_bits, f_bits)
+    qq = quantize_q(query, i_bits, f_bits)
+    t_int, t_frac = exp_tables(2 * f_bits)
+
+    out_q = pl.pallas_call(
+        functools.partial(_quantized_kernel, f_bits=f_bits),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.int32),
+        interpret=True,
+    )(kq, vq, qq, t_int, t_frac)
+    return out_q.astype(jnp.float32) / float(1 << (3 * f_bits))

@@ -1,0 +1,252 @@
+"""Pure-jnp correctness oracles for the A3 attention kernels.
+
+Everything in this file is straight-line jax.numpy with no pallas, no
+custom lowering tricks — it is the ground truth the pallas kernels
+(attention.py / masked.py / quantized.py) and the rust implementations
+are validated against.
+
+The quantized oracle is *bit-exact by construction*: all fixed-point
+state is held as int32 scaled integers following the width ladder of
+paper SIII-B (i integer bits, f fraction bits at the input; 2f after the
+first multiply; 3f at the output), and the exponent uses the paper's
+two-lookup-table decomposition e^-(k + j/256) = T_int[k] * T_frac[j].
+The rust implementation (rust/src/attention/quantized.rs) mirrors these
+integer operations exactly.
+"""
+
+from __future__ import annotations
+
+import heapq
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Float reference (Fig. 1 of the paper)
+# ---------------------------------------------------------------------------
+
+
+def attention_ref(key, value, query):
+    """Soft attention: softmax(key @ query) weighted sum over value.
+
+    key:   (n, d)   value: (n, d)   query: (d,) or (b, d)
+    returns (d,) or (b, d)
+    """
+    squeeze = query.ndim == 1
+    q = query[None, :] if squeeze else query
+    scores = q @ key.T  # (b, n)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    w = jnp.exp(scores)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    out = w @ value  # (b, d)
+    return out[0] if squeeze else out
+
+
+def attention_weights_ref(key, query):
+    """Just the softmax weights (used for top-k recall metrics)."""
+    scores = key @ query
+    scores = scores - jnp.max(scores)
+    w = jnp.exp(scores)
+    return w / jnp.sum(w)
+
+
+def attention_masked_ref(key, value, query, mask):
+    """Attention restricted to rows where mask!=0 (the approximate path).
+
+    mask: (n,) float 0/1. Masked-out rows receive exactly zero weight.
+    At least one row must be selected.
+    """
+    squeeze = query.ndim == 1
+    q = query[None, :] if squeeze else query
+    m = mask[None, :]
+    scores = q @ key.T
+    neg = jnp.finfo(scores.dtype).min
+    scores = jnp.where(m > 0, scores, neg)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    w = jnp.exp(scores) * (m > 0)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    out = w @ value
+    return out[0] if squeeze else out
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point (paper SIII-B) parameters and helpers
+# ---------------------------------------------------------------------------
+
+# Input representation: sign + I_BITS integer + F_BITS fraction (i=4, f=4
+# in the paper's evaluation). All downstream widths derive from these.
+I_BITS = 4
+F_BITS = 4
+# Exponent LUT decomposition: u = max - dot >= 0 is clamped at U_CLAMP_INT
+# (e^-16 ~ 1.1e-7, below one ulp of the 2f-fraction-bit score).
+U_CLAMP_INT = 16
+TABLE_FRAC = 15  # fraction bits of the LUT entries (15 keeps the
+# T_int*T_frac product within int32 — jax runs with x64 disabled)
+
+
+def quantize_q(x, i_bits: int = I_BITS, f_bits: int = F_BITS):
+    """Quantize float -> scaled int32 on the Q(i,f) grid (round half up)."""
+    scale = float(1 << f_bits)
+    hi = (1 << (i_bits + f_bits)) - 1
+    q = jnp.floor(jnp.asarray(x) * scale + 0.5).astype(jnp.int32)
+    return jnp.clip(q, -hi, hi)
+
+
+def dequantize_q(q, f_bits: int = F_BITS):
+    return q.astype(jnp.float32) / float(1 << f_bits)
+
+
+def exp_tables(frac_bits: int, table_frac: int = TABLE_FRAC):
+    """The two exponent LUTs of paper SIII module 2.
+
+    T_int[k]  = e^-k            for k in [0, U_CLAMP_INT)
+    T_frac[j] = e^-(j / 2^frac) for j in [0, 2^frac_bits)
+    Entries are themselves fixed-point with `table_frac` fraction bits,
+    exactly as an SRAM lookup table would store them.
+    """
+    ks = np.arange(U_CLAMP_INT, dtype=np.float64)
+    js = np.arange(1 << frac_bits, dtype=np.float64)
+    t_int = np.floor(np.exp(-ks) * (1 << table_frac) + 0.5).astype(np.int32)
+    t_frac = np.floor(np.exp(-js / (1 << frac_bits)) * (1 << table_frac) + 0.5).astype(
+        np.int32
+    )
+    return jnp.asarray(t_int, jnp.int32), jnp.asarray(t_frac, jnp.int32)
+
+
+def exp_lut_q(u_q, t_int, t_frac, frac_bits: int, table_frac: int = TABLE_FRAC):
+    """Fixed-point e^-u for u_q >= 0 held with `frac_bits` fraction bits.
+
+    Returns a score with `frac_bits` fraction bits in [0, 2^frac_bits].
+    Decomposition: u = k + j/2^frac ->  e^-u = T_int[k] * T_frac[j].
+    """
+    u_q = jnp.asarray(u_q)
+    k = u_q >> frac_bits  # integer part
+    j = u_q & ((1 << frac_bits) - 1)  # fractional part
+    overflow = k >= U_CLAMP_INT
+    k = jnp.clip(k, 0, U_CLAMP_INT - 1)
+    # product has 2*table_frac = 30 fraction bits: fits int32.
+    prod = t_int[k] * t_frac[j]
+    shift = 2 * table_frac - frac_bits
+    score = (prod + (1 << (shift - 1))) >> shift
+    return jnp.where(overflow, 0, score).astype(jnp.int32)
+
+
+def attention_quantized_ref(key, value, query, i_bits: int = I_BITS, f_bits: int = F_BITS):
+    """Bit-accurate model of the base A3 fixed-point pipeline (Fig. 5).
+
+    key (n,d), value (n,d), query (d,) floats; returns (out_float (d,),
+    trace dict of integer-plane intermediates for cross-language tests).
+
+    Width ladder (paper SIII-B): inputs Q(i,f); temp Q(2i,2f);
+    dot Q(2i+log2 d, 2f); score Q(0,2f); expsum Q(log2 n, 2f);
+    weight Q(0,2f); out Q(i+log2 n, 3f).
+    """
+    kq = quantize_q(key, i_bits, f_bits)  # (n, d) int32
+    vq = quantize_q(value, i_bits, f_bits)
+    qq = quantize_q(query, i_bits, f_bits)
+
+    # Module 1: dot product (exact integer arithmetic, 2f fraction bits).
+    # All quantities fit int32 by the SIII-B width ladder (see test_widths).
+    dot = (kq * qq[None, :]).sum(axis=1).astype(jnp.int32)
+    dmax = jnp.max(dot)
+
+    # Module 2: exponent via the two-table decomposition.
+    frac = 2 * f_bits
+    t_int, t_frac = exp_tables(frac)
+    u = dmax - dot  # >= 0, 2f fraction bits
+    score = exp_lut_q(u, t_int, t_frac, frac)  # Q(0, 2f)
+    expsum = jnp.sum(score)  # Q(log2 n, 2f)
+
+    # Module 3: weight = score/expsum at 2f fraction bits (round half up),
+    # then weighted accumulation at 3f fraction bits.
+    weight = ((score << frac) + expsum // 2) // expsum
+    out_q = (weight[:, None] * vq).sum(axis=0)
+    out = out_q.astype(jnp.float32) / float(1 << (frac + f_bits))
+    trace = {
+        "key_q": kq,
+        "query_q": qq,
+        "dot_q": dot,
+        "max_q": dmax,
+        "score_q": score,
+        "expsum_q": expsum,
+        "weight_q": weight.astype(jnp.int32),
+        "out_q": out_q,
+    }
+    return out, trace
+
+
+# ---------------------------------------------------------------------------
+# Greedy candidate selection + post-scoring (paper SIV) — python oracle
+# ---------------------------------------------------------------------------
+
+
+def greedy_candidates_ref(key, query, m_iters: int):
+    """Reference implementation of Fig. 7's efficient greedy search.
+
+    Returns (candidates bool (n,), greedy_score (n,)). Mirrors
+    rust/src/approx/greedy.rs including the minQ skip heuristic: the minQ
+    pop is skipped whenever the cumulative sum of all accepted entries so
+    far is negative.
+    """
+    key = np.asarray(key, np.float64)
+    query = np.asarray(query, np.float64)
+    n, d = key.shape
+    order = np.argsort(-key, axis=0, kind="stable")  # descending per column
+    sorted_val = np.take_along_axis(key, order, axis=0)
+
+    greedy = np.zeros(n)
+    # position of max_ptr/min_ptr within each sorted column (0 = largest)
+    max_pos = np.where(query > 0, 0, n - 1)
+    min_pos = np.where(query > 0, n - 1, 0)
+    cum = 0.0
+
+    def contrib(pos, col):
+        return sorted_val[pos[col], col] * query[col], order[pos[col], col]
+
+    maxq, minq = [], []
+    for c in range(d):
+        v, r = contrib(max_pos, c)
+        heapq.heappush(maxq, (-v, c, int(r)))
+        v, r = contrib(min_pos, c)
+        heapq.heappush(minq, (v, c, int(r)))
+
+    for _ in range(m_iters):
+        # maxQ step
+        if maxq:
+            negv, col, row = heapq.heappop(maxq)
+            v = -negv
+            if v > 0:
+                greedy[row] += v
+                cum += v
+            max_pos[col] += 1 if query[col] > 0 else -1
+            if 0 <= max_pos[col] < n:
+                nv, nr = contrib(max_pos, col)
+                heapq.heappush(maxq, (-nv, col, int(nr)))
+        # minQ step (skipped while the running selected-sum is negative)
+        if cum >= 0 and minq:
+            v, col, row = heapq.heappop(minq)
+            if v < 0:
+                greedy[row] += v
+                cum += v
+            min_pos[col] += -1 if query[col] > 0 else 1
+            if 0 <= min_pos[col] < n:
+                nv, nr = contrib(min_pos, col)
+                heapq.heappush(minq, (nv, col, int(nr)))
+    return greedy > 0, greedy
+
+
+def postscore_select_ref(scores, candidates, threshold_pct: float):
+    """Post-scoring selection (paper SIV-D).
+
+    Keep candidate rows whose post-softmax weight would be at least
+    `threshold_pct` % of the maximum weight, i.e. score >= max - t with
+    t = ln(100/threshold_pct).
+    """
+    scores = np.asarray(scores, np.float64)
+    cand = np.asarray(candidates, bool)
+    if not cand.any():
+        return cand
+    t = np.log(100.0 / threshold_pct)
+    smax = scores[cand].max()
+    keep = cand & (scores >= smax - t)
+    return keep

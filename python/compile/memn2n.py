@@ -1,0 +1,132 @@
+"""L2: End-to-End Memory Network (MemN2N, Sukhbaatar et al. 2015) in JAX.
+
+This is the bAbI workload model of the paper's evaluation (SVI-A). The
+attention step — softmax(m · u) weighted sum over c — is *exactly* the
+primitive A3 accelerates; the rust side re-runs this forward pass with
+pluggable attention backends (exact / quantized / greedy-approximate) to
+reproduce the accuracy sweeps of Figs. 11-13.
+
+Architecture (single hop, bag-of-words + temporal encoding):
+    m_i = BoW_A(sentence_i) + T_A[age_i]      (input memory / key)
+    c_i = BoW_C(sentence_i) + T_C[age_i]      (output memory / value)
+    u   = BoW_A(question)                      (query)
+    p   = softmax(m u),  o = p c,  logits = (o + u) W
+
+Training runs once at artifact-build time (make artifacts) on generated
+bAbI-style data; weights are exported for the rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .babi import MAX_SENT, MAX_WORDS, VOCAB
+
+D_MODEL = 64  # matches the paper's d = 64 across all workloads
+
+
+def init_params(rng: np.random.Generator, vocab: int = len(VOCAB), d: int = D_MODEL):
+    def emb(*shape):
+        return jnp.asarray(rng.normal(0, 0.1, size=shape), jnp.float32)
+
+    return {
+        "A": emb(vocab, d),  # input memory + question embedding
+        "C": emb(vocab, d),  # output memory embedding
+        "TA": emb(MAX_SENT, d),  # temporal encoding (input side)
+        "TC": emb(MAX_SENT, d),  # temporal encoding (output side)
+        "W": emb(d, vocab),  # answer projection
+    }
+
+
+def bow(emb_table, tokens):
+    """Bag-of-words embedding of PAD(-1)-padded token ids (…, MAX_WORDS)."""
+    safe = jnp.clip(tokens, 0, emb_table.shape[0] - 1)
+    vecs = emb_table[safe] * (tokens >= 0)[..., None]
+    return vecs.sum(axis=-2)
+
+
+def memories(params, sent_tokens, n_sent):
+    """Key / value memory matrices for one story.
+
+    sent_tokens: (MAX_SENT, MAX_WORDS) PAD-padded; n_sent: scalar.
+    Returns m (MAX_SENT, d), c (MAX_SENT, d), mask (MAX_SENT,) bool.
+    age_i = how many sentences ago sentence i happened (0 = most recent).
+    """
+    idx = jnp.arange(MAX_SENT)
+    mask = idx < n_sent
+    age = jnp.clip(n_sent - 1 - idx, 0, MAX_SENT - 1)
+    m = bow(params["A"], sent_tokens) + params["TA"][age]
+    c = bow(params["C"], sent_tokens) + params["TC"][age]
+    m = m * mask[:, None]
+    c = c * mask[:, None]
+    return m, c, mask
+
+
+def forward(params, sent_tokens, n_sent, q_tokens):
+    """Single-story forward pass -> (logits (V,), attention weights)."""
+    m, c, mask = memories(params, sent_tokens, n_sent)
+    u = bow(params["A"], q_tokens)
+    scores = m @ u
+    scores = jnp.where(mask, scores, -1e30)
+    scores = scores - jnp.max(scores)
+    p = jnp.exp(scores) * mask
+    p = p / jnp.sum(p)
+    o = p @ c
+    logits = (o + u) @ params["W"]
+    return logits, p
+
+
+forward_batch = jax.vmap(forward, in_axes=(None, 0, 0, 0))
+
+
+def loss_fn(params, toks, n_sent, query, answer):
+    logits, _ = forward_batch(params, toks, n_sent, query)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, answer[:, None], axis=1).mean()
+    return nll
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def adam_step(params, opt, grads, lr=3e-3, b1=0.9, b2=0.999, eps=1e-8):
+    step = opt["step"] + 1
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        m = b1 * opt["m"][k] + (1 - b1) * grads[k]
+        v = b2 * opt["v"][k] + (1 - b2) * grads[k] ** 2
+        mhat = m / (1 - b1**step)
+        vhat = v / (1 - b2**step)
+        new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+        new_m[k], new_v[k] = m, v
+    return new_p, {"step": step, "m": new_m, "v": new_v}
+
+
+grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+
+def train(rng: np.random.Generator, steps: int = 400, batch: int = 64, log_every: int = 50):
+    """Train on freshly generated stories; returns (params, loss_log)."""
+    from .babi import generate_batch
+
+    params = init_params(rng)
+    opt = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": {k: jnp.zeros_like(v) for k, v in params.items()},
+        "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+    }
+    log = []
+    for step in range(steps):
+        toks, n_sent, query, answer, _ = generate_batch(rng, batch)
+        loss, grads = grad_fn(params, toks, n_sent, query, answer)
+        params, opt = adam_step(params, opt, grads)
+        if step % log_every == 0 or step == steps - 1:
+            log.append((step, float(loss)))
+    return params, log
+
+
+def accuracy(params, toks, n_sent, query, answer) -> float:
+    logits, _ = forward_batch(params, toks, n_sent, query)
+    return float((jnp.argmax(logits, axis=1) == answer).mean())

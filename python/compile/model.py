@@ -1,0 +1,63 @@
+"""L2: the jax compute graphs that get AOT-lowered for the rust runtime.
+
+Each public function here is a jit-able graph built on the L1 pallas
+kernels (python/compile/kernels/). aot.py lowers them at fixed shapes to
+HLO text; rust/src/runtime loads and executes them via PJRT. Nothing in
+this module runs at serving time.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.attention import attention
+from .kernels.masked import attention_masked
+from .kernels.quantized import attention_quantized
+
+
+def attention_graph(query, key, value):
+    """Batched base attention (b, d) x (n, d) x (n, d) -> (b, d)."""
+    return (attention(query, key, value),)
+
+
+def attention_masked_graph(query, key, value, mask):
+    """Candidate-masked attention; mask (b, n) produced by the L3
+    greedy selector."""
+    return (attention_masked(query, key, value, mask),)
+
+
+def attention_quantized_graph(query, key, value):
+    """Fixed-point (i=4, f=4) attention, single query (d,) -> (d,)."""
+    return (attention_quantized(query, key, value),)
+
+
+def memn2n_answer_graph(w_proj):
+    """MemN2N answer head closed over the trained projection matrix.
+
+    Returns fn(m, c, u, mask) -> logits where m/c are the (padded) key /
+    value memories, u the question embedding, mask the valid-sentence
+    indicator. The attention inside is the L1 masked kernel, so the
+    entire query-response path of the bAbI workload lowers into one HLO
+    module.
+    """
+    w = jnp.asarray(w_proj, jnp.float32)
+
+    def fn(m, c, u, mask):
+        # bAbI memories are (MAX_SENT=50, d): a single 50-row tile.
+        o = attention_masked(u[None, :], m, c, mask[None, :], block_n=m.shape[0])[0]
+        return ((o + u) @ w,)
+
+    return fn
+
+
+def self_attention_graph(q_in, k_in, v_in):
+    """BERT-style self-attention core at (n, d): n queries against the
+    same key matrix (the paper's SQuAD/BERT workload shape, n = 320).
+
+    Scores are scaled by 1/sqrt(d) as in Transformer attention; the A3
+    pipeline itself is scale-agnostic (the scale can be folded into the
+    query), so the rust simulator treats both identically.
+    """
+    d = q_in.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    return (attention(q_in * scale, k_in, v_in),)

@@ -1,0 +1,67 @@
+"""Tiny named-tensor container shared between the python compile path and
+the rust runtime (rust/src/model/weights.rs mirrors this reader).
+
+serde/npz are not in the offline rust vendor set, so the interchange is a
+deliberately boring little-endian binary format:
+
+    magic  b"A3TN"
+    u32    version (1)
+    u32    tensor count
+    per tensor:
+        u16   name length, then utf-8 name bytes
+        u8    dtype  (0 = f32, 1 = i32)
+        u8    ndim
+        u32 x ndim   dims
+        raw   little-endian data, row-major
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"A3TN"
+VERSION = 1
+_DTYPES = {0: np.float32, 1: np.int32}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def write_tensors(path, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _CODES:
+                if np.issubdtype(arr.dtype, np.floating):
+                    arr = arr.astype(np.float32)
+                elif np.issubdtype(arr.dtype, np.integer) or arr.dtype == bool:
+                    arr = arr.astype(np.int32)
+                else:
+                    raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _CODES[arr.dtype], arr.ndim))
+            for dim in arr.shape:
+                f.write(struct.pack("<I", dim))
+            f.write(arr.astype(arr.dtype.newbyteorder("<")).tobytes())
+
+
+def read_tensors(path) -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        version, count = struct.unpack("<II", f.read(8))
+        assert version == VERSION
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode()
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dt = np.dtype(_DTYPES[code]).newbyteorder("<")
+            n_elem = int(np.prod(dims)) if dims else 1
+            data = np.frombuffer(f.read(n_elem * 4), dtype=dt)
+            out[name] = data.reshape(dims).astype(_DTYPES[code])
+    return out

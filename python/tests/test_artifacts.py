@@ -1,0 +1,76 @@
+"""Artifact integrity: when artifacts/ exists (post `make artifacts`),
+check the HLO modules and data containers are loadable and consistent.
+Skipped cleanly on a fresh tree."""
+
+import os
+
+import numpy as np
+import pytest
+
+from compile import babi
+from compile.tensorio import read_tensors
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "memn2n_weights.bin")),
+    reason="run `make artifacts` first",
+)
+
+HLO_MODULES = [
+    "attention_b1_n320_d64.hlo.txt",
+    "attention_b8_n320_d64.hlo.txt",
+    "attention_b320_n320_d64.hlo.txt",
+    "attention_masked_b8_n320_d64.hlo.txt",
+    "attention_quant_n320_d64.hlo.txt",
+    "memn2n_answer_n50_d64.hlo.txt",
+]
+
+
+@needs_artifacts
+@pytest.mark.parametrize("name", HLO_MODULES)
+def test_hlo_text_wellformed(name):
+    text = open(os.path.join(ART, name)).read()
+    assert text.startswith("HloModule"), f"{name} is not HLO text"
+    assert "ENTRY" in text
+
+
+@needs_artifacts
+def test_weights_shapes():
+    w = read_tensors(os.path.join(ART, "memn2n_weights.bin"))
+    v, d = len(babi.VOCAB), 64
+    assert w["A"].shape == (v, d)
+    assert w["C"].shape == (v, d)
+    assert w["TA"].shape == (babi.MAX_SENT, d)
+    assert w["TC"].shape == (babi.MAX_SENT, d)
+    assert w["W"].shape == (d, v)
+    assert w["test_accuracy"][0] > 0.9, "training regressed"
+
+
+@needs_artifacts
+def test_babi_test_set():
+    t = read_tensors(os.path.join(ART, "babi_test.bin"))
+    n = t["tokens"].shape[0]
+    assert t["tokens"].shape == (n, babi.MAX_SENT, babi.MAX_WORDS)
+    assert (t["n_sent"] >= 6).all() and (t["n_sent"] <= babi.MAX_SENT).all()
+    # answers are location ids
+    locs = {babi.WORD2ID[w] for w in babi.LOCATIONS}
+    assert set(np.unique(t["answer"])).issubset(locs)
+
+
+@needs_artifacts
+def test_golden_attention_self_consistent():
+    g = read_tensors(os.path.join(ART, "golden_attention.bin"))
+    from compile.kernels import ref
+
+    want = np.asarray(ref.attention_ref(g["key"], g["value"], g["query_batch"]))
+    np.testing.assert_allclose(g["out_base"], want, atol=1e-6)
+    # quantized trace is on the integer plane
+    assert g["quant_score_q"].max() <= 1 << (2 * ref.F_BITS)
+    assert g["quant_expsum_q"][0] == g["quant_score_q"].sum()
+
+
+@needs_artifacts
+def test_vocab_file_matches_generator():
+    words = open(os.path.join(ART, "vocab.txt")).read().split()
+    assert words == babi.VOCAB

@@ -1,0 +1,65 @@
+"""L2 model: MemN2N shapes, training sanity, and data generator
+invariants."""
+
+import numpy as np
+
+from compile import babi, memn2n
+
+
+def test_generator_invariants():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        s = babi.generate_story(rng)
+        n = s.sentences.shape[0]
+        assert 6 <= n <= babi.MAX_SENT
+        # supporting sentence is the last mention of the queried actor
+        actor_id = s.query[2]
+        mentions = [i for i in range(n) if s.sentences[i][0] == actor_id]
+        assert mentions and mentions[-1] == s.support
+        # answer is that sentence's location
+        assert s.sentences[s.support][4] == s.answer
+        assert babi.VOCAB[s.answer] in babi.LOCATIONS
+
+
+def test_batch_padding():
+    toks, n_sent, query, answer, support = babi.generate_batch(
+        np.random.default_rng(1), 32
+    )
+    assert toks.shape == (32, babi.MAX_SENT, babi.MAX_WORDS)
+    for i in range(32):
+        assert (toks[i, n_sent[i]:] == babi.PAD).all()
+        assert (toks[i, : n_sent[i], 0] >= 0).all()
+
+
+def test_forward_shapes_and_mask():
+    rng = np.random.default_rng(2)
+    params = memn2n.init_params(rng)
+    toks, n_sent, query, answer, _ = babi.generate_batch(rng, 4)
+    logits, p = memn2n.forward_batch(params, toks, n_sent, query)
+    assert logits.shape == (4, len(babi.VOCAB))
+    assert p.shape == (4, babi.MAX_SENT)
+    p = np.asarray(p)
+    for i in range(4):
+        # attention over padded sentences must be exactly zero
+        assert (p[i, n_sent[i]:] == 0).all()
+        np.testing.assert_allclose(p[i].sum(), 1.0, atol=1e-5)
+
+
+def test_bow_ignores_padding():
+    rng = np.random.default_rng(3)
+    table = np.asarray(rng.normal(size=(10, 8)), np.float32)
+    toks = np.asarray([1, 2, babi.PAD, babi.PAD, babi.PAD], np.int32)
+    got = np.asarray(memn2n.bow(table, toks))
+    np.testing.assert_allclose(got, table[1] + table[2], atol=1e-6)
+
+
+def test_short_training_learns():
+    """A few steps of training must beat the 1/8-locations chance floor
+    comfortably (full training happens in aot.py)."""
+    params, log = memn2n.train(np.random.default_rng(7), steps=150, batch=64)
+    toks, n_sent, query, answer, _ = babi.generate_batch(
+        np.random.default_rng(99), 200
+    )
+    acc = memn2n.accuracy(params, toks, n_sent, query, answer)
+    assert log[0][1] > log[-1][1], "loss should decrease"
+    assert acc > 0.5, f"accuracy {acc} too low after 150 steps"

@@ -1,0 +1,105 @@
+"""Fixed-point pipeline: pallas kernel vs the bit-exact integer oracle,
+plus the paper's SIII-B width-ladder and error-bound claims."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.quantized import attention_quantized
+
+SETTINGS = dict(deadline=None, max_examples=15)
+
+
+def rand_problem(seed, n, d, scale=1.0):
+    rng = np.random.default_rng(seed)
+    key = rng.normal(0, scale, (n, d)).astype(np.float32)
+    value = rng.normal(0, scale, (n, d)).astype(np.float32)
+    query = rng.normal(0, scale, (d,)).astype(np.float32)
+    return key, value, query
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.sampled_from([16, 50, 128, 320]),
+    d=st.sampled_from([16, 64]),
+)
+def test_quantized_kernel_bit_exact_vs_oracle(seed, n, d):
+    key, value, query = rand_problem(seed, n, d)
+    got = np.asarray(attention_quantized(query, key, value))
+    want, _ = ref.attention_quantized_ref(key, value, query)
+    # Both sides land on the identical Q(*, 3f) grid point.
+    np.testing.assert_array_equal(got, np.asarray(want))
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_quantized_close_to_float(seed):
+    """f=4 keeps the attention output *directionally* faithful to the
+    float reference — the paper's claim is about task accuracy, not
+    output ulps (dot-product quantization noise over d=64 shifts the
+    softmax weights, so pointwise error can reach O(0.5) on unit-
+    gaussian inputs)."""
+    key, value, query = rand_problem(seed, 128, 64)
+    got = np.asarray(attention_quantized(query, key, value), np.float64)
+    want = np.asarray(ref.attention_ref(key, value, query), np.float64)
+    cos = got @ want / (np.linalg.norm(got) * np.linalg.norm(want) + 1e-12)
+    assert cos > 0.9, f"cosine {cos}"
+    assert np.abs(got - want).max() < 1.5
+
+
+def test_quantize_round_half_up_and_clamp():
+    q = np.asarray(ref.quantize_q(np.asarray([0.03125, -0.03125, 100.0, -100.0, 0.0])))
+    # 0.03125*16 = 0.5 rounds (half-up) to 1; -0.03125*16 = -0.5 floors to 0
+    assert q.tolist() == [1, 0, 255, -255, 0]
+
+
+def test_exp_lut_error_bound():
+    """Paper SIII footnote: quantization error shrinks through exp() for
+    non-positive arguments. Check the LUT against float exp."""
+    frac = 2 * ref.F_BITS
+    t_int, t_frac = ref.exp_tables(frac)
+    u_q = np.arange(0, ref.U_CLAMP_INT << frac, 7, dtype=np.int32)
+    got = np.asarray(ref.exp_lut_q(u_q, t_int, t_frac, frac)) / float(1 << frac)
+    want = np.exp(-u_q.astype(np.float64) / (1 << frac))
+    # one ulp of the 2f-bit score plane plus table rounding
+    assert np.abs(got - want).max() <= 1.5 / (1 << frac)
+
+
+def test_exp_lut_overflow_region_is_zero():
+    frac = 2 * ref.F_BITS
+    t_int, t_frac = ref.exp_tables(frac)
+    u_q = np.asarray([ref.U_CLAMP_INT << frac, (ref.U_CLAMP_INT << frac) + 12345], np.int32)
+    got = np.asarray(ref.exp_lut_q(u_q, t_int, t_frac, frac))
+    assert (got == 0).all()
+
+
+def test_width_ladder_fits_int32():
+    """SIII-B ladder at the paper's design point (n=320, d=64, i=f=4):
+    every intermediate must fit the int32 plane the kernels compute on."""
+    i, f, n, d = ref.I_BITS, ref.F_BITS, 320, 64
+    in_max = (1 << (i + f)) - 1
+    temp_max = in_max * in_max  # Q(2i, 2f)
+    dot_max = d * temp_max  # Q(2i + log2 d, 2f)
+    score_max = 1 << (2 * f)  # Q(0, 2f)
+    expsum_max = n * score_max  # Q(log2 n, 2f)
+    out_max = n * score_max * in_max  # Q(i + log2 n, 3f) upper bound
+    lut_prod_max = (1 << ref.TABLE_FRAC) ** 2
+    for v in (temp_max, dot_max, score_max, expsum_max, out_max, lut_prod_max):
+        assert v < 2**31
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), shift=st.floats(-4.0, 4.0))
+def test_quantized_softmax_shift_invariance_on_grid(seed, shift):
+    """Adding a constant to all dot products (via a key-aligned query
+    shift) must not change the fixed-point weights: the max-subtract
+    makes the pipeline shift-invariant on the integer plane too."""
+    key, value, query = rand_problem(seed, 64, 16, 0.5)
+    _, tr1 = ref.attention_quantized_ref(key, value, query)
+    # shift every dot product by the same quantized amount: append a
+    # constant column to the key and the shift to the query.
+    key2 = np.concatenate([key, np.ones((64, 1), np.float32)], axis=1)
+    q2 = np.concatenate([query, np.asarray([shift], np.float32)])
+    _, tr2 = ref.attention_quantized_ref(key2, value, q2)
+    np.testing.assert_array_equal(np.asarray(tr1["weight_q"]), np.asarray(tr2["weight_q"]))

@@ -1,0 +1,46 @@
+"""Round-trip tests for the A3TN tensor container (the rust reader in
+rust/src/model/weights.rs is validated against files this writer
+produces — see the golden artifacts)."""
+
+import numpy as np
+import pytest
+
+from compile.tensorio import read_tensors, write_tensors
+
+
+def test_round_trip(tmp_path):
+    path = tmp_path / "t.bin"
+    rng = np.random.default_rng(0)
+    tensors = {
+        "a": rng.normal(size=(3, 4)).astype(np.float32),
+        "b": rng.integers(-5, 5, size=(7,)).astype(np.int32),
+        "scalar": np.asarray([42], np.int32),
+        "threed": rng.normal(size=(2, 3, 4)).astype(np.float32),
+    }
+    write_tensors(path, tensors)
+    back = read_tensors(path)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+        assert back[k].dtype == tensors[k].dtype
+
+
+def test_dtype_coercion(tmp_path):
+    path = tmp_path / "t.bin"
+    write_tensors(path, {"f64": np.zeros(3, np.float64), "i64": np.ones(3, np.int64)})
+    back = read_tensors(path)
+    assert back["f64"].dtype == np.float32
+    assert back["i64"].dtype == np.int32
+
+
+def test_rejects_garbage(tmp_path):
+    path = tmp_path / "bad.bin"
+    path.write_bytes(b"NOPE" + b"\x00" * 16)
+    with pytest.raises(AssertionError):
+        read_tensors(path)
+
+
+def test_empty_container(tmp_path):
+    path = tmp_path / "empty.bin"
+    write_tensors(path, {})
+    assert read_tensors(path) == {}

@@ -1,0 +1,35 @@
+//! Bench: regenerate Fig. 3 — attention share of runtime — plus raw
+//! timings of the attention op at each workload's n.
+
+use std::time::Duration;
+
+use a3::attention::{attention, KvPair};
+use a3::bench::{bench, black_box, budget};
+use a3::experiments::fig03;
+use a3::testutil::Rng;
+use a3::workloads::WorkloadKind;
+
+fn main() {
+    println!("{}", fig03::run(400));
+
+    println!("-- raw attention op timings (host CPU) --");
+    let mut rng = Rng::new(1);
+    for kind in WorkloadKind::ALL {
+        let dims = kind.dims();
+        let kv = KvPair::new(
+            dims.n,
+            dims.d,
+            rng.normal_vec(dims.n * dims.d, 1.0),
+            rng.normal_vec(dims.n * dims.d, 1.0),
+        );
+        let q = rng.normal_vec(dims.d, 1.0);
+        let r = bench(
+            &format!("attention n={} d={} ({})", dims.n, dims.d, kind.name()),
+            budget().min(Duration::from_millis(500)),
+            || {
+                black_box(attention(&kv, &q));
+            },
+        );
+        println!("{r}");
+    }
+}

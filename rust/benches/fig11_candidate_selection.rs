@@ -1,0 +1,30 @@
+//! Bench: regenerate Fig. 11 (candidate selection across M) and time
+//! the greedy selection hot path itself.
+
+use a3::approx::{greedy_select, SortedColumns};
+use a3::bench::{bench, black_box, budget};
+use a3::experiments::fig11;
+use a3::experiments::sweep::EvalBudget;
+use a3::testutil::Rng;
+
+fn main() {
+    let (a, b) = fig11::run(EvalBudget::default()).expect("run `make artifacts` first");
+    println!("{a}\n{b}");
+
+    println!("-- greedy candidate selection timings (n=320, d=64) --");
+    let mut rng = Rng::new(2);
+    let (n, d) = (a3::PAPER_N, a3::PAPER_D);
+    let key = rng.normal_vec(n * d, 1.0);
+    let sorted = SortedColumns::preprocess(&key, n, d);
+    let q = rng.normal_vec(d, 1.0);
+    for m in [40usize, 80, 160, 320] {
+        let r = bench(&format!("greedy_select M={m}"), budget(), || {
+            black_box(greedy_select(&sorted, &q, m));
+        });
+        println!("{r}");
+    }
+    let r = bench("preprocess (column sort) n=320 d=64", budget(), || {
+        black_box(SortedColumns::preprocess(&key, n, d));
+    });
+    println!("{r}");
+}

@@ -1,0 +1,25 @@
+//! Bench: regenerate Fig. 12 (post-scoring selection across T) and
+//! time the selection primitive.
+
+use a3::approx::postscore_select;
+use a3::bench::{bench, black_box, budget};
+use a3::experiments::fig12;
+use a3::experiments::sweep::EvalBudget;
+use a3::testutil::Rng;
+
+fn main() {
+    let (a, b) = fig12::run(EvalBudget::default()).expect("run `make artifacts` first");
+    println!("{a}\n{b}");
+
+    println!("-- post-scoring selection timings --");
+    let mut rng = Rng::new(3);
+    let n = a3::PAPER_N;
+    let scores: Vec<f64> = (0..n).map(|_| rng.gaussian() * 4.0).collect();
+    let cands: Vec<usize> = (0..n).collect();
+    for t in [1.0, 5.0, 10.0, 20.0] {
+        let r = bench(&format!("postscore_select T={t}% n={n}"), budget(), || {
+            black_box(postscore_select(&scores, &cands, t));
+        });
+        println!("{r}");
+    }
+}

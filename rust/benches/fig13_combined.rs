@@ -1,0 +1,31 @@
+//! Bench: regenerate Fig. 13 (combined conservative/aggressive
+//! schemes) and time the full approximate-attention path end to end.
+
+use a3::approx::{approximate_attention, SortedColumns};
+use a3::attention::KvPair;
+use a3::bench::{bench, black_box, budget};
+use a3::experiments::fig13;
+use a3::experiments::sweep::EvalBudget;
+use a3::testutil::Rng;
+
+fn main() {
+    let (a, b) = fig13::run(EvalBudget::default()).expect("run `make artifacts` first");
+    println!("{a}\n{b}");
+
+    println!("-- full approximate attention path (n=320, d=64) --");
+    let mut rng = Rng::new(4);
+    let (n, d) = (a3::PAPER_N, a3::PAPER_D);
+    let kv = KvPair::new(n, d, rng.normal_vec(n * d, 1.0), rng.normal_vec(n * d, 1.0));
+    let sorted = SortedColumns::preprocess(&kv.key, n, d);
+    let q = rng.normal_vec(d, 1.0);
+    for (name, m, t) in [("conservative", n / 2, 5.0), ("aggressive", n / 8, 10.0)] {
+        let r = bench(&format!("approximate_attention {name}"), budget(), || {
+            black_box(approximate_attention(&kv, &sorted, &q, m, t));
+        });
+        println!("{r}");
+    }
+    let r = bench("exact attention (for comparison)", budget(), || {
+        black_box(a3::attention::attention(&kv, &q));
+    });
+    println!("{r}");
+}

@@ -1,0 +1,25 @@
+//! Bench: regenerate Fig. 14 (normalized throughput/latency across
+//! platforms) and time the cycle simulator itself (it must never be
+//! the bottleneck of serving experiments).
+
+use a3::bench::{bench, black_box, budget};
+use a3::experiments::fig14;
+use a3::experiments::sweep::EvalBudget;
+use a3::sim::{ApproxPipeline, ApproxQuery, BasePipeline, Dims};
+
+fn main() {
+    let (a, b) = fig14::run(EvalBudget::default()).expect("run `make artifacts` first");
+    println!("{a}\n{b}");
+
+    println!("-- cycle simulator throughput --");
+    let dims = Dims::paper();
+    let r = bench("BasePipeline 1k queries", budget(), || {
+        black_box(BasePipeline::new_untimed(dims).run_batch(1000));
+    });
+    println!("{r}  ({:.1} M simulated queries/s)", 1000.0 * r.throughput() / 1e6);
+    let q = ApproxQuery { m: 160, candidates: 80, kept: 20 };
+    let r = bench("ApproxPipeline 1k queries", budget(), || {
+        black_box(ApproxPipeline::new_untimed(dims).run_batch(&[q; 1000]));
+    });
+    println!("{r}  ({:.1} M simulated queries/s)", 1000.0 * r.throughput() / 1e6);
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate Fig. 15 (energy efficiency + breakdown) and time
+//! the energy-attribution path.
+
+use a3::bench::{bench, black_box, budget};
+use a3::energy::{attribute, Table1};
+use a3::experiments::fig15;
+use a3::experiments::sweep::EvalBudget;
+use a3::sim::{BasePipeline, Dims};
+
+fn main() {
+    let (a, b) = fig15::run(EvalBudget::default()).expect("run `make artifacts` first");
+    println!("{a}\n{b}");
+
+    println!("-- energy attribution timing --");
+    let report = BasePipeline::new_untimed(Dims::paper()).run_batch(1000);
+    let table = Table1::paper();
+    let r = bench("attribute(1k-query report)", budget(), || {
+        black_box(attribute(&table, &report));
+    });
+    println!("{r}");
+}

@@ -1,0 +1,79 @@
+//! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
+//! every L3 primitive on the serving path, timed in isolation.
+
+use a3::approx::{greedy_select, postscore_select, SortedColumns};
+use a3::attention::{attention, quantized_attention_paper, ExpLut, KvPair};
+use a3::bench::{bench, black_box, budget};
+use a3::coordinator::{KvContext, Scheduler, UnitConfig, UnitKind};
+use a3::sim::{BasePipeline, Dims, PipelineSim};
+use a3::testutil::Rng;
+
+fn main() {
+    let mut rng = Rng::new(7);
+    let (n, d) = (a3::PAPER_N, a3::PAPER_D);
+    let kv = KvPair::new(n, d, rng.normal_vec(n * d, 1.0), rng.normal_vec(n * d, 1.0));
+    let sorted = SortedColumns::preprocess(&kv.key, n, d);
+    let q = rng.normal_vec(d, 1.0);
+    let b = budget();
+
+    println!("{}", bench("attention f32 n=320 d=64", b, || {
+        black_box(attention(&kv, &q));
+    }));
+    println!("{}", bench("quantized_attention (quantize K/V per call)", b, || {
+        black_box(quantized_attention_paper(&kv, &q));
+    }));
+    let qkv = a3::attention::QuantKv::paper(&kv);
+    let lut = a3::attention::ExpLut::paper();
+    println!("{}", bench("quantized_attention (SRAM-resident QuantKv)", b, || {
+        black_box(a3::attention::quantized_attention_prequant(&qkv, &q, &lut));
+    }));
+    println!("{}", bench("exp LUT (single)", b, || {
+        let lut = black_box(&LUT);
+        black_box(lut.exp_neg(black_box(1234)));
+    }));
+    println!("{}", bench("column-sort preprocess", b, || {
+        black_box(SortedColumns::preprocess(&kv.key, n, d));
+    }));
+    println!("{}", bench("greedy_select M=160", b, || {
+        black_box(greedy_select(&sorted, &q, 160));
+    }));
+    let scores: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7).sin() * 4.0).collect();
+    let cands: Vec<usize> = (0..n).collect();
+    println!("{}", bench("postscore_select T=5%", b, || {
+        black_box(postscore_select(&scores, &cands, 5.0));
+    }));
+    println!("{}", bench("PipelineSim push (5-stage)", b, || {
+        let mut sim = PipelineSim::new(false);
+        for _ in 0..100 {
+            sim.push(0, &[
+                (a3::sim::Module::DotProduct, 329),
+                (a3::sim::Module::Exponent, 329),
+                (a3::sim::Module::Output, 329),
+            ]);
+        }
+        black_box(sim.report().makespan);
+    }));
+    println!("{}", bench("BasePipeline::run_batch(1000)", b, || {
+        black_box(BasePipeline::new_untimed(Dims::paper()).run_batch(1000));
+    }));
+    // context is registered once (comprehension time) — keep it out of
+    // the timed loop, exactly as the serving path does.
+    let ctx = KvContext::new(0, kv.clone());
+    let queries: Vec<a3::coordinator::Query> = (0..8)
+        .map(|i| a3::coordinator::Query {
+            id: i,
+            context: 0,
+            embedding: vec![0.1; d],
+            arrival_ns: 0,
+        })
+        .collect();
+    println!("{}", bench("scheduler dispatch batch-8", b, || {
+        let mut s = Scheduler::replicated(
+            UnitConfig { kind: UnitKind::Base, dims: Dims::paper() },
+            2,
+        );
+        black_box(s.dispatch(&ctx, &queries));
+    }));
+}
+
+static LUT: std::sync::LazyLock<ExpLut> = std::sync::LazyLock::new(ExpLut::paper);

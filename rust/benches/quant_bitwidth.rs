@@ -1,0 +1,27 @@
+//! Bench: regenerate the §VI-B quantization sweep and time the
+//! fixed-point pipeline across bitwidths.
+
+use a3::attention::{quantized_attention, ExpLut, KvPair};
+use a3::bench::{bench, black_box, budget};
+use a3::experiments::quant_sweep;
+use a3::experiments::sweep::EvalBudget;
+use a3::fixedpoint::QFormat;
+use a3::testutil::Rng;
+
+fn main() {
+    println!("{}", quant_sweep::run(EvalBudget::default()).expect("run `make artifacts` first"));
+
+    println!("-- fixed-point pipeline across f (n=320, d=64) --");
+    let mut rng = Rng::new(5);
+    let (n, d) = (a3::PAPER_N, a3::PAPER_D);
+    let kv = KvPair::new(n, d, rng.normal_vec(n * d, 1.0), rng.normal_vec(n * d, 1.0));
+    let q = rng.normal_vec(d, 1.0);
+    for f in [2u32, 4, 6] {
+        let fmt = QFormat::new(4, f);
+        let lut = ExpLut::new(2 * f);
+        let r = bench(&format!("quantized_attention i=4 f={f}"), budget(), || {
+            black_box(quantized_attention(&kv, &q, fmt, &lut));
+        });
+        println!("{r}");
+    }
+}

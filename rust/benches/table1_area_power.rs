@@ -1,0 +1,18 @@
+//! Bench: regenerate Table I (area/power) — constants, so this is a
+//! plain regeneration plus a consistency audit against §VI-D claims.
+
+use a3::energy::Table1;
+use a3::experiments::table1;
+
+fn main() {
+    println!("{}", table1::run());
+
+    let t = Table1::paper();
+    println!("-- §VI-D consistency audit --");
+    println!("total area        : {:.3} mm^2 (paper: 2.082)", t.total_area_mm2());
+    println!("peak dynamic power: {:.2} mW (paper: <100 mW)", t.total_dynamic_mw());
+    println!("static power      : {:.3} mW (paper: 11.502)", t.total_static_mw());
+    println!("vs Xeon die       : {:.0}x smaller (paper: 156x)", t.area_ratio_vs(325.0));
+    println!("vs Titan V die    : {:.0}x smaller (paper: 391x)", t.area_ratio_vs(815.0));
+    assert!(t.total_dynamic_mw() < 100.0);
+}

@@ -1,0 +1,86 @@
+//! Approximate attention (paper §IV): greedy candidate selection over a
+//! column-sorted key matrix, plus post-scoring selection.
+//!
+//! * [`preprocess`] — the comprehension-time step: sort each key column
+//!   (descending) keeping original row ids (Fig. 8's `sortedKey`).
+//! * [`greedy`] — the query-time iterative candidate search (Fig. 7),
+//!   including the minQ skip heuristic.
+//! * [`postscore`] — threshold-based thinning of scored candidates
+//!   (§IV-D): keep rows whose post-softmax weight would be ≥ T% of the
+//!   maximum weight.
+//!
+//! The float plane here is f64, matching the python oracle
+//! (`ref.py::greedy_candidates_ref`) so golden tests compare candidate
+//! sets exactly.
+
+pub mod greedy;
+pub mod postscore;
+pub mod preprocess;
+
+pub use greedy::{greedy_select, greedy_select_opts, GreedyOpts, GreedyResult, GreedyStats};
+pub use postscore::{postscore_select, threshold_t};
+pub use preprocess::SortedColumns;
+
+/// One end-to-end approximate attention pass: candidate selection →
+/// exact scores for candidates → post-scoring selection → masked
+/// attention. Returns (output, kept rows, stats) — the functional twin
+/// of Fig. 10's module chain, used by the accuracy experiments.
+pub fn approximate_attention(
+    kv: &crate::attention::KvPair,
+    sorted: &SortedColumns,
+    query: &[f32],
+    m_iters: usize,
+    threshold_pct: f64,
+) -> (Vec<f32>, Vec<usize>, GreedyStats) {
+    let res = greedy_select(sorted, query, m_iters);
+    let scores: Vec<f64> = res
+        .candidates
+        .iter()
+        .map(|&i| {
+            kv.key_row(i)
+                .iter()
+                .zip(query)
+                .map(|(k, q)| *k as f64 * *q as f64)
+                .sum()
+        })
+        .collect();
+    let kept = postscore_select(&scores, &res.candidates, threshold_pct);
+    let out = crate::attention::attention_masked(kv, query, &kept);
+    (out, kept, res.stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::KvPair;
+    use crate::testutil::{assert_allclose, Rng};
+
+    #[test]
+    fn pipeline_with_full_m_and_tiny_t_tracks_exact() {
+        // M = 2nd inspects everything; T→0 keeps every candidate. The
+        // result only drops rows with *negative* greedy score, which
+        // carry near-zero softmax weight by construction.
+        let mut rng = Rng::new(1);
+        let (n, d) = (48, 16);
+        let kv = KvPair::new(n, d, rng.normal_vec(n * d, 1.0), rng.normal_vec(n * d, 1.0));
+        let sorted = SortedColumns::preprocess(&kv.key, n, d);
+        let q = rng.normal_vec(d, 1.0);
+        let (out, kept, _) = approximate_attention(&kv, &sorted, &q, 2 * n * d, 1e-6);
+        assert!(!kept.is_empty());
+        let exact = crate::attention::attention(&kv, &q);
+        assert_allclose(&out, &exact, 0.05, 0.05);
+    }
+
+    #[test]
+    fn aggressive_config_selects_fewer_rows() {
+        let mut rng = Rng::new(2);
+        let (n, d) = (320, 64);
+        let kv = KvPair::new(n, d, rng.normal_vec(n * d, 1.0), rng.normal_vec(n * d, 1.0));
+        let sorted = SortedColumns::preprocess(&kv.key, n, d);
+        let q = rng.normal_vec(d, 1.0);
+        let (_, kept_cons, _) = approximate_attention(&kv, &sorted, &q, n / 2, 5.0);
+        let (_, kept_aggr, _) = approximate_attention(&kv, &sorted, &q, n / 8, 10.0);
+        assert!(kept_aggr.len() <= kept_cons.len());
+        assert!(!kept_aggr.is_empty());
+    }
+}

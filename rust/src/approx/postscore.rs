@@ -1,0 +1,115 @@
+//! Post-scoring selection (paper §IV-D).
+//!
+//! After the exact dot products of the surviving candidates are
+//! computed, rows whose score trails the maximum by more than
+//! `t = ln(100 / T)` are dropped: their post-softmax weight would be
+//! below T% of the top row's weight. The paper parameterizes by
+//! `T = 100 / e^t` (percent of the maximum weight) — so T=5 means "keep
+//! rows with at least 5% of the top weight"; larger T is *more*
+//! aggressive.
+//!
+//! On the ASIC this is a 16-wide subtract-and-compare stage fused into
+//! the front of the exponent module (§V-B); the simulator charges
+//! ceil(C/16) cycles for it.
+
+/// The score-difference threshold `t` for a given T (%).
+pub fn threshold_t(threshold_pct: f64) -> f64 {
+    assert!(threshold_pct > 0.0, "T must be positive");
+    (100.0 / threshold_pct).ln()
+}
+
+/// Keep candidates whose score is within `t` of the candidate maximum.
+/// `scores[i]` is the exact dot product of `candidates[i]`; the
+/// returned rows preserve the input (ascending row) order.
+pub fn postscore_select(scores: &[f64], candidates: &[usize], threshold_pct: f64) -> Vec<usize> {
+    assert_eq!(scores.len(), candidates.len());
+    if candidates.is_empty() {
+        return Vec::new();
+    }
+    let t = threshold_t(threshold_pct);
+    let smax = scores.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    candidates
+        .iter()
+        .zip(scores)
+        .filter(|(_, &s)| s >= smax - t)
+        .map(|(&r, _)| r)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{check, Rng};
+
+    #[test]
+    fn top_scorer_always_kept() {
+        check(100, |rng: &mut Rng| {
+            let n = rng.range(1, 64);
+            let scores: Vec<f64> = (0..n).map(|_| rng.gaussian() * 3.0).collect();
+            let cands: Vec<usize> = (0..n).collect();
+            let t_pct = [1.0, 5.0, 10.0, 20.0][rng.below(4)];
+            let kept = postscore_select(&scores, &cands, t_pct);
+            let top = (0..n)
+                .max_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap())
+                .unwrap();
+            assert!(kept.contains(&top));
+        });
+    }
+
+    #[test]
+    fn higher_t_keeps_subset() {
+        check(100, |rng: &mut Rng| {
+            let n = rng.range(1, 64);
+            let scores: Vec<f64> = (0..n).map(|_| rng.gaussian() * 3.0).collect();
+            let cands: Vec<usize> = (0..n).collect();
+            let mut prev: Option<Vec<usize>> = None;
+            for t_pct in [1.0, 5.0, 10.0, 20.0, 50.0] {
+                let kept = postscore_select(&scores, &cands, t_pct);
+                if let Some(p) = &prev {
+                    assert!(kept.iter().all(|r| p.contains(r)), "not a subset at T={t_pct}");
+                }
+                prev = Some(kept);
+            }
+        });
+    }
+
+    #[test]
+    fn weight_ratio_semantics() {
+        // A kept row's softmax weight is >= T% of the max weight; a
+        // dropped row's is < T%.
+        check(100, |rng: &mut Rng| {
+            let n = rng.range(2, 40);
+            let scores: Vec<f64> = (0..n).map(|_| rng.gaussian() * 4.0).collect();
+            let cands: Vec<usize> = (0..n).collect();
+            let t_pct = 5.0;
+            let kept = postscore_select(&scores, &cands, t_pct);
+            let smax = scores.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            for (r, &s) in cands.iter().zip(&scores) {
+                let ratio = ((s - smax).exp()) * 100.0;
+                if kept.contains(r) {
+                    assert!(ratio >= t_pct - 1e-9, "kept but ratio {ratio} < {t_pct}");
+                } else {
+                    assert!(ratio < t_pct + 1e-9, "dropped but ratio {ratio} >= {t_pct}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn empty_input_empty_output() {
+        assert!(postscore_select(&[], &[], 5.0).is_empty());
+    }
+
+    #[test]
+    fn t_100_keeps_only_ties_with_max() {
+        let scores = vec![1.0, 1.0, 0.999, -3.0];
+        let kept = postscore_select(&scores, &[10, 20, 30, 40], 100.0);
+        assert_eq!(kept, vec![10, 20]);
+    }
+
+    #[test]
+    #[should_panic(expected = "T must be positive")]
+    fn zero_t_rejected() {
+        threshold_t(0.0);
+    }
+}

@@ -1,0 +1,141 @@
+//! The two-lookup-table exponent unit (paper §III, module 2).
+//!
+//! A full 16-bit exponent LUT would need 65,536 SRAM entries; the paper
+//! instead decomposes `e^(hi+lo) = e^hi · e^lo` into two small tables
+//! plus one multiplier. After the max-subtraction, every argument is
+//! `-u` with `u ≥ 0`, so the tables store
+//!
+//! * `T_int[k]  = round(e^-k · 2^TABLE_FRAC)`          k ∈ [0, 16)
+//! * `T_frac[j] = round(e^-(j / 2^frac) · 2^TABLE_FRAC)` j ∈ [0, 2^frac)
+//!
+//! `TABLE_FRAC = 15` keeps the `T_int · T_frac` product inside the
+//! 32-bit compute plane (matching the python oracle, which must run
+//! with jax's 64-bit mode disabled). Arguments with `u ≥ 16` underflow
+//! to exactly 0 — at 2f = 8 score fraction bits, `e^-16 ≈ 1.1e-7` is
+//! below half an ulp, so this is lossless.
+
+/// Fraction bits of the stored table entries.
+pub const TABLE_FRAC: u32 = 15;
+/// Integer clamp: `e^-u = 0` for `u ≥ U_CLAMP_INT`.
+pub const U_CLAMP_INT: i32 = 16;
+
+/// The exponent unit: two LUTs + the result-plane fraction width.
+#[derive(Clone, Debug)]
+pub struct ExpLut {
+    /// Fraction bits of both the argument `u` and the returned score.
+    pub frac_bits: u32,
+    t_int: Vec<i32>,
+    t_frac: Vec<i32>,
+}
+
+impl ExpLut {
+    /// Build tables for a score plane with `frac_bits` fraction bits
+    /// (the paper uses 2f = 8).
+    pub fn new(frac_bits: u32) -> Self {
+        assert!(frac_bits <= 14, "table would not fit the i32 plane");
+        let t_int = (0..U_CLAMP_INT)
+            .map(|k| ((-(k as f64)).exp() * (1u64 << TABLE_FRAC) as f64 + 0.5).floor() as i32)
+            .collect();
+        let t_frac = (0..(1u32 << frac_bits))
+            .map(|j| {
+                let x = -(j as f64) / (1u64 << frac_bits) as f64;
+                (x.exp() * (1u64 << TABLE_FRAC) as f64 + 0.5).floor() as i32
+            })
+            .collect();
+        ExpLut { frac_bits, t_int, t_frac }
+    }
+
+    /// The paper's configuration (score plane = 2f = 8 fraction bits).
+    pub fn paper() -> Self {
+        ExpLut::new(2 * crate::fixedpoint::QFormat::PAPER_INPUT.frac_bits)
+    }
+
+    /// Fixed-point `e^-u` for `u_q ≥ 0` on the `frac_bits` plane.
+    ///
+    /// Bit-for-bit identical to `compile/kernels/ref.py::exp_lut_q`.
+    #[inline]
+    pub fn exp_neg(&self, u_q: i32) -> i32 {
+        debug_assert!(u_q >= 0, "argument must be non-negative (post max-subtract)");
+        let k = u_q >> self.frac_bits;
+        if k >= U_CLAMP_INT {
+            return 0;
+        }
+        let j = (u_q & ((1 << self.frac_bits) - 1)) as usize;
+        let prod = self.t_int[k as usize] * self.t_frac[j]; // ≤ 2^30
+        let shift = 2 * TABLE_FRAC - self.frac_bits;
+        (prod + (1 << (shift - 1))) >> shift
+    }
+
+    /// Number of SRAM entries across both tables (area model input).
+    pub fn table_entries(&self) -> usize {
+        self.t_int.len() + self.t_frac.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::check;
+
+    #[test]
+    fn exp_of_zero_is_one() {
+        let lut = ExpLut::paper();
+        assert_eq!(lut.exp_neg(0), 1 << lut.frac_bits);
+    }
+
+    #[test]
+    fn matches_float_exp_within_ulp() {
+        let lut = ExpLut::paper();
+        let frac = lut.frac_bits;
+        for u_q in (0..(U_CLAMP_INT << frac)).step_by(7) {
+            let got = lut.exp_neg(u_q) as f64 / (1u64 << frac) as f64;
+            let want = (-(u_q as f64) / (1u64 << frac) as f64).exp();
+            assert!(
+                (got - want).abs() <= 1.5 / (1u64 << frac) as f64,
+                "u_q={u_q} got={got} want={want}"
+            );
+        }
+    }
+
+    #[test]
+    fn monotone_nonincreasing() {
+        let lut = ExpLut::paper();
+        let mut prev = i32::MAX;
+        for u_q in 0..(U_CLAMP_INT << lut.frac_bits) {
+            let v = lut.exp_neg(u_q);
+            assert!(v <= prev, "not monotone at u_q={u_q}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn underflow_region_is_exactly_zero() {
+        let lut = ExpLut::paper();
+        assert_eq!(lut.exp_neg(U_CLAMP_INT << lut.frac_bits), 0);
+        assert_eq!(lut.exp_neg((U_CLAMP_INT << lut.frac_bits) + 12345), 0);
+        assert_eq!(lut.exp_neg(i32::MAX), 0);
+    }
+
+    #[test]
+    fn decomposition_error_shrinks_through_exp() {
+        // Paper §III footnote 1: |e^(x+ε) − e^x| < |ε| for x+ε ≤ 0.
+        // Consequence: a half-ulp argument error cannot produce more than
+        // a half-ulp score error (plus table rounding).
+        let lut = ExpLut::paper();
+        let frac = lut.frac_bits as i32;
+        check(200, |rng| {
+            let u = rng.below((U_CLAMP_INT as usize) << frac as usize) as i32;
+            let eps = 1; // one ulp on the argument plane
+            let a = lut.exp_neg(u) as f64;
+            let b = lut.exp_neg(u + eps) as f64;
+            assert!((a - b).abs() <= 2.0, "score jump {} at u={u}", (a - b).abs());
+        });
+    }
+
+    #[test]
+    fn small_tables_as_paper_claims() {
+        // §III: two ~256-entry tables instead of one 65,536-entry table.
+        let lut = ExpLut::paper();
+        assert!(lut.table_entries() <= 16 + 256);
+    }
+}

@@ -1,0 +1,80 @@
+//! Attention datapaths: the float reference (Fig. 1) and the
+//! bit-accurate fixed-point pipeline model (Fig. 5 + §III-B).
+
+pub mod explut;
+pub mod quantized;
+pub mod reference;
+
+pub use explut::ExpLut;
+pub use quantized::{
+    quantized_attention, quantized_attention_paper, quantized_attention_prequant, QuantKv,
+    QuantTrace,
+};
+pub use reference::{
+    attention, attention_batch, attention_masked, dot_scores, softmax_weights,
+};
+
+/// A key/value store for one attention context: the operands the paper's
+/// §III "offloading mechanism" copies into the accelerator SRAM ahead of
+/// query arrival. Row-major `n x d`.
+#[derive(Clone, Debug)]
+pub struct KvPair {
+    pub n: usize,
+    pub d: usize,
+    pub key: Vec<f32>,
+    pub value: Vec<f32>,
+}
+
+impl KvPair {
+    pub fn new(n: usize, d: usize, key: Vec<f32>, value: Vec<f32>) -> Self {
+        assert_eq!(key.len(), n * d, "key shape mismatch");
+        assert_eq!(value.len(), n * d, "value shape mismatch");
+        KvPair { n, d, key, value }
+    }
+
+    pub fn key_row(&self, i: usize) -> &[f32] {
+        &self.key[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn value_row(&self, i: usize) -> &[f32] {
+        &self.value[i * self.d..(i + 1) * self.d]
+    }
+
+    /// SRAM footprint in bytes at a given element width — drives the
+    /// §III-C "does it fit in the 20KB buffers" accounting.
+    pub fn sram_bytes(&self, bits_per_element: u32) -> usize {
+        2 * self.n * self.d * bits_per_element as usize / 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+
+    pub(crate) fn random_kv(rng: &mut Rng, n: usize, d: usize) -> KvPair {
+        KvPair::new(n, d, rng.normal_vec(n * d, 1.0), rng.normal_vec(n * d, 1.0))
+    }
+
+    #[test]
+    fn kv_rows_index_correctly() {
+        let kv = KvPair::new(3, 2, vec![1., 2., 3., 4., 5., 6.], vec![0.; 6]);
+        assert_eq!(kv.key_row(1), &[3., 4.]);
+        assert_eq!(kv.key_row(2), &[5., 6.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "key shape mismatch")]
+    fn kv_shape_checked() {
+        KvPair::new(3, 2, vec![0.; 5], vec![0.; 6]);
+    }
+
+    #[test]
+    fn paper_design_point_fits_20kb_srams() {
+        // §III-C: n=320, d=64 at 9-bit (i=4,f=4,+sign) words ~ 20KB each.
+        let mut rng = Rng::new(0);
+        let kv = random_kv(&mut rng, crate::PAPER_N, crate::PAPER_D);
+        let per_matrix = kv.sram_bytes(8) / 2;
+        assert!(per_matrix <= 20 * 1024, "{per_matrix} > 20KB");
+    }
+}

@@ -1,0 +1,208 @@
+//! Float reference attention (Fig. 1 of the paper), plus the
+//! numerically-stable max-subtraction form the hardware implements
+//! (Fig. 5). This is the functional oracle every other backend —
+//! fixed-point, approximate, PJRT-offloaded — is compared against, and
+//! it doubles as the measured "CPU baseline kernel" for Fig. 14.
+
+use super::KvPair;
+
+/// Dot products of the query against every key row (module 1).
+pub fn dot_scores(kv: &KvPair, query: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(query.len(), kv.d);
+    (0..kv.n)
+        .map(|i| {
+            kv.key_row(i)
+                .iter()
+                .zip(query)
+                .map(|(k, q)| k * q)
+                .sum::<f32>()
+        })
+        .collect()
+}
+
+/// Stable softmax over scores (modules 1+2: running max, exp, normalize).
+pub fn softmax_weights(scores: &[f32]) -> Vec<f32> {
+    let max = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = scores.iter().map(|&s| (s - max).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / sum).collect()
+}
+
+/// Full soft attention for one query: `softmax(K q) · V` (Fig. 1).
+pub fn attention(kv: &KvPair, query: &[f32]) -> Vec<f32> {
+    // hard check (not debug_assert): a short query would otherwise
+    // silently zip-truncate into wrong numbers in release builds
+    assert_eq!(query.len(), kv.d, "query dimension mismatch");
+    let weights = softmax_weights(&dot_scores(kv, query));
+    weighted_sum(kv, &weights)
+}
+
+/// Batched queries (row-major `b x d` in, `b x d` out).
+pub fn attention_batch(kv: &KvPair, queries: &[f32]) -> Vec<f32> {
+    assert_eq!(queries.len() % kv.d, 0);
+    queries
+        .chunks_exact(kv.d)
+        .flat_map(|q| attention(kv, q))
+        .collect()
+}
+
+/// Attention restricted to `selected` rows — the functional semantics of
+/// the approximate pipeline after candidate + post-scoring selection.
+/// Rows outside `selected` get exactly zero weight. An empty selection
+/// returns zeros (mirrors the masked pallas kernel's guard).
+pub fn attention_masked(kv: &KvPair, query: &[f32], selected: &[usize]) -> Vec<f32> {
+    assert_eq!(query.len(), kv.d, "query dimension mismatch");
+    if selected.is_empty() {
+        return vec![0.0; kv.d];
+    }
+    let scores: Vec<f32> = selected
+        .iter()
+        .map(|&i| {
+            kv.key_row(i)
+                .iter()
+                .zip(query)
+                .map(|(k, q)| k * q)
+                .sum::<f32>()
+        })
+        .collect();
+    let weights = softmax_weights(&scores);
+    let mut out = vec![0.0f32; kv.d];
+    for (&row, &w) in selected.iter().zip(&weights) {
+        for (o, v) in out.iter_mut().zip(kv.value_row(row)) {
+            *o += w * v;
+        }
+    }
+    out
+}
+
+/// Module 3: output = Σ_i weight_i · value_i.
+pub fn weighted_sum(kv: &KvPair, weights: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(weights.len(), kv.n);
+    let mut out = vec![0.0f32; kv.d];
+    for (i, &w) in weights.iter().enumerate() {
+        if w == 0.0 {
+            continue;
+        }
+        for (o, v) in out.iter_mut().zip(kv.value_row(i)) {
+            *o += w * v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::random_kv;
+    use super::*;
+    use crate::testutil::{assert_allclose, check, Rng};
+
+    #[test]
+    fn softmax_sums_to_one_and_orders() {
+        check(100, |rng: &mut Rng| {
+            let len = rng.range(1, 64);
+            let scores = rng.normal_vec(len, 3.0);
+            let w = softmax_weights(&scores);
+            let sum: f32 = w.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "sum {sum}");
+            // monotone: larger score -> no smaller weight
+            for i in 0..scores.len() {
+                for j in 0..scores.len() {
+                    if scores[i] > scores[j] {
+                        assert!(w[i] >= w[j]);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn softmax_shift_invariant() {
+        // The property module 2's max-subtraction exploits (§III).
+        check(100, |rng: &mut Rng| {
+            let scores = rng.normal_vec(16, 2.0);
+            let c = rng.gaussian_f32(0.0, 50.0);
+            let shifted: Vec<f32> = scores.iter().map(|s| s + c).collect();
+            assert_allclose(
+                &softmax_weights(&shifted),
+                &softmax_weights(&scores),
+                1e-5,
+                1e-4,
+            );
+        });
+    }
+
+    #[test]
+    fn softmax_stable_at_huge_scores() {
+        let w = softmax_weights(&[1e30, 1e30 - 1.0, 0.0]);
+        assert!(w.iter().all(|x| x.is_finite()));
+        assert!((w.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn attention_is_convex_combination_of_values() {
+        check(50, |rng: &mut Rng| {
+            let (n, d) = (rng.range(2, 40), rng.range(2, 16));
+            let kv = random_kv(rng, n, d);
+            let q = rng.normal_vec(kv.d, 1.0);
+            let out = attention(&kv, &q);
+            // each output dim lies within [min, max] of that value column
+            for j in 0..kv.d {
+                let col: Vec<f32> = (0..kv.n).map(|i| kv.value_row(i)[j]).collect();
+                let lo = col.iter().copied().fold(f32::INFINITY, f32::min);
+                let hi = col.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                assert!(out[j] >= lo - 1e-4 && out[j] <= hi + 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn peaked_scores_select_argmax_value() {
+        let mut rng = Rng::new(3);
+        let mut kv = random_kv(&mut rng, 8, 4);
+        let q = rng.normal_vec(4, 1.0);
+        // make row 5's key hugely aligned with q
+        for (k, qv) in kv.key[5 * 4..6 * 4].iter_mut().zip(&q) {
+            *k = qv * 100.0;
+        }
+        let out = attention(&kv, &q);
+        assert_allclose(&out, kv.value_row(5), 1e-3, 1e-3);
+    }
+
+    #[test]
+    fn masked_full_selection_equals_base() {
+        check(50, |rng: &mut Rng| {
+            let (n, d) = (rng.range(2, 40), rng.range(2, 16));
+            let kv = random_kv(rng, n, d);
+            let q = rng.normal_vec(kv.d, 1.0);
+            let all: Vec<usize> = (0..kv.n).collect();
+            assert_allclose(&attention_masked(&kv, &q, &all), &attention(&kv, &q), 1e-5, 1e-4);
+        });
+    }
+
+    #[test]
+    fn masked_single_row_returns_value() {
+        let mut rng = Rng::new(9);
+        let kv = random_kv(&mut rng, 12, 6);
+        let q = rng.normal_vec(6, 1.0);
+        assert_allclose(&attention_masked(&kv, &q, &[7]), kv.value_row(7), 1e-6, 0.0);
+    }
+
+    #[test]
+    fn masked_empty_selection_is_zero() {
+        let mut rng = Rng::new(10);
+        let kv = random_kv(&mut rng, 4, 3);
+        let q = rng.normal_vec(3, 1.0);
+        assert_eq!(attention_masked(&kv, &q, &[]), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn batch_matches_per_query() {
+        let mut rng = Rng::new(11);
+        let kv = random_kv(&mut rng, 32, 8);
+        let queries = rng.normal_vec(4 * 8, 1.0);
+        let batch = attention_batch(&kv, &queries);
+        for (b, q) in queries.chunks_exact(8).enumerate() {
+            assert_allclose(&batch[b * 8..(b + 1) * 8], &attention(&kv, q), 1e-6, 0.0);
+        }
+    }
+}

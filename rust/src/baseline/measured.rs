@@ -1,0 +1,77 @@
+//! Measured host-CPU attention baseline.
+//!
+//! Runs the reference f32 attention (the same dense matvec + softmax +
+//! weighted-sum computation the paper's CPU baseline performs through
+//! TensorFlow/Torch) on this machine and reports seconds per query.
+//! Used for the CPU bars of Fig. 14 and the attention-share profile of
+//! Fig. 3.
+
+use std::time::Instant;
+
+use crate::attention::{attention, KvPair};
+use crate::sim::Dims;
+use crate::testutil::Rng;
+
+/// Measured cost of one attention op on the host CPU.
+#[derive(Clone, Copy, Debug)]
+pub struct HostMeasurement {
+    pub dims: Dims,
+    pub seconds_per_query: f64,
+    pub queries_timed: usize,
+}
+
+impl HostMeasurement {
+    pub fn qps(&self) -> f64 {
+        1.0 / self.seconds_per_query
+    }
+}
+
+/// Time `batch`-query attention at `dims` on this host. Deterministic
+/// inputs; enough repetitions for a stable mean.
+pub fn measure_host_attention(dims: Dims, min_seconds: f64) -> HostMeasurement {
+    let mut rng = Rng::new(0xBEEF);
+    let kv = KvPair::new(
+        dims.n,
+        dims.d,
+        rng.normal_vec(dims.n * dims.d, 1.0),
+        rng.normal_vec(dims.n * dims.d, 1.0),
+    );
+    let queries: Vec<Vec<f32>> = (0..64).map(|_| rng.normal_vec(dims.d, 1.0)).collect();
+
+    // warmup
+    for q in queries.iter().take(8) {
+        std::hint::black_box(attention(&kv, q));
+    }
+
+    let start = Instant::now();
+    let mut count = 0usize;
+    while start.elapsed().as_secs_f64() < min_seconds {
+        for q in &queries {
+            std::hint::black_box(attention(&kv, q));
+            count += 1;
+        }
+    }
+    HostMeasurement {
+        dims,
+        seconds_per_query: start.elapsed().as_secs_f64() / count as f64,
+        queries_timed: count,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurement_is_positive_and_scales_with_n() {
+        let small = measure_host_attention(Dims::new(32, 64), 0.05);
+        let large = measure_host_attention(Dims::new(320, 64), 0.05);
+        assert!(small.seconds_per_query > 0.0);
+        assert!(
+            large.seconds_per_query > 2.0 * small.seconds_per_query,
+            "n=320 {} vs n=32 {}",
+            large.seconds_per_query,
+            small.seconds_per_query
+        );
+    }
+}

@@ -1,0 +1,44 @@
+//! Conventional-hardware baselines for the Fig. 14 / Fig. 15
+//! comparisons.
+//!
+//! The paper measured an Intel Xeon Gold 6128 and an NVIDIA Titan V.
+//! Neither is available here, so (DESIGN.md §4):
+//!
+//! * [`measured`] times the *actual* f32 attention kernel on this
+//!   host's CPU — a real measurement with the same arithmetic the
+//!   paper's CPU baseline performs (frameworks' matvec + softmax);
+//! * [`models`] provides analytical roofline models **calibrated to the
+//!   paper's platforms** (Xeon 6128, Titan V) so the normalized shapes
+//!   of Fig. 14 — who wins, by roughly what factor — can be regenerated
+//!   deterministically.
+
+pub mod measured;
+pub mod models;
+
+pub use measured::measure_host_attention;
+pub use models::{CostModel, PlatformKind};
+
+#[cfg(test)]
+mod tests {
+    use super::models::*;
+    use crate::sim::Dims;
+
+    #[test]
+    fn gpu_beats_cpu_on_big_batched_selfattention() {
+        // Fig. 14a BERT: GPU throughput > 1 A³ unit > CPU.
+        let dims = Dims::paper();
+        let cpu = CostModel::xeon_6128().attention_seconds(dims, 320);
+        let gpu = CostModel::titan_v().attention_seconds(dims, 320);
+        assert!(gpu < cpu, "gpu {gpu} cpu {cpu}");
+    }
+
+    #[test]
+    fn cpu_beats_gpu_on_single_small_query() {
+        // launch overhead dominates single tiny matvecs on the GPU —
+        // why the paper has no GPU bars for MemN2N/KV-MemN2N.
+        let dims = Dims::new(20, 64);
+        let cpu = CostModel::xeon_6128().attention_seconds(dims, 1);
+        let gpu = CostModel::titan_v().attention_seconds(dims, 1);
+        assert!(cpu < gpu, "cpu {cpu} gpu {gpu}");
+    }
+}

@@ -1,0 +1,124 @@
+//! Minimal benchmarking harness (criterion is not in the offline
+//! vendor set). Provides warmup + timed iterations with simple robust
+//! statistics, used by every `rust/benches/*.rs` target.
+
+use std::time::{Duration, Instant};
+
+/// Result of one timed benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wall time statistics.
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        self.mean.as_nanos() as f64
+    }
+
+    /// Iterations per second at the mean.
+    pub fn throughput(&self) -> f64 {
+        1e9 / self.mean_ns()
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>10.3} µs/iter  (median {:.3} µs, p95 {:.3} µs, min {:.3} µs, {} iters)",
+            self.name,
+            self.mean.as_nanos() as f64 / 1e3,
+            self.median.as_nanos() as f64 / 1e3,
+            self.p95.as_nanos() as f64 / 1e3,
+            self.min.as_nanos() as f64 / 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` adaptively: warm up ~`budget`/10, then run for ~`budget`.
+pub fn bench(name: &str, budget: Duration, mut f: impl FnMut()) -> BenchResult {
+    // warmup + calibration
+    let warm_deadline = Instant::now() + budget / 10;
+    let mut warm_iters = 0u64;
+    let warm_start = Instant::now();
+    while Instant::now() < warm_deadline || warm_iters < 3 {
+        f();
+        warm_iters += 1;
+        if warm_iters >= 1_000_000 {
+            break;
+        }
+    }
+    let est = warm_start.elapsed() / warm_iters.max(1) as u32;
+
+    // sample batches so per-sample overhead is negligible
+    let target_samples = 50usize;
+    let per_sample = (budget / target_samples as u32).max(Duration::from_micros(50));
+    let batch = ((per_sample.as_nanos() / est.as_nanos().max(1)) as usize).clamp(1, 1_000_000);
+
+    let mut samples: Vec<Duration> = Vec::with_capacity(target_samples);
+    let deadline = Instant::now() + budget;
+    while Instant::now() < deadline && samples.len() < 4 * target_samples {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t0.elapsed() / batch as u32);
+        if samples.len() >= target_samples && Instant::now() >= deadline {
+            break;
+        }
+    }
+    samples.sort_unstable();
+    let iters = samples.len() * batch;
+    let mean = samples.iter().sum::<Duration>() / samples.len().max(1) as u32;
+    let median = samples[samples.len() / 2];
+    let p95 = samples[(samples.len() * 95 / 100).min(samples.len() - 1)];
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean,
+        median,
+        p95,
+        min: samples[0],
+    }
+}
+
+/// A consumed-value sink that defeats dead-code elimination.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Default per-benchmark budget; override with A3_BENCH_BUDGET_MS.
+pub fn budget() -> Duration {
+    std::env::var("A3_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .map(Duration::from_millis)
+        .unwrap_or(Duration::from_millis(800))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        // black_box the loop bound so release builds cannot constant-
+        // fold the whole workload to zero time (which would round the
+        // per-iteration duration down to 0 ns).
+        let r = bench("noop-ish", Duration::from_millis(30), || {
+            let n = black_box(5_000u64);
+            black_box((0..n).fold(0u64, |a, b| a.wrapping_add(b * b)));
+        });
+        assert!(r.iters > 0);
+        assert!(r.min <= r.median && r.median <= r.p95);
+        assert!(r.mean.as_nanos() > 0, "mean rounded to zero: {:?}", r.mean);
+    }
+}

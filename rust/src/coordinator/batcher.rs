@@ -1,0 +1,130 @@
+//! Dynamic batching (vLLM-router-style) in front of the units.
+//!
+//! The AOT attention kernels are lowered at fixed batch sizes (1 and
+//! 8); grouping same-context queries into full batches amortizes
+//! dispatch overhead on the PJRT path and mirrors how a host would
+//! drive multiple pipelined queries into one A³ unit (§III-C: queries
+//! to the same K/V pipeline through a single unit). A batch closes when
+//! it reaches `max_batch` or when the oldest member has waited
+//! `max_wait_ns` (classic size-or-timeout policy).
+
+use std::collections::HashMap;
+
+use super::request::{ContextId, Query};
+
+/// Size-or-timeout batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait_ns: u64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        // 8 = the AOT kernel batch; 50 µs of batching slack
+        BatchPolicy { max_batch: 8, max_wait_ns: 50_000 }
+    }
+}
+
+/// Per-context pending queues with the size-or-timeout close rule.
+#[derive(Debug, Default)]
+pub struct Batcher {
+    policy: BatchPolicy,
+    pending: HashMap<ContextId, Vec<Query>>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy, pending: HashMap::new() }
+    }
+
+    /// Add a query; returns a closed batch if this push filled one.
+    pub fn push(&mut self, q: Query) -> Option<Vec<Query>> {
+        let bucket = self.pending.entry(q.context).or_default();
+        bucket.push(q);
+        if bucket.len() >= self.policy.max_batch {
+            let ctx = bucket[0].context;
+            return self.pending.remove(&ctx);
+        }
+        None
+    }
+
+    /// Close every batch whose oldest query exceeded the wait budget.
+    pub fn expire(&mut self, now_ns: u64) -> Vec<Vec<Query>> {
+        let expired: Vec<ContextId> = self
+            .pending
+            .iter()
+            .filter(|(_, qs)| {
+                qs.first()
+                    .is_some_and(|q| now_ns.saturating_sub(q.arrival_ns) >= self.policy.max_wait_ns)
+            })
+            .map(|(&c, _)| c)
+            .collect();
+        expired
+            .into_iter()
+            .filter_map(|c| self.pending.remove(&c))
+            .collect()
+    }
+
+    /// Drain everything (shutdown).
+    pub fn flush(&mut self) -> Vec<Vec<Query>> {
+        let keys: Vec<ContextId> = self.pending.keys().copied().collect();
+        keys.into_iter()
+            .filter_map(|c| self.pending.remove(&c))
+            .collect()
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.pending.values().map(Vec::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(id: u64, ctx: u32, arrival: u64) -> Query {
+        Query { id, context: ctx, embedding: vec![0.0; 4], arrival_ns: arrival }
+    }
+
+    #[test]
+    fn fills_batch_at_max() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait_ns: 1_000 });
+        assert!(b.push(q(0, 1, 0)).is_none());
+        assert!(b.push(q(1, 1, 1)).is_none());
+        let batch = b.push(q(2, 1, 2)).expect("batch closes at 3");
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.pending_count(), 0);
+    }
+
+    #[test]
+    fn contexts_do_not_mix() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait_ns: 1_000 });
+        assert!(b.push(q(0, 1, 0)).is_none());
+        assert!(b.push(q(1, 2, 0)).is_none());
+        let batch = b.push(q(2, 1, 1)).unwrap();
+        assert!(batch.iter().all(|x| x.context == 1));
+        assert_eq!(b.pending_count(), 1); // context 2 still pending
+    }
+
+    #[test]
+    fn timeout_expires_oldest() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait_ns: 100 });
+        b.push(q(0, 1, 0));
+        b.push(q(1, 2, 90));
+        let expired = b.expire(105);
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0][0].context, 1);
+        assert_eq!(b.pending_count(), 1);
+    }
+
+    #[test]
+    fn flush_drains_all() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        b.push(q(0, 1, 0));
+        b.push(q(1, 2, 0));
+        let all = b.flush();
+        assert_eq!(all.len(), 2);
+        assert_eq!(b.pending_count(), 0);
+    }
+}

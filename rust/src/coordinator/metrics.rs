@@ -1,0 +1,135 @@
+//! Streaming serving metrics: counts, throughput, latency percentiles.
+
+/// Latency/throughput accumulator. Latencies are kept exactly (the
+//  serving runs here are ≤ millions of queries) and sorted on demand.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    latencies_ns: Vec<u64>,
+    pub completed: u64,
+    pub selected_rows_total: u64,
+    pub sim_cycles_total: u64,
+    pub first_ns: u64,
+    pub last_ns: u64,
+}
+
+impl Metrics {
+    pub fn record(&mut self, latency_ns: u64, completed_ns: u64, selected_rows: usize, sim_cycles: u64) {
+        if self.completed == 0 {
+            self.first_ns = completed_ns;
+        }
+        self.completed += 1;
+        self.last_ns = self.last_ns.max(completed_ns);
+        self.latencies_ns.push(latency_ns);
+        self.selected_rows_total += selected_rows as u64;
+        self.sim_cycles_total += sim_cycles;
+    }
+
+    pub fn merge(&mut self, other: &Metrics) {
+        if other.completed == 0 {
+            return;
+        }
+        if self.completed == 0 {
+            self.first_ns = other.first_ns;
+        } else {
+            self.first_ns = self.first_ns.min(other.first_ns);
+        }
+        self.completed += other.completed;
+        self.last_ns = self.last_ns.max(other.last_ns);
+        self.latencies_ns.extend_from_slice(&other.latencies_ns);
+        self.selected_rows_total += other.selected_rows_total;
+        self.sim_cycles_total += other.sim_cycles_total;
+    }
+
+    /// Host wall-clock queries/s over the completion window.
+    pub fn throughput_qps(&self) -> f64 {
+        let span = self.last_ns.saturating_sub(self.first_ns);
+        if span == 0 || self.completed < 2 {
+            return 0.0;
+        }
+        (self.completed - 1) as f64 / (span as f64 * 1e-9)
+    }
+
+    pub fn percentile_ns(&self, p: f64) -> u64 {
+        if self.latencies_ns.is_empty() {
+            return 0;
+        }
+        let mut sorted = self.latencies_ns.clone();
+        sorted.sort_unstable();
+        let idx = ((sorted.len() as f64 - 1.0) * p / 100.0).round() as usize;
+        sorted[idx]
+    }
+
+    pub fn mean_latency_ns(&self) -> f64 {
+        if self.latencies_ns.is_empty() {
+            return 0.0;
+        }
+        self.latencies_ns.iter().sum::<u64>() as f64 / self.latencies_ns.len() as f64
+    }
+
+    pub fn mean_selected_rows(&self) -> f64 {
+        if self.completed == 0 {
+            return 0.0;
+        }
+        self.selected_rows_total as f64 / self.completed as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "completed={} qps={:.0} latency mean={:.1}µs p50={:.1}µs p95={:.1}µs p99={:.1}µs mean_rows={:.1}",
+            self.completed,
+            self.throughput_qps(),
+            self.mean_latency_ns() / 1e3,
+            self.percentile_ns(50.0) as f64 / 1e3,
+            self.percentile_ns(95.0) as f64 / 1e3,
+            self.percentile_ns(99.0) as f64 / 1e3,
+            self.mean_selected_rows(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut m = Metrics::default();
+        for i in 1..=100u64 {
+            m.record(i * 1000, i * 10, 4, 100);
+        }
+        assert!(m.percentile_ns(50.0) <= m.percentile_ns(95.0));
+        assert!(m.percentile_ns(95.0) <= m.percentile_ns(99.0));
+        assert_eq!(m.completed, 100);
+        assert_eq!(m.mean_selected_rows(), 4.0);
+    }
+
+    #[test]
+    fn throughput_over_window() {
+        let mut m = Metrics::default();
+        // 11 completions over 1 ms -> 10 intervals / 1e-3 s = 10_000 qps
+        for i in 0..11u64 {
+            m.record(10, i * 100_000, 1, 1);
+        }
+        assert!((m.throughput_qps() - 10_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Metrics::default();
+        a.record(10, 5, 1, 1);
+        let mut b = Metrics::default();
+        b.record(20, 9, 2, 3);
+        a.merge(&b);
+        assert_eq!(a.completed, 2);
+        assert_eq!(a.last_ns, 9);
+        assert_eq!(a.sim_cycles_total, 4);
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::default();
+        assert_eq!(m.throughput_qps(), 0.0);
+        assert_eq!(m.percentile_ns(99.0), 0);
+        assert_eq!(m.mean_latency_ns(), 0.0);
+    }
+}

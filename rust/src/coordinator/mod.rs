@@ -1,0 +1,30 @@
+//! L3 serving coordinator: the layer a host system talks to.
+//!
+//! A³ is an offload engine (§III-C): key/value matrices are staged into
+//! unit SRAM at comprehension time, then queries stream through. The
+//! coordinator implements the host side of that contract as a small
+//! serving stack (std threads + channels — tokio is not in the offline
+//! vendor set):
+//!
+//! * [`request`] — query/response types and KV-context registration;
+//! * [`batcher`] — dynamic batching: queries for the same KV context
+//!   are grouped (up to the AOT kernel batch of 8, or a timeout) before
+//!   dispatch, vLLM-router style;
+//! * [`scheduler`] — multi-unit dispatch (§III-C "Use of Multiple A³
+//!   Units"): least-loaded routing across unit replicas, per-unit
+//!   cycle-accurate occupancy from the [`crate::sim`] pipelines;
+//! * [`server`] — the threaded serving loop gluing generator →
+//!   batcher → scheduler → responses, with latency/throughput metrics;
+//! * [`metrics`] — streaming percentile + counter accumulation.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::Metrics;
+pub use request::{KvContext, Query, QueryId, Response};
+pub use scheduler::{Scheduler, UnitConfig, UnitKind};
+pub use server::{ServeConfig, ServeReport, Server};

@@ -1,0 +1,78 @@
+//! Query/response types and KV-context registry.
+
+use std::sync::Arc;
+
+use crate::approx::SortedColumns;
+use crate::attention::KvPair;
+
+pub type QueryId = u64;
+pub type ContextId = u32;
+
+/// A registered key/value context (one knowledge base / one
+/// self-attention layer's K,V). Comprehension-time state: the sorted
+/// key copy for candidate selection is prepared here, off the query
+/// critical path (§IV-C).
+#[derive(Clone)]
+pub struct KvContext {
+    pub id: ContextId,
+    pub kv: Arc<KvPair>,
+    pub sorted: Arc<SortedColumns>,
+}
+
+impl KvContext {
+    pub fn new(id: ContextId, kv: KvPair) -> Self {
+        let sorted = SortedColumns::preprocess(&kv.key, kv.n, kv.d);
+        KvContext {
+            id,
+            kv: Arc::new(kv),
+            sorted: Arc::new(sorted),
+        }
+    }
+}
+
+/// One attention query against a registered context.
+#[derive(Clone, Debug)]
+pub struct Query {
+    pub id: QueryId,
+    pub context: ContextId,
+    pub embedding: Vec<f32>,
+    /// Wall-clock arrival (ns since server start) for latency metrics.
+    pub arrival_ns: u64,
+}
+
+/// The served result.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: QueryId,
+    pub context: ContextId,
+    pub output: Vec<f32>,
+    /// Rows that entered the softmax (approximation observability).
+    pub selected_rows: usize,
+    /// Simulated accelerator cycles for this query.
+    pub sim_cycles: u64,
+    /// Host wall-clock completion (ns since server start).
+    pub completed_ns: u64,
+}
+
+impl Response {
+    pub fn latency_ns(&self, arrival_ns: u64) -> u64 {
+        self.completed_ns.saturating_sub(arrival_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+
+    #[test]
+    fn context_prepares_sorted_copy() {
+        let mut rng = Rng::new(0);
+        let kv = KvPair::new(16, 8, rng.normal_vec(16 * 8, 1.0), rng.normal_vec(16 * 8, 1.0));
+        let ctx = KvContext::new(3, kv);
+        assert_eq!(ctx.sorted.n, 16);
+        assert_eq!(ctx.sorted.d, 8);
+        // descending first column
+        assert!(ctx.sorted.value(0, 0) >= ctx.sorted.value(0, 15));
+    }
+}

@@ -1,0 +1,239 @@
+//! Multi-unit scheduling (§III-C "Use of Multiple A³ Units").
+//!
+//! Each unit is one accelerator instance with its own pipeline
+//! occupancy (tracked cycle-accurately via [`crate::sim`]); batches are
+//! routed to the unit that will start them earliest (least-loaded).
+//! Functionally the scheduler also *computes* each query's result with
+//! the unit's attention backend, so serving produces both real outputs
+//! and faithful accelerator timing.
+
+
+
+use super::request::{KvContext, Query, Response};
+use crate::model::AttentionBackend;
+use crate::sim::{ApproxPipeline, ApproxQuery, BasePipeline, Dims};
+
+/// What kind of pipeline a unit runs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum UnitKind {
+    Base,
+    /// Approximate unit with the backend's M/T parameters.
+    Approximate { backend: AttentionBackend },
+}
+
+/// Configuration of one unit replica.
+#[derive(Clone, Copy, Debug)]
+pub struct UnitConfig {
+    pub kind: UnitKind,
+    pub dims: Dims,
+}
+
+enum UnitPipe {
+    Base(BasePipeline),
+    Approx(ApproxPipeline),
+}
+
+struct Unit {
+    config: UnitConfig,
+    pipe: UnitPipe,
+    /// Simulated cycle at which this unit drains.
+    free_at: u64,
+    processed: u64,
+}
+
+/// Least-loaded scheduler over unit replicas.
+pub struct Scheduler {
+    units: Vec<Unit>,
+    /// Simulated "now" advanced by arrivals (1 cycle = 1 ns at 1 GHz).
+    now_cycles: u64,
+}
+
+impl Scheduler {
+    pub fn new(configs: &[UnitConfig]) -> Self {
+        let units = configs
+            .iter()
+            .map(|&config| Unit {
+                config,
+                pipe: match config.kind {
+                    UnitKind::Base => UnitPipe::Base(BasePipeline::new_untimed(config.dims)),
+                    UnitKind::Approximate { .. } => {
+                        UnitPipe::Approx(ApproxPipeline::new_untimed(config.dims))
+                    }
+                },
+                free_at: 0,
+                processed: 0,
+            })
+            .collect();
+        Scheduler { units, now_cycles: 0 }
+    }
+
+    /// Replicated homogeneous units.
+    pub fn replicated(config: UnitConfig, count: usize) -> Self {
+        Scheduler::new(&vec![config; count])
+    }
+
+    pub fn unit_count(&self) -> usize {
+        self.units.len()
+    }
+
+    /// Advance the simulated clock (e.g. to a batch's arrival time).
+    pub fn advance_to(&mut self, cycles: u64) {
+        self.now_cycles = self.now_cycles.max(cycles);
+    }
+
+    /// Dispatch one batch of same-context queries to the least-loaded
+    /// unit. Computes outputs with the unit's backend and charges
+    /// pipeline cycles per query. Returns responses with simulated
+    /// completion times (`completed_ns` = cycles at 1 GHz).
+    pub fn dispatch(&mut self, ctx: &KvContext, batch: &[Query]) -> Vec<Response> {
+        assert!(!batch.is_empty());
+        let now = self.now_cycles;
+        // least-loaded: earliest availability
+        let idx = (0..self.units.len())
+            .min_by_key(|&i| self.units[i].free_at.max(now))
+            .expect("no units configured");
+        let unit = &mut self.units[idx];
+        let arrival = unit.free_at.max(now);
+
+        let mut responses = Vec::with_capacity(batch.len());
+        for q in batch {
+            let (output, selected, timing) = match (&mut unit.pipe, unit.config.kind) {
+                (UnitPipe::Base(p), UnitKind::Base) => {
+                    let out = crate::attention::attention(&ctx.kv, &q.embedding);
+                    let t = p.push_query(arrival);
+                    (out, ctx.kv.n, t)
+                }
+                (UnitPipe::Approx(p), UnitKind::Approximate { backend }) => {
+                    let (out, sel) = backend.run(&ctx.kv, Some(&ctx.sorted), &q.embedding);
+                    let m = match backend {
+                        AttentionBackend::Approximate { m, .. }
+                        | AttentionBackend::CandidatesOnly { m } => m.resolve(ctx.kv.n),
+                        _ => ctx.kv.n,
+                    };
+                    let t = p.push_query(
+                        arrival,
+                        ApproxQuery { m, candidates: sel.len().max(1), kept: sel.len().max(1) },
+                    );
+                    (out, sel.len(), t)
+                }
+                _ => unreachable!("unit pipe/kind mismatch"),
+            };
+            unit.free_at = timing.finish;
+            unit.processed += 1;
+            responses.push(Response {
+                id: q.id,
+                context: q.context,
+                output,
+                selected_rows: selected,
+                sim_cycles: timing.latency(),
+                completed_ns: timing.finish, // 1 cycle == 1 ns at 1 GHz
+            });
+        }
+        responses
+    }
+
+    /// Simulated cycle at which all units drain.
+    pub fn makespan_cycles(&self) -> u64 {
+        self.units.iter().map(|u| u.free_at).max().unwrap_or(0)
+    }
+
+    /// Queries processed per unit (load-balance observability).
+    pub fn per_unit_processed(&self) -> Vec<u64> {
+        self.units.iter().map(|u| u.processed).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::KvPair;
+    use crate::testutil::Rng;
+
+    fn ctx(n: usize, d: usize, seed: u64) -> KvContext {
+        let mut rng = Rng::new(seed);
+        KvContext::new(
+            0,
+            KvPair::new(n, d, rng.normal_vec(n * d, 1.0), rng.normal_vec(n * d, 1.0)),
+        )
+    }
+
+    fn queries(count: usize, d: usize, seed: u64) -> Vec<Query> {
+        let mut rng = Rng::new(seed);
+        (0..count)
+            .map(|i| Query {
+                id: i as u64,
+                context: 0,
+                embedding: rng.normal_vec(d, 1.0),
+                arrival_ns: 0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn single_base_unit_matches_pipeline_closed_form() {
+        let c = ctx(64, 16, 0);
+        let dims = Dims::new(64, 16);
+        let mut s = Scheduler::new(&[UnitConfig { kind: UnitKind::Base, dims }]);
+        let rs = s.dispatch(&c, &queries(10, 16, 1));
+        assert_eq!(rs.len(), 10);
+        // steady state: one query per (n + 9) cycles
+        let span = s.makespan_cycles();
+        assert_eq!(span, 2 * (64 + 9) + 10 * (64 + 9));
+        assert!(rs.iter().all(|r| r.selected_rows == 64));
+    }
+
+    #[test]
+    fn multiple_units_scale_throughput_nearly_perfectly() {
+        // §VI-C: "using multiple A³ units can achieve near-perfect
+        // scaling behavior" for self-attention parallelism.
+        let c = ctx(320, 64, 2);
+        let dims = Dims::paper();
+        let total = 64;
+        let mk = |units: usize| {
+            let mut s = Scheduler::replicated(
+                UnitConfig { kind: UnitKind::Base, dims },
+                units,
+            );
+            for chunk in queries(total, 64, 3).chunks(8) {
+                s.dispatch(&c, chunk);
+            }
+            s.makespan_cycles()
+        };
+        let one = mk(1);
+        let four = mk(4);
+        let speedup = one as f64 / four as f64;
+        assert!(speedup > 3.3, "speedup {speedup}");
+    }
+
+    #[test]
+    fn approximate_unit_faster_and_selects_fewer() {
+        let c = ctx(320, 64, 4);
+        let dims = Dims::paper();
+        let qs = queries(32, 64, 5);
+        let mut base = Scheduler::new(&[UnitConfig { kind: UnitKind::Base, dims }]);
+        base.dispatch(&c, &qs);
+        let mut approx = Scheduler::new(&[UnitConfig {
+            kind: UnitKind::Approximate { backend: AttentionBackend::aggressive() },
+            dims,
+        }]);
+        let rs = approx.dispatch(&c, &qs);
+        assert!(approx.makespan_cycles() < base.makespan_cycles());
+        assert!(rs.iter().all(|r| r.selected_rows < 320));
+    }
+
+    #[test]
+    fn load_balances_across_units() {
+        let c = ctx(128, 64, 6);
+        let mut s = Scheduler::replicated(
+            UnitConfig { kind: UnitKind::Base, dims: Dims::new(128, 64) },
+            3,
+        );
+        for chunk in queries(30, 64, 7).chunks(2) {
+            s.dispatch(&c, chunk);
+        }
+        let loads = s.per_unit_processed();
+        let max = *loads.iter().max().unwrap() as f64;
+        let min = *loads.iter().min().unwrap() as f64;
+        assert!(max / min.max(1.0) < 2.0, "{loads:?}");
+    }
+}

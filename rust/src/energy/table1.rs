@@ -1,0 +1,112 @@
+//! Table I of the paper: per-module area and power from the authors'
+//! TSMC 40nm synthesis at 1 GHz (n=320, d=64, i=f=4). These published
+//! numbers are the calibration constants of the energy model — see
+//! DESIGN.md §4 (substitutions) for why.
+
+/// One row of Table I.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModuleCost {
+    pub name: &'static str,
+    pub area_mm2: f64,
+    pub dynamic_mw: f64,
+    pub static_mw: f64,
+}
+
+/// The full table.
+#[derive(Clone, Debug)]
+pub struct Table1 {
+    pub modules: Vec<ModuleCost>,
+}
+
+impl Table1 {
+    /// The paper's Table I, verbatim.
+    pub fn paper() -> Self {
+        Table1 {
+            modules: vec![
+                // --- modules for base A³ ---
+                ModuleCost { name: "dot-product", area_mm2: 0.098, dynamic_mw: 14.338, static_mw: 1.265 },
+                ModuleCost { name: "exponent", area_mm2: 0.016, dynamic_mw: 0.224, static_mw: 0.053 },
+                ModuleCost { name: "output", area_mm2: 0.062, dynamic_mw: 50.918, static_mw: 0.070 },
+                // --- modules for approximation support ---
+                ModuleCost { name: "candidate-selection", area_mm2: 0.277, dynamic_mw: 19.48, static_mw: 5.08 },
+                ModuleCost { name: "post-scoring", area_mm2: 0.010, dynamic_mw: 2.055, static_mw: 0.147 },
+                // --- SRAM modules ---
+                ModuleCost { name: "sram-key", area_mm2: 0.350, dynamic_mw: 2.901, static_mw: 0.987 },
+                ModuleCost { name: "sram-value", area_mm2: 0.350, dynamic_mw: 2.901, static_mw: 0.987 },
+                ModuleCost { name: "sram-sorted-key", area_mm2: 0.919, dynamic_mw: 6.100, static_mw: 2.913 },
+            ],
+        }
+    }
+
+    pub fn module(&self, name: &str) -> &ModuleCost {
+        self.modules
+            .iter()
+            .find(|m| m.name == name)
+            .unwrap_or_else(|| panic!("unknown module {name:?}"))
+    }
+
+    pub fn total_area_mm2(&self) -> f64 {
+        self.modules.iter().map(|m| m.area_mm2).sum()
+    }
+
+    pub fn total_dynamic_mw(&self) -> f64 {
+        self.modules.iter().map(|m| m.dynamic_mw).sum()
+    }
+
+    pub fn total_static_mw(&self) -> f64 {
+        self.modules.iter().map(|m| m.static_mw).sum()
+    }
+
+    /// Die-area comparison of §VI-D: Xeon 325 mm² / Titan V 815 mm².
+    pub fn area_ratio_vs(&self, other_mm2: f64) -> f64 {
+        other_mm2 / self.total_area_mm2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_match_paper() {
+        let t = Table1::paper();
+        assert!((t.total_area_mm2() - 2.082).abs() < 1e-9, "{}", t.total_area_mm2());
+        assert!((t.total_dynamic_mw() - 98.917).abs() < 0.01, "{}", t.total_dynamic_mw());
+        assert!((t.total_static_mw() - 11.502).abs() < 1e-9, "{}", t.total_static_mw());
+    }
+
+    #[test]
+    fn peak_power_under_100mw_as_claimed() {
+        // §VI-D: "A³ spends less than 100mW when all modules are fully
+        // utilized".
+        let t = Table1::paper();
+        assert!(t.total_dynamic_mw() + t.total_static_mw() < 115.0);
+        assert!(t.total_dynamic_mw() < 100.0);
+    }
+
+    #[test]
+    fn cpu_gpu_area_ratios_match_paper() {
+        let t = Table1::paper();
+        let xeon = t.area_ratio_vs(325.0);
+        let titan = t.area_ratio_vs(815.0);
+        assert!((xeon - 156.0).abs() < 1.0, "{xeon}"); // §VI-D: 156×
+        assert!((titan - 391.0).abs() < 1.0, "{titan}"); // §VI-D: 391×
+    }
+
+    #[test]
+    fn approximation_modules_cost_area_but_enable_savings() {
+        // candidate selection + sorted SRAM is the biggest area block —
+        // the paper's trade: ~57% of the die for the approximation path.
+        let t = Table1::paper();
+        let approx_area = t.module("candidate-selection").area_mm2
+            + t.module("post-scoring").area_mm2
+            + t.module("sram-sorted-key").area_mm2;
+        assert!(approx_area / t.total_area_mm2() > 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown module")]
+    fn unknown_module_panics() {
+        Table1::paper().module("fpu");
+    }
+}

@@ -1,0 +1,88 @@
+//! Fig. 11 — impact of greedy candidate selection across iteration
+//! counts M ∈ {n, n/2, n/4, n/8}: (a) accuracy-metric change vs the
+//! exact model, (b) number of candidates selected (normalized to n).
+
+use anyhow::Result;
+
+use super::sweep::{candidates_backend, evaluate, EvalBudget, M_SWEEP};
+use super::{fmt_f, fmt_pct, Table};
+use crate::model::AttentionBackend;
+use crate::workloads::WorkloadKind;
+
+pub struct Fig11Row {
+    pub workload: WorkloadKind,
+    pub m_label: &'static str,
+    pub metric_delta: f64,
+    pub candidates_frac: f64,
+}
+
+pub fn collect(budget: EvalBudget) -> Result<Vec<Fig11Row>> {
+    let mut rows = Vec::new();
+    for kind in WorkloadKind::ALL {
+        let exact = evaluate(kind, AttentionBackend::Exact, budget)?;
+        for (frac, label) in M_SWEEP {
+            let e = evaluate(kind, candidates_backend(frac), budget)?;
+            rows.push(Fig11Row {
+                workload: kind,
+                m_label: label,
+                metric_delta: e.metric - exact.metric,
+                candidates_frac: e.mean_selected / e.mean_n,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+pub fn run(budget: EvalBudget) -> Result<(Table, Table)> {
+    let rows = collect(budget)?;
+    let mut a = Table::new(
+        "Fig. 11a — accuracy change vs candidate-selection iterations M",
+        &["workload", "M", "metric delta"],
+    );
+    let mut b = Table::new(
+        "Fig. 11b — candidates selected (fraction of n)",
+        &["workload", "M", "candidates/n"],
+    );
+    for r in &rows {
+        a.row(vec![r.workload.name().into(), r.m_label.into(), fmt_pct(r.metric_delta)]);
+        b.row(vec![
+            r.workload.name().into(),
+            r.m_label.into(),
+            fmt_f(r.candidates_frac, 3),
+        ]);
+    }
+    Ok((a, b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn budget() -> EvalBudget {
+        EvalBudget { babi_stories: 40, kb_episodes: 1, squad_queries: 24, seed: 3 }
+    }
+
+    #[test]
+    fn smaller_m_selects_fewer_candidates() {
+        // Fig. 11b's monotone trend, on the SQuAD workload (no
+        // artifacts needed).
+        let exact = evaluate(WorkloadKind::Squad, AttentionBackend::Exact, budget()).unwrap();
+        let mut prev = f64::INFINITY;
+        for (frac, _) in M_SWEEP {
+            let e = evaluate(WorkloadKind::Squad, candidates_backend(frac), budget()).unwrap();
+            assert!(e.mean_selected <= prev + 1e-9, "not monotone at {frac}");
+            prev = e.mean_selected;
+            assert!(e.mean_selected < exact.mean_selected);
+        }
+    }
+
+    #[test]
+    fn accuracy_degrades_gracefully_not_catastrophically() {
+        // Fig. 11a: even n/8 keeps the model usable (paper loses single
+        // digits of accuracy).
+        let exact = evaluate(WorkloadKind::WikiMovies, AttentionBackend::Exact, budget()).unwrap();
+        let worst = evaluate(WorkloadKind::WikiMovies, candidates_backend(0.125), budget()).unwrap();
+        assert!(exact.metric - worst.metric < 0.5, "delta {}", exact.metric - worst.metric);
+        assert!(worst.metric > 0.4, "collapsed: {}", worst.metric);
+    }
+}

@@ -1,0 +1,92 @@
+//! Fig. 12 — impact of post-scoring selection across thresholds
+//! T ∈ {1, 5, 10, 20}% (of the maximum post-softmax weight):
+//! (a) accuracy change, (b) number of entries selected (normalized).
+
+use anyhow::Result;
+
+use super::sweep::{evaluate, EvalBudget, T_SWEEP};
+use super::{fmt_f, fmt_pct, Table};
+use crate::model::AttentionBackend;
+use crate::workloads::WorkloadKind;
+
+pub struct Fig12Row {
+    pub workload: WorkloadKind,
+    pub t_pct: f64,
+    pub metric_delta: f64,
+    pub selected_frac: f64,
+}
+
+pub fn collect(budget: EvalBudget) -> Result<Vec<Fig12Row>> {
+    let mut rows = Vec::new();
+    for kind in WorkloadKind::ALL {
+        let exact = evaluate(kind, AttentionBackend::Exact, budget)?;
+        for t_pct in T_SWEEP {
+            let e = evaluate(kind, AttentionBackend::PostScoringOnly { t_pct }, budget)?;
+            rows.push(Fig12Row {
+                workload: kind,
+                t_pct,
+                metric_delta: e.metric - exact.metric,
+                selected_frac: e.mean_selected / e.mean_n,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+pub fn run(budget: EvalBudget) -> Result<(Table, Table)> {
+    let rows = collect(budget)?;
+    let mut a = Table::new(
+        "Fig. 12a — accuracy change vs post-scoring threshold T",
+        &["workload", "T", "metric delta"],
+    );
+    let mut b = Table::new(
+        "Fig. 12b — entries selected (fraction of n)",
+        &["workload", "T", "selected/n"],
+    );
+    for r in &rows {
+        let t_label = format!("{}%", r.t_pct);
+        a.row(vec![r.workload.name().into(), t_label.clone(), fmt_pct(r.metric_delta)]);
+        b.row(vec![r.workload.name().into(), t_label, fmt_f(r.selected_frac, 3)]);
+    }
+    Ok((a, b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn budget() -> EvalBudget {
+        EvalBudget { babi_stories: 40, kb_episodes: 1, squad_queries: 24, seed: 4 }
+    }
+
+    #[test]
+    fn higher_t_selects_fewer_entries() {
+        // Fig. 12b: higher T -> lower selected count.
+        let mut prev = f64::INFINITY;
+        for t_pct in T_SWEEP {
+            let e = evaluate(
+                WorkloadKind::Squad,
+                AttentionBackend::PostScoringOnly { t_pct },
+                budget(),
+            )
+            .unwrap();
+            assert!(e.mean_selected <= prev + 1e-9);
+            prev = e.mean_selected;
+        }
+    }
+
+    #[test]
+    fn post_scoring_selects_tiny_fraction_with_decent_metric() {
+        // §VI-B: "relatively high T (e.g., 10%) can still achieve decent
+        // accuracy" while selecting very few rows — the concentrated
+        // softmax premise.
+        let e = evaluate(
+            WorkloadKind::Squad,
+            AttentionBackend::PostScoringOnly { t_pct: 10.0 },
+            budget(),
+        )
+        .unwrap();
+        assert!(e.mean_selected < 0.2 * e.mean_n, "selected {}", e.mean_selected);
+        assert!(e.metric > 0.8, "fidelity {}", e.metric);
+    }
+}

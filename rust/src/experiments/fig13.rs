@@ -1,0 +1,93 @@
+//! Fig. 13 — the combined approximation schemes: conservative
+//! (M = n/2, T = 5%) vs aggressive (M = n/8, T = 10%):
+//! (a) accuracy-metric change, (b) portion of the true top-2 (bAbI) /
+//! top-5 (others) entries included after approximation.
+
+use anyhow::Result;
+
+use super::sweep::{evaluate, EvalBudget};
+use super::{fmt_f, fmt_pct, Table};
+use crate::model::AttentionBackend;
+use crate::workloads::WorkloadKind;
+
+pub struct Fig13Row {
+    pub workload: WorkloadKind,
+    pub scheme: &'static str,
+    pub metric_delta: f64,
+    pub topk_recall: f64,
+    pub mean_selected: f64,
+}
+
+pub fn collect(budget: EvalBudget) -> Result<Vec<Fig13Row>> {
+    let mut rows = Vec::new();
+    for kind in WorkloadKind::ALL {
+        let exact = evaluate(kind, AttentionBackend::Exact, budget)?;
+        for (scheme, backend) in [
+            ("conservative", AttentionBackend::conservative()),
+            ("aggressive", AttentionBackend::aggressive()),
+        ] {
+            let e = evaluate(kind, backend, budget)?;
+            rows.push(Fig13Row {
+                workload: kind,
+                scheme,
+                metric_delta: e.metric - exact.metric,
+                topk_recall: e.topk_recall,
+                mean_selected: e.mean_selected,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+pub fn run(budget: EvalBudget) -> Result<(Table, Table)> {
+    let rows = collect(budget)?;
+    let mut a = Table::new(
+        "Fig. 13a — accuracy change of the combined approximation",
+        &["workload", "scheme", "metric delta", "mean selected rows"],
+    );
+    let mut b = Table::new(
+        "Fig. 13b — true top-k inclusion after approximation",
+        &["workload", "scheme", "top-k", "recall"],
+    );
+    for r in &rows {
+        a.row(vec![
+            r.workload.name().into(),
+            r.scheme.into(),
+            fmt_pct(r.metric_delta),
+            fmt_f(r.mean_selected, 1),
+        ]);
+        b.row(vec![
+            r.workload.name().into(),
+            r.scheme.into(),
+            format!("top-{}", r.workload.topk()),
+            fmt_f(r.topk_recall, 3),
+        ]);
+    }
+    Ok((a, b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn budget() -> EvalBudget {
+        EvalBudget { babi_stories: 40, kb_episodes: 1, squad_queries: 24, seed: 5 }
+    }
+
+    #[test]
+    fn conservative_beats_aggressive_on_recall() {
+        // Fig. 13b: aggressive misses more of the true top-k.
+        let cons = evaluate(WorkloadKind::Squad, AttentionBackend::conservative(), budget()).unwrap();
+        let aggr = evaluate(WorkloadKind::Squad, AttentionBackend::aggressive(), budget()).unwrap();
+        assert!(cons.topk_recall >= aggr.topk_recall - 1e-9);
+        assert!(cons.topk_recall > 0.7, "conservative recall {}", cons.topk_recall);
+    }
+
+    #[test]
+    fn conservative_loses_little_metric() {
+        // Fig. 13a: conservative ≈ −1%.
+        let exact = evaluate(WorkloadKind::Squad, AttentionBackend::Exact, budget()).unwrap();
+        let cons = evaluate(WorkloadKind::Squad, AttentionBackend::conservative(), budget()).unwrap();
+        assert!(exact.metric - cons.metric < 0.1, "delta {}", exact.metric - cons.metric);
+    }
+}

@@ -1,0 +1,185 @@
+//! Fig. 15 — (a) energy efficiency (queries/J, normalized to CPU) of
+//! CPU / GPU / A³ configurations per workload, and (b) the A³ energy
+//! breakdown per module across the three configurations.
+//!
+//! A³ energy = Table-I power × simulated per-module busy time (see
+//! [`crate::energy`]); CPU/GPU energy = TDP × modeled time (§VI-D
+//! methodology).
+
+use anyhow::Result;
+
+use super::fig14::{simulate_approx, simulate_base};
+use super::sweep::{evaluate, EvalBudget};
+use super::{fmt_f, fmt_x, Table};
+use crate::baseline::CostModel;
+use crate::energy::{attribute, EnergyBreakdown, Table1};
+use crate::model::AttentionBackend;
+use crate::workloads::WorkloadKind;
+
+pub struct Fig15Config {
+    pub name: &'static str,
+    pub joules_per_query: f64,
+    pub breakdown: Option<EnergyBreakdown>,
+}
+
+pub struct Fig15Workload {
+    pub workload: WorkloadKind,
+    pub configs: Vec<Fig15Config>,
+}
+
+pub fn collect(budget: EvalBudget) -> Result<Vec<Fig15Workload>> {
+    let table = Table1::paper();
+    let cpu = CostModel::xeon_6128();
+    let gpu = CostModel::titan_v();
+    let mut out = Vec::new();
+    for kind in WorkloadKind::ALL {
+        let dims = kind.dims();
+        let batch = kind.queries_per_kv();
+        let mut configs = vec![Fig15Config {
+            name: "CPU (Xeon 6128)",
+            joules_per_query: cpu.joules_per_query(dims, batch),
+            breakdown: None,
+        }];
+        if kind == WorkloadKind::Squad {
+            configs.push(Fig15Config {
+                name: "GPU (Titan V)",
+                joules_per_query: gpu.joules_per_query(dims, batch),
+                breakdown: None,
+            });
+        }
+
+        let exact = evaluate(kind, AttentionBackend::Exact, budget)?;
+        let base_report = simulate_base(&exact.samples);
+        let base_energy = attribute(&table, &base_report);
+        configs.push(Fig15Config {
+            name: "A3 (base)",
+            joules_per_query: base_energy.total_j() / exact.samples.len() as f64,
+            breakdown: Some(base_energy),
+        });
+
+        for (name, backend) in [
+            ("A3 approx (conservative)", AttentionBackend::conservative()),
+            ("A3 approx (aggressive)", AttentionBackend::aggressive()),
+        ] {
+            let e = evaluate(kind, backend, budget)?;
+            let report = simulate_approx(&e.samples);
+            let energy = attribute(&table, &report);
+            configs.push(Fig15Config {
+                name,
+                joules_per_query: energy.total_j() / e.samples.len() as f64,
+                breakdown: Some(energy),
+            });
+        }
+        out.push(Fig15Workload { workload: kind, configs });
+    }
+    Ok(out)
+}
+
+pub fn run(budget: EvalBudget) -> Result<(Table, Table)> {
+    let data = collect(budget)?;
+    let mut a = Table::new(
+        "Fig. 15a — energy efficiency (queries/J, normalized to CPU)",
+        &["workload", "platform", "J/query", "efficiency vs CPU"],
+    );
+    let mut b = Table::new(
+        "Fig. 15b — A3 energy breakdown (fraction of total)",
+        &["workload", "config", "dot", "exp", "out", "cand-sel", "post-sc", "sram", "static"],
+    );
+    for w in &data {
+        let cpu_j = w.configs[0].joules_per_query;
+        for c in &w.configs {
+            a.row(vec![
+                w.workload.name().into(),
+                c.name.into(),
+                format!("{:.3e}", c.joules_per_query),
+                fmt_x(cpu_j / c.joules_per_query),
+            ]);
+            if let Some(e) = &c.breakdown {
+                let sram = e.fraction("sram-key")
+                    + e.fraction("sram-value")
+                    + e.fraction("sram-sorted-key");
+                b.row(vec![
+                    w.workload.name().into(),
+                    c.name.into(),
+                    fmt_f(e.fraction("dot-product"), 3),
+                    fmt_f(e.fraction("exponent"), 3),
+                    fmt_f(e.fraction("output"), 3),
+                    fmt_f(e.fraction("candidate-selection"), 3),
+                    fmt_f(e.fraction("post-scoring"), 3),
+                    fmt_f(sram, 3),
+                    fmt_f(e.static_j / e.total_j(), 3),
+                ]);
+            }
+        }
+    }
+    Ok((a, b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn budget() -> EvalBudget {
+        EvalBudget { babi_stories: 32, kb_episodes: 1, squad_queries: 32, seed: 8 }
+    }
+
+    #[test]
+    fn a3_is_orders_of_magnitude_more_efficient() {
+        // Fig. 15a: over 10^4x vs CPU, 10^3x vs GPU (paper). Our CPU
+        // model is conservative; require >= 10^3 vs CPU and >= 10^2 vs
+        // GPU to pin the order-of-magnitude claim.
+        let data = collect(budget()).unwrap();
+        for w in &data {
+            let j = |name: &str| {
+                w.configs
+                    .iter()
+                    .find(|c| c.name.starts_with(name))
+                    .map(|c| c.joules_per_query)
+            };
+            let cpu = j("CPU").unwrap();
+            let base = j("A3 (base)").unwrap();
+            assert!(cpu / base > 1e3, "{}: {}", w.workload.name(), cpu / base);
+            if let Some(gpu) = j("GPU") {
+                assert!(gpu / base > 1e2, "vs gpu: {}", gpu / base);
+            }
+        }
+    }
+
+    #[test]
+    fn approximation_saves_energy() {
+        let data = collect(budget()).unwrap();
+        for w in &data {
+            let j = |name: &str| {
+                w.configs
+                    .iter()
+                    .find(|c| c.name.starts_with(name))
+                    .unwrap()
+                    .joules_per_query
+            };
+            assert!(
+                j("A3 approx (aggressive)") < j("A3 (base)"),
+                "{}",
+                w.workload.name()
+            );
+        }
+    }
+
+    #[test]
+    fn breakdown_shifts_from_output_to_candidate_selection() {
+        // Fig. 15b: base dominated by output module; aggressive approx
+        // dominated by candidate selection (+ its SRAM).
+        let data = collect(budget()).unwrap();
+        let squad = &data[2];
+        let base = squad.configs.iter().find(|c| c.name == "A3 (base)").unwrap();
+        let aggr = squad
+            .configs
+            .iter()
+            .find(|c| c.name.contains("aggressive"))
+            .unwrap();
+        let be = base.breakdown.as_ref().unwrap();
+        let ae = aggr.breakdown.as_ref().unwrap();
+        assert!(be.fraction("output") > be.fraction("candidate-selection"));
+        let ae_cs = ae.fraction("candidate-selection") + ae.fraction("sram-sorted-key");
+        assert!(ae_cs > ae.fraction("output"), "cs {ae_cs}");
+    }
+}

@@ -1,0 +1,121 @@
+//! Experiment drivers — one per table/figure of the paper's evaluation
+//! (§VI). Each returns [`Table`]s that the CLI (`a3 <figN>`) prints and
+//! the bench harnesses (`rust/benches/`) regenerate; EXPERIMENTS.md
+//! records paper-vs-measured for every one.
+//!
+//! | driver | paper artifact |
+//! |--------|----------------|
+//! | [`fig03`] | Fig. 3 — share of time in attention |
+//! | [`fig11`] | Fig. 11 — candidate selection vs M |
+//! | [`fig12`] | Fig. 12 — post-scoring selection vs T |
+//! | [`fig13`] | Fig. 13 — combined schemes + top-k recall |
+//! | [`fig14`] | Fig. 14 — throughput / latency across platforms |
+//! | [`fig15`] | Fig. 15 — energy efficiency + breakdown |
+//! | [`table1`] | Table I — area / power |
+//! | [`quant_sweep`] | §VI-B — quantization bitwidth impact |
+
+pub mod fig03;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig14;
+pub mod fig15;
+pub mod quant_sweep;
+pub mod table1;
+
+pub mod sweep;
+
+/// A printable result table (plain text, fixed-width columns).
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+}
+
+impl std::fmt::Display for Table {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        writeln!(f, "== {} ==", self.title)?;
+        let line = |f: &mut std::fmt::Formatter<'_>, cells: &[String]| -> std::fmt::Result {
+            for (w, c) in widths.iter().zip(cells) {
+                write!(f, "{c:>w$}  ", w = w)?;
+            }
+            writeln!(f)
+        };
+        line(f, &self.headers)?;
+        for row in &self.rows {
+            line(f, row)?;
+        }
+        Ok(())
+    }
+}
+
+/// Format helpers shared by the drivers.
+pub fn fmt_f(x: f64, digits: usize) -> String {
+    format!("{x:.digits$}")
+}
+
+pub fn fmt_x(x: f64) -> String {
+    if x >= 100.0 {
+        format!("{x:.0}x")
+    } else if x >= 10.0 {
+        format!("{x:.1}x")
+    } else {
+        format!("{x:.2}x")
+    }
+}
+
+pub fn fmt_pct(x: f64) -> String {
+    format!("{:+.2}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "metric"]);
+        t.row(vec!["x".into(), "1.0".into()]);
+        t.row(vec!["longer".into(), "2.5".into()]);
+        let s = t.to_string();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("longer"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_x(123.4), "123x");
+        assert_eq!(fmt_x(12.34), "12.3x");
+        assert_eq!(fmt_x(1.234), "1.23x");
+        assert_eq!(fmt_pct(-0.0123), "-1.23%");
+    }
+}

@@ -1,0 +1,110 @@
+//! §VI-B "Impact of Quantization Scheme" — the paper's claim that a
+//! very small number of fraction bits (f = 4) degrades accuracy by less
+//! than 0.1% across all workloads, because the pipeline's width ladder
+//! (§III-B) loses no *additional* precision after the input quantizer.
+//!
+//! This driver sweeps the input fraction bits f ∈ {2, 3, 4, 6} at the
+//! paper's i = 4 and reports the metric change vs float-exact attention
+//! for every workload, plus an ablation of the two-LUT exponent (the
+//! score plane is always 2f bits, so the LUT shrinks/grows with f).
+
+use anyhow::Result;
+
+use super::sweep::{evaluate, EvalBudget};
+use super::{fmt_pct, Table};
+use crate::model::AttentionBackend;
+use crate::workloads::WorkloadKind;
+
+/// The f sweep (i fixed at the paper's 4).
+pub const F_SWEEP: [u32; 4] = [2, 3, 4, 6];
+
+pub struct QuantRow {
+    pub workload: WorkloadKind,
+    pub f_bits: u32,
+    pub metric_delta: f64,
+}
+
+pub fn collect(budget: EvalBudget) -> Result<Vec<QuantRow>> {
+    let mut rows = Vec::new();
+    for kind in WorkloadKind::ALL {
+        let exact = evaluate(kind, AttentionBackend::Exact, budget)?;
+        for f_bits in F_SWEEP {
+            let e = evaluate(
+                kind,
+                AttentionBackend::QuantizedBits { i_bits: 4, f_bits },
+                budget,
+            )?;
+            rows.push(QuantRow {
+                workload: kind,
+                f_bits,
+                metric_delta: e.metric - exact.metric,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+pub fn run(budget: EvalBudget) -> Result<Table> {
+    let rows = collect(budget)?;
+    let mut t = Table::new(
+        "SVI-B — quantization impact: metric change vs input fraction bits (i=4)",
+        &["workload", "f", "score plane", "metric delta"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.workload.name().into(),
+            format!("{}", r.f_bits),
+            format!("2f={} bits", 2 * r.f_bits),
+            fmt_pct(r.metric_delta),
+        ]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn budget() -> EvalBudget {
+        EvalBudget { babi_stories: 48, kb_episodes: 1, squad_queries: 32, seed: 9 }
+    }
+
+    #[test]
+    fn f4_costs_almost_nothing() {
+        // the paper's claim: f=4 degrades accuracy negligibly.
+        for kind in [WorkloadKind::WikiMovies, WorkloadKind::Squad] {
+            let exact = evaluate(kind, AttentionBackend::Exact, budget()).unwrap();
+            let q4 = evaluate(
+                kind,
+                AttentionBackend::QuantizedBits { i_bits: 4, f_bits: 4 },
+                budget(),
+            )
+            .unwrap();
+            assert!(
+                exact.metric - q4.metric < 0.02,
+                "{}: delta {}",
+                kind.name(),
+                exact.metric - q4.metric
+            );
+        }
+    }
+
+    #[test]
+    fn fewer_fraction_bits_never_help() {
+        // f=2 must be no better than f=6 (monotone degradation within
+        // noise) on the fidelity workload.
+        let e2 = evaluate(
+            WorkloadKind::Squad,
+            AttentionBackend::QuantizedBits { i_bits: 4, f_bits: 2 },
+            budget(),
+        )
+        .unwrap();
+        let e6 = evaluate(
+            WorkloadKind::Squad,
+            AttentionBackend::QuantizedBits { i_bits: 4, f_bits: 6 },
+            budget(),
+        )
+        .unwrap();
+        assert!(e6.metric >= e2.metric - 1e-6, "f=6 {} < f=2 {}", e6.metric, e2.metric);
+    }
+}

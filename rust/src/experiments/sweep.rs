@@ -1,0 +1,304 @@
+//! Shared sweep machinery: evaluate an [`AttentionBackend`] on each
+//! paper workload, producing the accuracy metric, selection-size
+//! statistics, top-k recall, and per-query selection samples (n, M, C,
+//! K) that the cycle simulator consumes for Figs. 14/15.
+
+use anyhow::Result;
+
+use crate::approx::{greedy_select, postscore_select, SortedColumns};
+use crate::attention::KvPair;
+use crate::model::backend::{AttentionBackend, MIters};
+use crate::model::{BabiTestSet, Memn2n};
+use crate::testutil::Rng;
+use crate::workloads::metrics::{
+    mean_average_precision, output_fidelity, topk_recall,
+};
+use crate::workloads::{squad, wikimovies, WorkloadKind};
+
+/// Per-query selection sizes feeding the pipeline simulator.
+#[derive(Clone, Copy, Debug)]
+pub struct SelectionSample {
+    pub n: usize,
+    pub m: usize,
+    pub candidates: usize,
+    pub kept: usize,
+}
+
+/// Result of evaluating one backend on one workload.
+#[derive(Clone, Debug)]
+pub struct BackendEval {
+    pub workload: WorkloadKind,
+    pub backend_label: String,
+    /// Task metric: accuracy (bAbI), MAP (WikiMovies), fidelity (SQuAD).
+    pub metric: f64,
+    /// Mean rows entering the softmax.
+    pub mean_selected: f64,
+    /// Mean n across evaluated queries.
+    pub mean_n: f64,
+    /// Fig. 13b metric: true top-k inclusion.
+    pub topk_recall: f64,
+    pub samples: Vec<SelectionSample>,
+}
+
+/// Evaluation sizes (kept modest for tests; benches scale them up).
+#[derive(Clone, Copy, Debug)]
+pub struct EvalBudget {
+    pub babi_stories: usize,
+    pub kb_episodes: usize,
+    pub squad_queries: usize,
+    pub seed: u64,
+}
+
+impl Default for EvalBudget {
+    fn default() -> Self {
+        EvalBudget {
+            babi_stories: 200,
+            kb_episodes: 4,
+            squad_queries: 96,
+            seed: 0xA3,
+        }
+    }
+}
+
+/// Selection sizes for one query under a backend (M, C, K), mirroring
+/// the backend's internal pipeline so the simulator sees real data.
+pub fn selection_detail(
+    kv: &KvPair,
+    sorted: &SortedColumns,
+    query: &[f32],
+    backend: AttentionBackend,
+) -> SelectionSample {
+    let n = kv.n;
+    let full = |m: usize| SelectionSample { n, m, candidates: n, kept: n };
+    match backend {
+        AttentionBackend::Exact
+        | AttentionBackend::Quantized
+        | AttentionBackend::QuantizedBits { .. } => full(n),
+        AttentionBackend::CandidatesOnly { m } => {
+            let m = m.resolve(n);
+            let res = greedy_select(sorted, query, m);
+            SelectionSample { n, m, candidates: res.candidates.len(), kept: res.candidates.len() }
+        }
+        AttentionBackend::PostScoringOnly { t_pct } => {
+            let all: Vec<usize> = (0..n).collect();
+            let scores = exact_scores(kv, query, &all);
+            let kept = postscore_select(&scores, &all, t_pct).len();
+            SelectionSample { n, m: n, candidates: n, kept }
+        }
+        AttentionBackend::Approximate { m, t_pct } => {
+            let m = m.resolve(n);
+            let res = greedy_select(sorted, query, m);
+            let scores = exact_scores(kv, query, &res.candidates);
+            let kept = postscore_select(&scores, &res.candidates, t_pct).len();
+            SelectionSample { n, m, candidates: res.candidates.len(), kept }
+        }
+    }
+}
+
+fn exact_scores(kv: &KvPair, query: &[f32], rows: &[usize]) -> Vec<f64> {
+    rows.iter()
+        .map(|&i| {
+            kv.key_row(i)
+                .iter()
+                .zip(query)
+                .map(|(k, q)| *k as f64 * *q as f64)
+                .sum()
+        })
+        .collect()
+}
+
+/// Evaluate a backend on a workload.
+pub fn evaluate(
+    kind: WorkloadKind,
+    backend: AttentionBackend,
+    budget: EvalBudget,
+) -> Result<BackendEval> {
+    match kind {
+        WorkloadKind::Babi => eval_babi(backend, budget),
+        WorkloadKind::WikiMovies => Ok(eval_wikimovies(backend, budget)),
+        WorkloadKind::Squad => Ok(eval_squad(backend, budget)),
+    }
+}
+
+/// bAbI: MemN2N answer accuracy over the python-exported test set with
+/// the backend swapped into the forward pass.
+fn eval_babi(backend: AttentionBackend, budget: EvalBudget) -> Result<BackendEval> {
+    let model = Memn2n::load_default(backend)?;
+    let test = BabiTestSet::load_default()?;
+    let count = budget.babi_stories.min(test.count);
+    let k = WorkloadKind::Babi.topk();
+
+    let mut hits = 0usize;
+    let mut selected = 0usize;
+    let mut total_n = 0usize;
+    let mut recall_sum = 0.0;
+    let mut samples = Vec::with_capacity(count);
+    for s in 0..count {
+        let problem = model.story_problem(
+            test.story_tokens(s),
+            test.n_sent[s] as usize,
+            test.max_words,
+            test.story_query(s),
+        );
+        let sorted = SortedColumns::preprocess(&problem.kv.key, problem.kv.n, problem.kv.d);
+        let pred = model.predict(&problem, Some(&sorted));
+        if pred.answer as i32 == test.answer[s] {
+            hits += 1;
+        }
+        selected += pred.selected.len();
+        total_n += problem.kv.n;
+        let all: Vec<usize> = (0..problem.kv.n).collect();
+        let scores = exact_scores(&problem.kv, &problem.query, &all);
+        recall_sum += topk_recall(&scores, &pred.selected, k);
+        samples.push(selection_detail(&problem.kv, &sorted, &problem.query, backend));
+    }
+    Ok(BackendEval {
+        workload: WorkloadKind::Babi,
+        backend_label: backend.label(),
+        metric: hits as f64 / count as f64,
+        mean_selected: selected as f64 / count as f64,
+        mean_n: total_n as f64 / count as f64,
+        topk_recall: recall_sum / count as f64,
+        samples,
+    })
+}
+
+/// WikiMovies: MAP of ranked retrieval restricted to the selected rows.
+fn eval_wikimovies(backend: AttentionBackend, budget: EvalBudget) -> BackendEval {
+    let mut rng = Rng::new(budget.seed ^ 0x11);
+    let k = WorkloadKind::WikiMovies.topk();
+    let mut ranked = Vec::new();
+    let mut relevant = Vec::new();
+    let mut selected = 0usize;
+    let mut queries = 0usize;
+    let mut recall_sum = 0.0;
+    let mut samples = Vec::new();
+    for _ in 0..budget.kb_episodes {
+        let ep = wikimovies::generate_episode(&mut rng, wikimovies::KbConfig::default());
+        let sorted = SortedColumns::preprocess(&ep.kv.key, ep.kv.n, ep.kv.d);
+        for q in &ep.queries {
+            let (_, sel) = backend.run(&ep.kv, Some(&sorted), &q.embedding);
+            ranked.push(wikimovies::rank_rows(&ep.kv, &q.embedding, &sel));
+            relevant.push(q.relevant.clone());
+            selected += sel.len();
+            queries += 1;
+            let all: Vec<usize> = (0..ep.kv.n).collect();
+            let scores = exact_scores(&ep.kv, &q.embedding, &all);
+            recall_sum += topk_recall(&scores, &sel, k);
+            samples.push(selection_detail(&ep.kv, &sorted, &q.embedding, backend));
+        }
+    }
+    BackendEval {
+        workload: WorkloadKind::WikiMovies,
+        backend_label: backend.label(),
+        metric: mean_average_precision(&ranked, &relevant),
+        mean_selected: selected as f64 / queries as f64,
+        mean_n: 186.0,
+        topk_recall: recall_sum / queries as f64,
+        samples,
+    }
+}
+
+/// SQuAD/BERT: output fidelity of the approximate attention vs exact,
+/// over self-attention queries sharing one key matrix.
+fn eval_squad(backend: AttentionBackend, budget: EvalBudget) -> BackendEval {
+    let mut rng = Rng::new(budget.seed ^ 0x22);
+    let trace = squad::generate_trace(&mut rng, squad::SquadConfig::default());
+    let sorted = SortedColumns::preprocess(&trace.kv.key, trace.kv.n, trace.kv.d);
+    let k = WorkloadKind::Squad.topk();
+    let count = budget.squad_queries.min(trace.n);
+
+    let mut fidelity = 0.0;
+    let mut selected = 0usize;
+    let mut recall_sum = 0.0;
+    let mut samples = Vec::with_capacity(count);
+    for i in 0..count {
+        let q = trace.query(i);
+        let (out, sel) = backend.run(&trace.kv, Some(&sorted), q);
+        let exact = crate::attention::attention(&trace.kv, q);
+        fidelity += output_fidelity(&out, &exact);
+        selected += sel.len();
+        let scores = squad::exact_scores(&trace, i);
+        recall_sum += topk_recall(&scores, &sel, k);
+        samples.push(selection_detail(&trace.kv, &sorted, q, backend));
+    }
+    BackendEval {
+        workload: WorkloadKind::Squad,
+        backend_label: backend.label(),
+        metric: fidelity / count as f64,
+        mean_selected: selected as f64 / count as f64,
+        mean_n: trace.n as f64,
+        topk_recall: recall_sum / count as f64,
+        samples,
+    }
+}
+
+/// The Fig. 11 M sweep values, as fractions of n.
+pub const M_SWEEP: [(f64, &str); 4] =
+    [(1.0, "n"), (0.5, "n/2"), (0.25, "n/4"), (0.125, "n/8")];
+
+/// The Fig. 12 T sweep values (percent of max weight).
+pub const T_SWEEP: [f64; 4] = [1.0, 5.0, 10.0, 20.0];
+
+/// Shortcut: a candidates-only backend at an M fraction.
+pub fn candidates_backend(frac: f64) -> AttentionBackend {
+    AttentionBackend::CandidatesOnly { m: MIters::FractionOfN(frac) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_budget() -> EvalBudget {
+        EvalBudget { babi_stories: 40, kb_episodes: 1, squad_queries: 24, seed: 7 }
+    }
+
+    #[test]
+    fn wikimovies_exact_has_high_map_and_full_selection() {
+        let e = eval_wikimovies(AttentionBackend::Exact, small_budget());
+        assert!(e.metric > 0.85, "MAP {}", e.metric);
+        assert_eq!(e.mean_selected, 186.0);
+        assert_eq!(e.topk_recall, 1.0);
+    }
+
+    #[test]
+    fn squad_exact_is_perfect_fidelity() {
+        let e = eval_squad(AttentionBackend::Exact, small_budget());
+        assert!(e.metric > 0.999, "{}", e.metric);
+        assert_eq!(e.topk_recall, 1.0);
+    }
+
+    #[test]
+    fn aggressive_reduces_selection_and_metric() {
+        let exact = eval_squad(AttentionBackend::Exact, small_budget());
+        let aggr = eval_squad(AttentionBackend::aggressive(), small_budget());
+        assert!(aggr.mean_selected < exact.mean_selected / 4.0);
+        assert!(aggr.metric <= exact.metric + 1e-9);
+        assert!(aggr.metric > 0.5, "fidelity collapsed: {}", aggr.metric);
+    }
+
+    #[test]
+    fn babi_eval_works_when_artifacts_present() {
+        if crate::model::Memn2nWeights::load_default().is_err() {
+            return;
+        }
+        let e = eval_babi(AttentionBackend::Exact, small_budget()).unwrap();
+        assert!(e.metric > 0.9, "accuracy {}", e.metric);
+        let a = eval_babi(AttentionBackend::aggressive(), small_budget()).unwrap();
+        assert!(a.mean_selected < e.mean_selected);
+    }
+
+    #[test]
+    fn selection_detail_consistency() {
+        let mut rng = Rng::new(5);
+        let kv = KvPair::new(64, 16, rng.normal_vec(64 * 16, 1.0), rng.normal_vec(64 * 16, 1.0));
+        let sorted = SortedColumns::preprocess(&kv.key, 64, 16);
+        let q = rng.normal_vec(16, 1.0);
+        let s = selection_detail(&kv, &sorted, &q, AttentionBackend::conservative());
+        assert_eq!(s.m, 32);
+        assert!(s.kept <= s.candidates);
+        assert!(s.candidates <= 64);
+        let (_, sel) = AttentionBackend::conservative().run(&kv, Some(&sorted), &q);
+        assert_eq!(sel.len(), s.kept);
+    }
+}

@@ -1,0 +1,54 @@
+//! Table I — area and power of each A³ module. The per-module numbers
+//! are the paper's published synthesis results (the calibration
+//! constants of our energy model, see DESIGN.md §4); this driver
+//! re-derives the totals and the die-size comparisons of §VI-D.
+
+use super::{fmt_f, Table};
+use crate::energy::Table1;
+
+pub fn run() -> Table {
+    let t1 = Table1::paper();
+    let mut t = Table::new(
+        "Table I — A3 area and power (TSMC 40nm @ 1 GHz; paper-published per-module values)",
+        &["module", "area (mm^2)", "dynamic (mW)", "static (mW)"],
+    );
+    for m in &t1.modules {
+        t.row(vec![
+            m.name.into(),
+            fmt_f(m.area_mm2, 3),
+            fmt_f(m.dynamic_mw, 3),
+            fmt_f(m.static_mw, 3),
+        ]);
+    }
+    t.row(vec![
+        "TOTAL".into(),
+        fmt_f(t1.total_area_mm2(), 3),
+        fmt_f(t1.total_dynamic_mw(), 2),
+        fmt_f(t1.total_static_mw(), 3),
+    ]);
+    t.row(vec![
+        "vs Xeon 325mm^2".into(),
+        format!("{:.0}x smaller", t1.area_ratio_vs(325.0)),
+        String::new(),
+        String::new(),
+    ]);
+    t.row(vec![
+        "vs TitanV 815mm^2".into(),
+        format!("{:.0}x smaller", t1.area_ratio_vs(815.0)),
+        String::new(),
+        String::new(),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn renders_all_modules_plus_totals() {
+        let t = super::run();
+        assert_eq!(t.rows.len(), 8 + 3);
+        let text = t.to_string();
+        assert!(text.contains("2.082"));
+        assert!(text.contains("156x smaller"));
+    }
+}

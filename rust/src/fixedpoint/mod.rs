@@ -1,0 +1,223 @@
+//! Fixed-point arithmetic substrate (paper §III-B).
+//!
+//! A³ quantizes attention inputs to a sign + `i` integer + `f` fraction
+//! bit representation and widens each pipeline stage just enough to
+//! avoid overflow while preserving precision:
+//!
+//! | stage        | integer bits        | fraction bits |
+//! |--------------|---------------------|---------------|
+//! | key/query/value input | `i`        | `f`           |
+//! | temp (products)       | `2i`       | `2f`          |
+//! | dot_product           | `2i + log2 d` | `2f`       |
+//! | max-subtracted dot    | `2i + log2 d + 1` | `2f`   |
+//! | score (post-exp)      | `0`        | `2f`          |
+//! | expsum                | `log2 n`   | `2f`          |
+//! | weight                | `0`        | `2f`          |
+//! | output                | `i + log2 n` | `3f`        |
+//!
+//! Values are held as plain `i32` scaled integers ("Q values"); the
+//! [`QFormat`] carries the interpretation. All rounding is
+//! round-half-up via `floor(x * 2^f + 0.5)`, matching the python oracle
+//! (`compile/kernels/ref.py::quantize_q`) bit for bit.
+
+/// A fixed-point format: `i` integer bits, `f` fraction bits, plus sign.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QFormat {
+    pub int_bits: u32,
+    pub frac_bits: u32,
+}
+
+impl QFormat {
+    pub const fn new(int_bits: u32, frac_bits: u32) -> Self {
+        QFormat { int_bits, frac_bits }
+    }
+
+    /// The paper's evaluation format: i = 4, f = 4 (§VI-D).
+    pub const PAPER_INPUT: QFormat = QFormat::new(4, 4);
+
+    /// Scale factor 2^f.
+    pub fn scale(&self) -> f32 {
+        (1i64 << self.frac_bits) as f32
+    }
+
+    /// Largest representable magnitude on the integer plane.
+    pub fn max_q(&self) -> i32 {
+        ((1i64 << (self.int_bits + self.frac_bits)) - 1) as i32
+    }
+
+    /// Total width including sign bit.
+    pub fn width(&self) -> u32 {
+        self.int_bits + self.frac_bits + 1
+    }
+
+    /// Quantize a float to this format (round half up, saturate).
+    pub fn quantize(&self, x: f32) -> i32 {
+        let q = (x * self.scale() + 0.5).floor();
+        let hi = self.max_q() as f32;
+        if q > hi {
+            self.max_q()
+        } else if q < -hi {
+            -self.max_q()
+        } else {
+            q as i32
+        }
+    }
+
+    /// Back to float.
+    pub fn dequantize(&self, q: i32) -> f32 {
+        q as f32 / self.scale()
+    }
+
+    pub fn quantize_slice(&self, xs: &[f32]) -> Vec<i32> {
+        xs.iter().map(|&x| self.quantize(x)).collect()
+    }
+
+    pub fn dequantize_slice(&self, qs: &[i32]) -> Vec<f32> {
+        qs.iter().map(|&q| self.dequantize(q)).collect()
+    }
+}
+
+/// The per-stage width ladder of §III-B for a given design point.
+///
+/// Used both by the datapath model (overflow assertions in debug) and
+/// by the energy model (register/SRAM widths scale area and power).
+#[derive(Clone, Copy, Debug)]
+pub struct WidthLadder {
+    pub input: QFormat,
+    pub temp: QFormat,
+    pub dot: QFormat,
+    pub dot_shifted: QFormat,
+    pub score: QFormat,
+    pub expsum: QFormat,
+    pub weight: QFormat,
+    pub output: QFormat,
+}
+
+fn log2_ceil(x: usize) -> u32 {
+    debug_assert!(x > 0);
+    usize::BITS - (x - 1).leading_zeros()
+}
+
+impl WidthLadder {
+    /// Derive the ladder from the input format and the design n, d.
+    pub fn derive(input: QFormat, n: usize, d: usize) -> Self {
+        let (i, f) = (input.int_bits, input.frac_bits);
+        WidthLadder {
+            input,
+            temp: QFormat::new(2 * i, 2 * f),
+            dot: QFormat::new(2 * i + log2_ceil(d), 2 * f),
+            dot_shifted: QFormat::new(2 * i + log2_ceil(d) + 1, 2 * f),
+            score: QFormat::new(0, 2 * f),
+            expsum: QFormat::new(log2_ceil(n), 2 * f),
+            weight: QFormat::new(0, 2 * f),
+            output: QFormat::new(i + log2_ceil(n), 3 * f),
+        }
+    }
+
+    /// The paper's synthesis point: i=f=4, n=320, d=64.
+    pub fn paper() -> Self {
+        WidthLadder::derive(QFormat::PAPER_INPUT, crate::PAPER_N, crate::PAPER_D)
+    }
+
+    /// Every stage must fit the i32 compute plane (with sign).
+    pub fn fits_i32(&self) -> bool {
+        [
+            self.input,
+            self.temp,
+            self.dot,
+            self.dot_shifted,
+            self.score,
+            self.expsum,
+            self.weight,
+            self.output,
+        ]
+        .iter()
+        .all(|q| q.width() <= 31)
+    }
+
+    /// Total register-file bits held per row by the pipeline — feeds the
+    /// energy model's register cost scaling.
+    pub fn register_bits(&self) -> u32 {
+        self.dot.width() + self.score.width() + self.weight.width()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{check, Rng};
+
+    #[test]
+    fn quantize_matches_python_semantics() {
+        let q = QFormat::PAPER_INPUT;
+        // mirrors python test: [0.03125, -0.03125, 100.0, -100.0, 0.0]
+        assert_eq!(q.quantize(0.03125), 1); // 0.5 rounds half-up to 1
+        assert_eq!(q.quantize(-0.03125), 0); // -0.5 floors to 0
+        assert_eq!(q.quantize(100.0), 255);
+        assert_eq!(q.quantize(-100.0), -255);
+        assert_eq!(q.quantize(0.0), 0);
+    }
+
+    #[test]
+    fn round_trip_error_bounded_by_half_ulp() {
+        let q = QFormat::PAPER_INPUT;
+        check(200, |rng: &mut Rng| {
+            let x = rng.gaussian_f32(0.0, 3.0);
+            if x.abs() < q.dequantize(q.max_q()) {
+                let err = (q.dequantize(q.quantize(x)) - x).abs();
+                assert!(err <= 0.5 / q.scale() + 1e-6, "x={x} err={err}");
+            }
+        });
+    }
+
+    #[test]
+    fn quantize_saturates_not_wraps() {
+        let q = QFormat::new(2, 2);
+        assert_eq!(q.quantize(1000.0), 15);
+        assert_eq!(q.quantize(-1000.0), -15);
+    }
+
+    #[test]
+    fn quantize_is_monotone() {
+        let q = QFormat::PAPER_INPUT;
+        check(100, |rng: &mut Rng| {
+            let a = rng.gaussian_f32(0.0, 5.0);
+            let b = rng.gaussian_f32(0.0, 5.0);
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            assert!(q.quantize(lo) <= q.quantize(hi));
+        });
+    }
+
+    #[test]
+    fn paper_ladder_fits_i32() {
+        let ladder = WidthLadder::paper();
+        assert!(ladder.fits_i32());
+        assert_eq!(ladder.temp, QFormat::new(8, 8));
+        assert_eq!(ladder.dot, QFormat::new(8 + 6, 8)); // log2(64) = 6
+        assert_eq!(ladder.expsum, QFormat::new(9, 8)); // log2_ceil(320) = 9
+        assert_eq!(ladder.output, QFormat::new(4 + 9, 12));
+    }
+
+    #[test]
+    fn ladder_widths_grow_monotonically_through_mults() {
+        check(30, |rng: &mut Rng| {
+            let i = rng.range(1, 6) as u32;
+            let f = rng.range(1, 6) as u32;
+            let n = 1 << rng.range(1, 10);
+            let d = 1 << rng.range(1, 8);
+            let l = WidthLadder::derive(QFormat::new(i, f), n, d);
+            assert!(l.temp.width() >= l.input.width());
+            assert!(l.dot.width() >= l.temp.width());
+            assert_eq!(l.output.frac_bits, 3 * f);
+        });
+    }
+
+    #[test]
+    fn log2_ceil_values() {
+        assert_eq!(log2_ceil(1), 0);
+        assert_eq!(log2_ceil(2), 1);
+        assert_eq!(log2_ceil(3), 2);
+        assert_eq!(log2_ceil(64), 6);
+        assert_eq!(log2_ceil(320), 9);
+    }
+}

@@ -1,0 +1,80 @@
+//! # A³ — Accelerating Attention Mechanisms with Approximation
+//!
+//! Rust + JAX + Pallas reproduction of *A³: Accelerating Attention
+//! Mechanisms in Neural Networks with Approximation* (Ham et al.,
+//! HPCA 2020).
+//!
+//! This crate is the **Layer-3 runtime**: everything that executes at
+//! serving time lives here. The python tree (`python/compile/`) is the
+//! build-time compile path only — it authors the L1 pallas kernels and
+//! the L2 jax models, AOT-lowers them to HLO text, trains the tiny
+//! MemN2N workload model, and exports golden vectors; [`runtime`] loads
+//! those artifacts through PJRT and never touches python again.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`fixedpoint`] — the paper's §III-B Q(i,f) arithmetic substrate.
+//! * [`attention`] — float reference, the bit-accurate fixed-point
+//!   pipeline datapath, and the two-LUT exponent.
+//! * [`approx`] — §IV greedy candidate selection + post-scoring.
+//! * [`sim`] — the cycle-level model of the accelerator (§III/§V
+//!   timing: base pipeline 3n+27 latency / n+9 throughput, approximate
+//!   pipeline M+C+2K+α), with per-module activity counters.
+//! * [`energy`] — Table I area/power numbers and the activity→energy
+//!   model behind Fig. 15.
+//! * [`baseline`] — measured host-CPU attention plus analytical
+//!   Xeon/Titan-V cost models for the Fig. 14 normalizations.
+//! * [`workloads`] — bAbI-style / WikiMovies-style / SQuAD-style
+//!   workload generators (the paper's three evaluation tasks).
+//! * [`model`] — the MemN2N forward pass with pluggable attention
+//!   backends, used for the accuracy sweeps of Figs. 11–13.
+//! * [`runtime`] — PJRT engine: HLO-text artifacts → compiled
+//!   executables → on-demand execution.
+//! * [`coordinator`] — the serving layer: query queues, batching,
+//!   multi-unit scheduling, metrics.
+//! * [`experiments`] — one driver per paper table/figure, shared by the
+//!   CLI (`a3 <fig...>`) and the bench harnesses.
+
+pub mod approx;
+pub mod attention;
+pub mod baseline;
+pub mod bench;
+pub mod coordinator;
+pub mod energy;
+pub mod experiments;
+pub mod fixedpoint;
+pub mod model;
+pub mod runtime;
+pub mod sim;
+pub mod tensorio;
+pub mod testutil;
+pub mod workloads;
+
+/// Paper evaluation constants: the largest workload (BERT/SQuAD) sets
+/// the synthesis point n=320, d=64 (paper §III-C / §VI-D).
+pub const PAPER_N: usize = 320;
+/// Embedding dimension shared by all three paper workloads (§VI-A).
+pub const PAPER_D: usize = 64;
+/// Accelerator clock (§VI-C): 1 GHz.
+pub const CLOCK_HZ: f64 = 1.0e9;
+
+/// Locate the artifacts directory (built by `make artifacts`).
+///
+/// Honours `A3_ARTIFACTS`; otherwise walks up from the current
+/// directory looking for `artifacts/` (so tests, benches and examples
+/// all work from any workspace subdirectory).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("A3_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! `a3` — the leader binary: run any paper experiment, serve queries,
+//! or smoke-test the PJRT runtime. Hand-rolled argument parsing (clap
+//! is not in the offline vendor set).
+
+use anyhow::{bail, Result};
+
+use a3::coordinator::{KvContext, Scheduler, ServeConfig, Server, UnitConfig, UnitKind};
+use a3::experiments::sweep::EvalBudget;
+use a3::experiments::{fig03, fig11, fig12, fig13, fig14, fig15, quant_sweep, table1};
+use a3::model::AttentionBackend;
+use a3::runtime::{ArtifactId, PjrtEngine};
+use a3::sim::Dims;
+use a3::testutil::Rng;
+
+const USAGE: &str = "\
+a3 — A³ attention accelerator reproduction (HPCA 2020)
+
+USAGE:
+    a3 <command> [options]
+
+COMMANDS (paper artifacts):
+    fig3            attention share of runtime (measured on this host)
+    fig11           candidate selection sweep over M
+    fig12           post-scoring sweep over T
+    fig13           combined schemes (conservative / aggressive)
+    fig14           throughput + latency across platforms
+    fig15           energy efficiency + breakdown
+    table1          per-module area / power
+    quant           SVI-B quantization bitwidth sweep
+    all             every table and figure above
+
+COMMANDS (system):
+    serve           run the serving coordinator on a synthetic stream
+                    [--units N] [--approx] [--queries N] [--n N]
+    runtime-smoke   load + execute every AOT HLO artifact via PJRT
+
+OPTIONS:
+    --budget small|full   evaluation sizes (default: full)
+";
+
+fn budget_from_args(args: &[String]) -> EvalBudget {
+    let small = args.iter().any(|a| a == "--budget") && args.iter().any(|a| a == "small");
+    if small {
+        EvalBudget { babi_stories: 60, kb_episodes: 2, squad_queries: 48, seed: 0xA3 }
+    } else {
+        EvalBudget { babi_stories: 500, kb_episodes: 8, squad_queries: 320, seed: 0xA3 }
+    }
+}
+
+fn flag_value(args: &[String], flag: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let units: usize = flag_value(args, "--units").map_or(Ok(1), |v| v.parse())?;
+    let queries: usize = flag_value(args, "--queries").map_or(Ok(4096), |v| v.parse())?;
+    let n: usize = flag_value(args, "--n").map_or(Ok(a3::PAPER_N), |v| v.parse())?;
+    let approx = args.iter().any(|a| a == "--approx");
+    let kind = if approx {
+        UnitKind::Approximate { backend: AttentionBackend::conservative() }
+    } else {
+        UnitKind::Base
+    };
+
+    let mut rng = Rng::new(1);
+    let d = a3::PAPER_D;
+    let kv = a3::attention::KvPair::new(
+        n,
+        d,
+        rng.normal_vec(n * d, 1.0),
+        rng.normal_vec(n * d, 1.0),
+    );
+    let ctx = KvContext::new(0, kv);
+    let sched = Scheduler::replicated(UnitConfig { kind, dims: Dims::new(n, d) }, units);
+    let mut server = Server::new(vec![ctx], sched, ServeConfig::default());
+    println!(
+        "serving {queries} queries (n={n}, d={d}) on {units} {} unit(s)...",
+        if approx { "approximate" } else { "base" }
+    );
+    let report = server.serve_random(queries, 2);
+    println!("host   : {}", report.metrics.summary());
+    println!(
+        "sim    : makespan {} cycles -> {:.0} queries/s on the accelerator",
+        report.sim_makespan,
+        report.sim_throughput_qps()
+    );
+    Ok(())
+}
+
+fn cmd_runtime_smoke() -> Result<()> {
+    let mut engine = PjrtEngine::new()?;
+    println!("PJRT platform: {}", engine.platform());
+    let mut rng = Rng::new(3);
+    let (n, d) = (a3::PAPER_N, a3::PAPER_D);
+    let key = rng.normal_vec(n * d, 1.0);
+    let value = rng.normal_vec(n * d, 1.0);
+    for id in [ArtifactId::AttentionB1, ArtifactId::AttentionB8, ArtifactId::AttentionB320] {
+        let b = id.batch();
+        let q = rng.normal_vec(b * d, 1.0);
+        let out = engine.attention(id, &q, &key, &value, n, d)?;
+        anyhow::ensure!(out.len() == b * d && out.iter().all(|x| x.is_finite()));
+        println!("  {id:?}: ok ({} outputs)", out.len());
+    }
+    // masked + quantized + memn2n graphs
+    let q8 = rng.normal_vec(8 * d, 1.0);
+    let mask = vec![1.0f32; 8 * n];
+    let out = engine.run_f32(
+        ArtifactId::AttentionMaskedB8,
+        &[(&q8, &[8, d]), (&key, &[n, d]), (&value, &[n, d]), (&mask, &[8, n])],
+    )?;
+    anyhow::ensure!(out.len() == 8 * d);
+    println!("  AttentionMaskedB8: ok");
+    let q1 = rng.normal_vec(d, 1.0);
+    let out = engine.run_f32(
+        ArtifactId::AttentionQuant,
+        &[(&q1, &[d]), (&key, &[n, d]), (&value, &[n, d])],
+    )?;
+    anyhow::ensure!(out.len() == d);
+    println!("  AttentionQuant: ok");
+    let m = rng.normal_vec(50 * d, 1.0);
+    let c = rng.normal_vec(50 * d, 1.0);
+    let u = rng.normal_vec(d, 1.0);
+    let mut msk = vec![0.0f32; 50];
+    msk[..12].fill(1.0);
+    let logits = engine.memn2n_answer(&m, &c, &u, &msk)?;
+    anyhow::ensure!(logits.len() == 23);
+    println!("  Memn2nAnswer: ok (23 logits)");
+    println!("runtime smoke OK");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first().map(String::as_str) else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let budget = budget_from_args(&args);
+    match cmd {
+        "fig3" => println!("{}", fig03::run(200)),
+        "fig11" => {
+            let (a, b) = fig11::run(budget)?;
+            println!("{a}\n{b}");
+        }
+        "fig12" => {
+            let (a, b) = fig12::run(budget)?;
+            println!("{a}\n{b}");
+        }
+        "fig13" => {
+            let (a, b) = fig13::run(budget)?;
+            println!("{a}\n{b}");
+        }
+        "fig14" => {
+            let (a, b) = fig14::run(budget)?;
+            println!("{a}\n{b}");
+        }
+        "fig15" => {
+            let (a, b) = fig15::run(budget)?;
+            println!("{a}\n{b}");
+        }
+        "table1" => println!("{}", table1::run()),
+        "quant" => println!("{}", quant_sweep::run(budget)?),
+        "all" => {
+            println!("{}", table1::run());
+            println!("{}", quant_sweep::run(budget)?);
+            println!("{}", fig03::run(200));
+            for (a, b) in [
+                fig11::run(budget)?,
+                fig12::run(budget)?,
+                fig13::run(budget)?,
+                fig14::run(budget)?,
+                fig15::run(budget)?,
+            ] {
+                println!("{a}\n{b}");
+            }
+        }
+        "serve" => cmd_serve(&args)?,
+        "runtime-smoke" => cmd_runtime_smoke()?,
+        "--help" | "-h" | "help" => print!("{USAGE}"),
+        other => {
+            print!("{USAGE}");
+            bail!("unknown command {other:?}");
+        }
+    }
+    Ok(())
+}

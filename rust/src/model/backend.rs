@@ -1,0 +1,218 @@
+//! Pluggable attention backends: the experiments swap these inside the
+//! MemN2N forward pass (and the raw-attention sweeps) to measure the
+//! accuracy impact of each scheme (Figs. 11–13).
+
+use crate::approx::{greedy_select, postscore_select, SortedColumns};
+use crate::attention::{
+    attention, attention_masked, quantized_attention_paper, KvPair,
+};
+
+/// How many candidate-selection iterations to run, expressed the way
+/// the paper sweeps it: as a fraction of n (Fig. 11 uses n, n/2, n/4,
+/// n/8) or an absolute count.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MIters {
+    FractionOfN(f64),
+    Absolute(usize),
+}
+
+impl MIters {
+    pub fn resolve(self, n: usize) -> usize {
+        match self {
+            MIters::FractionOfN(f) => ((n as f64 * f).round() as usize).max(1),
+            MIters::Absolute(m) => m,
+        }
+    }
+}
+
+/// An attention execution strategy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AttentionBackend {
+    /// Float reference (Fig. 1) — the paper's software baseline.
+    Exact,
+    /// Base A³ fixed-point pipeline (i=4, f=4).
+    Quantized,
+    /// Fixed-point pipeline at an arbitrary bitwidth (§VI-B sweep).
+    QuantizedBits { i_bits: u32, f_bits: u32 },
+    /// Candidate selection only (post-scoring disabled): Fig. 11.
+    CandidatesOnly { m: MIters },
+    /// Post-scoring only over all rows (M = full): Fig. 12.
+    PostScoringOnly { t_pct: f64 },
+    /// Full approximate pipeline: Fig. 13 (conservative M=n/2 T=5,
+    /// aggressive M=n/8 T=10).
+    Approximate { m: MIters, t_pct: f64 },
+}
+
+impl AttentionBackend {
+    /// The paper's two named configurations (§VI-B, Fig. 13).
+    pub fn conservative() -> Self {
+        AttentionBackend::Approximate { m: MIters::FractionOfN(0.5), t_pct: 5.0 }
+    }
+
+    pub fn aggressive() -> Self {
+        AttentionBackend::Approximate { m: MIters::FractionOfN(0.125), t_pct: 10.0 }
+    }
+
+    /// Run this backend for one query. `sorted` must be the
+    /// preprocessed key matrix when the backend uses candidate
+    /// selection (pass `None` to have it computed on the fly).
+    ///
+    /// Returns the output vector and the set of rows that entered the
+    /// softmax (all rows for Exact/Quantized) — the selection the
+    /// simulator and the Fig. 13b recall metric consume.
+    pub fn run(
+        &self,
+        kv: &KvPair,
+        sorted: Option<&SortedColumns>,
+        query: &[f32],
+    ) -> (Vec<f32>, Vec<usize>) {
+        match *self {
+            AttentionBackend::Exact => (attention(kv, query), (0..kv.n).collect()),
+            AttentionBackend::Quantized => {
+                let (out, _) = quantized_attention_paper(kv, query);
+                (out, (0..kv.n).collect())
+            }
+            AttentionBackend::QuantizedBits { i_bits, f_bits } => {
+                let fmt = crate::fixedpoint::QFormat::new(i_bits, f_bits);
+                let lut = crate::attention::ExpLut::new(2 * f_bits);
+                let (out, _) = crate::attention::quantized_attention(kv, query, fmt, &lut);
+                (out, (0..kv.n).collect())
+            }
+            AttentionBackend::CandidatesOnly { m } => {
+                let owned;
+                let s = match sorted {
+                    Some(s) => s,
+                    None => {
+                        owned = SortedColumns::preprocess(&kv.key, kv.n, kv.d);
+                        &owned
+                    }
+                };
+                let res = greedy_select(s, query, m.resolve(kv.n));
+                let out = attention_masked(kv, query, &res.candidates);
+                (out, res.candidates)
+            }
+            AttentionBackend::PostScoringOnly { t_pct } => {
+                let all: Vec<usize> = (0..kv.n).collect();
+                let scores = exact_scores(kv, query, &all);
+                let kept = postscore_select(&scores, &all, t_pct);
+                let out = attention_masked(kv, query, &kept);
+                (out, kept)
+            }
+            AttentionBackend::Approximate { m, t_pct } => {
+                let owned;
+                let s = match sorted {
+                    Some(s) => s,
+                    None => {
+                        owned = SortedColumns::preprocess(&kv.key, kv.n, kv.d);
+                        &owned
+                    }
+                };
+                let res = greedy_select(s, query, m.resolve(kv.n));
+                let scores = exact_scores(kv, query, &res.candidates);
+                let kept = postscore_select(&scores, &res.candidates, t_pct);
+                let out = attention_masked(kv, query, &kept);
+                (out, kept)
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            AttentionBackend::Exact => "exact".into(),
+            AttentionBackend::Quantized => "quantized(i4f4)".into(),
+            AttentionBackend::QuantizedBits { i_bits, f_bits } => {
+                format!("quantized(i{i_bits}f{f_bits})")
+            }
+            AttentionBackend::CandidatesOnly { m } => format!("candidates({m:?})"),
+            AttentionBackend::PostScoringOnly { t_pct } => format!("postscore(T={t_pct}%)"),
+            AttentionBackend::Approximate { m, t_pct } => {
+                format!("approx({m:?}, T={t_pct}%)")
+            }
+        }
+    }
+}
+
+fn exact_scores(kv: &KvPair, query: &[f32], rows: &[usize]) -> Vec<f64> {
+    rows.iter()
+        .map(|&i| {
+            kv.key_row(i)
+                .iter()
+                .zip(query)
+                .map(|(k, q)| *k as f64 * *q as f64)
+                .sum()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{assert_allclose, Rng};
+
+    fn problem(seed: u64, n: usize, d: usize) -> (KvPair, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let kv = KvPair::new(n, d, rng.normal_vec(n * d, 1.0), rng.normal_vec(n * d, 1.0));
+        let q = rng.normal_vec(d, 1.0);
+        (kv, q)
+    }
+
+    #[test]
+    fn m_resolution() {
+        assert_eq!(MIters::FractionOfN(0.5).resolve(320), 160);
+        assert_eq!(MIters::FractionOfN(0.125).resolve(320), 40);
+        assert_eq!(MIters::Absolute(17).resolve(320), 17);
+        assert_eq!(MIters::FractionOfN(0.001).resolve(10), 1); // floor 1
+    }
+
+    #[test]
+    fn exact_selects_everything() {
+        let (kv, q) = problem(0, 32, 8);
+        let (_, sel) = AttentionBackend::Exact.run(&kv, None, &q);
+        assert_eq!(sel.len(), 32);
+    }
+
+    #[test]
+    fn postscore_t_near_zero_equals_exact() {
+        let (kv, q) = problem(1, 48, 16);
+        let (exact, _) = AttentionBackend::Exact.run(&kv, None, &q);
+        let (out, sel) =
+            AttentionBackend::PostScoringOnly { t_pct: 1e-9 }.run(&kv, None, &q);
+        assert_eq!(sel.len(), 48);
+        assert_allclose(&out, &exact, 1e-5, 1e-4);
+    }
+
+    #[test]
+    fn aggressive_selects_subset_of_conservative_budget() {
+        let (kv, q) = problem(2, 320, 64);
+        let sorted = SortedColumns::preprocess(&kv.key, kv.n, kv.d);
+        let (_, cons) = AttentionBackend::conservative().run(&kv, Some(&sorted), &q);
+        let (_, aggr) = AttentionBackend::aggressive().run(&kv, Some(&sorted), &q);
+        assert!(!cons.is_empty());
+        assert!(!aggr.is_empty());
+        assert!(aggr.len() <= cons.len());
+    }
+
+    #[test]
+    fn approximate_output_close_to_exact_with_generous_budget() {
+        let (kv, q) = problem(3, 128, 32);
+        let (exact, _) = AttentionBackend::Exact.run(&kv, None, &q);
+        let backend = AttentionBackend::Approximate {
+            m: MIters::Absolute(128 * 32 * 2),
+            t_pct: 1e-6,
+        };
+        let (out, _) = backend.run(&kv, None, &q);
+        // only negative-greedy-score rows (near-zero weight) are missing
+        assert_allclose(&out, &exact, 0.05, 0.05);
+    }
+
+    #[test]
+    fn provided_sorted_matches_on_the_fly() {
+        let (kv, q) = problem(4, 64, 16);
+        let sorted = SortedColumns::preprocess(&kv.key, kv.n, kv.d);
+        let b = AttentionBackend::conservative();
+        let (a_out, a_sel) = b.run(&kv, Some(&sorted), &q);
+        let (b_out, b_sel) = b.run(&kv, None, &q);
+        assert_eq!(a_sel, b_sel);
+        assert_eq!(a_out, b_out);
+    }
+}

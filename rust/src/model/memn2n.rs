@@ -1,0 +1,252 @@
+//! MemN2N forward pass in rust (mirrors `python/compile/memn2n.py`),
+//! with the attention step delegated to an [`AttentionBackend`]. The
+//! exact-attention path must reproduce the python logits (pinned by the
+//! `golden_memn2n.bin` cross-language test); the approximate paths give
+//! the Figs. 11/12/13 accuracy deltas.
+
+use anyhow::{ensure, Context, Result};
+
+use super::backend::AttentionBackend;
+use super::weights::Memn2nWeights;
+use crate::approx::SortedColumns;
+use crate::attention::KvPair;
+use crate::tensorio::{read_tensors, TensorsExt};
+
+/// The python-exported held-out bAbI test set (`babi_test.bin`).
+#[derive(Clone, Debug)]
+pub struct BabiTestSet {
+    pub count: usize,
+    pub max_sent: usize,
+    pub max_words: usize,
+    /// count × max_sent × max_words token ids (PAD = -1).
+    pub tokens: Vec<i32>,
+    pub n_sent: Vec<i32>,
+    /// count × max_words question tokens.
+    pub query: Vec<i32>,
+    pub answer: Vec<i32>,
+    pub support: Vec<i32>,
+}
+
+impl BabiTestSet {
+    pub fn load_default() -> Result<Self> {
+        Self::load(crate::artifacts_dir().join("babi_test.bin"))
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let t = read_tensors(&path)
+            .with_context(|| format!("loading {}", path.as_ref().display()))?;
+        let shape = t.shape_of("tokens")?.to_vec();
+        ensure!(shape.len() == 3, "tokens rank {:?}", shape);
+        Ok(BabiTestSet {
+            count: shape[0],
+            max_sent: shape[1],
+            max_words: shape[2],
+            tokens: t.i32s("tokens")?.to_vec(),
+            n_sent: t.i32s("n_sent")?.to_vec(),
+            query: t.i32s("query")?.to_vec(),
+            answer: t.i32s("answer")?.to_vec(),
+            support: t.i32s("support")?.to_vec(),
+        })
+    }
+
+    /// Token rows of story `s` (only the first `n_sent[s]` are valid).
+    pub fn story_tokens(&self, s: usize) -> &[i32] {
+        let stride = self.max_sent * self.max_words;
+        &self.tokens[s * stride..(s + 1) * stride]
+    }
+
+    pub fn story_query(&self, s: usize) -> &[i32] {
+        &self.query[s * self.max_words..(s + 1) * self.max_words]
+    }
+}
+
+/// One story's attention problem: memories as key/value plus the
+/// question embedding — exactly the operands A³ receives (§III-C).
+#[derive(Clone, Debug)]
+pub struct StoryProblem {
+    pub kv: KvPair,
+    pub query: Vec<f32>,
+}
+
+/// The model: weights + a chosen attention backend.
+pub struct Memn2n {
+    pub weights: Memn2nWeights,
+    pub backend: AttentionBackend,
+}
+
+/// Result of classifying one story.
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    pub answer: usize,
+    pub logits: Vec<f32>,
+    /// Rows that entered the softmax (for recall metrics / simulation).
+    pub selected: Vec<usize>,
+}
+
+impl Memn2n {
+    pub fn new(weights: Memn2nWeights, backend: AttentionBackend) -> Self {
+        Memn2n { weights, backend }
+    }
+
+    /// Load weights from artifacts with the given backend.
+    pub fn load_default(backend: AttentionBackend) -> Result<Self> {
+        Ok(Memn2n::new(Memn2nWeights::load_default()?, backend))
+    }
+
+    /// Build the attention operands for one story: memory embeddings
+    /// m_i (key) / c_i (value) with temporal encoding, question u.
+    /// Only the valid (non-padded) sentences become rows, so n varies
+    /// per story — as on the real accelerator, which processes n rows.
+    pub fn story_problem(
+        &self,
+        tokens: &[i32],
+        n_sent: usize,
+        max_words: usize,
+        query_tokens: &[i32],
+    ) -> StoryProblem {
+        let w = &self.weights;
+        let d = w.d;
+        let mut key = Vec::with_capacity(n_sent * d);
+        let mut value = Vec::with_capacity(n_sent * d);
+        for i in 0..n_sent {
+            let sent = &tokens[i * max_words..(i + 1) * max_words];
+            let age = (n_sent - 1 - i).min(w.max_sent - 1);
+            let mut m = w.bow_a(sent);
+            for (x, t) in m.iter_mut().zip(w.ta_row(age)) {
+                *x += t;
+            }
+            let mut c = w.bow_c(sent);
+            for (x, t) in c.iter_mut().zip(w.tc_row(age)) {
+                *x += t;
+            }
+            key.extend(m);
+            value.extend(c);
+        }
+        StoryProblem {
+            kv: KvPair::new(n_sent, d, key, value),
+            query: w.bow_a(query_tokens),
+        }
+    }
+
+    /// Full forward pass for one story.
+    pub fn predict(&self, problem: &StoryProblem, sorted: Option<&SortedColumns>) -> Prediction {
+        let (o, selected) = self.backend.run(&problem.kv, sorted, &problem.query);
+        let w = &self.weights;
+        // logits = (o + u) @ W
+        let mut logits = vec![0.0f32; w.vocab];
+        for j in 0..w.d {
+            let x = o[j] + problem.query[j];
+            if x == 0.0 {
+                continue;
+            }
+            let row = &w.w[j * w.vocab..(j + 1) * w.vocab];
+            for (l, v) in logits.iter_mut().zip(row) {
+                *l += x * v;
+            }
+        }
+        let answer = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        Prediction { answer, logits, selected }
+    }
+
+    /// Classify every story in the test set; returns (accuracy,
+    /// mean selected rows, per-story predictions).
+    pub fn evaluate(&self, test: &BabiTestSet) -> (f64, f64, Vec<Prediction>) {
+        let mut preds = Vec::with_capacity(test.count);
+        let mut hits = 0usize;
+        let mut selected = 0usize;
+        for s in 0..test.count {
+            let problem = self.story_problem(
+                test.story_tokens(s),
+                test.n_sent[s] as usize,
+                test.max_words,
+                test.story_query(s),
+            );
+            let p = self.predict(&problem, None);
+            if p.answer as i32 == test.answer[s] {
+                hits += 1;
+            }
+            selected += p.selected.len();
+            preds.push(p);
+        }
+        (
+            hits as f64 / test.count as f64,
+            selected as f64 / test.count as f64,
+            preds,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn maybe_model(backend: AttentionBackend) -> Option<(Memn2n, BabiTestSet)> {
+        let m = Memn2n::load_default(backend).ok()?;
+        let t = BabiTestSet::load_default().ok()?;
+        Some((m, t))
+    }
+
+    #[test]
+    fn exact_matches_python_golden_logits() {
+        let Some((m, t)) = maybe_model(AttentionBackend::Exact) else { return };
+        let path = crate::artifacts_dir().join("golden_memn2n.bin");
+        let g = read_tensors(path).unwrap();
+        let logits = g.f32s("logits").unwrap();
+        let k = g.i32s("n_stories").unwrap()[0] as usize;
+        let vocab = m.weights.vocab;
+        for s in 0..k {
+            let problem = m.story_problem(
+                t.story_tokens(s),
+                t.n_sent[s] as usize,
+                t.max_words,
+                t.story_query(s),
+            );
+            let p = m.predict(&problem, None);
+            crate::testutil::assert_allclose(
+                &p.logits,
+                &logits[s * vocab..(s + 1) * vocab],
+                2e-4,
+                2e-4,
+            );
+        }
+    }
+
+    #[test]
+    fn exact_accuracy_matches_training_record() {
+        let Some((m, t)) = maybe_model(AttentionBackend::Exact) else { return };
+        let (acc, mean_sel, _) = m.evaluate(&t);
+        let trained = m.weights.trained_accuracy as f64;
+        assert!((acc - trained).abs() < 0.02, "rust {acc} vs python {trained}");
+        // exact attention selects every valid sentence
+        let mean_n: f64 =
+            t.n_sent.iter().map(|&x| x as f64).sum::<f64>() / t.count as f64;
+        assert!((mean_sel - mean_n).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantized_accuracy_close_to_exact() {
+        // §VI-B "Impact of Quantization": f=4 costs <0.1% accuracy. Our
+        // tiny model tolerates a slightly looser band.
+        let Some((exact, t)) = maybe_model(AttentionBackend::Exact) else { return };
+        let quant = Memn2n::new(exact.weights.clone(), AttentionBackend::Quantized);
+        let (acc_e, _, _) = exact.evaluate(&t);
+        let (acc_q, _, _) = quant.evaluate(&t);
+        assert!(acc_e - acc_q < 0.03, "exact {acc_e} quant {acc_q}");
+    }
+
+    #[test]
+    fn conservative_approx_loses_little_accuracy() {
+        // Fig. 13a: conservative (M=n/2, T=5%) loses ~1%.
+        let Some((exact, t)) = maybe_model(AttentionBackend::Exact) else { return };
+        let approx = Memn2n::new(exact.weights.clone(), AttentionBackend::conservative());
+        let (acc_e, sel_e, _) = exact.evaluate(&t);
+        let (acc_a, sel_a, _) = approx.evaluate(&t);
+        assert!(acc_e - acc_a < 0.05, "exact {acc_e} approx {acc_a}");
+        assert!(sel_a < sel_e, "approx must select fewer rows");
+    }
+}

@@ -1,0 +1,13 @@
+//! The MemN2N workload model, re-implemented in rust over the trained
+//! weights exported by the python compile path — with **pluggable
+//! attention backends** so the accuracy experiments (Figs. 11–13) can
+//! swap exact / fixed-point / greedy-approximate attention inside an
+//! otherwise identical forward pass.
+
+pub mod backend;
+pub mod memn2n;
+pub mod weights;
+
+pub use backend::AttentionBackend;
+pub use memn2n::{BabiTestSet, Memn2n};
+pub use weights::Memn2nWeights;

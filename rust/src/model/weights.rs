@@ -1,0 +1,129 @@
+//! Loader for the trained MemN2N parameters
+//! (`artifacts/memn2n_weights.bin`, written by `python -m compile.aot`).
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::tensorio::{read_tensors, TensorsExt};
+
+/// Trained MemN2N parameters (see `python/compile/memn2n.py`):
+/// * `a` — input/question embedding (vocab × d)
+/// * `c` — output memory embedding (vocab × d)
+/// * `ta`, `tc` — temporal encodings (max_sent × d)
+/// * `w` — answer projection (d × vocab)
+#[derive(Clone, Debug)]
+pub struct Memn2nWeights {
+    pub vocab: usize,
+    pub d: usize,
+    pub max_sent: usize,
+    pub a: Vec<f32>,
+    pub c: Vec<f32>,
+    pub ta: Vec<f32>,
+    pub tc: Vec<f32>,
+    pub w: Vec<f32>,
+    /// Exact-attention test accuracy recorded at training time.
+    pub trained_accuracy: f32,
+}
+
+impl Memn2nWeights {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let t = read_tensors(&path)
+            .with_context(|| format!("loading weights {}", path.as_ref().display()))?;
+        let a_shape = t.shape_of("A")?.to_vec();
+        let ta_shape = t.shape_of("TA")?.to_vec();
+        ensure!(a_shape.len() == 2 && ta_shape.len() == 2, "bad weight ranks");
+        let (vocab, d) = (a_shape[0], a_shape[1]);
+        let max_sent = ta_shape[0];
+        let w_shape = t.shape_of("W")?;
+        ensure!(w_shape == [d, vocab], "W shape {:?}", w_shape);
+        Ok(Memn2nWeights {
+            vocab,
+            d,
+            max_sent,
+            a: t.f32s("A")?.to_vec(),
+            c: t.f32s("C")?.to_vec(),
+            ta: t.f32s("TA")?.to_vec(),
+            tc: t.f32s("TC")?.to_vec(),
+            w: t.f32s("W")?.to_vec(),
+            trained_accuracy: t.f32s("test_accuracy")?.first().copied().unwrap_or(0.0),
+        })
+    }
+
+    /// Load from the workspace artifacts directory.
+    pub fn load_default() -> Result<Self> {
+        Self::load(crate::artifacts_dir().join("memn2n_weights.bin"))
+    }
+
+    /// Embedding row of table `a` (also the question embedding table).
+    pub fn a_row(&self, id: usize) -> &[f32] {
+        &self.a[id * self.d..(id + 1) * self.d]
+    }
+
+    pub fn c_row(&self, id: usize) -> &[f32] {
+        &self.c[id * self.d..(id + 1) * self.d]
+    }
+
+    pub fn ta_row(&self, age: usize) -> &[f32] {
+        &self.ta[age * self.d..(age + 1) * self.d]
+    }
+
+    pub fn tc_row(&self, age: usize) -> &[f32] {
+        &self.tc[age * self.d..(age + 1) * self.d]
+    }
+
+    /// Bag-of-words embedding of PAD(-1)-padded tokens from table `a`.
+    pub fn bow_a(&self, tokens: &[i32]) -> Vec<f32> {
+        self.bow(&self.a, tokens)
+    }
+
+    pub fn bow_c(&self, tokens: &[i32]) -> Vec<f32> {
+        self.bow(&self.c, tokens)
+    }
+
+    fn bow(&self, table: &[f32], tokens: &[i32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.d];
+        for &t in tokens {
+            if t >= 0 {
+                let row = &table[t as usize * self.d..(t as usize + 1) * self.d];
+                for (o, v) in out.iter_mut().zip(row) {
+                    *o += v;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn weights() -> Option<Memn2nWeights> {
+        Memn2nWeights::load_default().ok()
+    }
+
+    #[test]
+    fn loads_with_expected_shapes() {
+        let Some(w) = weights() else { return };
+        assert_eq!(w.vocab, 23);
+        assert_eq!(w.d, 64);
+        assert_eq!(w.max_sent, 50);
+        assert_eq!(w.a.len(), 23 * 64);
+        assert_eq!(w.w.len(), 64 * 23);
+        assert!(w.trained_accuracy > 0.9, "{}", w.trained_accuracy);
+    }
+
+    #[test]
+    fn bow_sums_rows_and_ignores_pad() {
+        let Some(w) = weights() else { return };
+        let got = w.bow_a(&[1, 2, -1, -1]);
+        let want: Vec<f32> = w
+            .a_row(1)
+            .iter()
+            .zip(w.a_row(2))
+            .map(|(x, y)| x + y)
+            .collect();
+        crate::testutil::assert_allclose(&got, &want, 1e-6, 0.0);
+    }
+}

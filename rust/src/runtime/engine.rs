@@ -1,0 +1,215 @@
+//! The PJRT execution engine: HLO text → compiled executable → calls.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. One executable is compiled per model
+//! variant at startup (or lazily on first use) and cached.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{ensure, Context, Result};
+
+/// The AOT artifacts the engine knows how to load (built by
+/// `make artifacts`; shapes are fixed at lowering time).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactId {
+    /// Base attention, 1 query: (1,64) x (320,64) x (320,64) -> (1,64).
+    AttentionB1,
+    /// Base attention, 8-query batch.
+    AttentionB8,
+    /// Self-attention shape: 320 queries (BERT/SQuAD).
+    AttentionB320,
+    /// Candidate-masked attention, 8-query batch + (8,320) mask.
+    AttentionMaskedB8,
+    /// Fixed-point i4/f4 attention, single query (64,).
+    AttentionQuant,
+    /// Full bAbI query-response graph: (50,64) m, (50,64) c, (64,) u,
+    /// (50,) mask -> (23,) logits.
+    Memn2nAnswer,
+}
+
+impl ArtifactId {
+    pub const ALL: [ArtifactId; 6] = [
+        ArtifactId::AttentionB1,
+        ArtifactId::AttentionB8,
+        ArtifactId::AttentionB320,
+        ArtifactId::AttentionMaskedB8,
+        ArtifactId::AttentionQuant,
+        ArtifactId::Memn2nAnswer,
+    ];
+
+    pub fn file_name(self) -> &'static str {
+        match self {
+            ArtifactId::AttentionB1 => "attention_b1_n320_d64.hlo.txt",
+            ArtifactId::AttentionB8 => "attention_b8_n320_d64.hlo.txt",
+            ArtifactId::AttentionB320 => "attention_b320_n320_d64.hlo.txt",
+            ArtifactId::AttentionMaskedB8 => "attention_masked_b8_n320_d64.hlo.txt",
+            ArtifactId::AttentionQuant => "attention_quant_n320_d64.hlo.txt",
+            ArtifactId::Memn2nAnswer => "memn2n_answer_n50_d64.hlo.txt",
+        }
+    }
+
+    /// Query batch size baked into the artifact (0 = not an attention
+    /// batch artifact).
+    pub fn batch(self) -> usize {
+        match self {
+            ArtifactId::AttentionB1 => 1,
+            ArtifactId::AttentionB8 | ArtifactId::AttentionMaskedB8 => 8,
+            ArtifactId::AttentionB320 => 320,
+            _ => 0,
+        }
+    }
+}
+
+/// A loaded PJRT client with cached executables.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    executables: HashMap<ArtifactId, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtEngine {
+    /// Create a CPU engine rooted at the workspace artifacts dir.
+    pub fn new() -> Result<Self> {
+        Self::with_dir(crate::artifacts_dir())
+    }
+
+    pub fn with_dir(artifacts_dir: PathBuf) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtEngine {
+            client,
+            artifacts_dir,
+            executables: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&mut self, id: ArtifactId) -> Result<()> {
+        if self.executables.contains_key(&id) {
+            return Ok(());
+        }
+        let path = self.artifacts_dir.join(id.file_name());
+        ensure!(
+            path.exists(),
+            "artifact {} missing — run `make artifacts`",
+            path.display()
+        );
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", id.file_name()))?;
+        self.executables.insert(id, exe);
+        Ok(())
+    }
+
+    /// Execute an artifact on f32 operands (each `(data, dims)`), and
+    /// return the flattened f32 output of the 1-tuple result.
+    pub fn run_f32(&mut self, id: ArtifactId, operands: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+        self.load(id)?;
+        let exe = &self.executables[&id];
+        let mut literals = Vec::with_capacity(operands.len());
+        for (data, dims) in operands {
+            let lit = xla::Literal::vec1(data);
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            literals.push(lit.reshape(&dims_i64).context("reshape operand")?);
+        }
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("sync output")?;
+        // python lowers with return_tuple=True -> unwrap the 1-tuple
+        let out = result.to_tuple1().context("untuple output")?;
+        out.to_vec::<f32>().context("output to f32 vec")
+    }
+
+    /// Batched base attention through the AOT kernel: queries `b x d`
+    /// row-major, returns `b x d`.
+    pub fn attention(
+        &mut self,
+        id: ArtifactId,
+        queries: &[f32],
+        key: &[f32],
+        value: &[f32],
+        n: usize,
+        d: usize,
+    ) -> Result<Vec<f32>> {
+        let b = id.batch();
+        ensure!(b > 0, "{id:?} is not a batched attention artifact");
+        ensure!(queries.len() == b * d, "queries: want {}x{d}", b);
+        ensure!(key.len() == n * d && value.len() == n * d, "bad K/V shape");
+        self.run_f32(
+            id,
+            &[
+                (queries, &[b, d]),
+                (key, &[n, d]),
+                (value, &[n, d]),
+            ],
+        )
+    }
+
+    /// The full bAbI answer graph: padded memories (50 × 64), question
+    /// (64), validity mask (50) → logits (23).
+    pub fn memn2n_answer(
+        &mut self,
+        m: &[f32],
+        c: &[f32],
+        u: &[f32],
+        mask: &[f32],
+    ) -> Result<Vec<f32>> {
+        self.run_f32(
+            ArtifactId::Memn2nAnswer,
+            &[
+                (m, &[50, 64]),
+                (c, &[50, 64]),
+                (u, &[64]),
+                (mask, &[50]),
+            ],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{attention_batch, KvPair};
+    use crate::testutil::{assert_allclose, Rng};
+
+    fn maybe_engine() -> Option<PjrtEngine> {
+        let dir = crate::artifacts_dir();
+        if !dir.join(ArtifactId::AttentionB8.file_name()).exists() {
+            return None;
+        }
+        PjrtEngine::new().ok()
+    }
+
+    #[test]
+    fn pjrt_attention_matches_rust_reference() {
+        let Some(mut eng) = maybe_engine() else { return };
+        let (n, d, b) = (320, 64, 8);
+        let mut rng = Rng::new(42);
+        let kv = KvPair::new(n, d, rng.normal_vec(n * d, 1.0), rng.normal_vec(n * d, 1.0));
+        let queries = rng.normal_vec(b * d, 1.0);
+        let got = eng
+            .attention(ArtifactId::AttentionB8, &queries, &kv.key, &kv.value, n, d)
+            .unwrap();
+        let want = attention_batch(&kv, &queries);
+        assert_allclose(&got, &want, 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn artifact_names_unique() {
+        let mut names: Vec<_> = ArtifactId::ALL.iter().map(|a| a.file_name()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), ArtifactId::ALL.len());
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! the python compile path and executes them on the XLA CPU client.
+//!
+//! This is the only place the L1/L2 compute graphs run at serving time
+//! — python is never on the request path. Interchange is HLO **text**
+//! (see `python/compile/aot.py` for why not serialized protos).
+
+pub mod engine;
+
+pub use engine::{ArtifactId, PjrtEngine};

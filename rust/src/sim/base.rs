@@ -1,0 +1,144 @@
+//! Base A³ pipeline timing (§III-A "Throughput and Latency").
+//!
+//! All three modules are deliberately balanced to `n + α` cycles per
+//! query; the longest is module 3 at `n + 9` (n pipelined rows, 7-cycle
+//! divide, 2-cycle multiply-accumulate). The paper's stated totals —
+//! latency `3n + 27`, throughput one query per `n + 9` cycles — emerge
+//! from giving every module an `n + 9` occupancy, which is what the
+//! hardware's balancing achieves.
+
+use super::pipeline::{Module, PipelineSim, QueryTiming, SimReport};
+use super::Dims;
+
+/// Per-module extra cycles beyond the n-row streaming (§III-A: module 3
+/// = 7-cycle division + 2-cycle MAC; modules 1/2 are padded to match).
+pub const MODULE_ALPHA: u64 = 9;
+
+/// The base (non-approximate) accelerator: one query pipelines through
+/// dot-product → exponent → output, three queries in flight.
+#[derive(Clone, Debug)]
+pub struct BasePipeline {
+    pub dims: Dims,
+    sim: PipelineSim,
+}
+
+impl BasePipeline {
+    pub fn new(dims: Dims) -> Self {
+        BasePipeline {
+            dims,
+            sim: PipelineSim::new(true),
+        }
+    }
+
+    /// Without per-query timing records (large sweeps).
+    pub fn new_untimed(dims: Dims) -> Self {
+        BasePipeline {
+            dims,
+            sim: PipelineSim::new(false),
+        }
+    }
+
+    /// Module occupancy for one query.
+    pub fn stage_cycles(&self) -> u64 {
+        self.dims.n as u64 + MODULE_ALPHA
+    }
+
+    /// Closed-form single-query latency: 3n + 27.
+    pub fn latency_cycles(dims: Dims) -> u64 {
+        3 * (dims.n as u64 + MODULE_ALPHA)
+    }
+
+    /// Closed-form steady-state cycles per query: n + 9.
+    pub fn throughput_cycles(dims: Dims) -> u64 {
+        dims.n as u64 + MODULE_ALPHA
+    }
+
+    /// Feed one query arriving at `arrival` cycles.
+    pub fn push_query(&mut self, arrival: u64) -> QueryTiming {
+        let c = self.stage_cycles();
+        self.sim.push(
+            arrival,
+            &[
+                (Module::DotProduct, c),
+                (Module::Exponent, c),
+                (Module::Output, c),
+            ],
+        )
+    }
+
+    /// Simulate `count` back-to-back queries (all ready at cycle 0).
+    pub fn run_batch(mut self, count: usize) -> SimReport {
+        for _ in 0..count {
+            self.push_query(0);
+        }
+        self.sim.into_report()
+    }
+
+    pub fn report(&self) -> &SimReport {
+        self.sim.report()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::check;
+
+    #[test]
+    fn single_query_matches_paper_closed_form() {
+        // §III-A: pipeline latency is 3n + 27 cycles.
+        for n in [20, 50, 186, 320] {
+            let dims = Dims::new(n, 64);
+            let report = BasePipeline::new(dims).run_batch(1);
+            assert_eq!(report.timings[0].latency(), 3 * n as u64 + 27);
+            assert_eq!(
+                report.timings[0].latency(),
+                BasePipeline::latency_cycles(dims)
+            );
+        }
+    }
+
+    #[test]
+    fn steady_state_throughput_is_n_plus_9() {
+        // §III-A: throughput is n + 9 cycles per query.
+        check(20, |rng| {
+            let n = rng.range(8, 512);
+            let dims = Dims::new(n, 64);
+            let q = 100;
+            let report = BasePipeline::new_untimed(dims).run_batch(q);
+            // makespan = fill (2 stages) + q * (n + 9)
+            let per_query = n as u64 + 9;
+            assert_eq!(report.makespan, 2 * per_query + q as u64 * per_query);
+        });
+    }
+
+    #[test]
+    fn three_queries_in_flight() {
+        // §III-A: "our proposed hardware can handle three queries at a
+        // time in a pipelined manner" — at steady state, the 4th query
+        // starts exactly when the 1st finishes.
+        let dims = Dims::new(100, 64);
+        let mut p = BasePipeline::new(dims);
+        let t: Vec<_> = (0..4).map(|_| p.push_query(0)).collect();
+        assert_eq!(t[3].start, t[0].finish);
+    }
+
+    #[test]
+    fn all_modules_equally_busy() {
+        let report = BasePipeline::new_untimed(Dims::paper()).run_batch(50);
+        let dp = report.busy_cycles[Module::DotProduct.index()];
+        let ex = report.busy_cycles[Module::Exponent.index()];
+        let out = report.busy_cycles[Module::Output.index()];
+        assert_eq!(dp, ex);
+        assert_eq!(ex, out);
+        assert_eq!(dp, 50 * (320 + 9));
+    }
+
+    #[test]
+    fn throughput_qps_at_paper_point() {
+        // n=320: one query per 329 cycles at 1 GHz ≈ 3.04 M queries/s.
+        let report = BasePipeline::new_untimed(Dims::paper()).run_batch(10_000);
+        let qps = report.throughput_qps();
+        assert!((2.9e6..3.1e6).contains(&qps), "{qps}");
+    }
+}

@@ -1,0 +1,102 @@
+//! Cycle-level model of the A³ accelerator (§III pipeline timing, §V
+//! approximation modules).
+//!
+//! The paper evaluates performance with a cycle-level simulator at
+//! 1 GHz; this module is our implementation of that simulator. The
+//! accelerator is a static, stall-free pipeline, so the model is a
+//! stage-occupancy simulation: each query occupies each module for a
+//! deterministic number of cycles, and a query enters a module at
+//! `max(query ready, module free)`. This reproduces the paper's closed
+//! forms exactly (validated in tests):
+//!
+//! * base pipeline — every module busy `n + 9` cycles per query ⇒
+//!   latency `3n + 27`, steady-state throughput one query per `n + 9`
+//!   cycles, three queries in flight (§III-A);
+//! * approximate pipeline — candidate selection `M`, dot product `C`,
+//!   post-scoring + exponent `K`, output `K` ⇒ latency `M + C + 2K + α`
+//!   with throughput limited by the candidate selector (§V-C).
+//!
+//! Per-module **activity counters** (busy cycles) feed the Table-I
+//! power numbers in [`crate::energy`] to produce Fig. 15's energy
+//! breakdown.
+
+pub mod approx_pipe;
+pub mod base;
+pub mod pipeline;
+pub mod sram;
+
+pub use approx_pipe::{ApproxPipeline, ApproxQuery};
+pub use base::BasePipeline;
+pub use pipeline::{Module, PipelineSim, QueryTiming, SimReport};
+pub use sram::SramModel;
+
+/// Problem dimensions for one attention context.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Dims {
+    pub n: usize,
+    pub d: usize,
+}
+
+impl Dims {
+    pub const fn new(n: usize, d: usize) -> Self {
+        Dims { n, d }
+    }
+
+    /// The paper's synthesis point.
+    pub fn paper() -> Self {
+        Dims::new(crate::PAPER_N, crate::PAPER_D)
+    }
+}
+
+/// Convert cycles at the accelerator clock (§VI-C: 1 GHz) to seconds.
+pub fn cycles_to_seconds(cycles: u64) -> f64 {
+    cycles as f64 / crate::CLOCK_HZ
+}
+
+/// Comprehension-time preprocessing cost for the approximate scheme
+/// (§IV-C): sorting each of the d key columns. The paper measures this
+/// on the host GPU and amortizes it over the n queries that share the
+/// key matrix in self-attention (BERT: 320). We model a host sort at
+/// `SORT_CYCLES_PER_ELEMENT · n·log2(n)·d` equivalent accelerator
+/// cycles, which lands the amortized overhead in the paper's reported
+/// range (≈7% conservative / ≈24% aggressive throughput reduction for
+/// BERT — validated in `experiments::fig14`). The constant reflects a
+/// *GPU-parallel* sort (the paper measures preprocessing on the host
+/// GPU): thousands of comparators working concurrently give an
+/// effective per-element cost well below one accelerator cycle.
+pub fn preprocess_cycles(dims: Dims) -> u64 {
+    const SORT_CYCLES_PER_ELEMENT: f64 = 0.025;
+    let n = dims.n as f64;
+    (SORT_CYCLES_PER_ELEMENT * n * n.log2().max(1.0) * dims.d as f64) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycles_to_seconds_at_1ghz() {
+        assert_eq!(cycles_to_seconds(1_000_000_000), 1.0);
+        assert_eq!(cycles_to_seconds(327), 327e-9);
+    }
+
+    #[test]
+    fn preprocess_scales_superlinearly_in_n() {
+        let small = preprocess_cycles(Dims::new(64, 64));
+        let big = preprocess_cycles(Dims::new(320, 64));
+        assert!(big > 5 * small);
+    }
+
+    #[test]
+    fn preprocess_amortized_lands_in_paper_band() {
+        // §VI-C "Preprocessing": amortized over n=320 queries, the
+        // overhead reduces conservative throughput by ~7% and
+        // aggressive by ~24%. Conservative per-query cost ≈ M = 160
+        // cycles ⇒ amortized preprocess should be ≈ 0.05–0.15 of it.
+        let dims = Dims::paper();
+        let per_query = preprocess_cycles(dims) as f64 / dims.n as f64;
+        let conservative_cost = (dims.n / 2) as f64;
+        let frac = per_query / conservative_cost;
+        assert!((0.03..0.30).contains(&frac), "amortized fraction {frac}");
+    }
+}

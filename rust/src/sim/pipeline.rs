@@ -1,0 +1,260 @@
+//! Generic stage-occupancy pipeline simulator.
+//!
+//! The A³ datapath never stalls mid-module and has no dynamic hazards:
+//! a query occupies each module for a deterministic cycle count
+//! (possibly data-dependent — C candidates, K kept rows — but known
+//! once the query's selection is computed). Simulating it therefore
+//! reduces to tracking, per module, the cycle at which it becomes free,
+//! and advancing each query through `enter = max(ready, free)`.
+//! This is exact for in-order pipelines and lets the simulator process
+//! millions of queries per second, which the serving experiments need.
+
+/// Identity of a hardware module (indexes activity/energy accounting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Module {
+    /// §V-A candidate selection (approximate pipeline only).
+    CandidateSelection,
+    /// §III module 1: d multipliers + adder tree.
+    DotProduct,
+    /// §V-B post-scoring selection (approximate pipeline only).
+    PostScoring,
+    /// §III module 2: two-LUT exponent + expsum accumulator.
+    Exponent,
+    /// §III module 3: divide + weighted accumulate.
+    Output,
+}
+
+impl Module {
+    pub const ALL: [Module; 5] = [
+        Module::CandidateSelection,
+        Module::DotProduct,
+        Module::PostScoring,
+        Module::Exponent,
+        Module::Output,
+    ];
+
+    pub fn index(self) -> usize {
+        match self {
+            Module::CandidateSelection => 0,
+            Module::DotProduct => 1,
+            Module::PostScoring => 2,
+            Module::Exponent => 3,
+            Module::Output => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Module::CandidateSelection => "candidate-selection",
+            Module::DotProduct => "dot-product",
+            Module::PostScoring => "post-scoring",
+            Module::Exponent => "exponent",
+            Module::Output => "output",
+        }
+    }
+}
+
+/// Timing of one query through the pipeline.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QueryTiming {
+    pub arrival: u64,
+    pub start: u64,
+    pub finish: u64,
+}
+
+impl QueryTiming {
+    /// Arrival-to-finish latency in cycles.
+    pub fn latency(&self) -> u64 {
+        self.finish - self.arrival
+    }
+
+    /// Time spent queueing before the first module.
+    pub fn queueing(&self) -> u64 {
+        self.start - self.arrival
+    }
+}
+
+/// Aggregate result of a pipeline simulation.
+#[derive(Clone, Debug, Default)]
+pub struct SimReport {
+    pub queries: usize,
+    /// Cycle at which the last query drained.
+    pub makespan: u64,
+    /// Busy cycles per module (Module::index()-indexed).
+    pub busy_cycles: [u64; 5],
+    pub timings: Vec<QueryTiming>,
+}
+
+impl SimReport {
+    /// Steady-state throughput in queries per second at `CLOCK_HZ`.
+    pub fn throughput_qps(&self) -> f64 {
+        if self.makespan == 0 {
+            return 0.0;
+        }
+        self.queries as f64 / super::cycles_to_seconds(self.makespan)
+    }
+
+    pub fn mean_latency_cycles(&self) -> f64 {
+        if self.timings.is_empty() {
+            return 0.0;
+        }
+        self.timings.iter().map(|t| t.latency() as f64).sum::<f64>() / self.timings.len() as f64
+    }
+
+    pub fn mean_latency_seconds(&self) -> f64 {
+        self.mean_latency_cycles() / crate::CLOCK_HZ
+    }
+
+    /// Utilization of a module over the makespan.
+    pub fn utilization(&self, m: Module) -> f64 {
+        if self.makespan == 0 {
+            return 0.0;
+        }
+        self.busy_cycles[m.index()] as f64 / self.makespan as f64
+    }
+}
+
+/// The stage-occupancy simulator: an ordered list of (module, cycles)
+/// stages per query.
+#[derive(Clone, Debug)]
+pub struct PipelineSim {
+    /// Cycle at which each module becomes free.
+    free_at: [u64; 5],
+    report: SimReport,
+    /// Record per-query timings (disable for huge runs to save memory).
+    record_timings: bool,
+}
+
+impl Default for PipelineSim {
+    fn default() -> Self {
+        Self::new(true)
+    }
+}
+
+impl PipelineSim {
+    pub fn new(record_timings: bool) -> Self {
+        PipelineSim {
+            free_at: [0; 5],
+            report: SimReport::default(),
+            record_timings,
+        }
+    }
+
+    /// Push one query through `stages` (in order), arriving at
+    /// `arrival`. Returns its timing.
+    pub fn push(&mut self, arrival: u64, stages: &[(Module, u64)]) -> QueryTiming {
+        let mut ready = arrival;
+        let mut start = None;
+        for &(module, cycles) in stages {
+            let idx = module.index();
+            let enter = ready.max(self.free_at[idx]);
+            if start.is_none() {
+                start = Some(enter);
+            }
+            let exit = enter + cycles;
+            self.free_at[idx] = exit;
+            self.report.busy_cycles[idx] += cycles;
+            ready = exit;
+        }
+        let timing = QueryTiming {
+            arrival,
+            start: start.unwrap_or(arrival),
+            finish: ready,
+        };
+        self.report.queries += 1;
+        self.report.makespan = self.report.makespan.max(ready);
+        if self.record_timings {
+            self.report.timings.push(timing);
+        }
+        timing
+    }
+
+    pub fn report(&self) -> &SimReport {
+        &self.report
+    }
+
+    pub fn into_report(self) -> SimReport {
+        self.report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_query_latency_is_sum_of_stages() {
+        let mut sim = PipelineSim::default();
+        let t = sim.push(
+            0,
+            &[
+                (Module::DotProduct, 10),
+                (Module::Exponent, 20),
+                (Module::Output, 30),
+            ],
+        );
+        assert_eq!(t.latency(), 60);
+        assert_eq!(sim.report().makespan, 60);
+    }
+
+    #[test]
+    fn back_to_back_queries_pipeline() {
+        // two queries, balanced 10-cycle stages: second finishes 10
+        // cycles after the first (classic pipelining).
+        let stages = [
+            (Module::DotProduct, 10),
+            (Module::Exponent, 10),
+            (Module::Output, 10),
+        ];
+        let mut sim = PipelineSim::default();
+        let t1 = sim.push(0, &stages);
+        let t2 = sim.push(0, &stages);
+        assert_eq!(t1.finish, 30);
+        assert_eq!(t2.finish, 40);
+        assert_eq!(t2.queueing(), 10);
+    }
+
+    #[test]
+    fn bottleneck_stage_sets_throughput() {
+        let stages = [
+            (Module::DotProduct, 5),
+            (Module::Exponent, 50), // bottleneck
+            (Module::Output, 5),
+        ];
+        let mut sim = PipelineSim::new(false);
+        for _ in 0..100 {
+            sim.push(0, &stages);
+        }
+        // makespan ≈ 100 * 50 + small pipeline fill
+        let makespan = sim.report().makespan;
+        assert!((5000..5100).contains(&makespan), "{makespan}");
+    }
+
+    #[test]
+    fn busy_cycles_accumulate() {
+        let mut sim = PipelineSim::default();
+        for _ in 0..7 {
+            sim.push(0, &[(Module::DotProduct, 3), (Module::Output, 4)]);
+        }
+        assert_eq!(sim.report().busy_cycles[Module::DotProduct.index()], 21);
+        assert_eq!(sim.report().busy_cycles[Module::Output.index()], 28);
+        assert_eq!(sim.report().busy_cycles[Module::Exponent.index()], 0);
+    }
+
+    #[test]
+    fn arrivals_respected() {
+        let mut sim = PipelineSim::default();
+        let t = sim.push(1000, &[(Module::DotProduct, 5)]);
+        assert_eq!(t.start, 1000);
+        assert_eq!(t.finish, 1005);
+    }
+
+    #[test]
+    fn utilization_fraction() {
+        let mut sim = PipelineSim::default();
+        sim.push(0, &[(Module::DotProduct, 25), (Module::Output, 75)]);
+        let r = sim.report();
+        assert_eq!(r.utilization(Module::DotProduct), 0.25);
+        assert_eq!(r.utilization(Module::Output), 0.75);
+    }
+}

@@ -1,0 +1,130 @@
+//! SRAM buffer model (§III-C "Offloading Mechanism" / "Choice of n and
+//! d").
+//!
+//! The accelerator holds the key and value matrices in two 20KB SRAMs
+//! and the sorted key copy in a 40KB SRAM (Table I). Matrices are
+//! copied in at comprehension time — off the query critical path — and
+//! when a workload's n exceeds the design point the tail rows live in
+//! DRAM behind a sequential prefetcher (the access pattern is streaming,
+//! so prefetch hides latency as long as bandwidth suffices).
+
+use super::Dims;
+
+/// Bytes-per-cycle of the host→accelerator copy port (PCIe-class link
+/// at 1 GHz: 16 B/cycle ≈ 16 GB/s).
+pub const COPY_BYTES_PER_CYCLE: u64 = 16;
+/// DRAM streaming bandwidth for the >SRAM spill path (§III-C), B/cycle.
+pub const DRAM_BYTES_PER_CYCLE: u64 = 32;
+
+/// One A³ unit's memory system at a given design point.
+#[derive(Clone, Copy, Debug)]
+pub struct SramModel {
+    /// Design-point capacity in rows (the synthesized n).
+    pub design: Dims,
+    /// Word width of a stored element in bits (sign + i + f).
+    pub element_bits: u32,
+}
+
+impl SramModel {
+    pub fn paper() -> Self {
+        SramModel {
+            design: Dims::paper(),
+            // i=4, f=4 + sign, padded to byte lanes in the SRAM macro
+            element_bits: 8,
+        }
+    }
+
+    /// Capacity of one matrix buffer in bytes (20KB at the paper point
+    /// — asserted in tests against Table I).
+    pub fn matrix_buffer_bytes(&self) -> usize {
+        self.design.n * self.design.d * self.element_bits as usize / 8
+    }
+
+    /// Sorted-key buffer bytes: value + row-id per entry (Table I 40KB).
+    pub fn sorted_buffer_bytes(&self) -> usize {
+        let row_bits = usize::BITS - (self.design.n - 1).leading_zeros();
+        self.design.n * self.design.d * ((self.element_bits + row_bits) as usize) / 8
+    }
+
+    /// Does a workload of `dims` fit entirely in SRAM?
+    pub fn fits(&self, dims: Dims) -> bool {
+        dims.n <= self.design.n && dims.d <= self.design.d
+    }
+
+    /// Cycles to copy a workload's K and V matrices into the buffers
+    /// (comprehension-time; excluded from query response latency, §III-C).
+    pub fn load_cycles(&self, dims: Dims) -> u64 {
+        let bytes = 2 * dims.n as u64 * dims.d as u64 * self.element_bits as u64 / 8;
+        bytes.div_ceil(COPY_BYTES_PER_CYCLE)
+    }
+
+    /// Cycles to copy one query vector in — the only transfer on the
+    /// query response path (§III-C).
+    pub fn query_copy_cycles(&self, dims: Dims) -> u64 {
+        let bytes = dims.d as u64 * self.element_bits as u64 / 8;
+        bytes.div_ceil(COPY_BYTES_PER_CYCLE)
+    }
+
+    /// Extra per-query streaming cycles when n overflows the SRAM: the
+    /// spilled rows of K and V must stream from DRAM each pass. Returns
+    /// 0 when the workload fits. The dot-product module consumes one
+    /// row per cycle; the prefetcher keeps up while
+    /// `row_bytes <= DRAM_BYTES_PER_CYCLE`, otherwise the stream is
+    /// bandwidth-limited.
+    pub fn spill_stall_cycles(&self, dims: Dims) -> u64 {
+        if self.fits(dims) {
+            return 0;
+        }
+        let spilled_rows = (dims.n - self.design.n) as u64;
+        let row_bytes = dims.d as u64 * self.element_bits as u64 / 8;
+        let cycles_per_row = row_bytes.div_ceil(DRAM_BYTES_PER_CYCLE);
+        // both K and V rows stream; overlap with compute hides one
+        // cycle per row (the consumption rate)
+        (2 * spilled_rows * cycles_per_row).saturating_sub(spilled_rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_buffers_match_table1() {
+        let m = SramModel::paper();
+        assert_eq!(m.matrix_buffer_bytes(), 20 * 1024); // 20KB (Table I)
+        // 40KB sorted-key buffer: 8-bit value + 9-bit row id = 17 bits
+        let sorted = m.sorted_buffer_bytes();
+        assert!((38 * 1024..=44 * 1024).contains(&sorted), "{sorted}");
+    }
+
+    #[test]
+    fn babi_and_wikimovies_fit() {
+        let m = SramModel::paper();
+        assert!(m.fits(Dims::new(50, 64)));
+        assert!(m.fits(Dims::new(186, 64)));
+        assert!(m.fits(Dims::new(320, 64)));
+        assert!(!m.fits(Dims::new(321, 64)));
+    }
+
+    #[test]
+    fn query_copy_is_tiny_vs_matrix_load() {
+        let m = SramModel::paper();
+        let dims = Dims::paper();
+        assert!(m.query_copy_cycles(dims) * 100 < m.load_cycles(dims));
+    }
+
+    #[test]
+    fn no_spill_inside_design_point() {
+        let m = SramModel::paper();
+        assert_eq!(m.spill_stall_cycles(Dims::new(320, 64)), 0);
+    }
+
+    #[test]
+    fn spill_grows_linearly_beyond_design_point() {
+        let m = SramModel::paper();
+        let s1 = m.spill_stall_cycles(Dims::new(320 + 100, 64));
+        let s2 = m.spill_stall_cycles(Dims::new(320 + 200, 64));
+        assert!(s1 > 0);
+        assert!((s2 as f64 / s1 as f64 - 2.0).abs() < 0.05);
+    }
+}

@@ -1,0 +1,239 @@
+//! Reader/writer for the A3TN named-tensor container — the interchange
+//! format between the python compile path and this runtime (the writer
+//! twin lives in `python/compile/tensorio.py`; format doc there).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 4] = b"A3TN";
+const VERSION: u32 = 1;
+
+/// A named tensor: either f32 or i32 data with a row-major shape.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::I32 { .. } => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            Tensor::F32 { .. } => bail!("tensor is f32, expected i32"),
+        }
+    }
+}
+
+/// An ordered name → tensor map (BTreeMap keeps write order stable).
+pub type Tensors = BTreeMap<String, Tensor>;
+
+fn read_exact(r: &mut impl Read, n: usize) -> Result<Vec<u8>> {
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+fn u32_le(r: &mut impl Read) -> Result<u32> {
+    let b = read_exact(r, 4)?;
+    Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+}
+
+/// Load an A3TN container.
+pub fn read_tensors(path: impl AsRef<Path>) -> Result<Tensors> {
+    let path = path.as_ref();
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    let magic = read_exact(&mut f, 4)?;
+    if magic != MAGIC {
+        bail!("{}: bad magic {:?}", path.display(), magic);
+    }
+    let version = u32_le(&mut f)?;
+    if version != VERSION {
+        bail!("{}: unsupported version {version}", path.display());
+    }
+    let count = u32_le(&mut f)?;
+    let mut out = Tensors::new();
+    for _ in 0..count {
+        let nlen = {
+            let b = read_exact(&mut f, 2)?;
+            u16::from_le_bytes([b[0], b[1]]) as usize
+        };
+        let name = String::from_utf8(read_exact(&mut f, nlen)?)?;
+        let head = read_exact(&mut f, 2)?;
+        let (dtype, ndim) = (head[0], head[1] as usize);
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(u32_le(&mut f)? as usize);
+        }
+        let n_elem: usize = shape.iter().product::<usize>().max(if ndim == 0 { 1 } else { 0 });
+        let raw = read_exact(&mut f, n_elem * 4)?;
+        let tensor = match dtype {
+            0 => Tensor::F32 {
+                shape,
+                data: raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            },
+            1 => Tensor::I32 {
+                shape,
+                data: raw
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            },
+            other => bail!("{name}: unknown dtype code {other}"),
+        };
+        out.insert(name, tensor);
+    }
+    Ok(out)
+}
+
+/// Write an A3TN container (used by tests and experiment result dumps).
+pub fn write_tensors(path: impl AsRef<Path>, tensors: &Tensors) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        f.write_all(&(name.len() as u16).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        let (code, shape): (u8, &[usize]) = match t {
+            Tensor::F32 { shape, .. } => (0, shape),
+            Tensor::I32 { shape, .. } => (1, shape),
+        };
+        f.write_all(&[code, shape.len() as u8])?;
+        for d in shape {
+            f.write_all(&(*d as u32).to_le_bytes())?;
+        }
+        match t {
+            Tensor::F32 { data, .. } => {
+                for v in data {
+                    f.write_all(&v.to_le_bytes())?;
+                }
+            }
+            Tensor::I32 { data, .. } => {
+                for v in data {
+                    f.write_all(&v.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Convenience accessors over a loaded container.
+pub trait TensorsExt {
+    fn f32s(&self, name: &str) -> Result<&[f32]>;
+    fn i32s(&self, name: &str) -> Result<&[i32]>;
+    fn shape_of(&self, name: &str) -> Result<&[usize]>;
+}
+
+impl TensorsExt for Tensors {
+    fn f32s(&self, name: &str) -> Result<&[f32]> {
+        self.get(name)
+            .with_context(|| format!("missing tensor {name:?}"))?
+            .as_f32()
+    }
+
+    fn i32s(&self, name: &str) -> Result<&[i32]> {
+        self.get(name)
+            .with_context(|| format!("missing tensor {name:?}"))?
+            .as_i32()
+    }
+
+    fn shape_of(&self, name: &str) -> Result<&[usize]> {
+        Ok(self
+            .get(name)
+            .with_context(|| format!("missing tensor {name:?}"))?
+            .shape())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("a3-tensorio-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn round_trip() {
+        let mut t = Tensors::new();
+        t.insert(
+            "a".into(),
+            Tensor::F32 {
+                shape: vec![2, 3],
+                data: vec![1.0, -2.5, 3.0, 0.0, 5.5, -6.25],
+            },
+        );
+        t.insert(
+            "b".into(),
+            Tensor::I32 {
+                shape: vec![4],
+                data: vec![-1, 0, 7, 42],
+            },
+        );
+        let p = tmpfile("roundtrip.bin");
+        write_tensors(&p, &t).unwrap();
+        let back = read_tensors(&p).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmpfile("bad.bin");
+        std::fs::write(&p, b"NOPE\x01\x00\x00\x00\x00\x00\x00\x00").unwrap();
+        assert!(read_tensors(&p).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let t = Tensors::new();
+        let p = tmpfile("empty.bin");
+        write_tensors(&p, &t).unwrap();
+        let back = read_tensors(&p).unwrap();
+        assert!(back.f32s("nope").is_err());
+    }
+
+    #[test]
+    fn artifacts_golden_readable_if_present() {
+        // Integration with the python writer: only runs post-`make artifacts`.
+        let path = crate::artifacts_dir().join("golden_attention.bin");
+        if !path.exists() {
+            return;
+        }
+        let g = read_tensors(&path).unwrap();
+        assert_eq!(g.shape_of("key").unwrap(), &[crate::PAPER_N, crate::PAPER_D]);
+        assert_eq!(g.f32s("key").unwrap().len(), crate::PAPER_N * crate::PAPER_D);
+        assert!(g.i32s("quant_score_q").unwrap().len() == crate::PAPER_N);
+    }
+}

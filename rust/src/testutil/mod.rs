@@ -1,0 +1,161 @@
+//! Test utilities: a deterministic RNG and a tiny property-test
+//! harness.
+//!
+//! The offline vendor set has neither `rand` nor `proptest`, so this
+//! module provides the minimum the test suite needs: SplitMix64 (the
+//! canonical 64-bit mixing generator), gaussian sampling via
+//! Box–Muller, and a `check` runner that executes a property over many
+//! seeded cases and reports the failing seed (no shrinking — the seed
+//! is the reproducer).
+
+/// SplitMix64 PRNG (Steele, Lea, Flood 2014). Deterministic, seedable,
+/// and good enough for test-data generation and workload synthesis.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e3779b97f4a7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, bound).
+    pub fn below(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0);
+        (self.next_u64() % bound as u64) as usize
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn gaussian(&mut self) -> f64 {
+        let u1 = (1.0 - self.f64()).max(f64::MIN_POSITIVE); // (0, 1]
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    pub fn gaussian_f32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.gaussian() as f32
+    }
+
+    /// A vector of standard-normal f32s scaled by `std`.
+    pub fn normal_vec(&mut self, len: usize, std: f32) -> Vec<f32> {
+        (0..len).map(|_| self.gaussian_f32(0.0, std)).collect()
+    }
+
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            xs.swap(i, self.below(i + 1));
+        }
+    }
+}
+
+/// Run `prop` over `cases` seeded cases; panic with the failing seed.
+///
+/// Usage:
+/// ```
+/// a3::testutil::check(100, |rng| {
+///     let x = rng.f64();
+///     assert!(x >= 0.0 && x < 1.0);
+/// });
+/// ```
+pub fn check(cases: u64, prop: impl Fn(&mut Rng)) {
+    for case in 0..cases {
+        let seed = 0xA3_5EED ^ (case.wrapping_mul(0x9e3779b97f4a7c15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed at case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Assert two float slices agree within `atol` + `rtol` * |want|.
+#[track_caller]
+pub fn assert_allclose(got: &[f32], want: &[f32], atol: f32, rtol: f32) {
+    assert_eq!(got.len(), want.len(), "length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * w.abs();
+        assert!(
+            (g - w).abs() <= tol,
+            "index {i}: got {g}, want {w} (|diff| {} > tol {tol})",
+            (g - w).abs()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        check(50, |rng| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Rng::new(7);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        check(20, |rng| {
+            let mut v: Vec<usize> = (0..50).collect();
+            rng.shuffle(&mut v);
+            let mut sorted = v.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn range_bounds() {
+        check(50, |rng| {
+            let x = rng.range(3, 9);
+            assert!((3..=9).contains(&x));
+        });
+    }
+}

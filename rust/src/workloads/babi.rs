@@ -1,0 +1,157 @@
+//! bAbI-style story generator — the rust twin of
+//! `python/compile/babi.py` (same vocabulary layout, same entity-moves-
+//! to-location structure). The *accuracy* experiments consume the
+//! python-exported test set so train/eval distributions match exactly;
+//! this generator exists for serving load generation and for tests that
+//! need unlimited fresh stories.
+
+use crate::testutil::Rng;
+
+pub const ACTORS: [&str; 6] = ["john", "mary", "sandra", "daniel", "bill", "fred"];
+pub const VERBS: [&str; 4] = ["moved", "went", "journeyed", "travelled"];
+pub const LOCATIONS: [&str; 8] = [
+    "garden", "kitchen", "hallway", "bathroom", "office", "bedroom", "park", "school",
+];
+pub const FILLER: [&str; 4] = ["to", "the", "where", "is"];
+
+pub const MAX_SENT: usize = 50;
+pub const MAX_WORDS: usize = 5;
+pub const PAD: i32 = -1;
+
+/// Vocabulary in the exact order of `python/compile/babi.py::VOCAB`.
+pub fn vocab() -> Vec<&'static str> {
+    let mut v = vec!["<nil>"];
+    v.extend(ACTORS);
+    v.extend(VERBS);
+    v.extend(LOCATIONS);
+    v.extend(FILLER);
+    v
+}
+
+/// Vocab id helpers (offsets follow the vocab() layout).
+pub fn actor_id(i: usize) -> i32 {
+    1 + i as i32
+}
+pub fn verb_id(i: usize) -> i32 {
+    1 + ACTORS.len() as i32 + i as i32
+}
+pub fn location_id(i: usize) -> i32 {
+    1 + (ACTORS.len() + VERBS.len()) as i32 + i as i32
+}
+pub fn filler_id(i: usize) -> i32 {
+    1 + (ACTORS.len() + VERBS.len() + LOCATIONS.len()) as i32 + i as i32
+}
+
+/// One generated story: PAD-padded token sentences, a query, the answer
+/// location id, and the supporting sentence index.
+#[derive(Clone, Debug)]
+pub struct Story {
+    /// `n_sent * MAX_WORDS` row-major token ids (PAD-padded rows).
+    pub sentences: Vec<i32>,
+    pub n_sent: usize,
+    pub query: [i32; MAX_WORDS],
+    pub answer: i32,
+    pub support: usize,
+}
+
+impl Story {
+    pub fn sentence(&self, i: usize) -> &[i32] {
+        &self.sentences[i * MAX_WORDS..(i + 1) * MAX_WORDS]
+    }
+}
+
+/// Generate one story: entities move between locations; the question
+/// asks where some mentioned entity is (answer = its last location).
+pub fn generate_story(rng: &mut Rng, min_sent: usize, max_sent: usize) -> Story {
+    let n_sent = rng.range(min_sent, max_sent);
+    let mut sentences = vec![PAD; n_sent * MAX_WORDS];
+    // last location + sentence index per actor
+    let mut last: [Option<(usize, usize)>; 6] = [None; 6];
+    for i in 0..n_sent {
+        let a = rng.below(ACTORS.len());
+        let v = rng.below(VERBS.len());
+        let l = rng.below(LOCATIONS.len());
+        let s = &mut sentences[i * MAX_WORDS..(i + 1) * MAX_WORDS];
+        s[0] = actor_id(a);
+        s[1] = verb_id(v);
+        s[2] = filler_id(0); // "to"
+        s[3] = filler_id(1); // "the"
+        s[4] = location_id(l);
+        last[a] = Some((l, i));
+    }
+    let mentioned: Vec<usize> = (0..ACTORS.len()).filter(|&a| last[a].is_some()).collect();
+    let a = mentioned[rng.below(mentioned.len())];
+    let (loc, support) = last[a].unwrap();
+    let mut query = [PAD; MAX_WORDS];
+    query[0] = filler_id(2); // "where"
+    query[1] = filler_id(3); // "is"
+    query[2] = actor_id(a);
+    Story {
+        sentences,
+        n_sent,
+        query,
+        answer: location_id(loc),
+        support,
+    }
+}
+
+/// A batch of stories with the paper's length profile (avg n ≈ 20).
+pub fn generate_batch(rng: &mut Rng, count: usize) -> Vec<Story> {
+    (0..count).map(|_| generate_story(rng, 6, MAX_SENT)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_matches_python_layout() {
+        let v = vocab();
+        assert_eq!(v.len(), 23);
+        assert_eq!(v[0], "<nil>");
+        assert_eq!(v[actor_id(0) as usize], "john");
+        assert_eq!(v[verb_id(0) as usize], "moved");
+        assert_eq!(v[location_id(0) as usize], "garden");
+        assert_eq!(v[filler_id(0) as usize], "to");
+        assert_eq!(v[filler_id(3) as usize], "is");
+    }
+
+    #[test]
+    fn vocab_file_agreement_if_artifacts_present() {
+        let path = crate::artifacts_dir().join("vocab.txt");
+        if !path.exists() {
+            return;
+        }
+        let text = std::fs::read_to_string(path).unwrap();
+        let words: Vec<&str> = text.split_whitespace().collect();
+        assert_eq!(words, vocab());
+    }
+
+    #[test]
+    fn story_invariants() {
+        crate::testutil::check(50, |rng| {
+            let s = generate_story(rng, 6, MAX_SENT);
+            assert!((6..=MAX_SENT).contains(&s.n_sent));
+            // supporting sentence is the last mention of the actor
+            let actor = s.query[2];
+            let mentions: Vec<usize> = (0..s.n_sent)
+                .filter(|&i| s.sentence(i)[0] == actor)
+                .collect();
+            assert_eq!(*mentions.last().unwrap(), s.support);
+            // answer is that sentence's location
+            assert_eq!(s.sentence(s.support)[4], s.answer);
+        });
+    }
+
+    #[test]
+    fn average_length_near_paper() {
+        let mut rng = crate::testutil::Rng::new(1);
+        let stories = generate_batch(&mut rng, 2000);
+        let avg: f64 =
+            stories.iter().map(|s| s.n_sent as f64).sum::<f64>() / stories.len() as f64;
+        // uniform 6..=50 -> avg 28; paper's task mix averages 20. The
+        // dimensioning bound (max 50) is what matters for the hardware.
+        assert!((20.0..35.0).contains(&avg), "{avg}");
+        assert!(stories.iter().all(|s| s.n_sent <= MAX_SENT));
+    }
+}

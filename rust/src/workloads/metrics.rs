@@ -1,0 +1,125 @@
+//! Accuracy metrics shared by the Figs. 11–13 experiments:
+//! classification accuracy (bAbI), mean average precision (WikiMovies),
+//! and true top-k inclusion (Fig. 13b).
+
+/// Fraction of exact matches.
+pub fn accuracy(predicted: &[usize], truth: &[usize]) -> f64 {
+    assert_eq!(predicted.len(), truth.len());
+    if predicted.is_empty() {
+        return 0.0;
+    }
+    let hits = predicted.iter().zip(truth).filter(|(p, t)| p == t).count();
+    hits as f64 / predicted.len() as f64
+}
+
+/// Average precision of a ranked list against a relevant set.
+pub fn average_precision(ranked: &[usize], relevant: &[usize]) -> f64 {
+    if relevant.is_empty() {
+        return 0.0;
+    }
+    let rel: std::collections::HashSet<_> = relevant.iter().collect();
+    let mut hits = 0usize;
+    let mut sum = 0.0;
+    for (rank, item) in ranked.iter().enumerate() {
+        if rel.contains(item) {
+            hits += 1;
+            sum += hits as f64 / (rank + 1) as f64;
+        }
+    }
+    sum / relevant.len() as f64
+}
+
+/// Mean average precision over many queries.
+pub fn mean_average_precision(ranked: &[Vec<usize>], relevant: &[Vec<usize>]) -> f64 {
+    assert_eq!(ranked.len(), relevant.len());
+    if ranked.is_empty() {
+        return 0.0;
+    }
+    ranked
+        .iter()
+        .zip(relevant)
+        .map(|(r, t)| average_precision(r, t))
+        .sum::<f64>()
+        / ranked.len() as f64
+}
+
+/// Indices of the k largest entries, descending.
+pub fn topk_indices(scores: &[f64], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    idx.truncate(k);
+    idx
+}
+
+/// Fig. 13b's metric: fraction of the true top-k rows (by exact
+/// attention score) present in the selected set.
+pub fn topk_recall(exact_scores: &[f64], selected: &[usize], k: usize) -> f64 {
+    let top = topk_indices(exact_scores, k.min(exact_scores.len()));
+    if top.is_empty() {
+        return 1.0;
+    }
+    let sel: std::collections::HashSet<_> = selected.iter().collect();
+    top.iter().filter(|i| sel.contains(i)).count() as f64 / top.len() as f64
+}
+
+/// F1-style output-fidelity proxy for SQuAD (DESIGN.md §4): maps the
+/// cosine similarity between the approximate and exact attention
+/// outputs into [0, 1]; 1.0 when identical. Downstream span-F1 degrades
+/// monotonically with this quantity, which is what Figs. 11–13 need
+/// (relative accuracy deltas, not absolute SQuAD scores).
+pub fn output_fidelity(approx: &[f32], exact: &[f32]) -> f64 {
+    assert_eq!(approx.len(), exact.len());
+    let dot: f64 = approx.iter().zip(exact).map(|(a, e)| *a as f64 * *e as f64).sum();
+    let na: f64 = approx.iter().map(|a| (*a as f64).powi(2)).sum::<f64>().sqrt();
+    let ne: f64 = exact.iter().map(|e| (*e as f64).powi(2)).sum::<f64>().sqrt();
+    if na == 0.0 && ne == 0.0 {
+        return 1.0;
+    }
+    (dot / (na * ne + 1e-30)).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[1, 2, 3], &[1, 9, 3]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn average_precision_perfect_and_worst() {
+        assert_eq!(average_precision(&[5, 6, 7], &[5, 6]), 1.0);
+        // relevant at ranks 2,3 -> (1/2 + 2/3)/2
+        let ap = average_precision(&[9, 5, 6], &[5, 6]);
+        assert!((ap - (0.5 + 2.0 / 3.0) / 2.0).abs() < 1e-12);
+        assert_eq!(average_precision(&[1, 2], &[7]), 0.0);
+    }
+
+    #[test]
+    fn map_averages() {
+        let m = mean_average_precision(
+            &[vec![1], vec![2]],
+            &[vec![1], vec![3]],
+        );
+        assert_eq!(m, 0.5);
+    }
+
+    #[test]
+    fn topk_and_recall() {
+        let scores = [0.1, 5.0, 3.0, 4.0];
+        assert_eq!(topk_indices(&scores, 2), vec![1, 3]);
+        assert_eq!(topk_recall(&scores, &[1, 2], 2), 0.5);
+        assert_eq!(topk_recall(&scores, &[1, 3], 2), 1.0);
+        assert_eq!(topk_recall(&scores, &[], 2), 0.0);
+    }
+
+    #[test]
+    fn fidelity_bounds() {
+        assert_eq!(output_fidelity(&[1.0, 0.0], &[1.0, 0.0]), 1.0);
+        assert_eq!(output_fidelity(&[0.0, 0.0], &[0.0, 0.0]), 1.0);
+        let orth = output_fidelity(&[1.0, 0.0], &[0.0, 1.0]);
+        assert!(orth.abs() < 1e-12);
+    }
+}

@@ -1,0 +1,113 @@
+//! The paper's three evaluation workloads (§VI-A), rebuilt as
+//! generators (DESIGN.md §4 documents each substitution):
+//!
+//! * [`babi`] — bAbI-style QA stories for MemN2N (avg n = 20, max 50);
+//!   the *accuracy* experiments use the python-exported test set +
+//!   trained weights, this generator feeds load tests and serving.
+//! * [`wikimovies`] — WikiMovies-style knowledge-base retrieval for
+//!   KV-MemN2N (n = 186): structured fact embeddings with distractors,
+//!   scored by MAP.
+//! * [`squad`] — SQuAD/BERT-style self-attention traces (n = 320,
+//!   320 queries per key matrix): planted topic structure so attention
+//!   concentrates on a few relevant positions, scored by top-k recall
+//!   and output fidelity.
+//! * [`metrics`] — accuracy / MAP / top-k recall shared by the
+//!   experiments.
+
+pub mod babi;
+pub mod metrics;
+pub mod squad;
+pub mod wikimovies;
+
+use crate::sim::Dims;
+
+/// Which paper workload an experiment runs (§VI-A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WorkloadKind {
+    /// MemN2N on bAbI QA: avg n = 20, max n = 50, d = 64.
+    Babi,
+    /// KV-MemN2N on WikiMovies: avg n = 186, d = 64.
+    WikiMovies,
+    /// BERT (base) on SQuAD v1.1: n = 320 (sequence length), d = 64.
+    Squad,
+}
+
+impl WorkloadKind {
+    pub const ALL: [WorkloadKind; 3] =
+        [WorkloadKind::Babi, WorkloadKind::WikiMovies, WorkloadKind::Squad];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WorkloadKind::Babi => "MemN2N/bAbI",
+            WorkloadKind::WikiMovies => "KV-MemN2N/WikiMovies",
+            WorkloadKind::Squad => "BERT/SQuAD",
+        }
+    }
+
+    /// Average number of attention targets (paper §VI-A).
+    pub fn avg_n(self) -> usize {
+        match self {
+            WorkloadKind::Babi => 20,
+            WorkloadKind::WikiMovies => 186,
+            WorkloadKind::Squad => 320,
+        }
+    }
+
+    /// Maximum n (the dimensioning value).
+    pub fn max_n(self) -> usize {
+        match self {
+            WorkloadKind::Babi => 50,
+            WorkloadKind::WikiMovies => 186,
+            WorkloadKind::Squad => 320,
+        }
+    }
+
+    pub fn dims(self) -> Dims {
+        Dims::new(self.avg_n(), crate::PAPER_D)
+    }
+
+    /// Queries sharing one key matrix (self-attention reuse): BERT runs
+    /// n queries against the same K (§IV-C), QA models one.
+    pub fn queries_per_kv(self) -> usize {
+        match self {
+            WorkloadKind::Squad => 320,
+            _ => 1,
+        }
+    }
+
+    /// Accuracy metric name used in the paper's figures.
+    pub fn metric_name(self) -> &'static str {
+        match self {
+            WorkloadKind::Babi => "accuracy",
+            WorkloadKind::WikiMovies => "MAP",
+            WorkloadKind::Squad => "F1(top-5 fidelity)",
+        }
+    }
+
+    /// The paper's Fig. 13b reports true top-2 inclusion for bAbI and
+    /// top-5 for the other two.
+    pub fn topk(self) -> usize {
+        match self {
+            WorkloadKind::Babi => 2,
+            _ => 5,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_dimensions() {
+        assert_eq!(WorkloadKind::Babi.avg_n(), 20);
+        assert_eq!(WorkloadKind::Babi.max_n(), 50);
+        assert_eq!(WorkloadKind::WikiMovies.avg_n(), 186);
+        assert_eq!(WorkloadKind::Squad.avg_n(), 320);
+        assert_eq!(WorkloadKind::Squad.queries_per_kv(), 320);
+        for w in WorkloadKind::ALL {
+            assert_eq!(w.dims().d, 64);
+            assert!(w.max_n() <= crate::PAPER_N);
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! Cross-language golden tests: the rust implementations must
+//! reproduce the python oracle outputs exported by `make artifacts`
+//! (DESIGN.md §7 "rust vs python").
+//!
+//! All tests skip cleanly when artifacts/ has not been built.
+
+use a3::approx::{greedy_select, postscore_select, SortedColumns};
+use a3::attention::{attention_batch, attention_masked, quantized_attention_paper, KvPair};
+use a3::tensorio::{read_tensors, Tensors, TensorsExt};
+use a3::testutil::assert_allclose;
+
+fn golden() -> Option<Tensors> {
+    let path = a3::artifacts_dir().join("golden_attention.bin");
+    if !path.exists() {
+        eprintln!("skipping golden tests: run `make artifacts`");
+        return None;
+    }
+    Some(read_tensors(path).unwrap())
+}
+
+fn kv_from(g: &Tensors) -> KvPair {
+    KvPair::new(
+        a3::PAPER_N,
+        a3::PAPER_D,
+        g.f32s("key").unwrap().to_vec(),
+        g.f32s("value").unwrap().to_vec(),
+    )
+}
+
+#[test]
+fn base_attention_matches_python() {
+    let Some(g) = golden() else { return };
+    let kv = kv_from(&g);
+    let queries = g.f32s("query_batch").unwrap();
+    let got = attention_batch(&kv, queries);
+    assert_allclose(&got, g.f32s("out_base").unwrap(), 2e-5, 2e-5);
+}
+
+#[test]
+fn masked_attention_matches_python() {
+    let Some(g) = golden() else { return };
+    let kv = kv_from(&g);
+    let queries = g.f32s("query_batch").unwrap();
+    let mask = g.f32s("mask").unwrap();
+    let want = g.f32s("out_masked").unwrap();
+    let (n, d) = (kv.n, kv.d);
+    for b in 0..8 {
+        let selected: Vec<usize> = (0..n).filter(|&i| mask[b * n + i] > 0.0).collect();
+        let got = attention_masked(&kv, &queries[b * d..(b + 1) * d], &selected);
+        assert_allclose(&got, &want[b * d..(b + 1) * d], 2e-5, 2e-5);
+    }
+}
+
+#[test]
+fn quantized_pipeline_bit_exact_vs_python() {
+    let Some(g) = golden() else { return };
+    let kv = kv_from(&g);
+    let q1 = &g.f32s("query_batch").unwrap()[..a3::PAPER_D];
+    let (out, trace) = quantized_attention_paper(&kv, q1);
+
+    // integer plane must agree exactly
+    assert_eq!(trace.dot_q, g.i32s("quant_dot_q").unwrap());
+    assert_eq!(trace.score_q, g.i32s("quant_score_q").unwrap());
+    assert_eq!(trace.expsum_q, g.i32s("quant_expsum_q").unwrap()[0]);
+    assert_eq!(trace.weight_q, g.i32s("quant_weight_q").unwrap());
+    assert_eq!(trace.out_q, g.i32s("quant_out_q").unwrap());
+    // float plane: same grid point
+    assert_allclose(&out, g.f32s("out_quant").unwrap(), 1e-7, 0.0);
+}
+
+#[test]
+fn greedy_candidates_match_python_across_m() {
+    let Some(g) = golden() else { return };
+    let kv = kv_from(&g);
+    let q1 = &g.f32s("query_batch").unwrap()[..a3::PAPER_D];
+    let sorted = SortedColumns::preprocess(&kv.key, kv.n, kv.d);
+    for m in [16usize, 64, 160, 320] {
+        let res = greedy_select(&sorted, q1, m);
+        let want: Vec<usize> = g
+            .i32s(&format!("greedy_cand_m{m}"))
+            .unwrap()
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v != 0)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(res.candidates, want, "candidate set diverged at M={m}");
+        // greedy scores agree on the f64 plane
+        let scores = g.f32s(&format!("greedy_score_m{m}")).unwrap();
+        for (i, &s) in scores.iter().enumerate() {
+            assert!(
+                (res.greedy_score[i] as f32 - s).abs() <= 1e-4 * (1.0 + s.abs()),
+                "greedy score {i} at M={m}: {} vs {s}",
+                res.greedy_score[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn postscore_keeps_match_python_across_t() {
+    let Some(g) = golden() else { return };
+    let kv = kv_from(&g);
+    let q1 = &g.f32s("query_batch").unwrap()[..a3::PAPER_D];
+    let all: Vec<usize> = (0..kv.n).collect();
+    let scores: Vec<f64> = (0..kv.n)
+        .map(|i| {
+            kv.key_row(i)
+                .iter()
+                .zip(q1)
+                .map(|(k, q)| *k as f64 * *q as f64)
+                .sum()
+        })
+        .collect();
+    for t in [1.0, 5.0, 10.0, 20.0] {
+        let kept = postscore_select(&scores, &all, t);
+        let want: Vec<usize> = g
+            .i32s(&format!("postscore_keep_t{}", t as i32))
+            .unwrap()
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v != 0)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(kept, want, "post-scoring keep set diverged at T={t}%");
+    }
+}
+
+#[test]
+fn pjrt_hlo_kernels_match_rust_and_python() {
+    let Some(g) = golden() else { return };
+    let Ok(mut engine) = a3::runtime::PjrtEngine::new() else {
+        eprintln!("skipping: PJRT unavailable");
+        return;
+    };
+    let kv = kv_from(&g);
+    let queries = g.f32s("query_batch").unwrap();
+    // the AOT pallas kernel (b8) vs the python golden
+    let got = engine
+        .attention(
+            a3::runtime::ArtifactId::AttentionB8,
+            queries,
+            &kv.key,
+            &kv.value,
+            kv.n,
+            kv.d,
+        )
+        .unwrap();
+    assert_allclose(&got, g.f32s("out_base").unwrap(), 1e-4, 1e-4);
+
+    // the AOT quantized kernel bit-matches the rust integer pipeline
+    let q1 = &queries[..a3::PAPER_D];
+    let got_q = engine
+        .run_f32(
+            a3::runtime::ArtifactId::AttentionQuant,
+            &[(q1, &[64]), (&kv.key, &[320, 64]), (&kv.value, &[320, 64])],
+        )
+        .unwrap();
+    assert_allclose(&got_q, g.f32s("out_quant").unwrap(), 1e-7, 0.0);
+}

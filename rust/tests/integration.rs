@@ -1,0 +1,158 @@
+//! Cross-module integration tests: the full stack wired together —
+//! workload generators → approximation → simulator → energy model →
+//! serving coordinator → (when artifacts exist) the PJRT runtime.
+
+use a3::coordinator::{KvContext, Scheduler, ServeConfig, Server, UnitConfig, UnitKind};
+use a3::energy::{attribute, Table1};
+use a3::experiments::fig14::{simulate_approx, simulate_base};
+use a3::experiments::sweep::{evaluate, EvalBudget};
+use a3::model::AttentionBackend;
+use a3::sim::Dims;
+use a3::testutil::Rng;
+use a3::workloads::WorkloadKind;
+
+fn budget() -> EvalBudget {
+    EvalBudget { babi_stories: 32, kb_episodes: 1, squad_queries: 32, seed: 11 }
+}
+
+#[test]
+fn end_to_end_speed_accuracy_tradeoff_is_monotone() {
+    // the paper's core claim chained through the whole stack: more
+    // aggressive approximation -> fewer cycles AND fewer joules, with
+    // bounded metric loss.
+    let exact = evaluate(WorkloadKind::Squad, AttentionBackend::Exact, budget()).unwrap();
+    let cons = evaluate(WorkloadKind::Squad, AttentionBackend::conservative(), budget()).unwrap();
+    let aggr = evaluate(WorkloadKind::Squad, AttentionBackend::aggressive(), budget()).unwrap();
+
+    let base_r = simulate_base(&exact.samples);
+    let cons_r = simulate_approx(&cons.samples);
+    let aggr_r = simulate_approx(&aggr.samples);
+    assert!(cons_r.makespan < base_r.makespan);
+    assert!(aggr_r.makespan < cons_r.makespan);
+
+    let t1 = Table1::paper();
+    let e_base = attribute(&t1, &base_r).total_j();
+    let e_cons = attribute(&t1, &cons_r).total_j();
+    let e_aggr = attribute(&t1, &aggr_r).total_j();
+    assert!(e_cons < e_base);
+    assert!(e_aggr < e_cons);
+
+    assert!(exact.metric >= cons.metric - 1e-9);
+    assert!(cons.metric >= aggr.metric - 0.05);
+    assert!(aggr.metric > 0.5, "aggressive collapsed: {}", aggr.metric);
+}
+
+#[test]
+fn serving_through_coordinator_preserves_attention_semantics() {
+    // serve a batch through the full coordinator, then recompute each
+    // response directly — outputs must match exactly (base units).
+    let mut rng = Rng::new(21);
+    let (n, d) = (128, 64);
+    let kv = a3::attention::KvPair::new(
+        n,
+        d,
+        rng.normal_vec(n * d, 1.0),
+        rng.normal_vec(n * d, 1.0),
+    );
+    let ctx = KvContext::new(0, kv.clone());
+    let sched = Scheduler::replicated(
+        UnitConfig { kind: UnitKind::Base, dims: Dims::new(n, d) },
+        2,
+    );
+    let mut server = Server::new(vec![ctx], sched, ServeConfig::default());
+    let report = server.serve_random(64, 5);
+    assert_eq!(report.metrics.completed, 64);
+
+    let mut rng2 = Rng::new(5);
+    for i in 0..64u64 {
+        let q = rng2.normal_vec(d, 1.0);
+        let want = a3::attention::attention(&kv, &q);
+        let got = &report.responses.iter().find(|r| r.id == i).unwrap().output;
+        a3::testutil::assert_allclose(got, &want, 1e-6, 0.0);
+    }
+}
+
+#[test]
+fn scaling_units_reaches_gpu_class_throughput() {
+    // §VI-C: 6–7 conservative approximate units ≈ Titan V on BERT.
+    let cons = evaluate(WorkloadKind::Squad, AttentionBackend::conservative(), budget()).unwrap();
+    let per_unit_qps = {
+        let r = simulate_approx(&cons.samples);
+        r.queries as f64 / a3::sim::cycles_to_seconds(r.makespan)
+    };
+    let gpu_qps = 1.0
+        / a3::baseline::CostModel::titan_v()
+            .seconds_per_query(Dims::paper(), 320);
+    let units_needed = (gpu_qps / per_unit_qps).ceil();
+    assert!(
+        (2.0..=12.0).contains(&units_needed),
+        "units to match GPU: {units_needed} (per-unit {per_unit_qps:.0} qps, gpu {gpu_qps:.0})"
+    );
+}
+
+#[test]
+fn memn2n_served_through_pjrt_answer_graph_if_artifacts_present() {
+    // End-to-end: bAbI story -> rust embeddings -> AOT HLO answer graph
+    // via PJRT -> same answer as the rust forward pass.
+    let Ok(model) = a3::model::Memn2n::load_default(AttentionBackend::Exact) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let Ok(test) = a3::model::BabiTestSet::load_default() else { return };
+    let Ok(mut engine) = a3::runtime::PjrtEngine::new() else { return };
+
+    let mut agree = 0;
+    let total = 24.min(test.count);
+    for s in 0..total {
+        let n_sent = test.n_sent[s] as usize;
+        let problem =
+            model.story_problem(test.story_tokens(s), n_sent, test.max_words, test.story_query(s));
+        let rust_pred = model.predict(&problem, None);
+
+        // pad memories to the graph's fixed 50 rows
+        let d = model.weights.d;
+        let mut m = vec![0.0f32; 50 * d];
+        let mut c = vec![0.0f32; 50 * d];
+        m[..n_sent * d].copy_from_slice(&problem.kv.key);
+        c[..n_sent * d].copy_from_slice(&problem.kv.value);
+        let mut mask = vec![0.0f32; 50];
+        mask[..n_sent].fill(1.0);
+        let logits = engine.memn2n_answer(&m, &c, &problem.query, &mask).unwrap();
+        let pjrt_answer = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pjrt_answer == rust_pred.answer {
+            agree += 1;
+        }
+        a3::testutil::assert_allclose(&logits, &rust_pred.logits, 5e-4, 5e-4);
+    }
+    assert_eq!(agree, total, "PJRT and rust answers diverged");
+}
+
+#[test]
+fn babi_generator_feeds_model_with_sane_accuracy() {
+    // rust-generated stories (not the python test set) through the
+    // trained model: distribution match means accuracy stays high.
+    let Ok(model) = a3::model::Memn2n::load_default(AttentionBackend::Exact) else {
+        return;
+    };
+    let mut rng = Rng::new(33);
+    let stories = a3::workloads::babi::generate_batch(&mut rng, 100);
+    let mut hits = 0;
+    for s in &stories {
+        let problem = model.story_problem(
+            &s.sentences,
+            s.n_sent,
+            a3::workloads::babi::MAX_WORDS,
+            &s.query,
+        );
+        let pred = model.predict(&problem, None);
+        if pred.answer as i32 == s.answer {
+            hits += 1;
+        }
+    }
+    assert!(hits >= 85, "accuracy on rust-generated stories: {hits}/100");
+}

@@ -2,6 +2,7 @@
 //! platforms) and time the cycle simulator itself (it must never be
 //! the bottleneck of serving experiments).
 
+use a3::baseline::{measure_host_attention, measure_host_attention_batch};
 use a3::bench::{bench, black_box, budget};
 use a3::experiments::fig14;
 use a3::experiments::sweep::EvalBudget;
@@ -10,6 +11,25 @@ use a3::sim::{ApproxPipeline, ApproxQuery, BasePipeline, Dims};
 fn main() {
     let (a, b) = fig14::run(EvalBudget::default()).expect("run `make artifacts` first");
     println!("{a}\n{b}");
+
+    // The measured CPU bar behind the normalizations: the fused kernel
+    // per query, and the tiled + pooled executor over a batch (the
+    // honest "what this host can actually serve" floor).
+    println!("-- measured host attention (fused kernel) --");
+    let m1 = measure_host_attention(Dims::paper(), 0.2);
+    println!(
+        "per-query fused       : {:>10.3} µs/query  ({:.0} queries/s)",
+        m1.seconds_per_query * 1e6,
+        m1.qps()
+    );
+    for batch in [8usize, 64] {
+        let mb = measure_host_attention_batch(Dims::paper(), batch, 0, 0.2);
+        println!(
+            "batch-{batch:<3} tiled+pool  : {:>10.3} µs/query  ({:.0} queries/s)",
+            mb.seconds_per_query * 1e6,
+            mb.qps()
+        );
+    }
 
     println!("-- cycle simulator throughput --");
     let dims = Dims::paper();

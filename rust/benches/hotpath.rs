@@ -1,12 +1,34 @@
 //! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
 //! every L3 primitive on the serving path, timed in isolation.
+//!
+//! The `attention …` lines form the before/after story for the fused
+//! kernel rewrite: "attention f32" is the public entry point (now a
+//! thin wrapper over the fused one-pass kernel), "seed three-pass"
+//! reconstructs the pre-kernel semantics (dot_scores → softmax →
+//! weighted_sum, three K/V passes and three allocations per query) as
+//! the in-run baseline, and the batch lines show query tiling and the
+//! thread-pool executor amortizing K/V streaming across a batch.
 
-use a3::approx::{greedy_select, postscore_select, SortedColumns};
-use a3::attention::{attention, quantized_attention_paper, ExpLut, KvPair};
+use std::sync::LazyLock;
+
+use a3::approx::{
+    greedy_select, greedy_select_scratch, postscore_select, GreedyOpts, GreedyScratch,
+    SortedColumns,
+};
+use a3::attention::{
+    attention, dot_scores, kernel, quantized_attention_into, quantized_attention_paper,
+    quantized_attention_prequant, softmax_weights, weighted_sum, ExpLut, KvPair, QuantKv,
+    Workspace,
+};
 use a3::bench::{bench, black_box, budget};
-use a3::coordinator::{KvContext, Scheduler, UnitConfig, UnitKind};
-use a3::sim::{BasePipeline, Dims, PipelineSim};
+use a3::coordinator::{KvContext, Query, Scheduler, UnitConfig, UnitKind};
+use a3::sim::{BasePipeline, Dims, Module, PipelineSim};
 use a3::testutil::Rng;
+
+/// LUT resident in "SRAM" (built once, used across iterations), as on
+/// the serving path. Declared before `main` so its use sites read
+/// top-down.
+static LUT: LazyLock<ExpLut> = LazyLock::new(ExpLut::paper);
 
 fn main() {
     let mut rng = Rng::new(7);
@@ -16,39 +38,85 @@ fn main() {
     let q = rng.normal_vec(d, 1.0);
     let b = budget();
 
+    // -- single-query attention: wrapper, zero-alloc kernel, seed -----
     println!("{}", bench("attention f32 n=320 d=64", b, || {
         black_box(attention(&kv, &q));
     }));
+    let mut out1 = vec![0.0f32; d];
+    println!("{}", bench("attention fused kernel (zero-alloc into)", b, || {
+        kernel::attention_into(&kv, &q, &mut out1);
+        black_box(&mut out1);
+    }));
+    println!("{}", bench("attention seed three-pass (reference modules)", b, || {
+        black_box(weighted_sum(&kv, &softmax_weights(&dot_scores(&kv, &q))));
+    }));
+
+    // -- batched attention: seed loop vs tiling vs tiling + threads --
+    let batch8 = rng.normal_vec(8 * d, 1.0);
+    println!("{}", bench("attention batch-8 seed per-query loop", b, || {
+        for qq in batch8.chunks_exact(d) {
+            black_box(weighted_sum(&kv, &softmax_weights(&dot_scores(&kv, qq))));
+        }
+    }));
+    let mut out8 = vec![0.0f32; 8 * d];
+    let mut ws = Workspace::new();
+    println!("{}", bench("attention batch-8 tiled (zero-alloc)", b, || {
+        kernel::attention_batch_into(&kv, &batch8, &mut out8, &mut ws);
+        black_box(&mut out8);
+    }));
+    println!("{}", bench("attention batch-8 parallel (pool)", b, || {
+        kernel::parallel_attention_batch_into(&kv, &batch8, &mut out8, 0);
+        black_box(&mut out8);
+    }));
+    let batch64 = rng.normal_vec(64 * d, 1.0);
+    let mut out64 = vec![0.0f32; 64 * d];
+    println!("{}", bench("attention batch-64 parallel (pool)", b, || {
+        kernel::parallel_attention_batch_into(&kv, &batch64, &mut out64, 0);
+        black_box(&mut out64);
+    }));
+
+    // -- quantized datapath ------------------------------------------
     println!("{}", bench("quantized_attention (quantize K/V per call)", b, || {
         black_box(quantized_attention_paper(&kv, &q));
     }));
-    let qkv = a3::attention::QuantKv::paper(&kv);
-    let lut = a3::attention::ExpLut::paper();
+    let qkv = QuantKv::paper(&kv);
     println!("{}", bench("quantized_attention (SRAM-resident QuantKv)", b, || {
-        black_box(a3::attention::quantized_attention_prequant(&qkv, &q, &lut));
+        black_box(quantized_attention_prequant(&qkv, &q, &LUT));
+    }));
+    println!("{}", bench("quantized_attention (zero-alloc Workspace)", b, || {
+        quantized_attention_into(&qkv, &q, &LUT, &mut ws, &mut out1);
+        black_box(&mut out1);
     }));
     println!("{}", bench("exp LUT (single)", b, || {
-        let lut = black_box(&LUT);
+        let lut = black_box(&*LUT);
         black_box(lut.exp_neg(black_box(1234)));
     }));
+
+    // -- approximation path ------------------------------------------
     println!("{}", bench("column-sort preprocess", b, || {
         black_box(SortedColumns::preprocess(&kv.key, n, d));
     }));
     println!("{}", bench("greedy_select M=160", b, || {
         black_box(greedy_select(&sorted, &q, 160));
     }));
+    let mut gs = GreedyScratch::new();
+    println!("{}", bench("greedy_select M=160 (zero-alloc scratch)", b, || {
+        black_box(greedy_select_scratch(&sorted, &q, 160, GreedyOpts::default(), &mut gs));
+    }));
     let scores: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7).sin() * 4.0).collect();
     let cands: Vec<usize> = (0..n).collect();
     println!("{}", bench("postscore_select T=5%", b, || {
         black_box(postscore_select(&scores, &cands, 5.0));
     }));
+
+    // -- simulator + serving -----------------------------------------
     println!("{}", bench("PipelineSim push (5-stage)", b, || {
         let mut sim = PipelineSim::new(false);
         for _ in 0..100 {
             sim.push(0, &[
-                (a3::sim::Module::DotProduct, 329),
-                (a3::sim::Module::Exponent, 329),
-                (a3::sim::Module::Output, 329),
+                (Module::DotProduct, 329),
+                (Module::Exponent, 329),
+                (Module::Output, 329),
             ]);
         }
         black_box(sim.report().makespan);
@@ -59,8 +127,8 @@ fn main() {
     // context is registered once (comprehension time) — keep it out of
     // the timed loop, exactly as the serving path does.
     let ctx = KvContext::new(0, kv.clone());
-    let queries: Vec<a3::coordinator::Query> = (0..8)
-        .map(|i| a3::coordinator::Query {
+    let queries: Vec<Query> = (0..8)
+        .map(|i| Query {
             id: i,
             context: 0,
             embedding: vec![0.1; d],
@@ -75,5 +143,3 @@ fn main() {
         black_box(s.dispatch(&ctx, &queries));
     }));
 }
-
-static LUT: std::sync::LazyLock<ExpLut> = std::sync::LazyLock::new(ExpLut::paper);

@@ -131,34 +131,116 @@ impl Default for GreedyOpts {
     }
 }
 
+/// Reusable scratch state for [`greedy_select_scratch`]: per-row
+/// scores, the per-column pointer walks, the two heap buffers, and the
+/// result candidate list. Every buffer keeps its capacity across
+/// calls, so steady-state candidate selection performs zero heap
+/// allocations. One scratch per thread.
+#[derive(Debug, Default)]
+pub struct GreedyScratch {
+    greedy: Vec<f64>,
+    max_pos: Vec<isize>,
+    min_pos: Vec<isize>,
+    step: Vec<isize>,
+    maxq_buf: Vec<Entry>,
+    minq_buf: Vec<MinEntry>,
+    candidates: Vec<usize>,
+}
+
+impl GreedyScratch {
+    pub const fn new() -> Self {
+        GreedyScratch {
+            greedy: Vec::new(),
+            max_pos: Vec::new(),
+            min_pos: Vec::new(),
+            step: Vec::new(),
+            maxq_buf: Vec::new(),
+            minq_buf: Vec::new(),
+            candidates: Vec::new(),
+        }
+    }
+
+    /// Rows selected by the last [`greedy_select_scratch`] call.
+    pub fn candidates(&self) -> &[usize] {
+        &self.candidates
+    }
+
+    /// Per-row greedy scores of the last call.
+    pub fn greedy_score(&self) -> &[f64] {
+        &self.greedy
+    }
+}
+
 /// Run the greedy candidate search for `m_iters` iterations (the
 /// paper's exact algorithm — see [`greedy_select_opts`] for ablations).
 pub fn greedy_select(sorted: &SortedColumns, query: &[f32], m_iters: usize) -> GreedyResult {
     greedy_select_opts(sorted, query, m_iters, GreedyOpts::default())
 }
 
-/// Greedy candidate search with ablation switches.
+thread_local! {
+    static SCRATCH: std::cell::RefCell<GreedyScratch> =
+        const { std::cell::RefCell::new(GreedyScratch::new()) };
+}
+
+/// Greedy candidate search with ablation switches. Runs on a
+/// thread-local [`GreedyScratch`] and allocates only the returned
+/// candidate/score vectors; use [`greedy_select_scratch`] directly on
+/// hot paths that can hold their own scratch.
 pub fn greedy_select_opts(
     sorted: &SortedColumns,
     query: &[f32],
     m_iters: usize,
     opts: GreedyOpts,
 ) -> GreedyResult {
+    SCRATCH.with(|scratch| {
+        let scratch = &mut scratch.borrow_mut();
+        let stats = greedy_select_scratch(sorted, query, m_iters, opts, scratch);
+        GreedyResult {
+            candidates: scratch.candidates.clone(),
+            greedy_score: scratch.greedy.clone(),
+            stats,
+        }
+    })
+}
+
+/// The zero-allocation core of the greedy search: identical selection
+/// semantics to [`greedy_select_opts`] (including heap tie-breaking),
+/// with every intermediate — and the results, readable via
+/// [`GreedyScratch::candidates`] / [`GreedyScratch::greedy_score`] —
+/// living in the caller's scratch.
+pub fn greedy_select_scratch(
+    sorted: &SortedColumns,
+    query: &[f32],
+    m_iters: usize,
+    opts: GreedyOpts,
+    scratch: &mut GreedyScratch,
+) -> GreedyStats {
     assert_eq!(query.len(), sorted.d);
     let n = sorted.n;
     let d = sorted.d;
     let n_isize = n as isize;
 
-    let mut greedy = vec![0.0f64; n];
+    let GreedyScratch {
+        greedy,
+        max_pos,
+        min_pos,
+        step,
+        maxq_buf,
+        minq_buf,
+        candidates,
+    } = scratch;
+
+    greedy.clear();
+    greedy.resize(n, 0.0);
     let mut stats = GreedyStats::default();
     let mut cum = 0.0f64;
 
     // Per-column pointer walks: position within the sorted column and
     // step direction (the query sign decides which end of the sorted
     // column yields the largest product — Fig. 7 lines 10-11).
-    let mut max_pos: Vec<isize> = Vec::with_capacity(d);
-    let mut min_pos: Vec<isize> = Vec::with_capacity(d);
-    let mut step: Vec<isize> = Vec::with_capacity(d);
+    max_pos.clear();
+    min_pos.clear();
+    step.clear();
     for &q in query {
         if q > 0.0 {
             max_pos.push(0);
@@ -183,8 +265,10 @@ pub fn greedy_select_opts(
         })
     };
 
-    let mut maxq: BinaryHeap<Entry> = BinaryHeap::with_capacity(d + 1);
-    let mut minq: BinaryHeap<MinEntry> = BinaryHeap::with_capacity(d + 1);
+    // BinaryHeap::from / into_vec round-trips reuse the buffers'
+    // capacity, so the heaps allocate nothing once warmed up.
+    let mut maxq: BinaryHeap<Entry> = BinaryHeap::from(std::mem::take(maxq_buf));
+    let mut minq: BinaryHeap<MinEntry> = BinaryHeap::from(std::mem::take(minq_buf));
     for c in 0..d {
         if let Some(e) = entry_at(c, max_pos[c]) {
             maxq.push(e);
@@ -237,12 +321,17 @@ pub fn greedy_select_opts(
         }
     }
 
-    let candidates: Vec<usize> = (0..n).filter(|&r| greedy[r] > 0.0).collect();
-    GreedyResult {
-        candidates,
-        greedy_score: greedy,
-        stats,
-    }
+    // hand the heap buffers back for the next call
+    let mut buf = maxq.into_vec();
+    buf.clear();
+    *maxq_buf = buf;
+    let mut buf = minq.into_vec();
+    buf.clear();
+    *minq_buf = buf;
+
+    candidates.clear();
+    candidates.extend((0..n).filter(|&r| greedy[r] > 0.0));
+    stats
 }
 
 #[cfg(test)]
@@ -364,6 +453,29 @@ mod tests {
             .map(|(i, _)| i)
             .collect();
         assert_eq!(res.candidates, want);
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_runs() {
+        // the zero-allocation core must give identical selections when
+        // its buffers are reused across differently-shaped problems
+        check(30, |rng: &mut Rng| {
+            let (n, d) = (rng.range(4, 48), rng.range(2, 16));
+            let key = rng.normal_vec(n * d, 1.0);
+            let sorted = SortedColumns::preprocess(&key, n, d);
+            let mut scratch = GreedyScratch::new();
+            for _ in 0..3 {
+                let q = rng.normal_vec(d, 1.0);
+                let m = rng.range(1, 2 * n);
+                let want = greedy_select(&sorted, &q, m);
+                let stats =
+                    greedy_select_scratch(&sorted, &q, m, GreedyOpts::default(), &mut scratch);
+                assert_eq!(scratch.candidates(), &want.candidates[..]);
+                assert_eq!(scratch.greedy_score(), &want.greedy_score[..]);
+                assert_eq!(stats.iterations, want.stats.iterations);
+                assert_eq!(stats.multiplies, want.stats.multiplies);
+            }
+        });
     }
 
     #[test]

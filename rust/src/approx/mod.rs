@@ -17,7 +17,10 @@ pub mod greedy;
 pub mod postscore;
 pub mod preprocess;
 
-pub use greedy::{greedy_select, greedy_select_opts, GreedyOpts, GreedyResult, GreedyStats};
+pub use greedy::{
+    greedy_select, greedy_select_opts, greedy_select_scratch, GreedyOpts, GreedyResult,
+    GreedyScratch, GreedyStats,
+};
 pub use postscore::{postscore_select, threshold_t};
 pub use preprocess::SortedColumns;
 

@@ -1,0 +1,754 @@
+//! Fused, zero-allocation, tiled attention kernel core.
+//!
+//! The seed implementation of [`super::reference::attention`] made
+//! three full passes over K/V per query (`dot_scores` →
+//! `softmax_weights` → `weighted_sum`) and allocated three `Vec`s per
+//! call; `attention_batch` then repeated all of that serially per
+//! query. A³'s whole premise (§II-C) is that attention is a
+//! memory-streaming computation, so the software baseline should
+//! stream K/V optimally too. This module is that baseline:
+//!
+//! * **One pass over K/V** via the *online softmax* recurrence
+//!   (flash-attention style, cf. SNIPPETS §1). Holding a running
+//!   maximum `m`, denominator `l`, and output accumulator `acc`,
+//!   each key/value row updates the state as
+//!
+//!   ```text
+//!   s_i = k_i · q
+//!   if s_i > m:   c = e^(m - s_i);  acc *= c;  l *= c;  m = s_i
+//!   p_i = e^(s_i - m)
+//!   l   += p_i
+//!   acc += p_i * v_i
+//!   out  = acc / l          (after the last row)
+//!   ```
+//!
+//!   which is algebraically identical to max-subtracted softmax
+//!   (module 1+2+3 of Fig. 5) but reads each K and V row exactly once
+//!   and needs no score/weight arrays at all.
+//!
+//! * **A cache-blocked dot-product micro-kernel** ([`dot_f32`] /
+//!   [`dot_i32`]): eight independent accumulators unrolled so the
+//!   compiler may keep the reduction in SIMD lanes (a strict
+//!   sequential f32 sum is not reassociable and cannot vectorize).
+//!   Shared by the reference, masked, and quantized datapaths.
+//!
+//! * **Query-tiled batch execution** ([`attention_batch_into`]):
+//!   blocks of [`QUERY_BLOCK`] queries are driven through K/V tiles of
+//!   [`KV_TILE_ROWS`] rows, so each K/V tile is loaded from memory
+//!   once per *block* instead of once per *query*. Row order per query
+//!   is unchanged, so the tiled result is bit-identical to the fused
+//!   single-query path.
+//!
+//! * **A [`Workspace`] scratch-buffer API** so the batch, masked,
+//!   quantized and greedy paths perform **zero heap allocations in
+//!   steady state**: every intermediate lives in caller-owned buffers
+//!   that retain their capacity across calls.
+//!
+//! * **A persistent [`Pool`] of worker threads** and
+//!   [`parallel_attention_batch_into`], which shards a query batch
+//!   across cores. A parked-worker pool (not `thread::spawn` per call)
+//!   keeps dispatch overhead in the microseconds, so even the
+//!   coordinator's 8-query batches win.
+
+use std::cell::{Cell, RefCell};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use super::KvPair;
+
+/// Key/value rows per cache tile in batch execution. 32 rows at d = 64
+/// is 8 KB of K plus 8 KB of V — comfortably L1-resident alongside a
+/// query block and its accumulators.
+pub const KV_TILE_ROWS: usize = 32;
+
+/// Queries per block in tiled batch execution (matches the AOT kernel
+/// batch and the coordinator's default batch cap).
+pub const QUERY_BLOCK: usize = 8;
+
+/// Below this many multiply-accumulates (`batch · n · d`), a batch is
+/// executed on the calling thread: the pool round-trip would cost more
+/// than it saves.
+const PARALLEL_MIN_MACS: usize = 1 << 17;
+
+// ---------------------------------------------------------------------------
+// micro-kernels
+// ---------------------------------------------------------------------------
+
+/// Dot product with eight independent accumulators.
+///
+/// The unroll explicitly reassociates the reduction, which is what
+/// permits SIMD codegen; the final combine order is fixed (pairwise)
+/// so results are deterministic across calls and platforms with the
+/// same FP semantics.
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "dot operand length mismatch");
+    let split = a.len() - a.len() % 8;
+    let mut acc = [0.0f32; 8];
+    for (ca, cb) in a[..split].chunks_exact(8).zip(b[..split].chunks_exact(8)) {
+        for k in 0..8 {
+            acc[k] += ca[k] * cb[k];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in a[split..].iter().zip(&b[split..]) {
+        tail += x * y;
+    }
+    ((acc[0] + acc[4]) + (acc[2] + acc[6])) + ((acc[1] + acc[5]) + (acc[3] + acc[7])) + tail
+}
+
+/// Integer dot product, same unroll. Integer addition is exact, so the
+/// result is identical to a sequential sum — the quantized datapath
+/// stays bit-accurate against the python oracle.
+#[inline]
+pub fn dot_i32(a: &[i32], b: &[i32]) -> i32 {
+    assert_eq!(a.len(), b.len(), "dot operand length mismatch");
+    let split = a.len() - a.len() % 8;
+    let mut acc = [0i32; 8];
+    for (ca, cb) in a[..split].chunks_exact(8).zip(b[..split].chunks_exact(8)) {
+        for k in 0..8 {
+            acc[k] += ca[k] * cb[k];
+        }
+    }
+    let mut tail = 0i32;
+    for (x, y) in a[split..].iter().zip(&b[split..]) {
+        tail += x * y;
+    }
+    acc.iter().sum::<i32>() + tail
+}
+
+/// One online-softmax step: fold row (`score`, `value`) into the
+/// running (max, denominator, accumulator) state.
+#[inline]
+fn online_update(m: &mut f32, l: &mut f32, acc: &mut [f32], score: f32, value: &[f32]) {
+    if score > *m {
+        // rescale history to the new max; (m - score).exp() is exactly
+        // 0.0 on the first row (m = -inf), zeroing the empty state
+        let c = (*m - score).exp();
+        for o in acc.iter_mut() {
+            *o *= c;
+        }
+        *l *= c;
+        *m = score;
+    }
+    let p = (score - *m).exp();
+    *l += p;
+    for (o, v) in acc.iter_mut().zip(value) {
+        *o += p * v;
+    }
+}
+
+/// Divide the accumulator through by the softmax denominator. A zero
+/// denominator (empty K/V) leaves the zeroed accumulator untouched,
+/// matching the reference semantics for `n = 0`.
+#[inline]
+fn finalize(acc: &mut [f32], denom: f32) {
+    if denom > 0.0 {
+        let inv = 1.0 / denom;
+        for o in acc.iter_mut() {
+            *o *= inv;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fused kernels
+// ---------------------------------------------------------------------------
+
+/// Fused one-pass attention for a single query, writing into `out`.
+/// Reads each K and V row exactly once; performs no heap allocation.
+pub fn attention_into(kv: &KvPair, query: &[f32], out: &mut [f32]) {
+    assert_eq!(query.len(), kv.d, "query dimension mismatch");
+    assert_eq!(out.len(), kv.d, "output dimension mismatch");
+    out.fill(0.0);
+    let mut m = f32::NEG_INFINITY;
+    let mut l = 0.0f32;
+    for i in 0..kv.n {
+        let s = dot_f32(kv.key_row(i), query);
+        online_update(&mut m, &mut l, out, s, kv.value_row(i));
+    }
+    finalize(out, l);
+}
+
+/// Fused attention restricted to `selected` rows (the approximate
+/// pipeline's post-selection semantics): rows outside the selection get
+/// exactly zero weight, an empty selection yields zeros. One pass over
+/// the selected K/V rows, no heap allocation.
+pub fn attention_masked_into(kv: &KvPair, query: &[f32], selected: &[usize], out: &mut [f32]) {
+    assert_eq!(query.len(), kv.d, "query dimension mismatch");
+    assert_eq!(out.len(), kv.d, "output dimension mismatch");
+    out.fill(0.0);
+    if selected.is_empty() {
+        return;
+    }
+    let mut m = f32::NEG_INFINITY;
+    let mut l = 0.0f32;
+    for &i in selected {
+        let s = dot_f32(kv.key_row(i), query);
+        online_update(&mut m, &mut l, out, s, kv.value_row(i));
+    }
+    finalize(out, l);
+}
+
+/// Reusable scratch buffers for the batch, quantized, and masked hot
+/// paths. Buffers keep their capacity across calls, so steady-state
+/// execution allocates nothing. One `Workspace` per thread; the
+/// convenience wrappers in [`super::reference`] use a thread-local one
+/// (see [`with_workspace`]).
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// Per-query running maxima for the active query block.
+    m: Vec<f32>,
+    /// Per-query running denominators for the active query block.
+    l: Vec<f32>,
+    /// Quantized query scratch (the `q_q` vector of Fig. 5 module 1).
+    pub(crate) qq: Vec<i32>,
+    /// Quantized per-row scratch: dot products, overwritten by scores.
+    pub(crate) row_q: Vec<i32>,
+    /// Quantized output accumulator (Q(i + log2 n, 3f) plane).
+    pub(crate) out_q: Vec<i32>,
+}
+
+impl Workspace {
+    pub const fn new() -> Self {
+        Workspace {
+            m: Vec::new(),
+            l: Vec::new(),
+            qq: Vec::new(),
+            row_q: Vec::new(),
+            out_q: Vec::new(),
+        }
+    }
+}
+
+thread_local! {
+    static WORKSPACE: RefCell<Workspace> = const { RefCell::new(Workspace::new()) };
+}
+
+/// Run `f` with this thread's persistent [`Workspace`]. Do not call
+/// re-entrantly from inside `f` (the workspace is exclusively
+/// borrowed for the duration).
+pub fn with_workspace<R>(f: impl FnOnce(&mut Workspace) -> R) -> R {
+    WORKSPACE.with(|ws| f(&mut ws.borrow_mut()))
+}
+
+/// Query-tiled batch attention: `queries` is row-major `b × d`, `out`
+/// the same shape. Queries are processed in blocks of [`QUERY_BLOCK`]
+/// against K/V tiles of [`KV_TILE_ROWS`] rows, so each K/V tile is
+/// streamed from memory once per block rather than once per query.
+///
+/// Per-query row order is still `0..n`, so every output is
+/// bit-identical to [`attention_into`] on that query.
+pub fn attention_batch_into(kv: &KvPair, queries: &[f32], out: &mut [f32], ws: &mut Workspace) {
+    let d = kv.d;
+    assert_eq!(queries.len() % d, 0, "queries are not a multiple of d");
+    assert_eq!(out.len(), queries.len(), "output shape mismatch");
+    for (qblock, oblock) in queries
+        .chunks(QUERY_BLOCK * d)
+        .zip(out.chunks_mut(QUERY_BLOCK * d))
+    {
+        let bsz = qblock.len() / d;
+        ws.m.clear();
+        ws.m.resize(bsz, f32::NEG_INFINITY);
+        ws.l.clear();
+        ws.l.resize(bsz, 0.0);
+        oblock.fill(0.0);
+        let mut t0 = 0;
+        while t0 < kv.n {
+            let t1 = (t0 + KV_TILE_ROWS).min(kv.n);
+            for j in 0..bsz {
+                let q = &qblock[j * d..(j + 1) * d];
+                let acc = &mut oblock[j * d..(j + 1) * d];
+                let (mut m, mut l) = (ws.m[j], ws.l[j]);
+                for i in t0..t1 {
+                    let s = dot_f32(kv.key_row(i), q);
+                    online_update(&mut m, &mut l, acc, s, kv.value_row(i));
+                }
+                ws.m[j] = m;
+                ws.l[j] = l;
+            }
+            t0 = t1;
+        }
+        for j in 0..bsz {
+            finalize(&mut oblock[j * d..(j + 1) * d], ws.l[j]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// parallel batch executor
+// ---------------------------------------------------------------------------
+
+/// A job handed to pool workers: a type-erased `Fn(usize)` plus the
+/// number of chunks to cover. The raw pointer is only dereferenced
+/// while [`Pool::run`] is blocked waiting for completion, which keeps
+/// the borrow alive.
+#[derive(Clone, Copy)]
+struct Job {
+    func: unsafe fn(*const (), usize),
+    ctx: *const (),
+    chunks: usize,
+}
+
+// Safety: `ctx` points at an `F: Sync` owned by the `run` caller, which
+// does not return until every chunk has finished executing.
+unsafe impl Send for Job {}
+
+struct PoolState {
+    job: Option<Job>,
+    next_chunk: usize,
+    remaining: usize,
+    /// First panic payload raised by any chunk of the current job;
+    /// re-thrown on the submitting thread once the job drains.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+    shutdown: bool,
+}
+
+/// Mark a chunk finished (panicked or not) and wake the submitter when
+/// the job drains. Shared by workers and the submitting thread so a
+/// panicking chunk can never leave `remaining` stuck above zero.
+fn finish_chunk(
+    shared: &PoolShared,
+    result: std::thread::Result<()>,
+) -> std::sync::MutexGuard<'_, PoolState> {
+    let mut st = shared.state.lock().unwrap();
+    if let Err(payload) = result {
+        st.panic.get_or_insert(payload);
+    }
+    st.remaining -= 1;
+    if st.remaining == 0 {
+        st.job = None;
+        shared.done_cv.notify_all();
+    }
+    st
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+}
+
+/// A persistent pool of parked worker threads for data-parallel chunk
+/// execution. Unlike `std::thread::scope` + spawn, dispatching a job
+/// costs a couple of condvar wakes instead of thread creation, which
+/// is what makes parallelism pay off even for the coordinator's small
+/// 8-query batches.
+pub struct Pool {
+    shared: Arc<PoolShared>,
+    /// Serializes concurrent `run` callers (one job at a time).
+    submit: Mutex<()>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+thread_local! {
+    /// True on pool worker threads, and on any thread while it is
+    /// inside `Pool::run` — both must execute nested `run` calls
+    /// inline (the submit mutex is not reentrant).
+    static IN_POOL_CONTEXT: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Restores `IN_POOL_CONTEXT` when a submitting `run` call exits,
+/// including by unwind.
+struct PoolContextGuard;
+
+impl Drop for PoolContextGuard {
+    fn drop(&mut self) {
+        IN_POOL_CONTEXT.with(|f| f.set(false));
+    }
+}
+
+impl Pool {
+    /// Spawn a pool with `workers` parked threads. `Pool::new(0)` is a
+    /// valid degenerate pool that runs everything inline.
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                job: None,
+                next_chunk: 0,
+                remaining: 0,
+                panic: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("a3-kernel-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawning kernel pool worker")
+            })
+            .collect();
+        Pool { shared, submit: Mutex::new(()), workers: handles }
+    }
+
+    /// Executor count including the submitting thread.
+    pub fn parallelism(&self) -> usize {
+        self.workers.len() + 1
+    }
+
+    /// Run `f(0), f(1), …, f(chunks - 1)` across the pool (the caller
+    /// participates too), returning once all chunks have completed.
+    /// Each chunk runs exactly once; ordering across chunks is
+    /// unspecified. Nested calls — from a pool worker or from inside a
+    /// chunk on the submitting thread — run inline, so accidental
+    /// nesting cannot deadlock. A panicking chunk is re-thrown on the
+    /// submitting thread after the job drains (the pool itself stays
+    /// usable).
+    pub fn run<F: Fn(usize) + Sync>(&self, chunks: usize, f: &F) {
+        if chunks == 0 {
+            return;
+        }
+        if self.workers.is_empty() || chunks == 1 || IN_POOL_CONTEXT.with(Cell::get) {
+            for c in 0..chunks {
+                f(c);
+            }
+            return;
+        }
+
+        unsafe fn trampoline<F: Fn(usize)>(ctx: *const (), chunk: usize) {
+            (*(ctx as *const F))(chunk);
+        }
+
+        let _serial = self.submit.lock().unwrap();
+        IN_POOL_CONTEXT.with(|flag| flag.set(true));
+        let _context = PoolContextGuard;
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(st.job.is_none(), "pool job leaked from a prior run");
+            st.job = Some(Job {
+                func: trampoline::<F>,
+                ctx: f as *const F as *const (),
+                chunks,
+            });
+            st.next_chunk = 0;
+            st.remaining = chunks;
+            st.panic = None;
+        }
+        self.shared.work_cv.notify_all();
+
+        // The submitter works through chunks alongside the workers.
+        loop {
+            let grabbed = {
+                let mut st = self.shared.state.lock().unwrap();
+                if st.next_chunk < chunks {
+                    let c = st.next_chunk;
+                    st.next_chunk += 1;
+                    Some(c)
+                } else {
+                    None
+                }
+            };
+            let Some(c) = grabbed else { break };
+            let result = catch_unwind(AssertUnwindSafe(|| f(c)));
+            finish_chunk(&self.shared, result);
+        }
+
+        let mut st = self.shared.state.lock().unwrap();
+        while st.job.is_some() {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        let panic = st.panic.take();
+        drop(st);
+        if let Some(payload) = panic {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    IN_POOL_CONTEXT.with(|f| f.set(true));
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if st.shutdown {
+            return;
+        }
+        let grabbed = match st.job {
+            Some(job) if st.next_chunk < job.chunks => {
+                let c = st.next_chunk;
+                st.next_chunk += 1;
+                Some((job, c))
+            }
+            _ => None,
+        };
+        match grabbed {
+            Some((job, c)) => {
+                drop(st);
+                // Safety: the submitting `run` call blocks until
+                // `remaining` hits zero, so `ctx` outlives this call.
+                // A panic is caught and re-thrown on the submitter, so
+                // `remaining` always reaches zero and the worker lives.
+                let result = catch_unwind(AssertUnwindSafe(|| unsafe {
+                    (job.func)(job.ctx, c)
+                }));
+                st = finish_chunk(shared, result);
+            }
+            None => {
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        }
+    }
+}
+
+/// The process-wide kernel pool, sized to the host's parallelism
+/// (capped at 8 executors — attention batches see no benefit beyond
+/// that at paper dimensions).
+pub fn global_pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let cpus = std::thread::available_parallelism().map_or(1, |p| p.get());
+        Pool::new(cpus.clamp(1, 8) - 1)
+    })
+}
+
+/// Parallel tiled batch attention: shards the `b × d` query batch into
+/// contiguous per-executor ranges and runs [`attention_batch_into`] on
+/// each via the global [`Pool`]. `threads = 0` uses the pool's full
+/// parallelism. Small batches (under [`PARALLEL_MIN_MACS`]
+/// multiply-accumulates) run on the calling thread.
+///
+/// Outputs are bit-identical to [`attention_into`] per query
+/// regardless of the thread count or sharding.
+pub fn parallel_attention_batch_into(
+    kv: &KvPair,
+    queries: &[f32],
+    out: &mut [f32],
+    threads: usize,
+) {
+    let d = kv.d;
+    assert_eq!(queries.len() % d, 0, "queries are not a multiple of d");
+    assert_eq!(out.len(), queries.len(), "output shape mismatch");
+    let b = queries.len() / d;
+    let pool = global_pool();
+    let executors = if threads == 0 { pool.parallelism() } else { threads };
+    let executors = executors.min(b.max(1));
+    if executors <= 1 || b * kv.n * d < PARALLEL_MIN_MACS {
+        return with_workspace(|ws| attention_batch_into(kv, queries, out, ws));
+    }
+    // Contiguous per-chunk query/output shards. Each Mutex is locked
+    // exactly once, by the single executor that claims that chunk.
+    let per = b.div_ceil(executors) * d;
+    let shards: Vec<Mutex<(&[f32], &mut [f32])>> = queries
+        .chunks(per)
+        .zip(out.chunks_mut(per))
+        .map(Mutex::new)
+        .collect();
+    pool.run(shards.len(), &|c| {
+        let mut shard = shards[c].lock().unwrap();
+        let (q, o) = &mut *shard;
+        let q: &[f32] = q;
+        let o: &mut [f32] = o;
+        with_workspace(|ws| attention_batch_into(kv, q, o, ws));
+    });
+}
+
+/// Owned-output convenience form of [`parallel_attention_batch_into`].
+pub fn parallel_attention_batch(kv: &KvPair, queries: &[f32], threads: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; queries.len()];
+    parallel_attention_batch_into(kv, queries, &mut out, threads);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::random_kv;
+    use super::*;
+    use crate::testutil::{assert_allclose, check, Rng};
+
+    /// The seed three-pass semantics, kept here as an independent
+    /// oracle for the fused kernel.
+    fn naive_attention(kv: &KvPair, q: &[f32]) -> Vec<f32> {
+        let scores: Vec<f32> = (0..kv.n)
+            .map(|i| kv.key_row(i).iter().zip(q).map(|(k, x)| k * x).sum())
+            .collect();
+        let max = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = scores.iter().map(|&s| (s - max).exp()).collect();
+        let sum: f32 = exps.iter().sum();
+        let mut out = vec![0.0f32; kv.d];
+        for (i, &e) in exps.iter().enumerate() {
+            let w = e / sum;
+            for (o, v) in out.iter_mut().zip(kv.value_row(i)) {
+                *o += w * v;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn dot_kernels_match_sequential() {
+        check(100, |rng: &mut Rng| {
+            let len = rng.range(0, 40);
+            let a = rng.normal_vec(len, 1.0);
+            let b = rng.normal_vec(len, 1.0);
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot_f32(&a, &b) - want).abs() <= 1e-4 * (1.0 + want.abs()));
+            let ai: Vec<i32> = a.iter().map(|&x| (x * 100.0) as i32).collect();
+            let bi: Vec<i32> = b.iter().map(|&x| (x * 100.0) as i32).collect();
+            let want_i: i32 = ai.iter().zip(&bi).map(|(x, y)| x * y).sum();
+            assert_eq!(dot_i32(&ai, &bi), want_i);
+        });
+    }
+
+    #[test]
+    fn fused_matches_three_pass_oracle() {
+        check(100, |rng: &mut Rng| {
+            let (n, d) = (rng.range(1, 48), rng.range(1, 24));
+            let kv = random_kv(rng, n, d);
+            let q = rng.normal_vec(d, 1.0);
+            let mut out = vec![0.0f32; d];
+            attention_into(&kv, &q, &mut out);
+            assert_allclose(&out, &naive_attention(&kv, &q), 1e-5, 1e-4);
+        });
+    }
+
+    #[test]
+    fn fused_stable_at_huge_score_spread() {
+        // ascending then descending maxima exercise the rescale path
+        let mut rng = Rng::new(3);
+        let mut kv = random_kv(&mut rng, 16, 8);
+        for (i, k) in kv.key.iter_mut().enumerate() {
+            *k *= ((i / 8) as f32 - 8.0) * 12.0;
+        }
+        let q = rng.normal_vec(8, 1.0);
+        let mut out = vec![0.0f32; 8];
+        attention_into(&kv, &q, &mut out);
+        assert!(out.iter().all(|x| x.is_finite()));
+        assert_allclose(&out, &naive_attention(&kv, &q), 1e-4, 1e-3);
+    }
+
+    #[test]
+    fn tiled_batch_bit_identical_to_fused() {
+        check(50, |rng: &mut Rng| {
+            let (n, d, b) = (rng.range(1, 80), rng.range(1, 20), rng.range(1, 20));
+            let kv = random_kv(rng, n, d);
+            let queries = rng.normal_vec(b * d, 1.0);
+            let mut batch = vec![0.0f32; b * d];
+            let mut ws = Workspace::new();
+            attention_batch_into(&kv, &queries, &mut batch, &mut ws);
+            let mut single = vec![0.0f32; d];
+            for j in 0..b {
+                attention_into(&kv, &queries[j * d..(j + 1) * d], &mut single);
+                assert_eq!(&batch[j * d..(j + 1) * d], &single[..], "query {j}");
+            }
+        });
+    }
+
+    #[test]
+    fn parallel_matches_tiled_for_any_thread_count() {
+        let mut rng = Rng::new(9);
+        let (n, d, b) = (96, 32, 37);
+        let kv = random_kv(&mut rng, n, d);
+        let queries = rng.normal_vec(b * d, 1.0);
+        let mut want = vec![0.0f32; b * d];
+        attention_batch_into(&kv, &queries, &mut want, &mut Workspace::new());
+        for threads in [0, 1, 2, 3, 5, 16] {
+            let got = parallel_attention_batch(&kv, &queries, threads);
+            assert_eq!(got, want, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn masked_fused_edge_cases() {
+        let mut rng = Rng::new(4);
+        let kv = random_kv(&mut rng, 12, 6);
+        let q = rng.normal_vec(6, 1.0);
+        let mut out = vec![1.0f32; 6];
+        attention_masked_into(&kv, &q, &[], &mut out);
+        assert_eq!(out, vec![0.0; 6]);
+        attention_masked_into(&kv, &q, &[7], &mut out);
+        assert_allclose(&out, kv.value_row(7), 1e-6, 0.0);
+    }
+
+    #[test]
+    fn workspace_reuse_is_deterministic() {
+        let mut rng = Rng::new(5);
+        let kv = random_kv(&mut rng, 40, 16);
+        let queries = rng.normal_vec(11 * 16, 1.0);
+        let mut ws = Workspace::new();
+        let mut first = vec![0.0f32; queries.len()];
+        attention_batch_into(&kv, &queries, &mut first, &mut ws);
+        for trial in 0..5 {
+            // interleave differently-shaped work to dirty the buffers
+            let other = random_kv(&mut rng, 7 + trial, 3);
+            let oq = rng.normal_vec(2 * 3, 1.0);
+            let mut scratch_out = vec![0.0f32; 6];
+            attention_batch_into(&other, &oq, &mut scratch_out, &mut ws);
+            let mut again = vec![0.0f32; queries.len()];
+            attention_batch_into(&kv, &queries, &mut again, &mut ws);
+            assert_eq!(first, again, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn empty_kv_yields_zeros() {
+        let kv = KvPair::new(0, 4, vec![], vec![]);
+        let mut out = vec![1.0f32; 4];
+        attention_into(&kv, &[0.5; 4], &mut out);
+        assert_eq!(out, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn pool_runs_each_chunk_exactly_once() {
+        let pool = Pool::new(3);
+        for chunks in [1usize, 2, 7, 64] {
+            let hits: Vec<Mutex<u32>> = (0..chunks).map(|_| Mutex::new(0)).collect();
+            pool.run(chunks, &|c| {
+                *hits[c].lock().unwrap() += 1;
+            });
+            assert!(hits.iter().all(|h| *h.lock().unwrap() == 1), "chunks {chunks}");
+        }
+    }
+
+    #[test]
+    fn pool_survives_repeated_jobs_and_inline_nesting() {
+        let pool = Pool::new(2);
+        let total = Mutex::new(0u64);
+        for round in 0..50u64 {
+            pool.run(4, &|c| {
+                *total.lock().unwrap() += round + c as u64;
+            });
+        }
+        // nested run — from a worker or from the submitter's own chunk
+        // — executes inline instead of deadlocking on the submit lock
+        pool.run(2, &|_| {
+            pool.run(3, &|_| {});
+            global_pool().run(3, &|_| {});
+        });
+        assert_eq!(*total.lock().unwrap(), (0..50u64).map(|r| 4 * r + 6).sum());
+    }
+
+    #[test]
+    fn pool_propagates_chunk_panics_and_stays_usable() {
+        let pool = Pool::new(2);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, &|c| {
+                if c == 5 {
+                    panic!("chunk exploded");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "panic must reach the submitter");
+        // the pool must not be wedged: a fresh job still completes
+        let hits = Mutex::new(0u32);
+        pool.run(4, &|_| {
+            *hits.lock().unwrap() += 1;
+        });
+        assert_eq!(*hits.lock().unwrap(), 4);
+    }
+}

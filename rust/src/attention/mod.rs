@@ -1,17 +1,23 @@
-//! Attention datapaths: the float reference (Fig. 1) and the
-//! bit-accurate fixed-point pipeline model (Fig. 5 + §III-B).
+//! Attention datapaths: the float reference (Fig. 1), the fused
+//! zero-allocation kernel core behind it, and the bit-accurate
+//! fixed-point pipeline model (Fig. 5 + §III-B).
 
 pub mod explut;
+pub mod kernel;
 pub mod quantized;
 pub mod reference;
 
 pub use explut::ExpLut;
+pub use kernel::{
+    attention_batch_into, attention_into, attention_masked_into, dot_f32, dot_i32,
+    parallel_attention_batch, parallel_attention_batch_into, Pool, Workspace,
+};
 pub use quantized::{
-    quantized_attention, quantized_attention_paper, quantized_attention_prequant, QuantKv,
-    QuantTrace,
+    quantized_attention, quantized_attention_into, quantized_attention_paper,
+    quantized_attention_prequant, QuantKv, QuantTrace,
 };
 pub use reference::{
-    attention, attention_batch, attention_masked, dot_scores, softmax_weights,
+    attention, attention_batch, attention_masked, dot_scores, softmax_weights, weighted_sum,
 };
 
 /// A key/value store for one attention context: the operands the paper's

@@ -4,6 +4,7 @@
 //! integer-for-integer. The cross-language golden test in
 //! `rust/tests/golden.rs` pins this equivalence.
 
+use super::kernel::{dot_i32, Workspace};
 use super::{ExpLut, KvPair};
 use crate::fixedpoint::QFormat;
 
@@ -80,12 +81,12 @@ pub fn quantized_attention_prequant(
     let (kq, vq) = (&qkv.kq, &qkv.vq);
     let qq: Vec<i32> = qkv.fmt.quantize_slice(query);
 
-    // Module 1: integer dot products + running max.
+    // Module 1: integer dot products + running max (shared unrolled
+    // micro-kernel; integer sums are exact, so still bit-accurate).
     let mut dot_q = Vec::with_capacity(qkv.n);
     let mut max_q = i32::MIN;
     for i in 0..qkv.n {
-        let row = &kq[i * qkv.d..(i + 1) * qkv.d];
-        let dot: i32 = row.iter().zip(&qq).map(|(k, q)| k * q).sum();
+        let dot = dot_i32(&kq[i * qkv.d..(i + 1) * qkv.d], &qq);
         max_q = max_q.max(dot);
         dot_q.push(dot);
     }
@@ -132,6 +133,65 @@ pub fn quantized_attention_prequant(
 /// Convenience: the paper configuration (i=4, f=4).
 pub fn quantized_attention_paper(kv: &KvPair, query: &[f32]) -> (Vec<f32>, QuantTrace) {
     quantized_attention(kv, query, QFormat::PAPER_INPUT, &ExpLut::paper())
+}
+
+/// Zero-allocation query-time pipeline over SRAM-resident K/V: all
+/// intermediates live in the caller's [`Workspace`] and the float
+/// output is written into `out`. Bit-identical to
+/// [`quantized_attention_prequant`]'s output (same integer plane, same
+/// accumulation order) with no trace materialization — the serving hot
+/// path for the quantized backend.
+pub fn quantized_attention_into(
+    qkv: &QuantKv,
+    query: &[f32],
+    lut: &ExpLut,
+    ws: &mut Workspace,
+    out: &mut [f32],
+) {
+    assert_eq!(query.len(), qkv.d, "query dimension mismatch");
+    assert_eq!(out.len(), qkv.d, "output dimension mismatch");
+    let f = qkv.fmt.frac_bits;
+    let frac = 2 * f; // score/weight plane
+    debug_assert_eq!(lut.frac_bits, frac, "LUT plane must match 2f");
+
+    ws.qq.clear();
+    ws.qq.extend(query.iter().map(|&x| qkv.fmt.quantize(x)));
+
+    // Module 1: integer dot products + running max.
+    ws.row_q.clear();
+    ws.row_q.reserve(qkv.n);
+    let mut max_q = i32::MIN;
+    for i in 0..qkv.n {
+        let dot = dot_i32(&qkv.kq[i * qkv.d..(i + 1) * qkv.d], &ws.qq);
+        max_q = max_q.max(dot);
+        ws.row_q.push(dot);
+    }
+
+    // Module 2: two-LUT exponent, scores overwrite dots in place.
+    let mut expsum_q: i32 = 0;
+    for dq in ws.row_q.iter_mut() {
+        let s = lut.exp_neg(max_q - *dq);
+        expsum_q += s;
+        *dq = s;
+    }
+
+    // Module 3: weight = score/expsum (round half up), weighted sum.
+    ws.out_q.clear();
+    ws.out_q.resize(qkv.d, 0);
+    for (i, &s) in ws.row_q.iter().enumerate() {
+        let w = ((s << frac) + expsum_q / 2) / expsum_q;
+        if w != 0 {
+            let vrow = &qkv.vq[i * qkv.d..(i + 1) * qkv.d];
+            for (o, &v) in ws.out_q.iter_mut().zip(vrow) {
+                *o += w * v;
+            }
+        }
+    }
+
+    let out_scale = (1i64 << (frac + f)) as f32;
+    for (o, &oq) in out.iter_mut().zip(&ws.out_q) {
+        *o = oq as f32 / out_scale;
+    }
 }
 
 #[cfg(test)]
@@ -223,6 +283,25 @@ mod tests {
         // all rows identical -> each weight = 1/n on the 2f plane
         let w = tr.weight_q[0];
         assert!(tr.weight_q.iter().all(|&x| x == w));
+    }
+
+    #[test]
+    fn zero_alloc_variant_bit_matches_trace_variant() {
+        check(30, |rng: &mut Rng| {
+            let (n, d) = (rng.range(1, 64), rng.range(1, 32));
+            let kv = random_kv(rng, n, d);
+            let qkv = QuantKv::paper(&kv);
+            let lut = ExpLut::paper();
+            let mut ws = Workspace::new();
+            let mut out = vec![0.0f32; d];
+            let q = rng.normal_vec(d, 1.0);
+            // reused workspace across both calls in the pair
+            for _ in 0..2 {
+                quantized_attention_into(&qkv, &q, &lut, &mut ws, &mut out);
+                let (want, _) = quantized_attention_prequant(&qkv, &q, &lut);
+                assert_eq!(out, want);
+            }
+        });
     }
 
     #[test]

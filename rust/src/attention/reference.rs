@@ -3,21 +3,25 @@
 //! (Fig. 5). This is the functional oracle every other backend —
 //! fixed-point, approximate, PJRT-offloaded — is compared against, and
 //! it doubles as the measured "CPU baseline kernel" for Fig. 14.
+//!
+//! The hot entry points (`attention`, `attention_masked`,
+//! `attention_batch`) are thin wrappers over the fused one-pass
+//! [`super::kernel`]: same functional semantics, but K/V is streamed
+//! once per query and nothing is allocated beyond the returned vector.
+//! The decomposed module functions (`dot_scores`, `softmax_weights`,
+//! `weighted_sum`) keep the paper's three-module structure for tests,
+//! goldens, and the simulator's activity accounting.
+//!
+//! All shape checks here are hard `assert_eq!`s: a short query or
+//! weight vector would otherwise silently zip-truncate into wrong
+//! numbers in release builds.
 
-use super::KvPair;
+use super::{kernel, KvPair};
 
 /// Dot products of the query against every key row (module 1).
 pub fn dot_scores(kv: &KvPair, query: &[f32]) -> Vec<f32> {
-    debug_assert_eq!(query.len(), kv.d);
-    (0..kv.n)
-        .map(|i| {
-            kv.key_row(i)
-                .iter()
-                .zip(query)
-                .map(|(k, q)| k * q)
-                .sum::<f32>()
-        })
-        .collect()
+    assert_eq!(query.len(), kv.d, "query dimension mismatch");
+    (0..kv.n).map(|i| kernel::dot_f32(kv.key_row(i), query)).collect()
 }
 
 /// Stable softmax over scores (modules 1+2: running max, exp, normalize).
@@ -29,21 +33,22 @@ pub fn softmax_weights(scores: &[f32]) -> Vec<f32> {
 }
 
 /// Full soft attention for one query: `softmax(K q) · V` (Fig. 1).
+/// Delegates to the fused one-pass kernel; allocates only the result.
 pub fn attention(kv: &KvPair, query: &[f32]) -> Vec<f32> {
-    // hard check (not debug_assert): a short query would otherwise
-    // silently zip-truncate into wrong numbers in release builds
-    assert_eq!(query.len(), kv.d, "query dimension mismatch");
-    let weights = softmax_weights(&dot_scores(kv, query));
-    weighted_sum(kv, &weights)
+    let mut out = vec![0.0f32; kv.d];
+    kernel::attention_into(kv, query, &mut out);
+    out
 }
 
-/// Batched queries (row-major `b x d` in, `b x d` out).
+/// Batched queries (row-major `b x d` in, `b x d` out). Delegates to
+/// the query-tiled kernel (K/V streamed once per query block) with a
+/// thread-local scratch [`kernel::Workspace`]; each output is
+/// bit-identical to [`attention`] on that query.
 pub fn attention_batch(kv: &KvPair, queries: &[f32]) -> Vec<f32> {
     assert_eq!(queries.len() % kv.d, 0);
-    queries
-        .chunks_exact(kv.d)
-        .flat_map(|q| attention(kv, q))
-        .collect()
+    let mut out = vec![0.0f32; queries.len()];
+    kernel::with_workspace(|ws| kernel::attention_batch_into(kv, queries, &mut out, ws));
+    out
 }
 
 /// Attention restricted to `selected` rows — the functional semantics of
@@ -51,33 +56,14 @@ pub fn attention_batch(kv: &KvPair, queries: &[f32]) -> Vec<f32> {
 /// Rows outside `selected` get exactly zero weight. An empty selection
 /// returns zeros (mirrors the masked pallas kernel's guard).
 pub fn attention_masked(kv: &KvPair, query: &[f32], selected: &[usize]) -> Vec<f32> {
-    assert_eq!(query.len(), kv.d, "query dimension mismatch");
-    if selected.is_empty() {
-        return vec![0.0; kv.d];
-    }
-    let scores: Vec<f32> = selected
-        .iter()
-        .map(|&i| {
-            kv.key_row(i)
-                .iter()
-                .zip(query)
-                .map(|(k, q)| k * q)
-                .sum::<f32>()
-        })
-        .collect();
-    let weights = softmax_weights(&scores);
     let mut out = vec![0.0f32; kv.d];
-    for (&row, &w) in selected.iter().zip(&weights) {
-        for (o, v) in out.iter_mut().zip(kv.value_row(row)) {
-            *o += w * v;
-        }
-    }
+    kernel::attention_masked_into(kv, query, selected, &mut out);
     out
 }
 
 /// Module 3: output = Σ_i weight_i · value_i.
 pub fn weighted_sum(kv: &KvPair, weights: &[f32]) -> Vec<f32> {
-    debug_assert_eq!(weights.len(), kv.n);
+    assert_eq!(weights.len(), kv.n, "weight count mismatch");
     let mut out = vec![0.0f32; kv.d];
     for (i, &w) in weights.iter().enumerate() {
         if w == 0.0 {

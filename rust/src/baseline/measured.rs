@@ -8,7 +8,7 @@
 
 use std::time::Instant;
 
-use crate::attention::{attention, KvPair};
+use crate::attention::{attention, kernel, KvPair};
 use crate::sim::Dims;
 use crate::testutil::Rng;
 
@@ -58,9 +58,69 @@ pub fn measure_host_attention(dims: Dims, min_seconds: f64) -> HostMeasurement {
     }
 }
 
+/// Time the fused, query-tiled, thread-pooled batch executor at `dims`
+/// with `batch` queries per call (`threads = 0` uses the kernel pool's
+/// full parallelism). Input, output, and workspace buffers are reused
+/// across calls, so the steady-state loop allocates nothing — this is
+/// the honest "how fast can this host actually serve attention"
+/// number that the accelerator speedups of Fig. 14 should be read
+/// against.
+pub fn measure_host_attention_batch(
+    dims: Dims,
+    batch: usize,
+    threads: usize,
+    min_seconds: f64,
+) -> HostMeasurement {
+    assert!(batch > 0);
+    let mut rng = Rng::new(0xBEEF);
+    let kv = KvPair::new(
+        dims.n,
+        dims.d,
+        rng.normal_vec(dims.n * dims.d, 1.0),
+        rng.normal_vec(dims.n * dims.d, 1.0),
+    );
+    let queries = rng.normal_vec(batch * dims.d, 1.0);
+    let mut out = vec![0.0f32; queries.len()];
+
+    // warmup (also spins up the pool workers)
+    for _ in 0..2 {
+        kernel::parallel_attention_batch_into(&kv, &queries, &mut out, threads);
+        std::hint::black_box(&mut out);
+    }
+
+    let start = Instant::now();
+    let mut count = 0usize;
+    while start.elapsed().as_secs_f64() < min_seconds {
+        kernel::parallel_attention_batch_into(&kv, &queries, &mut out, threads);
+        std::hint::black_box(&mut out);
+        count += batch;
+    }
+    HostMeasurement {
+        dims,
+        seconds_per_query: start.elapsed().as_secs_f64() / count as f64,
+        queries_timed: count,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn batch_measurement_is_positive_and_not_pathological() {
+        let single = measure_host_attention(Dims::new(320, 64), 0.05);
+        let batched = measure_host_attention_batch(Dims::new(320, 64), 8, 0, 0.05);
+        assert!(batched.seconds_per_query > 0.0);
+        assert!(batched.queries_timed >= 8);
+        // tiling + pooling must not be dramatically slower than the
+        // per-query path (it is usually faster; CI boxes vary)
+        assert!(
+            batched.seconds_per_query < 3.0 * single.seconds_per_query,
+            "batched {} vs single {}",
+            batched.seconds_per_query,
+            single.seconds_per_query
+        );
+    }
 
     #[test]
     fn measurement_is_positive_and_scales_with_n() {

@@ -15,7 +15,7 @@
 pub mod measured;
 pub mod models;
 
-pub use measured::measure_host_attention;
+pub use measured::{measure_host_attention, measure_host_attention_batch};
 pub use models::{CostModel, PlatformKind};
 
 #[cfg(test)]

@@ -85,6 +85,13 @@ impl Scheduler {
     /// unit. Computes outputs with the unit's backend and charges
     /// pipeline cycles per query. Returns responses with simulated
     /// completion times (`completed_ns` = cycles at 1 GHz).
+    ///
+    /// Base units execute the whole batch through the fused,
+    /// query-tiled, thread-pooled kernel (`attention::kernel`): K/V is
+    /// streamed once per query block and shards run across cores,
+    /// while the per-query pipeline timing is charged exactly as
+    /// before. Outputs are bit-identical to per-query
+    /// [`crate::attention::attention`].
     pub fn dispatch(&mut self, ctx: &KvContext, batch: &[Query]) -> Vec<Response> {
         assert!(!batch.is_empty());
         let now = self.now_cycles;
@@ -95,36 +102,52 @@ impl Scheduler {
         let unit = &mut self.units[idx];
         let arrival = unit.free_at.max(now);
 
-        let mut responses = Vec::with_capacity(batch.len());
-        for q in batch {
-            let (output, selected, timing) = match (&mut unit.pipe, unit.config.kind) {
-                (UnitPipe::Base(p), UnitKind::Base) => {
-                    let out = crate::attention::attention(&ctx.kv, &q.embedding);
-                    let t = p.push_query(arrival);
-                    (out, ctx.kv.n, t)
+        // per-backend compute + per-query pipeline timing...
+        let computed = match (&mut unit.pipe, unit.config.kind) {
+            (UnitPipe::Base(p), UnitKind::Base) => {
+                let d = ctx.kv.d;
+                let mut flat = Vec::with_capacity(batch.len() * d);
+                for q in batch {
+                    assert_eq!(q.embedding.len(), d, "query dimension mismatch");
+                    flat.extend_from_slice(&q.embedding);
                 }
-                (UnitPipe::Approx(p), UnitKind::Approximate { backend }) => {
+                let outputs = crate::attention::kernel::parallel_attention_batch(
+                    &ctx.kv, &flat, 0,
+                );
+                outputs
+                    .chunks_exact(d)
+                    .map(|out| (out.to_vec(), ctx.kv.n, p.push_query(arrival)))
+                    .collect::<Vec<_>>()
+            }
+            (UnitPipe::Approx(p), UnitKind::Approximate { backend }) => batch
+                .iter()
+                .map(|q| {
                     let (out, sel) = backend.run(&ctx.kv, Some(&ctx.sorted), &q.embedding);
                     let m = match backend {
                         AttentionBackend::Approximate { m, .. }
                         | AttentionBackend::CandidatesOnly { m } => m.resolve(ctx.kv.n),
                         _ => ctx.kv.n,
                     };
-                    let t = p.push_query(
+                    let timing = p.push_query(
                         arrival,
                         ApproxQuery { m, candidates: sel.len().max(1), kept: sel.len().max(1) },
                     );
-                    (out, sel.len(), t)
-                }
-                _ => unreachable!("unit pipe/kind mismatch"),
-            };
+                    (out, sel.len(), timing)
+                })
+                .collect(),
+            _ => unreachable!("unit pipe/kind mismatch"),
+        };
+
+        // ...then one shared accounting + response tail for both kinds
+        let mut responses = Vec::with_capacity(batch.len());
+        for (q, (output, selected_rows, timing)) in batch.iter().zip(computed) {
             unit.free_at = timing.finish;
             unit.processed += 1;
             responses.push(Response {
                 id: q.id,
                 context: q.context,
                 output,
-                selected_rows: selected,
+                selected_rows,
                 sim_cycles: timing.latency(),
                 completed_ns: timing.finish, // 1 cycle == 1 ns at 1 GHz
             });

@@ -15,7 +15,13 @@
 //!
 //! * [`fixedpoint`] — the paper's §III-B Q(i,f) arithmetic substrate.
 //! * [`attention`] — float reference, the bit-accurate fixed-point
-//!   pipeline datapath, and the two-LUT exponent.
+//!   pipeline datapath, and the two-LUT exponent. Its
+//!   [`attention::kernel`] submodule is the execution core: a fused
+//!   one-pass online-softmax kernel (K/V streamed exactly once per
+//!   query), a query-tiled batch path, unrolled dot-product
+//!   micro-kernels shared with the quantized datapath, a reusable
+//!   zero-allocation [`attention::Workspace`], and a persistent
+//!   thread pool for parallel batch execution.
 //! * [`approx`] — §IV greedy candidate selection + post-scoring.
 //! * [`sim`] — the cycle-level model of the accelerator (§III/§V
 //!   timing: base pipeline 3n+27 latency / n+9 throughput, approximate
@@ -29,7 +35,8 @@
 //! * [`model`] — the MemN2N forward pass with pluggable attention
 //!   backends, used for the accuracy sweeps of Figs. 11–13.
 //! * [`runtime`] — PJRT engine: HLO-text artifacts → compiled
-//!   executables → on-demand execution.
+//!   executables → on-demand execution (needs the off-by-default
+//!   `pjrt` cargo feature and the external `xla` bindings).
 //! * [`coordinator`] — the serving layer: query queues, batching,
 //!   multi-unit scheduling, metrics.
 //! * [`experiments`] — one driver per paper table/figure, shared by the

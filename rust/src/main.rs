@@ -8,6 +8,7 @@ use a3::coordinator::{KvContext, Scheduler, ServeConfig, Server, UnitConfig, Uni
 use a3::experiments::sweep::EvalBudget;
 use a3::experiments::{fig03, fig11, fig12, fig13, fig14, fig15, quant_sweep, table1};
 use a3::model::AttentionBackend;
+#[cfg(feature = "pjrt")]
 use a3::runtime::{ArtifactId, PjrtEngine};
 use a3::sim::Dims;
 use a3::testutil::Rng;
@@ -89,6 +90,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_runtime_smoke() -> Result<()> {
+    bail!("runtime-smoke needs the PJRT engine: rebuild with `--features pjrt`");
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_runtime_smoke() -> Result<()> {
     let mut engine = PjrtEngine::new()?;
     println!("PJRT platform: {}", engine.platform());

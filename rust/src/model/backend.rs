@@ -4,7 +4,7 @@
 
 use crate::approx::{greedy_select, postscore_select, SortedColumns};
 use crate::attention::{
-    attention, attention_masked, quantized_attention_paper, KvPair,
+    attention, attention_masked, kernel, quantized_attention_paper, KvPair,
 };
 
 /// How many candidate-selection iterations to run, expressed the way
@@ -116,6 +116,48 @@ impl AttentionBackend {
         }
     }
 
+    /// Run this backend over a row-major `b x d` query batch sharing
+    /// one K/V. `Exact` goes through the fused, query-tiled, parallel
+    /// kernel (K/V streamed once per query block across the thread
+    /// pool); the selective backends precompute the sorted key copy
+    /// once and fall back to per-query execution, since each query
+    /// selects a different row subset.
+    pub fn run_batch(
+        &self,
+        kv: &KvPair,
+        sorted: Option<&SortedColumns>,
+        queries: &[f32],
+    ) -> Vec<(Vec<f32>, Vec<usize>)> {
+        assert_eq!(queries.len() % kv.d, 0);
+        if *self == AttentionBackend::Exact {
+            let flat = kernel::parallel_attention_batch(kv, queries, 0);
+            return flat
+                .chunks_exact(kv.d)
+                .map(|out| (out.to_vec(), (0..kv.n).collect()))
+                .collect();
+        }
+        let owned;
+        let sorted = match (sorted, self.uses_candidate_selection()) {
+            (Some(s), _) => Some(s),
+            (None, true) => {
+                owned = SortedColumns::preprocess(&kv.key, kv.n, kv.d);
+                Some(&owned)
+            }
+            (None, false) => None,
+        };
+        queries
+            .chunks_exact(kv.d)
+            .map(|q| self.run(kv, sorted, q))
+            .collect()
+    }
+
+    fn uses_candidate_selection(&self) -> bool {
+        matches!(
+            self,
+            AttentionBackend::CandidatesOnly { .. } | AttentionBackend::Approximate { .. }
+        )
+    }
+
     pub fn label(&self) -> String {
         match *self {
             AttentionBackend::Exact => "exact".into(),
@@ -203,6 +245,41 @@ mod tests {
         let (out, _) = backend.run(&kv, None, &q);
         // only negative-greedy-score rows (near-zero weight) are missing
         assert_allclose(&out, &exact, 0.05, 0.05);
+    }
+
+    #[test]
+    fn run_batch_matches_per_query_run() {
+        let (kv, _) = problem(6, 96, 32);
+        let mut rng = Rng::new(7);
+        let queries = rng.normal_vec(10 * 32, 1.0);
+        let sorted = SortedColumns::preprocess(&kv.key, kv.n, kv.d);
+        for backend in [
+            AttentionBackend::Exact,
+            AttentionBackend::conservative(),
+            AttentionBackend::PostScoringOnly { t_pct: 5.0 },
+        ] {
+            let batch = backend.run_batch(&kv, Some(&sorted), &queries);
+            assert_eq!(batch.len(), 10);
+            for (b, q) in queries.chunks_exact(32).enumerate() {
+                let (out, sel) = backend.run(&kv, Some(&sorted), q);
+                assert_eq!(batch[b].0, out, "{} query {b}", backend.label());
+                assert_eq!(batch[b].1, sel, "{} query {b}", backend.label());
+            }
+        }
+    }
+
+    #[test]
+    fn run_batch_without_sorted_precomputes_once() {
+        let (kv, _) = problem(8, 48, 16);
+        let mut rng = Rng::new(9);
+        let queries = rng.normal_vec(4 * 16, 1.0);
+        let backend = AttentionBackend::conservative();
+        let with_sorted = {
+            let sorted = SortedColumns::preprocess(&kv.key, kv.n, kv.d);
+            backend.run_batch(&kv, Some(&sorted), &queries)
+        };
+        let without = backend.run_batch(&kv, None, &queries);
+        assert_eq!(with_sorted, without);
     }
 
     #[test]

@@ -4,7 +4,14 @@
 //! This is the only place the L1/L2 compute graphs run at serving time
 //! — python is never on the request path. Interchange is HLO **text**
 //! (see `python/compile/aot.py` for why not serialized protos).
+//!
+//! The engine needs the external `xla` bindings crate and a libpjrt
+//! toolchain, so it is compiled only with the off-by-default `pjrt`
+//! cargo feature (see `Cargo.toml`); tier-1 builds and tests run
+//! entirely on the native rust datapaths in [`crate::attention`].
 
+#[cfg(feature = "pjrt")]
 pub mod engine;
 
+#[cfg(feature = "pjrt")]
 pub use engine::{ArtifactId, PjrtEngine};

@@ -42,6 +42,7 @@ fn wrong_version_rejected() {
     assert!(err.contains("version"), "unhelpful error: {err}");
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn missing_artifact_yields_actionable_error() {
     let missing = std::env::temp_dir().join("a3-definitely-not-there");

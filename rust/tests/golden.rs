@@ -126,6 +126,7 @@ fn postscore_keeps_match_python_across_t() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_hlo_kernels_match_rust_and_python() {
     let Some(g) = golden() else { return };

@@ -90,6 +90,7 @@ fn scaling_units_reaches_gpu_class_throughput() {
     );
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn memn2n_served_through_pjrt_answer_graph_if_artifacts_present() {
     // End-to-end: bAbI story -> rust embeddings -> AOT HLO answer graph

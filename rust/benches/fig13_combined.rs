@@ -1,7 +1,11 @@
 //! Bench: regenerate Fig. 13 (combined conservative/aggressive
-//! schemes) and time the full approximate-attention path end to end.
+//! schemes) and time the full approximate-attention path end to end —
+//! the composed oracle chain vs the fused zero-allocation engine the
+//! backends actually serve from.
 
-use a3::approx::{approximate_attention, SortedColumns};
+use a3::approx::{
+    approximate_attention, selective_attention_into, ApproxScratch, SelectivePlan, SortedColumns,
+};
 use a3::attention::KvPair;
 use a3::bench::{bench, black_box, budget};
 use a3::experiments::fig13;
@@ -18,9 +22,17 @@ fn main() {
     let kv = KvPair::new(n, d, rng.normal_vec(n * d, 1.0), rng.normal_vec(n * d, 1.0));
     let sorted = SortedColumns::preprocess(&kv.key, n, d);
     let q = rng.normal_vec(d, 1.0);
+    let mut scratch = ApproxScratch::new();
+    let mut out = vec![0.0f32; d];
     for (name, m, t) in [("conservative", n / 2, 5.0), ("aggressive", n / 8, 10.0)] {
-        let r = bench(&format!("approximate_attention {name}"), budget(), || {
+        let r = bench(&format!("approximate_attention {name} (oracle chain)"), budget(), || {
             black_box(approximate_attention(&kv, &sorted, &q, m, t));
+        });
+        println!("{r}");
+        let plan = SelectivePlan { m_iters: Some(m), t_pct: Some(t) };
+        let r = bench(&format!("fused engine {name} (zero-alloc)"), budget(), || {
+            selective_attention_into(&kv, Some(&sorted), &q, plan, &mut scratch, &mut out);
+            black_box(&mut out);
         });
         println!("{r}");
     }

@@ -12,7 +12,8 @@
 use std::sync::LazyLock;
 
 use a3::approx::{
-    greedy_select, greedy_select_scratch, postscore_select, GreedyOpts, GreedyScratch,
+    approximate_attention, greedy_select, greedy_select_scratch, postscore_select,
+    selective_attention_into, ApproxScratch, GreedyOpts, GreedyScratch, SelectivePlan,
     SortedColumns,
 };
 use a3::attention::{
@@ -22,6 +23,7 @@ use a3::attention::{
 };
 use a3::bench::{bench, black_box, budget};
 use a3::coordinator::{KvContext, Query, Scheduler, UnitConfig, UnitKind};
+use a3::model::AttentionBackend;
 use a3::sim::{BasePipeline, Dims, Module, PipelineSim};
 use a3::testutil::Rng;
 
@@ -107,6 +109,38 @@ fn main() {
     let cands: Vec<usize> = (0..n).collect();
     println!("{}", bench("postscore_select T=5%", b, || {
         black_box(postscore_select(&scores, &cands, 5.0));
+    }));
+
+    // -- fused approximate engine vs seed module chain ---------------
+    // conservative config (M = n/2, T = 5%): the seed chain allocates
+    // candidate/score/kept/output vectors per query; the fused engine
+    // reuses one ApproxScratch and allocates nothing in steady state.
+    println!("{}", bench("approx seed module-chain (conservative)", b, || {
+        black_box(approximate_attention(&kv, &sorted, &q, n / 2, 5.0));
+    }));
+    let plan = SelectivePlan { m_iters: Some(n / 2), t_pct: Some(5.0) };
+    let mut ascratch = ApproxScratch::new();
+    println!("{}", bench("approx fused engine (zero-alloc)", b, || {
+        selective_attention_into(&kv, Some(&sorted), &q, plan, &mut ascratch, &mut out1);
+        black_box(&mut out1);
+    }));
+    let cons = AttentionBackend::conservative();
+    println!("{}", bench("approx batch-8 seed per-query chain", b, || {
+        for qq in batch8.chunks_exact(d) {
+            black_box(approximate_attention(&kv, &sorted, qq, n / 2, 5.0));
+        }
+    }));
+    // the cached-sorted line doubles as the dispatch baseline: compare
+    // it against the uncached line below for the per-context
+    // SortedColumns cache win (uncached pays one column sort/dispatch)
+    println!("{}", bench("approx batch-8 parallel (pool, cached sorted)", b, || {
+        black_box(cons.run_batch(&kv, Some(&sorted), &batch8));
+    }));
+    println!("{}", bench("approx batch-64 parallel (pool)", b, || {
+        black_box(cons.run_batch(&kv, Some(&sorted), &batch64));
+    }));
+    println!("{}", bench("approx batch-8 dispatch (uncached, re-sorts)", b, || {
+        black_box(cons.run_batch(&kv, None, &batch8));
     }));
 
     // -- simulator + serving -----------------------------------------

@@ -1,0 +1,316 @@
+//! The fused, zero-allocation approximate-attention engine.
+//!
+//! The seed executed the paper's selective pipeline (§IV, Fig. 10) as
+//! four separate module calls — `greedy_select` → `exact_scores` →
+//! `postscore_select` → `attention_masked` — each returning a fresh
+//! `Vec` per query. This module collapses that chain into one
+//! streaming pass over caller-owned scratch, mirroring how the ASIC
+//! fuses the stages (§V-B fuses the post-score threshold compare into
+//! the front of the exponent module):
+//!
+//! 1. **Candidate selection** runs on the reusable
+//!    [`GreedyScratch`] (`greedy_select_scratch`), leaving the
+//!    candidate row list in place.
+//! 2. **Candidate scoring** computes the exact f64-plane dot product
+//!    of each *candidate* row only, via the 8-wide
+//!    [`kernel::dot_f64`] micro-kernel, into a reused score buffer.
+//! 3. **Post-scoring + masked online-softmax weighted sum** are one
+//!    loop: each candidate whose score passes the `smax - t`
+//!    threshold is appended to the kept list and immediately pushed
+//!    through the [`kernel::OnlineSoftmax`] recurrence — no kept-set
+//!    materialization between "modules", no score re-read.
+//!
+//! Two float planes coexist by design (see [`super`] docs): selection
+//! decisions (greedy scores, post-scores) happen in **f64**, matching
+//! the python oracle bit-for-bit so golden candidate/kept sets agree;
+//! the output datapath (per-row softmax scores, accumulator) is
+//! **f32**, identical to [`crate::attention::attention_masked`]. The
+//! engine is therefore *bit-identical* to the composed reference
+//! chain — the property `rust/tests/kernel_parity.rs` pins across
+//! every backend variant.
+//!
+//! Steady state performs **zero heap allocations**: every
+//! intermediate (greedy state, scores, kept rows) lives in an
+//! [`ApproxScratch`] whose buffers keep their capacity across calls.
+//! One scratch per thread — batch executors use [`with_scratch`],
+//! which hands out a thread-local instance that persists across jobs
+//! on pool workers.
+
+use super::greedy::{greedy_select_scratch, GreedyOpts, GreedyScratch, GreedyStats};
+use super::postscore::threshold_t;
+use super::preprocess::SortedColumns;
+use crate::attention::kernel::{self, OnlineSoftmax};
+use crate::attention::KvPair;
+
+/// Which selective stages run, with resolved parameters:
+/// `m_iters = None` makes every row a candidate (post-scoring only);
+/// `t_pct = None` keeps every candidate (candidate selection only);
+/// both `Some` is the full Fig. 10 pipeline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SelectivePlan {
+    /// Greedy candidate-selection iterations (paper M), already
+    /// resolved against n.
+    pub m_iters: Option<usize>,
+    /// Post-scoring threshold T, percent of the maximum weight.
+    pub t_pct: Option<f64>,
+}
+
+/// Reusable scratch for the fused engine: greedy state, the candidate
+/// score buffer, the all-rows identity list (post-scoring-only plans),
+/// and the kept-row result list. Buffers retain capacity across calls,
+/// so steady-state execution allocates nothing.
+#[derive(Debug, Default)]
+pub struct ApproxScratch {
+    /// Candidate-selection state (per-row greedy scores, pointer
+    /// walks, heap buffers).
+    pub greedy: GreedyScratch,
+    scores: Vec<f64>,
+    all_rows: Vec<usize>,
+    kept: Vec<usize>,
+    candidate_count: usize,
+}
+
+impl ApproxScratch {
+    pub const fn new() -> Self {
+        ApproxScratch {
+            greedy: GreedyScratch::new(),
+            scores: Vec::new(),
+            all_rows: Vec::new(),
+            kept: Vec::new(),
+            candidate_count: 0,
+        }
+    }
+
+    /// Rows that entered the softmax in the last engine call,
+    /// ascending order.
+    pub fn kept(&self) -> &[usize] {
+        &self.kept
+    }
+
+    /// Candidate count after greedy selection (= n when the plan had
+    /// no candidate-selection stage) in the last engine call — the C
+    /// of the paper's M/C/K pipeline accounting.
+    pub fn candidate_count(&self) -> usize {
+        self.candidate_count
+    }
+}
+
+thread_local! {
+    static SCRATCH: std::cell::RefCell<ApproxScratch> =
+        const { std::cell::RefCell::new(ApproxScratch::new()) };
+}
+
+/// Run `f` with this thread's persistent [`ApproxScratch`]. Do not
+/// call re-entrantly from inside `f`.
+pub fn with_scratch<R>(f: impl FnOnce(&mut ApproxScratch) -> R) -> R {
+    SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+/// Exact f64-plane scores of `rows` — the selection oracle the
+/// post-scoring stage thresholds (§IV-D). Shared by the fused engine,
+/// the composed reference chain ([`super::approximate_attention`]),
+/// and the experiment sweeps, so all three see bit-identical scores.
+pub fn exact_scores(kv: &KvPair, query: &[f32], rows: &[usize]) -> Vec<f64> {
+    rows.iter()
+        .map(|&i| kernel::dot_f64(kv.key_row(i), query))
+        .collect()
+}
+
+/// One fused selective-attention pass: candidate selection → candidate
+/// scoring → post-score threshold → masked online-softmax weighted
+/// sum, all over `scratch`, writing the output into `out`. Kept rows
+/// are readable via [`ApproxScratch::kept`] afterwards; the returned
+/// [`GreedyStats`] are zeroed when the plan has no candidate-selection
+/// stage.
+///
+/// `sorted` must be `Some` iff `plan.m_iters` is `Some` (candidate
+/// selection walks the column-sorted key matrix); plans without
+/// candidate selection never touch it.
+///
+/// Output and kept set are bit-identical to the composed reference
+/// chain `greedy_select` → [`exact_scores`] → `postscore_select` →
+/// `attention_masked` with the same parameters (empty selections yield
+/// exact zeros, matching the masked kernel's guard).
+pub fn selective_attention_into(
+    kv: &KvPair,
+    sorted: Option<&SortedColumns>,
+    query: &[f32],
+    plan: SelectivePlan,
+    scratch: &mut ApproxScratch,
+    out: &mut [f32],
+) -> GreedyStats {
+    assert_eq!(query.len(), kv.d, "query dimension mismatch");
+    assert_eq!(out.len(), kv.d, "output dimension mismatch");
+    let ApproxScratch { greedy, scores, all_rows, kept, candidate_count } = scratch;
+
+    // 1. candidate selection (or the full row range)
+    let (stats, candidates): (GreedyStats, &[usize]) = match plan.m_iters {
+        Some(m) => {
+            let sorted = sorted.expect("plan with candidate selection requires SortedColumns");
+            assert_eq!(sorted.n, kv.n, "sorted key matrix row mismatch");
+            assert_eq!(sorted.d, kv.d, "sorted key matrix dim mismatch");
+            let stats = greedy_select_scratch(sorted, query, m, GreedyOpts::default(), greedy);
+            (stats, greedy.candidates())
+        }
+        None => {
+            if all_rows.len() != kv.n {
+                all_rows.clear();
+                all_rows.extend(0..kv.n);
+            }
+            (GreedyStats::default(), &all_rows[..])
+        }
+    };
+    *candidate_count = candidates.len();
+
+    out.fill(0.0);
+    kept.clear();
+    let mut sm = OnlineSoftmax::new();
+    match plan.t_pct {
+        // 2a. no post-scoring: every candidate enters the softmax
+        None => {
+            kept.extend_from_slice(candidates);
+            for &i in kept.iter() {
+                sm.push(kernel::dot_f32(kv.key_row(i), query), kv.value_row(i), out);
+            }
+        }
+        // 2b. score candidates on the f64 oracle plane, then stream:
+        // the threshold compare is fused into the softmax front (§V-B)
+        // — a passing row is kept and accumulated in the same step.
+        Some(t_pct) => {
+            let t = threshold_t(t_pct);
+            scores.clear();
+            let mut smax = f64::NEG_INFINITY;
+            for &i in candidates {
+                let s = kernel::dot_f64(kv.key_row(i), query);
+                smax = smax.max(s);
+                scores.push(s);
+            }
+            let cut = smax - t;
+            for (&i, &s) in candidates.iter().zip(scores.iter()) {
+                if s >= cut {
+                    kept.push(i);
+                    sm.push(kernel::dot_f32(kv.key_row(i), query), kv.value_row(i), out);
+                }
+            }
+        }
+    }
+    sm.finish(out);
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{greedy_select, postscore_select};
+    use super::*;
+    use crate::attention::attention_masked;
+    use crate::testutil::{check, Rng};
+
+    fn random_problem(rng: &mut Rng, n: usize, d: usize) -> (KvPair, SortedColumns, Vec<f32>) {
+        let kv = KvPair::new(n, d, rng.normal_vec(n * d, 1.0), rng.normal_vec(n * d, 1.0));
+        let sorted = SortedColumns::preprocess(&kv.key, n, d);
+        let q = rng.normal_vec(d, 1.0);
+        (kv, sorted, q)
+    }
+
+    /// The composed reference chain the engine must reproduce
+    /// bit-for-bit.
+    fn reference_chain(
+        kv: &KvPair,
+        sorted: &SortedColumns,
+        query: &[f32],
+        plan: SelectivePlan,
+    ) -> (Vec<f32>, Vec<usize>) {
+        let candidates: Vec<usize> = match plan.m_iters {
+            Some(m) => greedy_select(sorted, query, m).candidates,
+            None => (0..kv.n).collect(),
+        };
+        let kept = match plan.t_pct {
+            Some(t) => {
+                let scores = exact_scores(kv, query, &candidates);
+                postscore_select(&scores, &candidates, t)
+            }
+            None => candidates,
+        };
+        (attention_masked(kv, query, &kept), kept)
+    }
+
+    #[test]
+    fn engine_bit_matches_reference_chain_across_plans() {
+        check(60, |rng: &mut Rng| {
+            let (n, d) = (rng.range(1, 80), rng.range(1, 24));
+            let (kv, sorted, q) = random_problem(rng, n, d);
+            let m = rng.range(0, 2 * n + 1);
+            let t = [0.5, 5.0, 10.0, 50.0][rng.below(4)];
+            let plans = [
+                SelectivePlan { m_iters: Some(m), t_pct: None },
+                SelectivePlan { m_iters: None, t_pct: Some(t) },
+                SelectivePlan { m_iters: Some(m), t_pct: Some(t) },
+            ];
+            let mut scratch = ApproxScratch::new();
+            let mut out = vec![0.0f32; d];
+            for plan in plans {
+                let (want_out, want_kept) = reference_chain(&kv, &sorted, &q, plan);
+                selective_attention_into(&kv, Some(&sorted), &q, plan, &mut scratch, &mut out);
+                assert_eq!(out, want_out, "{plan:?} (n={n} d={d})");
+                assert_eq!(scratch.kept(), &want_kept[..], "{plan:?} (n={n} d={d})");
+            }
+        });
+    }
+
+    #[test]
+    fn scratch_reuse_across_shapes_is_deterministic() {
+        let mut rng = Rng::new(3);
+        let (kv, sorted, q) = random_problem(&mut rng, 64, 16);
+        let plan = SelectivePlan { m_iters: Some(32), t_pct: Some(5.0) };
+        let mut scratch = ApproxScratch::new();
+        let mut first = vec![0.0f32; 16];
+        selective_attention_into(&kv, Some(&sorted), &q, plan, &mut scratch, &mut first);
+        let first_kept = scratch.kept().to_vec();
+        for trial in 0..4 {
+            // dirty every buffer with a differently-shaped problem
+            let (kv2, sorted2, q2) = random_problem(&mut rng, 5 + trial, 3);
+            let mut small = vec![0.0f32; 3];
+            let plan2 = SelectivePlan { m_iters: Some(trial), t_pct: None };
+            selective_attention_into(&kv2, Some(&sorted2), &q2, plan2, &mut scratch, &mut small);
+            let mut again = vec![0.0f32; 16];
+            selective_attention_into(&kv, Some(&sorted), &q, plan, &mut scratch, &mut again);
+            assert_eq!(first, again, "trial {trial}");
+            assert_eq!(scratch.kept(), &first_kept[..], "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn empty_selections_yield_exact_zeros() {
+        let mut rng = Rng::new(4);
+        let (kv, sorted, q) = random_problem(&mut rng, 24, 8);
+        let mut scratch = ApproxScratch::new();
+        let mut out = vec![1.0f32; 8];
+        // M = 0 inspects nothing: empty candidate set
+        let plan = SelectivePlan { m_iters: Some(0), t_pct: Some(5.0) };
+        selective_attention_into(&kv, Some(&sorted), &q, plan, &mut scratch, &mut out);
+        assert_eq!(out, vec![0.0; 8]);
+        assert!(scratch.kept().is_empty());
+        assert_eq!(scratch.candidate_count(), 0);
+        // a zero query accepts no component products either
+        let plan = SelectivePlan { m_iters: Some(48), t_pct: None };
+        selective_attention_into(&kv, Some(&sorted), &[0.0; 8], plan, &mut scratch, &mut out);
+        assert_eq!(out, vec![0.0; 8]);
+        assert!(scratch.kept().is_empty());
+    }
+
+    #[test]
+    fn candidate_count_tracks_pipeline_stage() {
+        let mut rng = Rng::new(5);
+        let (kv, sorted, q) = random_problem(&mut rng, 48, 16);
+        let mut scratch = ApproxScratch::new();
+        let mut out = vec![0.0f32; 16];
+        let plan = SelectivePlan { m_iters: None, t_pct: Some(5.0) };
+        selective_attention_into(&kv, Some(&sorted), &q, plan, &mut scratch, &mut out);
+        assert_eq!(scratch.candidate_count(), 48);
+        assert!(scratch.kept().len() <= 48);
+        let plan = SelectivePlan { m_iters: Some(24), t_pct: Some(5.0) };
+        selective_attention_into(&kv, Some(&sorted), &q, plan, &mut scratch, &mut out);
+        assert!(scratch.kept().len() <= scratch.candidate_count());
+        assert!(scratch.candidate_count() <= 48);
+    }
+}

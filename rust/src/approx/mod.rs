@@ -8,15 +8,41 @@
 //! * [`postscore`] — threshold-based thinning of scored candidates
 //!   (§IV-D): keep rows whose post-softmax weight would be ≥ T% of the
 //!   maximum weight.
+//! * [`engine`] — the fused, zero-allocation, single-pass execution of
+//!   the whole chain, the hot path behind every selective
+//!   [`crate::model::AttentionBackend`] variant.
 //!
-//! The float plane here is f64, matching the python oracle
-//! (`ref.py::greedy_candidates_ref`) so golden tests compare candidate
-//! sets exactly.
+//! ## Float planes, and why the goldens keep passing
+//!
+//! Every entry point here keeps **selection decisions on the f64
+//! plane** and the **output datapath on the f32 plane**:
+//!
+//! * Greedy scores ([`greedy_select`], the engine's stage 1) are f64
+//!   sums of `sortedKey · q` component products — exactly the plane of
+//!   the python oracle (`ref.py::greedy_candidates_ref`), so golden
+//!   candidate sets compare *exactly*.
+//! * Post-scores ([`exact_scores`], the engine's stage 2) are f64 dot
+//!   products of candidate key rows. The fused engine and the composed
+//!   reference chain share the same [`crate::attention::dot_f64`]
+//!   micro-kernel, so their kept sets are identical by construction.
+//!   The golden postscore test computes its own f64 scores and checks
+//!   [`postscore_select`]'s thresholding, which is untouched.
+//! * The attention output (the engine's stage 3) is the f32 masked
+//!   online-softmax of [`crate::attention::attention_masked`] — the
+//!   same kernel the masked golden pins against the pallas reference.
+//!
+//! [`approximate_attention`] below stays the *allocating, composed*
+//! form of the pipeline: it is the parity oracle the engine is tested
+//! against (`rust/tests/kernel_parity.rs`), not the serving path.
 
+pub mod engine;
 pub mod greedy;
 pub mod postscore;
 pub mod preprocess;
 
+pub use engine::{
+    exact_scores, selective_attention_into, with_scratch, ApproxScratch, SelectivePlan,
+};
 pub use greedy::{
     greedy_select, greedy_select_opts, greedy_select_scratch, GreedyOpts, GreedyResult,
     GreedyScratch, GreedyStats,
@@ -24,10 +50,15 @@ pub use greedy::{
 pub use postscore::{postscore_select, threshold_t};
 pub use preprocess::SortedColumns;
 
-/// One end-to-end approximate attention pass: candidate selection →
-/// exact scores for candidates → post-scoring selection → masked
-/// attention. Returns (output, kept rows, stats) — the functional twin
-/// of Fig. 10's module chain, used by the accuracy experiments.
+/// One end-to-end approximate attention pass as the explicit module
+/// chain of Fig. 10: candidate selection → exact scores for candidates
+/// → post-scoring selection → masked attention. Returns (output, kept
+/// rows, stats).
+///
+/// This is the **parity oracle** for [`engine`] (which fuses the same
+/// stages into one zero-allocation pass and must stay bit-identical);
+/// the accuracy experiments and benches keep using it where the
+/// decomposed structure is the point.
 pub fn approximate_attention(
     kv: &crate::attention::KvPair,
     sorted: &SortedColumns,
@@ -36,17 +67,7 @@ pub fn approximate_attention(
     threshold_pct: f64,
 ) -> (Vec<f32>, Vec<usize>, GreedyStats) {
     let res = greedy_select(sorted, query, m_iters);
-    let scores: Vec<f64> = res
-        .candidates
-        .iter()
-        .map(|&i| {
-            kv.key_row(i)
-                .iter()
-                .zip(query)
-                .map(|(k, q)| *k as f64 * *q as f64)
-                .sum()
-        })
-        .collect();
+    let scores = exact_scores(kv, query, &res.candidates);
     let kept = postscore_select(&scores, &res.candidates, threshold_pct);
     let out = crate::attention::attention_masked(kv, query, &kept);
     (out, kept, res.stats)
@@ -85,5 +106,23 @@ mod tests {
         let (_, kept_aggr, _) = approximate_attention(&kv, &sorted, &q, n / 8, 10.0);
         assert!(kept_aggr.len() <= kept_cons.len());
         assert!(!kept_aggr.is_empty());
+    }
+
+    #[test]
+    fn fused_engine_bit_matches_oracle_chain() {
+        let mut rng = Rng::new(7);
+        let (n, d) = (96, 32);
+        let kv = KvPair::new(n, d, rng.normal_vec(n * d, 1.0), rng.normal_vec(n * d, 1.0));
+        let sorted = SortedColumns::preprocess(&kv.key, n, d);
+        let mut scratch = ApproxScratch::new();
+        let mut out = vec![0.0f32; d];
+        for (m, t) in [(n / 2, 5.0), (n / 8, 10.0), (2 * n * d, 1e-6)] {
+            let q = rng.normal_vec(d, 1.0);
+            let (want_out, want_kept, _) = approximate_attention(&kv, &sorted, &q, m, t);
+            let plan = SelectivePlan { m_iters: Some(m), t_pct: Some(t) };
+            selective_attention_into(&kv, Some(&sorted), &q, plan, &mut scratch, &mut out);
+            assert_eq!(out, want_out, "M={m} T={t}");
+            assert_eq!(scratch.kept(), &want_kept[..], "M={m} T={t}");
+        }
     }
 }

@@ -50,6 +50,20 @@ impl ExpLut {
         ExpLut::new(2 * crate::fixedpoint::QFormat::PAPER_INPUT.frac_bits)
     }
 
+    /// Process-wide cache of built tables, keyed by `frac_bits`. On
+    /// the device the tables are SRAM content written once at
+    /// configuration time; rebuilding them per query (as the seed
+    /// `QuantizedBits` backend did on every `run()` call) is pure
+    /// overhead, so hot paths share one static instance per plane.
+    /// Identical tables to [`ExpLut::new`] — construction is
+    /// deterministic.
+    pub fn cached(frac_bits: u32) -> &'static ExpLut {
+        assert!(frac_bits <= 14, "table would not fit the i32 plane");
+        static CACHE: [std::sync::OnceLock<ExpLut>; 15] =
+            [const { std::sync::OnceLock::new() }; 15];
+        CACHE[frac_bits as usize].get_or_init(|| ExpLut::new(frac_bits))
+    }
+
     /// Fixed-point `e^-u` for `u_q ≥ 0` on the `frac_bits` plane.
     ///
     /// Bit-for-bit identical to `compile/kernels/ref.py::exp_lut_q`.
@@ -81,6 +95,20 @@ mod tests {
     fn exp_of_zero_is_one() {
         let lut = ExpLut::paper();
         assert_eq!(lut.exp_neg(0), 1 << lut.frac_bits);
+    }
+
+    #[test]
+    fn cached_tables_identical_to_fresh_build() {
+        for frac in [4u32, 8, 12] {
+            let fresh = ExpLut::new(frac);
+            let cached = ExpLut::cached(frac);
+            assert_eq!(cached.frac_bits, frac);
+            for u in 0..(U_CLAMP_INT << frac) {
+                assert_eq!(cached.exp_neg(u), fresh.exp_neg(u), "frac={frac} u={u}");
+            }
+            // same instance on repeat lookups
+            assert!(std::ptr::eq(cached, ExpLut::cached(frac)));
+        }
     }
 
     #[test]

@@ -67,8 +67,10 @@ pub const QUERY_BLOCK: usize = 8;
 
 /// Below this many multiply-accumulates (`batch · n · d`), a batch is
 /// executed on the calling thread: the pool round-trip would cost more
-/// than it saves.
-const PARALLEL_MIN_MACS: usize = 1 << 17;
+/// than it saves. Shared with the approximate batch dispatcher
+/// ([`crate::model::AttentionBackend::run_batch`]), whose per-query
+/// work is bounded by the same `n · d` streaming term.
+pub const PARALLEL_MIN_MACS: usize = 1 << 17;
 
 // ---------------------------------------------------------------------------
 // micro-kernels
@@ -93,6 +95,29 @@ pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
     let mut tail = 0.0f32;
     for (x, y) in a[split..].iter().zip(&b[split..]) {
         tail += x * y;
+    }
+    ((acc[0] + acc[4]) + (acc[2] + acc[6])) + ((acc[1] + acc[5]) + (acc[3] + acc[7])) + tail
+}
+
+/// f64-plane dot product of two f32 slices, same eight-accumulator
+/// unroll as [`dot_f32`]. This is the *selection oracle* plane of the
+/// approximate engine (§IV-D post-scoring compares candidate scores in
+/// f64, matching the python reference); the combine order is fixed so
+/// the fused engine and the composed reference chain see bit-identical
+/// scores.
+#[inline]
+pub fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "dot operand length mismatch");
+    let split = a.len() - a.len() % 8;
+    let mut acc = [0.0f64; 8];
+    for (ca, cb) in a[..split].chunks_exact(8).zip(b[..split].chunks_exact(8)) {
+        for k in 0..8 {
+            acc[k] += ca[k] as f64 * cb[k] as f64;
+        }
+    }
+    let mut tail = 0.0f64;
+    for (x, y) in a[split..].iter().zip(&b[split..]) {
+        tail += *x as f64 * *y as f64;
     }
     ((acc[0] + acc[4]) + (acc[2] + acc[6])) + ((acc[1] + acc[5]) + (acc[3] + acc[7])) + tail
 }
@@ -151,6 +176,47 @@ fn finalize(acc: &mut [f32], denom: f32) {
     }
 }
 
+/// Streaming online-softmax state (running max + denominator) for
+/// callers that interleave row selection with accumulation — the
+/// fused approximate engine pushes each *kept* row the moment its
+/// post-score threshold compare passes (§V-B fuses that compare into
+/// the exponent stage), so selection and softmax are one pass.
+///
+/// `push`ing rows `r_0..r_k` into a zeroed accumulator and calling
+/// `finish` is bit-identical to [`attention_masked_into`] over the
+/// same rows in the same order.
+#[derive(Clone, Copy, Debug)]
+pub struct OnlineSoftmax {
+    m: f32,
+    l: f32,
+}
+
+impl Default for OnlineSoftmax {
+    fn default() -> Self {
+        OnlineSoftmax::new()
+    }
+}
+
+impl OnlineSoftmax {
+    pub fn new() -> Self {
+        OnlineSoftmax { m: f32::NEG_INFINITY, l: 0.0 }
+    }
+
+    /// Fold one (score, value) row into the accumulator.
+    #[inline]
+    pub fn push(&mut self, score: f32, value: &[f32], acc: &mut [f32]) {
+        online_update(&mut self.m, &mut self.l, acc, score, value);
+    }
+
+    /// Normalize the accumulator. Zero rows pushed leaves `acc`
+    /// untouched (the caller's zero fill is the empty-selection
+    /// result).
+    #[inline]
+    pub fn finish(self, acc: &mut [f32]) {
+        finalize(acc, self.l);
+    }
+}
+
 // ---------------------------------------------------------------------------
 // fused kernels
 // ---------------------------------------------------------------------------
@@ -178,16 +244,11 @@ pub fn attention_masked_into(kv: &KvPair, query: &[f32], selected: &[usize], out
     assert_eq!(query.len(), kv.d, "query dimension mismatch");
     assert_eq!(out.len(), kv.d, "output dimension mismatch");
     out.fill(0.0);
-    if selected.is_empty() {
-        return;
-    }
-    let mut m = f32::NEG_INFINITY;
-    let mut l = 0.0f32;
+    let mut sm = OnlineSoftmax::new();
     for &i in selected {
-        let s = dot_f32(kv.key_row(i), query);
-        online_update(&mut m, &mut l, out, s, kv.value_row(i));
+        sm.push(dot_f32(kv.key_row(i), query), kv.value_row(i), out);
     }
-    finalize(out, l);
+    sm.finish(out);
 }
 
 /// Reusable scratch buffers for the batch, quantized, and masked hot
@@ -565,6 +626,48 @@ pub fn parallel_attention_batch(kv: &KvPair, queries: &[f32], threads: usize) ->
     out
 }
 
+/// Run `f(i, &mut out[i])` for every slot of `out` across the global
+/// [`Pool`], sharded into contiguous per-executor ranges (the same
+/// sharding [`parallel_attention_batch_into`] uses for query batches).
+/// `executors = 0` uses the pool's full parallelism; `executors = 1`
+/// (or a single-slot `out`) runs inline on the calling thread.
+///
+/// Each slot is visited exactly once, so `f` may freely overwrite it;
+/// per-thread state (workspaces, scratch buffers) should live in
+/// thread-locals, which persist across jobs on pool workers. This is
+/// the batch executor behind the selective/quantized
+/// [`crate::model::AttentionBackend::run_batch`] paths.
+pub fn parallel_map_into<T, F>(out: &mut [T], executors: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let pool = global_pool();
+    let executors = if executors == 0 { pool.parallelism() } else { executors };
+    let executors = executors.min(out.len().max(1));
+    if executors <= 1 {
+        for (i, slot) in out.iter_mut().enumerate() {
+            f(i, slot);
+        }
+        return;
+    }
+    // Contiguous shards; each Mutex is locked exactly once, by the
+    // single executor that claims that chunk.
+    let per = out.len().div_ceil(executors);
+    let shards: Vec<Mutex<(usize, &mut [T])>> = out
+        .chunks_mut(per)
+        .enumerate()
+        .map(|(c, slots)| Mutex::new((c * per, slots)))
+        .collect();
+    pool.run(shards.len(), &|c| {
+        let mut shard = shards[c].lock().unwrap();
+        let (base, slots) = &mut *shard;
+        for (j, slot) in slots.iter_mut().enumerate() {
+            f(*base + j, slot);
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::tests::random_kv;
@@ -603,6 +706,49 @@ mod tests {
             let want_i: i32 = ai.iter().zip(&bi).map(|(x, y)| x * y).sum();
             assert_eq!(dot_i32(&ai, &bi), want_i);
         });
+    }
+
+    #[test]
+    fn dot_f64_matches_sequential_widened_sum() {
+        check(100, |rng: &mut Rng| {
+            let len = rng.range(0, 40);
+            let a = rng.normal_vec(len, 1.0);
+            let b = rng.normal_vec(len, 1.0);
+            let want: f64 = a.iter().zip(&b).map(|(x, y)| *x as f64 * *y as f64).sum();
+            assert!((dot_f64(&a, &b) - want).abs() <= 1e-12 * (1.0 + want.abs()));
+        });
+    }
+
+    #[test]
+    fn online_softmax_stream_matches_masked_kernel() {
+        check(50, |rng: &mut Rng| {
+            let (n, d) = (rng.range(1, 40), rng.range(1, 16));
+            let kv = random_kv(rng, n, d);
+            let q = rng.normal_vec(d, 1.0);
+            let selected: Vec<usize> = (0..n).filter(|_| rng.f64() < 0.5).collect();
+            let mut want = vec![0.0f32; d];
+            attention_masked_into(&kv, &q, &selected, &mut want);
+            let mut got = vec![0.0f32; d];
+            let mut sm = OnlineSoftmax::new();
+            for &i in &selected {
+                sm.push(dot_f32(kv.key_row(i), &q), kv.value_row(i), &mut got);
+            }
+            sm.finish(&mut got);
+            assert_eq!(got, want);
+        });
+    }
+
+    #[test]
+    fn parallel_map_into_visits_every_slot_once() {
+        for (len, executors) in [(0usize, 0usize), (1, 0), (7, 3), (40, 0), (40, 1), (40, 64)] {
+            let mut out = vec![0u32; len];
+            parallel_map_into(&mut out, executors, |i, slot| {
+                *slot += 1 + i as u32;
+            });
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, 1 + i as u32, "slot {i} (len {len}, executors {executors})");
+            }
+        }
     }
 
     #[test]

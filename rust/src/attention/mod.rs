@@ -9,8 +9,9 @@ pub mod reference;
 
 pub use explut::ExpLut;
 pub use kernel::{
-    attention_batch_into, attention_into, attention_masked_into, dot_f32, dot_i32,
-    parallel_attention_batch, parallel_attention_batch_into, Pool, Workspace,
+    attention_batch_into, attention_into, attention_masked_into, dot_f32, dot_f64, dot_i32,
+    parallel_attention_batch, parallel_attention_batch_into, parallel_map_into, OnlineSoftmax,
+    Pool, Workspace,
 };
 pub use quantized::{
     quantized_attention, quantized_attention_into, quantized_attention_paper,

@@ -1,6 +1,6 @@
 //! Query/response types and KV-context registry.
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use crate::approx::SortedColumns;
 use crate::attention::KvPair;
@@ -9,24 +9,49 @@ pub type QueryId = u64;
 pub type ContextId = u32;
 
 /// A registered key/value context (one knowledge base / one
-/// self-attention layer's K,V). Comprehension-time state: the sorted
-/// key copy for candidate selection is prepared here, off the query
-/// critical path (§IV-C).
+/// self-attention layer's K,V). Comprehension-time state: the
+/// column-sorted key copy for candidate selection is cached here, once
+/// per context lifetime (§IV-C "Preprocessing"), shared by every clone
+/// of the context and every scheduler dispatch.
+///
+/// The cache is *lazy*: contexts served only by dense backends never
+/// pay for the sort. Serving stacks that run selective backends should
+/// call [`KvContext::prewarm_sorted`] at registration time (the
+/// [`crate::coordinator::Server`] constructor does) so the one-time
+/// sort happens off the query critical path.
 #[derive(Clone)]
 pub struct KvContext {
     pub id: ContextId,
     pub kv: Arc<KvPair>,
-    pub sorted: Arc<SortedColumns>,
+    sorted: Arc<OnceLock<SortedColumns>>,
 }
 
 impl KvContext {
     pub fn new(id: ContextId, kv: KvPair) -> Self {
-        let sorted = SortedColumns::preprocess(&kv.key, kv.n, kv.d);
         KvContext {
             id,
             kv: Arc::new(kv),
-            sorted: Arc::new(sorted),
+            sorted: Arc::new(OnceLock::new()),
         }
+    }
+
+    /// The per-context cached sorted key matrix, building it on first
+    /// use. Subsequent calls (from any clone of this context) return
+    /// the same cached instance.
+    pub fn sorted(&self) -> &SortedColumns {
+        self.sorted
+            .get_or_init(|| SortedColumns::preprocess(&self.kv.key, self.kv.n, self.kv.d))
+    }
+
+    /// Build the sorted-key cache now (comprehension time), so the
+    /// first selective query does not pay for it.
+    pub fn prewarm_sorted(&self) {
+        let _ = self.sorted();
+    }
+
+    /// Whether the comprehension-time sort has already run.
+    pub fn sorted_ready(&self) -> bool {
+        self.sorted.get().is_some()
     }
 }
 
@@ -66,13 +91,28 @@ mod tests {
     use crate::testutil::Rng;
 
     #[test]
-    fn context_prepares_sorted_copy() {
+    fn context_caches_sorted_copy_lazily() {
         let mut rng = Rng::new(0);
         let kv = KvPair::new(16, 8, rng.normal_vec(16 * 8, 1.0), rng.normal_vec(16 * 8, 1.0));
         let ctx = KvContext::new(3, kv);
-        assert_eq!(ctx.sorted.n, 16);
-        assert_eq!(ctx.sorted.d, 8);
+        assert!(!ctx.sorted_ready(), "cache must be lazy");
+        let clone = ctx.clone();
+        let s = ctx.sorted();
+        assert_eq!(s.n, 16);
+        assert_eq!(s.d, 8);
         // descending first column
-        assert!(ctx.sorted.value(0, 0) >= ctx.sorted.value(0, 15));
+        assert!(s.value(0, 0) >= s.value(0, 15));
+        // the cache is shared across clones: one sort per context
+        assert!(clone.sorted_ready());
+        assert!(std::ptr::eq(clone.sorted(), s));
+    }
+
+    #[test]
+    fn prewarm_builds_the_cache() {
+        let mut rng = Rng::new(1);
+        let kv = KvPair::new(8, 4, rng.normal_vec(32, 1.0), rng.normal_vec(32, 1.0));
+        let ctx = KvContext::new(0, kv);
+        ctx.prewarm_sorted();
+        assert!(ctx.sorted_ready());
     }
 }

@@ -60,7 +60,17 @@ pub struct Server {
 }
 
 impl Server {
+    /// Register contexts against a scheduler. When any unit runs a
+    /// candidate-selecting backend, every context's sorted-key cache
+    /// is prewarmed here — registration *is* comprehension time
+    /// (§IV-C), so the one-time column sort stays off the query
+    /// critical path.
     pub fn new(contexts: Vec<KvContext>, scheduler: Scheduler, config: ServeConfig) -> Self {
+        if scheduler.needs_sorted_contexts() {
+            for ctx in &contexts {
+                ctx.prewarm_sorted();
+            }
+        }
         Server { contexts, scheduler, config }
     }
 
@@ -254,9 +264,32 @@ mod tests {
             UnitKind::Approximate { backend: AttentionBackend::aggressive() },
             320,
         );
+        // registration prewarmed the comprehension-time sort
+        assert!(s.contexts[0].sorted_ready());
         let report = s.serve_random(32, 3);
         assert!(report.metrics.mean_selected_rows() < 320.0);
         assert!(report.metrics.mean_selected_rows() >= 1.0);
+    }
+
+    #[test]
+    fn selective_serving_end_to_end_matches_direct_backend() {
+        // conservative and aggressive schemes served through the whole
+        // stack (batcher → scheduler → fused batch engine) must equal
+        // direct per-query backend execution with the cached sort.
+        for backend in [AttentionBackend::conservative(), AttentionBackend::aggressive()] {
+            let mut s = make_server(2, UnitKind::Approximate { backend }, 128);
+            let report = s.serve_random(24, 5);
+            assert_eq!(report.metrics.completed, 24);
+            let mut rng = Rng::new(5);
+            let embeddings: Vec<Vec<f32>> = (0..24).map(|_| rng.normal_vec(64, 1.0)).collect();
+            let ctx = &s.contexts[0];
+            for r in &report.responses {
+                let (out, sel) =
+                    backend.run(&ctx.kv, Some(ctx.sorted()), &embeddings[r.id as usize]);
+                assert_eq!(r.output, out, "query {}", r.id);
+                assert_eq!(r.selected_rows, sel.len(), "query {}", r.id);
+            }
+        }
     }
 
     #[test]

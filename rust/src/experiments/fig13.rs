@@ -2,6 +2,12 @@
 //! (M = n/2, T = 5%) vs aggressive (M = n/8, T = 10%):
 //! (a) accuracy-metric change, (b) portion of the true top-2 (bAbI) /
 //! top-5 (others) entries included after approximation.
+//!
+//! Evaluation executes through the fused approximate engine
+//! ([`crate::approx::engine`], via `AttentionBackend::run_batch` in
+//! [`super::sweep`]) — bit-identical to the composed reference chain,
+//! so the figures are unchanged from the seed while running
+//! batch-parallel.
 
 use anyhow::Result;
 

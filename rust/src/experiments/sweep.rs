@@ -5,7 +5,7 @@
 
 use anyhow::Result;
 
-use crate::approx::{greedy_select, postscore_select, SortedColumns};
+use crate::approx::{exact_scores, greedy_select, postscore_select, SortedColumns};
 use crate::attention::KvPair;
 use crate::model::backend::{AttentionBackend, MIters};
 use crate::model::{BabiTestSet, Memn2n};
@@ -60,8 +60,11 @@ impl Default for EvalBudget {
     }
 }
 
-/// Selection sizes for one query under a backend (M, C, K), mirroring
-/// the backend's internal pipeline so the simulator sees real data.
+/// Selection sizes for one query under a backend (M, C, K), computed
+/// from the *composed reference chain* (`greedy_select` →
+/// [`exact_scores`] → `postscore_select`) — the same f64 selection
+/// plane the fused engine executes, so the sample counts match what
+/// [`AttentionBackend::run`] reports.
 pub fn selection_detail(
     kv: &KvPair,
     sorted: &SortedColumns,
@@ -93,18 +96,6 @@ pub fn selection_detail(
             SelectionSample { n, m, candidates: res.candidates.len(), kept }
         }
     }
-}
-
-fn exact_scores(kv: &KvPair, query: &[f32], rows: &[usize]) -> Vec<f64> {
-    rows.iter()
-        .map(|&i| {
-            kv.key_row(i)
-                .iter()
-                .zip(query)
-                .map(|(k, q)| *k as f64 * *q as f64)
-                .sum()
-        })
-        .collect()
 }
 
 /// Evaluate a backend on a workload.
@@ -176,8 +167,15 @@ fn eval_wikimovies(backend: AttentionBackend, budget: EvalBudget) -> BackendEval
     for _ in 0..budget.kb_episodes {
         let ep = wikimovies::generate_episode(&mut rng, wikimovies::KbConfig::default());
         let sorted = SortedColumns::preprocess(&ep.kv.key, ep.kv.n, ep.kv.d);
-        for q in &ep.queries {
-            let (_, sel) = backend.run(&ep.kv, Some(&sorted), &q.embedding);
+        // all of an episode's queries share one K/V: run them as one
+        // pool-parallel batch through the fused engine
+        let flat: Vec<f32> = ep
+            .queries
+            .iter()
+            .flat_map(|q| q.embedding.iter().copied())
+            .collect();
+        let results = backend.run_batch(&ep.kv, Some(&sorted), &flat);
+        for (q, (_, sel)) in ep.queries.iter().zip(results) {
             ranked.push(wikimovies::rank_rows(&ep.kv, &q.embedding, &sel));
             relevant.push(q.relevant.clone());
             selected += sel.len();
@@ -217,18 +215,22 @@ fn eval_squad(backend: AttentionBackend, budget: EvalBudget) -> BackendEval {
         0,
     );
 
+    // the backend itself also runs as one pool-parallel batch over the
+    // shared K/V — the fused engine path, bit-identical to per-query
+    // `backend.run`
+    let results = backend.run_batch(&trace.kv, Some(&sorted), &trace.queries[..count * trace.d]);
+
     let mut fidelity = 0.0;
     let mut selected = 0usize;
     let mut recall_sum = 0.0;
     let mut samples = Vec::with_capacity(count);
-    for i in 0..count {
+    for (i, (out, sel)) in results.iter().enumerate() {
         let q = trace.query(i);
-        let (out, sel) = backend.run(&trace.kv, Some(&sorted), q);
         let exact = &exact_flat[i * trace.d..(i + 1) * trace.d];
-        fidelity += output_fidelity(&out, exact);
+        fidelity += output_fidelity(out, exact);
         selected += sel.len();
         let scores = squad::exact_scores(&trace, i);
-        recall_sum += topk_recall(&scores, &sel, k);
+        recall_sum += topk_recall(&scores, sel, k);
         samples.push(selection_detail(&trace.kv, &sorted, q, backend));
     }
     BackendEval {

@@ -22,7 +22,10 @@
 //!   micro-kernels shared with the quantized datapath, a reusable
 //!   zero-allocation [`attention::Workspace`], and a persistent
 //!   thread pool for parallel batch execution.
-//! * [`approx`] — §IV greedy candidate selection + post-scoring.
+//! * [`approx`] — §IV greedy candidate selection + post-scoring, and
+//!   the fused zero-allocation engine ([`approx::engine`]) that runs
+//!   the whole selective pipeline in one pass; every selective
+//!   [`model::AttentionBackend`] variant serves from it.
 //! * [`sim`] — the cycle-level model of the accelerator (§III/§V
 //!   timing: base pipeline 3n+27 latency / n+9 throughput, approximate
 //!   pipeline M+C+2K+α), with per-module activity counters.

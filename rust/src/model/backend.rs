@@ -1,11 +1,21 @@
 //! Pluggable attention backends: the experiments swap these inside the
 //! MemN2N forward pass (and the raw-attention sweeps) to measure the
 //! accuracy impact of each scheme (Figs. 11–13).
+//!
+//! Every variant dispatches into a fused execution path — `Exact`
+//! through the one-pass tiled kernel (`attention::kernel`), the
+//! quantized variants through the zero-allocation fixed-point pipeline
+//! over once-per-batch prequantized K/V, and the selective variants
+//! through the fused approximate engine (`approx::engine`). Batch
+//! execution ([`AttentionBackend::run_batch`]) runs on the shared
+//! kernel thread pool for *all* variants, with per-thread scratch and
+//! K/V + sortedKey shared read-only.
 
-use crate::approx::{greedy_select, postscore_select, SortedColumns};
+use crate::approx::{engine, SelectivePlan, SortedColumns};
 use crate::attention::{
-    attention, attention_masked, kernel, quantized_attention_paper, KvPair,
+    attention, kernel, quantized_attention_into, ExpLut, KvPair, QuantKv,
 };
+use crate::fixedpoint::QFormat;
 
 /// How many candidate-selection iterations to run, expressed the way
 /// the paper sweeps it: as a fraction of n (Fig. 11 uses n, n/2, n/4,
@@ -53,9 +63,59 @@ impl AttentionBackend {
         AttentionBackend::Approximate { m: MIters::FractionOfN(0.125), t_pct: 10.0 }
     }
 
-    /// Run this backend for one query. `sorted` must be the
-    /// preprocessed key matrix when the backend uses candidate
-    /// selection (pass `None` to have it computed on the fly).
+    /// Whether this backend consumes the column-sorted key matrix
+    /// (§IV-C comprehension-time preprocessing). Only `CandidatesOnly`
+    /// and `Approximate` do; every other variant — `PostScoringOnly`
+    /// included — ignores `sorted` entirely.
+    pub fn needs_sorted(&self) -> bool {
+        matches!(
+            self,
+            AttentionBackend::CandidatesOnly { .. } | AttentionBackend::Approximate { .. }
+        )
+    }
+
+    /// The engine plan for the selective variants, with M resolved
+    /// against n; `None` for the dense (all-rows) variants.
+    fn plan(&self, n: usize) -> Option<SelectivePlan> {
+        match *self {
+            AttentionBackend::CandidatesOnly { m } => {
+                Some(SelectivePlan { m_iters: Some(m.resolve(n)), t_pct: None })
+            }
+            AttentionBackend::PostScoringOnly { t_pct } => {
+                Some(SelectivePlan { m_iters: None, t_pct: Some(t_pct) })
+            }
+            AttentionBackend::Approximate { m, t_pct } => {
+                Some(SelectivePlan { m_iters: Some(m.resolve(n)), t_pct: Some(t_pct) })
+            }
+            _ => None,
+        }
+    }
+
+    /// Fixed-point execution parameters for the quantized variants.
+    /// The exponent LUT comes from the process-wide cache
+    /// ([`ExpLut::cached`]) — built once per plane, never per query.
+    fn quant_params(&self) -> Option<(QFormat, &'static ExpLut)> {
+        match *self {
+            AttentionBackend::Quantized => {
+                let fmt = QFormat::PAPER_INPUT;
+                Some((fmt, ExpLut::cached(2 * fmt.frac_bits)))
+            }
+            AttentionBackend::QuantizedBits { i_bits, f_bits } => {
+                Some((QFormat::new(i_bits, f_bits), ExpLut::cached(2 * f_bits)))
+            }
+            _ => None,
+        }
+    }
+
+    /// Run this backend for one query.
+    ///
+    /// `sorted` contract: only backends with [`Self::needs_sorted`]
+    /// read it. For those, pass the per-context preprocessed copy
+    /// (e.g. [`crate::coordinator::KvContext::sorted`]); `None`
+    /// recomputes it on the fly — once per call, so serving paths
+    /// should always supply the cached copy. Variants that do not use
+    /// candidate selection never touch, copy, or thread `sorted`
+    /// through.
     ///
     /// Returns the output vector and the set of rows that entered the
     /// softmax (all rows for Exact/Quantized) — the selection the
@@ -66,96 +126,107 @@ impl AttentionBackend {
         sorted: Option<&SortedColumns>,
         query: &[f32],
     ) -> (Vec<f32>, Vec<usize>) {
-        match *self {
-            AttentionBackend::Exact => (attention(kv, query), (0..kv.n).collect()),
-            AttentionBackend::Quantized => {
-                let (out, _) = quantized_attention_paper(kv, query);
-                (out, (0..kv.n).collect())
-            }
-            AttentionBackend::QuantizedBits { i_bits, f_bits } => {
-                let fmt = crate::fixedpoint::QFormat::new(i_bits, f_bits);
-                let lut = crate::attention::ExpLut::new(2 * f_bits);
-                let (out, _) = crate::attention::quantized_attention(kv, query, fmt, &lut);
-                (out, (0..kv.n).collect())
-            }
-            AttentionBackend::CandidatesOnly { m } => {
-                let owned;
-                let s = match sorted {
-                    Some(s) => s,
-                    None => {
-                        owned = SortedColumns::preprocess(&kv.key, kv.n, kv.d);
-                        &owned
-                    }
-                };
-                let res = greedy_select(s, query, m.resolve(kv.n));
-                let out = attention_masked(kv, query, &res.candidates);
-                (out, res.candidates)
-            }
-            AttentionBackend::PostScoringOnly { t_pct } => {
-                let all: Vec<usize> = (0..kv.n).collect();
-                let scores = exact_scores(kv, query, &all);
-                let kept = postscore_select(&scores, &all, t_pct);
-                let out = attention_masked(kv, query, &kept);
-                (out, kept)
-            }
-            AttentionBackend::Approximate { m, t_pct } => {
-                let owned;
-                let s = match sorted {
-                    Some(s) => s,
-                    None => {
-                        owned = SortedColumns::preprocess(&kv.key, kv.n, kv.d);
-                        &owned
-                    }
-                };
-                let res = greedy_select(s, query, m.resolve(kv.n));
-                let scores = exact_scores(kv, query, &res.candidates);
-                let kept = postscore_select(&scores, &res.candidates, t_pct);
-                let out = attention_masked(kv, query, &kept);
-                (out, kept)
-            }
+        if *self == AttentionBackend::Exact {
+            return (attention(kv, query), (0..kv.n).collect());
         }
+        if let Some((fmt, lut)) = self.quant_params() {
+            let qkv = QuantKv::new(kv, fmt);
+            let mut out = vec![0.0f32; kv.d];
+            kernel::with_workspace(|ws| quantized_attention_into(&qkv, query, lut, ws, &mut out));
+            return (out, (0..kv.n).collect());
+        }
+        let plan = self.plan(kv.n).expect("dense variants handled above");
+        let owned;
+        let sorted = if self.needs_sorted() {
+            Some(match sorted {
+                Some(s) => s,
+                None => {
+                    owned = SortedColumns::preprocess(&kv.key, kv.n, kv.d);
+                    &owned
+                }
+            })
+        } else {
+            None
+        };
+        engine::with_scratch(|scratch| {
+            let mut out = vec![0.0f32; kv.d];
+            engine::selective_attention_into(kv, sorted, query, plan, scratch, &mut out);
+            (out, scratch.kept().to_vec())
+        })
     }
 
     /// Run this backend over a row-major `b x d` query batch sharing
-    /// one K/V. `Exact` goes through the fused, query-tiled, parallel
-    /// kernel (K/V streamed once per query block across the thread
-    /// pool); the selective backends precompute the sorted key copy
-    /// once and fall back to per-query execution, since each query
-    /// selects a different row subset.
+    /// one K/V. Every variant executes through the shared kernel
+    /// thread pool (small batches run inline — the pool round-trip
+    /// would dominate): `Exact` through the fused query-tiled kernel
+    /// (K/V streamed once per query block), the quantized variants
+    /// through the zero-alloc fixed-point pipeline over K/V quantized
+    /// **once per batch**, and the selective variants through the
+    /// fused approximate engine with per-thread scratch.
+    ///
+    /// `sorted` contract: as on [`Self::run`], but resolved once per
+    /// batch — when a candidate-selecting backend gets `None`, the
+    /// sorted copy is built a single time and shared read-only across
+    /// all queries and worker threads. Backends without
+    /// [`Self::needs_sorted`] never receive or copy it.
+    ///
+    /// Per-query outputs and selections are bit-identical to
+    /// [`Self::run`] regardless of batch size or thread count.
     pub fn run_batch(
         &self,
         kv: &KvPair,
         sorted: Option<&SortedColumns>,
         queries: &[f32],
     ) -> Vec<(Vec<f32>, Vec<usize>)> {
-        assert_eq!(queries.len() % kv.d, 0);
+        let d = kv.d;
+        assert_eq!(queries.len() % d, 0, "queries are not a multiple of d");
+        let b = queries.len() / d;
         if *self == AttentionBackend::Exact {
             let flat = kernel::parallel_attention_batch(kv, queries, 0);
             return flat
-                .chunks_exact(kv.d)
+                .chunks_exact(d)
                 .map(|out| (out.to_vec(), (0..kv.n).collect()))
                 .collect();
         }
+        // below this much streaming work, run on the calling thread
+        let executors = if b * kv.n * d < kernel::PARALLEL_MIN_MACS { 1 } else { 0 };
+        let mut results: Vec<(Vec<f32>, Vec<usize>)> = vec![(Vec::new(), Vec::new()); b];
+        if let Some((fmt, lut)) = self.quant_params() {
+            // quantize K/V once per batch (the device does it once per
+            // context at comprehension time — §III-C)
+            let qkv = QuantKv::new(kv, fmt);
+            kernel::parallel_map_into(&mut results, executors, |i, slot| {
+                let q = &queries[i * d..(i + 1) * d];
+                let mut out = vec![0.0f32; d];
+                kernel::with_workspace(|ws| {
+                    quantized_attention_into(&qkv, q, lut, ws, &mut out)
+                });
+                *slot = (out, (0..kv.n).collect());
+            });
+            return results;
+        }
+        let plan = self.plan(kv.n).expect("dense variants handled above");
         let owned;
-        let sorted = match (sorted, self.uses_candidate_selection()) {
-            (Some(s), _) => Some(s),
-            (None, true) => {
-                owned = SortedColumns::preprocess(&kv.key, kv.n, kv.d);
-                Some(&owned)
-            }
-            (None, false) => None,
+        let sorted = if self.needs_sorted() {
+            Some(match sorted {
+                Some(s) => s,
+                None => {
+                    owned = SortedColumns::preprocess(&kv.key, kv.n, kv.d);
+                    &owned
+                }
+            })
+        } else {
+            None
         };
-        queries
-            .chunks_exact(kv.d)
-            .map(|q| self.run(kv, sorted, q))
-            .collect()
-    }
-
-    fn uses_candidate_selection(&self) -> bool {
-        matches!(
-            self,
-            AttentionBackend::CandidatesOnly { .. } | AttentionBackend::Approximate { .. }
-        )
+        kernel::parallel_map_into(&mut results, executors, |i, slot| {
+            let q = &queries[i * d..(i + 1) * d];
+            engine::with_scratch(|scratch| {
+                let mut out = vec![0.0f32; d];
+                engine::selective_attention_into(kv, sorted, q, plan, scratch, &mut out);
+                *slot = (out, scratch.kept().to_vec());
+            });
+        });
+        results
     }
 
     pub fn label(&self) -> String {
@@ -172,18 +243,6 @@ impl AttentionBackend {
             }
         }
     }
-}
-
-fn exact_scores(kv: &KvPair, query: &[f32], rows: &[usize]) -> Vec<f64> {
-    rows.iter()
-        .map(|&i| {
-            kv.key_row(i)
-                .iter()
-                .zip(query)
-                .map(|(k, q)| *k as f64 * *q as f64)
-                .sum()
-        })
-        .collect()
 }
 
 #[cfg(test)]
@@ -255,11 +314,35 @@ mod tests {
         let sorted = SortedColumns::preprocess(&kv.key, kv.n, kv.d);
         for backend in [
             AttentionBackend::Exact,
+            AttentionBackend::Quantized,
+            AttentionBackend::QuantizedBits { i_bits: 3, f_bits: 5 },
             AttentionBackend::conservative(),
+            AttentionBackend::CandidatesOnly { m: MIters::FractionOfN(0.25) },
             AttentionBackend::PostScoringOnly { t_pct: 5.0 },
         ] {
             let batch = backend.run_batch(&kv, Some(&sorted), &queries);
             assert_eq!(batch.len(), 10);
+            for (b, q) in queries.chunks_exact(32).enumerate() {
+                let (out, sel) = backend.run(&kv, Some(&sorted), q);
+                assert_eq!(batch[b].0, out, "{} query {b}", backend.label());
+                assert_eq!(batch[b].1, sel, "{} query {b}", backend.label());
+            }
+        }
+    }
+
+    #[test]
+    fn pool_parallel_batch_bit_matches_inline_run() {
+        // large enough that run_batch engages the thread pool
+        let (kv, _) = problem(10, 96, 32);
+        let mut rng = Rng::new(11);
+        let queries = rng.normal_vec(64 * 32, 1.0);
+        let sorted = SortedColumns::preprocess(&kv.key, kv.n, kv.d);
+        for backend in [
+            AttentionBackend::conservative(),
+            AttentionBackend::aggressive(),
+            AttentionBackend::Quantized,
+        ] {
+            let batch = backend.run_batch(&kv, Some(&sorted), &queries);
             for (b, q) in queries.chunks_exact(32).enumerate() {
                 let (out, sel) = backend.run(&kv, Some(&sorted), q);
                 assert_eq!(batch[b].0, out, "{} query {b}", backend.label());
@@ -291,5 +374,35 @@ mod tests {
         let (b_out, b_sel) = b.run(&kv, None, &q);
         assert_eq!(a_sel, b_sel);
         assert_eq!(a_out, b_out);
+    }
+
+    #[test]
+    fn postscore_only_ignores_sorted_entirely() {
+        // a sorted matrix from a *different* KV must be irrelevant:
+        // PostScoringOnly never reads it (the Option is not threaded
+        // into the engine at all)
+        let (kv, q) = problem(12, 40, 8);
+        let (other, _) = problem(13, 64, 8);
+        let wrong = SortedColumns::preprocess(&other.key, other.n, other.d);
+        let backend = AttentionBackend::PostScoringOnly { t_pct: 5.0 };
+        let (want, want_sel) = backend.run(&kv, None, &q);
+        let (got, got_sel) = backend.run(&kv, Some(&wrong), &q);
+        assert_eq!(got, want);
+        assert_eq!(got_sel, want_sel);
+    }
+
+    #[test]
+    fn quantized_bits_reuses_cached_lut() {
+        // two runs must hand out the same static LUT instance
+        let (kv, q) = problem(14, 32, 16);
+        let backend = AttentionBackend::QuantizedBits { i_bits: 5, f_bits: 3 };
+        let (lut_a, lut_b) = (
+            backend.quant_params().unwrap().1,
+            backend.quant_params().unwrap().1,
+        );
+        assert!(std::ptr::eq(lut_a, lut_b));
+        let (out_a, _) = backend.run(&kv, None, &q);
+        let (out_b, _) = backend.run(&kv, None, &q);
+        assert_eq!(out_a, out_b);
     }
 }

@@ -8,6 +8,6 @@ pub mod backend;
 pub mod memn2n;
 pub mod weights;
 
-pub use backend::AttentionBackend;
+pub use backend::{AttentionBackend, MIters};
 pub use memn2n::{BabiTestSet, Memn2n};
 pub use weights::Memn2nWeights;

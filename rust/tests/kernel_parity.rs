@@ -7,11 +7,20 @@
 //! The oracle here is implemented from the decomposed module functions
 //! (which still are the naive three-pass computation), NOT from
 //! `attention` — that wrapper now delegates to the kernel under test.
+//!
+//! The second half pins the fused approximate engine: every selective
+//! `AttentionBackend` variant, via `run` and `run_batch`, must return
+//! **bit-identical** outputs and **identical** kept-row sets to the
+//! composed reference chain `greedy_select` → `exact_scores` →
+//! `postscore_select` → `attention_masked`, across batch sizes and
+//! M/T corner cases.
 
+use a3::approx::{exact_scores, greedy_select, postscore_select, SortedColumns};
 use a3::attention::{
     attention, attention_batch, attention_masked, dot_scores, kernel, softmax_weights,
     weighted_sum, KvPair, Workspace,
 };
+use a3::model::{AttentionBackend, MIters};
 use a3::testutil::{assert_allclose, check, Rng};
 
 fn random_kv(rng: &mut Rng, n: usize, d: usize) -> KvPair {
@@ -146,6 +155,148 @@ fn workspace_reuse_across_shapes_is_deterministic() {
         let mut again = vec![0.0f32; q_a.len()];
         kernel::attention_batch_into(&kv_a, &q_a, &mut again, &mut ws);
         assert_eq!(first, again, "trial {trial}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fused approximate engine vs the composed reference chain
+// ---------------------------------------------------------------------------
+
+/// The composed reference chain the fused engine must reproduce
+/// bit-for-bit, written out per backend variant.
+fn reference_chain(
+    kv: &KvPair,
+    sorted: &SortedColumns,
+    q: &[f32],
+    backend: AttentionBackend,
+) -> (Vec<f32>, Vec<usize>) {
+    let n = kv.n;
+    let kept = match backend {
+        AttentionBackend::CandidatesOnly { m } => {
+            greedy_select(sorted, q, m.resolve(n)).candidates
+        }
+        AttentionBackend::PostScoringOnly { t_pct } => {
+            let all: Vec<usize> = (0..n).collect();
+            let scores = exact_scores(kv, q, &all);
+            postscore_select(&scores, &all, t_pct)
+        }
+        AttentionBackend::Approximate { m, t_pct } => {
+            let res = greedy_select(sorted, q, m.resolve(n));
+            let scores = exact_scores(kv, q, &res.candidates);
+            postscore_select(&scores, &res.candidates, t_pct)
+        }
+        _ => (0..n).collect(),
+    };
+    (attention_masked(kv, q, &kept), kept)
+}
+
+fn selective_backends(n: usize) -> Vec<AttentionBackend> {
+    vec![
+        AttentionBackend::CandidatesOnly { m: MIters::FractionOfN(0.5) },
+        AttentionBackend::CandidatesOnly { m: MIters::Absolute(2 * n * 8) },
+        AttentionBackend::PostScoringOnly { t_pct: 5.0 },
+        AttentionBackend::Approximate { m: MIters::FractionOfN(0.5), t_pct: 5.0 },
+        AttentionBackend::Approximate { m: MIters::FractionOfN(0.125), t_pct: 10.0 },
+    ]
+}
+
+#[test]
+fn fused_backends_bit_match_reference_chain() {
+    check(40, |rng: &mut Rng| {
+        let (n, d) = (rng.range(1, 96), rng.range(1, 32));
+        let kv = random_kv(rng, n, d);
+        let sorted = SortedColumns::preprocess(&kv.key, n, d);
+        let q = rng.normal_vec(d, 1.0);
+        for backend in selective_backends(n) {
+            let (want_out, want_kept) = reference_chain(&kv, &sorted, &q, backend);
+            let (out, kept) = backend.run(&kv, Some(&sorted), &q);
+            assert_eq!(out, want_out, "{} (n={n} d={d})", backend.label());
+            assert_eq!(kept, want_kept, "{} (n={n} d={d})", backend.label());
+        }
+    });
+}
+
+#[test]
+fn fused_backend_batches_bit_match_reference_chain() {
+    // batch sizes 1 / 8 / 64 cover the inline path, the coordinator's
+    // default batch cap, and the pool-parallel path
+    let mut rng = Rng::new(21);
+    let (n, d) = (96, 32);
+    let kv = random_kv(&mut rng, n, d);
+    let sorted = SortedColumns::preprocess(&kv.key, n, d);
+    for b in [1usize, 8, 64] {
+        let queries = rng.normal_vec(b * d, 1.0);
+        for backend in selective_backends(n) {
+            let got = backend.run_batch(&kv, Some(&sorted), &queries);
+            assert_eq!(got.len(), b, "{} b={b}", backend.label());
+            for (i, q) in queries.chunks_exact(d).enumerate() {
+                let (want_out, want_kept) = reference_chain(&kv, &sorted, q, backend);
+                assert_eq!(got[i].0, want_out, "{} b={b} query {i}", backend.label());
+                assert_eq!(got[i].1, want_kept, "{} b={b} query {i}", backend.label());
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_engine_m_and_t_corner_cases() {
+    let mut rng = Rng::new(22);
+    let (n, d) = (48, 16);
+    let kv = random_kv(&mut rng, n, d);
+    let sorted = SortedColumns::preprocess(&kv.key, n, d);
+    let q = rng.normal_vec(d, 1.0);
+    let corner_backends = [
+        // M = 0: no iterations, empty candidate set, exact-zero output
+        AttentionBackend::CandidatesOnly { m: MIters::Absolute(0) },
+        AttentionBackend::Approximate { m: MIters::Absolute(0), t_pct: 5.0 },
+        // M = n and M = 2nd (every component inspected)
+        AttentionBackend::CandidatesOnly { m: MIters::Absolute(n) },
+        AttentionBackend::Approximate { m: MIters::Absolute(2 * n * d), t_pct: 5.0 },
+        // T near 0 keeps every candidate; T = 100 keeps only max ties
+        AttentionBackend::PostScoringOnly { t_pct: 1e-9 },
+        AttentionBackend::PostScoringOnly { t_pct: 100.0 },
+        AttentionBackend::Approximate { m: MIters::FractionOfN(0.5), t_pct: 1e-9 },
+        AttentionBackend::Approximate { m: MIters::FractionOfN(0.5), t_pct: 100.0 },
+    ];
+    for backend in corner_backends {
+        let (want_out, want_kept) = reference_chain(&kv, &sorted, &q, backend);
+        let (out, kept) = backend.run(&kv, Some(&sorted), &q);
+        assert_eq!(out, want_out, "{}", backend.label());
+        assert_eq!(kept, want_kept, "{}", backend.label());
+        let batch = backend.run_batch(&kv, Some(&sorted), &q);
+        assert_eq!(batch[0].0, want_out, "{} batch-1", backend.label());
+        assert_eq!(batch[0].1, want_kept, "{} batch-1", backend.label());
+    }
+    // M = 0 really is the empty candidate set
+    let (out, kept) =
+        AttentionBackend::CandidatesOnly { m: MIters::Absolute(0) }.run(&kv, Some(&sorted), &q);
+    assert!(kept.is_empty());
+    assert_eq!(out, vec![0.0; d]);
+    // a zero query drives an empty candidate set through the full plan
+    let zq = vec![0.0f32; d];
+    let (out, kept) = AttentionBackend::conservative().run(&kv, Some(&sorted), &zq);
+    assert!(kept.is_empty());
+    assert_eq!(out, vec![0.0; d]);
+}
+
+#[test]
+fn quantized_batches_bit_match_per_query_run() {
+    let mut rng = Rng::new(23);
+    let (n, d) = (64, 32);
+    let kv = random_kv(&mut rng, n, d);
+    for backend in [
+        AttentionBackend::Quantized,
+        AttentionBackend::QuantizedBits { i_bits: 6, f_bits: 2 },
+    ] {
+        for b in [1usize, 8, 64] {
+            let queries = rng.normal_vec(b * d, 1.0);
+            let got = backend.run_batch(&kv, None, &queries);
+            for (i, q) in queries.chunks_exact(d).enumerate() {
+                let (want_out, want_sel) = backend.run(&kv, None, q);
+                assert_eq!(got[i].0, want_out, "{} b={b} query {i}", backend.label());
+                assert_eq!(got[i].1, want_sel, "{} b={b} query {i}", backend.label());
+            }
+        }
     }
 }
 

@@ -1,18 +1,21 @@
 //! Quickstart: the A³ public API in one file.
 //!
 //! ```bash
-//! make artifacts          # once: python compile path
 //! cargo run --release --example quickstart
+//! # optional PJRT finale: make artifacts && cargo run --release \
+//! #   --features pjrt --example quickstart
 //! ```
 //!
 //! Walks through: exact attention → fixed-point pipeline → approximate
 //! attention (greedy candidates + post-scoring) → cycle-level timing +
-//! energy of the same queries → running the AOT pallas kernel via PJRT.
+//! energy of the same queries → serving through `a3::api` → (with the
+//! `pjrt` feature) running the AOT pallas kernel via PJRT.
 
+use a3::api::{AttentionBackend, Dims, EngineBuilder};
 use a3::approx::{approximate_attention, SortedColumns};
 use a3::attention::{attention, quantized_attention_paper, KvPair};
 use a3::energy::{attribute, Table1};
-use a3::sim::{ApproxPipeline, ApproxQuery, BasePipeline, Dims};
+use a3::sim::{ApproxPipeline, ApproxQuery, BasePipeline};
 use a3::testutil::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -50,7 +53,7 @@ fn main() -> anyhow::Result<()> {
     // 5. What does the accelerator charge for those?
     let base = BasePipeline::new_untimed(Dims::paper()).run_batch(1000);
     let approx_q = ApproxQuery { m: n / 2, candidates: kept.len() * 3, kept: kept.len() };
-    let appr = ApproxPipeline::new_untimed(Dims::paper()).run_batch(&vec![approx_q; 1000]);
+    let appr = ApproxPipeline::new_untimed(Dims::paper()).run_batch(&[approx_q; 1000]);
     println!(
         "cycle simulator     : base {:.2} M queries/s | approximate {:.2} M queries/s",
         base.throughput_qps() / 1e6,
@@ -63,7 +66,35 @@ fn main() -> anyhow::Result<()> {
         attribute(&t1, &appr).total_j() / 1000.0 * 1e9
     );
 
-    // 6. The same computation through the AOT-compiled pallas kernel.
+    // 6. Serving through `a3::api`: typed config → engine → handles.
+    //    Registration is comprehension time (the engine prewarms the
+    //    sorted-key cache); submits are non-blocking and pair with
+    //    tickets.
+    let engine = EngineBuilder::new()
+        .units(2)
+        .backend(AttentionBackend::conservative())
+        .dims(Dims::paper())
+        .max_batch(8)
+        .build()?;
+    let ctx = engine.register_context(kv.clone())?;
+    let ticket = engine.submit(&ctx, query.clone())?;
+    engine.drain()?; // flush the tail batch
+    let response = engine
+        .recv_timeout(std::time::Duration::from_secs(5))?
+        .expect("drained response");
+    assert_eq!(response.id, ticket.id);
+    println!(
+        "api serving         : ticket {} -> out[0..4] = {:?} ({} rows selected)",
+        ticket.id,
+        &response.output[..4],
+        response.selected_rows
+    );
+    let report = engine.run_random(&ctx, 256, 7)?;
+    println!("api run_random      : {}", report.summary());
+
+    // 7. The same computation through the AOT-compiled pallas kernel
+    //    (needs `--features pjrt` and `make artifacts`).
+    #[cfg(feature = "pjrt")]
     match a3::runtime::PjrtEngine::new() {
         Ok(mut engine) => {
             let out = engine.attention(
@@ -79,9 +110,14 @@ fn main() -> anyhow::Result<()> {
                 .zip(&exact)
                 .map(|(a, b)| (a - b).abs())
                 .fold(0.0f32, f32::max);
-            println!("PJRT pallas kernel  : out[0..4] = {:?} (|diff| vs rust = {max_diff:.2e})", &out[..4]);
+            println!(
+                "PJRT pallas kernel  : out[0..4] = {:?} (|diff| vs rust = {max_diff:.2e})",
+                &out[..4]
+            );
         }
         Err(e) => println!("PJRT unavailable ({e}); run `make artifacts` first"),
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("PJRT path skipped   : rebuild with --features pjrt to run the AOT kernel");
     Ok(())
 }

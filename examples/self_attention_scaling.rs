@@ -1,20 +1,19 @@
 //! Multi-unit scaling on BERT-style self-attention (§III-C "Use of
 //! Multiple A³ Units" + §VI-C's claim that 6–7 conservative units beat
-//! a Titan V).
+//! a Titan V), driven through `a3::api`.
 //!
 //! Serves one full self-attention layer (320 queries sharing one K/V)
 //! through 1..8 unit replicas, base and approximate, comparing against
-//! the GPU cost model — including the AOT PJRT execution of the whole
-//! layer for functional verification.
+//! the GPU cost model — with the `pjrt` feature it also executes the
+//! whole layer through the AOT kernel for functional verification.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example self_attention_scaling
+//! cargo run --release --example self_attention_scaling
 //! ```
 
+use a3::api::{AttentionBackend, Dims, EngineBuilder};
 use a3::baseline::CostModel;
-use a3::coordinator::{KvContext, Query, Scheduler, ServeConfig, Server, UnitConfig, UnitKind};
-use a3::model::AttentionBackend;
-use a3::sim::{preprocess_cycles, Dims};
+use a3::sim::preprocess_cycles;
 use a3::testutil::Rng;
 use a3::workloads::squad;
 
@@ -30,13 +29,8 @@ fn main() -> anyhow::Result<()> {
         "units", "base (Mq/s)", "approx-cons (Mq/s)", "vs GPU"
     );
     for units in [1usize, 2, 4, 6, 7, 8] {
-        let base_qps = serve(&trace, units, UnitKind::Base, false);
-        let appr_qps = serve(
-            &trace,
-            units,
-            UnitKind::Approximate { backend: AttentionBackend::conservative() },
-            true,
-        );
+        let base_qps = serve(&trace, units, AttentionBackend::Exact, false)?;
+        let appr_qps = serve(&trace, units, AttentionBackend::conservative(), true)?;
         println!(
             "{:>6} {:>18.3} {:>18.3} {:>9.2}x",
             units,
@@ -49,6 +43,7 @@ fn main() -> anyhow::Result<()> {
 
     // functional check: the whole layer through the AOT b320 kernel
     // (the artifact applies the 1/sqrt(d) transformer scaling itself)
+    #[cfg(feature = "pjrt")]
     if let Ok(mut engine) = a3::runtime::PjrtEngine::new() {
         let got = engine.attention(
             a3::runtime::ArtifactId::AttentionB320,
@@ -73,24 +68,28 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Serve the layer's 320 queries on `units` replicas; returns
-/// simulated queries/s (amortized preprocessing charged when approx).
-fn serve(trace: &squad::SelfAttnTrace, units: usize, kind: UnitKind, approx: bool) -> f64 {
-    let ctx = KvContext::new(0, trace.kv.clone());
-    let sched = Scheduler::replicated(UnitConfig { kind, dims: Dims::paper() }, units);
-    let mut server = Server::new(vec![ctx], sched, ServeConfig::default());
-    let queries: Vec<Query> = (0..trace.n)
-        .map(|i| Query {
-            id: i as u64,
-            context: 0,
-            embedding: trace.query(i).to_vec(),
-            arrival_ns: 0,
-        })
+/// Serve the layer's queries on `units` replicas through the engine;
+/// returns simulated queries/s (amortized preprocessing charged when
+/// approximate).
+fn serve(
+    trace: &squad::SelfAttnTrace,
+    units: usize,
+    backend: AttentionBackend,
+    approx: bool,
+) -> anyhow::Result<f64> {
+    let engine = EngineBuilder::new()
+        .units(units)
+        .backend(backend)
+        .dims(Dims::paper())
+        .build()?;
+    let ctx = engine.register_context(trace.kv.clone())?;
+    let stream = (0..trace.n)
+        .map(|i| (ctx.clone(), trace.query(i).to_vec()))
         .collect();
-    let report = server.serve(queries);
+    let (_tickets, report) = engine.run_stream(stream)?;
     let mut cycles = report.sim_makespan;
     if approx {
         cycles += preprocess_cycles(Dims::paper()); // one sort per K matrix
     }
-    trace.n as f64 / a3::sim::cycles_to_seconds(cycles)
+    Ok(trace.n as f64 / a3::sim::cycles_to_seconds(cycles))
 }

@@ -1,12 +1,16 @@
-//! End-to-end serving driver (the DESIGN.md §6 "E2E" deliverable).
+//! End-to-end serving driver (the DESIGN.md §6 "E2E" deliverable),
+//! written entirely against `a3::api`.
 //!
 //! Loads the **trained** MemN2N artifacts, registers every test story
-//! as a KV context, and serves the full bAbI test set through the
-//! coordinator three times — exact units, then conservative and
+//! as a KV context through `Engine::register_context`, and serves the
+//! full bAbI test set three times — exact units, then conservative and
 //! aggressive approximate units — reporting answer accuracy, host
-//! latency, and simulated accelerator throughput for each. Finally it
-//! answers a batch of stories through the AOT PJRT answer graph to
-//! prove the compiled path agrees.
+//! latency, and simulated accelerator throughput for each. With the
+//! `pjrt` feature it finally answers a batch of stories through the
+//! AOT PJRT answer graph to prove the compiled path agrees.
+//!
+//! Without artifacts (e.g. in CI) it serves a synthetic story set
+//! instead, so the public serving surface is still exercised.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_qa
@@ -14,36 +18,143 @@
 
 use std::time::Instant;
 
-use a3::coordinator::{KvContext, Query, Scheduler, ServeConfig, Server, UnitConfig, UnitKind};
-use a3::model::{AttentionBackend, BabiTestSet, Memn2n};
-use a3::sim::Dims;
+use a3::api::{AttentionBackend, Dims, EngineBuilder, KvPair};
+use a3::model::{BabiTestSet, Memn2n, Memn2nWeights};
 
 fn main() -> anyhow::Result<()> {
-    let weights = a3::model::Memn2nWeights::load_default()
-        .map_err(|e| anyhow::anyhow!("{e}\nrun `make artifacts` first"))?;
+    let weights = match Memn2nWeights::load_default() {
+        Ok(w) => w,
+        Err(e) => {
+            println!(
+                "MemN2N artifacts unavailable ({e}); run `make artifacts` for the trained \
+                 model.\nServing a synthetic story set through a3::api instead:\n"
+            );
+            return serve_synthetic();
+        }
+    };
     let test = BabiTestSet::load_default()?;
     println!(
         "loaded MemN2N (d={}, vocab={}, python-side training acc {:.3}) and {} test stories",
         weights.d, weights.vocab, weights.trained_accuracy, test.count
     );
 
-    for (label, kind, backend) in [
-        ("exact", UnitKind::Base, AttentionBackend::Exact),
-        (
-            "approx-conservative",
-            UnitKind::Approximate { backend: AttentionBackend::conservative() },
-            AttentionBackend::conservative(),
-        ),
-        (
-            "approx-aggressive",
-            UnitKind::Approximate { backend: AttentionBackend::aggressive() },
-            AttentionBackend::aggressive(),
-        ),
+    for (label, backend) in [
+        ("exact", AttentionBackend::Exact),
+        ("approx-conservative", AttentionBackend::conservative()),
+        ("approx-aggressive", AttentionBackend::aggressive()),
     ] {
-        serve_once(&weights, &test, label, kind, backend)?;
+        serve_once(&weights, &test, label, backend)?;
     }
 
     // The compiled path: batch of stories through the AOT answer graph.
+    #[cfg(feature = "pjrt")]
+    answer_through_pjrt(&weights, &test)?;
+    #[cfg(not(feature = "pjrt"))]
+    println!("\nPJRT answer-graph check skipped: rebuild with --features pjrt");
+    Ok(())
+}
+
+/// Serve every test story through one engine configuration.
+fn serve_once(
+    weights: &Memn2nWeights,
+    test: &BabiTestSet,
+    label: &str,
+    backend: AttentionBackend,
+) -> anyhow::Result<()> {
+    let model = Memn2n::new(weights.clone(), backend);
+    // per-story contexts never batch beyond 1; answer immediately
+    let engine = EngineBuilder::new()
+        .units(2)
+        .backend(backend)
+        .dims(Dims::new(50, weights.d))
+        .max_batch(1)
+        .max_wait_ns(0)
+        .build()?;
+
+    // comprehension time: register every story as a KV context
+    // (problems are kept for the classification pass below — the
+    // token-to-embedding pipeline runs once per story, not twice)
+    let t0 = Instant::now();
+    let mut stream = Vec::with_capacity(test.count);
+    let mut problems = Vec::with_capacity(test.count);
+    for s in 0..test.count {
+        let problem = model.story_problem(
+            test.story_tokens(s),
+            test.n_sent[s] as usize,
+            test.max_words,
+            test.story_query(s),
+        );
+        let handle = engine.register_context(problem.kv.clone())?;
+        stream.push((handle, problem.query.clone()));
+        problems.push(problem);
+    }
+    let comprehension = t0.elapsed();
+
+    let (tickets, report) = engine.run_stream(stream)?;
+
+    // classify from the served attention outputs (tickets[s] is story s)
+    let by_id: std::collections::HashMap<u64, &a3::api::Response> =
+        report.responses.iter().map(|r| (r.id, r)).collect();
+    let mut hits = 0usize;
+    for (s, ticket) in tickets.iter().enumerate() {
+        let r = *by_id.get(&ticket.id).expect("one response per ticket");
+        let problem = &problems[s];
+        // logits = (o + u) W using the served attention output
+        let mut best = (0usize, f32::NEG_INFINITY);
+        for v in 0..weights.vocab {
+            let mut logit = 0.0f32;
+            for j in 0..weights.d {
+                logit += (r.output[j] + problem.query[j]) * weights.w[j * weights.vocab + v];
+            }
+            if logit > best.1 {
+                best = (v, logit);
+            }
+        }
+        if best.0 as i32 == test.answer[s] {
+            hits += 1;
+        }
+    }
+    println!(
+        "\n[{label}] accuracy {:.1}% | comprehension {:.0} ms | host {} | sim throughput {:.2} M queries/s",
+        100.0 * hits as f64 / tickets.len() as f64,
+        comprehension.as_secs_f64() * 1e3,
+        report.summary(),
+        report.sim_throughput_qps() / 1e6,
+    );
+    Ok(())
+}
+
+/// No-artifacts fallback: synthetic per-story contexts through the
+/// same engine surface (registration → stream → report).
+fn serve_synthetic() -> anyhow::Result<()> {
+    let (n, d) = (50usize, 64usize);
+    let engine = EngineBuilder::new()
+        .units(2)
+        .backend(AttentionBackend::conservative())
+        .dims(Dims::new(n, d))
+        .max_batch(1)
+        .max_wait_ns(0)
+        .build()?;
+    let mut rng = a3::testutil::Rng::new(0x0A);
+    let mut stream = Vec::new();
+    for _ in 0..64 {
+        let kv = KvPair::new(n, d, rng.normal_vec(n * d, 1.0), rng.normal_vec(n * d, 1.0));
+        let handle = engine.register_context(kv)?;
+        stream.push((handle, rng.normal_vec(d, 1.0)));
+    }
+    let (tickets, report) = engine.run_stream(stream)?;
+    anyhow::ensure!(report.responses.len() == tickets.len(), "responses lost");
+    println!(
+        "[synthetic] served {} stories | host {} | sim throughput {:.2} M queries/s",
+        tickets.len(),
+        report.summary(),
+        report.sim_throughput_qps() / 1e6,
+    );
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn answer_through_pjrt(weights: &Memn2nWeights, test: &BabiTestSet) -> anyhow::Result<()> {
     let model = Memn2n::new(weights.clone(), AttentionBackend::Exact);
     let mut engine = a3::runtime::PjrtEngine::new()?;
     let t0 = Instant::now();
@@ -80,83 +191,6 @@ fn main() -> anyhow::Result<()> {
         "\nPJRT AOT answer graph: {hits}/{count} correct ({:.1}%), {:.1} queries/s end to end",
         100.0 * hits as f64 / count as f64,
         count as f64 / dt.as_secs_f64()
-    );
-    Ok(())
-}
-
-fn serve_once(
-    weights: &a3::model::Memn2nWeights,
-    test: &BabiTestSet,
-    label: &str,
-    kind: UnitKind,
-    backend: AttentionBackend,
-) -> anyhow::Result<()> {
-    let model = Memn2n::new(weights.clone(), backend);
-
-    // comprehension time: register every story as a KV context
-    let t0 = Instant::now();
-    let mut contexts = Vec::with_capacity(test.count);
-    let mut queries = Vec::with_capacity(test.count);
-    let mut answers = Vec::with_capacity(test.count);
-    for s in 0..test.count {
-        let problem = model.story_problem(
-            test.story_tokens(s),
-            test.n_sent[s] as usize,
-            test.max_words,
-            test.story_query(s),
-        );
-        contexts.push(KvContext::new(s as u32, problem.kv.clone()));
-        queries.push(Query {
-            id: s as u64,
-            context: s as u32,
-            embedding: problem.query.clone(),
-            arrival_ns: 0,
-        });
-        answers.push(test.answer[s]);
-    }
-    let comprehension = t0.elapsed();
-
-    let sched = Scheduler::replicated(UnitConfig { kind, dims: Dims::new(50, weights.d) }, 2);
-    // per-story contexts never batch beyond 1; answer immediately
-    let config = ServeConfig {
-        batch: a3::coordinator::BatchPolicy { max_batch: 1, max_wait_ns: 0 },
-        arrival_qps: None,
-        total_queries: queries.len(),
-    };
-    let mut server = Server::new(contexts, sched, config);
-    let report = server.serve(queries);
-
-    // classify from the served attention outputs
-    let mut hits = 0usize;
-    for r in &report.responses {
-        let s = r.id as usize;
-        let problem = model.story_problem(
-            test.story_tokens(s),
-            test.n_sent[s] as usize,
-            test.max_words,
-            test.story_query(s),
-        );
-        // logits = (o + u) W using the served attention output
-        let mut best = (0usize, f32::NEG_INFINITY);
-        for v in 0..weights.vocab {
-            let mut logit = 0.0f32;
-            for j in 0..weights.d {
-                logit += (r.output[j] + problem.query[j]) * weights.w[j * weights.vocab + v];
-            }
-            if logit > best.1 {
-                best = (v, logit);
-            }
-        }
-        if best.0 as i32 == answers[s] {
-            hits += 1;
-        }
-    }
-    println!(
-        "\n[{label}] accuracy {:.1}% | comprehension {:.0} ms | host {} | sim throughput {:.2} M queries/s",
-        100.0 * hits as f64 / report.responses.len() as f64,
-        comprehension.as_secs_f64() * 1e3,
-        report.metrics.summary(),
-        report.sim_throughput_qps() / 1e6,
     );
     Ok(())
 }

@@ -2,11 +2,13 @@
 //! platforms) and time the cycle simulator itself (it must never be
 //! the bottleneck of serving experiments).
 
+use a3::api::{EngineBuilder, KvPair};
 use a3::baseline::{measure_host_attention, measure_host_attention_batch};
 use a3::bench::{bench, black_box, budget};
 use a3::experiments::fig14;
 use a3::experiments::sweep::EvalBudget;
 use a3::sim::{ApproxPipeline, ApproxQuery, BasePipeline, Dims};
+use a3::testutil::Rng;
 
 fn main() {
     let (a, b) = fig14::run(EvalBudget::default()).expect("run `make artifacts` first");
@@ -28,6 +30,29 @@ fn main() {
             "batch-{batch:<3} tiled+pool  : {:>10.3} µs/query  ({:.0} queries/s)",
             mb.seconds_per_query * 1e6,
             mb.qps()
+        );
+    }
+
+    // The serving path end to end through the `a3::api` facade:
+    // saturating stream -> engine worker (batcher -> least-loaded
+    // scheduler -> fused kernels), with the sort-once percentile
+    // snapshot in the summary line.
+    println!("-- engine serving (a3::api) --");
+    let (n, d) = (a3::PAPER_N, a3::PAPER_D);
+    let mut rng = Rng::new(9);
+    let kv = KvPair::new(n, d, rng.normal_vec(n * d, 1.0), rng.normal_vec(n * d, 1.0));
+    for units in [1usize, 4] {
+        let engine = EngineBuilder::new()
+            .units(units)
+            .dims(Dims::paper())
+            .build()
+            .expect("engine");
+        let ctx = engine.register_context(kv.clone()).expect("register");
+        let report = engine.run_random(&ctx, 4096, 11).expect("serve");
+        println!(
+            "{units} base unit(s): host {} | sim {:.2} M queries/s",
+            report.summary(),
+            report.sim_throughput_qps() / 1e6
         );
     }
 

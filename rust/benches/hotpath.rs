@@ -174,6 +174,31 @@ fn main() {
             UnitConfig { kind: UnitKind::Base, dims: Dims::paper() },
             2,
         );
-        black_box(s.dispatch(&ctx, &queries));
+        black_box(s.dispatch(&ctx, &queries).expect("dispatch"));
+    }));
+
+    // the full `a3::api` serving path: non-blocking submit through the
+    // engine worker thread, batch closes at max_batch, responses back
+    // over the channel — the honest per-batch cost of the facade.
+    let engine = a3::api::EngineBuilder::new()
+        .dims(Dims::paper())
+        .max_batch(8)
+        .build()
+        .expect("engine");
+    let api_ctx = engine.register_context(kv.clone()).expect("register");
+    println!("{}", bench("api engine submit+recv batch-8 (threaded)", b, || {
+        for qq in batch8.chunks_exact(d) {
+            engine.submit(&api_ctx, qq.to_vec()).expect("submit");
+        }
+        let mut got = 0;
+        while got < 8 {
+            if engine
+                .recv_timeout(std::time::Duration::from_secs(5))
+                .expect("recv")
+                .is_some()
+            {
+                got += 1;
+            }
+        }
     }));
 }

@@ -1,0 +1,896 @@
+//! The serving engine: builder → engine → client handles.
+//!
+//! [`EngineBuilder`] validates typed configuration into an [`Engine`].
+//! The engine owns one coordinator worker thread (batcher + scheduler +
+//! metrics); clients interact only through handles:
+//!
+//! * [`Engine::register_context`] stages a K/V pair (comprehension
+//!   time, §III-C) and returns a refcounted [`ContextHandle`];
+//! * [`Engine::submit`] enqueues one query non-blockingly and returns
+//!   a [`Ticket`]; completed [`Response`]s come back through
+//!   [`Engine::try_recv`] / [`Engine::recv_timeout`];
+//! * [`Engine::drain`] flushes every partially filled batch (tail
+//!   queries below `max_batch` are dispatched, never dropped) and
+//!   snapshots the run's metrics;
+//! * [`Engine::run_stream`] reproduces the classic blocking serve loop
+//!   (paced arrivals → batched dispatch → [`ServeReport`]) on top of
+//!   the non-blocking primitives.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::error::A3Error;
+use crate::approx::SortedColumns;
+use crate::attention::KvPair;
+use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{ContextId, KvContext, Query, QueryId, Response};
+use crate::coordinator::scheduler::{Scheduler, UnitConfig, UnitKind};
+use crate::coordinator::server::{ServeConfig, ServeReport};
+use crate::model::AttentionBackend;
+use crate::sim::Dims;
+
+/// Typed, validated configuration for an [`Engine`].
+///
+/// Every knob has a sensible default (one base unit at the paper's
+/// design point, the AOT batch policy, open throttle, a 64k admission
+/// window); [`EngineBuilder::build`] rejects inconsistent settings
+/// with [`A3Error::ConfigError`] instead of panicking later.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineBuilder {
+    units: usize,
+    kind: UnitKind,
+    dims: Dims,
+    batch: BatchPolicy,
+    arrival_qps: Option<f64>,
+    max_pending: usize,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        EngineBuilder {
+            units: 1,
+            kind: UnitKind::Base,
+            dims: Dims::paper(),
+            batch: BatchPolicy::default(),
+            arrival_qps: None,
+            max_pending: 65_536,
+        }
+    }
+}
+
+impl EngineBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of replicated A³ units (§III-C "Use of Multiple A³
+    /// Units"); batches go to the least-loaded one.
+    pub fn units(mut self, units: usize) -> Self {
+        self.units = units;
+        self
+    }
+
+    /// Unit pipeline kind, set directly.
+    pub fn unit_kind(mut self, kind: UnitKind) -> Self {
+        self.kind = kind;
+        self
+    }
+
+    /// Unit kind from an attention backend: `Exact` serves on base
+    /// pipelines, every other backend on approximate pipelines with
+    /// that backend's parameters.
+    pub fn backend(mut self, backend: AttentionBackend) -> Self {
+        self.kind = match backend {
+            AttentionBackend::Exact => UnitKind::Base,
+            other => UnitKind::Approximate { backend: other },
+        };
+        self
+    }
+
+    /// Timing design point of each unit (defaults to the paper's
+    /// n=320, d=64). Registered contexts must match `d`.
+    pub fn dims(mut self, dims: Dims) -> Self {
+        self.dims = dims;
+        self
+    }
+
+    /// Full size-or-timeout batching policy.
+    pub fn batch(mut self, batch: BatchPolicy) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    /// Close a batch when it reaches this many queries.
+    pub fn max_batch(mut self, max_batch: usize) -> Self {
+        self.batch.max_batch = max_batch;
+        self
+    }
+
+    /// Close a batch when its oldest member has waited this long.
+    pub fn max_wait_ns(mut self, max_wait_ns: u64) -> Self {
+        self.batch.max_wait_ns = max_wait_ns;
+        self
+    }
+
+    /// Paced arrival model for [`Engine::run_stream`] (queries/s);
+    /// unset = open throttle (saturation).
+    pub fn arrival_qps(mut self, qps: f64) -> Self {
+        self.arrival_qps = Some(qps);
+        self
+    }
+
+    /// Admission limit: submits beyond this many in-flight queries get
+    /// [`A3Error::QueueFull`] instead of unbounded queueing.
+    pub fn max_pending(mut self, max_pending: usize) -> Self {
+        self.max_pending = max_pending;
+        self
+    }
+
+    /// Validate and start the engine (spawns the coordinator worker).
+    pub fn build(self) -> Result<Engine, A3Error> {
+        let cfg = |msg: String| Err(A3Error::ConfigError(msg));
+        if self.units == 0 {
+            return cfg("units must be >= 1".into());
+        }
+        if self.dims.n == 0 || self.dims.d == 0 {
+            return cfg(format!("dims must be non-zero (got n={}, d={})", self.dims.n, self.dims.d));
+        }
+        if self.batch.max_batch == 0 {
+            return cfg("max_batch must be >= 1".into());
+        }
+        if let Some(qps) = self.arrival_qps {
+            if !qps.is_finite() || qps <= 0.0 {
+                return cfg(format!("arrival_qps must be finite and positive (got {qps})"));
+            }
+        }
+        if self.max_pending < self.batch.max_batch {
+            return cfg(format!(
+                "max_pending ({}) must be >= max_batch ({}): a full batch could never be admitted",
+                self.max_pending, self.batch.max_batch
+            ));
+        }
+        if let UnitKind::Approximate { backend: AttentionBackend::QuantizedBits { i_bits, f_bits } } =
+            self.kind
+        {
+            if i_bits == 0 || f_bits == 0 {
+                return cfg(format!(
+                    "quantized backend needs non-zero bit widths (got i={i_bits}, f={f_bits})"
+                ));
+            }
+        }
+        let scheduler = Scheduler::replicated(
+            UnitConfig { kind: self.kind, dims: self.dims },
+            self.units,
+        );
+        Engine::spawn(
+            scheduler,
+            Vec::new(),
+            Some(self.dims),
+            self.batch,
+            self.arrival_qps,
+            self.max_pending,
+        )
+    }
+}
+
+/// A refcounted handle to a registered K/V context. Clones share the
+/// underlying (Arc'd) K/V and the comprehension-time sorted-key cache;
+/// the data stays alive for as long as any handle or in-flight batch
+/// references it, even after [`Engine::evict`] removes it from the
+/// engine. A handle is bound to the engine that issued it: another
+/// engine rejects it with [`A3Error::UnknownContext`] even if a
+/// context id happens to coincide.
+#[derive(Clone)]
+pub struct ContextHandle {
+    ctx: KvContext,
+    /// Identity of the issuing engine (pointer equality).
+    engine: Arc<()>,
+}
+
+impl ContextHandle {
+    pub fn id(&self) -> ContextId {
+        self.ctx.id
+    }
+
+    /// Number of K/V rows.
+    pub fn n(&self) -> usize {
+        self.ctx.kv.n
+    }
+
+    /// Embedding dimension.
+    pub fn d(&self) -> usize {
+        self.ctx.kv.d
+    }
+
+    /// The shared key/value matrices.
+    pub fn kv(&self) -> &Arc<KvPair> {
+        &self.ctx.kv
+    }
+
+    /// Build the comprehension-time column-sorted key cache now
+    /// (§IV-C), off the query critical path. Idempotent; engines whose
+    /// units run candidate selection prewarm at registration already.
+    pub fn prewarm(&self) {
+        self.ctx.prewarm_sorted();
+    }
+
+    /// Whether the comprehension-time sort has run.
+    pub fn prewarmed(&self) -> bool {
+        self.ctx.sorted_ready()
+    }
+
+    /// The cached sorted-key matrix (building it on first use).
+    pub fn sorted(&self) -> &SortedColumns {
+        self.ctx.sorted()
+    }
+}
+
+/// Receipt for one submitted query: [`Response::id`] of the matching
+/// response equals [`Ticket::id`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Ticket {
+    pub id: QueryId,
+    pub context: ContextId,
+}
+
+/// Snapshot returned by [`Engine::drain`]: everything served since
+/// the previous drain (or since the current stream run began — run
+/// starts open a fresh window so one window never mixes clocks).
+/// Draining takes the window: the accumulator resets, which also
+/// bounds the worker's latency buffer to one window on long-lived
+/// engines.
+#[derive(Clone, Debug)]
+pub struct EngineStats {
+    pub metrics: Metrics,
+    /// Simulated cycle at which all units drain (engine-lifetime
+    /// clock, not reset by windows).
+    pub sim_makespan: u64,
+}
+
+enum Cmd {
+    Submit(Query),
+    Register(KvContext),
+    Evict(ContextId),
+    Drain(mpsc::Sender<EngineStats>),
+    /// Like `Drain` but acks with the makespan only — no O(history)
+    /// metrics clone. The stream drivers use this on their hot path.
+    Flush(mpsc::Sender<u64>),
+    /// Rebase the run clock: arrivals are measured from this epoch
+    /// offset for the latency rule and (when paced) the simulated
+    /// clock advance, so idle time between engine creation and a run
+    /// is charged to neither (the classic `serve()` measured arrivals
+    /// from serve start).
+    SetArrivalBase(u64),
+}
+
+/// One shared recording rule for served responses — the worker
+/// accumulator and per-run report assembly must never diverge. Both
+/// `completed_ns` and `arrival_ns` are expected on the *same* clock
+/// (rebased to the current run's start), so latencies never absorb
+/// earlier runs' makespan.
+fn record_response(metrics: &mut Metrics, r: &Response, completed_ns: u64, arrival_ns: u64) {
+    metrics.record(
+        completed_ns.saturating_sub(arrival_ns),
+        completed_ns,
+        r.selected_rows,
+        r.sim_cycles,
+    );
+}
+
+/// Context liveness bookkeeping: which ids are currently registered
+/// and which were evicted (so errors can distinguish "evicted" from
+/// "never existed" without guessing from id ordering).
+#[derive(Default)]
+struct Registry {
+    live: HashSet<ContextId>,
+    evicted: HashSet<ContextId>,
+}
+
+/// State shared between client threads and the worker.
+struct Shared {
+    /// Queries submitted but not yet dispatched (admission control).
+    inflight: AtomicUsize,
+    /// Queries dropped by a failed dispatch (their error is in
+    /// `poison`); lets stream drivers terminate instead of waiting for
+    /// responses that will never come.
+    dropped: AtomicUsize,
+    /// First dispatch-side error, handed to the next receiver.
+    poison: Mutex<Option<A3Error>>,
+}
+
+/// The serving engine: the one sanctioned way to drive the system.
+/// Built by [`EngineBuilder::build`]; owns the coordinator worker
+/// thread for its whole lifetime (joined on drop).
+pub struct Engine {
+    cmd_tx: Option<mpsc::Sender<Cmd>>,
+    resp_rx: mpsc::Receiver<Response>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    shared: Arc<Shared>,
+    /// Engine identity handed to [`ContextHandle`]s (pointer equality).
+    token: Arc<()>,
+    /// Context liveness (submit-time eviction/unknown classification).
+    registry: Mutex<Registry>,
+    next_ctx: AtomicU32,
+    next_ticket: AtomicU64,
+    epoch: Instant,
+    /// `Some` when built through the builder (context `d` validation);
+    /// `None` on the deprecated `Server` compatibility path.
+    dims: Option<Dims>,
+    needs_sorted: bool,
+    arrival_qps: Option<f64>,
+    max_pending: usize,
+}
+
+impl Engine {
+    fn spawn(
+        scheduler: Scheduler,
+        contexts: Vec<KvContext>,
+        dims: Option<Dims>,
+        batch: BatchPolicy,
+        arrival_qps: Option<f64>,
+        max_pending: usize,
+    ) -> Result<Engine, A3Error> {
+        let needs_sorted = scheduler.needs_sorted_contexts();
+        // registration *is* comprehension time (§IV-C): prewarm the
+        // sorted-key caches off the query critical path
+        if needs_sorted {
+            for ctx in &contexts {
+                ctx.prewarm_sorted();
+            }
+        }
+        let registry = Registry {
+            live: contexts.iter().map(|c| c.id).collect(),
+            evicted: HashSet::new(),
+        };
+        let next_ctx = contexts.iter().map(|c| c.id + 1).max().unwrap_or(0);
+        let live: HashMap<ContextId, KvContext> =
+            contexts.into_iter().map(|c| (c.id, c)).collect();
+
+        let (cmd_tx, cmd_rx) = mpsc::channel();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let shared = Arc::new(Shared {
+            inflight: AtomicUsize::new(0),
+            dropped: AtomicUsize::new(0),
+            poison: Mutex::new(None),
+        });
+        let epoch = Instant::now();
+        let mut worker = Worker {
+            cmd_rx,
+            resp_tx,
+            batcher: Batcher::new(batch),
+            scheduler,
+            metrics: Metrics::default(),
+            live,
+            arrivals: HashMap::new(),
+            epoch,
+            paced: arrival_qps.is_some(),
+            arrival_base_ns: 0,
+            sim_base_cycles: 0,
+            shared: Arc::clone(&shared),
+        };
+        let handle = std::thread::Builder::new()
+            .name("a3-engine".into())
+            .spawn(move || worker.run())
+            .map_err(|e| A3Error::ConfigError(format!("failed to spawn engine worker: {e}")))?;
+        Ok(Engine {
+            cmd_tx: Some(cmd_tx),
+            resp_rx,
+            worker: Some(handle),
+            shared,
+            token: Arc::new(()),
+            registry: Mutex::new(registry),
+            next_ctx: AtomicU32::new(next_ctx),
+            next_ticket: AtomicU64::new(0),
+            epoch,
+            dims,
+            needs_sorted,
+            arrival_qps,
+            max_pending,
+        })
+    }
+
+    /// Compatibility constructor for the deprecated
+    /// [`crate::coordinator::Server`] shim: adopts caller-built
+    /// contexts (keeping their ids) and an existing scheduler.
+    pub(crate) fn from_parts(
+        contexts: Vec<KvContext>,
+        scheduler: Scheduler,
+        config: ServeConfig,
+    ) -> Result<Engine, A3Error> {
+        Engine::spawn(
+            scheduler,
+            contexts,
+            None,
+            config.batch,
+            config.arrival_qps,
+            usize::MAX,
+        )
+    }
+
+    fn cmd_tx(&self) -> Result<&mpsc::Sender<Cmd>, A3Error> {
+        self.cmd_tx.as_ref().ok_or(A3Error::EngineStopped)
+    }
+
+    /// Surface (and consume) the first dispatch-side error, if any.
+    fn check_poison(&self) -> Result<(), A3Error> {
+        match self.shared.poison.lock().unwrap().take() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Register a K/V context (comprehension time). When any unit runs
+    /// candidate selection the sorted-key cache is prewarmed here, so
+    /// the one-time column sort stays off the query critical path.
+    pub fn register_context(&self, kv: KvPair) -> Result<ContextHandle, A3Error> {
+        if let Some(dims) = self.dims {
+            if kv.d != dims.d {
+                return Err(A3Error::DimensionMismatch { expected: dims.d, got: kv.d });
+            }
+        }
+        let tx = self.cmd_tx()?;
+        let id = self.next_ctx.fetch_add(1, Ordering::Relaxed);
+        let ctx = KvContext::new(id, kv);
+        if self.needs_sorted {
+            ctx.prewarm_sorted();
+        }
+        self.registry.lock().unwrap().live.insert(id);
+        tx.send(Cmd::Register(ctx.clone()))
+            .map_err(|_| A3Error::EngineStopped)?;
+        Ok(ContextHandle { ctx, engine: Arc::clone(&self.token) })
+    }
+
+    /// A handle is only valid on the engine that issued it.
+    fn check_handle(&self, handle: &ContextHandle) -> Result<(), A3Error> {
+        if Arc::ptr_eq(&self.token, &handle.engine) {
+            Ok(())
+        } else {
+            Err(A3Error::UnknownContext(handle.id()))
+        }
+    }
+
+    /// Shared submit-side validation: handle identity + embedding
+    /// shape (one rule for [`Engine::submit`] and
+    /// [`Engine::run_stream`]).
+    fn validate_submit(&self, handle: &ContextHandle, embedding: &[f32]) -> Result<(), A3Error> {
+        self.check_handle(handle)?;
+        if embedding.len() != handle.d() {
+            return Err(A3Error::DimensionMismatch {
+                expected: handle.d(),
+                got: embedding.len(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Evict a context: its already-admitted queries are dispatched,
+    /// then the engine drops its reference. Further submits against
+    /// the handle (or any clone) return [`A3Error::ContextEvicted`];
+    /// the K/V data itself stays alive while handles exist.
+    pub fn evict(&self, handle: &ContextHandle) -> Result<(), A3Error> {
+        self.check_handle(handle)?;
+        {
+            let mut reg = self.registry.lock().unwrap();
+            if !reg.live.remove(&handle.id()) {
+                return Err(A3Error::ContextEvicted(handle.id()));
+            }
+            reg.evicted.insert(handle.id());
+        }
+        self.cmd_tx()?
+            .send(Cmd::Evict(handle.id()))
+            .map_err(|_| A3Error::EngineStopped)
+    }
+
+    /// Queries submitted but not yet dispatched.
+    pub fn pending(&self) -> usize {
+        self.shared.inflight.load(Ordering::Acquire)
+    }
+
+    /// Submit one query without blocking. The query joins the
+    /// context's batch and is dispatched by the worker when the batch
+    /// closes (size-or-timeout) or the engine drains; the matching
+    /// [`Response`] (same `id` as the ticket) comes back through
+    /// [`Engine::try_recv`] / [`Engine::recv_timeout`].
+    pub fn submit(&self, handle: &ContextHandle, embedding: Vec<f32>) -> Result<Ticket, A3Error> {
+        self.check_poison()?;
+        // liveness (evicted/unknown) is classified by submit_query —
+        // one registry lock per submit, not two
+        self.validate_submit(handle, &embedding)?;
+        let pending = self.shared.inflight.load(Ordering::Acquire);
+        if pending >= self.max_pending {
+            return Err(A3Error::QueueFull { pending, limit: self.max_pending });
+        }
+        let id = self.next_ticket.fetch_add(1, Ordering::Relaxed);
+        let query = Query {
+            id,
+            context: handle.id(),
+            embedding,
+            arrival_ns: self.epoch.elapsed().as_nanos() as u64,
+        };
+        self.submit_query(query)?;
+        Ok(Ticket { id, context: handle.id() })
+    }
+
+    /// Raw-query submit for the compatibility path: the caller owns
+    /// id assignment and arrival stamping. Context must be live.
+    pub(crate) fn submit_query(&self, query: Query) -> Result<(), A3Error> {
+        let ctx = query.context;
+        {
+            let reg = self.registry.lock().unwrap();
+            if !reg.live.contains(&ctx) {
+                return Err(if reg.evicted.contains(&ctx) {
+                    A3Error::ContextEvicted(ctx)
+                } else {
+                    A3Error::UnknownContext(ctx)
+                });
+            }
+        }
+        let tx = self.cmd_tx()?;
+        self.shared.inflight.fetch_add(1, Ordering::AcqRel);
+        tx.send(Cmd::Submit(query)).map_err(|_| {
+            self.shared.inflight.fetch_sub(1, Ordering::AcqRel);
+            A3Error::EngineStopped
+        })
+    }
+
+    /// Non-blocking receive of the next completed response (any
+    /// ticket, completion order). `Ok(None)` = nothing ready yet.
+    pub fn try_recv(&self) -> Result<Option<Response>, A3Error> {
+        match self.resp_rx.try_recv() {
+            Ok(r) => Ok(Some(r)),
+            Err(mpsc::TryRecvError::Empty) => {
+                self.check_poison()?;
+                Ok(None)
+            }
+            Err(mpsc::TryRecvError::Disconnected) => Err(A3Error::EngineStopped),
+        }
+    }
+
+    /// Blocking receive with a timeout. `Ok(None)` = no response
+    /// within `timeout` (e.g. the batch is still waiting to close —
+    /// see [`Engine::drain`] to force tail batches out).
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<Option<Response>, A3Error> {
+        match self.resp_rx.recv_timeout(timeout) {
+            Ok(r) => Ok(Some(r)),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                self.check_poison()?;
+                Ok(None)
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(A3Error::EngineStopped),
+        }
+    }
+
+    /// Flush every pending batch (tail queries below `max_batch` that
+    /// never hit their timeout are dispatched, not dropped) and take
+    /// the metrics window: everything served since the previous drain
+    /// or run start ([`EngineStats`]); the accumulator then resets.
+    /// For per-run numbers prefer the [`ServeReport`] from
+    /// [`Engine::run_stream`]. After `drain` returns, every
+    /// previously submitted query's response is in the receive queue.
+    pub fn drain(&self) -> Result<EngineStats, A3Error> {
+        let (ack_tx, ack_rx) = mpsc::channel();
+        self.cmd_tx()?
+            .send(Cmd::Drain(ack_tx))
+            .map_err(|_| A3Error::EngineStopped)?;
+        ack_rx.recv().map_err(|_| A3Error::EngineStopped)
+    }
+
+    /// [`Engine::drain`] without the metrics snapshot: flush every
+    /// pending batch and return only the simulated makespan. The
+    /// stream drivers use this so long-lived engines never pay an
+    /// O(served-queries) metrics clone per run.
+    fn flush(&self) -> Result<u64, A3Error> {
+        let (ack_tx, ack_rx) = mpsc::channel();
+        self.cmd_tx()?
+            .send(Cmd::Flush(ack_tx))
+            .map_err(|_| A3Error::EngineStopped)?;
+        ack_rx.recv().map_err(|_| A3Error::EngineStopped)
+    }
+
+    /// Serve a pre-built stream: pace arrivals per the configured
+    /// arrival model, submit everything, wait for completion, and
+    /// report. The i-th returned ticket belongs to the i-th stream
+    /// item; response ids match tickets. Assumes no concurrent
+    /// [`Engine::try_recv`] consumers during the call.
+    pub fn run_stream(
+        &self,
+        stream: Vec<(ContextHandle, Vec<f32>)>,
+    ) -> Result<(Vec<Ticket>, ServeReport), A3Error> {
+        let mut tickets = Vec::with_capacity(stream.len());
+        let mut queries = Vec::with_capacity(stream.len());
+        for (handle, embedding) in stream {
+            self.validate_submit(&handle, &embedding)?;
+            let id = self.next_ticket.fetch_add(1, Ordering::Relaxed);
+            tickets.push(Ticket { id, context: handle.id() });
+            queries.push(Query { id, context: handle.id(), embedding, arrival_ns: 0 });
+        }
+        let report = self.run_queries(queries)?;
+        Ok((tickets, report))
+    }
+
+    /// Convenience: serve `count` seeded random queries against one
+    /// context (the classic `serve_random` smoke workload).
+    pub fn run_random(
+        &self,
+        handle: &ContextHandle,
+        count: usize,
+        seed: u64,
+    ) -> Result<ServeReport, A3Error> {
+        let d = handle.d();
+        let mut rng = crate::testutil::Rng::new(seed);
+        let stream = (0..count)
+            .map(|_| (handle.clone(), rng.normal_vec(d, 1.0)))
+            .collect();
+        Ok(self.run_stream(stream)?.1)
+    }
+
+    /// The blocking serve loop over raw queries (compatibility core of
+    /// [`Engine::run_stream`] and the deprecated `Server::serve`):
+    /// paced submission with admission backpressure, then drain and
+    /// collect. The report covers exactly *this* run — metrics are
+    /// rebuilt from this run's responses, so repeated runs on one
+    /// engine (or earlier `submit` traffic) never inflate a report;
+    /// responses from earlier submits still queued are discarded.
+    pub(crate) fn run_queries(&self, queries: Vec<Query>) -> Result<ServeReport, A3Error> {
+        let t0 = Instant::now();
+        let total = queries.len();
+        let dropped_at_start = self.shared.dropped.load(Ordering::Acquire);
+        // flush any pre-run submit traffic first, so rebasing the run
+        // clock below cannot misprice queries that arrived (and were
+        // batched) under the old base; the returned makespan is this
+        // run's baseline, so the report charges only cycles this run
+        // added to the units
+        let start_makespan = self.flush()?;
+        // arrivals count from the start of *this* run (the classic
+        // serve() measured from serve start): rebase the worker's
+        // latency rule — and, when paced, its sim clock — to "now",
+        // so idle time before the run is charged to neither
+        let base_ns = self.epoch.elapsed().as_nanos() as u64;
+        self.cmd_tx()?
+            .send(Cmd::SetArrivalBase(base_ns))
+            .map_err(|_| A3Error::EngineStopped)?;
+        let mut arrivals: HashMap<QueryId, u64> = HashMap::with_capacity(total);
+        let mut responses: Vec<Response> = Vec::with_capacity(total);
+        for (i, mut q) in queries.into_iter().enumerate() {
+            if let Some(qps) = self.arrival_qps {
+                let due = Duration::from_secs_f64(i as f64 / qps);
+                if let Some(sleep) = due.checked_sub(t0.elapsed()) {
+                    std::thread::sleep(sleep);
+                }
+            }
+            q.arrival_ns = self.epoch.elapsed().as_nanos() as u64;
+            arrivals.insert(q.id, q.arrival_ns);
+            // stream drivers block on admission instead of failing; a
+            // stream spread over more contexts than max_pending can
+            // hold may have only open (below-max_batch, never-expiring)
+            // batches in flight — force those out rather than spin
+            let mut stalled = 0u32;
+            while self.pending() >= self.max_pending {
+                self.collect_run(&arrivals, &mut responses)?;
+                std::thread::sleep(Duration::from_micros(20));
+                stalled += 1;
+                if stalled >= 250 {
+                    self.flush()?;
+                    stalled = 0;
+                }
+            }
+            self.submit_query(q)?;
+            self.collect_run(&arrivals, &mut responses)?;
+        }
+        let end_makespan = self.flush()?;
+        // after the drain ack, every response is already queued; the
+        // dropped counter accounts for batches lost to typed dispatch
+        // errors so this loop always terminates
+        loop {
+            let dropped = self.shared.dropped.load(Ordering::Acquire) - dropped_at_start;
+            if responses.len() + dropped >= total {
+                break;
+            }
+            match self.recv_timeout(Duration::from_millis(100))? {
+                Some(r) => {
+                    if arrivals.contains_key(&r.id) {
+                        responses.push(r);
+                    }
+                }
+                None => continue,
+            }
+        }
+        self.check_poison()?;
+        // per-run metrics via the shared recording rule, in completion
+        // order, with arrivals rebased to this run's start (same as
+        // the worker accumulator)
+        let mut metrics = Metrics::default();
+        for r in &responses {
+            let arrival = arrivals.get(&r.id).copied().unwrap_or(0);
+            record_response(
+                &mut metrics,
+                r,
+                r.completed_ns.saturating_sub(start_makespan),
+                arrival.saturating_sub(base_ns),
+            );
+        }
+        Ok(ServeReport {
+            metrics,
+            // cycles this run added to the units; on a fresh engine
+            // this equals the absolute makespan
+            sim_makespan: end_makespan.saturating_sub(start_makespan),
+            wall: t0.elapsed(),
+            responses,
+        })
+    }
+
+    /// Drain whatever is ready, keeping only this run's responses
+    /// (identified by `arrivals`); stale responses from earlier
+    /// submit traffic are discarded.
+    fn collect_run(
+        &self,
+        arrivals: &HashMap<QueryId, u64>,
+        responses: &mut Vec<Response>,
+    ) -> Result<(), A3Error> {
+        while let Some(r) = self.try_recv()? {
+            if arrivals.contains_key(&r.id) {
+                responses.push(r);
+            }
+        }
+        Ok(())
+    }
+
+    /// Stop the engine: flush pending batches, terminate and join the
+    /// worker. Idempotent; called automatically on drop.
+    pub fn stop(&mut self) {
+        drop(self.cmd_tx.take()); // worker flushes + exits on disconnect
+        if let Some(handle) = self.worker.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// The coordinator thread: batches, schedules, records, responds.
+struct Worker {
+    cmd_rx: mpsc::Receiver<Cmd>,
+    resp_tx: mpsc::Sender<Response>,
+    batcher: Batcher,
+    scheduler: Scheduler,
+    metrics: Metrics,
+    live: HashMap<ContextId, KvContext>,
+    arrivals: HashMap<QueryId, u64>,
+    epoch: Instant,
+    /// Under paced arrivals the simulated clock tracks the host
+    /// arrival pattern (1 cycle = 1 ns); open-throttle runs leave it
+    /// free so sim makespan measures pure accelerator capacity.
+    paced: bool,
+    /// Epoch offset treated as time zero for the latency rule and the
+    /// paced sim advance (set by `Cmd::SetArrivalBase` per run).
+    arrival_base_ns: u64,
+    /// Simulated makespan at the last rebase: completion times are
+    /// measured from here so latencies stay on the run's clock.
+    sim_base_cycles: u64,
+    shared: Arc<Shared>,
+}
+
+impl Worker {
+    fn run(&mut self) {
+        loop {
+            // sleep until the earliest real size-or-timeout deadline
+            // (commands wake recv_timeout immediately); with nothing
+            // pending — or an effectively infinite wait budget — block
+            // instead of spinning thousands of no-op wakeups/s
+            const IDLE: Duration = Duration::from_secs(3600);
+            let timeout = match self.batcher.next_deadline_ns() {
+                None => IDLE,
+                Some(deadline_ns) => {
+                    let now_ns = self.epoch.elapsed().as_nanos() as u64;
+                    Duration::from_nanos(deadline_ns.saturating_sub(now_ns)).min(IDLE)
+                }
+            };
+            match self.cmd_rx.recv_timeout(timeout) {
+                Ok(Cmd::Register(ctx)) => {
+                    self.live.insert(ctx.id, ctx);
+                }
+                Ok(Cmd::Evict(id)) => {
+                    // already-admitted queries are served before the
+                    // context leaves
+                    if let Some(batch) = self.batcher.take_context(id) {
+                        self.dispatch(batch);
+                    }
+                    self.live.remove(&id);
+                }
+                Ok(Cmd::Submit(q)) => {
+                    self.arrivals.insert(q.id, q.arrival_ns);
+                    if let Some(batch) = self.batcher.push(q) {
+                        self.dispatch(batch);
+                    }
+                    self.expire();
+                }
+                Ok(Cmd::SetArrivalBase(base_ns)) => {
+                    self.arrival_base_ns = base_ns;
+                    // the run driver flushes immediately before
+                    // rebasing, so all prior work is reflected here;
+                    // the metrics window restarts with the clock so
+                    // one window never mixes rebased clocks
+                    self.sim_base_cycles = self.scheduler.makespan_cycles();
+                    self.metrics = Metrics::default();
+                }
+                Ok(Cmd::Drain(ack)) => {
+                    for batch in self.batcher.flush_all() {
+                        self.dispatch(batch);
+                    }
+                    // take the window: hand the accumulator over and
+                    // start a fresh one (bounds the latency buffer on
+                    // long-lived engines)
+                    let metrics = std::mem::take(&mut self.metrics);
+                    let _ = ack.send(EngineStats {
+                        metrics,
+                        sim_makespan: self.scheduler.makespan_cycles(),
+                    });
+                }
+                Ok(Cmd::Flush(ack)) => {
+                    for batch in self.batcher.flush_all() {
+                        self.dispatch(batch);
+                    }
+                    let _ = ack.send(self.scheduler.makespan_cycles());
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => self.expire(),
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    for batch in self.batcher.flush_all() {
+                        self.dispatch(batch);
+                    }
+                    break;
+                }
+            }
+        }
+    }
+
+    fn expire(&mut self) {
+        let now_ns = self.epoch.elapsed().as_nanos() as u64;
+        for batch in self.batcher.expire(now_ns) {
+            self.dispatch(batch);
+        }
+    }
+
+    fn dispatch(&mut self, batch: Vec<Query>) {
+        let count = batch.len();
+        let outcome = match self.live.get(&batch[0].context).cloned() {
+            None => Err(A3Error::ContextEvicted(batch[0].context)),
+            Some(ctx) => {
+                if self.paced {
+                    let now_ns = batch.iter().map(|q| q.arrival_ns).max().unwrap_or(0);
+                    self.scheduler
+                        .advance_to(now_ns.saturating_sub(self.arrival_base_ns));
+                }
+                self.scheduler.dispatch(&ctx, &batch)
+            }
+        };
+        match outcome {
+            Ok(responses) => {
+                for r in responses {
+                    let arrival = self
+                        .arrivals
+                        .remove(&r.id)
+                        .unwrap_or(0)
+                        .saturating_sub(self.arrival_base_ns);
+                    let completed = r.completed_ns.saturating_sub(self.sim_base_cycles);
+                    record_response(&mut self.metrics, &r, completed, arrival);
+                    let _ = self.resp_tx.send(r);
+                }
+            }
+            Err(e) => {
+                for q in &batch {
+                    self.arrivals.remove(&q.id);
+                }
+                self.shared.poison.lock().unwrap().get_or_insert(e);
+                self.shared.dropped.fetch_add(count, Ordering::AcqRel);
+            }
+        }
+        self.shared.inflight.fetch_sub(count, Ordering::AcqRel);
+    }
+}

@@ -1,0 +1,93 @@
+//! The crate-wide typed error surface for the serving API.
+//!
+//! Every fallible operation on the [`crate::api`] path — building an
+//! engine, registering or evicting a context, submitting a query,
+//! receiving a response — returns [`A3Error`] instead of panicking.
+//! The kernel/approximation substrates keep their hard shape asserts
+//! (a malformed tensor is a programming error, not a serving-time
+//! condition); the serving layer validates at the boundary so those
+//! asserts are unreachable from [`crate::api`].
+
+use std::fmt;
+
+use crate::coordinator::request::ContextId;
+
+/// Typed serving-path errors (the crate-wide error enum).
+#[derive(Clone, Debug, PartialEq)]
+pub enum A3Error {
+    /// Invalid engine configuration, rejected by
+    /// [`crate::api::EngineBuilder::build`] (or a CLI flag parse).
+    ConfigError(String),
+    /// A context id that was never registered with this engine.
+    UnknownContext(ContextId),
+    /// The context was registered but has since been evicted.
+    ContextEvicted(ContextId),
+    /// Admission control: the submit queue is at its configured limit.
+    QueueFull { pending: usize, limit: usize },
+    /// A context or query does not match the engine's compiled
+    /// datapath (unit kind / pipeline disagreement).
+    BackendMismatch(String),
+    /// Embedding length does not match the context's `d`.
+    DimensionMismatch { expected: usize, got: usize },
+    /// A dispatch was attempted with no queries in the batch.
+    EmptyBatch,
+    /// The engine has been stopped (or its worker thread is gone).
+    EngineStopped,
+}
+
+impl fmt::Display for A3Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            A3Error::ConfigError(msg) => write!(f, "invalid configuration: {msg}"),
+            A3Error::UnknownContext(id) => write!(f, "unknown context id {id}"),
+            A3Error::ContextEvicted(id) => write!(f, "context {id} has been evicted"),
+            A3Error::QueueFull { pending, limit } => {
+                write!(f, "submit queue full ({pending} pending, limit {limit})")
+            }
+            A3Error::BackendMismatch(msg) => write!(f, "backend mismatch: {msg}"),
+            A3Error::DimensionMismatch { expected, got } => {
+                write!(f, "embedding dimension mismatch: expected {expected}, got {got}")
+            }
+            A3Error::EmptyBatch => write!(f, "empty batch"),
+            A3Error::EngineStopped => write!(f, "engine is stopped"),
+        }
+    }
+}
+
+impl std::error::Error for A3Error {}
+
+/// Serving-path result alias.
+pub type Result<T> = std::result::Result<T, A3Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn errors_display_their_payload() {
+        let cases: Vec<(A3Error, &str)> = vec![
+            (A3Error::ConfigError("units must be >= 1".into()), "units must be >= 1"),
+            (A3Error::UnknownContext(9), "9"),
+            (A3Error::ContextEvicted(4), "evicted"),
+            (A3Error::QueueFull { pending: 8, limit: 8 }, "limit 8"),
+            (A3Error::BackendMismatch("pipe/kind".into()), "pipe/kind"),
+            (A3Error::DimensionMismatch { expected: 64, got: 5 }, "expected 64"),
+            (A3Error::EmptyBatch, "empty"),
+            (A3Error::EngineStopped, "stopped"),
+        ];
+        for (e, needle) in cases {
+            assert!(e.to_string().contains(needle), "{e}");
+        }
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        // the vendored anyhow shim blanket-converts std errors; the
+        // CLI and examples rely on `?` from A3Error into anyhow::Result
+        fn f() -> anyhow::Result<()> {
+            Err::<(), A3Error>(A3Error::EngineStopped)?;
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("stopped"));
+    }
+}

@@ -1,0 +1,352 @@
+//! `a3::api` — the sanctioned serving facade: typed configuration in,
+//! typed errors out, no struct-poking.
+//!
+//! The paper frames attention as a *served* operation (§III-C): a host
+//! registers knowledge bases (K/V pairs) at comprehension time, then
+//! pipelines queries into A³ units. This module is that host contract:
+//!
+//! * [`EngineBuilder`] — typed knobs (units, backend, dims, batch
+//!   policy, arrival model, admission limits) validated into an
+//!   [`Engine`] by [`EngineBuilder::build`];
+//! * [`Engine::register_context`] — explicit context lifecycle:
+//!   returns a refcounted [`ContextHandle`], prewarms the
+//!   comprehension-time sorted-key cache when units need it, and
+//!   [`Engine::evict`] retires a context without invalidating
+//!   in-flight work;
+//! * [`Engine::submit`] / [`Engine::try_recv`] /
+//!   [`Engine::recv_timeout`] — the non-blocking client path, backed
+//!   by the coordinator worker thread (batcher → least-loaded
+//!   scheduler → cycle-accurate unit pipelines);
+//! * [`Engine::run_stream`] / [`Engine::run_random`] — the classic
+//!   blocking serve loop, built on the primitives above.
+//!
+//! Everything fallible returns [`A3Error`]; the deprecated
+//! [`crate::coordinator::Server`] is a thin shim over [`Engine`] kept
+//! for one release.
+//!
+//! # Example
+//!
+//! ```
+//! use a3::api::{A3Error, AttentionBackend, Dims, EngineBuilder, KvPair};
+//! use a3::testutil::Rng;
+//! use std::time::Duration;
+//!
+//! fn main() -> Result<(), A3Error> {
+//!     // two approximate units at a small design point
+//!     let engine = EngineBuilder::new()
+//!         .units(2)
+//!         .backend(AttentionBackend::conservative())
+//!         .dims(Dims::new(64, 16))
+//!         .max_batch(4)
+//!         .build()?;
+//!
+//!     // comprehension time: register a knowledge base
+//!     let mut rng = Rng::new(7);
+//!     let kv = KvPair::new(64, 16, rng.normal_vec(64 * 16, 1.0), rng.normal_vec(64 * 16, 1.0));
+//!     let ctx = engine.register_context(kv)?;
+//!     assert!(ctx.prewarmed()); // candidate selection prewarmed the sorted keys
+//!
+//!     // non-blocking client path: submit, drain the tail batch, receive
+//!     let ticket = engine.submit(&ctx, rng.normal_vec(16, 1.0))?;
+//!     engine.drain()?;
+//!     let response = engine.recv_timeout(Duration::from_secs(5))?.expect("drained");
+//!     assert_eq!(response.id, ticket.id);
+//!     assert_eq!(response.output.len(), 16);
+//!     Ok(())
+//! }
+//! ```
+
+pub mod engine;
+pub mod error;
+
+pub use engine::{ContextHandle, Engine, EngineBuilder, EngineStats, Ticket};
+pub use error::A3Error;
+
+// The façade re-exports everything a serving client needs, so
+// consumers compile against `a3::api` alone.
+pub use crate::attention::KvPair;
+pub use crate::coordinator::batcher::BatchPolicy;
+pub use crate::coordinator::metrics::{Metrics, MetricsReport};
+pub use crate::coordinator::request::{ContextId, Query, QueryId, Response};
+pub use crate::coordinator::server::{ServeConfig, ServeReport};
+pub use crate::model::AttentionBackend;
+pub use crate::sim::Dims;
+
+#[cfg(test)]
+mod tests {
+    use std::time::Duration;
+
+    use super::*;
+    use crate::coordinator::scheduler::UnitKind;
+    use crate::testutil::Rng;
+
+    fn kv(n: usize, d: usize, seed: u64) -> KvPair {
+        let mut rng = Rng::new(seed);
+        KvPair::new(n, d, rng.normal_vec(n * d, 1.0), rng.normal_vec(n * d, 1.0))
+    }
+
+    fn small_engine(units: usize, backend: AttentionBackend, n: usize, d: usize) -> Engine {
+        EngineBuilder::new()
+            .units(units)
+            .backend(backend)
+            .dims(Dims::new(n, d))
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn builder_rejects_invalid_configs_with_typed_errors() {
+        let bad = |b: EngineBuilder| match b.build() {
+            Err(A3Error::ConfigError(msg)) => msg,
+            other => panic!("expected ConfigError, got {:?}", other.map(|_| "engine")),
+        };
+        assert!(bad(EngineBuilder::new().units(0)).contains("units"));
+        assert!(bad(EngineBuilder::new().dims(Dims::new(0, 64))).contains("dims"));
+        assert!(bad(EngineBuilder::new().dims(Dims::new(64, 0))).contains("dims"));
+        assert!(bad(EngineBuilder::new().max_batch(0)).contains("max_batch"));
+        assert!(bad(EngineBuilder::new().arrival_qps(0.0)).contains("arrival_qps"));
+        assert!(bad(EngineBuilder::new().arrival_qps(-3.0)).contains("arrival_qps"));
+        assert!(bad(EngineBuilder::new().arrival_qps(f64::NAN)).contains("arrival_qps"));
+        assert!(bad(EngineBuilder::new().max_batch(8).max_pending(4)).contains("max_pending"));
+        assert!(bad(EngineBuilder::new().unit_kind(UnitKind::Approximate {
+            backend: AttentionBackend::QuantizedBits { i_bits: 0, f_bits: 4 },
+        }))
+        .contains("bit widths"));
+        // and a valid config builds
+        EngineBuilder::new().units(2).build().unwrap();
+    }
+
+    #[test]
+    fn register_rejects_mismatched_embedding_dim() {
+        let engine = small_engine(1, AttentionBackend::Exact, 32, 16);
+        let err = engine.register_context(kv(32, 8, 0)).unwrap_err();
+        assert_eq!(err, A3Error::DimensionMismatch { expected: 16, got: 8 });
+    }
+
+    #[test]
+    fn submit_validates_dimension_and_queue_limit() {
+        let engine = EngineBuilder::new()
+            .dims(Dims::new(16, 8))
+            .max_batch(2)
+            .max_pending(2)
+            .max_wait_ns(u64::MAX)
+            .build()
+            .unwrap();
+        let ctx = engine.register_context(kv(16, 8, 1)).unwrap();
+        assert!(matches!(
+            engine.submit(&ctx, vec![0.0; 3]),
+            Err(A3Error::DimensionMismatch { expected: 8, got: 3 })
+        ));
+        // the limit counts undispatched queries; a full batch of 2
+        // dispatches immediately, so pin one query below max_batch,
+        // then overflow with a fresh context's singleton
+        let other = engine.register_context(kv(16, 8, 2)).unwrap();
+        engine.submit(&ctx, vec![0.1; 8]).unwrap();
+        engine.submit(&other, vec![0.1; 8]).unwrap();
+        let mut saw_full = false;
+        for _ in 0..50 {
+            match engine.submit(&other, vec![0.2; 8]) {
+                Err(A3Error::QueueFull { limit: 2, .. }) => {
+                    saw_full = true;
+                    break;
+                }
+                // worker may have batched/dispatched in between; the
+                // queue reopens — keep probing
+                Ok(_) | Err(_) => std::thread::sleep(Duration::from_micros(50)),
+            }
+        }
+        assert!(saw_full, "admission limit never engaged");
+    }
+
+    #[test]
+    fn evicted_context_is_a_typed_error_and_data_survives() {
+        let engine = small_engine(1, AttentionBackend::conservative(), 32, 8);
+        let ctx = engine.register_context(kv(32, 8, 3)).unwrap();
+        let clone = ctx.clone();
+        engine.evict(&ctx).unwrap();
+        assert!(matches!(engine.submit(&ctx, vec![0.0; 8]), Err(A3Error::ContextEvicted(_))));
+        assert!(matches!(
+            engine.submit(&clone, vec![0.0; 8]),
+            Err(A3Error::ContextEvicted(_))
+        ));
+        assert!(matches!(engine.evict(&ctx), Err(A3Error::ContextEvicted(_))));
+        // the refcounted K/V outlives eviction for existing handles
+        assert_eq!(clone.n(), 32);
+        assert!(clone.sorted().n == 32);
+    }
+
+    #[test]
+    fn submit_recv_roundtrip_matches_direct_attention() {
+        let engine = EngineBuilder::new()
+            .dims(Dims::new(48, 16))
+            .max_batch(4)
+            .build()
+            .unwrap();
+        let pair = kv(48, 16, 4);
+        let ctx = engine.register_context(pair.clone()).unwrap();
+        let mut rng = Rng::new(5);
+        let queries: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(16, 1.0)).collect();
+        let tickets: Vec<Ticket> = queries
+            .iter()
+            .map(|q| engine.submit(&ctx, q.clone()).unwrap())
+            .collect();
+        let mut got = 0;
+        while got < 4 {
+            if let Some(r) = engine.recv_timeout(Duration::from_secs(5)).unwrap() {
+                let i = tickets.iter().position(|t| t.id == r.id).unwrap();
+                let want = crate::attention::attention(&pair, &queries[i]);
+                crate::testutil::assert_allclose(&r.output, &want, 1e-6, 0.0);
+                got += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn drain_flushes_tail_batches_below_max_batch() {
+        // max_batch 8 and an effectively infinite wait: without drain
+        // the 3 tail queries would sit in the batcher forever
+        let engine = EngineBuilder::new()
+            .dims(Dims::new(16, 8))
+            .max_batch(8)
+            .max_wait_ns(u64::MAX)
+            .build()
+            .unwrap();
+        let ctx = engine.register_context(kv(16, 8, 6)).unwrap();
+        for _ in 0..3 {
+            engine.submit(&ctx, vec![0.5; 8]).unwrap();
+        }
+        assert!(engine.try_recv().unwrap().is_none(), "batch must still be open");
+        let stats = engine.drain().unwrap();
+        assert_eq!(stats.metrics.completed, 3);
+        let mut seen = 0;
+        while engine.try_recv().unwrap().is_some() {
+            seen += 1;
+        }
+        assert_eq!(seen, 3, "tail queries dispatched, not dropped");
+    }
+
+    #[test]
+    fn ticket_and_response_ordering_under_multi_context_submit() {
+        let engine = EngineBuilder::new()
+            .units(2)
+            .backend(AttentionBackend::conservative())
+            .dims(Dims::new(64, 16))
+            .max_batch(4)
+            .max_wait_ns(u64::MAX)
+            .build()
+            .unwrap();
+        let a = engine.register_context(kv(64, 16, 7)).unwrap();
+        let b = engine.register_context(kv(64, 16, 8)).unwrap();
+        let mut rng = Rng::new(9);
+        let mut tickets = Vec::new();
+        // interleave submissions across the two contexts
+        for i in 0..12 {
+            let h = if i % 2 == 0 { &a } else { &b };
+            tickets.push(engine.submit(h, rng.normal_vec(16, 1.0)).unwrap());
+        }
+        // ticket ids are unique and strictly increasing per submission
+        for w in tickets.windows(2) {
+            assert!(w[1].id > w[0].id);
+        }
+        engine.drain().unwrap();
+        let mut responses = Vec::new();
+        while let Some(r) = engine.try_recv().unwrap() {
+            responses.push(r);
+        }
+        assert_eq!(responses.len(), 12);
+        // every ticket got exactly one response, tagged with its context
+        for t in &tickets {
+            let r = responses.iter().find(|r| r.id == t.id).expect("response per ticket");
+            assert_eq!(r.context, t.context);
+        }
+        // within one context, responses complete in submission order
+        for ctx_id in [a.id(), b.id()] {
+            let ids: Vec<u64> =
+                responses.iter().filter(|r| r.context == ctx_id).map(|r| r.id).collect();
+            let mut sorted = ids.clone();
+            sorted.sort_unstable();
+            assert_eq!(ids, sorted, "context {ctx_id} responses out of order");
+        }
+    }
+
+    #[test]
+    fn run_stream_reports_like_classic_serve() {
+        let engine = EngineBuilder::new()
+            .units(2)
+            .dims(Dims::new(64, 16))
+            .build()
+            .unwrap();
+        let ctx = engine.register_context(kv(64, 16, 10)).unwrap();
+        let mut rng = Rng::new(11);
+        let stream: Vec<_> = (0..40).map(|_| (ctx.clone(), rng.normal_vec(16, 1.0))).collect();
+        let (tickets, report) = engine.run_stream(stream).unwrap();
+        assert_eq!(tickets.len(), 40);
+        assert_eq!(report.metrics.completed, 40);
+        assert_eq!(report.responses.len(), 40);
+        assert!(report.sim_makespan > 0);
+        assert!(report.metrics.report().summary().contains("completed=40"));
+    }
+
+    #[test]
+    fn base_engine_needs_no_prewarm_but_selective_engine_prewarms() {
+        let dense = small_engine(1, AttentionBackend::Exact, 32, 8);
+        let ctx = dense.register_context(kv(32, 8, 12)).unwrap();
+        assert!(!ctx.prewarmed(), "dense engines must not pay the sort");
+        ctx.prewarm();
+        assert!(ctx.prewarmed());
+
+        let selective = small_engine(1, AttentionBackend::aggressive(), 32, 8);
+        let ctx = selective.register_context(kv(32, 8, 13)).unwrap();
+        assert!(ctx.prewarmed(), "registration is comprehension time");
+    }
+
+    #[test]
+    fn handle_from_another_engine_is_rejected() {
+        // same numeric context id on both engines; the foreign handle
+        // must never reach the other engine's K/V
+        let e1 = small_engine(1, AttentionBackend::Exact, 16, 8);
+        let e2 = small_engine(1, AttentionBackend::Exact, 16, 8);
+        let h1 = e1.register_context(kv(16, 8, 20)).unwrap();
+        let h2 = e2.register_context(kv(16, 8, 21)).unwrap();
+        assert_eq!(h1.id(), h2.id());
+        assert!(matches!(
+            e2.submit(&h1, vec![0.0; 8]),
+            Err(A3Error::UnknownContext(_))
+        ));
+        assert!(matches!(e2.evict(&h1), Err(A3Error::UnknownContext(_))));
+        assert!(matches!(
+            e2.run_stream(vec![(h1.clone(), vec![0.0; 8])]),
+            Err(A3Error::UnknownContext(_))
+        ));
+        // the rightful owner still works
+        e1.submit(&h1, vec![0.0; 8]).unwrap();
+    }
+
+    #[test]
+    fn never_registered_id_is_unknown_not_evicted() {
+        // the deprecated Server path submits raw ids; an id that never
+        // existed must not be reported as evicted
+        let engine = small_engine(1, AttentionBackend::Exact, 16, 8);
+        let _live = engine.register_context(kv(16, 8, 22)).unwrap();
+        let q = crate::coordinator::request::Query {
+            id: 0,
+            context: 999,
+            embedding: vec![0.0; 8],
+            arrival_ns: 0,
+        };
+        assert!(matches!(
+            engine.submit_query(q),
+            Err(A3Error::UnknownContext(999))
+        ));
+    }
+
+    #[test]
+    fn stopped_engine_returns_engine_stopped() {
+        let mut engine = small_engine(1, AttentionBackend::Exact, 16, 8);
+        let ctx = engine.register_context(kv(16, 8, 14)).unwrap();
+        engine.stop();
+        assert!(matches!(engine.submit(&ctx, vec![0.0; 8]), Err(A3Error::EngineStopped)));
+        assert!(matches!(engine.drain(), Err(A3Error::EngineStopped)));
+        assert!(matches!(engine.register_context(kv(16, 8, 15)), Err(A3Error::EngineStopped)));
+    }
+}

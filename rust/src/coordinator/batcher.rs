@@ -66,12 +66,34 @@ impl Batcher {
             .collect()
     }
 
-    /// Drain everything (shutdown).
-    pub fn flush(&mut self) -> Vec<Vec<Query>> {
-        let keys: Vec<ContextId> = self.pending.keys().copied().collect();
-        keys.into_iter()
-            .filter_map(|c| self.pending.remove(&c))
-            .collect()
+    /// Drain everything (shutdown / engine drain): every partially
+    /// filled batch — tail queries below `max_batch` that never hit the
+    /// timeout — is dispatched, not dropped. Batches come out oldest
+    /// first (by their oldest member's arrival), so drain order is
+    /// deterministic regardless of hash-map iteration order.
+    pub fn flush_all(&mut self) -> Vec<Vec<Query>> {
+        let mut batches: Vec<Vec<Query>> = self.pending.drain().map(|(_, qs)| qs).collect();
+        batches.sort_by_key(|qs| qs.first().map_or(u64::MAX, |q| q.arrival_ns));
+        batches
+    }
+
+    /// Earliest size-or-timeout deadline over all pending batches
+    /// (oldest member's arrival + wait budget, saturating), or `None`
+    /// when nothing is pending. Lets the engine worker sleep until the
+    /// next real expiry instead of polling.
+    pub fn next_deadline_ns(&self) -> Option<u64> {
+        self.pending
+            .values()
+            .filter_map(|qs| qs.first())
+            .map(|q| q.arrival_ns.saturating_add(self.policy.max_wait_ns))
+            .min()
+    }
+
+    /// Remove and return one context's pending batch (eviction: its
+    /// already-admitted queries are dispatched before the context
+    /// leaves the engine).
+    pub fn take_context(&mut self, ctx: ContextId) -> Option<Vec<Query>> {
+        self.pending.remove(&ctx)
     }
 
     pub fn pending_count(&self) -> usize {
@@ -123,8 +145,71 @@ mod tests {
         let mut b = Batcher::new(BatchPolicy::default());
         b.push(q(0, 1, 0));
         b.push(q(1, 2, 0));
-        let all = b.flush();
+        let all = b.flush_all();
         assert_eq!(all.len(), 2);
         assert_eq!(b.pending_count(), 0);
+    }
+
+    #[test]
+    fn flush_all_emits_tail_batches_oldest_first() {
+        // tail queries below max_batch that never hit the timeout must
+        // come out on drain, ordered by their oldest member's arrival
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait_ns: u64::MAX });
+        b.push(q(0, 3, 500));
+        b.push(q(1, 1, 100));
+        b.push(q(2, 2, 300));
+        b.push(q(3, 1, 600));
+        let all = b.flush_all();
+        assert_eq!(all.len(), 3);
+        let oldest: Vec<u64> = all.iter().map(|qs| qs[0].arrival_ns).collect();
+        assert_eq!(oldest, vec![100, 300, 500]);
+        assert_eq!(all[0].len(), 2); // context 1 kept both members
+        assert_eq!(b.pending_count(), 0);
+        assert!(b.flush_all().is_empty());
+    }
+
+    #[test]
+    fn batch_closes_at_exactly_max_batch() {
+        // boundary: the push that reaches max_batch closes; one less
+        // stays pending
+        let mut b = Batcher::new(BatchPolicy { max_batch: 4, max_wait_ns: u64::MAX });
+        for i in 0..3 {
+            assert!(b.push(q(i, 1, i)).is_none(), "batch must stay open below max");
+        }
+        let batch = b.push(q(3, 1, 3)).expect("batch closes at exactly max_batch");
+        assert_eq!(batch.len(), 4);
+    }
+
+    #[test]
+    fn expire_fires_at_exactly_max_wait() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait_ns: 100 });
+        b.push(q(0, 1, 50));
+        assert!(b.expire(149).is_empty(), "one ns short of the budget");
+        let expired = b.expire(150); // waited exactly max_wait_ns
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0][0].id, 0);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest_pending_and_saturates() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait_ns: 100 });
+        assert_eq!(b.next_deadline_ns(), None);
+        b.push(q(0, 1, 500));
+        b.push(q(1, 2, 300));
+        assert_eq!(b.next_deadline_ns(), Some(400)); // oldest bucket head
+        let mut sat = Batcher::new(BatchPolicy { max_batch: 8, max_wait_ns: u64::MAX });
+        sat.push(q(0, 1, 7));
+        assert_eq!(sat.next_deadline_ns(), Some(u64::MAX));
+    }
+
+    #[test]
+    fn take_context_removes_only_that_context() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        b.push(q(0, 1, 0));
+        b.push(q(1, 2, 0));
+        let taken = b.take_context(1).expect("context 1 pending");
+        assert_eq!(taken.len(), 1);
+        assert!(b.take_context(1).is_none());
+        assert_eq!(b.pending_count(), 1);
     }
 }

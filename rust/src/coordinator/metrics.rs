@@ -49,14 +49,28 @@ impl Metrics {
         (self.completed - 1) as f64 / (span as f64 * 1e-9)
     }
 
+    /// One percentile. Clones and sorts the latency vector per call —
+    /// when more than one percentile is needed (summaries, reports),
+    /// use the sort-once [`Metrics::report`] snapshot instead.
     pub fn percentile_ns(&self, p: f64) -> u64 {
         if self.latencies_ns.is_empty() {
             return 0;
         }
         let mut sorted = self.latencies_ns.clone();
         sorted.sort_unstable();
-        let idx = ((sorted.len() as f64 - 1.0) * p / 100.0).round() as usize;
-        sorted[idx]
+        percentile_of_sorted(&sorted, p)
+    }
+
+    /// Sort-once snapshot: mean, p50/p95/p99 and the counters in one
+    /// pass over the latency vector (one clone + one sort total,
+    /// instead of one per percentile).
+    pub fn report(&self) -> MetricsReport {
+        MetricsReport {
+            completed: self.completed,
+            qps: self.throughput_qps(),
+            mean_selected_rows: self.mean_selected_rows(),
+            ..MetricsReport::from_latencies_ns(&self.latencies_ns)
+        }
     }
 
     pub fn mean_latency_ns(&self) -> f64 {
@@ -74,15 +88,67 @@ impl Metrics {
     }
 
     pub fn summary(&self) -> String {
+        self.report().summary()
+    }
+}
+
+/// Index into an ascending latency vector at percentile `p` (nearest
+/// rank, 0-based rounding — the same rule `percentile_ns` always used).
+fn percentile_of_sorted(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p / 100.0).round() as usize;
+    sorted[idx]
+}
+
+/// Immutable percentile snapshot of a [`Metrics`] accumulator, built
+/// with a single sort by [`Metrics::report`]. `ServeReport` printing
+/// and the Fig. 14 latency rows consume this instead of re-sorting per
+/// percentile.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MetricsReport {
+    pub completed: u64,
+    /// Host wall-clock queries/s over the completion window.
+    pub qps: f64,
+    pub mean_ns: f64,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+    pub mean_selected_rows: f64,
+}
+
+impl MetricsReport {
+    /// Snapshot a bare latency population (no counters) — e.g. the
+    /// per-query simulated latencies of a `SimReport`.
+    pub fn from_latencies_ns(latencies: &[u64]) -> Self {
+        let mut sorted = latencies.to_vec();
+        sorted.sort_unstable();
+        MetricsReport {
+            completed: sorted.len() as u64,
+            qps: 0.0,
+            mean_ns: if sorted.is_empty() {
+                0.0
+            } else {
+                sorted.iter().sum::<u64>() as f64 / sorted.len() as f64
+            },
+            p50_ns: percentile_of_sorted(&sorted, 50.0),
+            p95_ns: percentile_of_sorted(&sorted, 95.0),
+            p99_ns: percentile_of_sorted(&sorted, 99.0),
+            mean_selected_rows: 0.0,
+        }
+    }
+
+    pub fn summary(&self) -> String {
         format!(
             "completed={} qps={:.0} latency mean={:.1}µs p50={:.1}µs p95={:.1}µs p99={:.1}µs mean_rows={:.1}",
             self.completed,
-            self.throughput_qps(),
-            self.mean_latency_ns() / 1e3,
-            self.percentile_ns(50.0) as f64 / 1e3,
-            self.percentile_ns(95.0) as f64 / 1e3,
-            self.percentile_ns(99.0) as f64 / 1e3,
-            self.mean_selected_rows(),
+            self.qps,
+            self.mean_ns / 1e3,
+            self.p50_ns as f64 / 1e3,
+            self.p95_ns as f64 / 1e3,
+            self.p99_ns as f64 / 1e3,
+            self.mean_selected_rows,
         )
     }
 }
@@ -131,5 +197,77 @@ mod tests {
         assert_eq!(m.throughput_qps(), 0.0);
         assert_eq!(m.percentile_ns(99.0), 0);
         assert_eq!(m.mean_latency_ns(), 0.0);
+        assert_eq!(m.report(), MetricsReport::default());
+    }
+
+    #[test]
+    fn report_matches_per_call_percentiles() {
+        let mut m = Metrics::default();
+        for i in (1..=200u64).rev() {
+            m.record(i * 7, i * 10, 3, 50);
+        }
+        let r = m.report();
+        assert_eq!(r.p50_ns, m.percentile_ns(50.0));
+        assert_eq!(r.p95_ns, m.percentile_ns(95.0));
+        assert_eq!(r.p99_ns, m.percentile_ns(99.0));
+        assert_eq!(r.mean_ns, m.mean_latency_ns());
+        assert_eq!(r.completed, 200);
+        assert_eq!(r.mean_selected_rows, 3.0);
+        assert!(m.summary().contains("completed=200"));
+    }
+
+    #[test]
+    fn from_latencies_matches_accumulated() {
+        let lats: Vec<u64> = (0..37).map(|i| (i * 31) % 97).collect();
+        let mut m = Metrics::default();
+        for &l in &lats {
+            m.record(l, 1, 0, 0);
+        }
+        let a = MetricsReport::from_latencies_ns(&lats);
+        let b = m.report();
+        assert_eq!((a.p50_ns, a.p95_ns, a.p99_ns, a.mean_ns), (b.p50_ns, b.p95_ns, b.p99_ns, b.mean_ns));
+    }
+
+    #[test]
+    fn merge_disjoint_windows_spans_both() {
+        // a: completions in [100, 200]; b: completions in [900, 1000]
+        let mut a = Metrics::default();
+        a.record(10, 100, 1, 1);
+        a.record(10, 200, 1, 1);
+        let mut b = Metrics::default();
+        b.record(20, 900, 2, 2);
+        b.record(20, 1000, 2, 2);
+        a.merge(&b);
+        assert_eq!(a.completed, 4);
+        assert_eq!(a.first_ns, 100);
+        assert_eq!(a.last_ns, 1000);
+        // 3 intervals over 900 ns
+        assert!((a.throughput_qps() - 3.0 / 900e-9).abs() < 1.0);
+    }
+
+    #[test]
+    fn merge_overlapping_windows_keeps_extremes() {
+        // a: [100, 500]; b: [300, 400] lies inside a's window
+        let mut a = Metrics::default();
+        a.record(10, 100, 1, 1);
+        a.record(10, 500, 1, 1);
+        let mut b = Metrics::default();
+        b.record(20, 300, 1, 1);
+        b.record(20, 400, 1, 1);
+        let before = a.throughput_qps();
+        a.merge(&b);
+        assert_eq!(a.first_ns, 100);
+        assert_eq!(a.last_ns, 500);
+        assert_eq!(a.completed, 4);
+        // same window, more completions: throughput goes up
+        assert!(a.throughput_qps() > before);
+        // merging into an empty accumulator adopts the other's window
+        let mut empty = Metrics::default();
+        empty.merge(&a);
+        assert_eq!((empty.first_ns, empty.last_ns, empty.completed), (100, 500, 4));
+        // merging an empty accumulator is a no-op
+        let snapshot = empty.report();
+        empty.merge(&Metrics::default());
+        assert_eq!(empty.report(), snapshot);
     }
 }

@@ -13,9 +13,16 @@
 //! * [`scheduler`] — multi-unit dispatch (§III-C "Use of Multiple A³
 //!   Units"): least-loaded routing across unit replicas, per-unit
 //!   cycle-accurate occupancy from the [`crate::sim`] pipelines;
-//! * [`server`] — the threaded serving loop gluing generator →
-//!   batcher → scheduler → responses, with latency/throughput metrics;
-//! * [`metrics`] — streaming percentile + counter accumulation.
+//! * [`server`] — serving-run config/report types plus the deprecated
+//!   [`Server`] shim (the serving loop itself now lives in
+//!   [`crate::api::Engine`]);
+//! * [`metrics`] — streaming percentile + counter accumulation with
+//!   the sort-once [`metrics::MetricsReport`] snapshot.
+//!
+//! These are the coordinator *internals*: hosts drive them through
+//! the typed [`crate::api`] facade (`EngineBuilder` → `Engine` →
+//! `ContextHandle`), which owns the worker thread and returns
+//! [`crate::api::A3Error`] instead of panicking.
 
 pub mod batcher;
 pub mod metrics;
@@ -24,7 +31,8 @@ pub mod scheduler;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use metrics::Metrics;
+pub use metrics::{Metrics, MetricsReport};
 pub use request::{KvContext, Query, QueryId, Response};
 pub use scheduler::{Scheduler, UnitConfig, UnitKind};
+#[allow(deprecated)]
 pub use server::{ServeConfig, ServeReport, Server};

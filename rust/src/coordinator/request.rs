@@ -17,8 +17,9 @@ pub type ContextId = u32;
 /// The cache is *lazy*: contexts served only by dense backends never
 /// pay for the sort. Serving stacks that run selective backends should
 /// call [`KvContext::prewarm_sorted`] at registration time (the
-/// [`crate::coordinator::Server`] constructor does) so the one-time
-/// sort happens off the query critical path.
+/// [`crate::api::Engine`] does this in
+/// [`crate::api::Engine::register_context`]) so the one-time sort
+/// happens off the query critical path.
 #[derive(Clone)]
 pub struct KvContext {
     pub id: ContextId,

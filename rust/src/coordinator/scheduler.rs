@@ -10,6 +10,7 @@
 
 
 use super::request::{KvContext, Query, Response};
+use crate::api::A3Error;
 use crate::model::AttentionBackend;
 use crate::sim::{ApproxPipeline, ApproxQuery, BasePipeline, Dims};
 
@@ -105,20 +106,34 @@ impl Scheduler {
     /// the query critical path once the context is prewarmed. Per-query
     /// pipeline timing is charged exactly as before, and outputs are
     /// bit-identical to per-query execution.
-    pub fn dispatch(&mut self, ctx: &KvContext, batch: &[Query]) -> Vec<Response> {
-        assert!(!batch.is_empty());
+    ///
+    /// Serving-path validation is typed, not asserted: an empty batch,
+    /// a scheduler with no units, a query whose embedding length does
+    /// not match the context, or a unit whose pipeline disagrees with
+    /// its configured kind all come back as [`A3Error`] — the engine
+    /// surfaces them to the client instead of tearing down the worker.
+    pub fn dispatch(
+        &mut self,
+        ctx: &KvContext,
+        batch: &[Query],
+    ) -> Result<Vec<Response>, A3Error> {
+        if batch.is_empty() {
+            return Err(A3Error::EmptyBatch);
+        }
         let now = self.now_cycles;
         // least-loaded: earliest availability
         let idx = (0..self.units.len())
             .min_by_key(|&i| self.units[i].free_at.max(now))
-            .expect("no units configured");
+            .ok_or_else(|| A3Error::ConfigError("scheduler has no units".into()))?;
         let unit = &mut self.units[idx];
         let arrival = unit.free_at.max(now);
 
         let d = ctx.kv.d;
         let mut flat = Vec::with_capacity(batch.len() * d);
         for q in batch {
-            assert_eq!(q.embedding.len(), d, "query dimension mismatch");
+            if q.embedding.len() != d {
+                return Err(A3Error::DimensionMismatch { expected: d, got: q.embedding.len() });
+            }
             flat.extend_from_slice(&q.embedding);
         }
 
@@ -141,7 +156,7 @@ impl Scheduler {
                     _ => ctx.kv.n,
                 };
                 backend
-                    .run_batch(&ctx.kv, sorted, &flat)
+                    .try_run_batch(&ctx.kv, sorted, &flat)?
                     .into_iter()
                     .map(|(out, sel)| {
                         let timing = p.push_query(
@@ -156,7 +171,11 @@ impl Scheduler {
                     })
                     .collect()
             }
-            _ => unreachable!("unit pipe/kind mismatch"),
+            _ => {
+                return Err(A3Error::BackendMismatch(
+                    "unit pipeline does not match its configured kind".into(),
+                ))
+            }
         };
 
         // ...then one shared accounting + response tail for both kinds
@@ -173,7 +192,7 @@ impl Scheduler {
                 completed_ns: timing.finish, // 1 cycle == 1 ns at 1 GHz
             });
         }
-        responses
+        Ok(responses)
     }
 
     /// Simulated cycle at which all units drain.
@@ -218,7 +237,7 @@ mod tests {
         let c = ctx(64, 16, 0);
         let dims = Dims::new(64, 16);
         let mut s = Scheduler::new(&[UnitConfig { kind: UnitKind::Base, dims }]);
-        let rs = s.dispatch(&c, &queries(10, 16, 1));
+        let rs = s.dispatch(&c, &queries(10, 16, 1)).unwrap();
         assert_eq!(rs.len(), 10);
         // steady state: one query per (n + 9) cycles
         let span = s.makespan_cycles();
@@ -239,7 +258,7 @@ mod tests {
                 units,
             );
             for chunk in queries(total, 64, 3).chunks(8) {
-                s.dispatch(&c, chunk);
+                s.dispatch(&c, chunk).unwrap();
             }
             s.makespan_cycles()
         };
@@ -255,12 +274,12 @@ mod tests {
         let dims = Dims::paper();
         let qs = queries(32, 64, 5);
         let mut base = Scheduler::new(&[UnitConfig { kind: UnitKind::Base, dims }]);
-        base.dispatch(&c, &qs);
+        base.dispatch(&c, &qs).unwrap();
         let mut approx = Scheduler::new(&[UnitConfig {
             kind: UnitKind::Approximate { backend: AttentionBackend::aggressive() },
             dims,
         }]);
-        let rs = approx.dispatch(&c, &qs);
+        let rs = approx.dispatch(&c, &qs).unwrap();
         assert!(approx.makespan_cycles() < base.makespan_cycles());
         assert!(rs.iter().all(|r| r.selected_rows < 320));
     }
@@ -276,7 +295,7 @@ mod tests {
         }]);
         assert!(s.needs_sorted_contexts());
         let qs = queries(8, 64, 9);
-        let rs = s.dispatch(&c, &qs);
+        let rs = s.dispatch(&c, &qs).unwrap();
         assert!(c.sorted_ready(), "dispatch must populate the per-context cache");
         for (q, r) in qs.iter().zip(&rs) {
             let (out, sel) = backend.run(&c.kv, Some(c.sorted()), &q.embedding);
@@ -302,11 +321,30 @@ mod tests {
             3,
         );
         for chunk in queries(30, 64, 7).chunks(2) {
-            s.dispatch(&c, chunk);
+            s.dispatch(&c, chunk).unwrap();
         }
         let loads = s.per_unit_processed();
         let max = *loads.iter().max().unwrap() as f64;
         let min = *loads.iter().min().unwrap() as f64;
         assert!(max / min.max(1.0) < 2.0, "{loads:?}");
+    }
+
+    #[test]
+    fn dispatch_errors_are_typed_not_panics() {
+        let c = ctx(16, 8, 10);
+        let mut s = Scheduler::new(&[UnitConfig {
+            kind: UnitKind::Base,
+            dims: Dims::new(16, 8),
+        }]);
+        assert!(matches!(s.dispatch(&c, &[]), Err(A3Error::EmptyBatch)));
+        let bad = Query { id: 0, context: 0, embedding: vec![0.0; 5], arrival_ns: 0 };
+        assert!(matches!(
+            s.dispatch(&c, &[bad]),
+            Err(A3Error::DimensionMismatch { expected: 8, got: 5 })
+        ));
+        // errors must not corrupt the unit state: a valid dispatch
+        // still works afterwards
+        let ok = s.dispatch(&c, &queries(2, 8, 11)).unwrap();
+        assert_eq!(ok.len(), 2);
     }
 }

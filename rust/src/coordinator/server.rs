@@ -1,34 +1,29 @@
-//! The threaded serving loop: generator → batcher → scheduler →
-//! metrics. One thread feeds queries at a configured rate, the
-//! coordinator thread batches and dispatches, responses flow back over
-//! a channel. Wall-clock metrics measure the *host* stack; simulated
-//! cycles measure the *accelerator* — both are reported.
+//! Serving-run configuration/report types and the deprecated [`Server`]
+//! compatibility shim.
+//!
+//! The serving loop itself lives in [`crate::api`]: an
+//! [`crate::api::Engine`] owns the coordinator worker thread
+//! (generator → batcher → scheduler → metrics) and exposes the
+//! non-blocking submit/receive path plus the blocking
+//! [`crate::api::Engine::run_stream`]. [`Server`] remains for one
+//! release as a thin shim over the engine so existing call sites keep
+//! compiling; new code should use [`crate::api::EngineBuilder`].
 
-use std::sync::mpsc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use super::batcher::{BatchPolicy, Batcher};
+use super::batcher::BatchPolicy;
 use super::metrics::Metrics;
 use super::request::{KvContext, Query, Response};
 use super::scheduler::Scheduler;
+use crate::api::Engine;
 
-/// Serving-run configuration.
-#[derive(Clone, Copy, Debug)]
+/// Serving-run configuration. (The run length is the query stream's
+/// length; there is no separate count knob.)
+#[derive(Clone, Copy, Debug, Default)]
 pub struct ServeConfig {
     pub batch: BatchPolicy,
     /// Target query arrival rate (queries/s); None = open throttle.
     pub arrival_qps: Option<f64>,
-    pub total_queries: usize,
-}
-
-impl Default for ServeConfig {
-    fn default() -> Self {
-        ServeConfig {
-            batch: BatchPolicy::default(),
-            arrival_qps: None,
-            total_queries: 1024,
-        }
-    }
 }
 
 /// Result of a serving run.
@@ -50,159 +45,62 @@ impl ServeReport {
         }
         self.metrics.completed as f64 / crate::sim::cycles_to_seconds(self.sim_makespan)
     }
+
+    /// Sort-once latency/throughput snapshot of the host metrics.
+    pub fn summary(&self) -> String {
+        self.metrics.report().summary()
+    }
 }
 
-/// The coordinator: owns contexts, a batcher and a scheduler.
+/// The legacy coordinator front door, now a shim over
+/// [`crate::api::Engine`].
+///
+/// Its fields are private; the engine owns contexts and scheduler.
+/// Unlike the engine it keeps the seed's panicking contract (a bad
+/// query tears the serve down) — migrate to [`crate::api`] for typed
+/// [`crate::api::A3Error`] handling.
+#[deprecated(
+    since = "0.2.0",
+    note = "use a3::api::{EngineBuilder, Engine} — see EXPERIMENTS.md for the migration map"
+)]
 pub struct Server {
-    pub contexts: Vec<KvContext>,
-    pub scheduler: Scheduler,
-    pub config: ServeConfig,
+    engine: Engine,
+    contexts: Vec<KvContext>,
 }
 
+#[allow(deprecated)]
 impl Server {
     /// Register contexts against a scheduler. When any unit runs a
     /// candidate-selecting backend, every context's sorted-key cache
-    /// is prewarmed here — registration *is* comprehension time
-    /// (§IV-C), so the one-time column sort stays off the query
-    /// critical path.
+    /// is prewarmed (registration *is* comprehension time, §IV-C).
     pub fn new(contexts: Vec<KvContext>, scheduler: Scheduler, config: ServeConfig) -> Self {
-        if scheduler.needs_sorted_contexts() {
-            for ctx in &contexts {
-                ctx.prewarm_sorted();
-            }
-        }
-        Server { contexts, scheduler, config }
+        let engine = Engine::from_parts(contexts.clone(), scheduler, config)
+            .expect("failed to start the serving engine worker");
+        Server { engine, contexts }
     }
 
-    fn context(&self, id: u32) -> &KvContext {
-        self.contexts
-            .iter()
-            .find(|c| c.id == id)
-            .expect("unknown context id")
+    /// Read-only view of the registered contexts (replaces the old
+    /// public field).
+    pub fn contexts(&self) -> &[KvContext] {
+        &self.contexts
     }
 
-    /// Run the serving loop over a pre-built query stream. A generator
-    /// thread paces arrivals; this thread batches, dispatches, records.
+    /// Run the blocking serving loop over a pre-built query stream.
     pub fn serve(&mut self, queries: Vec<Query>) -> ServeReport {
-        let (tx, rx) = mpsc::channel::<Query>();
-        let pace = self.config.arrival_qps;
-        let producer = std::thread::spawn(move || {
-            let start = Instant::now();
-            for (i, mut q) in queries.into_iter().enumerate() {
-                if let Some(qps) = pace {
-                    let due = Duration::from_secs_f64(i as f64 / qps);
-                    if let Some(sleep) = due.checked_sub(start.elapsed()) {
-                        std::thread::sleep(sleep);
-                    }
-                }
-                q.arrival_ns = start.elapsed().as_nanos() as u64;
-                if tx.send(q).is_err() {
-                    return;
-                }
-            }
-        });
-
-        let start = Instant::now();
-        let mut batcher = Batcher::new(self.config.batch);
-        let mut metrics = Metrics::default();
-        let mut responses = Vec::new();
-        let mut arrivals: std::collections::HashMap<u64, u64> = Default::default();
-
-        // Under paced arrivals the simulated clock tracks the host
-        // arrival pattern (1 cycle = 1 ns); in open-throttle
-        // (saturation) runs it does not, so sim makespan measures pure
-        // accelerator capacity rather than host-loop overhead.
-        let paced = pace.is_some();
-        let dispatch = |server_sched: &mut Scheduler,
-                            contexts: &[KvContext],
-                            batch: Vec<Query>,
-                            metrics: &mut Metrics,
-                            responses: &mut Vec<Response>,
-                            arrivals: &std::collections::HashMap<u64, u64>| {
-            let ctx = contexts
-                .iter()
-                .find(|c| c.id == batch[0].context)
-                .expect("unknown context");
-            if paced {
-                let now_ns = batch.iter().map(|q| q.arrival_ns).max().unwrap();
-                server_sched.advance_to(now_ns);
-            }
-            for r in server_sched.dispatch(ctx, &batch) {
-                let arrival = arrivals.get(&r.id).copied().unwrap_or(0);
-                metrics.record(
-                    r.completed_ns.saturating_sub(arrival),
-                    r.completed_ns,
-                    r.selected_rows,
-                    r.sim_cycles,
-                );
-                responses.push(r);
-            }
-        };
-
-        loop {
-            match rx.recv_timeout(Duration::from_micros(200)) {
-                Ok(q) => {
-                    arrivals.insert(q.id, q.arrival_ns);
-                    if let Some(batch) = batcher.push(q) {
-                        dispatch(
-                            &mut self.scheduler,
-                            &self.contexts,
-                            batch,
-                            &mut metrics,
-                            &mut responses,
-                            &arrivals,
-                        );
-                    }
-                    let now_ns = start.elapsed().as_nanos() as u64;
-                    for batch in batcher.expire(now_ns) {
-                        dispatch(
-                            &mut self.scheduler,
-                            &self.contexts,
-                            batch,
-                            &mut metrics,
-                            &mut responses,
-                            &arrivals,
-                        );
-                    }
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => {
-                    let now_ns = start.elapsed().as_nanos() as u64;
-                    for batch in batcher.expire(now_ns) {
-                        dispatch(
-                            &mut self.scheduler,
-                            &self.contexts,
-                            batch,
-                            &mut metrics,
-                            &mut responses,
-                            &arrivals,
-                        );
-                    }
-                }
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
-            }
-        }
-        for batch in batcher.flush() {
-            dispatch(
-                &mut self.scheduler,
-                &self.contexts,
-                batch,
-                &mut metrics,
-                &mut responses,
-                &arrivals,
-            );
-        }
-        producer.join().expect("producer thread panicked");
-        ServeReport {
-            metrics,
-            sim_makespan: self.scheduler.makespan_cycles(),
-            wall: start.elapsed(),
-            responses,
-        }
+        self.engine
+            .run_queries(queries)
+            .expect("serve failed (unknown context or dimension mismatch)")
     }
 
     /// Convenience: serve `count` random queries against context 0.
     pub fn serve_random(&mut self, count: usize, seed: u64) -> ServeReport {
-        let d = self.context(0).kv.d;
+        let d = self
+            .contexts
+            .iter()
+            .find(|c| c.id == 0)
+            .expect("unknown context id")
+            .kv
+            .d;
         let mut rng = crate::testutil::Rng::new(seed);
         let queries = (0..count)
             .map(|i| Query {
@@ -219,27 +117,30 @@ impl Server {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::{AttentionBackend, Dims, EngineBuilder};
     use crate::attention::KvPair;
     use crate::coordinator::scheduler::{UnitConfig, UnitKind};
-    use crate::model::AttentionBackend;
-    use crate::sim::Dims;
     use crate::testutil::Rng;
 
-    fn make_server(units: usize, kind: UnitKind, n: usize) -> Server {
-        let mut rng = Rng::new(9);
-        let kv = KvPair::new(n, 64, rng.normal_vec(n * 64, 1.0), rng.normal_vec(n * 64, 1.0));
-        let ctx = KvContext::new(0, kv);
-        let sched = Scheduler::replicated(
-            UnitConfig { kind, dims: Dims::new(n, 64) },
-            units,
-        );
-        Server::new(vec![ctx], sched, ServeConfig::default())
+    fn make_kv(n: usize, seed: u64) -> KvPair {
+        let mut rng = Rng::new(seed);
+        KvPair::new(n, 64, rng.normal_vec(n * 64, 1.0), rng.normal_vec(n * 64, 1.0))
+    }
+
+    fn make_engine(units: usize, backend: AttentionBackend, n: usize) -> Engine {
+        EngineBuilder::new()
+            .units(units)
+            .backend(backend)
+            .dims(Dims::new(n, 64))
+            .build()
+            .unwrap()
     }
 
     #[test]
     fn serves_all_queries() {
-        let mut s = make_server(1, UnitKind::Base, 64);
-        let report = s.serve_random(100, 1);
+        let engine = make_engine(1, AttentionBackend::Exact, 64);
+        let ctx = engine.register_context(make_kv(64, 9)).unwrap();
+        let report = engine.run_random(&ctx, 100, 1).unwrap();
         assert_eq!(report.metrics.completed, 100);
         assert_eq!(report.responses.len(), 100);
         assert!(report.sim_makespan > 0);
@@ -247,26 +148,25 @@ mod tests {
 
     #[test]
     fn outputs_match_direct_attention() {
-        let mut s = make_server(1, UnitKind::Base, 32);
-        let report = s.serve_random(16, 2);
+        let engine = make_engine(1, AttentionBackend::Exact, 32);
+        let kv = make_kv(32, 9);
+        let ctx = engine.register_context(kv.clone()).unwrap();
+        let report = engine.run_random(&ctx, 16, 2).unwrap();
         // re-run one query directly
         let mut rng = Rng::new(2);
         let q0 = rng.normal_vec(64, 1.0);
-        let direct = crate::attention::attention(&s.contexts[0].kv, &q0);
+        let direct = crate::attention::attention(&kv, &q0);
         let served = report.responses.iter().find(|r| r.id == 0).unwrap();
         crate::testutil::assert_allclose(&served.output, &direct, 1e-6, 0.0);
     }
 
     #[test]
-    fn approximate_server_reports_fewer_selected_rows() {
-        let mut s = make_server(
-            1,
-            UnitKind::Approximate { backend: AttentionBackend::aggressive() },
-            320,
-        );
+    fn approximate_engine_reports_fewer_selected_rows() {
+        let engine = make_engine(1, AttentionBackend::aggressive(), 320);
+        let ctx = engine.register_context(make_kv(320, 9)).unwrap();
         // registration prewarmed the comprehension-time sort
-        assert!(s.contexts[0].sorted_ready());
-        let report = s.serve_random(32, 3);
+        assert!(ctx.prewarmed());
+        let report = engine.run_random(&ctx, 32, 3).unwrap();
         assert!(report.metrics.mean_selected_rows() < 320.0);
         assert!(report.metrics.mean_selected_rows() >= 1.0);
     }
@@ -277,15 +177,16 @@ mod tests {
         // stack (batcher → scheduler → fused batch engine) must equal
         // direct per-query backend execution with the cached sort.
         for backend in [AttentionBackend::conservative(), AttentionBackend::aggressive()] {
-            let mut s = make_server(2, UnitKind::Approximate { backend }, 128);
-            let report = s.serve_random(24, 5);
+            let engine = make_engine(2, backend, 128);
+            let kv = make_kv(128, 9);
+            let ctx = engine.register_context(kv.clone()).unwrap();
+            let report = engine.run_random(&ctx, 24, 5).unwrap();
             assert_eq!(report.metrics.completed, 24);
             let mut rng = Rng::new(5);
             let embeddings: Vec<Vec<f32>> = (0..24).map(|_| rng.normal_vec(64, 1.0)).collect();
-            let ctx = &s.contexts[0];
             for r in &report.responses {
                 let (out, sel) =
-                    backend.run(&ctx.kv, Some(ctx.sorted()), &embeddings[r.id as usize]);
+                    backend.run(&kv, Some(ctx.sorted()), &embeddings[r.id as usize]);
                 assert_eq!(r.output, out, "query {}", r.id);
                 assert_eq!(r.selected_rows, sel.len(), "query {}", r.id);
             }
@@ -294,13 +195,37 @@ mod tests {
 
     #[test]
     fn more_units_drain_faster_in_sim_time() {
-        let r1 = make_server(1, UnitKind::Base, 320).serve_random(64, 4);
-        let r4 = make_server(4, UnitKind::Base, 320).serve_random(64, 4);
-        assert!(
-            r4.sim_makespan < r1.sim_makespan,
-            "{} !< {}",
-            r4.sim_makespan,
-            r1.sim_makespan
+        let serve = |units: usize| {
+            let engine = make_engine(units, AttentionBackend::Exact, 320);
+            let ctx = engine.register_context(make_kv(320, 9)).unwrap();
+            engine.run_random(&ctx, 64, 4).unwrap().sim_makespan
+        };
+        let one = serve(1);
+        let four = serve(4);
+        assert!(four < one, "{four} !< {one}");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_server_shim_still_serves() {
+        // the one-release compatibility contract: Server::new + serve
+        // keep working on top of the engine, with caller-chosen ids
+        let kv = make_kv(64, 9);
+        let ctx = KvContext::new(0, kv.clone());
+        let sched = Scheduler::replicated(
+            UnitConfig { kind: UnitKind::Base, dims: Dims::new(64, 64) },
+            2,
         );
+        let mut server = Server::new(vec![ctx], sched, ServeConfig::default());
+        assert_eq!(server.contexts().len(), 1);
+        let report = server.serve_random(20, 7);
+        assert_eq!(report.metrics.completed, 20);
+        assert_eq!(report.responses.len(), 20);
+        let mut rng = Rng::new(7);
+        let q0 = rng.normal_vec(64, 1.0);
+        let direct = crate::attention::attention(&kv, &q0);
+        let served = report.responses.iter().find(|r| r.id == 0).unwrap();
+        crate::testutil::assert_allclose(&served.output, &direct, 1e-6, 0.0);
+        assert!(report.summary().contains("completed=20"));
     }
 }

@@ -106,8 +106,8 @@ pub fn evaluate(
 ) -> Result<BackendEval> {
     match kind {
         WorkloadKind::Babi => eval_babi(backend, budget),
-        WorkloadKind::WikiMovies => Ok(eval_wikimovies(backend, budget)),
-        WorkloadKind::Squad => Ok(eval_squad(backend, budget)),
+        WorkloadKind::WikiMovies => eval_wikimovies(backend, budget),
+        WorkloadKind::Squad => eval_squad(backend, budget),
     }
 }
 
@@ -155,7 +155,9 @@ fn eval_babi(backend: AttentionBackend, budget: EvalBudget) -> Result<BackendEva
 }
 
 /// WikiMovies: MAP of ranked retrieval restricted to the selected rows.
-fn eval_wikimovies(backend: AttentionBackend, budget: EvalBudget) -> BackendEval {
+/// Batch execution goes through the typed [`AttentionBackend::try_run_batch`]
+/// path, so malformed batches surface as errors instead of panics.
+fn eval_wikimovies(backend: AttentionBackend, budget: EvalBudget) -> Result<BackendEval> {
     let mut rng = Rng::new(budget.seed ^ 0x11);
     let k = WorkloadKind::WikiMovies.topk();
     let mut ranked = Vec::new();
@@ -174,7 +176,7 @@ fn eval_wikimovies(backend: AttentionBackend, budget: EvalBudget) -> BackendEval
             .iter()
             .flat_map(|q| q.embedding.iter().copied())
             .collect();
-        let results = backend.run_batch(&ep.kv, Some(&sorted), &flat);
+        let results = backend.try_run_batch(&ep.kv, Some(&sorted), &flat)?;
         for (q, (_, sel)) in ep.queries.iter().zip(results) {
             ranked.push(wikimovies::rank_rows(&ep.kv, &q.embedding, &sel));
             relevant.push(q.relevant.clone());
@@ -186,7 +188,7 @@ fn eval_wikimovies(backend: AttentionBackend, budget: EvalBudget) -> BackendEval
             samples.push(selection_detail(&ep.kv, &sorted, &q.embedding, backend));
         }
     }
-    BackendEval {
+    Ok(BackendEval {
         workload: WorkloadKind::WikiMovies,
         backend_label: backend.label(),
         metric: mean_average_precision(&ranked, &relevant),
@@ -194,12 +196,13 @@ fn eval_wikimovies(backend: AttentionBackend, budget: EvalBudget) -> BackendEval
         mean_n: 186.0,
         topk_recall: recall_sum / queries as f64,
         samples,
-    }
+    })
 }
 
 /// SQuAD/BERT: output fidelity of the approximate attention vs exact,
-/// over self-attention queries sharing one key matrix.
-fn eval_squad(backend: AttentionBackend, budget: EvalBudget) -> BackendEval {
+/// over self-attention queries sharing one key matrix. Uses the typed
+/// batch path like [`eval_wikimovies`].
+fn eval_squad(backend: AttentionBackend, budget: EvalBudget) -> Result<BackendEval> {
     let mut rng = Rng::new(budget.seed ^ 0x22);
     let trace = squad::generate_trace(&mut rng, squad::SquadConfig::default());
     let sorted = SortedColumns::preprocess(&trace.kv.key, trace.kv.n, trace.kv.d);
@@ -218,7 +221,8 @@ fn eval_squad(backend: AttentionBackend, budget: EvalBudget) -> BackendEval {
     // the backend itself also runs as one pool-parallel batch over the
     // shared K/V — the fused engine path, bit-identical to per-query
     // `backend.run`
-    let results = backend.run_batch(&trace.kv, Some(&sorted), &trace.queries[..count * trace.d]);
+    let results =
+        backend.try_run_batch(&trace.kv, Some(&sorted), &trace.queries[..count * trace.d])?;
 
     let mut fidelity = 0.0;
     let mut selected = 0usize;
@@ -233,7 +237,7 @@ fn eval_squad(backend: AttentionBackend, budget: EvalBudget) -> BackendEval {
         recall_sum += topk_recall(&scores, sel, k);
         samples.push(selection_detail(&trace.kv, &sorted, q, backend));
     }
-    BackendEval {
+    Ok(BackendEval {
         workload: WorkloadKind::Squad,
         backend_label: backend.label(),
         metric: fidelity / count as f64,
@@ -241,7 +245,7 @@ fn eval_squad(backend: AttentionBackend, budget: EvalBudget) -> BackendEval {
         mean_n: trace.n as f64,
         topk_recall: recall_sum / count as f64,
         samples,
-    }
+    })
 }
 
 /// The Fig. 11 M sweep values, as fractions of n.
@@ -266,7 +270,7 @@ mod tests {
 
     #[test]
     fn wikimovies_exact_has_high_map_and_full_selection() {
-        let e = eval_wikimovies(AttentionBackend::Exact, small_budget());
+        let e = eval_wikimovies(AttentionBackend::Exact, small_budget()).unwrap();
         assert!(e.metric > 0.85, "MAP {}", e.metric);
         assert_eq!(e.mean_selected, 186.0);
         assert_eq!(e.topk_recall, 1.0);
@@ -274,15 +278,15 @@ mod tests {
 
     #[test]
     fn squad_exact_is_perfect_fidelity() {
-        let e = eval_squad(AttentionBackend::Exact, small_budget());
+        let e = eval_squad(AttentionBackend::Exact, small_budget()).unwrap();
         assert!(e.metric > 0.999, "{}", e.metric);
         assert_eq!(e.topk_recall, 1.0);
     }
 
     #[test]
     fn aggressive_reduces_selection_and_metric() {
-        let exact = eval_squad(AttentionBackend::Exact, small_budget());
-        let aggr = eval_squad(AttentionBackend::aggressive(), small_budget());
+        let exact = eval_squad(AttentionBackend::Exact, small_budget()).unwrap();
+        let aggr = eval_squad(AttentionBackend::aggressive(), small_budget()).unwrap();
         assert!(aggr.mean_selected < exact.mean_selected / 4.0);
         assert!(aggr.metric <= exact.metric + 1e-9);
         assert!(aggr.metric > 0.5, "fidelity collapsed: {}", aggr.metric);

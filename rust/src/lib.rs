@@ -40,11 +40,16 @@
 //! * [`runtime`] — PJRT engine: HLO-text artifacts → compiled
 //!   executables → on-demand execution (needs the off-by-default
 //!   `pjrt` cargo feature and the external `xla` bindings).
-//! * [`coordinator`] — the serving layer: query queues, batching,
-//!   multi-unit scheduling, metrics.
+//! * [`coordinator`] — the serving internals: query queues, batching,
+//!   multi-unit scheduling, metrics. Drive them through [`api`], not
+//!   directly.
+//! * [`api`] — the public serving facade: `EngineBuilder` → `Engine` →
+//!   `ContextHandle`/`Ticket`, with the crate-wide typed
+//!   [`api::A3Error`]. The one sanctioned way to serve queries.
 //! * [`experiments`] — one driver per paper table/figure, shared by the
 //!   CLI (`a3 <fig...>`) and the bench harnesses.
 
+pub mod api;
 pub mod approx;
 pub mod attention;
 pub mod baseline;

@@ -4,13 +4,11 @@
 
 use anyhow::{bail, Result};
 
-use a3::coordinator::{KvContext, Scheduler, ServeConfig, Server, UnitConfig, UnitKind};
+use a3::api::{AttentionBackend, Dims, EngineBuilder, KvPair};
 use a3::experiments::sweep::EvalBudget;
 use a3::experiments::{fig03, fig11, fig12, fig13, fig14, fig15, quant_sweep, table1};
-use a3::model::AttentionBackend;
 #[cfg(feature = "pjrt")]
 use a3::runtime::{ArtifactId, PjrtEngine};
-use a3::sim::Dims;
 use a3::testutil::Rng;
 
 const USAGE: &str = "\
@@ -31,8 +29,10 @@ COMMANDS (paper artifacts):
     all             every table and figure above
 
 COMMANDS (system):
-    serve           run the serving coordinator on a synthetic stream
+    serve           run the serving engine on a synthetic stream
                     [--units N] [--approx] [--queries N] [--n N]
+                    [--seed N] [--max-batch N] [--qps F]
+                    (unknown serve flags are an error)
     runtime-smoke   load + execute every AOT HLO artifact via PJRT
 
 OPTIONS:
@@ -48,40 +48,79 @@ fn budget_from_args(args: &[String]) -> EvalBudget {
     }
 }
 
-fn flag_value(args: &[String], flag: &str) -> Option<String> {
-    args.iter()
-        .position(|a| a == flag)
-        .and_then(|i| args.get(i + 1).cloned())
-}
-
 fn cmd_serve(args: &[String]) -> Result<()> {
-    let units: usize = flag_value(args, "--units").map_or(Ok(1), |v| v.parse())?;
-    let queries: usize = flag_value(args, "--queries").map_or(Ok(4096), |v| v.parse())?;
-    let n: usize = flag_value(args, "--n").map_or(Ok(a3::PAPER_N), |v| v.parse())?;
-    let approx = args.iter().any(|a| a == "--approx");
-    let kind = if approx {
-        UnitKind::Approximate { backend: AttentionBackend::conservative() }
-    } else {
-        UnitKind::Base
-    };
+    // strict parsing: unknown flags are a usage error (never silently
+    // ignored) and every value must parse
+    let mut units = 1usize;
+    let mut queries = 4096usize;
+    let mut n = a3::PAPER_N;
+    let mut seed = 2u64;
+    let mut approx = false;
+    let mut max_batch: Option<usize> = None;
+    let mut qps: Option<f64> = None;
+    let mut i = 1; // args[0] is the "serve" command itself
+    while i < args.len() {
+        let flag = args[i].clone();
+        if flag == "--approx" {
+            approx = true;
+            i += 1;
+            continue;
+        }
+        // reject unknown flags before demanding a value, so a trailing
+        // `--bogus` reports "unknown flag", not "needs a value"
+        if !matches!(
+            flag.as_str(),
+            "--units" | "--queries" | "--n" | "--seed" | "--max-batch" | "--qps"
+        ) {
+            bail!("serve: unknown flag {flag:?} (see `a3 --help`)");
+        }
+        let value = match args.get(i + 1) {
+            Some(v) => v,
+            None => bail!("serve: {flag} needs a value (see `a3 --help`)"),
+        };
+        let invalid = |e: &dyn std::fmt::Display| {
+            anyhow::anyhow!("serve: invalid value {value:?} for {flag}: {e}")
+        };
+        match flag.as_str() {
+            "--units" => units = value.parse().map_err(|e| invalid(&e))?,
+            "--queries" => queries = value.parse().map_err(|e| invalid(&e))?,
+            "--n" => n = value.parse().map_err(|e| invalid(&e))?,
+            "--seed" => seed = value.parse().map_err(|e| invalid(&e))?,
+            "--max-batch" => max_batch = Some(value.parse().map_err(|e| invalid(&e))?),
+            "--qps" => qps = Some(value.parse().map_err(|e| invalid(&e))?),
+            _ => unreachable!("known flags matched above"),
+        }
+        i += 2;
+    }
 
-    let mut rng = Rng::new(1);
+    let backend = if approx {
+        AttentionBackend::conservative()
+    } else {
+        AttentionBackend::Exact
+    };
     let d = a3::PAPER_D;
-    let kv = a3::attention::KvPair::new(
-        n,
-        d,
-        rng.normal_vec(n * d, 1.0),
-        rng.normal_vec(n * d, 1.0),
-    );
-    let ctx = KvContext::new(0, kv);
-    let sched = Scheduler::replicated(UnitConfig { kind, dims: Dims::new(n, d) }, units);
-    let mut server = Server::new(vec![ctx], sched, ServeConfig::default());
+    let mut builder = EngineBuilder::new()
+        .units(units)
+        .backend(backend)
+        .dims(Dims::new(n, d));
+    if let Some(b) = max_batch {
+        builder = builder.max_batch(b);
+    }
+    if let Some(q) = qps {
+        builder = builder.arrival_qps(q);
+    }
+    let engine = builder.build()?;
+
+    // comprehension time: stage one synthetic knowledge base
+    let mut rng = Rng::new(1);
+    let kv = KvPair::new(n, d, rng.normal_vec(n * d, 1.0), rng.normal_vec(n * d, 1.0));
+    let ctx = engine.register_context(kv)?;
     println!(
-        "serving {queries} queries (n={n}, d={d}) on {units} {} unit(s)...",
+        "serving {queries} queries (n={n}, d={d}, seed={seed}) on {units} {} unit(s)...",
         if approx { "approximate" } else { "base" }
     );
-    let report = server.serve_random(queries, 2);
-    println!("host   : {}", report.metrics.summary());
+    let report = engine.run_random(&ctx, queries, seed)?;
+    println!("host   : {}", report.summary());
     println!(
         "sim    : makespan {} cycles -> {:.0} queries/s on the accelerator",
         report.sim_makespan,

@@ -11,6 +11,7 @@
 //! kernel thread pool for *all* variants, with per-thread scratch and
 //! K/V + sortedKey shared read-only.
 
+use crate::api::A3Error;
 use crate::approx::{engine, SelectivePlan, SortedColumns};
 use crate::attention::{
     attention, kernel, quantized_attention_into, ExpLut, KvPair, QuantKv,
@@ -172,21 +173,41 @@ impl AttentionBackend {
     ///
     /// Per-query outputs and selections are bit-identical to
     /// [`Self::run`] regardless of batch size or thread count.
+    ///
+    /// Panics if the flat batch length is not a multiple of `d`; the
+    /// serving path ([`crate::api::Engine`] and the scheduler) uses
+    /// the typed [`Self::try_run_batch`] instead.
     pub fn run_batch(
         &self,
         kv: &KvPair,
         sorted: Option<&SortedColumns>,
         queries: &[f32],
     ) -> Vec<(Vec<f32>, Vec<usize>)> {
+        self.try_run_batch(kv, sorted, queries)
+            .expect("queries are not a multiple of d")
+    }
+
+    /// [`Self::run_batch`] with typed validation: a flat batch whose
+    /// length is not a multiple of `kv.d` returns
+    /// [`A3Error::DimensionMismatch`] (with `got` = the flat length)
+    /// instead of panicking.
+    pub fn try_run_batch(
+        &self,
+        kv: &KvPair,
+        sorted: Option<&SortedColumns>,
+        queries: &[f32],
+    ) -> Result<Vec<(Vec<f32>, Vec<usize>)>, A3Error> {
         let d = kv.d;
-        assert_eq!(queries.len() % d, 0, "queries are not a multiple of d");
+        if queries.len() % d != 0 {
+            return Err(A3Error::DimensionMismatch { expected: d, got: queries.len() });
+        }
         let b = queries.len() / d;
         if *self == AttentionBackend::Exact {
             let flat = kernel::parallel_attention_batch(kv, queries, 0);
-            return flat
+            return Ok(flat
                 .chunks_exact(d)
                 .map(|out| (out.to_vec(), (0..kv.n).collect()))
-                .collect();
+                .collect());
         }
         // below this much streaming work, run on the calling thread
         let executors = if b * kv.n * d < kernel::PARALLEL_MIN_MACS { 1 } else { 0 };
@@ -203,7 +224,7 @@ impl AttentionBackend {
                 });
                 *slot = (out, (0..kv.n).collect());
             });
-            return results;
+            return Ok(results);
         }
         let plan = self.plan(kv.n).expect("dense variants handled above");
         let owned;
@@ -226,7 +247,7 @@ impl AttentionBackend {
                 *slot = (out, scratch.kept().to_vec());
             });
         });
-        results
+        Ok(results)
     }
 
     pub fn label(&self) -> String {
@@ -348,6 +369,22 @@ mod tests {
                 assert_eq!(batch[b].0, out, "{} query {b}", backend.label());
                 assert_eq!(batch[b].1, sel, "{} query {b}", backend.label());
             }
+        }
+    }
+
+    #[test]
+    fn try_run_batch_rejects_ragged_flat_batch() {
+        let (kv, _) = problem(20, 16, 8);
+        let bad = vec![0.0f32; 13]; // not a multiple of d = 8
+        for backend in [
+            AttentionBackend::Exact,
+            AttentionBackend::Quantized,
+            AttentionBackend::conservative(),
+        ] {
+            assert!(matches!(
+                backend.try_run_batch(&kv, None, &bad),
+                Err(A3Error::DimensionMismatch { expected: 8, got: 13 })
+            ));
         }
     }
 

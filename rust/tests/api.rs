@@ -1,0 +1,139 @@
+//! Black-box tests of the `a3::api` surface from outside the crate:
+//! everything a host integration needs must be reachable (and
+//! sufficient) through the facade alone.
+
+use std::time::Duration;
+
+use a3::api::{A3Error, AttentionBackend, Dims, EngineBuilder, KvPair, Ticket};
+use a3::testutil::Rng;
+
+fn kv(n: usize, d: usize, seed: u64) -> KvPair {
+    let mut rng = Rng::new(seed);
+    KvPair::new(n, d, rng.normal_vec(n * d, 1.0), rng.normal_vec(n * d, 1.0))
+}
+
+#[test]
+fn facade_alone_drives_a_full_serving_session() {
+    // build → register → submit → recv → drain → evict, api-only
+    let engine = EngineBuilder::new()
+        .units(2)
+        .backend(AttentionBackend::conservative())
+        .dims(Dims::new(96, 32))
+        .max_batch(4)
+        .max_wait_ns(u64::MAX)
+        .build()
+        .unwrap();
+    let a = engine.register_context(kv(96, 32, 1)).unwrap();
+    let b = engine.register_context(kv(96, 32, 2)).unwrap();
+    assert_ne!(a.id(), b.id());
+    assert!(a.prewarmed() && b.prewarmed(), "selective units prewarm at registration");
+
+    let mut rng = Rng::new(3);
+    let mut tickets: Vec<Ticket> = Vec::new();
+    for i in 0..10 {
+        let h = if i % 2 == 0 { &a } else { &b };
+        tickets.push(engine.submit(h, rng.normal_vec(32, 1.0)).unwrap());
+    }
+    let stats = engine.drain().unwrap();
+    assert_eq!(stats.metrics.completed, 10);
+    assert!(stats.sim_makespan > 0);
+
+    let mut responses = Vec::new();
+    while let Some(r) = engine.try_recv().unwrap() {
+        responses.push(r);
+    }
+    assert_eq!(responses.len(), 10);
+    for t in &tickets {
+        let r = responses.iter().find(|r| r.id == t.id).expect("response per ticket");
+        assert_eq!(r.context, t.context);
+        assert_eq!(r.output.len(), 32);
+        assert!(r.selected_rows >= 1 && r.selected_rows <= 96);
+    }
+
+    // evict one context; the other keeps serving
+    engine.evict(&a).unwrap();
+    assert!(matches!(engine.submit(&a, vec![0.0; 32]), Err(A3Error::ContextEvicted(_))));
+    let t = engine.submit(&b, rng.normal_vec(32, 1.0)).unwrap();
+    engine.drain().unwrap();
+    let r = engine.recv_timeout(Duration::from_secs(5)).unwrap().expect("b still live");
+    assert_eq!(r.id, t.id);
+}
+
+#[test]
+fn eviction_dispatches_already_admitted_tail_queries() {
+    // queries sitting in the batcher when their context is evicted
+    // are served, not dropped
+    let engine = EngineBuilder::new()
+        .dims(Dims::new(32, 16))
+        .max_batch(8)
+        .max_wait_ns(u64::MAX)
+        .build()
+        .unwrap();
+    let ctx = engine.register_context(kv(32, 16, 4)).unwrap();
+    let mut rng = Rng::new(5);
+    let t0 = engine.submit(&ctx, rng.normal_vec(16, 1.0)).unwrap();
+    let t1 = engine.submit(&ctx, rng.normal_vec(16, 1.0)).unwrap();
+    engine.evict(&ctx).unwrap();
+    let mut got = Vec::new();
+    while got.len() < 2 {
+        if let Some(r) = engine.recv_timeout(Duration::from_secs(5)).unwrap() {
+            got.push(r.id);
+        }
+    }
+    got.sort_unstable();
+    assert_eq!(got, vec![t0.id, t1.id]);
+}
+
+#[test]
+fn paced_run_stream_tracks_arrivals_in_sim_time() {
+    // with a paced arrival model the simulated clock follows host
+    // arrivals, so the makespan spans at least the stream duration
+    let engine = EngineBuilder::new()
+        .dims(Dims::new(32, 16))
+        .max_batch(2)
+        .arrival_qps(20_000.0) // 50 µs spacing, 40 queries ≈ 2 ms
+        .build()
+        .unwrap();
+    let ctx = engine.register_context(kv(32, 16, 6)).unwrap();
+    let mut rng = Rng::new(7);
+    let stream: Vec<_> = (0..40).map(|_| (ctx.clone(), rng.normal_vec(16, 1.0))).collect();
+    let (tickets, report) = engine.run_stream(stream).unwrap();
+    assert_eq!(tickets.len(), 40);
+    assert_eq!(report.metrics.completed, 40);
+    // 40 queries at 20k qps = ~1.95 ms of arrivals; 1 cycle = 1 ns
+    assert!(
+        report.sim_makespan >= 1_500_000,
+        "paced makespan {} cycles did not track arrivals",
+        report.sim_makespan
+    );
+    assert!(report.wall >= Duration::from_millis(1));
+}
+
+#[test]
+fn queue_full_backpressure_is_recoverable() {
+    let engine = EngineBuilder::new()
+        .dims(Dims::new(16, 8))
+        .max_batch(2)
+        .max_wait_ns(u64::MAX)
+        .max_pending(2)
+        .build()
+        .unwrap();
+    let a = engine.register_context(kv(16, 8, 8)).unwrap();
+    let b = engine.register_context(kv(16, 8, 9)).unwrap();
+    // one pending query per context: neither batch closes, queue full
+    engine.submit(&a, vec![0.1; 8]).unwrap();
+    engine.submit(&b, vec![0.1; 8]).unwrap();
+    assert!(matches!(
+        engine.submit(&a, vec![0.2; 8]),
+        Err(A3Error::QueueFull { limit: 2, .. })
+    ));
+    // drain frees the admission window; submits work again
+    engine.drain().unwrap();
+    engine.submit(&a, vec![0.3; 8]).unwrap();
+    engine.drain().unwrap();
+    let mut seen = 0;
+    while engine.try_recv().unwrap().is_some() {
+        seen += 1;
+    }
+    assert_eq!(seen, 3);
+}

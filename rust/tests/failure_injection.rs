@@ -102,18 +102,41 @@ fn kv_context_rejects_nan_keys() {
 }
 
 #[test]
-fn scheduler_panics_on_unregistered_context_not_wrong_answer() {
+fn scheduler_rejects_malformed_dispatch_with_typed_error_not_wrong_answer() {
+    use a3::api::A3Error;
     use a3::coordinator::{KvContext, Query, Scheduler, UnitConfig, UnitKind};
     use a3::sim::Dims;
     let mut rng = a3::testutil::Rng::new(1);
     let kv = a3::attention::KvPair::new(4, 2, rng.normal_vec(8, 1.0), rng.normal_vec(8, 1.0));
     let ctx = KvContext::new(7, kv);
     let mut s = Scheduler::new(&[UnitConfig { kind: UnitKind::Base, dims: Dims::new(4, 2) }]);
-    // dispatch with a mismatched embedding dimension must panic (the
-    // attention substrate asserts shapes), not return garbage
+    // dispatch with a mismatched embedding dimension must surface a
+    // typed A3Error (never garbage, never a panic on the serving path)
     let bad = Query { id: 0, context: 7, embedding: vec![0.0; 5], arrival_ns: 0 };
-    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        s.dispatch(&ctx, &[bad]);
-    }));
-    assert!(result.is_err());
+    let err = s.dispatch(&ctx, &[bad]).unwrap_err();
+    assert_eq!(err, A3Error::DimensionMismatch { expected: 2, got: 5 });
+    // and an empty batch is equally typed
+    assert_eq!(s.dispatch(&ctx, &[]).unwrap_err(), A3Error::EmptyBatch);
+}
+
+#[test]
+fn engine_surfaces_typed_errors_for_bad_clients() {
+    use a3::api::{A3Error, AttentionBackend, Dims, EngineBuilder};
+    // invalid configuration is rejected at build time
+    let err = EngineBuilder::new().units(0).build().err().unwrap();
+    assert!(matches!(err, A3Error::ConfigError(_)));
+    // an evicted context is a typed serving-time error
+    let engine = EngineBuilder::new()
+        .backend(AttentionBackend::conservative())
+        .dims(Dims::new(16, 8))
+        .build()
+        .unwrap();
+    let mut rng = a3::testutil::Rng::new(2);
+    let kv = a3::attention::KvPair::new(16, 8, rng.normal_vec(128, 1.0), rng.normal_vec(128, 1.0));
+    let ctx = engine.register_context(kv).unwrap();
+    engine.evict(&ctx).unwrap();
+    assert!(matches!(
+        engine.submit(&ctx, vec![0.0; 8]),
+        Err(A3Error::ContextEvicted(_))
+    ));
 }

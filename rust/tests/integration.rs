@@ -2,12 +2,10 @@
 //! workload generators → approximation → simulator → energy model →
 //! serving coordinator → (when artifacts exist) the PJRT runtime.
 
-use a3::coordinator::{KvContext, Scheduler, ServeConfig, Server, UnitConfig, UnitKind};
+use a3::api::{AttentionBackend, Dims, EngineBuilder};
 use a3::energy::{attribute, Table1};
 use a3::experiments::fig14::{simulate_approx, simulate_base};
 use a3::experiments::sweep::{evaluate, EvalBudget};
-use a3::model::AttentionBackend;
-use a3::sim::Dims;
 use a3::testutil::Rng;
 use a3::workloads::WorkloadKind;
 
@@ -43,9 +41,10 @@ fn end_to_end_speed_accuracy_tradeoff_is_monotone() {
 }
 
 #[test]
-fn serving_through_coordinator_preserves_attention_semantics() {
-    // serve a batch through the full coordinator, then recompute each
-    // response directly — outputs must match exactly (base units).
+fn serving_through_engine_preserves_attention_semantics() {
+    // serve a batch through the full api engine (worker thread,
+    // batcher, least-loaded scheduler), then recompute each response
+    // directly — outputs must match exactly (base units).
     let mut rng = Rng::new(21);
     let (n, d) = (128, 64);
     let kv = a3::attention::KvPair::new(
@@ -54,13 +53,13 @@ fn serving_through_coordinator_preserves_attention_semantics() {
         rng.normal_vec(n * d, 1.0),
         rng.normal_vec(n * d, 1.0),
     );
-    let ctx = KvContext::new(0, kv.clone());
-    let sched = Scheduler::replicated(
-        UnitConfig { kind: UnitKind::Base, dims: Dims::new(n, d) },
-        2,
-    );
-    let mut server = Server::new(vec![ctx], sched, ServeConfig::default());
-    let report = server.serve_random(64, 5);
+    let engine = EngineBuilder::new()
+        .units(2)
+        .dims(Dims::new(n, d))
+        .build()
+        .unwrap();
+    let ctx = engine.register_context(kv.clone()).unwrap();
+    let report = engine.run_random(&ctx, 64, 5).unwrap();
     assert_eq!(report.metrics.completed, 64);
 
     let mut rng2 = Rng::new(5);

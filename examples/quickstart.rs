@@ -66,17 +66,28 @@ fn main() -> anyhow::Result<()> {
         attribute(&t1, &appr).total_j() / 1000.0 * 1e9
     );
 
-    // 6. Serving through `a3::api`: typed config → engine → handles.
-    //    Registration is comprehension time (the engine prewarms the
-    //    sorted-key cache); submits are non-blocking and pair with
-    //    tickets.
+    // 6. Serving through `a3::api`: typed config → sharded engine →
+    //    handles. Two shard workers each own one of the two unit
+    //    replicas; registration is comprehension time (the engine
+    //    prewarms the sorted-key cache, charged against the memory
+    //    budget) and places the context on the least-loaded shard;
+    //    submits are non-blocking and pair with tickets.
     let engine = EngineBuilder::new()
         .units(2)
+        .shards(2)
+        .memory_budget(64 << 20) // 64 MiB of resident contexts, LRU beyond
         .backend(AttentionBackend::conservative())
         .dims(Dims::paper())
         .max_batch(8)
         .build()?;
     let ctx = engine.register_context(kv.clone())?;
+    println!(
+        "api sharding        : context {} lives on shard {} of {} ({} resident bytes)",
+        ctx.id(),
+        engine.home_shard(&ctx)?,
+        engine.shard_count(),
+        ctx.resident_bytes()
+    );
     let ticket = engine.submit(&ctx, query.clone())?;
     engine.drain()?; // flush the tail batch
     let response = engine

@@ -62,9 +62,12 @@ fn serve_once(
     backend: AttentionBackend,
 ) -> anyhow::Result<()> {
     let model = Memn2n::new(weights.clone(), backend);
-    // per-story contexts never batch beyond 1; answer immediately
+    // per-story contexts never batch beyond 1; answer immediately.
+    // two shard workers split the stories (outputs are identical to a
+    // single-worker engine — sharding moves work, never answers)
     let engine = EngineBuilder::new()
         .units(2)
+        .shards(2)
         .backend(backend)
         .dims(Dims::new(50, weights.d))
         .max_batch(1)
@@ -130,6 +133,7 @@ fn serve_synthetic() -> anyhow::Result<()> {
     let (n, d) = (50usize, 64usize);
     let engine = EngineBuilder::new()
         .units(2)
+        .shards(2)
         .backend(AttentionBackend::conservative())
         .dims(Dims::new(n, d))
         .max_batch(1)

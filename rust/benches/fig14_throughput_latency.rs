@@ -56,6 +56,13 @@ fn main() {
         );
     }
 
+    // The shard-count sweep (Fig. 14c): same total unit budget, one
+    // coordinator worker per shard — the per-shard-count aggregate
+    // throughput lines behind the ISSUE 4 acceptance check.
+    println!("-- sharded serving sweep (a3::api, fixed unit budget) --");
+    let sweep = fig14::run_shard_sweep(2048, 8).expect("shard sweep");
+    println!("{sweep}");
+
     println!("-- cycle simulator throughput --");
     let dims = Dims::paper();
     let r = bench("BasePipeline 1k queries", budget(), || {

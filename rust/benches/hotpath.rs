@@ -201,4 +201,42 @@ fn main() {
             }
         }
     }));
+
+    // sharded serving: fixed total unit budget, contexts spread across
+    // shards by the least-loaded placement, saturating submit + drain
+    // barrier per iteration. shards=1 is the single-coordinator
+    // baseline; shards=4 shows the aggregate throughput of parallel
+    // per-shard dispatch on the same workload.
+    for shards in [1usize, 4] {
+        let sharded = a3::api::EngineBuilder::new()
+            .units(4)
+            .shards(shards)
+            .dims(Dims::paper())
+            .max_batch(8)
+            .build()
+            .expect("engine");
+        let mut ctx_rng = Rng::new(13);
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let pair = KvPair::new(
+                    n,
+                    d,
+                    ctx_rng.normal_vec(n * d, 1.0),
+                    ctx_rng.normal_vec(n * d, 1.0),
+                );
+                sharded.register_context(pair).expect("register")
+            })
+            .collect();
+        let mut q_rng = Rng::new(14);
+        let stream: Vec<(usize, Vec<f32>)> =
+            (0..64).map(|i| (i % handles.len(), q_rng.normal_vec(d, 1.0))).collect();
+        let name = format!("api engine serve shards={shards} (64q over 4 contexts)");
+        println!("{}", bench(&name, b, || {
+            for (h, q) in &stream {
+                sharded.submit(&handles[*h], q.clone()).expect("submit");
+            }
+            sharded.drain().expect("drain");
+            while sharded.try_recv().expect("recv").is_some() {}
+        }));
+    }
 }

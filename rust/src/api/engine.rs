@@ -1,24 +1,33 @@
-//! The serving engine: builder → engine → client handles.
+//! The serving engine: builder → sharded engine → client handles.
 //!
 //! [`EngineBuilder`] validates typed configuration into an [`Engine`].
-//! The engine owns one coordinator worker thread (batcher + scheduler +
-//! metrics); clients interact only through handles:
+//! The engine owns `shards` independent coordinator workers; each
+//! shard runs its own batcher + scheduler (its partition of the unit
+//! replicas) + metrics window, and contexts live in a sharded,
+//! memory-accounted [`crate::coordinator::ContextStore`]. Clients
+//! interact only through handles:
 //!
 //! * [`Engine::register_context`] stages a K/V pair (comprehension
-//!   time, §III-C) and returns a refcounted [`ContextHandle`];
-//! * [`Engine::submit`] enqueues one query non-blockingly and returns
-//!   a [`Ticket`]; completed [`Response`]s come back through
-//!   [`Engine::try_recv`] / [`Engine::recv_timeout`];
-//! * [`Engine::drain`] flushes every partially filled batch (tail
-//!   queries below `max_batch` are dispatched, never dropped) and
-//!   snapshots the run's metrics;
+//!   time, §III-C), places it on the least-loaded shard by resident
+//!   bytes (stable context→shard affinity for its whole lifetime) and
+//!   returns a refcounted [`ContextHandle`];
+//! * [`Engine::submit`] enqueues one query non-blockingly on the
+//!   context's home shard and returns a [`Ticket`]; completed
+//!   [`Response`]s come back through [`Engine::try_recv`] /
+//!   [`Engine::recv_timeout`];
+//! * [`Engine::drain`] is a deterministic all-shard barrier: every
+//!   shard flushes its partially filled batches (tail queries below
+//!   `max_batch` are dispatched, never dropped) and the per-shard
+//!   metrics windows are merged into one [`EngineStats`] (latency
+//!   percentiles over the merged sample set, simulated makespan = the
+//!   maximum over shards);
 //! * [`Engine::run_stream`] reproduces the classic blocking serve loop
 //!   (paced arrivals → batched dispatch → [`ServeReport`]) on top of
 //!   the non-blocking primitives.
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::error::A3Error;
@@ -28,16 +37,17 @@ use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{ContextId, KvContext, Query, QueryId, Response};
 use crate::coordinator::scheduler::{Scheduler, UnitConfig, UnitKind};
-use crate::coordinator::server::{ServeConfig, ServeReport};
+use crate::coordinator::store::ContextStore;
 use crate::model::AttentionBackend;
 use crate::sim::Dims;
 
 /// Typed, validated configuration for an [`Engine`].
 ///
-/// Every knob has a sensible default (one base unit at the paper's
-/// design point, the AOT batch policy, open throttle, a 64k admission
-/// window); [`EngineBuilder::build`] rejects inconsistent settings
-/// with [`A3Error::ConfigError`] instead of panicking later.
+/// Every knob has a sensible default (one shard, one base unit at the
+/// paper's design point, the AOT batch policy, open throttle, a 64k
+/// admission window, unbounded context memory);
+/// [`EngineBuilder::build`] rejects inconsistent settings with
+/// [`A3Error::ConfigError`] instead of panicking later.
 #[derive(Clone, Copy, Debug)]
 pub struct EngineBuilder {
     units: usize,
@@ -46,6 +56,8 @@ pub struct EngineBuilder {
     batch: BatchPolicy,
     arrival_qps: Option<f64>,
     max_pending: usize,
+    shards: usize,
+    memory_budget: Option<usize>,
 }
 
 impl Default for EngineBuilder {
@@ -57,6 +69,8 @@ impl Default for EngineBuilder {
             batch: BatchPolicy::default(),
             arrival_qps: None,
             max_pending: 65_536,
+            shards: 1,
+            memory_budget: None,
         }
     }
 }
@@ -66,10 +80,33 @@ impl EngineBuilder {
         Self::default()
     }
 
-    /// Number of replicated A³ units (§III-C "Use of Multiple A³
-    /// Units"); batches go to the least-loaded one.
+    /// Total number of replicated A³ units (§III-C "Use of Multiple A³
+    /// Units"), partitioned across the shards; within a shard, batches
+    /// go to the least-loaded unit of its partition.
     pub fn units(mut self, units: usize) -> Self {
         self.units = units;
+        self
+    }
+
+    /// Number of independent shard workers. Each shard owns its own
+    /// batcher, scheduler (its partition of the units — every shard
+    /// keeps at least one unit, so `units < shards` replicates) and
+    /// metrics window; contexts are placed once on the least-loaded
+    /// shard by resident bytes and all their queries batch there.
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    /// Total resident-context memory budget in bytes across all
+    /// shards (K/V matrices + built sorted-key caches). Each shard
+    /// enforces its even share (`ceil(budget / shards)`) with LRU
+    /// eviction: a registration that would overflow the home shard
+    /// retires its least-recently-dispatched contexts — serving their
+    /// already-admitted queries first, exactly like [`Engine::evict`].
+    /// Unset = unbounded.
+    pub fn memory_budget(mut self, bytes: usize) -> Self {
+        self.memory_budget = Some(bytes);
         self
     }
 
@@ -129,11 +166,17 @@ impl EngineBuilder {
         self
     }
 
-    /// Validate and start the engine (spawns the coordinator worker).
+    /// Validate and start the engine (spawns the shard workers).
     pub fn build(self) -> Result<Engine, A3Error> {
         let cfg = |msg: String| Err(A3Error::ConfigError(msg));
         if self.units == 0 {
             return cfg("units must be >= 1".into());
+        }
+        if self.shards == 0 {
+            return cfg("shards must be >= 1".into());
+        }
+        if self.memory_budget == Some(0) {
+            return cfg("memory_budget must be >= 1 byte (unset it for unbounded)".into());
         }
         if self.dims.n == 0 || self.dims.d == 0 {
             return cfg(format!("dims must be non-zero (got n={}, d={})", self.dims.n, self.dims.d));
@@ -161,28 +204,29 @@ impl EngineBuilder {
                 ));
             }
         }
-        let scheduler = Scheduler::replicated(
-            UnitConfig { kind: self.kind, dims: self.dims },
-            self.units,
-        );
-        Engine::spawn(
-            scheduler,
-            Vec::new(),
-            Some(self.dims),
-            self.batch,
-            self.arrival_qps,
-            self.max_pending,
-        )
+        Engine::spawn(self)
+    }
+}
+
+/// How many of `units` total unit replicas shard `shard` owns: an even
+/// partition (earlier shards take the remainder), floored at one unit
+/// per shard so every shard can serve (`units < shards` replicates).
+fn units_for_shard(units: usize, shards: usize, shard: usize) -> usize {
+    if units >= shards {
+        units / shards + usize::from(shard < units % shards)
+    } else {
+        1
     }
 }
 
 /// A refcounted handle to a registered K/V context. Clones share the
 /// underlying (Arc'd) K/V and the comprehension-time sorted-key cache;
 /// the data stays alive for as long as any handle or in-flight batch
-/// references it, even after [`Engine::evict`] removes it from the
-/// engine. A handle is bound to the engine that issued it: another
-/// engine rejects it with [`A3Error::UnknownContext`] even if a
-/// context id happens to coincide.
+/// references it, even after [`Engine::evict`] (or an LRU budget
+/// eviction) removes it from the engine. A handle is bound to the
+/// engine that issued it: another engine rejects it with
+/// [`A3Error::UnknownContext`] even if a context id happens to
+/// coincide.
 #[derive(Clone)]
 pub struct ContextHandle {
     ctx: KvContext,
@@ -226,6 +270,12 @@ impl ContextHandle {
     pub fn sorted(&self) -> &SortedColumns {
         self.ctx.sorted()
     }
+
+    /// Bytes this context keeps resident (K/V + built sorted cache) —
+    /// what the engine's memory budget charges for it.
+    pub fn resident_bytes(&self) -> usize {
+        self.ctx.resident_bytes()
+    }
 }
 
 /// Receipt for one submitted query: [`Response::id`] of the matching
@@ -236,38 +286,100 @@ pub struct Ticket {
     pub context: ContextId,
 }
 
+/// One shard's slice of a drain barrier (observability: load balance
+/// across shards, per-shard makespans behind the merged maximum).
+#[derive(Clone, Copy, Debug)]
+pub struct ShardStats {
+    pub shard: usize,
+    /// Queries this shard served in the drained window.
+    pub completed: u64,
+    /// Simulated cycle at which this shard's units drain.
+    pub sim_makespan: u64,
+}
+
 /// Snapshot returned by [`Engine::drain`]: everything served since
 /// the previous drain (or since the current stream run began — run
-/// starts open a fresh window so one window never mixes clocks).
-/// Draining takes the window: the accumulator resets, which also
-/// bounds the worker's latency buffer to one window on long-lived
-/// engines.
+/// starts open a fresh window so one window never mixes clocks),
+/// merged across all shards. Draining takes the windows: each shard's
+/// accumulator resets, which also bounds the workers' latency buffers
+/// to one window on long-lived engines.
 #[derive(Clone, Debug)]
 pub struct EngineStats {
+    /// Merged over all shards; percentiles come from the merged
+    /// latency sample set, not an average of per-shard percentiles.
     pub metrics: Metrics,
-    /// Simulated cycle at which all units drain (engine-lifetime
-    /// clock, not reset by windows).
+    /// Simulated cycle at which all units of all shards drain: the
+    /// maximum over per-shard makespans (engine-lifetime clock, not
+    /// reset by windows).
     pub sim_makespan: u64,
+    /// One entry per shard, in shard order.
+    pub per_shard: Vec<ShardStats>,
+}
+
+/// Result of a serving run ([`Engine::run_stream`] /
+/// [`Engine::run_random`]).
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub metrics: Metrics,
+    /// Simulated accelerator cycles this run added: the largest
+    /// per-shard clock advance over the run (each shard measured
+    /// against its own pre-run baseline).
+    pub sim_makespan: u64,
+    /// Host wall-clock of the whole run.
+    pub wall: Duration,
+    pub responses: Vec<Response>,
+}
+
+impl ServeReport {
+    /// Accelerator-side throughput (queries/s of simulated time).
+    pub fn sim_throughput_qps(&self) -> f64 {
+        if self.sim_makespan == 0 {
+            return 0.0;
+        }
+        self.metrics.completed as f64 / crate::sim::cycles_to_seconds(self.sim_makespan)
+    }
+
+    /// Host wall-clock aggregate throughput (queries/s of real time
+    /// over the whole run) — the number the shard sweep compares.
+    pub fn wall_qps(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs == 0.0 {
+            return 0.0;
+        }
+        self.metrics.completed as f64 / secs
+    }
+
+    /// Sort-once latency/throughput snapshot of the host metrics.
+    pub fn summary(&self) -> String {
+        self.metrics.report().summary()
+    }
 }
 
 enum Cmd {
     Submit(Query),
     Register(KvContext),
     Evict(ContextId),
-    Drain(mpsc::Sender<EngineStats>),
+    Drain(mpsc::Sender<ShardDrain>),
     /// Like `Drain` but acks with the makespan only — no O(history)
-    /// metrics clone. The stream drivers use this on their hot path.
+    /// metrics handover. The stream drivers use this on their hot path.
     Flush(mpsc::Sender<u64>),
     /// Rebase the run clock: arrivals are measured from this epoch
     /// offset for the latency rule and (when paced) the simulated
     /// clock advance, so idle time between engine creation and a run
-    /// is charged to neither (the classic `serve()` measured arrivals
+    /// is charged to neither (the classic serve loop measured arrivals
     /// from serve start).
     SetArrivalBase(u64),
 }
 
+/// One shard's drain ack: its metrics window (taken, accumulator
+/// reset) and its simulated makespan.
+struct ShardDrain {
+    metrics: Metrics,
+    sim_makespan: u64,
+}
+
 /// One shared recording rule for served responses — the worker
-/// accumulator and per-run report assembly must never diverge. Both
+/// accumulators and per-run report assembly must never diverge. Both
 /// `completed_ns` and `arrival_ns` are expected on the *same* clock
 /// (rebased to the current run's start), so latencies never absorb
 /// earlier runs' makespan.
@@ -280,16 +392,20 @@ fn record_response(metrics: &mut Metrics, r: &Response, completed_ns: u64, arriv
     );
 }
 
-/// Context liveness bookkeeping: which ids are currently registered
-/// and which were evicted (so errors can distinguish "evicted" from
-/// "never existed" without guessing from id ordering).
+/// Context liveness bookkeeping shared by the client facade and the
+/// shard workers: which ids are currently registered (and their home
+/// shard — the stable affinity every submit routes by) and which were
+/// evicted (so errors can distinguish "evicted" from "never existed"
+/// without guessing from id ordering). Shard workers update it when
+/// the memory budget retires a context.
 #[derive(Default)]
 struct Registry {
-    live: HashSet<ContextId>,
+    /// context id → home shard.
+    live: HashMap<ContextId, usize>,
     evicted: HashSet<ContextId>,
 }
 
-/// State shared between client threads and the worker.
+/// State shared between client threads and the shard workers.
 struct Shared {
     /// Queries submitted but not yet dispatched (admission control).
     inflight: AtomicUsize,
@@ -299,90 +415,103 @@ struct Shared {
     dropped: AtomicUsize,
     /// First dispatch-side error, handed to the next receiver.
     poison: Mutex<Option<A3Error>>,
+    /// Admission wakeup: shard workers notify after every dispatch
+    /// lowers `inflight`, so blocked stream drivers park on the
+    /// condvar instead of sleep-polling.
+    admission_gate: Mutex<()>,
+    admission: Condvar,
 }
 
 /// The serving engine: the one sanctioned way to drive the system.
-/// Built by [`EngineBuilder::build`]; owns the coordinator worker
-/// thread for its whole lifetime (joined on drop).
+/// Built by [`EngineBuilder::build`]; owns the shard worker threads
+/// for its whole lifetime (joined on drop).
 pub struct Engine {
-    cmd_tx: Option<mpsc::Sender<Cmd>>,
+    /// One command queue per shard; `None` once stopped.
+    cmd_tx: Option<Vec<mpsc::Sender<Cmd>>>,
     resp_rx: mpsc::Receiver<Response>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
     shared: Arc<Shared>,
     /// Engine identity handed to [`ContextHandle`]s (pointer equality).
     token: Arc<()>,
-    /// Context liveness (submit-time eviction/unknown classification).
-    registry: Mutex<Registry>,
+    /// Context liveness + home-shard affinity (shared with workers).
+    registry: Arc<Mutex<Registry>>,
+    /// Sharded, memory-accounted context residency (shared with
+    /// workers, which own the per-shard hot path).
+    store: Arc<ContextStore>,
     next_ctx: AtomicU32,
     next_ticket: AtomicU64,
     epoch: Instant,
-    /// `Some` when built through the builder (context `d` validation);
-    /// `None` on the deprecated `Server` compatibility path.
-    dims: Option<Dims>,
+    dims: Dims,
     needs_sorted: bool,
     arrival_qps: Option<f64>,
     max_pending: usize,
 }
 
 impl Engine {
-    fn spawn(
-        scheduler: Scheduler,
-        contexts: Vec<KvContext>,
-        dims: Option<Dims>,
-        batch: BatchPolicy,
-        arrival_qps: Option<f64>,
-        max_pending: usize,
-    ) -> Result<Engine, A3Error> {
-        let needs_sorted = scheduler.needs_sorted_contexts();
-        // registration *is* comprehension time (§IV-C): prewarm the
-        // sorted-key caches off the query critical path
-        if needs_sorted {
-            for ctx in &contexts {
-                ctx.prewarm_sorted();
-            }
-        }
-        let registry = Registry {
-            live: contexts.iter().map(|c| c.id).collect(),
-            evicted: HashSet::new(),
-        };
-        let next_ctx = contexts.iter().map(|c| c.id + 1).max().unwrap_or(0);
-        let live: HashMap<ContextId, KvContext> =
-            contexts.into_iter().map(|c| (c.id, c)).collect();
-
-        let (cmd_tx, cmd_rx) = mpsc::channel();
+    fn spawn(builder: EngineBuilder) -> Result<Engine, A3Error> {
+        let EngineBuilder {
+            units,
+            kind,
+            dims,
+            batch,
+            arrival_qps,
+            max_pending,
+            shards,
+            memory_budget,
+        } = builder;
+        let needs_sorted = kind.needs_sorted_contexts();
+        let store = Arc::new(ContextStore::new(shards, memory_budget));
+        let registry = Arc::new(Mutex::new(Registry::default()));
         let (resp_tx, resp_rx) = mpsc::channel();
         let shared = Arc::new(Shared {
             inflight: AtomicUsize::new(0),
             dropped: AtomicUsize::new(0),
             poison: Mutex::new(None),
+            admission_gate: Mutex::new(()),
+            admission: Condvar::new(),
         });
         let epoch = Instant::now();
-        let mut worker = Worker {
-            cmd_rx,
-            resp_tx,
-            batcher: Batcher::new(batch),
-            scheduler,
-            metrics: Metrics::default(),
-            live,
-            arrivals: HashMap::new(),
-            epoch,
-            paced: arrival_qps.is_some(),
-            arrival_base_ns: 0,
-            sim_base_cycles: 0,
-            shared: Arc::clone(&shared),
-        };
-        let handle = std::thread::Builder::new()
-            .name("a3-engine".into())
-            .spawn(move || worker.run())
-            .map_err(|e| A3Error::ConfigError(format!("failed to spawn engine worker: {e}")))?;
+        let mut cmd_txs = Vec::with_capacity(shards);
+        let mut workers = Vec::with_capacity(shards);
+        for shard in 0..shards {
+            let (cmd_tx, cmd_rx) = mpsc::channel();
+            let mut worker = ShardWorker {
+                shard,
+                cmd_rx,
+                resp_tx: resp_tx.clone(),
+                batcher: Batcher::new(batch),
+                scheduler: Scheduler::replicated(
+                    UnitConfig { kind, dims },
+                    units_for_shard(units, shards, shard),
+                ),
+                metrics: Metrics::default(),
+                store: Arc::clone(&store),
+                registry: Arc::clone(&registry),
+                arrivals: HashMap::new(),
+                epoch,
+                paced: arrival_qps.is_some(),
+                arrival_base_ns: 0,
+                sim_base_cycles: 0,
+                shared: Arc::clone(&shared),
+            };
+            let handle = std::thread::Builder::new()
+                .name(format!("a3-shard{shard}"))
+                .spawn(move || worker.run())
+                .map_err(|e| {
+                    A3Error::ConfigError(format!("failed to spawn shard worker {shard}: {e}"))
+                })?;
+            cmd_txs.push(cmd_tx);
+            workers.push(handle);
+        }
         Ok(Engine {
-            cmd_tx: Some(cmd_tx),
+            cmd_tx: Some(cmd_txs),
             resp_rx,
-            worker: Some(handle),
+            workers,
             shared,
             token: Arc::new(()),
-            registry: Mutex::new(registry),
-            next_ctx: AtomicU32::new(next_ctx),
+            registry,
+            store,
+            next_ctx: AtomicU32::new(0),
             next_ticket: AtomicU64::new(0),
             epoch,
             dims,
@@ -392,26 +521,44 @@ impl Engine {
         })
     }
 
-    /// Compatibility constructor for the deprecated
-    /// [`crate::coordinator::Server`] shim: adopts caller-built
-    /// contexts (keeping their ids) and an existing scheduler.
-    pub(crate) fn from_parts(
-        contexts: Vec<KvContext>,
-        scheduler: Scheduler,
-        config: ServeConfig,
-    ) -> Result<Engine, A3Error> {
-        Engine::spawn(
-            scheduler,
-            contexts,
-            None,
-            config.batch,
-            config.arrival_qps,
-            usize::MAX,
-        )
+    fn cmd_txs(&self) -> Result<&[mpsc::Sender<Cmd>], A3Error> {
+        self.cmd_tx.as_deref().ok_or(A3Error::EngineStopped)
     }
 
-    fn cmd_tx(&self) -> Result<&mpsc::Sender<Cmd>, A3Error> {
-        self.cmd_tx.as_ref().ok_or(A3Error::EngineStopped)
+    fn shard_tx(&self, shard: usize) -> Result<&mpsc::Sender<Cmd>, A3Error> {
+        Ok(&self.cmd_txs()?[shard])
+    }
+
+    /// Number of shard workers.
+    pub fn shard_count(&self) -> usize {
+        self.store.shard_count()
+    }
+
+    /// Total context bytes resident across all shards (K/V + built
+    /// sorted-key caches).
+    pub fn resident_bytes(&self) -> usize {
+        self.store.resident_bytes()
+    }
+
+    /// The per-shard slice of the configured memory budget, if any.
+    pub fn per_shard_memory_budget(&self) -> Option<usize> {
+        self.store.per_shard_budget()
+    }
+
+    /// The home shard a context was placed on (stable for its whole
+    /// lifetime: every one of its queries batches and dispatches
+    /// there). Errors like a submit would: [`A3Error::ContextEvicted`]
+    /// once the context is gone.
+    pub fn home_shard(&self, handle: &ContextHandle) -> Result<usize, A3Error> {
+        self.check_handle(handle)?;
+        let reg = self.registry.lock().unwrap();
+        match reg.live.get(&handle.id()) {
+            Some(&shard) => Ok(shard),
+            None if reg.evicted.contains(&handle.id()) => {
+                Err(A3Error::ContextEvicted(handle.id()))
+            }
+            None => Err(A3Error::UnknownContext(handle.id())),
+        }
     }
 
     /// Surface (and consume) the first dispatch-side error, if any.
@@ -424,22 +571,40 @@ impl Engine {
 
     /// Register a K/V context (comprehension time). When any unit runs
     /// candidate selection the sorted-key cache is prewarmed here, so
-    /// the one-time column sort stays off the query critical path.
+    /// the one-time column sort stays off the query critical path (and
+    /// is charged to the memory budget up front). Placement is
+    /// least-loaded-by-resident-bytes; under a memory budget the home
+    /// shard may LRU-retire older contexts (serving their
+    /// already-admitted queries first), and a context that could never
+    /// fit its shard's share is rejected with [`A3Error::MemoryBudget`].
     pub fn register_context(&self, kv: KvPair) -> Result<ContextHandle, A3Error> {
-        if let Some(dims) = self.dims {
-            if kv.d != dims.d {
-                return Err(A3Error::DimensionMismatch { expected: dims.d, got: kv.d });
-            }
+        if kv.d != self.dims.d {
+            return Err(A3Error::DimensionMismatch { expected: self.dims.d, got: kv.d });
         }
-        let tx = self.cmd_tx()?;
+        // fail before allocating an id if the engine is stopped
+        self.cmd_txs()?;
         let id = self.next_ctx.fetch_add(1, Ordering::Relaxed);
         let ctx = KvContext::new(id, kv);
         if self.needs_sorted {
             ctx.prewarm_sorted();
         }
-        self.registry.lock().unwrap().live.insert(id);
-        tx.send(Cmd::Register(ctx.clone()))
-            .map_err(|_| A3Error::EngineStopped)?;
+        let bytes = ctx.resident_bytes();
+        if let Some(budget) = self.store.per_shard_budget() {
+            if bytes > budget {
+                return Err(A3Error::MemoryBudget { required: bytes, budget });
+            }
+        }
+        let shard = self.store.place(bytes);
+        self.registry.lock().unwrap().live.insert(id, shard);
+        let send = self.shard_tx(shard).and_then(|tx| {
+            tx.send(Cmd::Register(ctx.clone())).map_err(|_| A3Error::EngineStopped)
+        });
+        if let Err(e) = send {
+            // roll back: the context never reached its shard
+            self.store.unreserve(shard, bytes);
+            self.registry.lock().unwrap().live.remove(&id);
+            return Err(e);
+        }
         Ok(ContextHandle { ctx, engine: Arc::clone(&self.token) })
     }
 
@@ -466,38 +631,41 @@ impl Engine {
         Ok(())
     }
 
-    /// Evict a context: its already-admitted queries are dispatched,
-    /// then the engine drops its reference. Further submits against
-    /// the handle (or any clone) return [`A3Error::ContextEvicted`];
-    /// the K/V data itself stays alive while handles exist.
+    /// Evict a context: its already-admitted queries are dispatched on
+    /// its home shard, then the engine drops its reference. Further
+    /// submits against the handle (or any clone) return
+    /// [`A3Error::ContextEvicted`]; the K/V data itself stays alive
+    /// while handles exist.
     pub fn evict(&self, handle: &ContextHandle) -> Result<(), A3Error> {
         self.check_handle(handle)?;
-        {
+        let shard = {
             let mut reg = self.registry.lock().unwrap();
-            if !reg.live.remove(&handle.id()) {
+            let Some(shard) = reg.live.remove(&handle.id()) else {
                 return Err(A3Error::ContextEvicted(handle.id()));
-            }
+            };
             reg.evicted.insert(handle.id());
-        }
-        self.cmd_tx()?
+            shard
+        };
+        self.shard_tx(shard)?
             .send(Cmd::Evict(handle.id()))
             .map_err(|_| A3Error::EngineStopped)
     }
 
-    /// Queries submitted but not yet dispatched.
+    /// Queries submitted but not yet dispatched (across all shards).
     pub fn pending(&self) -> usize {
         self.shared.inflight.load(Ordering::Acquire)
     }
 
     /// Submit one query without blocking. The query joins the
-    /// context's batch and is dispatched by the worker when the batch
-    /// closes (size-or-timeout) or the engine drains; the matching
-    /// [`Response`] (same `id` as the ticket) comes back through
-    /// [`Engine::try_recv`] / [`Engine::recv_timeout`].
+    /// context's batch on its home shard and is dispatched by that
+    /// shard's worker when the batch closes (size-or-timeout) or the
+    /// engine drains; the matching [`Response`] (same `id` as the
+    /// ticket) comes back through [`Engine::try_recv`] /
+    /// [`Engine::recv_timeout`].
     pub fn submit(&self, handle: &ContextHandle, embedding: Vec<f32>) -> Result<Ticket, A3Error> {
         self.check_poison()?;
-        // liveness (evicted/unknown) is classified by submit_query —
-        // one registry lock per submit, not two
+        // liveness (evicted/unknown) and the home shard are resolved by
+        // submit_query — one registry lock per submit, not two
         self.validate_submit(handle, &embedding)?;
         let pending = self.shared.inflight.load(Ordering::Acquire);
         if pending >= self.max_pending {
@@ -514,21 +682,20 @@ impl Engine {
         Ok(Ticket { id, context: handle.id() })
     }
 
-    /// Raw-query submit for the compatibility path: the caller owns
-    /// id assignment and arrival stamping. Context must be live.
+    /// Raw-query submit: routes to the context's home shard. The
+    /// caller owns id assignment and arrival stamping; context must be
+    /// live.
     pub(crate) fn submit_query(&self, query: Query) -> Result<(), A3Error> {
         let ctx = query.context;
-        {
+        let shard = {
             let reg = self.registry.lock().unwrap();
-            if !reg.live.contains(&ctx) {
-                return Err(if reg.evicted.contains(&ctx) {
-                    A3Error::ContextEvicted(ctx)
-                } else {
-                    A3Error::UnknownContext(ctx)
-                });
+            match reg.live.get(&ctx) {
+                Some(&shard) => shard,
+                None if reg.evicted.contains(&ctx) => return Err(A3Error::ContextEvicted(ctx)),
+                None => return Err(A3Error::UnknownContext(ctx)),
             }
-        }
-        let tx = self.cmd_tx()?;
+        };
+        let tx = self.shard_tx(shard)?;
         self.shared.inflight.fetch_add(1, Ordering::AcqRel);
         tx.send(Cmd::Submit(query)).map_err(|_| {
             self.shared.inflight.fetch_sub(1, Ordering::AcqRel);
@@ -537,7 +704,8 @@ impl Engine {
     }
 
     /// Non-blocking receive of the next completed response (any
-    /// ticket, completion order). `Ok(None)` = nothing ready yet.
+    /// ticket, any shard, completion order). `Ok(None)` = nothing
+    /// ready yet.
     pub fn try_recv(&self) -> Result<Option<Response>, A3Error> {
         match self.resp_rx.try_recv() {
             Ok(r) => Ok(Some(r)),
@@ -550,8 +718,8 @@ impl Engine {
     }
 
     /// Blocking receive with a timeout. `Ok(None)` = no response
-    /// within `timeout` (e.g. the batch is still waiting to close —
-    /// see [`Engine::drain`] to force tail batches out).
+    /// within `timeout` (e.g. a batch is still waiting to close — see
+    /// [`Engine::drain`] to force tail batches out).
     pub fn recv_timeout(&self, timeout: Duration) -> Result<Option<Response>, A3Error> {
         match self.resp_rx.recv_timeout(timeout) {
             Ok(r) => Ok(Some(r)),
@@ -563,31 +731,59 @@ impl Engine {
         }
     }
 
-    /// Flush every pending batch (tail queries below `max_batch` that
-    /// never hit their timeout are dispatched, not dropped) and take
-    /// the metrics window: everything served since the previous drain
-    /// or run start ([`EngineStats`]); the accumulator then resets.
-    /// For per-run numbers prefer the [`ServeReport`] from
-    /// [`Engine::run_stream`]. After `drain` returns, every
-    /// previously submitted query's response is in the receive queue.
+    /// All-shard drain barrier: every shard flushes its pending
+    /// batches (tail queries below `max_batch` that never hit their
+    /// timeout are dispatched, not dropped) and hands over its metrics
+    /// window; the windows merge into one [`EngineStats`] (percentiles
+    /// over the merged sample set, makespan = max over shards; the
+    /// accumulators then reset). The barrier is deterministic: drains
+    /// are issued to every shard first (so they flush concurrently),
+    /// then acknowledged in shard order. For per-run numbers prefer
+    /// the [`ServeReport`] from [`Engine::run_stream`]. After `drain`
+    /// returns, every previously submitted query's response is in the
+    /// receive queue.
     pub fn drain(&self) -> Result<EngineStats, A3Error> {
-        let (ack_tx, ack_rx) = mpsc::channel();
-        self.cmd_tx()?
-            .send(Cmd::Drain(ack_tx))
-            .map_err(|_| A3Error::EngineStopped)?;
-        ack_rx.recv().map_err(|_| A3Error::EngineStopped)
+        let txs = self.cmd_txs()?;
+        let mut acks = Vec::with_capacity(txs.len());
+        for tx in txs {
+            let (ack_tx, ack_rx) = mpsc::channel();
+            tx.send(Cmd::Drain(ack_tx)).map_err(|_| A3Error::EngineStopped)?;
+            acks.push(ack_rx);
+        }
+        let mut metrics = Metrics::default();
+        let mut per_shard = Vec::with_capacity(acks.len());
+        let mut sim_makespan = 0u64;
+        for (shard, ack) in acks.into_iter().enumerate() {
+            let drain: ShardDrain = ack.recv().map_err(|_| A3Error::EngineStopped)?;
+            sim_makespan = sim_makespan.max(drain.sim_makespan);
+            per_shard.push(ShardStats {
+                shard,
+                completed: drain.metrics.completed,
+                sim_makespan: drain.sim_makespan,
+            });
+            metrics.absorb(drain.metrics);
+        }
+        Ok(EngineStats { metrics, sim_makespan, per_shard })
     }
 
     /// [`Engine::drain`] without the metrics snapshot: flush every
-    /// pending batch and return only the simulated makespan. The
-    /// stream drivers use this so long-lived engines never pay an
-    /// O(served-queries) metrics clone per run.
-    fn flush(&self) -> Result<u64, A3Error> {
-        let (ack_tx, ack_rx) = mpsc::channel();
-        self.cmd_tx()?
-            .send(Cmd::Flush(ack_tx))
-            .map_err(|_| A3Error::EngineStopped)?;
-        ack_rx.recv().map_err(|_| A3Error::EngineStopped)
+    /// shard's pending batches and return the per-shard simulated
+    /// makespans, in shard order. The stream drivers use this so
+    /// long-lived engines never pay an O(served-queries) metrics
+    /// handover per run — and so each shard's run baseline stays on
+    /// *its own* clock (shard clocks are independent; a max over
+    /// shards would misprice runs on lightly-loaded shards).
+    fn flush(&self) -> Result<Vec<u64>, A3Error> {
+        let txs = self.cmd_txs()?;
+        let mut acks = Vec::with_capacity(txs.len());
+        for tx in txs {
+            let (ack_tx, ack_rx) = mpsc::channel();
+            tx.send(Cmd::Flush(ack_tx)).map_err(|_| A3Error::EngineStopped)?;
+            acks.push(ack_rx);
+        }
+        acks.into_iter()
+            .map(|ack| ack.recv().map_err(|_| A3Error::EngineStopped))
+            .collect()
     }
 
     /// Serve a pre-built stream: pace arrivals per the configured
@@ -612,7 +808,7 @@ impl Engine {
     }
 
     /// Convenience: serve `count` seeded random queries against one
-    /// context (the classic `serve_random` smoke workload).
+    /// context (the classic serve_random smoke workload).
     pub fn run_random(
         &self,
         handle: &ContextHandle,
@@ -627,31 +823,56 @@ impl Engine {
         Ok(self.run_stream(stream)?.1)
     }
 
-    /// The blocking serve loop over raw queries (compatibility core of
-    /// [`Engine::run_stream`] and the deprecated `Server::serve`):
-    /// paced submission with admission backpressure, then drain and
-    /// collect. The report covers exactly *this* run — metrics are
-    /// rebuilt from this run's responses, so repeated runs on one
-    /// engine (or earlier `submit` traffic) never inflate a report;
-    /// responses from earlier submits still queued are discarded.
+    /// Park until admission reopens (a shard worker dispatched
+    /// something) or `wait` elapses, burning no CPU in between —
+    /// replaces the historical 20 µs sleep-poll. Returns `true` if the
+    /// wait timed out with admission still closed (the caller should
+    /// consider forcing open batches out with a flush).
+    fn wait_for_admission(&self, wait: Duration) -> bool {
+        let gate = self.shared.admission_gate.lock().unwrap();
+        if self.pending() < self.max_pending {
+            return false;
+        }
+        let (_gate, timeout) = self.shared.admission.wait_timeout(gate, wait).unwrap();
+        timeout.timed_out() && self.pending() >= self.max_pending
+    }
+
+    /// The blocking serve loop over raw queries (the core of
+    /// [`Engine::run_stream`]): paced submission with admission
+    /// backpressure, then drain and collect. The report covers exactly
+    /// *this* run — metrics are rebuilt from this run's responses, so
+    /// repeated runs on one engine (or earlier `submit` traffic) never
+    /// inflate a report; responses from earlier submits still queued
+    /// are discarded.
     pub(crate) fn run_queries(&self, queries: Vec<Query>) -> Result<ServeReport, A3Error> {
         let t0 = Instant::now();
         let total = queries.len();
         let dropped_at_start = self.shared.dropped.load(Ordering::Acquire);
         // flush any pre-run submit traffic first, so rebasing the run
         // clock below cannot misprice queries that arrived (and were
-        // batched) under the old base; the returned makespan is this
-        // run's baseline, so the report charges only cycles this run
-        // added to the units
-        let start_makespan = self.flush()?;
+        // batched) under the old base; the returned per-shard
+        // makespans are this run's baselines — shard clocks are
+        // independent, so each response must be rebased against its
+        // *home shard's* baseline (exactly what the workers do with
+        // their own sim_base_cycles), never a cross-shard maximum
+        let start_makespans = self.flush()?;
+        // context → home shard, resolved once (the driver owns the
+        // engine for the run, so affinity cannot move mid-run)
+        let homes: HashMap<ContextId, usize> = {
+            let reg = self.registry.lock().unwrap();
+            queries
+                .iter()
+                .filter_map(|q| reg.live.get(&q.context).map(|&s| (q.context, s)))
+                .collect()
+        };
         // arrivals count from the start of *this* run (the classic
-        // serve() measured from serve start): rebase the worker's
+        // serve loop measured from serve start): rebase every shard's
         // latency rule — and, when paced, its sim clock — to "now",
         // so idle time before the run is charged to neither
         let base_ns = self.epoch.elapsed().as_nanos() as u64;
-        self.cmd_tx()?
-            .send(Cmd::SetArrivalBase(base_ns))
-            .map_err(|_| A3Error::EngineStopped)?;
+        for tx in self.cmd_txs()? {
+            tx.send(Cmd::SetArrivalBase(base_ns)).map_err(|_| A3Error::EngineStopped)?;
+        }
         let mut arrivals: HashMap<QueryId, u64> = HashMap::with_capacity(total);
         let mut responses: Vec<Response> = Vec::with_capacity(total);
         for (i, mut q) in queries.into_iter().enumerate() {
@@ -663,24 +884,29 @@ impl Engine {
             }
             q.arrival_ns = self.epoch.elapsed().as_nanos() as u64;
             arrivals.insert(q.id, q.arrival_ns);
-            // stream drivers block on admission instead of failing; a
+            // stream drivers block on admission instead of failing,
+            // parked on the admission condvar (no sleep-poll). A
             // stream spread over more contexts than max_pending can
             // hold may have only open (below-max_batch, never-expiring)
-            // batches in flight — force those out rather than spin
-            let mut stalled = 0u32;
+            // batches in flight — no dispatch will ever signal, so
+            // after a quiet timeout force those batches out
+            let mut quiet = 0u32;
             while self.pending() >= self.max_pending {
-                self.collect_run(&arrivals, &mut responses)?;
-                std::thread::sleep(Duration::from_micros(20));
-                stalled += 1;
-                if stalled >= 250 {
-                    self.flush()?;
-                    stalled = 0;
+                if self.wait_for_admission(Duration::from_millis(1)) {
+                    quiet += 1;
+                    if quiet >= 5 {
+                        self.flush()?;
+                        quiet = 0;
+                    }
+                } else {
+                    quiet = 0;
                 }
+                self.collect_run(&arrivals, &mut responses)?;
             }
             self.submit_query(q)?;
             self.collect_run(&arrivals, &mut responses)?;
         }
-        let end_makespan = self.flush()?;
+        let end_makespans = self.flush()?;
         // after the drain ack, every response is already queued; the
         // dropped counter accounts for batches lost to typed dispatch
         // errors so this loop always terminates
@@ -700,23 +926,34 @@ impl Engine {
         }
         self.check_poison()?;
         // per-run metrics via the shared recording rule, in completion
-        // order, with arrivals rebased to this run's start (same as
-        // the worker accumulator)
+        // order, with arrivals rebased to this run's start and each
+        // completion rebased to its home shard's baseline (same as
+        // the worker accumulators)
+        let fallback_start = start_makespans.iter().copied().max().unwrap_or(0);
         let mut metrics = Metrics::default();
         for r in &responses {
             let arrival = arrivals.get(&r.id).copied().unwrap_or(0);
+            let start = homes
+                .get(&r.context)
+                .map_or(fallback_start, |&s| start_makespans[s]);
             record_response(
                 &mut metrics,
                 r,
-                r.completed_ns.saturating_sub(start_makespan),
+                r.completed_ns.saturating_sub(start),
                 arrival.saturating_sub(base_ns),
             );
         }
+        // cycles this run added to the units: the largest per-shard
+        // advance; on a fresh engine this equals the absolute makespan
+        let sim_makespan = start_makespans
+            .iter()
+            .zip(&end_makespans)
+            .map(|(&s, &e)| e.saturating_sub(s))
+            .max()
+            .unwrap_or(0);
         Ok(ServeReport {
             metrics,
-            // cycles this run added to the units; on a fresh engine
-            // this equals the absolute makespan
-            sim_makespan: end_makespan.saturating_sub(start_makespan),
+            sim_makespan,
             wall: t0.elapsed(),
             responses,
         })
@@ -738,11 +975,12 @@ impl Engine {
         Ok(())
     }
 
-    /// Stop the engine: flush pending batches, terminate and join the
-    /// worker. Idempotent; called automatically on drop.
+    /// Stop the engine: flush pending batches on every shard,
+    /// terminate and join the workers. Idempotent; called
+    /// automatically on drop.
     pub fn stop(&mut self) {
-        drop(self.cmd_tx.take()); // worker flushes + exits on disconnect
-        if let Some(handle) = self.worker.take() {
+        drop(self.cmd_tx.take()); // workers flush + exit on disconnect
+        for handle in self.workers.drain(..) {
             let _ = handle.join();
         }
     }
@@ -754,14 +992,20 @@ impl Drop for Engine {
     }
 }
 
-/// The coordinator thread: batches, schedules, records, responds.
-struct Worker {
+/// One shard's coordinator thread: batches, schedules on its unit
+/// partition, records into its own metrics window, responds. Owns the
+/// shard's hot path outright — the only cross-shard state it touches
+/// is the response channel, the shared counters, and (rarely) the
+/// registry when the memory budget retires a context.
+struct ShardWorker {
+    shard: usize,
     cmd_rx: mpsc::Receiver<Cmd>,
     resp_tx: mpsc::Sender<Response>,
     batcher: Batcher,
     scheduler: Scheduler,
     metrics: Metrics,
-    live: HashMap<ContextId, KvContext>,
+    store: Arc<ContextStore>,
+    registry: Arc<Mutex<Registry>>,
     arrivals: HashMap<QueryId, u64>,
     epoch: Instant,
     /// Under paced arrivals the simulated clock tracks the host
@@ -777,7 +1021,7 @@ struct Worker {
     shared: Arc<Shared>,
 }
 
-impl Worker {
+impl ShardWorker {
     fn run(&mut self) {
         loop {
             // sleep until the earliest real size-or-timeout deadline
@@ -793,16 +1037,14 @@ impl Worker {
                 }
             };
             match self.cmd_rx.recv_timeout(timeout) {
-                Ok(Cmd::Register(ctx)) => {
-                    self.live.insert(ctx.id, ctx);
-                }
+                Ok(Cmd::Register(ctx)) => self.register(ctx),
                 Ok(Cmd::Evict(id)) => {
                     // already-admitted queries are served before the
                     // context leaves
                     if let Some(batch) = self.batcher.take_context(id) {
                         self.dispatch(batch);
                     }
-                    self.live.remove(&id);
+                    self.store.remove(self.shard, id);
                 }
                 Ok(Cmd::Submit(q)) => {
                     self.arrivals.insert(q.id, q.arrival_ns);
@@ -828,7 +1070,7 @@ impl Worker {
                     // start a fresh one (bounds the latency buffer on
                     // long-lived engines)
                     let metrics = std::mem::take(&mut self.metrics);
-                    let _ = ack.send(EngineStats {
+                    let _ = ack.send(ShardDrain {
                         metrics,
                         sim_makespan: self.scheduler.makespan_cycles(),
                     });
@@ -850,6 +1092,38 @@ impl Worker {
         }
     }
 
+    /// Admit a placed context, then enforce this shard's memory-budget
+    /// share: least-recently-dispatched contexts are retired with full
+    /// evict semantics — their already-admitted queries dispatch
+    /// first, then the context leaves the store and the registry marks
+    /// it evicted (so later submits get the typed
+    /// [`A3Error::ContextEvicted`]). The just-admitted context is
+    /// never a victim.
+    fn register(&mut self, ctx: KvContext) {
+        let id = ctx.id;
+        let bytes = ctx.resident_bytes();
+        self.store.insert(self.shard, ctx, bytes);
+        for victim in self.store.over_budget_victims(self.shard, id) {
+            // registry first: any client that observes the victim's
+            // served responses gets a typed ContextEvicted on its next
+            // submit. (A submit already in the channel behind this
+            // Register is handled like one racing an explicit evict:
+            // its dispatch fails typed and is reported through the
+            // poison slot + dropped counter, so stream drivers
+            // terminate instead of waiting forever.)
+            {
+                let mut reg = self.registry.lock().unwrap();
+                if reg.live.remove(&victim).is_some() {
+                    reg.evicted.insert(victim);
+                }
+            }
+            if let Some(batch) = self.batcher.take_context(victim) {
+                self.dispatch(batch);
+            }
+            self.store.remove(self.shard, victim);
+        }
+    }
+
     fn expire(&mut self) {
         let now_ns = self.epoch.elapsed().as_nanos() as u64;
         for batch in self.batcher.expire(now_ns) {
@@ -859,7 +1133,7 @@ impl Worker {
 
     fn dispatch(&mut self, batch: Vec<Query>) {
         let count = batch.len();
-        let outcome = match self.live.get(&batch[0].context).cloned() {
+        let outcome = match self.store.get(self.shard, batch[0].context) {
             None => Err(A3Error::ContextEvicted(batch[0].context)),
             Some(ctx) => {
                 if self.paced {
@@ -892,5 +1166,136 @@ impl Worker {
             }
         }
         self.shared.inflight.fetch_sub(count, Ordering::AcqRel);
+        // admission reopened: wake any parked stream driver (the gate
+        // lock serializes with the waiter's check-then-wait, so the
+        // notification cannot be lost)
+        let _gate = self.shared.admission_gate.lock().unwrap();
+        self.shared.admission.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+
+    fn make_kv(n: usize, seed: u64) -> KvPair {
+        let mut rng = Rng::new(seed);
+        KvPair::new(n, 64, rng.normal_vec(n * 64, 1.0), rng.normal_vec(n * 64, 1.0))
+    }
+
+    fn make_engine(units: usize, backend: AttentionBackend, n: usize) -> Engine {
+        EngineBuilder::new()
+            .units(units)
+            .backend(backend)
+            .dims(Dims::new(n, 64))
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn unit_partition_covers_every_shard() {
+        // even split with remainder to the earlier shards
+        assert_eq!(
+            (0..4).map(|s| units_for_shard(8, 4, s)).collect::<Vec<_>>(),
+            vec![2, 2, 2, 2]
+        );
+        assert_eq!(
+            (0..3).map(|s| units_for_shard(8, 3, s)).collect::<Vec<_>>(),
+            vec![3, 3, 2]
+        );
+        // fewer units than shards: replicate so every shard can serve
+        assert_eq!(
+            (0..8).map(|s| units_for_shard(2, 8, s)).collect::<Vec<_>>(),
+            vec![1; 8]
+        );
+        // one shard takes everything (the shards=1 identity case)
+        assert_eq!(units_for_shard(5, 1, 0), 5);
+    }
+
+    #[test]
+    fn serves_all_queries() {
+        let engine = make_engine(1, AttentionBackend::Exact, 64);
+        let ctx = engine.register_context(make_kv(64, 9)).unwrap();
+        let report = engine.run_random(&ctx, 100, 1).unwrap();
+        assert_eq!(report.metrics.completed, 100);
+        assert_eq!(report.responses.len(), 100);
+        assert!(report.sim_makespan > 0);
+    }
+
+    #[test]
+    fn outputs_match_direct_attention() {
+        let engine = make_engine(1, AttentionBackend::Exact, 32);
+        let kv = make_kv(32, 9);
+        let ctx = engine.register_context(kv.clone()).unwrap();
+        let report = engine.run_random(&ctx, 16, 2).unwrap();
+        // re-run one query directly
+        let mut rng = Rng::new(2);
+        let q0 = rng.normal_vec(64, 1.0);
+        let direct = crate::attention::attention(&kv, &q0);
+        let served = report.responses.iter().find(|r| r.id == 0).unwrap();
+        crate::testutil::assert_allclose(&served.output, &direct, 1e-6, 0.0);
+    }
+
+    #[test]
+    fn approximate_engine_reports_fewer_selected_rows() {
+        let engine = make_engine(1, AttentionBackend::aggressive(), 320);
+        let ctx = engine.register_context(make_kv(320, 9)).unwrap();
+        // registration prewarmed the comprehension-time sort
+        assert!(ctx.prewarmed());
+        let report = engine.run_random(&ctx, 32, 3).unwrap();
+        assert!(report.metrics.mean_selected_rows() < 320.0);
+        assert!(report.metrics.mean_selected_rows() >= 1.0);
+    }
+
+    #[test]
+    fn selective_serving_end_to_end_matches_direct_backend() {
+        // conservative and aggressive schemes served through the whole
+        // stack (batcher → scheduler → fused batch engine) must equal
+        // direct per-query backend execution with the cached sort.
+        for backend in [AttentionBackend::conservative(), AttentionBackend::aggressive()] {
+            let engine = make_engine(2, backend, 128);
+            let kv = make_kv(128, 9);
+            let ctx = engine.register_context(kv.clone()).unwrap();
+            let report = engine.run_random(&ctx, 24, 5).unwrap();
+            assert_eq!(report.metrics.completed, 24);
+            let mut rng = Rng::new(5);
+            let embeddings: Vec<Vec<f32>> = (0..24).map(|_| rng.normal_vec(64, 1.0)).collect();
+            for r in &report.responses {
+                let (out, sel) =
+                    backend.run(&kv, Some(ctx.sorted()), &embeddings[r.id as usize]);
+                assert_eq!(r.output, out, "query {}", r.id);
+                assert_eq!(r.selected_rows, sel.len(), "query {}", r.id);
+            }
+        }
+    }
+
+    #[test]
+    fn more_units_drain_faster_in_sim_time() {
+        let serve = |units: usize| {
+            let engine = make_engine(units, AttentionBackend::Exact, 320);
+            let ctx = engine.register_context(make_kv(320, 9)).unwrap();
+            engine.run_random(&ctx, 64, 4).unwrap().sim_makespan
+        };
+        let one = serve(1);
+        let four = serve(4);
+        assert!(four < one, "{four} !< {one}");
+    }
+
+    #[test]
+    fn resident_accounting_tracks_registration_and_eviction() {
+        let engine = make_engine(1, AttentionBackend::conservative(), 64);
+        assert_eq!(engine.resident_bytes(), 0);
+        let ctx = engine.register_context(make_kv(64, 1)).unwrap();
+        // selective units prewarm at registration, so the sorted cache
+        // is part of the charge
+        let expected = 2 * 64 * 64 * 4 + 64 * 64 * 12;
+        assert_eq!(ctx.resident_bytes(), expected);
+        assert_eq!(engine.resident_bytes(), expected);
+        engine.evict(&ctx).unwrap();
+        engine.drain().unwrap(); // barrier: the evict command has run
+        assert_eq!(engine.resident_bytes(), 0);
+        // the handle (and its data) survive the engine-side eviction
+        assert_eq!(ctx.resident_bytes(), expected);
     }
 }

@@ -31,6 +31,11 @@ pub enum A3Error {
     DimensionMismatch { expected: usize, got: usize },
     /// A dispatch was attempted with no queries in the batch.
     EmptyBatch,
+    /// A single context's resident bytes exceed the per-shard share of
+    /// the engine's memory budget: it could never be admitted, so
+    /// registration rejects it up front instead of evicting the whole
+    /// shard for nothing.
+    MemoryBudget { required: usize, budget: usize },
     /// The engine has been stopped (or its worker thread is gone).
     EngineStopped,
 }
@@ -49,6 +54,10 @@ impl fmt::Display for A3Error {
                 write!(f, "embedding dimension mismatch: expected {expected}, got {got}")
             }
             A3Error::EmptyBatch => write!(f, "empty batch"),
+            A3Error::MemoryBudget { required, budget } => write!(
+                f,
+                "context needs {required} resident bytes but the per-shard memory budget is {budget}"
+            ),
             A3Error::EngineStopped => write!(f, "engine is stopped"),
         }
     }
@@ -73,6 +82,7 @@ mod tests {
             (A3Error::BackendMismatch("pipe/kind".into()), "pipe/kind"),
             (A3Error::DimensionMismatch { expected: 64, got: 5 }, "expected 64"),
             (A3Error::EmptyBatch, "empty"),
+            (A3Error::MemoryBudget { required: 4096, budget: 1024 }, "4096"),
             (A3Error::EngineStopped, "stopped"),
         ];
         for (e, needle) in cases {

@@ -5,9 +5,9 @@
 //! registers knowledge bases (K/V pairs) at comprehension time, then
 //! pipelines queries into A³ units. This module is that host contract:
 //!
-//! * [`EngineBuilder`] — typed knobs (units, backend, dims, batch
-//!   policy, arrival model, admission limits) validated into an
-//!   [`Engine`] by [`EngineBuilder::build`];
+//! * [`EngineBuilder`] — typed knobs (units, shards, memory budget,
+//!   backend, dims, batch policy, arrival model, admission limits)
+//!   validated into an [`Engine`] by [`EngineBuilder::build`];
 //! * [`Engine::register_context`] — explicit context lifecycle:
 //!   returns a refcounted [`ContextHandle`], prewarms the
 //!   comprehension-time sorted-key cache when units need it, and
@@ -15,14 +15,12 @@
 //!   in-flight work;
 //! * [`Engine::submit`] / [`Engine::try_recv`] /
 //!   [`Engine::recv_timeout`] — the non-blocking client path, backed
-//!   by the coordinator worker thread (batcher → least-loaded
+//!   by per-shard coordinator workers (batcher → least-loaded
 //!   scheduler → cycle-accurate unit pipelines);
 //! * [`Engine::run_stream`] / [`Engine::run_random`] — the classic
 //!   blocking serve loop, built on the primitives above.
 //!
-//! Everything fallible returns [`A3Error`]; the deprecated
-//! [`crate::coordinator::Server`] is a thin shim over [`Engine`] kept
-//! for one release.
+//! Everything fallible returns [`A3Error`].
 //!
 //! # Example
 //!
@@ -55,11 +53,65 @@
 //!     Ok(())
 //! }
 //! ```
+//!
+//! # Sharding & memory budget
+//!
+//! The engine scales out the way the paper replicates A³ units
+//! (§III-C, Fig. 14): [`EngineBuilder::shards`] spawns that many
+//! independent coordinator workers, each owning its own batcher, its
+//! partition of the unit replicas, and its own metrics window. A
+//! context is placed **once**, on the shard with the fewest resident
+//! bytes, and keeps that home for its whole lifetime — every query
+//! for it batches and dispatches there, so the hot path never crosses
+//! a shard boundary and batches never mix shards.
+//! [`EngineBuilder::memory_budget`] caps resident context bytes (K/V
+//! matrices plus built sorted-key caches); each shard enforces its
+//! even share by LRU-retiring contexts with full
+//! [`Engine::evict`] semantics — already-admitted queries are served
+//! first, never dropped. [`Engine::drain`] is an all-shard barrier
+//! whose [`EngineStats`] merges the per-shard windows: latency
+//! percentiles over the merged sample set, simulated makespan = the
+//! max over shards.
+//!
+//! ```
+//! use a3::api::{A3Error, Dims, EngineBuilder, KvPair};
+//! use a3::testutil::Rng;
+//!
+//! fn main() -> Result<(), A3Error> {
+//!     let engine = EngineBuilder::new()
+//!         .shards(2)                   // two independent shard workers
+//!         .units(2)                    // one unit replica per shard
+//!         .dims(Dims::new(32, 16))
+//!         .memory_budget(1 << 20)      // bytes, split evenly per shard
+//!         .build()?;
+//!     let mut rng = Rng::new(7);
+//!     let mut kv =
+//!         || KvPair::new(32, 16, rng.normal_vec(32 * 16, 1.0), rng.normal_vec(32 * 16, 1.0));
+//!     let a = engine.register_context(kv())?;
+//!     let b = engine.register_context(kv())?;
+//!     // stable affinity: a context's home shard never changes…
+//!     assert_eq!(engine.home_shard(&a)?, engine.home_shard(&a)?);
+//!     // …and least-loaded placement spread the two equal contexts out
+//!     assert_ne!(engine.home_shard(&a)?, engine.home_shard(&b)?);
+//!
+//!     let mut rng = Rng::new(8);
+//!     engine.submit(&a, rng.normal_vec(16, 1.0))?;
+//!     engine.submit(&b, rng.normal_vec(16, 1.0))?;
+//!     let stats = engine.drain()?; // all-shard barrier, merged window
+//!     assert_eq!(stats.metrics.completed, 2);
+//!     assert_eq!(stats.per_shard.len(), 2);
+//!     let max = stats.per_shard.iter().map(|s| s.sim_makespan).max().unwrap();
+//!     assert_eq!(stats.sim_makespan, max);
+//!     Ok(())
+//! }
+//! ```
 
 pub mod engine;
 pub mod error;
 
-pub use engine::{ContextHandle, Engine, EngineBuilder, EngineStats, Ticket};
+pub use engine::{
+    ContextHandle, Engine, EngineBuilder, EngineStats, ServeReport, ShardStats, Ticket,
+};
 pub use error::A3Error;
 
 // The façade re-exports everything a serving client needs, so
@@ -68,7 +120,6 @@ pub use crate::attention::KvPair;
 pub use crate::coordinator::batcher::BatchPolicy;
 pub use crate::coordinator::metrics::{Metrics, MetricsReport};
 pub use crate::coordinator::request::{ContextId, Query, QueryId, Response};
-pub use crate::coordinator::server::{ServeConfig, ServeReport};
 pub use crate::model::AttentionBackend;
 pub use crate::sim::Dims;
 
@@ -101,6 +152,8 @@ mod tests {
             other => panic!("expected ConfigError, got {:?}", other.map(|_| "engine")),
         };
         assert!(bad(EngineBuilder::new().units(0)).contains("units"));
+        assert!(bad(EngineBuilder::new().shards(0)).contains("shards"));
+        assert!(bad(EngineBuilder::new().memory_budget(0)).contains("memory_budget"));
         assert!(bad(EngineBuilder::new().dims(Dims::new(0, 64))).contains("dims"));
         assert!(bad(EngineBuilder::new().dims(Dims::new(64, 0))).contains("dims"));
         assert!(bad(EngineBuilder::new().max_batch(0)).contains("max_batch"));
@@ -112,8 +165,16 @@ mod tests {
             backend: AttentionBackend::QuantizedBits { i_bits: 0, f_bits: 4 },
         }))
         .contains("bit widths"));
-        // and a valid config builds
+        // and valid configs build — including more shards than units
         EngineBuilder::new().units(2).build().unwrap();
+        let sharded = EngineBuilder::new()
+            .units(2)
+            .shards(8)
+            .memory_budget(1 << 30)
+            .build()
+            .unwrap();
+        assert_eq!(sharded.shard_count(), 8);
+        assert_eq!(sharded.per_shard_memory_budget(), Some((1usize << 30).div_ceil(8)));
     }
 
     #[test]
@@ -324,8 +385,8 @@ mod tests {
 
     #[test]
     fn never_registered_id_is_unknown_not_evicted() {
-        // the deprecated Server path submits raw ids; an id that never
-        // existed must not be reported as evicted
+        // the raw-query path submits caller-chosen ids; an id that
+        // never existed must not be reported as evicted
         let engine = small_engine(1, AttentionBackend::Exact, 16, 8);
         let _live = engine.register_context(kv(16, 8, 22)).unwrap();
         let q = crate::coordinator::request::Query {

@@ -75,6 +75,14 @@ impl SortedColumns {
         let row_bits = usize::BITS - (self.n - 1).leading_zeros();
         self.n * self.d * ((value_bits + row_bits) as usize) / 8
     }
+
+    /// Host heap bytes this cache actually occupies (the f64 value
+    /// plane + the u32 row plane) — what the memory-accounted context
+    /// store charges, as opposed to the device-SRAM model of
+    /// [`SortedColumns::sram_bytes`].
+    pub fn resident_bytes(&self) -> usize {
+        self.val.len() * std::mem::size_of::<f64>() + self.row.len() * std::mem::size_of::<u32>()
+    }
 }
 
 #[cfg(test)]

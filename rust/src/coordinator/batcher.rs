@@ -7,6 +7,12 @@
 //! to the same K/V pipeline through a single unit). A batch closes when
 //! it reaches `max_batch` or when the oldest member has waited
 //! `max_wait_ns` (classic size-or-timeout policy).
+//!
+//! In the sharded engine each shard worker owns one `Batcher`
+//! outright, and contexts have a stable home shard — so a context's
+//! queries always land in the same batcher and batches can never mix
+//! shards (the single-threaded ownership model here needs no interior
+//! locking).
 
 use std::collections::HashMap;
 

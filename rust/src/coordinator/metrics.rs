@@ -40,6 +40,28 @@ impl Metrics {
         self.sim_cycles_total += other.sim_cycles_total;
     }
 
+    /// [`Metrics::merge`] by move: steals the other accumulator's
+    /// latency buffer instead of copying it. The sharded engine's
+    /// drain barrier merges every shard's window through this, so
+    /// percentiles come from the *merged* sample population without an
+    /// O(samples) clone per shard.
+    pub fn absorb(&mut self, mut other: Metrics) {
+        if other.completed == 0 {
+            return;
+        }
+        if self.completed == 0 {
+            // adopt the buffer wholesale (the common first-shard case)
+            *self = other;
+            return;
+        }
+        self.first_ns = self.first_ns.min(other.first_ns);
+        self.completed += other.completed;
+        self.last_ns = self.last_ns.max(other.last_ns);
+        self.latencies_ns.append(&mut other.latencies_ns);
+        self.selected_rows_total += other.selected_rows_total;
+        self.sim_cycles_total += other.sim_cycles_total;
+    }
+
     /// Host wall-clock queries/s over the completion window.
     pub fn throughput_qps(&self) -> f64 {
         let span = self.last_ns.saturating_sub(self.first_ns);
@@ -189,6 +211,32 @@ mod tests {
         assert_eq!(a.completed, 2);
         assert_eq!(a.last_ns, 9);
         assert_eq!(a.sim_cycles_total, 4);
+    }
+
+    #[test]
+    fn absorb_matches_merge_including_percentiles() {
+        // absorb (the move-based drain merge) must agree with merge on
+        // every counter and on the merged-population percentiles
+        let mut shard_a = Metrics::default();
+        let mut shard_b = Metrics::default();
+        for i in 0..50u64 {
+            shard_a.record(i * 17 % 101, 100 + i, 2, 3);
+            shard_b.record(i * 29 % 97, 900 + i, 1, 5);
+        }
+        let mut merged = Metrics::default();
+        merged.merge(&shard_a);
+        merged.merge(&shard_b);
+        let mut absorbed = Metrics::default();
+        absorbed.absorb(shard_a);
+        absorbed.absorb(shard_b);
+        assert_eq!(absorbed.report(), merged.report());
+        assert_eq!(absorbed.completed, 100);
+        assert_eq!(absorbed.first_ns, merged.first_ns);
+        assert_eq!(absorbed.last_ns, merged.last_ns);
+        // absorbing an empty window is a no-op
+        let snapshot = absorbed.report();
+        absorbed.absorb(Metrics::default());
+        assert_eq!(absorbed.report(), snapshot);
     }
 
     #[test]

@@ -7,32 +7,37 @@
 //! vendor set):
 //!
 //! * [`request`] — query/response types and KV-context registration;
+//! * [`store`] — the sharded, refcounted, memory-accounted
+//!   [`ContextStore`]: least-loaded-by-bytes placement with stable
+//!   context→shard affinity, byte accounting that includes the
+//!   sorted-key cache, and LRU victim selection under a budget;
 //! * [`batcher`] — dynamic batching: queries for the same KV context
 //!   are grouped (up to the AOT kernel batch of 8, or a timeout) before
-//!   dispatch, vLLM-router style;
+//!   dispatch, vLLM-router style; each shard worker owns one batcher;
 //! * [`scheduler`] — multi-unit dispatch (§III-C "Use of Multiple A³
-//!   Units"): least-loaded routing across unit replicas, per-unit
-//!   cycle-accurate occupancy from the [`crate::sim`] pipelines;
-//! * [`server`] — serving-run config/report types plus the deprecated
-//!   [`Server`] shim (the serving loop itself now lives in
-//!   [`crate::api::Engine`]);
+//!   Units"): least-loaded routing across a shard's unit partition,
+//!   per-unit cycle-accurate occupancy from the [`crate::sim`]
+//!   pipelines, shard-local dispatch scratch;
 //! * [`metrics`] — streaming percentile + counter accumulation with
-//!   the sort-once [`metrics::MetricsReport`] snapshot.
+//!   the sort-once [`metrics::MetricsReport`] snapshot and the
+//!   move-based [`Metrics::absorb`] the drain barrier merges shard
+//!   windows with.
 //!
 //! These are the coordinator *internals*: hosts drive them through
 //! the typed [`crate::api`] facade (`EngineBuilder` → `Engine` →
-//! `ContextHandle`), which owns the worker thread and returns
-//! [`crate::api::A3Error`] instead of panicking.
+//! `ContextHandle`), which owns the shard worker threads and returns
+//! [`crate::api::A3Error`] instead of panicking. (The deprecated
+//! `Server` shim from the pre-facade era is gone — see EXPERIMENTS.md
+//! for the migration map.)
 
 pub mod batcher;
 pub mod metrics;
 pub mod request;
 pub mod scheduler;
-pub mod server;
+pub mod store;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::{Metrics, MetricsReport};
 pub use request::{KvContext, Query, QueryId, Response};
 pub use scheduler::{Scheduler, UnitConfig, UnitKind};
-#[allow(deprecated)]
-pub use server::{ServeConfig, ServeReport, Server};
+pub use store::ContextStore;

@@ -54,6 +54,16 @@ impl KvContext {
     pub fn sorted_ready(&self) -> bool {
         self.sorted.get().is_some()
     }
+
+    /// Bytes this context keeps resident: the K and V matrices plus —
+    /// once built — the comprehension-time sorted-key cache. This is
+    /// what the memory-accounted [`crate::coordinator::ContextStore`]
+    /// charges against its budget, so engines that prewarm at
+    /// registration account for the sort up front.
+    pub fn resident_bytes(&self) -> usize {
+        let kv = (self.kv.key.len() + self.kv.value.len()) * std::mem::size_of::<f32>();
+        kv + self.sorted.get().map_or(0, SortedColumns::resident_bytes)
+    }
 }
 
 /// One attention query against a registered context.

@@ -22,6 +22,16 @@ pub enum UnitKind {
     Approximate { backend: AttentionBackend },
 }
 
+impl UnitKind {
+    /// Whether units of this kind consume the column-sorted key
+    /// matrix (§IV-C comprehension-time preprocessing) — the one rule
+    /// behind both [`Scheduler::needs_sorted_contexts`] and the
+    /// engine's registration-time prewarm decision.
+    pub fn needs_sorted_contexts(&self) -> bool {
+        matches!(self, UnitKind::Approximate { backend } if backend.needs_sorted())
+    }
+}
+
 /// Configuration of one unit replica.
 #[derive(Clone, Copy, Debug)]
 pub struct UnitConfig {
@@ -43,10 +53,20 @@ struct Unit {
 }
 
 /// Least-loaded scheduler over unit replicas.
+///
+/// A scheduler is single-owner state: in the sharded engine each shard
+/// worker owns exactly one (its unit partition), so the dispatch
+/// scratch below is shard-local by construction and never contended.
 pub struct Scheduler {
     units: Vec<Unit>,
     /// Simulated "now" advanced by arrivals (1 cycle = 1 ns at 1 GHz).
     now_cycles: u64,
+    /// Dispatch scratch reused across batches (shard-local, see
+    /// struct docs): the flattened `b × d` query matrix, the flat
+    /// base-path output buffer, and the backend results container.
+    flat: Vec<f32>,
+    out_flat: Vec<f32>,
+    results: Vec<(Vec<f32>, Vec<usize>)>,
 }
 
 impl Scheduler {
@@ -65,7 +85,13 @@ impl Scheduler {
                 processed: 0,
             })
             .collect();
-        Scheduler { units, now_cycles: 0 }
+        Scheduler {
+            units,
+            now_cycles: 0,
+            flat: Vec::new(),
+            out_flat: Vec::new(),
+            results: Vec::new(),
+        }
     }
 
     /// Replicated homogeneous units.
@@ -86,10 +112,7 @@ impl Scheduler {
     /// matrix — i.e. registered contexts should prewarm their
     /// [`KvContext::sorted`] cache at comprehension time.
     pub fn needs_sorted_contexts(&self) -> bool {
-        self.units.iter().any(|u| {
-            matches!(u.config.kind,
-                UnitKind::Approximate { backend } if backend.needs_sorted())
-        })
+        self.units.iter().any(|u| u.config.kind.needs_sorted_contexts())
     }
 
     /// Dispatch one batch of same-context queries to the least-loaded
@@ -125,28 +148,35 @@ impl Scheduler {
         let idx = (0..self.units.len())
             .min_by_key(|&i| self.units[i].free_at.max(now))
             .ok_or_else(|| A3Error::ConfigError("scheduler has no units".into()))?;
-        let unit = &mut self.units[idx];
-        let arrival = unit.free_at.max(now);
 
         let d = ctx.kv.d;
-        let mut flat = Vec::with_capacity(batch.len() * d);
+        // shard-local scratch: the flattened query matrix is rebuilt in
+        // place, so steady-state dispatch allocates no batch containers
+        self.flat.clear();
         for q in batch {
             if q.embedding.len() != d {
                 return Err(A3Error::DimensionMismatch { expected: d, got: q.embedding.len() });
             }
-            flat.extend_from_slice(&q.embedding);
+            self.flat.extend_from_slice(&q.embedding);
         }
+        let unit = &mut self.units[idx];
+        let arrival = unit.free_at.max(now);
 
         // per-backend compute + per-query pipeline timing...
-        let computed = match (&mut unit.pipe, unit.config.kind) {
+        let computed: Vec<(Vec<f32>, usize, _)> = match (&mut unit.pipe, unit.config.kind) {
             (UnitPipe::Base(p), UnitKind::Base) => {
-                let outputs = crate::attention::kernel::parallel_attention_batch(
-                    &ctx.kv, &flat, 0,
+                self.out_flat.clear();
+                self.out_flat.resize(self.flat.len(), 0.0);
+                crate::attention::kernel::parallel_attention_batch_into(
+                    &ctx.kv,
+                    &self.flat,
+                    &mut self.out_flat,
+                    0,
                 );
-                outputs
+                self.out_flat
                     .chunks_exact(d)
                     .map(|out| (out.to_vec(), ctx.kv.n, p.push_query(arrival)))
-                    .collect::<Vec<_>>()
+                    .collect()
             }
             (UnitPipe::Approx(p), UnitKind::Approximate { backend }) => {
                 let sorted = backend.needs_sorted().then(|| ctx.sorted());
@@ -155,9 +185,9 @@ impl Scheduler {
                     | AttentionBackend::CandidatesOnly { m } => m.resolve(ctx.kv.n),
                     _ => ctx.kv.n,
                 };
-                backend
-                    .try_run_batch(&ctx.kv, sorted, &flat)?
-                    .into_iter()
+                backend.try_run_batch_into(&ctx.kv, sorted, &self.flat, &mut self.results)?;
+                self.results
+                    .drain(..)
                     .map(|(out, sel)| {
                         let timing = p.push_query(
                             arrival,
@@ -327,6 +357,36 @@ mod tests {
         let max = *loads.iter().max().unwrap() as f64;
         let min = *loads.iter().min().unwrap() as f64;
         assert!(max / min.max(1.0) < 2.0, "{loads:?}");
+    }
+
+    #[test]
+    fn dispatch_scratch_reuse_is_invisible_across_batch_sizes() {
+        // a smaller batch after a larger one must not see stale
+        // scratch (the flat/out/results buffers are reused in place)
+        let c = ctx(64, 16, 12);
+        let backend = AttentionBackend::conservative();
+        let mut s = Scheduler::new(&[UnitConfig {
+            kind: UnitKind::Approximate { backend },
+            dims: Dims::new(64, 16),
+        }]);
+        let qs = queries(11, 16, 13);
+        let r8 = s.dispatch(&c, &qs[..8]).unwrap();
+        let r3 = s.dispatch(&c, &qs[8..]).unwrap();
+        for (q, r) in qs.iter().zip(r8.iter().chain(&r3)) {
+            let (out, sel) = backend.run(&c.kv, Some(c.sorted()), &q.embedding);
+            assert_eq!(r.output, out, "query {}", q.id);
+            assert_eq!(r.selected_rows, sel.len(), "query {}", q.id);
+        }
+        let mut sb = Scheduler::new(&[UnitConfig {
+            kind: UnitKind::Base,
+            dims: Dims::new(64, 16),
+        }]);
+        let b8 = sb.dispatch(&c, &qs[..8]).unwrap();
+        let b2 = sb.dispatch(&c, &qs[8..10]).unwrap();
+        for (q, r) in qs.iter().zip(b8.iter().chain(&b2)) {
+            let direct = crate::attention::attention(&c.kv, &q.embedding);
+            crate::testutil::assert_allclose(&r.output, &direct, 1e-6, 0.0);
+        }
     }
 
     #[test]

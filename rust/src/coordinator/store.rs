@@ -1,0 +1,314 @@
+//! Sharded, refcounted, memory-accounted registry of [`KvContext`]s.
+//!
+//! The A³ paper scales serving throughput by replicating approximate
+//! attention units and spreading queries across them (§VII, Fig. 14);
+//! the store is the host-side half of that shape: contexts are placed
+//! once onto the **least-loaded shard by resident bytes** and stay
+//! there for their whole lifetime (stable context→shard affinity), so
+//! every query for a context batches and dispatches on its home shard
+//! and the hot path never crosses a shard boundary.
+//!
+//! Ownership model: each shard has its own entry map behind its own
+//! mutex — a shard worker only ever locks *its* shard, so dispatch on
+//! one shard never contends with dispatch on another (the only other
+//! parties on that lock are the rare client-side register/evict calls
+//! for contexts homed there). Aggregate resident bytes per shard are
+//! mirrored in atomics so placement reads them without taking any
+//! entry lock.
+//!
+//! Memory accounting covers everything a context keeps resident: the
+//! K/V matrices **and** the comprehension-time sorted-key cache
+//! (§IV-C) when it has been built ([`KvContext::resident_bytes`]).
+//! Under a configured budget the store answers "who must go" with
+//! least-recently-used victims ([`ContextStore::over_budget_victims`]);
+//! the *caller* (the shard worker) retires them — dispatching their
+//! already-admitted queries first, exactly like an explicit
+//! [`crate::api::Engine::evict`] — and then calls
+//! [`ContextStore::remove`]. The store never drops in-flight work on
+//! its own.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::request::{ContextId, KvContext};
+
+struct Entry {
+    ctx: KvContext,
+    bytes: usize,
+    /// Logical LRU timestamp (store-wide monotonic tick).
+    last_used: u64,
+}
+
+struct Shard {
+    entries: Mutex<HashMap<ContextId, Entry>>,
+    /// Resident bytes including placement reservations not yet
+    /// inserted — the lock-free view the placement policy reads.
+    resident: AtomicUsize,
+}
+
+/// Sharded, memory-accounted context registry (see module docs).
+pub struct ContextStore {
+    shards: Vec<Shard>,
+    /// Each shard's share of the configured budget (`None` =
+    /// unbounded). The total budget is split evenly so one shard can
+    /// never starve the others.
+    per_shard_budget: Option<usize>,
+    /// Monotonic logical clock behind the LRU ordering.
+    clock: AtomicU64,
+}
+
+impl ContextStore {
+    /// `memory_budget` is the total resident budget in bytes across
+    /// all shards; each shard enforces its even share
+    /// (`ceil(budget / shards)`), so `shards == 1` enforces exactly
+    /// the configured budget.
+    pub fn new(shards: usize, memory_budget: Option<usize>) -> Self {
+        assert!(shards >= 1, "a store needs at least one shard");
+        ContextStore {
+            shards: (0..shards)
+                .map(|_| Shard {
+                    entries: Mutex::new(HashMap::new()),
+                    resident: AtomicUsize::new(0),
+                })
+                .collect(),
+            per_shard_budget: memory_budget.map(|b| b.div_ceil(shards).max(1)),
+            clock: AtomicU64::new(0),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The per-shard slice of the configured memory budget.
+    pub fn per_shard_budget(&self) -> Option<usize> {
+        self.per_shard_budget
+    }
+
+    /// Resident bytes on one shard (entries + outstanding placement
+    /// reservations).
+    pub fn shard_resident_bytes(&self, shard: usize) -> usize {
+        self.shards[shard].resident.load(Ordering::Acquire)
+    }
+
+    /// Total resident bytes across all shards.
+    pub fn resident_bytes(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.resident.load(Ordering::Acquire))
+            .sum()
+    }
+
+    /// Registered contexts across all shards.
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.entries.lock().unwrap().len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Choose the home shard for a new context: least loaded by
+    /// resident bytes, reserving `bytes` there immediately so
+    /// concurrent placements see each other. The returned shard is
+    /// the context's home for its whole lifetime.
+    pub fn place(&self, bytes: usize) -> usize {
+        let shard = (0..self.shards.len())
+            .min_by_key(|&i| self.shards[i].resident.load(Ordering::Acquire))
+            .expect("store has at least one shard");
+        self.shards[shard].resident.fetch_add(bytes, Ordering::AcqRel);
+        shard
+    }
+
+    /// Roll back a [`ContextStore::place`] reservation whose context
+    /// never made it to the shard (e.g. the engine stopped mid-way).
+    pub fn unreserve(&self, shard: usize, bytes: usize) {
+        self.shards[shard].resident.fetch_sub(bytes, Ordering::AcqRel);
+    }
+
+    /// Insert a placed context on its home shard. `bytes` must be the
+    /// amount reserved by the matching [`ContextStore::place`] call.
+    pub fn insert(&self, shard: usize, ctx: KvContext, bytes: usize) {
+        let tick = self.clock.fetch_add(1, Ordering::Relaxed);
+        let mut entries = self.shards[shard].entries.lock().unwrap();
+        entries.insert(ctx.id, Entry { ctx, bytes, last_used: tick });
+    }
+
+    /// Fetch a context for dispatch, touching its LRU recency. The
+    /// clone is cheap: [`KvContext`] is a pair of `Arc`s.
+    pub fn get(&self, shard: usize, id: ContextId) -> Option<KvContext> {
+        let tick = self.clock.fetch_add(1, Ordering::Relaxed);
+        let mut entries = self.shards[shard].entries.lock().unwrap();
+        let entry = entries.get_mut(&id)?;
+        entry.last_used = tick;
+        Some(entry.ctx.clone())
+    }
+
+    pub fn contains(&self, shard: usize, id: ContextId) -> bool {
+        self.shards[shard].entries.lock().unwrap().contains_key(&id)
+    }
+
+    /// Remove a context from its home shard, releasing its bytes.
+    pub fn remove(&self, shard: usize, id: ContextId) -> Option<KvContext> {
+        let entry = self.shards[shard].entries.lock().unwrap().remove(&id)?;
+        self.shards[shard].resident.fetch_sub(entry.bytes, Ordering::AcqRel);
+        Some(entry.ctx)
+    }
+
+    /// Least-recently-used victims that must leave `shard` to bring
+    /// it back under its budget share, oldest first. `protect` (the
+    /// context whose admission triggered the check) is never a victim
+    /// — a context that fits the budget alone must always be
+    /// admittable. The caller retires each victim (dispatching its
+    /// already-admitted queries first) and then calls
+    /// [`ContextStore::remove`]; until it does, the shard is
+    /// transiently over budget.
+    pub fn over_budget_victims(&self, shard: usize, protect: ContextId) -> Vec<ContextId> {
+        let Some(budget) = self.per_shard_budget else {
+            return Vec::new();
+        };
+        let resident = self.shards[shard].resident.load(Ordering::Acquire);
+        let Some(mut over) = resident.checked_sub(budget).filter(|&o| o > 0) else {
+            return Vec::new();
+        };
+        let entries = self.shards[shard].entries.lock().unwrap();
+        let mut by_age: Vec<(u64, ContextId, usize)> = entries
+            .iter()
+            .filter(|(&id, _)| id != protect)
+            .map(|(&id, e)| (e.last_used, id, e.bytes))
+            .collect();
+        by_age.sort_unstable();
+        let mut victims = Vec::new();
+        for (_, id, bytes) in by_age {
+            if over == 0 {
+                break;
+            }
+            victims.push(id);
+            over = over.saturating_sub(bytes);
+        }
+        victims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::KvPair;
+    use crate::testutil::Rng;
+
+    fn ctx(id: ContextId, n: usize, d: usize) -> KvContext {
+        let mut rng = Rng::new(id as u64 + 1);
+        KvContext::new(
+            id,
+            KvPair::new(n, d, rng.normal_vec(n * d, 1.0), rng.normal_vec(n * d, 1.0)),
+        )
+    }
+
+    /// Place + insert in one step, the way the engine's register path
+    /// composes them.
+    fn admit(store: &ContextStore, c: KvContext) -> usize {
+        let bytes = c.resident_bytes();
+        let shard = store.place(bytes);
+        store.insert(shard, c, bytes);
+        shard
+    }
+
+    #[test]
+    fn resident_bytes_cover_kv_and_sorted_cache() {
+        let c = ctx(0, 16, 8);
+        // two f32 n×d matrices
+        let kv_only = 2 * 16 * 8 * std::mem::size_of::<f32>();
+        assert_eq!(c.resident_bytes(), kv_only);
+        c.prewarm_sorted();
+        // + the f64 value plane and u32 row plane of the sorted cache
+        let sorted = 16 * 8 * (std::mem::size_of::<f64>() + std::mem::size_of::<u32>());
+        assert_eq!(c.resident_bytes(), kv_only + sorted);
+    }
+
+    #[test]
+    fn placement_is_least_loaded_by_resident_bytes() {
+        let store = ContextStore::new(3, None);
+        // equal-size contexts round out across the empty shards
+        let s0 = admit(&store, ctx(0, 16, 8));
+        let s1 = admit(&store, ctx(1, 16, 8));
+        let s2 = admit(&store, ctx(2, 16, 8));
+        let mut homes = vec![s0, s1, s2];
+        homes.sort_unstable();
+        assert_eq!(homes, vec![0, 1, 2]);
+        // a big context on shard 0 pushes the next small ones elsewhere
+        let store = ContextStore::new(2, None);
+        assert_eq!(admit(&store, ctx(0, 256, 8)), 0);
+        assert_eq!(admit(&store, ctx(1, 16, 8)), 1);
+        assert_eq!(admit(&store, ctx(2, 16, 8)), 1, "shard 1 still lighter");
+        assert!(store.shard_resident_bytes(0) > store.shard_resident_bytes(1));
+    }
+
+    #[test]
+    fn remove_releases_bytes_and_unreserve_rolls_back_place() {
+        let store = ContextStore::new(1, None);
+        let c = ctx(7, 32, 8);
+        let bytes = c.resident_bytes();
+        admit(&store, c);
+        assert_eq!(store.resident_bytes(), bytes);
+        assert!(store.contains(0, 7));
+        assert!(store.remove(0, 7).is_some());
+        assert_eq!(store.resident_bytes(), 0);
+        assert!(store.remove(0, 7).is_none(), "second remove is a no-op");
+        let shard = store.place(100);
+        assert_eq!(store.shard_resident_bytes(shard), 100);
+        store.unreserve(shard, 100);
+        assert_eq!(store.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn over_budget_picks_lru_victims_oldest_first() {
+        let bytes = ctx(0, 16, 8).resident_bytes();
+        // room for exactly two contexts
+        let store = ContextStore::new(1, Some(2 * bytes));
+        admit(&store, ctx(0, 16, 8));
+        admit(&store, ctx(1, 16, 8));
+        assert!(store.over_budget_victims(0, 1).is_empty(), "at budget, not over");
+        // touch 0 so 1 becomes the oldest
+        assert!(store.get(0, 0).is_some());
+        admit(&store, ctx(2, 16, 8));
+        assert_eq!(store.over_budget_victims(0, 2), vec![1]);
+        // the just-admitted context is never a victim, however old the
+        // others are: four contexts over a two-context budget must give
+        // up the two oldest unprotected ones
+        store.remove(0, 1);
+        admit(&store, ctx(3, 16, 8));
+        admit(&store, ctx(4, 16, 8));
+        let victims = store.over_budget_victims(0, 4);
+        assert!(!victims.contains(&4), "protected context must never be a victim");
+        assert_eq!(victims, vec![0, 2], "oldest unprotected entries, oldest first");
+    }
+
+    #[test]
+    fn budget_splits_evenly_across_shards() {
+        let store = ContextStore::new(4, Some(1000));
+        assert_eq!(store.per_shard_budget(), Some(250));
+        let store = ContextStore::new(3, Some(1000));
+        assert_eq!(store.per_shard_budget(), Some(334)); // ceil
+        let store = ContextStore::new(1, Some(1000));
+        assert_eq!(store.per_shard_budget(), Some(1000));
+        assert!(ContextStore::new(2, None).per_shard_budget().is_none());
+    }
+
+    #[test]
+    fn get_touches_recency() {
+        let bytes = ctx(0, 16, 8).resident_bytes();
+        let store = ContextStore::new(1, Some(2 * bytes));
+        admit(&store, ctx(0, 16, 8));
+        admit(&store, ctx(1, 16, 8));
+        // without the touch, 0 would be the LRU victim
+        assert!(store.get(0, 0).is_some());
+        admit(&store, ctx(2, 16, 8));
+        assert_eq!(store.over_budget_victims(0, 2), vec![1]);
+        assert_eq!(store.len(), 3);
+        assert!(!store.is_empty());
+    }
+}

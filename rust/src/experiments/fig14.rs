@@ -14,6 +14,7 @@ use anyhow::Result;
 
 use super::sweep::{evaluate, EvalBudget, SelectionSample};
 use super::{fmt_f, fmt_x, Table};
+use crate::api::{EngineBuilder, KvPair};
 use crate::baseline::CostModel;
 use crate::coordinator::MetricsReport;
 use crate::model::AttentionBackend;
@@ -21,6 +22,7 @@ use crate::sim::{
     cycles_to_seconds, preprocess_cycles, ApproxPipeline, ApproxQuery, Dims,
     Module, PipelineSim, SimReport,
 };
+use crate::testutil::Rng;
 use crate::workloads::WorkloadKind;
 
 /// Simulate the base pipeline over per-query n values.
@@ -163,6 +165,62 @@ pub fn collect(budget: EvalBudget) -> Result<Vec<Fig14Workload>> {
     Ok(out)
 }
 
+/// Shard counts the serving sweep walks (all divide the unit budget).
+pub const SHARD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+/// Total unit replicas held fixed across the sweep, so the column
+/// isolates coordinator sharding from unit replication.
+pub const SHARD_SWEEP_UNITS: usize = 8;
+
+/// Fig. 14's serving-runtime companion (ISSUE 4): aggregate serving
+/// throughput of the `a3::api` engine across shard counts on a
+/// synthetic open-throttle stream. The unit budget is fixed at
+/// [`SHARD_SWEEP_UNITS`] total replicas, so simulated capacity is
+/// constant and the sweep isolates the host-side coordinator: one
+/// worker dispatching every batch vs N workers dispatching their own
+/// shards' batches in parallel. Contexts are spread round-robin so
+/// every shard owns traffic.
+pub fn run_shard_sweep(queries: usize, contexts: usize) -> Result<Table> {
+    let mut t = Table::new(
+        format!(
+            "Fig. 14c — sharded serving, {queries} synthetic queries over {contexts} contexts \
+             ({SHARD_SWEEP_UNITS} units total)"
+        ),
+        &["shards", "units/shard", "host qps (wall)", "sim Mq/s", "p99 latency", "completed"],
+    );
+    let (n, d) = (crate::PAPER_N, crate::PAPER_D);
+    let mut kv_rng = Rng::new(0xA3);
+    let kvs: Vec<KvPair> = (0..contexts)
+        .map(|_| KvPair::new(n, d, kv_rng.normal_vec(n * d, 1.0), kv_rng.normal_vec(n * d, 1.0)))
+        .collect();
+    for shards in SHARD_SWEEP {
+        let engine = EngineBuilder::new()
+            .units(SHARD_SWEEP_UNITS)
+            .shards(shards)
+            .dims(Dims::paper())
+            .max_batch(8)
+            .build()?;
+        let handles = kvs
+            .iter()
+            .map(|kv| engine.register_context(kv.clone()))
+            .collect::<std::result::Result<Vec<_>, _>>()?;
+        let mut q_rng = Rng::new(7);
+        let stream: Vec<_> = (0..queries)
+            .map(|i| (handles[i % handles.len()].clone(), q_rng.normal_vec(d, 1.0)))
+            .collect();
+        let (_tickets, report) = engine.run_stream(stream)?;
+        let snap = report.metrics.report();
+        t.row(vec![
+            shards.to_string(),
+            (SHARD_SWEEP_UNITS / shards).to_string(),
+            fmt_f(report.wall_qps(), 0),
+            fmt_f(report.sim_throughput_qps() / 1e6, 2),
+            format!("{:.1} µs", snap.p99_ns as f64 / 1e3),
+            snap.completed.to_string(),
+        ]);
+    }
+    Ok(t)
+}
+
 pub fn run(budget: EvalBudget) -> Result<(Table, Table)> {
     let data = collect(budget)?;
     let mut a = Table::new(
@@ -276,6 +334,17 @@ mod tests {
                     r.latency_s
                 );
             }
+        }
+    }
+
+    #[test]
+    fn shard_sweep_serves_every_query_at_every_shard_count() {
+        let t = run_shard_sweep(64, 4).unwrap();
+        assert_eq!(t.rows.len(), SHARD_SWEEP.len());
+        for (row, shards) in t.rows.iter().zip(SHARD_SWEEP) {
+            assert_eq!(row[0], shards.to_string());
+            assert_eq!(row[1], (SHARD_SWEEP_UNITS / shards).to_string());
+            assert_eq!(row[5], "64", "shards={shards} must serve the whole stream");
         }
     }
 

@@ -41,10 +41,11 @@
 //!   executables → on-demand execution (needs the off-by-default
 //!   `pjrt` cargo feature and the external `xla` bindings).
 //! * [`coordinator`] — the serving internals: query queues, batching,
-//!   multi-unit scheduling, metrics. Drive them through [`api`], not
+//!   multi-unit scheduling, metrics, and the sharded memory-accounted
+//!   [`coordinator::ContextStore`]. Drive them through [`api`], not
 //!   directly.
-//! * [`api`] — the public serving facade: `EngineBuilder` → `Engine` →
-//!   `ContextHandle`/`Ticket`, with the crate-wide typed
+//! * [`api`] — the public serving facade: `EngineBuilder` → sharded
+//!   `Engine` → `ContextHandle`/`Ticket`, with the crate-wide typed
 //!   [`api::A3Error`]. The one sanctioned way to serve queries.
 //! * [`experiments`] — one driver per paper table/figure, shared by the
 //!   CLI (`a3 <fig...>`) and the bench harnesses.

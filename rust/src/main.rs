@@ -30,7 +30,8 @@ COMMANDS (paper artifacts):
 
 COMMANDS (system):
     serve           run the serving engine on a synthetic stream
-                    [--units N] [--approx] [--queries N] [--n N]
+                    [--units N] [--shards N] [--memory-budget BYTES]
+                    [--approx] [--queries N] [--n N] [--contexts N]
                     [--seed N] [--max-batch N] [--qps F]
                     (unknown serve flags are an error)
     runtime-smoke   load + execute every AOT HLO artifact via PJRT
@@ -52,7 +53,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     // strict parsing: unknown flags are a usage error (never silently
     // ignored) and every value must parse
     let mut units = 1usize;
+    let mut shards = 1usize;
+    let mut memory_budget: Option<usize> = None;
     let mut queries = 4096usize;
+    let mut contexts = 1usize;
     let mut n = a3::PAPER_N;
     let mut seed = 2u64;
     let mut approx = false;
@@ -70,7 +74,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         // `--bogus` reports "unknown flag", not "needs a value"
         if !matches!(
             flag.as_str(),
-            "--units" | "--queries" | "--n" | "--seed" | "--max-batch" | "--qps"
+            "--units" | "--shards" | "--memory-budget" | "--queries" | "--contexts" | "--n"
+                | "--seed" | "--max-batch" | "--qps"
         ) {
             bail!("serve: unknown flag {flag:?} (see `a3 --help`)");
         }
@@ -83,7 +88,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         };
         match flag.as_str() {
             "--units" => units = value.parse().map_err(|e| invalid(&e))?,
+            "--shards" => shards = value.parse().map_err(|e| invalid(&e))?,
+            "--memory-budget" => memory_budget = Some(value.parse().map_err(|e| invalid(&e))?),
             "--queries" => queries = value.parse().map_err(|e| invalid(&e))?,
+            "--contexts" => contexts = value.parse().map_err(|e| invalid(&e))?,
             "--n" => n = value.parse().map_err(|e| invalid(&e))?,
             "--seed" => seed = value.parse().map_err(|e| invalid(&e))?,
             "--max-batch" => max_batch = Some(value.parse().map_err(|e| invalid(&e))?),
@@ -91,6 +99,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             _ => unreachable!("known flags matched above"),
         }
         i += 2;
+    }
+    if contexts == 0 {
+        bail!("serve: --contexts must be >= 1");
     }
 
     let backend = if approx {
@@ -101,8 +112,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let d = a3::PAPER_D;
     let mut builder = EngineBuilder::new()
         .units(units)
+        .shards(shards)
         .backend(backend)
         .dims(Dims::new(n, d));
+    if let Some(bytes) = memory_budget {
+        builder = builder.memory_budget(bytes);
+    }
     if let Some(b) = max_batch {
         builder = builder.max_batch(b);
     }
@@ -111,16 +126,31 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     }
     let engine = builder.build()?;
 
-    // comprehension time: stage one synthetic knowledge base
+    // comprehension time: stage the synthetic knowledge bases (spread
+    // across shards by the least-loaded-by-bytes placement)
     let mut rng = Rng::new(1);
-    let kv = KvPair::new(n, d, rng.normal_vec(n * d, 1.0), rng.normal_vec(n * d, 1.0));
-    let ctx = engine.register_context(kv)?;
+    let handles: Vec<_> = (0..contexts)
+        .map(|_| {
+            let kv = KvPair::new(n, d, rng.normal_vec(n * d, 1.0), rng.normal_vec(n * d, 1.0));
+            engine.register_context(kv)
+        })
+        .collect::<Result<_, _>>()?;
     println!(
-        "serving {queries} queries (n={n}, d={d}, seed={seed}) on {units} {} unit(s)...",
-        if approx { "approximate" } else { "base" }
+        "serving {queries} queries (n={n}, d={d}, seed={seed}) over {contexts} context(s) on \
+         {units} {} unit(s) across {shards} shard(s) ({} resident context bytes{})...",
+        if approx { "approximate" } else { "base" },
+        engine.resident_bytes(),
+        match engine.per_shard_memory_budget() {
+            Some(b) => format!(", budget {b} B/shard"),
+            None => String::new(),
+        }
     );
-    let report = engine.run_random(&ctx, queries, seed)?;
-    println!("host   : {}", report.summary());
+    let mut q_rng = Rng::new(seed);
+    let stream: Vec<_> = (0..queries)
+        .map(|i| (handles[i % handles.len()].clone(), q_rng.normal_vec(d, 1.0)))
+        .collect();
+    let (_tickets, report) = engine.run_stream(stream)?;
+    println!("host   : {} ({:.0} queries/s wall)", report.summary(), report.wall_qps());
     println!(
         "sim    : makespan {} cycles -> {:.0} queries/s on the accelerator",
         report.sim_makespan,
@@ -200,7 +230,8 @@ fn main() -> Result<()> {
         }
         "fig14" => {
             let (a, b) = fig14::run(budget)?;
-            println!("{a}\n{b}");
+            let c = fig14::run_shard_sweep(2048, 8)?;
+            println!("{a}\n{b}\n{c}");
         }
         "fig15" => {
             let (a, b) = fig15::run(budget)?;

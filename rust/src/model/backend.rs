@@ -197,26 +197,47 @@ impl AttentionBackend {
         sorted: Option<&SortedColumns>,
         queries: &[f32],
     ) -> Result<Vec<(Vec<f32>, Vec<usize>)>, A3Error> {
+        let mut results = Vec::new();
+        self.try_run_batch_into(kv, sorted, queries, &mut results)?;
+        Ok(results)
+    }
+
+    /// [`Self::try_run_batch`] into a caller-owned results vector:
+    /// `results` is cleared and refilled with one `(output, selected)`
+    /// pair per query, reusing the vector's capacity across calls.
+    /// This is the shard-local dispatch path — each shard worker in
+    /// the sharded engine keeps one results buffer alive for its whole
+    /// lifetime, so steady-state serving never reallocates the batch
+    /// container (per-query output/selection vectors are still
+    /// allocated: they are moved into the responses).
+    pub fn try_run_batch_into(
+        &self,
+        kv: &KvPair,
+        sorted: Option<&SortedColumns>,
+        queries: &[f32],
+        results: &mut Vec<(Vec<f32>, Vec<usize>)>,
+    ) -> Result<(), A3Error> {
         let d = kv.d;
         if queries.len() % d != 0 {
             return Err(A3Error::DimensionMismatch { expected: d, got: queries.len() });
         }
         let b = queries.len() / d;
+        results.clear();
+        results.resize_with(b, Default::default);
         if *self == AttentionBackend::Exact {
             let flat = kernel::parallel_attention_batch(kv, queries, 0);
-            return Ok(flat
-                .chunks_exact(d)
-                .map(|out| (out.to_vec(), (0..kv.n).collect()))
-                .collect());
+            for (slot, out) in results.iter_mut().zip(flat.chunks_exact(d)) {
+                *slot = (out.to_vec(), (0..kv.n).collect());
+            }
+            return Ok(());
         }
         // below this much streaming work, run on the calling thread
         let executors = if b * kv.n * d < kernel::PARALLEL_MIN_MACS { 1 } else { 0 };
-        let mut results: Vec<(Vec<f32>, Vec<usize>)> = vec![(Vec::new(), Vec::new()); b];
         if let Some((fmt, lut)) = self.quant_params() {
             // quantize K/V once per batch (the device does it once per
             // context at comprehension time — §III-C)
             let qkv = QuantKv::new(kv, fmt);
-            kernel::parallel_map_into(&mut results, executors, |i, slot| {
+            kernel::parallel_map_into(results, executors, |i, slot| {
                 let q = &queries[i * d..(i + 1) * d];
                 let mut out = vec![0.0f32; d];
                 kernel::with_workspace(|ws| {
@@ -224,7 +245,7 @@ impl AttentionBackend {
                 });
                 *slot = (out, (0..kv.n).collect());
             });
-            return Ok(results);
+            return Ok(());
         }
         let plan = self.plan(kv.n).expect("dense variants handled above");
         let owned;
@@ -239,7 +260,7 @@ impl AttentionBackend {
         } else {
             None
         };
-        kernel::parallel_map_into(&mut results, executors, |i, slot| {
+        kernel::parallel_map_into(results, executors, |i, slot| {
             let q = &queries[i * d..(i + 1) * d];
             engine::with_scratch(|scratch| {
                 let mut out = vec![0.0f32; d];
@@ -247,7 +268,7 @@ impl AttentionBackend {
                 *slot = (out, scratch.kept().to_vec());
             });
         });
-        Ok(results)
+        Ok(())
     }
 
     pub fn label(&self) -> String {
@@ -370,6 +391,35 @@ mod tests {
                 assert_eq!(batch[b].1, sel, "{} query {b}", backend.label());
             }
         }
+    }
+
+    #[test]
+    fn try_run_batch_into_reuses_the_results_buffer() {
+        let (kv, _) = problem(21, 48, 16);
+        let mut rng = Rng::new(22);
+        let queries = rng.normal_vec(6 * 16, 1.0);
+        let backend = AttentionBackend::conservative();
+        let sorted = SortedColumns::preprocess(&kv.key, kv.n, kv.d);
+        let mut results = Vec::new();
+        backend
+            .try_run_batch_into(&kv, Some(&sorted), &queries, &mut results)
+            .unwrap();
+        let want = backend.run_batch(&kv, Some(&sorted), &queries);
+        assert_eq!(results, want);
+        let cap = results.capacity();
+        // refill: same answers, the outer container is not reallocated
+        backend
+            .try_run_batch_into(&kv, Some(&sorted), &queries, &mut results)
+            .unwrap();
+        assert_eq!(results, want);
+        assert_eq!(results.capacity(), cap);
+        // a shorter batch shrinks the view, keeps the capacity
+        backend
+            .try_run_batch_into(&kv, Some(&sorted), &queries[..2 * 16], &mut results)
+            .unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results.capacity(), cap);
+        assert_eq!(results[..], want[..2]);
     }
 
     #[test]

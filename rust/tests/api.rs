@@ -14,49 +14,57 @@ fn kv(n: usize, d: usize, seed: u64) -> KvPair {
 
 #[test]
 fn facade_alone_drives_a_full_serving_session() {
-    // build → register → submit → recv → drain → evict, api-only
-    let engine = EngineBuilder::new()
-        .units(2)
-        .backend(AttentionBackend::conservative())
-        .dims(Dims::new(96, 32))
-        .max_batch(4)
-        .max_wait_ns(u64::MAX)
-        .build()
-        .unwrap();
-    let a = engine.register_context(kv(96, 32, 1)).unwrap();
-    let b = engine.register_context(kv(96, 32, 2)).unwrap();
-    assert_ne!(a.id(), b.id());
-    assert!(a.prewarmed() && b.prewarmed(), "selective units prewarm at registration");
+    // build → register → submit → recv → drain → evict, api-only, at
+    // every sanctioned shard count (the full session must behave
+    // identically whether one worker serves it or eight)
+    for shards in [1usize, 2, 8] {
+        let engine = EngineBuilder::new()
+            .units(2)
+            .shards(shards)
+            .backend(AttentionBackend::conservative())
+            .dims(Dims::new(96, 32))
+            .max_batch(4)
+            .max_wait_ns(u64::MAX)
+            .build()
+            .unwrap();
+        assert_eq!(engine.shard_count(), shards);
+        let a = engine.register_context(kv(96, 32, 1)).unwrap();
+        let b = engine.register_context(kv(96, 32, 2)).unwrap();
+        assert_ne!(a.id(), b.id());
+        assert!(a.prewarmed() && b.prewarmed(), "selective units prewarm at registration");
 
-    let mut rng = Rng::new(3);
-    let mut tickets: Vec<Ticket> = Vec::new();
-    for i in 0..10 {
-        let h = if i % 2 == 0 { &a } else { &b };
-        tickets.push(engine.submit(h, rng.normal_vec(32, 1.0)).unwrap());
-    }
-    let stats = engine.drain().unwrap();
-    assert_eq!(stats.metrics.completed, 10);
-    assert!(stats.sim_makespan > 0);
+        let mut rng = Rng::new(3);
+        let mut tickets: Vec<Ticket> = Vec::new();
+        for i in 0..10 {
+            let h = if i % 2 == 0 { &a } else { &b };
+            tickets.push(engine.submit(h, rng.normal_vec(32, 1.0)).unwrap());
+        }
+        let stats = engine.drain().unwrap();
+        assert_eq!(stats.metrics.completed, 10, "shards={shards}");
+        assert!(stats.sim_makespan > 0);
+        assert_eq!(stats.per_shard.len(), shards);
+        assert_eq!(stats.per_shard.iter().map(|s| s.completed).sum::<u64>(), 10);
 
-    let mut responses = Vec::new();
-    while let Some(r) = engine.try_recv().unwrap() {
-        responses.push(r);
-    }
-    assert_eq!(responses.len(), 10);
-    for t in &tickets {
-        let r = responses.iter().find(|r| r.id == t.id).expect("response per ticket");
-        assert_eq!(r.context, t.context);
-        assert_eq!(r.output.len(), 32);
-        assert!(r.selected_rows >= 1 && r.selected_rows <= 96);
-    }
+        let mut responses = Vec::new();
+        while let Some(r) = engine.try_recv().unwrap() {
+            responses.push(r);
+        }
+        assert_eq!(responses.len(), 10, "shards={shards}");
+        for t in &tickets {
+            let r = responses.iter().find(|r| r.id == t.id).expect("response per ticket");
+            assert_eq!(r.context, t.context);
+            assert_eq!(r.output.len(), 32);
+            assert!(r.selected_rows >= 1 && r.selected_rows <= 96);
+        }
 
-    // evict one context; the other keeps serving
-    engine.evict(&a).unwrap();
-    assert!(matches!(engine.submit(&a, vec![0.0; 32]), Err(A3Error::ContextEvicted(_))));
-    let t = engine.submit(&b, rng.normal_vec(32, 1.0)).unwrap();
-    engine.drain().unwrap();
-    let r = engine.recv_timeout(Duration::from_secs(5)).unwrap().expect("b still live");
-    assert_eq!(r.id, t.id);
+        // evict one context; the other keeps serving
+        engine.evict(&a).unwrap();
+        assert!(matches!(engine.submit(&a, vec![0.0; 32]), Err(A3Error::ContextEvicted(_))));
+        let t = engine.submit(&b, rng.normal_vec(32, 1.0)).unwrap();
+        engine.drain().unwrap();
+        let r = engine.recv_timeout(Duration::from_secs(5)).unwrap().expect("b still live");
+        assert_eq!(r.id, t.id);
+    }
 }
 
 #[test]
@@ -107,6 +115,34 @@ fn paced_run_stream_tracks_arrivals_in_sim_time() {
         report.sim_makespan
     );
     assert!(report.wall >= Duration::from_millis(1));
+}
+
+#[test]
+fn run_stream_backpressure_makes_progress_with_tiny_admission_window() {
+    // max_pending 2 spread over 4 contexts with max_batch 8 and an
+    // infinite wait: only open (never-closing) batches can be in
+    // flight, so admission can only reopen through the driver's forced
+    // flush — the condvar-parked wait must keep making progress, not
+    // sleep forever
+    let engine = EngineBuilder::new()
+        .dims(Dims::new(16, 8))
+        .max_batch(8)
+        .max_wait_ns(u64::MAX)
+        .max_pending(2)
+        .shards(2)
+        .build()
+        .unwrap();
+    let handles: Vec<_> = (0..4)
+        .map(|i| engine.register_context(kv(16, 8, 30 + i)).unwrap())
+        .collect();
+    let mut rng = Rng::new(35);
+    let stream: Vec<_> = (0..24)
+        .map(|i| (handles[i % handles.len()].clone(), rng.normal_vec(8, 1.0)))
+        .collect();
+    let (tickets, report) = engine.run_stream(stream).unwrap();
+    assert_eq!(tickets.len(), 24);
+    assert_eq!(report.metrics.completed, 24);
+    assert_eq!(report.responses.len(), 24);
 }
 
 #[test]

@@ -120,6 +120,70 @@ fn scheduler_rejects_malformed_dispatch_with_typed_error_not_wrong_answer() {
 }
 
 #[test]
+fn memory_budget_fill_mid_stream_evicts_lru_but_serves_admitted_queries() {
+    use a3::api::{A3Error, Dims, EngineBuilder, KvPair};
+    use std::time::Duration;
+    let (n, d) = (32usize, 16usize);
+    let mut rng = a3::testutil::Rng::new(3);
+    let mut kv =
+        || KvPair::new(n, d, rng.normal_vec(n * d, 1.0), rng.normal_vec(n * d, 1.0));
+    // dense engine: a context charges exactly its two f32 matrices;
+    // the budget fits two contexts and not one byte more
+    let ctx_bytes = 2 * n * d * std::mem::size_of::<f32>();
+    let engine = EngineBuilder::new()
+        .dims(Dims::new(n, d))
+        .max_batch(8)
+        .max_wait_ns(u64::MAX)
+        .memory_budget(2 * ctx_bytes)
+        .build()
+        .unwrap();
+    let a = engine.register_context(kv()).unwrap();
+    let b = engine.register_context(kv()).unwrap();
+    assert_eq!(engine.resident_bytes(), 2 * ctx_bytes);
+    // two queries admitted against `a`, sitting in an open batch
+    let mut qrng = a3::testutil::Rng::new(4);
+    let t0 = engine.submit(&a, qrng.normal_vec(d, 1.0)).unwrap();
+    let t1 = engine.submit(&a, qrng.normal_vec(d, 1.0)).unwrap();
+    // mid-stream the budget fills: registering `c` overflows, so the
+    // LRU context (`a`) is evicted — its admitted queries MUST be
+    // served first (the evict() contract), never dropped
+    let c = engine.register_context(kv()).unwrap();
+    let mut got = Vec::new();
+    while got.len() < 2 {
+        if let Some(r) = engine.recv_timeout(Duration::from_secs(5)).unwrap() {
+            got.push(r.id);
+        }
+    }
+    got.sort_unstable();
+    assert_eq!(got, vec![t0.id, t1.id], "in-flight work survived the LRU eviction");
+    // the eviction is typed for later submits (the worker marks the
+    // registry before it serves the victim's tail, so seeing the
+    // responses implies the eviction is visible)
+    assert!(matches!(engine.submit(&a, vec![0.0; 16]), Err(A3Error::ContextEvicted(_))));
+    // survivors keep serving
+    engine.submit(&b, qrng.normal_vec(d, 1.0)).unwrap();
+    engine.submit(&c, qrng.normal_vec(d, 1.0)).unwrap();
+    let stats = engine.drain().unwrap();
+    assert_eq!(stats.metrics.completed, 4);
+    // the drain barrier also proves the budget held: the victim's
+    // bytes are released, b + c stay resident
+    assert_eq!(engine.resident_bytes(), 2 * ctx_bytes);
+    // a context that could never fit its shard's share is rejected up
+    // front with a typed error instead of wiping the whole shard
+    let mut big_rng = a3::testutil::Rng::new(5);
+    let huge = KvPair::new(
+        8 * n,
+        d,
+        big_rng.normal_vec(8 * n * d, 1.0),
+        big_rng.normal_vec(8 * n * d, 1.0),
+    );
+    assert!(matches!(
+        engine.register_context(huge),
+        Err(A3Error::MemoryBudget { .. })
+    ));
+}
+
+#[test]
 fn engine_surfaces_typed_errors_for_bad_clients() {
     use a3::api::{A3Error, AttentionBackend, Dims, EngineBuilder};
     // invalid configuration is rejected at build time

@@ -1,0 +1,275 @@
+//! Cross-shard behavior of the sharded `a3::api` engine, black-box:
+//! context→shard affinity stability, the deterministic drain barrier,
+//! metrics merged over the per-shard windows, and the `shards = 1`
+//! identity with the classic single-worker engine.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use a3::api::{A3Error, AttentionBackend, Dims, Engine, EngineBuilder, KvPair};
+use a3::testutil::Rng;
+
+fn kv(n: usize, d: usize, seed: u64) -> KvPair {
+    let mut rng = Rng::new(seed);
+    KvPair::new(n, d, rng.normal_vec(n * d, 1.0), rng.normal_vec(n * d, 1.0))
+}
+
+fn build(shards: usize, units: usize, backend: AttentionBackend, n: usize, d: usize) -> Engine {
+    EngineBuilder::new()
+        .shards(shards)
+        .units(units)
+        .backend(backend)
+        .dims(Dims::new(n, d))
+        .max_batch(4)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn served_outputs_bit_identical_across_shard_counts() {
+    // the same fixed-seed stream over the same contexts must produce
+    // bit-identical outputs whether one worker serves it or eight —
+    // sharding moves work, it never changes answers (and shards=1 is
+    // the single-worker engine, so this pins the refactor identity)
+    let (n, d, contexts, queries) = (96usize, 32usize, 4usize, 48usize);
+    let serve = |shards: usize| -> HashMap<u64, (Vec<f32>, usize)> {
+        let engine = build(shards, 2, AttentionBackend::conservative(), n, d);
+        let handles: Vec<_> = (0..contexts)
+            .map(|i| engine.register_context(kv(n, d, i as u64)).unwrap())
+            .collect();
+        let mut rng = Rng::new(99);
+        let stream: Vec<_> = (0..queries)
+            .map(|i| (handles[i % contexts].clone(), rng.normal_vec(d, 1.0)))
+            .collect();
+        let (tickets, report) = engine.run_stream(stream).unwrap();
+        assert_eq!(tickets.len(), queries);
+        assert_eq!(report.responses.len(), queries);
+        report
+            .responses
+            .iter()
+            .map(|r| (r.id, (r.output.clone(), r.selected_rows)))
+            .collect()
+    };
+    let one = serve(1);
+    for shards in [2usize, 8] {
+        let many = serve(shards);
+        assert_eq!(many.len(), one.len());
+        for (id, (out, sel)) in &one {
+            let (m_out, m_sel) = &many[id];
+            assert_eq!(m_out, out, "shards={shards} query {id}");
+            assert_eq!(m_sel, sel, "shards={shards} query {id}");
+        }
+    }
+}
+
+#[test]
+fn shards_one_run_is_deterministic_under_a_fixed_seed() {
+    // two fresh shards=1 engines serving the same seeded random
+    // workload produce identical reports: same responses in the same
+    // completion order, same makespan, same metrics counters
+    let run = || {
+        // infinite batching wait: batch boundaries close purely by
+        // count, so the unit assignment (and with it the simulated
+        // timeline) cannot depend on host scheduling jitter
+        let engine = EngineBuilder::new()
+            .units(2)
+            .backend(AttentionBackend::aggressive())
+            .dims(Dims::new(128, 64))
+            .max_batch(4)
+            .max_wait_ns(u64::MAX)
+            .build()
+            .unwrap();
+        let ctx = engine.register_context(kv(128, 64, 5)).unwrap();
+        engine.run_random(&ctx, 40, 17).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.metrics.completed, b.metrics.completed);
+    assert_eq!(a.sim_makespan, b.sim_makespan);
+    assert_eq!(a.responses.len(), b.responses.len());
+    for (ra, rb) in a.responses.iter().zip(&b.responses) {
+        assert_eq!(ra.id, rb.id, "completion order must be deterministic");
+        assert_eq!(ra.output, rb.output);
+        assert_eq!(ra.selected_rows, rb.selected_rows);
+        assert_eq!(ra.sim_cycles, rb.sim_cycles);
+        assert_eq!(ra.completed_ns, rb.completed_ns);
+    }
+}
+
+#[test]
+fn context_shard_affinity_is_stable_and_batches_never_cross_shards() {
+    let engine = build(4, 4, AttentionBackend::Exact, 32, 16);
+    let handles: Vec<_> = (0..3)
+        .map(|i| engine.register_context(kv(32, 16, 10 + i)).unwrap())
+        .collect();
+    let homes: Vec<usize> = handles.iter().map(|h| engine.home_shard(h).unwrap()).collect();
+    let mut rng = Rng::new(11);
+    for round in 0..10 {
+        for (h, &home) in handles.iter().zip(&homes) {
+            engine.submit(h, rng.normal_vec(16, 1.0)).unwrap();
+            // affinity never moves, submit after submit
+            assert_eq!(engine.home_shard(h).unwrap(), home, "round {round}");
+        }
+    }
+    let stats = engine.drain().unwrap();
+    assert_eq!(stats.metrics.completed, 30);
+    // every query landed on its context's home shard: per-shard
+    // completion counts equal the per-home query counts exactly
+    let mut expected = vec![0u64; engine.shard_count()];
+    for &home in &homes {
+        expected[home] += 10;
+    }
+    let got: Vec<u64> = stats.per_shard.iter().map(|s| s.completed).collect();
+    assert_eq!(got, expected, "homes were {homes:?}");
+}
+
+#[test]
+fn drain_barrier_flushes_every_shard_and_merges_the_windows() {
+    // open batches on all 8 shards (max_batch 8, infinite wait): only
+    // the all-shard drain barrier can force them out
+    let engine = EngineBuilder::new()
+        .shards(8)
+        .dims(Dims::new(32, 16))
+        .max_batch(8)
+        .max_wait_ns(u64::MAX)
+        .build()
+        .unwrap();
+    let handles: Vec<_> = (0..8)
+        .map(|i| engine.register_context(kv(32, 16, 20 + i)).unwrap())
+        .collect();
+    // least-loaded placement spreads the equal contexts one per shard
+    let mut homes: Vec<usize> = handles.iter().map(|h| engine.home_shard(h).unwrap()).collect();
+    homes.sort_unstable();
+    assert_eq!(homes, (0..8).collect::<Vec<_>>());
+    let mut rng = Rng::new(30);
+    let mut tickets = Vec::new();
+    for h in &handles {
+        for _ in 0..3 {
+            tickets.push(engine.submit(h, rng.normal_vec(16, 1.0)).unwrap());
+        }
+    }
+    let stats = engine.drain().unwrap();
+    // merged window covers every shard's 3 tail queries
+    assert_eq!(stats.metrics.completed, 24);
+    assert_eq!(stats.per_shard.len(), 8);
+    for s in &stats.per_shard {
+        assert_eq!(s.completed, 3, "shard {} window", s.shard);
+        assert!(s.sim_makespan > 0, "shard {} never dispatched", s.shard);
+    }
+    // the merged makespan is the max over shards, not a sum or average
+    let max = stats.per_shard.iter().map(|s| s.sim_makespan).max().unwrap();
+    assert_eq!(stats.sim_makespan, max);
+    // barrier ordering: after drain returns, every response is already
+    // in the receive queue — no waiting, no timeouts
+    let mut got = Vec::new();
+    while let Some(r) = engine.try_recv().unwrap() {
+        got.push(r.id);
+    }
+    got.sort_unstable();
+    let mut want: Vec<u64> = tickets.iter().map(|t| t.id).collect();
+    want.sort_unstable();
+    assert_eq!(got, want);
+    // the windows were taken: a second drain is empty but keeps the
+    // engine-lifetime makespan
+    let again = engine.drain().unwrap();
+    assert_eq!(again.metrics.completed, 0);
+    assert_eq!(again.sim_makespan, stats.sim_makespan);
+}
+
+#[test]
+fn merged_percentiles_come_from_the_merged_sample_set() {
+    // serve wildly unequal per-shard loads; the merged p99 must be a
+    // sample that actually occurred, and merged counters must be sums
+    let engine = EngineBuilder::new()
+        .shards(2)
+        .dims(Dims::new(64, 16))
+        .max_batch(2)
+        .build()
+        .unwrap();
+    let a = engine.register_context(kv(64, 16, 40)).unwrap();
+    let b = engine.register_context(kv(64, 16, 41)).unwrap();
+    assert_ne!(engine.home_shard(&a).unwrap(), engine.home_shard(&b).unwrap());
+    let mut rng = Rng::new(42);
+    for _ in 0..30 {
+        engine.submit(&a, rng.normal_vec(16, 1.0)).unwrap();
+    }
+    for _ in 0..2 {
+        engine.submit(&b, rng.normal_vec(16, 1.0)).unwrap();
+    }
+    let stats = engine.drain().unwrap();
+    assert_eq!(stats.metrics.completed, 32);
+    let sum: u64 = stats.per_shard.iter().map(|s| s.completed).sum();
+    assert_eq!(sum, 32);
+    let report = stats.metrics.report();
+    assert_eq!(report.completed, 32);
+    // percentile ordering holds over the merged population
+    assert!(report.p50_ns <= report.p95_ns && report.p95_ns <= report.p99_ns);
+    while engine.try_recv().unwrap().is_some() {}
+}
+
+#[test]
+fn reused_engine_rebases_each_run_against_its_home_shards_clock() {
+    // shard clocks are independent: after a heavy run on shard A, a
+    // run on shard B must report B's own cycles and latencies — not
+    // vanish (makespan 0, all-zero latencies) under A's larger
+    // baseline
+    let engine = EngineBuilder::new()
+        .shards(2)
+        .dims(Dims::new(64, 16))
+        .max_batch(4)
+        .build()
+        .unwrap();
+    let a = engine.register_context(kv(64, 16, 70)).unwrap();
+    let b = engine.register_context(kv(64, 16, 71)).unwrap();
+    assert_ne!(engine.home_shard(&a).unwrap(), engine.home_shard(&b).unwrap());
+    // grow shard A's clock well past anything the B run will need
+    engine.run_random(&a, 64, 1).unwrap();
+    let report = engine.run_random(&b, 16, 2).unwrap();
+    assert_eq!(report.metrics.completed, 16);
+    assert!(report.sim_makespan > 0, "run must be charged on its own shard's clock");
+    assert!(report.sim_throughput_qps() > 0.0);
+}
+
+#[test]
+fn foreign_and_evicted_handles_get_typed_shard_errors() {
+    let e1 = build(2, 1, AttentionBackend::Exact, 16, 8);
+    let e2 = build(2, 1, AttentionBackend::Exact, 16, 8);
+    let h1 = e1.register_context(kv(16, 8, 50)).unwrap();
+    assert!(matches!(e2.home_shard(&h1), Err(A3Error::UnknownContext(_))));
+    let home = e1.home_shard(&h1).unwrap();
+    assert!(home < e1.shard_count());
+    e1.evict(&h1).unwrap();
+    assert!(matches!(e1.home_shard(&h1), Err(A3Error::ContextEvicted(_))));
+}
+
+#[test]
+fn eviction_on_a_busy_shard_still_serves_admitted_queries() {
+    // the PR 3 evict contract survives sharding: queries admitted on
+    // the home shard before the evict command are dispatched, and the
+    // other shards are untouched
+    let engine = EngineBuilder::new()
+        .shards(2)
+        .dims(Dims::new(32, 16))
+        .max_batch(8)
+        .max_wait_ns(u64::MAX)
+        .build()
+        .unwrap();
+    let a = engine.register_context(kv(32, 16, 60)).unwrap();
+    let b = engine.register_context(kv(32, 16, 61)).unwrap();
+    let mut rng = Rng::new(62);
+    let t0 = engine.submit(&a, rng.normal_vec(16, 1.0)).unwrap();
+    let t1 = engine.submit(&b, rng.normal_vec(16, 1.0)).unwrap();
+    engine.evict(&a).unwrap();
+    let mut got = Vec::new();
+    while got.is_empty() {
+        if let Some(r) = engine.recv_timeout(Duration::from_secs(5)).unwrap() {
+            got.push(r.id);
+        }
+    }
+    assert_eq!(got, vec![t0.id], "evicted context's admitted query served");
+    assert!(matches!(engine.submit(&a, vec![0.0; 16]), Err(A3Error::ContextEvicted(_))));
+    // the other shard's open batch is untouched until drain
+    engine.drain().unwrap();
+    let r = engine.try_recv().unwrap().expect("b's query after the barrier");
+    assert_eq!(r.id, t1.id);
+}

@@ -1,0 +1,137 @@
+//! End-to-end **remote** QA session over the `a3::net` TCP subsystem.
+//!
+//! One connection (the "librarian") registers synthetic story
+//! contexts over the wire; a second connection on its own thread (the
+//! "questioner") streams queries against those shared context ids and
+//! assembles a client-observed `ServeReport`. Typed engine errors are
+//! shown crossing the wire (an evicted context stays a typed
+//! `ContextEvicted` on the remote side).
+//!
+//! By default the example self-hosts a server on an ephemeral
+//! loopback port. Set `A3_REMOTE=HOST:PORT` to target an external
+//! `a3 serve --listen` process instead (CI does this), and
+//! `A3_REMOTE_SHUTDOWN=1` to send that server a Shutdown frame at the
+//! end.
+//!
+//! ```bash
+//! cargo run --release --example remote_qa
+//! # or against a real server:
+//! cargo run --release -- serve --listen 127.0.0.1:4545 &
+//! A3_REMOTE=127.0.0.1:4545 A3_REMOTE_SHUTDOWN=1 \
+//!     cargo run --release --example remote_qa
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use a3::api::{A3Error, AttentionBackend, Dims, EngineBuilder, KvPair, Metrics, ServeReport};
+use a3::net::{NetClient, NetError, NetServer, RemoteContext};
+use a3::testutil::Rng;
+
+/// Synthetic story shape: 50 sentences, the shared d=64 embedding.
+const N: usize = 50;
+const D: usize = 64;
+const STORIES: usize = 8;
+const QUERIES: usize = 64;
+
+fn main() -> anyhow::Result<()> {
+    // target an external server, or self-host one for the demo
+    let (addr, _local_server) = match std::env::var("A3_REMOTE") {
+        Ok(addr) => {
+            println!("connecting to external server {addr}");
+            (addr, None)
+        }
+        Err(_) => {
+            let engine = EngineBuilder::new()
+                .units(2)
+                .shards(2)
+                .backend(AttentionBackend::conservative())
+                .dims(Dims::new(N, D))
+                .max_batch(4)
+                .build()?;
+            let server = NetServer::bind(Arc::new(engine), "127.0.0.1:0")?;
+            let addr = server.local_addr().to_string();
+            println!(
+                "self-hosted server on {addr} (set A3_REMOTE=HOST:PORT to target an \
+                 `a3 serve --listen` process)"
+            );
+            (addr, Some(server))
+        }
+    };
+
+    // comprehension time, over the wire: the librarian connection
+    // registers every story as a K/V context
+    let mut librarian = NetClient::connect(addr.as_str())?;
+    let mut rng = Rng::new(0x0A);
+    let mut story_ids = Vec::with_capacity(STORIES);
+    for _ in 0..STORIES {
+        let kv = KvPair::new(N, D, rng.normal_vec(N * D, 1.0), rng.normal_vec(N * D, 1.0));
+        story_ids.push(librarian.register_context(&kv)?.id());
+    }
+    println!("registered {STORIES} story contexts over the wire: ids {story_ids:?}");
+
+    // the questioner: a second connection on its own thread, streaming
+    // pipelined queries against the *shared* context ids
+    let q_addr = addr.clone();
+    let q_ids = story_ids.clone();
+    let questioner = std::thread::spawn(move || -> Result<ServeReport, NetError> {
+        let mut client = NetClient::connect(q_addr.as_str())?;
+        let mut rng = Rng::new(0x0B);
+        let t0 = Instant::now();
+        let mut submitted: HashMap<u64, u64> = HashMap::with_capacity(QUERIES);
+        for i in 0..QUERIES {
+            let ctx = RemoteContext::from_id(q_ids[i % q_ids.len()]);
+            let submitted_ns = t0.elapsed().as_nanos() as u64;
+            let req = client.submit(ctx, &rng.normal_vec(D, 1.0))?;
+            submitted.insert(req, submitted_ns);
+        }
+        let stats = client.drain()?; // barrier: tail batches dispatch
+        let mut metrics = Metrics::default();
+        let mut responses = Vec::with_capacity(QUERIES);
+        while responses.len() < QUERIES {
+            let r = client.recv()?;
+            let now_ns = t0.elapsed().as_nanos() as u64;
+            let submitted_ns = submitted.remove(&r.id).unwrap_or(now_ns);
+            metrics.record(now_ns - submitted_ns, now_ns, r.selected_rows, r.sim_cycles);
+            responses.push(r);
+        }
+        Ok(ServeReport {
+            metrics,
+            sim_makespan: stats.sim_makespan,
+            wall: t0.elapsed(),
+            responses,
+        })
+    });
+    let report = questioner.join().expect("questioner thread")?;
+    anyhow::ensure!(report.responses.len() == QUERIES, "responses lost over the wire");
+    anyhow::ensure!(
+        report
+            .responses
+            .iter()
+            .all(|r| r.output.len() == D && r.output.iter().all(|x| x.is_finite())),
+        "malformed outputs over the wire"
+    );
+    println!(
+        "remote QA session: {} ({:.0} queries/s wall over TCP)",
+        report.summary(),
+        report.wall_qps()
+    );
+    println!("sim makespan {} cycles", report.sim_makespan);
+
+    // typed errors cross the wire: evict a story, then submit to it
+    librarian.evict(RemoteContext::from_id(story_ids[0]))?;
+    let _req = librarian.submit(RemoteContext::from_id(story_ids[0]), &[0.0; D])?;
+    match librarian.recv() {
+        Err(NetError::Remote(A3Error::ContextEvicted(id))) => {
+            println!("typed eviction error over the wire for context {id}: OK");
+        }
+        other => anyhow::bail!("expected a typed ContextEvicted, got {other:?}"),
+    }
+
+    if std::env::var("A3_REMOTE_SHUTDOWN").is_ok() {
+        librarian.shutdown()?;
+        println!("sent shutdown to {addr}");
+    }
+    Ok(())
+}

@@ -63,6 +63,12 @@ fn main() {
     let sweep = fig14::run_shard_sweep(2048, 8).expect("shard sweep");
     println!("{sweep}");
 
+    // the network front door vs the in-process driver on the same
+    // stream (Fig. 14d): socket + codec overhead in isolation
+    println!("-- socket vs in-process serving (a3::net) --");
+    let socket = fig14::run_socket_overhead(1024, 4).expect("socket overhead");
+    println!("{socket}");
+
     println!("-- cycle simulator throughput --");
     let dims = Dims::paper();
     let r = bench("BasePipeline 1k queries", budget(), || {

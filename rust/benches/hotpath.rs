@@ -9,7 +9,7 @@
 //! the in-run baseline, and the batch lines show query tiling and the
 //! thread-pool executor amortizing K/V streaming across a batch.
 
-use std::sync::LazyLock;
+use std::sync::{Arc, LazyLock};
 
 use a3::approx::{
     approximate_attention, greedy_select, greedy_select_scratch, postscore_select,
@@ -239,4 +239,26 @@ fn main() {
             while sharded.try_recv().expect("recv").is_some() {}
         }));
     }
+
+    // the network front door end to end over loopback TCP: a
+    // pipelined batch of 8 through the wire codec, the connection
+    // handler, the engine, and the response router — compare against
+    // the in-process "api engine submit+recv batch-8" line above for
+    // the socket + codec tax.
+    let net_engine = a3::api::EngineBuilder::new()
+        .dims(Dims::paper())
+        .max_batch(8)
+        .build()
+        .expect("engine");
+    let net_server = a3::net::NetServer::bind(Arc::new(net_engine), "127.0.0.1:0").expect("bind");
+    let mut net_client = a3::net::NetClient::connect(net_server.local_addr()).expect("connect");
+    let net_ctx = net_client.register_context(&kv).expect("register");
+    println!("{}", bench("net serve loopback submit+recv batch-8", b, || {
+        for qq in batch8.chunks_exact(d) {
+            net_client.submit(net_ctx, qq).expect("submit");
+        }
+        for _ in 0..8 {
+            net_client.recv().expect("recv");
+        }
+    }));
 }

@@ -330,23 +330,46 @@ pub struct ServeReport {
     pub responses: Vec<Response>,
 }
 
+/// Guarded division: `0.0` whenever the denominator is zero, negative,
+/// or non-finite, or the quotient would overflow to `inf`/`NaN`. The
+/// generic rule behind [`per_second`] and the dimensionless ratio
+/// columns (speedup-vs-baseline) of the Fig. 14 tables.
+pub fn safe_div(numerator: f64, denominator: f64) -> f64 {
+    if !denominator.is_finite() || denominator <= 0.0 {
+        return 0.0;
+    }
+    let q = numerator / denominator;
+    if q.is_finite() {
+        q
+    } else {
+        0.0
+    }
+}
+
+/// `count / seconds` with a guarded denominator: tiny runs can finish
+/// in zero (or denormal-small, or — through upstream division — even
+/// non-finite) measured time, and a throughput column must print `0.0`
+/// for them, never `inf`/`NaN`. Every QPS figure on the serving and
+/// Fig. 14 reporting paths funnels through this rule.
+pub fn per_second(count: f64, seconds: f64) -> f64 {
+    safe_div(count, seconds)
+}
+
 impl ServeReport {
-    /// Accelerator-side throughput (queries/s of simulated time).
+    /// Accelerator-side throughput (queries/s of simulated time);
+    /// `0.0` on an empty/zero-cycle run, never `inf`/`NaN`.
     pub fn sim_throughput_qps(&self) -> f64 {
-        if self.sim_makespan == 0 {
-            return 0.0;
-        }
-        self.metrics.completed as f64 / crate::sim::cycles_to_seconds(self.sim_makespan)
+        per_second(
+            self.metrics.completed as f64,
+            crate::sim::cycles_to_seconds(self.sim_makespan),
+        )
     }
 
     /// Host wall-clock aggregate throughput (queries/s of real time
     /// over the whole run) — the number the shard sweep compares.
+    /// `0.0` on a zero/near-zero makespan, never `inf`/`NaN`.
     pub fn wall_qps(&self) -> f64 {
-        let secs = self.wall.as_secs_f64();
-        if secs == 0.0 {
-            return 0.0;
-        }
-        self.metrics.completed as f64 / secs
+        per_second(self.metrics.completed as f64, self.wall.as_secs_f64())
     }
 
     /// Sort-once latency/throughput snapshot of the host metrics.
@@ -398,11 +421,40 @@ fn record_response(metrics: &mut Metrics, r: &Response, completed_ns: u64, arriv
 /// evicted (so errors can distinguish "evicted" from "never existed"
 /// without guessing from id ordering). Shard workers update it when
 /// the memory budget retires a context.
+/// A live context's registry entry: its stable home shard plus the
+/// (cheaply clonable) context itself. Keeping the context here — not
+/// only in the [`ContextStore`] — matters for correctness: the store
+/// insert happens later, on the shard worker, so a
+/// registry-synchronous lookup must not depend on it (a just-
+/// registered context would otherwise race to "evicted").
+struct LiveContext {
+    shard: usize,
+    ctx: KvContext,
+}
+
 #[derive(Default)]
 struct Registry {
-    /// context id → home shard.
-    live: HashMap<ContextId, usize>,
+    live: HashMap<ContextId, LiveContext>,
     evicted: HashSet<ContextId>,
+}
+
+impl Registry {
+    /// The one resolution rule for a context id: its live entry, else
+    /// the typed evicted-vs-never-existed distinction. Every path
+    /// that answers for a context id (submit routing, `home_shard`,
+    /// the network front door's `lookup_context`) goes through here
+    /// so the semantics can never diverge.
+    fn resolve(&self, ctx: ContextId) -> Result<&LiveContext, A3Error> {
+        match self.live.get(&ctx) {
+            Some(live) => Ok(live),
+            None if self.evicted.contains(&ctx) => Err(A3Error::ContextEvicted(ctx)),
+            None => Err(A3Error::UnknownContext(ctx)),
+        }
+    }
+
+    fn resolve_shard(&self, ctx: ContextId) -> Result<usize, A3Error> {
+        self.resolve(ctx).map(|live| live.shard)
+    }
 }
 
 /// State shared between client threads and the shard workers.
@@ -413,6 +465,18 @@ struct Shared {
     /// `poison`); lets stream drivers terminate instead of waiting for
     /// responses that will never come.
     dropped: AtomicUsize,
+    /// The dropped queries themselves (id + typed error), for
+    /// consumers that track individual tickets: the network front
+    /// door's router answers each stranded remote ticket with an
+    /// error frame instead of letting the client hang. Bounded by
+    /// `dropped_cap` — oldest entries discarded — so an engine whose
+    /// notices nobody drains (in-process drivers only need the
+    /// counter above) cannot grow without limit.
+    dropped_queries: Mutex<Vec<(QueryId, A3Error)>>,
+    /// = `max_pending`: at most that many queries can be in flight,
+    /// so a consumer that drains on every poll can never lose a
+    /// notice it still has a route for.
+    dropped_cap: usize,
     /// First dispatch-side error, handed to the next receiver.
     poison: Mutex<Option<A3Error>>,
     /// Admission wakeup: shard workers notify after every dispatch
@@ -420,6 +484,12 @@ struct Shared {
     /// condvar instead of sleep-polling.
     admission_gate: Mutex<()>,
     admission: Condvar,
+    /// Shard workers still running. Each worker decrements this from a
+    /// scope guard on *any* exit — clean shutdown or panic — and
+    /// notifies the admission condvar, so a producer parked on
+    /// admission backpressure observes a dead worker as
+    /// [`A3Error::EngineStopped`] instead of waiting forever.
+    alive_workers: AtomicUsize,
 }
 
 /// The serving engine: the one sanctioned way to drive the system.
@@ -428,7 +498,12 @@ struct Shared {
 pub struct Engine {
     /// One command queue per shard; `None` once stopped.
     cmd_tx: Option<Vec<mpsc::Sender<Cmd>>>,
-    resp_rx: mpsc::Receiver<Response>,
+    /// Behind a mutex so the engine is `Sync`: the network front door
+    /// ([`crate::net::server`]) shares one engine across connection
+    /// handler threads via `Arc<Engine>`, with a single router thread
+    /// consuming responses. The lock is uncontended on the classic
+    /// single-consumer paths.
+    resp_rx: Mutex<mpsc::Receiver<Response>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     shared: Arc<Shared>,
     /// Engine identity handed to [`ContextHandle`]s (pointer equality).
@@ -466,9 +541,12 @@ impl Engine {
         let shared = Arc::new(Shared {
             inflight: AtomicUsize::new(0),
             dropped: AtomicUsize::new(0),
+            dropped_queries: Mutex::new(Vec::new()),
+            dropped_cap: max_pending,
             poison: Mutex::new(None),
             admission_gate: Mutex::new(()),
             admission: Condvar::new(),
+            alive_workers: AtomicUsize::new(shards),
         });
         let epoch = Instant::now();
         let mut cmd_txs = Vec::with_capacity(shards);
@@ -505,7 +583,7 @@ impl Engine {
         }
         Ok(Engine {
             cmd_tx: Some(cmd_txs),
-            resp_rx,
+            resp_rx: Mutex::new(resp_rx),
             workers,
             shared,
             token: Arc::new(()),
@@ -551,14 +629,7 @@ impl Engine {
     /// once the context is gone.
     pub fn home_shard(&self, handle: &ContextHandle) -> Result<usize, A3Error> {
         self.check_handle(handle)?;
-        let reg = self.registry.lock().unwrap();
-        match reg.live.get(&handle.id()) {
-            Some(&shard) => Ok(shard),
-            None if reg.evicted.contains(&handle.id()) => {
-                Err(A3Error::ContextEvicted(handle.id()))
-            }
-            None => Err(A3Error::UnknownContext(handle.id())),
-        }
+        self.registry.lock().unwrap().resolve_shard(handle.id())
     }
 
     /// Surface (and consume) the first dispatch-side error, if any.
@@ -595,7 +666,11 @@ impl Engine {
             }
         }
         let shard = self.store.place(bytes);
-        self.registry.lock().unwrap().live.insert(id, shard);
+        self.registry
+            .lock()
+            .unwrap()
+            .live
+            .insert(id, LiveContext { shard, ctx: ctx.clone() });
         let send = self.shard_tx(shard).and_then(|tx| {
             tx.send(Cmd::Register(ctx.clone())).map_err(|_| A3Error::EngineStopped)
         });
@@ -606,6 +681,31 @@ impl Engine {
             return Err(e);
         }
         Ok(ContextHandle { ctx, engine: Arc::clone(&self.token) })
+    }
+
+    /// Resolve a live context id to a fresh [`ContextHandle`] bound to
+    /// this engine — the hook the network front door
+    /// ([`crate::net::server`]) uses to turn a wire context id back
+    /// into a submittable handle without holding per-connection handle
+    /// maps. Resolved from the registry alone (synchronous with
+    /// registration), never from the store — the store insert happens
+    /// later on the shard worker, and a just-registered context must
+    /// not race to "evicted". Errors exactly like a submit would:
+    /// typed evicted vs unknown.
+    pub fn lookup_context(&self, id: ContextId) -> Result<ContextHandle, A3Error> {
+        let ctx = self.registry.lock().unwrap().resolve(id)?.ctx.clone();
+        Ok(ContextHandle { ctx, engine: Arc::clone(&self.token) })
+    }
+
+    /// The engine's unit design point (registered contexts must match
+    /// its `d`).
+    pub fn dims(&self) -> Dims {
+        self.dims
+    }
+
+    /// The configured admission limit ([`EngineBuilder::max_pending`]).
+    pub fn max_pending(&self) -> usize {
+        self.max_pending
     }
 
     /// A handle is only valid on the engine that issued it.
@@ -640,11 +740,11 @@ impl Engine {
         self.check_handle(handle)?;
         let shard = {
             let mut reg = self.registry.lock().unwrap();
-            let Some(shard) = reg.live.remove(&handle.id()) else {
+            let Some(live) = reg.live.remove(&handle.id()) else {
                 return Err(A3Error::ContextEvicted(handle.id()));
             };
             reg.evicted.insert(handle.id());
-            shard
+            live.shard
         };
         self.shard_tx(shard)?
             .send(Cmd::Evict(handle.id()))
@@ -656,6 +756,14 @@ impl Engine {
         self.shared.inflight.load(Ordering::Acquire)
     }
 
+    /// Drain the per-query dispatch-failure notices (query id + the
+    /// typed error that dropped it). The network front door's router
+    /// polls this so every stranded remote ticket is answered with an
+    /// error frame instead of a response that can never come.
+    pub(crate) fn take_dropped(&self) -> Vec<(QueryId, A3Error)> {
+        std::mem::take(&mut *self.shared.dropped_queries.lock().unwrap())
+    }
+
     /// Submit one query without blocking. The query joins the
     /// context's batch on its home shard and is dispatched by that
     /// shard's worker when the batch closes (size-or-timeout) or the
@@ -664,12 +772,36 @@ impl Engine {
     /// [`Engine::recv_timeout`].
     pub fn submit(&self, handle: &ContextHandle, embedding: Vec<f32>) -> Result<Ticket, A3Error> {
         self.check_poison()?;
+        self.submit_reclaim(handle, embedding).map_err(|(e, _)| e)
+    }
+
+    /// [`Engine::submit`] that hands the embedding back on failures
+    /// that never consumed it (admission/validation), so retry loops —
+    /// the network front door's backpressure path — submit without
+    /// cloning per attempt. `None` in the error means the query was
+    /// already handed to a shard (no retry makes sense there anyway).
+    ///
+    /// Deliberately does **not** consume the shared poison slot: on a
+    /// served engine, dispatch failures are reported per ticket
+    /// through [`Engine::take_dropped`], and consuming another
+    /// connection's poison here would both double-report that failure
+    /// and spuriously fail an unrelated client's valid submit.
+    pub(crate) fn submit_reclaim(
+        &self,
+        handle: &ContextHandle,
+        embedding: Vec<f32>,
+    ) -> Result<Ticket, (A3Error, Option<Vec<f32>>)> {
         // liveness (evicted/unknown) and the home shard are resolved by
         // submit_query — one registry lock per submit, not two
-        self.validate_submit(handle, &embedding)?;
+        if let Err(e) = self.validate_submit(handle, &embedding) {
+            return Err((e, Some(embedding)));
+        }
         let pending = self.shared.inflight.load(Ordering::Acquire);
         if pending >= self.max_pending {
-            return Err(A3Error::QueueFull { pending, limit: self.max_pending });
+            return Err((
+                A3Error::QueueFull { pending, limit: self.max_pending },
+                Some(embedding),
+            ));
         }
         let id = self.next_ticket.fetch_add(1, Ordering::Relaxed);
         let query = Query {
@@ -678,7 +810,7 @@ impl Engine {
             embedding,
             arrival_ns: self.epoch.elapsed().as_nanos() as u64,
         };
-        self.submit_query(query)?;
+        self.submit_query(query).map_err(|e| (e, None))?;
         Ok(Ticket { id, context: handle.id() })
     }
 
@@ -686,15 +818,7 @@ impl Engine {
     /// caller owns id assignment and arrival stamping; context must be
     /// live.
     pub(crate) fn submit_query(&self, query: Query) -> Result<(), A3Error> {
-        let ctx = query.context;
-        let shard = {
-            let reg = self.registry.lock().unwrap();
-            match reg.live.get(&ctx) {
-                Some(&shard) => shard,
-                None if reg.evicted.contains(&ctx) => return Err(A3Error::ContextEvicted(ctx)),
-                None => return Err(A3Error::UnknownContext(ctx)),
-            }
-        };
+        let shard = self.registry.lock().unwrap().resolve_shard(query.context)?;
         let tx = self.shard_tx(shard)?;
         self.shared.inflight.fetch_add(1, Ordering::AcqRel);
         tx.send(Cmd::Submit(query)).map_err(|_| {
@@ -707,7 +831,7 @@ impl Engine {
     /// ticket, any shard, completion order). `Ok(None)` = nothing
     /// ready yet.
     pub fn try_recv(&self) -> Result<Option<Response>, A3Error> {
-        match self.resp_rx.try_recv() {
+        match self.resp_rx.lock().unwrap().try_recv() {
             Ok(r) => Ok(Some(r)),
             Err(mpsc::TryRecvError::Empty) => {
                 self.check_poison()?;
@@ -721,7 +845,8 @@ impl Engine {
     /// within `timeout` (e.g. a batch is still waiting to close — see
     /// [`Engine::drain`] to force tail batches out).
     pub fn recv_timeout(&self, timeout: Duration) -> Result<Option<Response>, A3Error> {
-        match self.resp_rx.recv_timeout(timeout) {
+        let rx = self.resp_rx.lock().unwrap();
+        match rx.recv_timeout(timeout) {
             Ok(r) => Ok(Some(r)),
             Err(mpsc::RecvTimeoutError::Timeout) => {
                 self.check_poison()?;
@@ -825,16 +950,32 @@ impl Engine {
 
     /// Park until admission reopens (a shard worker dispatched
     /// something) or `wait` elapses, burning no CPU in between —
-    /// replaces the historical 20 µs sleep-poll. Returns `true` if the
-    /// wait timed out with admission still closed (the caller should
-    /// consider forcing open batches out with a flush).
-    fn wait_for_admission(&self, wait: Duration) -> bool {
+    /// replaces the historical 20 µs sleep-poll. Returns `Ok(true)` if
+    /// the wait timed out with admission still closed (the caller
+    /// should consider forcing open batches out with a flush), and
+    /// [`A3Error::EngineStopped`] when any shard worker has died:
+    /// a panicked worker can never dispatch, so continuing to wait on
+    /// its admissions would strand the producer thread forever. The
+    /// worker's exit guard wakes this condvar, so the death is
+    /// observed immediately, not after the timeout. Also the admission
+    /// path the network front door blocks connection readers on
+    /// (socket backpressure propagates to the remote client).
+    pub(crate) fn wait_for_admission(&self, wait: Duration) -> Result<bool, A3Error> {
+        let alive = |shared: &Shared| {
+            shared.alive_workers.load(Ordering::Acquire) == self.store.shard_count()
+        };
         let gate = self.shared.admission_gate.lock().unwrap();
+        if !alive(&self.shared) {
+            return Err(A3Error::EngineStopped);
+        }
         if self.pending() < self.max_pending {
-            return false;
+            return Ok(false);
         }
         let (_gate, timeout) = self.shared.admission.wait_timeout(gate, wait).unwrap();
-        timeout.timed_out() && self.pending() >= self.max_pending
+        if !alive(&self.shared) {
+            return Err(A3Error::EngineStopped);
+        }
+        Ok(timeout.timed_out() && self.pending() >= self.max_pending)
     }
 
     /// The blocking serve loop over raw queries (the core of
@@ -862,7 +1003,7 @@ impl Engine {
             let reg = self.registry.lock().unwrap();
             queries
                 .iter()
-                .filter_map(|q| reg.live.get(&q.context).map(|&s| (q.context, s)))
+                .filter_map(|q| reg.live.get(&q.context).map(|live| (q.context, live.shard)))
                 .collect()
         };
         // arrivals count from the start of *this* run (the classic
@@ -892,7 +1033,7 @@ impl Engine {
             // after a quiet timeout force those batches out
             let mut quiet = 0u32;
             while self.pending() >= self.max_pending {
-                if self.wait_for_admission(Duration::from_millis(1)) {
+                if self.wait_for_admission(Duration::from_millis(1))? {
                     quiet += 1;
                     if quiet >= 5 {
                         self.flush()?;
@@ -1023,6 +1164,20 @@ struct ShardWorker {
 
 impl ShardWorker {
     fn run(&mut self) {
+        /// Decrements the live-worker count and wakes admission
+        /// waiters on any exit from `run` — including an unwinding
+        /// panic — so producers never park on a condvar no one will
+        /// signal. Ignores gate poisoning: a panic elsewhere must not
+        /// turn this cleanup into a double panic.
+        struct AliveGuard(Arc<Shared>);
+        impl Drop for AliveGuard {
+            fn drop(&mut self) {
+                self.0.alive_workers.fetch_sub(1, Ordering::AcqRel);
+                let _gate = self.0.admission_gate.lock();
+                self.0.admission.notify_all();
+            }
+        }
+        let _alive = AliveGuard(Arc::clone(&self.shared));
         loop {
             // sleep until the earliest real size-or-timeout deadline
             // (commands wake recv_timeout immediately); with nothing
@@ -1158,6 +1313,20 @@ impl ShardWorker {
                 }
             }
             Err(e) => {
+                {
+                    // per-query notices for ticket-tracking consumers
+                    // (the net router); capped at max_pending so an
+                    // engine whose notices nobody drains cannot grow
+                    // unboundedly, while a draining consumer never
+                    // loses one (in-flight queries cannot exceed it)
+                    let mut dropped = self.shared.dropped_queries.lock().unwrap();
+                    for q in &batch {
+                        if dropped.len() >= self.shared.dropped_cap {
+                            dropped.remove(0);
+                        }
+                        dropped.push((q.id, e.clone()));
+                    }
+                }
                 for q in &batch {
                     self.arrivals.remove(&q.id);
                 }
@@ -1280,6 +1449,76 @@ mod tests {
         let one = serve(1);
         let four = serve(4);
         assert!(four < one, "{four} !< {one}");
+    }
+
+    #[test]
+    fn engine_is_send_and_sync() {
+        // the network front door shares one engine across connection
+        // handler threads via Arc<Engine>; this breaks loudly if a
+        // field ever reintroduces !Sync (e.g. an unguarded Receiver)
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Engine>();
+    }
+
+    #[test]
+    fn wall_qps_guards_zero_and_tiny_makespans() {
+        let mut metrics = Metrics::default();
+        metrics.record(10, 10, 1, 1);
+        let report = |wall| ServeReport {
+            metrics: metrics.clone(),
+            sim_makespan: 0,
+            wall,
+            responses: Vec::new(),
+        };
+        // zero wall time / zero simulated makespan: 0.0, never inf/NaN
+        assert_eq!(report(Duration::ZERO).wall_qps(), 0.0);
+        assert_eq!(report(Duration::from_secs(1)).sim_throughput_qps(), 0.0);
+        // a real wall time still reports the real rate
+        assert_eq!(report(Duration::from_secs(2)).wall_qps(), 0.5);
+        // the shared guard: bad denominators and overflowing ratios
+        assert_eq!(per_second(5.0, 0.0), 0.0);
+        assert_eq!(per_second(5.0, -1.0), 0.0);
+        assert_eq!(per_second(5.0, f64::NAN), 0.0);
+        assert_eq!(per_second(f64::NAN, 1.0), 0.0);
+        assert_eq!(per_second(5.0, f64::MIN_POSITIVE), 0.0); // would round to inf
+        assert_eq!(per_second(6.0, 2.0), 3.0);
+        // the generic ratio guard behind it (Fig. 14 speedup columns)
+        assert_eq!(safe_div(3.0, 2.0), 1.5);
+        assert_eq!(safe_div(3.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn admission_wait_surfaces_dead_workers_as_engine_stopped() {
+        let engine = make_engine(1, AttentionBackend::Exact, 16);
+        // healthy engine, open admission: no wait, no error
+        assert_eq!(engine.wait_for_admission(Duration::from_millis(1)), Ok(false));
+        // simulate a panicked shard worker: its exit guard has run
+        engine.shared.alive_workers.fetch_sub(1, Ordering::AcqRel);
+        assert_eq!(
+            engine.wait_for_admission(Duration::from_secs(3600)),
+            Err(A3Error::EngineStopped),
+            "a dead worker must fail the wait, not strand the producer"
+        );
+        // restore before drop so stop() sees a consistent world
+        engine.shared.alive_workers.fetch_add(1, Ordering::AcqRel);
+    }
+
+    #[test]
+    fn lookup_context_resolves_live_ids_and_errors_typed() {
+        let engine = make_engine(1, AttentionBackend::Exact, 32);
+        let ctx = engine.register_context(make_kv(32, 9)).unwrap();
+        let looked = engine.lookup_context(ctx.id()).unwrap();
+        assert_eq!(looked.id(), ctx.id());
+        assert_eq!(looked.n(), 32);
+        // the looked-up handle is bound to this engine and submittable
+        engine.submit(&looked, vec![0.0; 64]).unwrap();
+        assert!(matches!(engine.lookup_context(999), Err(A3Error::UnknownContext(999))));
+        engine.evict(&ctx).unwrap();
+        engine.drain().unwrap(); // barrier: the evict command has run
+        assert!(matches!(
+            engine.lookup_context(ctx.id()),
+            Err(A3Error::ContextEvicted(_))
+        ));
     }
 
     #[test]

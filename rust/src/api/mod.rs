@@ -105,12 +105,28 @@
 //!     Ok(())
 //! }
 //! ```
+//!
+//! # Remote serving
+//!
+//! The engine's network front door lives in [`crate::net`]: a
+//! versioned length-prefixed binary wire protocol
+//! ([`crate::net::wire`]) whose error frames map 1:1 onto [`A3Error`],
+//! a `TcpListener` server that shares one `Arc<Engine>` across
+//! per-connection handler threads ([`crate::net::NetServer`]), and a
+//! blocking client + multi-connection load generator with this
+//! module's API shape ([`crate::net::NetClient`],
+//! [`crate::net::run_loadgen`]). The doc-tested end-to-end example
+//! lives in [`crate::net`]; on the CLI, `a3 serve --listen ADDR`
+//! binds the front door and `a3 client --connect ADDR` drives it.
+//! Outputs served over the wire are bit-identical to in-process
+//! serving (`rust/tests/net.rs`).
 
 pub mod engine;
 pub mod error;
 
 pub use engine::{
-    ContextHandle, Engine, EngineBuilder, EngineStats, ServeReport, ShardStats, Ticket,
+    per_second, safe_div, ContextHandle, Engine, EngineBuilder, EngineStats, ServeReport,
+    ShardStats, Ticket,
 };
 pub use error::A3Error;
 

@@ -175,6 +175,74 @@ impl MetricsReport {
     }
 }
 
+/// Per-key metrics attribution: one [`Metrics`] window per source
+/// (the network front door keys these by connection id, so every
+/// remote client's latency/throughput can be reported separately
+/// while [`AttributedMetrics::merged`] still gives the aggregate over
+/// the merged sample population). A `BTreeMap` keeps reports in
+/// stable key order.
+#[derive(Clone, Debug, Default)]
+pub struct AttributedMetrics {
+    windows: std::collections::BTreeMap<u64, Metrics>,
+}
+
+impl AttributedMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one completion against `key` (creating its window on
+    /// first use). Arguments mirror [`Metrics::record`].
+    pub fn record(
+        &mut self,
+        key: u64,
+        latency_ns: u64,
+        completed_ns: u64,
+        selected_rows: usize,
+        sim_cycles: u64,
+    ) {
+        self.windows
+            .entry(key)
+            .or_default()
+            .record(latency_ns, completed_ns, selected_rows, sim_cycles);
+    }
+
+    /// Keys with at least one recorded completion.
+    pub fn len(&self) -> usize {
+        self.windows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    /// One window's accumulator, if the key has recorded anything.
+    pub fn get(&self, key: u64) -> Option<&Metrics> {
+        self.windows.get(&key)
+    }
+
+    /// Sort-once snapshot per key, in ascending key order.
+    pub fn reports(&self) -> Vec<(u64, MetricsReport)> {
+        self.windows.iter().map(|(&k, m)| (k, m.report())).collect()
+    }
+
+    /// Aggregate over every key: percentiles come from the merged
+    /// sample population, not an average of per-key percentiles.
+    pub fn merged(&self) -> Metrics {
+        let mut out = Metrics::default();
+        for m in self.windows.values() {
+            out.merge(m);
+        }
+        out
+    }
+
+    /// Drop one key's window (e.g. when retiring a disconnected
+    /// connection after its final report).
+    pub fn remove(&mut self, key: u64) -> Option<Metrics> {
+        self.windows.remove(&key)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -274,6 +342,35 @@ mod tests {
         let a = MetricsReport::from_latencies_ns(&lats);
         let b = m.report();
         assert_eq!((a.p50_ns, a.p95_ns, a.p99_ns, a.mean_ns), (b.p50_ns, b.p95_ns, b.p99_ns, b.mean_ns));
+    }
+
+    #[test]
+    fn attributed_metrics_split_and_merge_by_key() {
+        let mut a = AttributedMetrics::new();
+        assert!(a.is_empty());
+        // connection 1: two fast completions; connection 7: one slow
+        a.record(1, 10, 100, 2, 5);
+        a.record(1, 30, 200, 4, 5);
+        a.record(7, 500, 300, 1, 9);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.get(1).unwrap().completed, 2);
+        assert_eq!(a.get(7).unwrap().completed, 1);
+        assert!(a.get(2).is_none());
+        // reports come back in stable key order
+        let reports = a.reports();
+        assert_eq!(reports[0].0, 1);
+        assert_eq!(reports[1].0, 7);
+        assert_eq!(reports[0].1.completed, 2);
+        // the aggregate merges the sample populations
+        let merged = a.merged();
+        assert_eq!(merged.completed, 3);
+        assert_eq!(merged.selected_rows_total, 7);
+        assert_eq!(merged.percentile_ns(99.0), 500);
+        // retiring a key removes exactly that window
+        let gone = a.remove(7).unwrap();
+        assert_eq!(gone.completed, 1);
+        assert_eq!(a.merged().completed, 2);
+        assert!(a.remove(7).is_none());
     }
 
     #[test]

@@ -37,7 +37,7 @@ pub mod scheduler;
 pub mod store;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use metrics::{Metrics, MetricsReport};
+pub use metrics::{AttributedMetrics, Metrics, MetricsReport};
 pub use request::{KvContext, Query, QueryId, Response};
 pub use scheduler::{Scheduler, UnitConfig, UnitKind};
 pub use store::ContextStore;

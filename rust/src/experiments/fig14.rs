@@ -14,7 +14,7 @@ use anyhow::Result;
 
 use super::sweep::{evaluate, EvalBudget, SelectionSample};
 use super::{fmt_f, fmt_x, Table};
-use crate::api::{EngineBuilder, KvPair};
+use crate::api::{per_second, safe_div, EngineBuilder, KvPair, ServeReport};
 use crate::baseline::CostModel;
 use crate::coordinator::MetricsReport;
 use crate::model::AttentionBackend;
@@ -109,14 +109,14 @@ pub fn collect(budget: EvalBudget) -> Result<Vec<Fig14Workload>> {
         let cpu_batch = kind.queries_per_kv();
         let mut rows = vec![PlatformPerf {
             platform: "CPU (Xeon 6128)",
-            qps: 1.0 / cpu.seconds_per_query(dims, cpu_batch),
+            qps: per_second(1.0, cpu.seconds_per_query(dims, cpu_batch)),
             latency_s: cpu.attention_seconds(dims, cpu_batch),
             latency_p99_s: 0.0,
         }];
         if kind == WorkloadKind::Squad {
             rows.push(PlatformPerf {
                 platform: "GPU (Titan V)",
-                qps: 1.0 / gpu.seconds_per_query(dims, cpu_batch),
+                qps: per_second(1.0, gpu.seconds_per_query(dims, cpu_batch)),
                 latency_s: gpu.attention_seconds(dims, cpu_batch),
                 latency_p99_s: 0.0,
             });
@@ -155,7 +155,7 @@ pub fn collect(budget: EvalBudget) -> Result<Vec<Fig14Workload>> {
             }
             rows.push(PlatformPerf {
                 platform: name,
-                qps: 1.0 / per_query_s,
+                qps: per_second(1.0, per_query_s),
                 latency_s,
                 latency_p99_s,
             });
@@ -221,6 +221,89 @@ pub fn run_shard_sweep(queries: usize, contexts: usize) -> Result<Table> {
     Ok(t)
 }
 
+/// One transport row for the socket-overhead table.
+fn transport_row(t: &mut Table, transport: &str, report: &ServeReport) {
+    let snap = report.metrics.report();
+    t.row(vec![
+        transport.into(),
+        fmt_f(report.wall_qps(), 0),
+        format!("{:.1} µs", snap.p50_ns as f64 / 1e3),
+        format!("{:.1} µs", snap.p99_ns as f64 / 1e3),
+        snap.completed.to_string(),
+    ]);
+}
+
+/// Fig. 14d (ISSUE 5): the cost of the network front door. The same
+/// open-throttle synthetic stream is served on one host through three
+/// transports — `Engine::run_stream` in-process, then
+/// [`crate::net::loadgen`] over loopback TCP with 1 and 4 client
+/// connections — against identically configured engines, so the
+/// column isolates the socket + codec overhead from the serving
+/// runtime itself. Latencies are client-observed (they include the
+/// wire on the TCP rows). Pass a `contexts` count divisible by every
+/// swept connection count (1 and 4) so each transport serves the
+/// stream over the *same* total context population.
+pub fn run_socket_overhead(queries: usize, contexts: usize) -> Result<Table> {
+    let mut t = Table::new(
+        format!(
+            "Fig. 14d — socket vs in-process serving, {queries} synthetic queries over \
+             {contexts} contexts (2 units)"
+        ),
+        &["transport", "host qps (wall)", "p50 latency", "p99 latency", "completed"],
+    );
+    let (n, d) = (crate::PAPER_N, crate::PAPER_D);
+    let build = || {
+        EngineBuilder::new()
+            .units(2)
+            .dims(Dims::paper())
+            .max_batch(8)
+            .build()
+    };
+    // in-process baseline: the classic stream driver
+    {
+        let engine = build()?;
+        let mut kv_rng = Rng::new(0xA3);
+        let handles = (0..contexts.max(1))
+            .map(|_| {
+                let kv = KvPair::new(
+                    n,
+                    d,
+                    kv_rng.normal_vec(n * d, 1.0),
+                    kv_rng.normal_vec(n * d, 1.0),
+                );
+                engine.register_context(kv)
+            })
+            .collect::<std::result::Result<Vec<_>, _>>()?;
+        let mut q_rng = Rng::new(7);
+        let stream: Vec<_> = (0..queries)
+            .map(|i| (handles[i % handles.len()].clone(), q_rng.normal_vec(d, 1.0)))
+            .collect();
+        let (_tickets, report) = engine.run_stream(stream)?;
+        transport_row(&mut t, "in-process", &report);
+    }
+    // loopback TCP through the full front door (wire codec + router)
+    for connections in [1usize, 4] {
+        let engine = std::sync::Arc::new(build()?);
+        let server = crate::net::NetServer::bind(std::sync::Arc::clone(&engine), "127.0.0.1:0")?;
+        let plan = crate::net::LoadPlan {
+            connections,
+            queries,
+            // exact split when divisible (same total context
+            // population as the in-process row), floored at 1
+            contexts_per_conn: (contexts / connections).max(1),
+            n,
+            d,
+            qps: None,
+            seed: 7,
+            window: 64,
+        };
+        let report = crate::net::run_loadgen(server.local_addr(), plan)?;
+        transport_row(&mut t, &format!("loopback TCP x{connections} conn"), &report);
+        // Drop joins the server threads before the next engine binds
+    }
+    Ok(t)
+}
+
 pub fn run(budget: EvalBudget) -> Result<(Table, Table)> {
     let data = collect(budget)?;
     let mut a = Table::new(
@@ -240,19 +323,21 @@ pub fn run(budget: EvalBudget) -> Result<(Table, Table)> {
             .expect("base row");
         let (base_qps, base_lat) = (base.qps, base.latency_s);
         for r in &w.rows {
+            // guarded ratios: a collapsed denominator prints 0.00x,
+            // never inf/NaN
             a.row(vec![
                 w.workload.name().into(),
                 r.platform.into(),
                 fmt_f(r.qps, 0),
-                fmt_x(r.qps / cpu_qps),
-                fmt_x(r.qps / base_qps),
+                fmt_x(safe_div(r.qps, cpu_qps)),
+                fmt_x(safe_div(r.qps, base_qps)),
             ]);
             if r.platform.starts_with("A3") {
                 b.row(vec![
                     w.workload.name().into(),
                     r.platform.into(),
                     format!("{:.2} µs", r.latency_s * 1e6),
-                    fmt_x(r.latency_s / base_lat),
+                    fmt_x(safe_div(r.latency_s, base_lat)),
                     format!("{:.2} µs", r.latency_p99_s * 1e6),
                 ]);
             }
@@ -345,6 +430,18 @@ mod tests {
             assert_eq!(row[0], shards.to_string());
             assert_eq!(row[1], (SHARD_SWEEP_UNITS / shards).to_string());
             assert_eq!(row[5], "64", "shards={shards} must serve the whole stream");
+        }
+    }
+
+    #[test]
+    fn socket_overhead_table_serves_every_query_on_every_transport() {
+        // in-process + loopback x1 + loopback x4, all bit-complete
+        // (4 contexts: divisible by both swept connection counts)
+        let t = run_socket_overhead(48, 4).unwrap();
+        assert_eq!(t.rows.len(), 3);
+        assert_eq!(t.rows[0][0], "in-process");
+        for row in &t.rows {
+            assert_eq!(row[4], "48", "{} must serve the whole stream", row[0]);
         }
     }
 

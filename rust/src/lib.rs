@@ -47,6 +47,10 @@
 //! * [`api`] — the public serving facade: `EngineBuilder` → sharded
 //!   `Engine` → `ContextHandle`/`Ticket`, with the crate-wide typed
 //!   [`api::A3Error`]. The one sanctioned way to serve queries.
+//! * [`net`] — the TCP front door over [`api`]: a versioned binary
+//!   wire protocol ([`net::wire`]), a multiplexed multi-connection
+//!   server ([`net::server`]), and the remote client + load generator
+//!   ([`net::client`], [`net::loadgen`]). std-only (no tokio).
 //! * [`experiments`] — one driver per paper table/figure, shared by the
 //!   CLI (`a3 <fig...>`) and the bench harnesses.
 
@@ -60,6 +64,7 @@ pub mod energy;
 pub mod experiments;
 pub mod fixedpoint;
 pub mod model;
+pub mod net;
 pub mod runtime;
 pub mod sim;
 pub mod tensorio;

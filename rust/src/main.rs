@@ -33,7 +33,15 @@ COMMANDS (system):
                     [--units N] [--shards N] [--memory-budget BYTES]
                     [--approx] [--queries N] [--n N] [--contexts N]
                     [--seed N] [--max-batch N] [--qps F]
-                    (unknown serve flags are an error)
+                    [--listen ADDR] (unknown serve flags are an error)
+                    With --listen, serve the engine over TCP instead:
+                    bind ADDR (port 0 = ephemeral; the bound address is
+                    printed), pre-register --contexts synthetic
+                    contexts, and run until a client sends Shutdown.
+    client          drive a remote `a3 serve --listen` server:
+                    --connect ADDR [--queries N] [--connections N]
+                    [--contexts N] [--n N] [--qps F] [--seed N]
+                    [--window N] [--shutdown]
     runtime-smoke   load + execute every AOT HLO artifact via PJRT
 
 OPTIONS:
@@ -55,13 +63,14 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let mut units = 1usize;
     let mut shards = 1usize;
     let mut memory_budget: Option<usize> = None;
-    let mut queries = 4096usize;
+    let mut queries: Option<usize> = None;
     let mut contexts = 1usize;
     let mut n = a3::PAPER_N;
-    let mut seed = 2u64;
+    let mut seed: Option<u64> = None;
     let mut approx = false;
     let mut max_batch: Option<usize> = None;
     let mut qps: Option<f64> = None;
+    let mut listen: Option<String> = None;
     let mut i = 1; // args[0] is the "serve" command itself
     while i < args.len() {
         let flag = args[i].clone();
@@ -75,7 +84,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         if !matches!(
             flag.as_str(),
             "--units" | "--shards" | "--memory-budget" | "--queries" | "--contexts" | "--n"
-                | "--seed" | "--max-batch" | "--qps"
+                | "--seed" | "--max-batch" | "--qps" | "--listen"
         ) {
             bail!("serve: unknown flag {flag:?} (see `a3 --help`)");
         }
@@ -90,12 +99,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             "--units" => units = value.parse().map_err(|e| invalid(&e))?,
             "--shards" => shards = value.parse().map_err(|e| invalid(&e))?,
             "--memory-budget" => memory_budget = Some(value.parse().map_err(|e| invalid(&e))?),
-            "--queries" => queries = value.parse().map_err(|e| invalid(&e))?,
+            "--queries" => queries = Some(value.parse().map_err(|e| invalid(&e))?),
             "--contexts" => contexts = value.parse().map_err(|e| invalid(&e))?,
             "--n" => n = value.parse().map_err(|e| invalid(&e))?,
-            "--seed" => seed = value.parse().map_err(|e| invalid(&e))?,
+            "--seed" => seed = Some(value.parse().map_err(|e| invalid(&e))?),
             "--max-batch" => max_batch = Some(value.parse().map_err(|e| invalid(&e))?),
             "--qps" => qps = Some(value.parse().map_err(|e| invalid(&e))?),
+            "--listen" => listen = Some(value.clone()),
             _ => unreachable!("known flags matched above"),
         }
         i += 2;
@@ -103,6 +113,16 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     if contexts == 0 {
         bail!("serve: --contexts must be >= 1");
     }
+    // the strict-parsing promise: flags that only drive the in-process
+    // synthetic stream must not be silently ignored under --listen
+    if listen.is_some() && (queries.is_some() || seed.is_some() || qps.is_some()) {
+        bail!(
+            "serve: --queries/--seed/--qps drive the in-process synthetic stream and have \
+             no effect with --listen; generate load remotely with `a3 client` instead"
+        );
+    }
+    let queries = queries.unwrap_or(4096);
+    let seed = seed.unwrap_or(2);
 
     let backend = if approx {
         AttentionBackend::conservative()
@@ -135,6 +155,32 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             engine.register_context(kv)
         })
         .collect::<Result<_, _>>()?;
+
+    // --listen: serve the engine over TCP instead of the in-process
+    // synthetic stream; runs until a client sends a Shutdown frame
+    if let Some(listen_addr) = listen {
+        let engine = std::sync::Arc::new(engine);
+        let mut server = a3::net::NetServer::bind(std::sync::Arc::clone(&engine), listen_addr.as_str())?;
+        println!(
+            "listening on {} (wire v{}) — {} pre-registered context(s) [ids 0..{}], \
+             {units} {} unit(s) across {shards} shard(s)",
+            server.local_addr(),
+            a3::net::WIRE_VERSION,
+            handles.len(),
+            handles.len(),
+            if approx { "approximate" } else { "base" },
+        );
+        // scripts parse the bound address from the line above
+        use std::io::Write as _;
+        std::io::stdout().flush().ok();
+        server.join();
+        println!("shutdown requested; per-connection serving windows:");
+        for (conn, report) in server.connection_reports() {
+            println!("  conn {conn}: {}", report.summary());
+        }
+        return Ok(());
+    }
+
     println!(
         "serving {queries} queries (n={n}, d={d}, seed={seed}) over {contexts} context(s) on \
          {units} {} unit(s) across {shards} shard(s) ({} resident context bytes{})...",
@@ -156,6 +202,90 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         report.sim_makespan,
         report.sim_throughput_qps()
     );
+    Ok(())
+}
+
+fn cmd_client(args: &[String]) -> Result<()> {
+    let mut connect: Option<String> = None;
+    let mut queries = 256usize;
+    let mut connections = 1usize;
+    let mut contexts = 1usize;
+    let mut n = a3::PAPER_N;
+    let mut qps: Option<f64> = None;
+    let mut seed = 0xA3u64;
+    let mut window = 64usize;
+    let mut shutdown = false;
+    let mut i = 1; // args[0] is the "client" command itself
+    while i < args.len() {
+        let flag = args[i].clone();
+        if flag == "--shutdown" {
+            shutdown = true;
+            i += 1;
+            continue;
+        }
+        if !matches!(
+            flag.as_str(),
+            "--connect" | "--queries" | "--connections" | "--contexts" | "--n" | "--qps"
+                | "--seed" | "--window"
+        ) {
+            bail!("client: unknown flag {flag:?} (see `a3 --help`)");
+        }
+        let value = match args.get(i + 1) {
+            Some(v) => v,
+            None => bail!("client: {flag} needs a value (see `a3 --help`)"),
+        };
+        let invalid = |e: &dyn std::fmt::Display| {
+            anyhow::anyhow!("client: invalid value {value:?} for {flag}: {e}")
+        };
+        match flag.as_str() {
+            "--connect" => connect = Some(value.clone()),
+            "--queries" => queries = value.parse().map_err(|e| invalid(&e))?,
+            "--connections" => connections = value.parse().map_err(|e| invalid(&e))?,
+            "--contexts" => contexts = value.parse().map_err(|e| invalid(&e))?,
+            "--n" => n = value.parse().map_err(|e| invalid(&e))?,
+            "--qps" => qps = Some(value.parse().map_err(|e| invalid(&e))?),
+            "--seed" => seed = value.parse().map_err(|e| invalid(&e))?,
+            "--window" => window = value.parse().map_err(|e| invalid(&e))?,
+            _ => unreachable!("known flags matched above"),
+        }
+        i += 2;
+    }
+    let Some(addr) = connect else {
+        bail!("client: --connect ADDR is required (see `a3 --help`)");
+    };
+    if connections == 0 {
+        bail!("client: --connections must be >= 1");
+    }
+    let plan = a3::net::LoadPlan {
+        connections,
+        queries,
+        contexts_per_conn: contexts,
+        n,
+        d: a3::PAPER_D,
+        qps,
+        seed,
+        window,
+    };
+    println!(
+        "driving {addr}: {queries} queries over {connections} connection(s), \
+         {contexts} context(s)/connection (n={n}, seed={seed}{})",
+        match qps {
+            Some(q) => format!(", paced {q} queries/s total"),
+            None => ", open throttle".into(),
+        }
+    );
+    let report = a3::net::run_loadgen(addr.as_str(), plan)?;
+    println!("client : {} ({:.0} queries/s wall)", report.summary(), report.wall_qps());
+    println!(
+        "sim    : makespan {} cycles -> {:.0} queries/s on the accelerator",
+        report.sim_makespan,
+        report.sim_throughput_qps()
+    );
+    if shutdown {
+        let mut control = a3::net::NetClient::connect(addr.as_str())?;
+        control.shutdown()?;
+        println!("sent shutdown");
+    }
     Ok(())
 }
 
@@ -231,7 +361,8 @@ fn main() -> Result<()> {
         "fig14" => {
             let (a, b) = fig14::run(budget)?;
             let c = fig14::run_shard_sweep(2048, 8)?;
-            println!("{a}\n{b}\n{c}");
+            let d = fig14::run_socket_overhead(1024, 4)?;
+            println!("{a}\n{b}\n{c}\n{d}");
         }
         "fig15" => {
             let (a, b) = fig15::run(budget)?;
@@ -254,6 +385,7 @@ fn main() -> Result<()> {
             }
         }
         "serve" => cmd_serve(&args)?,
+        "client" => cmd_client(&args)?,
         "runtime-smoke" => cmd_runtime_smoke()?,
         "--help" | "-h" | "help" => print!("{USAGE}"),
         other => {

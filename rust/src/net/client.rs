@@ -1,0 +1,284 @@
+//! The blocking remote client: the same typed API shape as
+//! [`crate::api`], over a socket.
+//!
+//! One [`NetClient`] owns one connection. Synchronous operations
+//! (register, evict, drain, stats, shutdown) send a request and wait
+//! for its reply; [`NetClient::submit`] is **pipelined** — it queues
+//! the query and returns its request id immediately, so any number of
+//! queries can be in flight, and completions come back through
+//! [`NetClient::recv`] in completion order (exactly the
+//! `submit`/`try_recv` shape of the in-process engine). Responses that
+//! arrive interleaved with a synchronous reply are buffered and handed
+//! out by the next `recv`.
+//!
+//! Every engine-side failure arrives as [`NetError::Remote`] carrying
+//! the same [`crate::api::A3Error`] variant an in-process caller
+//! would see.
+
+use std::collections::VecDeque;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use super::server::NO_REQ;
+use super::wire::{self, Frame, WireStats};
+use super::NetError;
+use crate::api::A3Error;
+use crate::attention::KvPair;
+use crate::coordinator::request::{ContextId, Response};
+
+/// One received completion slot: the response, or the typed engine
+/// error tagged with the request id of the submit that failed — so a
+/// pipelining client can retire exactly the failed entry from its
+/// in-flight window and keep receiving the rest.
+pub type RecvOutcome = std::result::Result<Response, (u64, A3Error)>;
+
+/// A context registered over the wire — the remote analogue of
+/// [`crate::api::ContextHandle`], reduced to the id the protocol
+/// routes by. `Copy`, so call sites pass it by value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct RemoteContext {
+    id: ContextId,
+}
+
+impl RemoteContext {
+    /// Wrap a raw wire id (e.g. one shared out-of-band by another
+    /// connection; an id the engine does not know stays a typed
+    /// `UnknownContext` error, exactly as in-process).
+    pub fn from_id(id: ContextId) -> Self {
+        RemoteContext { id }
+    }
+
+    pub fn id(&self) -> ContextId {
+        self.id
+    }
+}
+
+/// Cheap server observability snapshot ([`NetClient::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RemoteStats {
+    /// Queries submitted but not yet dispatched (all connections).
+    pub pending: u64,
+    /// Resident context bytes across all shards.
+    pub resident_bytes: u64,
+    /// Shard worker count.
+    pub shards: u32,
+}
+
+/// Blocking client over one TCP connection. See the module docs.
+pub struct NetClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    next_req: u64,
+    /// Completions (or their req-tagged typed errors) that arrived
+    /// while waiting for a synchronous reply, in arrival order.
+    inbox: VecDeque<RecvOutcome>,
+}
+
+impl NetClient {
+    /// Connect and send the protocol preamble. A server speaking a
+    /// different wire version answers the preamble with a typed error
+    /// frame, surfaced by the first operation.
+    pub fn connect(addr: impl ToSocketAddrs) -> super::Result<NetClient> {
+        let stream = TcpStream::connect(addr)?;
+        // one frame per query on the submit path: don't let Nagle
+        // batch them behind ACKs
+        stream.set_nodelay(true)?;
+        let read_half = stream.try_clone()?;
+        let mut writer = BufWriter::new(stream);
+        wire::write_preamble(&mut writer)?;
+        writer.flush()?;
+        Ok(NetClient {
+            reader: BufReader::new(read_half),
+            writer,
+            next_req: 0,
+            inbox: VecDeque::new(),
+        })
+    }
+
+    fn next_req(&mut self) -> u64 {
+        let req = self.next_req;
+        self.next_req += 1;
+        req
+    }
+
+    /// Queue one frame on the write buffer. Flushing happens before
+    /// any read ([`NetClient::wait_for`]/[`NetClient::recv_outcome`])
+    /// or explicitly via [`NetClient::flush`], so a burst of pipelined
+    /// submits costs one syscall, not one per frame.
+    fn send(&mut self, frame: &Frame) -> super::Result<()> {
+        wire::write_frame(&mut self.writer, frame)?;
+        Ok(())
+    }
+
+    /// Push all buffered frames onto the socket now. Only needed when
+    /// submitting without receiving for a while (every receive and
+    /// synchronous call flushes first).
+    pub fn flush(&mut self) -> super::Result<()> {
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Read frames until the reply for `req` arrives, buffering any
+    /// pipelined completions (and their errors) for [`NetClient::recv`].
+    /// Flushes queued writes first — a reply can only come for a
+    /// request that has left the buffer.
+    fn wait_for(&mut self, req: u64) -> super::Result<Frame> {
+        self.writer.flush()?;
+        loop {
+            let frame = wire::read_frame(&mut self.reader)?;
+            match frame {
+                frame @ Frame::Response { .. } => {
+                    let r = response_from_frame(frame);
+                    self.inbox.push_back(Ok(r));
+                }
+                Frame::Error { req: r, error } if r == req || r == NO_REQ => {
+                    return Err(NetError::Remote(error));
+                }
+                Frame::Error { req: r, error } => {
+                    // a pipelined submit's typed failure: queue it in
+                    // arrival order for recv, tagged with its req
+                    self.inbox.push_back(Err((r, error)));
+                }
+                frame if frame.req() == req => return Ok(frame),
+                frame => {
+                    return Err(NetError::Protocol(format!(
+                        "unexpected reply {frame:?} while waiting for request {req}"
+                    )));
+                }
+            }
+        }
+    }
+
+    /// Comprehension time: stage `kv` as a context on the remote
+    /// engine. Typed failures (dimension mismatch, memory budget…)
+    /// come back as [`NetError::Remote`].
+    pub fn register_context(&mut self, kv: &KvPair) -> super::Result<RemoteContext> {
+        let req = self.next_req();
+        // borrowed encode path: no clone of the two K/V matrices
+        wire::write_register_frame(
+            &mut self.writer,
+            req,
+            kv.n as u32,
+            kv.d as u32,
+            &kv.key,
+            &kv.value,
+        )?;
+        match self.wait_for(req)? {
+            Frame::Registered { context, .. } => Ok(RemoteContext { id: context }),
+            frame => Err(NetError::Protocol(format!("register answered by {frame:?}"))),
+        }
+    }
+
+    /// Pipelined submit: queue one query and return its request id
+    /// (the remote ticket — [`Response::id`] of the completion equals
+    /// it). Does not wait; the completion (or its typed error) comes
+    /// back through [`NetClient::recv`] in completion order. The
+    /// frame is write-buffered: it reaches the wire at the next
+    /// receive or synchronous call (one syscall per burst), or
+    /// immediately via [`NetClient::flush`].
+    pub fn submit(&mut self, ctx: RemoteContext, embedding: &[f32]) -> super::Result<u64> {
+        let req = self.next_req();
+        self.send(&Frame::Submit { req, context: ctx.id, embedding: embedding.to_vec() })?;
+        Ok(req)
+    }
+
+    /// Block for the next completed query on this connection
+    /// (completion order, any context). A pipelined submit that failed
+    /// engine-side surfaces here as its typed [`NetError::Remote`];
+    /// pipelining clients that need to know *which* submit failed
+    /// should use [`NetClient::recv_outcome`] instead.
+    pub fn recv(&mut self) -> super::Result<Response> {
+        match self.recv_outcome()? {
+            Ok(r) => Ok(r),
+            Err((_req, error)) => Err(NetError::Remote(error)),
+        }
+    }
+
+    /// Like [`NetClient::recv`], but engine-side failures come back as
+    /// `Ok(Err((req, error)))` — tagged with the request id of the
+    /// submit that failed — so a client with many queries in flight
+    /// can retire exactly the failed one and keep receiving. The outer
+    /// `Err` is reserved for connection-fatal conditions (transport,
+    /// protocol, a server-level error frame).
+    pub fn recv_outcome(&mut self) -> super::Result<RecvOutcome> {
+        if let Some(queued) = self.inbox.pop_front() {
+            return Ok(queued);
+        }
+        // completions can only arrive for submits that left the buffer
+        self.writer.flush()?;
+        match wire::read_frame(&mut self.reader)? {
+            frame @ Frame::Response { .. } => Ok(Ok(response_from_frame(frame))),
+            Frame::Error { req, error } if req == NO_REQ => Err(NetError::Remote(error)),
+            Frame::Error { req, error } => Ok(Err((req, error))),
+            frame => Err(NetError::Protocol(format!(
+                "unexpected frame {frame:?} while receiving completions"
+            ))),
+        }
+    }
+
+    /// Retire a remote context ([`crate::api::Engine::evict`]
+    /// semantics: admitted queries are served first).
+    pub fn evict(&mut self, ctx: RemoteContext) -> super::Result<()> {
+        let req = self.next_req();
+        self.send(&Frame::Evict { req, context: ctx.id })?;
+        match self.wait_for(req)? {
+            Frame::Evicted { .. } => Ok(()),
+            frame => Err(NetError::Protocol(format!("evict answered by {frame:?}"))),
+        }
+    }
+
+    /// All-shard drain barrier on the remote engine; returns the
+    /// merged stats window. After it returns, every completion for
+    /// previously submitted queries is (at least) in flight to this
+    /// client — follow with [`NetClient::recv`] until all tickets are
+    /// answered.
+    pub fn drain(&mut self) -> super::Result<WireStats> {
+        let req = self.next_req();
+        self.send(&Frame::Drain { req })?;
+        match self.wait_for(req)? {
+            Frame::DrainStats { stats, .. } => Ok(stats),
+            frame => Err(NetError::Protocol(format!("drain answered by {frame:?}"))),
+        }
+    }
+
+    /// Cheap observability snapshot (no barrier, no window reset).
+    pub fn stats(&mut self) -> super::Result<RemoteStats> {
+        let req = self.next_req();
+        self.send(&Frame::Stats { req })?;
+        match self.wait_for(req)? {
+            Frame::StatsReply { pending, resident_bytes, shards, .. } => {
+                Ok(RemoteStats { pending, resident_bytes, shards })
+            }
+            frame => Err(NetError::Protocol(format!("stats answered by {frame:?}"))),
+        }
+    }
+
+    /// Ask the server to stop (acked, then the server closes the
+    /// connection). The [`crate::net::NetServer::join`] owner unblocks.
+    pub fn shutdown(&mut self) -> super::Result<()> {
+        let req = self.next_req();
+        self.send(&Frame::Shutdown { req })?;
+        match self.wait_for(req)? {
+            Frame::ShutdownAck { .. } => Ok(()),
+            frame => Err(NetError::Protocol(format!("shutdown answered by {frame:?}"))),
+        }
+    }
+}
+
+/// Rebuild the api-level [`Response`] from its wire frame; the
+/// response id is the client's own request id for the submit.
+fn response_from_frame(frame: Frame) -> Response {
+    match frame {
+        Frame::Response { req, context, selected_rows, sim_cycles, completed_ns, output } => {
+            Response {
+                id: req,
+                context,
+                output,
+                selected_rows: selected_rows as usize,
+                sim_cycles,
+                completed_ns,
+            }
+        }
+        _ => unreachable!("callers match Frame::Response first"),
+    }
+}

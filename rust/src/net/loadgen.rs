@@ -1,0 +1,240 @@
+//! Multi-connection load generator: the remote analogue of
+//! [`crate::api::Engine::run_stream`] / `run_random`.
+//!
+//! Opens [`LoadPlan::connections`] sockets, registers each
+//! connection's contexts (comprehension time — completed before the
+//! run clock starts: every worker parks on a barrier after
+//! registration, and the wall window opens only when all of them are
+//! ready), then reproduces the stream-driver pacing over real TCP:
+//! paced arrivals interleaved round-robin across connections (query
+//! `g` of the global stream is due at `g / qps`), a bounded in-flight
+//! window per connection (the client-side admission analogue), and
+//! client-observed latency recorded per query into a [`Metrics`]
+//! window per connection, merged into one [`ServeReport`] —
+//! percentiles over the merged population, exactly like the
+//! in-process drain barrier.
+//!
+//! The report's `sim_makespan` is the **drain-to-drain advance** of
+//! the engine's simulated clock, measured by a dedicated control
+//! connection before and after the run — the remote analogue of
+//! `run_stream`'s per-run rebasing, so repeated runs against one
+//! long-lived server never inflate each other's makespan. (The
+//! initial control drain also flushes any unrelated pre-run traffic.)
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, ToSocketAddrs};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use super::client::{NetClient, RemoteContext};
+use super::NetError;
+use crate::api::ServeReport;
+use crate::attention::KvPair;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::Response;
+use crate::testutil::Rng;
+
+/// What to replay against a remote server.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadPlan {
+    /// Concurrent client connections (each gets its own thread and
+    /// its own contexts).
+    pub connections: usize,
+    /// Total queries across all connections (split evenly).
+    pub queries: usize,
+    /// Contexts registered per connection; queries round-robin over
+    /// them.
+    pub contexts_per_conn: usize,
+    /// K/V rows per context.
+    pub n: usize,
+    /// Embedding dimension (must match the server engine's `d`).
+    pub d: usize,
+    /// Total arrival rate across all connections (queries/s);
+    /// `None` = open throttle (saturation), like `run_stream` without
+    /// an arrival model.
+    pub qps: Option<f64>,
+    pub seed: u64,
+    /// Max in-flight (submitted, not yet received) queries per
+    /// connection before the generator blocks on a completion.
+    pub window: usize,
+}
+
+impl Default for LoadPlan {
+    fn default() -> Self {
+        LoadPlan {
+            connections: 1,
+            queries: 256,
+            contexts_per_conn: 1,
+            n: crate::PAPER_N,
+            d: crate::PAPER_D,
+            qps: None,
+            seed: 0xA3,
+            window: 64,
+        }
+    }
+}
+
+/// How many of `total` queries connection `conn` sends (even split,
+/// earlier connections take the remainder).
+fn share(total: usize, connections: usize, conn: usize) -> usize {
+    total / connections + usize::from(conn < total % connections)
+}
+
+/// Run the plan against a server and return the client-observed
+/// [`ServeReport`]. Response ids are globalized as
+/// `(connection << 32) | request_id` so they stay unique across
+/// connections.
+pub fn run_loadgen(addr: impl ToSocketAddrs, plan: LoadPlan) -> super::Result<ServeReport> {
+    let addr: SocketAddr = addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| NetError::Io("load generator: address resolved to nothing".into()))?;
+    let connections = plan.connections.max(1);
+    // the simulated clock is cumulative across an engine's lifetime:
+    // take a drain-to-drain baseline so the report covers *this* run
+    let mut control = NetClient::connect(addr)?;
+    let base_makespan = control.drain()?.sim_makespan;
+    // workers register their contexts, then park here; the run clock
+    // starts only when every connection is ready, so comprehension
+    // time never pollutes the serving wall window
+    let barrier = Arc::new(Barrier::new(connections + 1));
+    let mut handles = Vec::with_capacity(connections);
+    for conn in 0..connections {
+        let barrier = Arc::clone(&barrier);
+        let handle = std::thread::Builder::new()
+            .name(format!("a3-loadgen{conn}"))
+            .spawn(move || connection_worker(addr, plan, connections, conn, barrier))
+            .map_err(|e| NetError::Io(format!("spawning load generator thread: {e}")))?;
+        handles.push(handle);
+    }
+    barrier.wait();
+    let t0 = Instant::now();
+    let mut metrics = Metrics::default();
+    let mut responses: Vec<Response> = Vec::with_capacity(plan.queries);
+    let mut first_err = None;
+    for handle in handles {
+        match handle.join() {
+            Ok(Ok((m, mut r))) => {
+                metrics.absorb(m);
+                responses.append(&mut r);
+            }
+            Ok(Err(e)) => first_err = first_err.or(Some(e)),
+            Err(_) => {
+                first_err =
+                    first_err.or(Some(NetError::Io("load generator thread panicked".into())))
+            }
+        }
+    }
+    // wall covers submission through last completion — not the
+    // registration phase before the barrier or the control drain below
+    let wall = t0.elapsed();
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    let end_makespan = control.drain()?.sim_makespan;
+    Ok(ServeReport {
+        metrics,
+        sim_makespan: end_makespan.saturating_sub(base_makespan),
+        wall,
+        responses,
+    })
+}
+
+type WorkerOut = Result<(Metrics, Vec<Response>), NetError>;
+
+fn connection_worker(
+    addr: SocketAddr,
+    plan: LoadPlan,
+    connections: usize,
+    conn: usize,
+    barrier: Arc<Barrier>,
+) -> WorkerOut {
+    // per-connection seed stream, decorrelated across connections
+    let mut rng = Rng::new(plan.seed.wrapping_add(conn as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    // comprehension phase: connect + register, before the run clock
+    let setup = (|| -> super::Result<(NetClient, Vec<RemoteContext>)> {
+        let mut client = NetClient::connect(addr)?;
+        let contexts = plan.contexts_per_conn.max(1);
+        let mut ctxs = Vec::with_capacity(contexts);
+        for _ in 0..contexts {
+            let kv = KvPair::new(
+                plan.n,
+                plan.d,
+                rng.normal_vec(plan.n * plan.d, 1.0),
+                rng.normal_vec(plan.n * plan.d, 1.0),
+            );
+            ctxs.push(client.register_context(&kv)?);
+        }
+        Ok((client, ctxs))
+    })();
+    // every worker must reach the barrier — even one whose setup
+    // failed — or the others (and the run-clock thread) wait forever
+    barrier.wait();
+    let (mut client, ctxs) = setup?;
+    let t0 = Instant::now();
+    let queries = share(plan.queries, connections, conn);
+    let window = plan.window.max(1);
+    let mut inflight: HashMap<u64, u64> = HashMap::with_capacity(window);
+    let mut metrics = Metrics::default();
+    let mut responses = Vec::with_capacity(queries);
+    for j in 0..queries {
+        if let Some(qps) = plan.qps {
+            // the global stream interleaves connections round-robin:
+            // this connection's j-th query is global query j*C + conn
+            let due = Duration::from_secs_f64((j * connections + conn) as f64 / qps);
+            if let Some(sleep) = due.checked_sub(t0.elapsed()) {
+                std::thread::sleep(sleep);
+            }
+        }
+        let embedding = rng.normal_vec(plan.d, 1.0);
+        // stamp before the socket write: client-observed latency
+        // includes the wire, exactly what a remote caller experiences
+        let submitted_ns = t0.elapsed().as_nanos() as u64;
+        let req = client.submit(ctxs[j % ctxs.len()], &embedding)?;
+        // arrivals must reach the server at their due time, not when
+        // the window next forces a receive (submits are write-buffered)
+        client.flush()?;
+        inflight.insert(req, submitted_ns);
+        while inflight.len() >= window {
+            recv_one(&mut client, &mut inflight, &mut metrics, &mut responses, t0, conn)?;
+        }
+    }
+    // tail: a drain barrier forces open batches out, then collect
+    if !inflight.is_empty() {
+        client.drain()?;
+    }
+    while !inflight.is_empty() {
+        recv_one(&mut client, &mut inflight, &mut metrics, &mut responses, t0, conn)?;
+    }
+    Ok((metrics, responses))
+}
+
+fn recv_one(
+    client: &mut NetClient,
+    inflight: &mut HashMap<u64, u64>,
+    metrics: &mut Metrics,
+    responses: &mut Vec<Response>,
+    t0: Instant,
+    conn: usize,
+) -> super::Result<()> {
+    let mut r = client.recv()?;
+    let now_ns = t0.elapsed().as_nanos() as u64;
+    let submitted_ns = inflight.remove(&r.id).unwrap_or(now_ns);
+    metrics.record(now_ns.saturating_sub(submitted_ns), now_ns, r.selected_rows, r.sim_cycles);
+    r.id = ((conn as u64) << 32) | r.id;
+    responses.push(r);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn share_splits_evenly_with_remainder_first() {
+        assert_eq!((0..4).map(|c| share(10, 4, c)).collect::<Vec<_>>(), vec![3, 3, 2, 2]);
+        assert_eq!((0..3).map(|c| share(9, 3, c)).collect::<Vec<_>>(), vec![3, 3, 3]);
+        assert_eq!((0..1).map(|c| share(5, 1, c)).collect::<Vec<_>>(), vec![5]);
+        assert_eq!((0..3).map(|c| share(2, 3, c)).collect::<Vec<_>>(), vec![1, 1, 0]);
+    }
+}

@@ -1,0 +1,149 @@
+//! `a3::net` — the std-only TCP serving subsystem: the network front
+//! door that turns the in-process [`crate::api::Engine`] into a
+//! servable system.
+//!
+//! The paper motivates A³ with attention-serving workloads (QA over
+//! knowledge bases, §II) where queries arrive from many concurrent
+//! clients; this module is the host-side network contract for that
+//! shape, built entirely on `std::net` + threads (tokio is not in the
+//! offline vendor set):
+//!
+//! * [`wire`] — a versioned, length-prefixed binary codec for the
+//!   full request/response surface (register context with K/V
+//!   tensors, submit, evict, drain/stats, shutdown), with explicit
+//!   error frames that map 1:1 onto [`A3Error`] variants — remote
+//!   callers see `QueueFull`/`MemoryBudget`/`UnknownContext` as typed
+//!   codes, not strings;
+//! * [`server`] — a `TcpListener` accept loop spawning per-connection
+//!   handler threads that translate frames into engine calls,
+//!   pipelining any number of in-flight tickets per connection (one
+//!   router thread demultiplexes engine completions back to their
+//!   connections) and exerting backpressure through the engine's
+//!   condvar admission path (a blocked reader stalls the client's
+//!   socket — TCP backpressure end to end);
+//! * [`client`] — a blocking client with the same typed API shape as
+//!   [`crate::api`] (`register_context` → `submit` → `recv`), plus
+//! * [`loadgen`] — a multi-connection load generator reproducing the
+//!   `run_stream`/`run_random` pacing over real sockets, returning a
+//!   [`crate::api::ServeReport`].
+//!
+//! # Remote serving
+//!
+//! Serving over TCP is three calls on each side. The server wraps an
+//! engine; the client mirrors `a3::api`, with every engine-side
+//! failure arriving as a typed [`A3Error`] inside
+//! [`NetError::Remote`]:
+//!
+//! ```
+//! use a3::api::{Dims, EngineBuilder, KvPair};
+//! use a3::net::{NetClient, NetServer};
+//! use a3::testutil::Rng;
+//! use std::sync::Arc;
+//!
+//! fn main() -> Result<(), Box<dyn std::error::Error>> {
+//!     // host side: engine + front door on an ephemeral loopback port
+//!     let engine = EngineBuilder::new().dims(Dims::new(32, 16)).max_batch(1).build()?;
+//!     let mut server = NetServer::bind(Arc::new(engine), "127.0.0.1:0")?;
+//!
+//!     // client side: register a context over the wire, then serve
+//!     let mut client = NetClient::connect(server.local_addr())?;
+//!     let mut rng = Rng::new(7);
+//!     let kv = KvPair::new(32, 16, rng.normal_vec(32 * 16, 1.0), rng.normal_vec(32 * 16, 1.0));
+//!     let ctx = client.register_context(&kv)?;
+//!     let req = client.submit(ctx, &rng.normal_vec(16, 1.0))?;
+//!     let response = client.recv()?;
+//!     assert_eq!(response.id, req);
+//!     assert_eq!(response.output.len(), 16);
+//!
+//!     // typed errors cross the wire: submits are pipelined, so the
+//!     // engine's typed failure comes back on the next recv
+//!     use a3::api::A3Error;
+//!     use a3::net::{NetError, RemoteContext};
+//!     let _bad = client.submit(RemoteContext::from_id(999), &[0.0; 16])?;
+//!     let err = client.recv().unwrap_err();
+//!     assert!(matches!(err, NetError::Remote(A3Error::UnknownContext(999))));
+//!
+//!     client.shutdown()?; // asks the server to stop; bind() owner joins
+//!     server.join();
+//!     Ok(())
+//! }
+//! ```
+//!
+//! The CLI front ends are `a3 serve --listen ADDR` (wrap the engine in
+//! a [`NetServer`]) and `a3 client --connect ADDR` (drive it with the
+//! [`loadgen`]); `examples/remote_qa.rs` is the end-to-end remote QA
+//! session.
+
+pub mod client;
+pub mod loadgen;
+pub mod server;
+pub mod wire;
+
+pub use client::{NetClient, RecvOutcome, RemoteContext, RemoteStats};
+pub use loadgen::{run_loadgen, LoadPlan};
+pub use server::{NetServer, NetServerConfig};
+pub use wire::{Frame, WireError, WireStats, WIRE_VERSION};
+
+use std::fmt;
+
+use crate::api::A3Error;
+
+/// Everything that can go wrong on the network serving path, split by
+/// layer: transport ([`NetError::Io`]/[`NetError::Closed`]), codec
+/// ([`NetError::Wire`]), protocol state ([`NetError::Protocol`]), and
+/// the remote engine's own typed errors ([`NetError::Remote`] — the
+/// wire round-trips [`A3Error`] losslessly, so remote callers match on
+/// the same variants as in-process callers).
+#[derive(Clone, Debug, PartialEq)]
+pub enum NetError {
+    /// Malformed/oversized/truncated frame or bad preamble.
+    Wire(WireError),
+    /// Transport failure (socket error, stringified).
+    Io(String),
+    /// The peer closed the connection.
+    Closed,
+    /// A typed serving error returned by the remote engine.
+    Remote(A3Error),
+    /// The peer answered out of protocol (unexpected frame kind).
+    Protocol(String),
+}
+
+impl fmt::Display for NetError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NetError::Wire(e) => write!(f, "wire error: {e}"),
+            NetError::Io(msg) => write!(f, "io error: {msg}"),
+            NetError::Closed => write!(f, "connection closed by peer"),
+            NetError::Remote(e) => write!(f, "remote engine error: {e}"),
+            NetError::Protocol(msg) => write!(f, "protocol violation: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+impl From<WireError> for NetError {
+    fn from(e: WireError) -> Self {
+        NetError::Wire(e)
+    }
+}
+
+impl From<std::io::Error> for NetError {
+    fn from(e: std::io::Error) -> Self {
+        // an EOF mid-read means the peer went away, not a local fault
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            NetError::Closed
+        } else {
+            NetError::Io(e.to_string())
+        }
+    }
+}
+
+impl From<A3Error> for NetError {
+    fn from(e: A3Error) -> Self {
+        NetError::Remote(e)
+    }
+}
+
+/// Network-path result alias.
+pub type Result<T> = std::result::Result<T, NetError>;

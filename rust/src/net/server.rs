@@ -1,0 +1,615 @@
+//! The TCP front door: accept loop → per-connection handler threads →
+//! one response router.
+//!
+//! Threading model (std threads only):
+//!
+//! * **accept thread** — blocks on [`std::net::TcpListener::accept`],
+//!   spawning a reader + writer thread pair per connection;
+//! * **reader thread** (per connection) — validates the preamble,
+//!   then translates request frames into [`Engine`] calls. Submits
+//!   are *pipelined*: the reader registers a route for the ticket and
+//!   immediately reads the next frame, so one connection can have any
+//!   number of queries in flight. When the engine's admission limit
+//!   closes, the reader parks on the engine's condvar admission path
+//!   (`Engine::wait_for_admission`) — while it waits it reads no
+//!   more frames, the kernel's socket buffer fills, and the remote
+//!   client's writes stall: backpressure propagates end to end over
+//!   TCP. Only after `admission_wait` of closed admission does the
+//!   client get a typed `QueueFull` error frame;
+//! * **writer thread** (per connection) — serializes reply frames
+//!   from an mpsc channel onto the socket (batching frames per flush),
+//!   so routed completions and direct replies never interleave
+//!   mid-frame;
+//! * **router thread** — the single consumer of the engine's
+//!   completion queue: it demultiplexes each [`Response`] to the
+//!   connection that submitted it (by ticket id) and attributes
+//!   per-connection latency into a [`AttributedMetrics`] window. A
+//!   completion that arrives before its route is registered is
+//!   stashed and delivered when the submitter catches up.
+//!
+//! The server owns response consumption for its engine: do not call
+//! `try_recv`/`recv_timeout`/`run_stream` on an engine while a
+//! [`NetServer`] is bound to it.
+
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::wire::{self, Frame, WireStats};
+use super::NetError;
+use crate::api::{A3Error, Engine, EngineStats};
+use crate::coordinator::metrics::{AttributedMetrics, MetricsReport};
+use crate::coordinator::request::{QueryId, Response};
+
+/// Request id used on error frames that answer no particular request
+/// (a malformed frame, a bad preamble). Clients must start their
+/// request ids at 0 and count up, so this value never collides.
+pub const NO_REQ: u64 = u64::MAX;
+
+/// Knobs for the front door.
+#[derive(Clone, Copy, Debug)]
+pub struct NetServerConfig {
+    /// How long a connection reader parks on the engine's admission
+    /// condvar (in slices, rechecking worker liveness) before giving
+    /// up and answering the submit with a typed
+    /// [`A3Error::QueueFull`] frame. While it parks, TCP backpressure
+    /// stalls the client.
+    pub admission_wait: Duration,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        NetServerConfig { admission_wait: Duration::from_millis(250) }
+    }
+}
+
+/// A route from an in-flight engine ticket back to the connection
+/// that submitted it.
+struct RouteEntry {
+    /// The client's request id, echoed on the response frame.
+    req: u64,
+    /// Connection id (metrics attribution key).
+    conn: u64,
+    /// Server-clock submit time (ns since server start).
+    submitted_ns: u64,
+    out: mpsc::Sender<Frame>,
+}
+
+/// Ticket → connection demux state, shared by the router thread and
+/// the connection readers (one short lock per submit/completion).
+#[derive(Default)]
+struct RouterState {
+    routes: HashMap<QueryId, RouteEntry>,
+    /// Completions that beat their route registration (the worker can
+    /// dispatch a full batch before the submitter returns).
+    stash: HashMap<QueryId, Response>,
+    /// Dispatch-failure notices that beat their route registration —
+    /// the failure analogue of `stash`, so a query dropped by e.g. an
+    /// eviction race still gets its typed error frame.
+    dead: HashMap<QueryId, A3Error>,
+}
+
+struct ServerShared {
+    engine: Arc<Engine>,
+    cfg: NetServerConfig,
+    /// The bound listen address — the shutdown poke's target.
+    addr: SocketAddr,
+    stop: AtomicBool,
+    router: Mutex<RouterState>,
+    /// Per-connection serving metrics for *live* connections (keyed
+    /// by connection id). Live windows hold every latency sample for
+    /// sort-once percentiles.
+    per_conn: Mutex<AttributedMetrics>,
+    /// Compact snapshots of disconnected connections' windows — a
+    /// long-lived server must not keep O(queries served) samples per
+    /// dead client. Capped (oldest dropped) so even the connection
+    /// count is bounded.
+    retired: Mutex<Vec<(u64, MetricsReport)>>,
+    next_conn: AtomicU64,
+    epoch: Instant,
+}
+
+/// How many disconnected connections' snapshots the server keeps.
+const RETIRED_CAP: usize = 10_000;
+
+impl ServerShared {
+    /// Record one routed completion against its connection's window.
+    fn attribute(&self, conn: u64, submitted_ns: u64, r: &Response) {
+        let now_ns = self.epoch.elapsed().as_nanos() as u64;
+        self.per_conn.lock().unwrap().record(
+            conn,
+            now_ns.saturating_sub(submitted_ns),
+            now_ns,
+            r.selected_rows,
+            r.sim_cycles,
+        );
+    }
+}
+
+/// The TCP serving front door over one [`Engine`]. See the module
+/// docs for the threading model and [`crate::net`] for a runnable
+/// example.
+pub struct NetServer {
+    addr: SocketAddr,
+    shared: Arc<ServerShared>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    router: Option<std::thread::JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (use port 0 for an ephemeral port — read it back
+    /// with [`NetServer::local_addr`]) and start serving `engine`.
+    /// The server becomes the engine's sole response consumer.
+    pub fn bind(engine: Arc<Engine>, addr: impl ToSocketAddrs) -> super::Result<NetServer> {
+        Self::bind_with(engine, addr, NetServerConfig::default())
+    }
+
+    pub fn bind_with(
+        engine: Arc<Engine>,
+        addr: impl ToSocketAddrs,
+        cfg: NetServerConfig,
+    ) -> super::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(ServerShared {
+            engine,
+            cfg,
+            addr,
+            stop: AtomicBool::new(false),
+            router: Mutex::new(RouterState::default()),
+            per_conn: Mutex::new(AttributedMetrics::new()),
+            retired: Mutex::new(Vec::new()),
+            next_conn: AtomicU64::new(0),
+            epoch: Instant::now(),
+        });
+        let accept = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("a3-net-accept".into())
+                .spawn(move || accept_loop(listener, shared))
+                .map_err(|e| NetError::Io(format!("spawning accept thread: {e}")))?
+        };
+        let router = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("a3-net-router".into())
+                .spawn(move || router_loop(shared))
+                .map_err(|e| NetError::Io(format!("spawning router thread: {e}")))?
+        };
+        Ok(NetServer { addr, shared, accept: Some(accept), router: Some(router) })
+    }
+
+    /// The bound address (with the real port when bound to port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The engine behind the front door.
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.shared.engine
+    }
+
+    /// Whether a shutdown has been requested (by a client's Shutdown
+    /// frame or [`NetServer::shutdown`]).
+    pub fn shutdown_requested(&self) -> bool {
+        self.shared.stop.load(Ordering::Acquire)
+    }
+
+    /// Per-connection serving snapshots (connection id → sort-once
+    /// report), in connection order: live windows plus the compact
+    /// snapshots of disconnected connections (kept up to
+    /// [`RETIRED_CAP`], oldest first to go), so end-of-run reporting
+    /// survives disconnects without unbounded sample storage.
+    pub fn connection_reports(&self) -> Vec<(u64, MetricsReport)> {
+        let mut out = self.shared.retired.lock().unwrap().clone();
+        out.extend(self.shared.per_conn.lock().unwrap().reports());
+        out.sort_by_key(|&(conn, _)| conn);
+        out
+    }
+
+    /// Aggregate over the *currently connected* clients' windows
+    /// (percentiles over the merged sample population). Disconnected
+    /// clients live on only as the compact per-connection snapshots
+    /// in [`NetServer::connection_reports`].
+    pub fn merged_report(&self) -> MetricsReport {
+        self.shared.per_conn.lock().unwrap().merged().report()
+    }
+
+    /// Ask the accept loop and router to stop. Idempotent; also
+    /// triggered remotely by a client's Shutdown frame.
+    pub fn shutdown(&self) {
+        request_stop(&self.shared, self.addr);
+    }
+
+    /// Block until the server has been asked to stop (via
+    /// [`NetServer::shutdown`] or a remote Shutdown frame) and the
+    /// accept + router threads have exited. The server handle stays
+    /// usable afterwards for final reports
+    /// ([`NetServer::connection_reports`]).
+    pub fn join(&mut self) {
+        self.join_inner();
+    }
+
+    fn join_inner(&mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.router.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+        self.join_inner();
+    }
+}
+
+/// Set the stop flag and poke the accept loop awake with a throwaway
+/// self-connection (it blocks in `accept`). Unspecified bind
+/// addresses (0.0.0.0 / ::) are not connectable on every platform, so
+/// the poke targets loopback at the bound port instead.
+fn request_stop(shared: &ServerShared, addr: SocketAddr) {
+    if shared.stop.swap(true, Ordering::AcqRel) {
+        return;
+    }
+    let mut poke = addr;
+    if poke.ip().is_unspecified() {
+        poke.set_ip(match poke {
+            SocketAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+            SocketAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+        });
+    }
+    let _ = TcpStream::connect_timeout(&poke, Duration::from_millis(200));
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<ServerShared>) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _peer)) => stream,
+            Err(_) => {
+                if shared.stop.load(Ordering::Acquire) {
+                    break;
+                }
+                // accept errors can be persistent (e.g. fd exhaustion):
+                // back off instead of spinning the core at 100%
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        if shared.stop.load(Ordering::Acquire) {
+            break; // the shutdown poke (or a late client) — drop it
+        }
+        let shared = Arc::clone(&shared);
+        let conn = shared.next_conn.fetch_add(1, Ordering::Relaxed);
+        // readers are detached: they exit when their client closes
+        // (read_frame -> Closed) or after answering a Shutdown
+        let _ = std::thread::Builder::new()
+            .name(format!("a3-net-conn{conn}"))
+            .spawn(move || handle_connection(shared, stream, conn));
+    }
+}
+
+/// The single consumer of the engine's completion queue: demux every
+/// response to its submitter, stashing early arrivals. After a stop
+/// request it keeps routing in-flight completions for a short grace
+/// period, then exits even if routes remain (queries parked in
+/// never-closing batches would otherwise pin the thread forever).
+fn router_loop(shared: Arc<ServerShared>) {
+    const STOP_GRACE: Duration = Duration::from_millis(500);
+    let mut stop_seen: Option<Instant> = None;
+    loop {
+        // answer queries lost to failed dispatches (e.g. a submit
+        // racing an LRU budget eviction) with their typed error — a
+        // remote ticket must never hang on a response that cannot come
+        let dropped = shared.engine.take_dropped();
+        if !dropped.is_empty() {
+            let mut state = shared.router.lock().unwrap();
+            for (id, error) in dropped {
+                state.stash.remove(&id);
+                match state.routes.remove(&id) {
+                    Some(e) => {
+                        let _ = e.out.send(Frame::Error { req: e.req, error });
+                    }
+                    // the submitter has not registered its route yet:
+                    // park the failure for it (same race as `stash`)
+                    None => {
+                        state.dead.insert(id, error);
+                    }
+                }
+            }
+        }
+        match shared.engine.recv_timeout(Duration::from_millis(20)) {
+            Ok(Some(r)) => {
+                // remove-or-stash must be atomic under ONE lock: if the
+                // lock were dropped between a failed route lookup and
+                // the stash insert, the submitter could register its
+                // route in the gap and the stashed response would be
+                // orphaned (client recv hangs forever)
+                let e = {
+                    let mut state = shared.router.lock().unwrap();
+                    match state.routes.remove(&r.id) {
+                        Some(e) => e,
+                        None => {
+                            state.stash.insert(r.id, r);
+                            continue;
+                        }
+                    }
+                };
+                shared.attribute(e.conn, e.submitted_ns, &r);
+                // a dead connection just drops its completions
+                let _ = e.out.send(Frame::from_response(e.req, &r));
+            }
+            Ok(None) => {
+                if shared.stop.load(Ordering::Acquire) {
+                    let since = *stop_seen.get_or_insert_with(Instant::now);
+                    if shared.router.lock().unwrap().routes.is_empty()
+                        || since.elapsed() >= STOP_GRACE
+                    {
+                        break;
+                    }
+                }
+            }
+            Err(A3Error::EngineStopped) => break,
+            // a one-shot dispatch poison (e.g. a submit racing an LRU
+            // budget eviction) is consumed by recv_timeout and reaches
+            // us here; the engine itself is still serving, so keep
+            // routing — later submits against the evicted context get
+            // their typed error on the submit path
+            Err(_) => continue,
+        }
+    }
+}
+
+/// Per-connection reader: preamble, then frames until disconnect,
+/// protocol error, or Shutdown.
+fn handle_connection(shared: Arc<ServerShared>, stream: TcpStream, conn: u64) {
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let (out_tx, out_rx) = mpsc::channel::<Frame>();
+    let writer = std::thread::Builder::new()
+        .name(format!("a3-net-conn{conn}-w"))
+        .spawn(move || writer_loop(stream, out_rx));
+    let Ok(writer) = writer else {
+        return;
+    };
+
+    match wire::read_preamble(&mut reader) {
+        Ok(()) => {}
+        Err(NetError::Wire(e)) => {
+            // answer in-protocol so the client sees a typed reason,
+            // then close (we cannot trust the rest of the stream)
+            let _ = out_tx.send(Frame::Error {
+                req: NO_REQ,
+                error: A3Error::ConfigError(format!("preamble rejected: {e}")),
+            });
+            drop(out_tx);
+            let _ = writer.join();
+            return;
+        }
+        Err(_) => {
+            drop(out_tx);
+            let _ = writer.join();
+            return;
+        }
+    }
+
+    loop {
+        match wire::read_frame(&mut reader) {
+            Ok(frame) => {
+                if !handle_frame(&shared, conn, frame, &out_tx) {
+                    break;
+                }
+            }
+            Err(NetError::Wire(e)) => {
+                // a desynced stream cannot be resynced: report + close
+                let _ = out_tx.send(Frame::Error {
+                    req: NO_REQ,
+                    error: A3Error::ConfigError(format!("malformed frame: {e}")),
+                });
+                break;
+            }
+            Err(_) => break, // Closed / transport error
+        }
+    }
+    drop(out_tx);
+    let _ = writer.join();
+    // retire this connection's window into a compact snapshot: live
+    // windows keep every latency sample, and a long-lived server must
+    // not grow O(total queries) per disconnected client
+    if let Some(window) = shared.per_conn.lock().unwrap().remove(conn) {
+        let mut retired = shared.retired.lock().unwrap();
+        if retired.len() >= RETIRED_CAP {
+            retired.remove(0);
+        }
+        retired.push((conn, window.report()));
+    }
+}
+
+/// Serialize reply frames onto the socket. Batches everything already
+/// queued into one flush. Exits when every sender (reader + routed
+/// entries) is gone or the socket dies.
+fn writer_loop(stream: TcpStream, out_rx: mpsc::Receiver<Frame>) {
+    let mut w = BufWriter::new(stream);
+    'outer: while let Ok(frame) = out_rx.recv() {
+        if wire::write_frame(&mut w, &frame).is_err() {
+            break;
+        }
+        loop {
+            match out_rx.try_recv() {
+                Ok(next) => {
+                    if wire::write_frame(&mut w, &next).is_err() {
+                        break 'outer;
+                    }
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    let _ = w.flush();
+                    return;
+                }
+            }
+        }
+        if w.flush().is_err() {
+            break;
+        }
+    }
+}
+
+/// Translate one request frame into engine calls. Returns `false`
+/// when the connection should close (Shutdown answered).
+fn handle_frame(
+    shared: &Arc<ServerShared>,
+    conn: u64,
+    frame: Frame,
+    out: &mpsc::Sender<Frame>,
+) -> bool {
+    let engine = &shared.engine;
+    match frame {
+        Frame::RegisterContext { req, n, d, key, value } => {
+            if n == 0 || d == 0 {
+                let error = A3Error::ConfigError(format!(
+                    "context dims must be non-zero (got n={n}, d={d})"
+                ));
+                let _ = out.send(Frame::Error { req, error });
+                return true;
+            }
+            let kv = crate::attention::KvPair::new(n as usize, d as usize, key, value);
+            let reply = match engine.register_context(kv) {
+                Ok(handle) => Frame::Registered { req, context: handle.id() },
+                Err(error) => Frame::Error { req, error },
+            };
+            let _ = out.send(reply);
+        }
+        Frame::Submit { req, context, embedding } => {
+            submit_frame(shared, conn, req, context, embedding, out);
+        }
+        Frame::Evict { req, context } => {
+            let reply = match engine.lookup_context(context).and_then(|h| engine.evict(&h)) {
+                Ok(()) => Frame::Evicted { req },
+                Err(error) => Frame::Error { req, error },
+            };
+            let _ = out.send(reply);
+        }
+        Frame::Drain { req } => {
+            let reply = match engine.drain() {
+                Ok(stats) => Frame::DrainStats { req, stats: wire_stats(&stats) },
+                Err(error) => Frame::Error { req, error },
+            };
+            let _ = out.send(reply);
+        }
+        Frame::Stats { req } => {
+            let _ = out.send(Frame::StatsReply {
+                req,
+                pending: engine.pending() as u64,
+                resident_bytes: engine.resident_bytes() as u64,
+                shards: engine.shard_count() as u32,
+            });
+        }
+        Frame::Shutdown { req } => {
+            let _ = out.send(Frame::ShutdownAck { req });
+            request_stop(shared, shared.addr);
+            return false;
+        }
+        // a client sending reply frames is out of protocol
+        other => {
+            let _ = out.send(Frame::Error {
+                req: other.req(),
+                error: A3Error::ConfigError("reply frames are not requests".into()),
+            });
+        }
+    }
+    true
+}
+
+/// Pipelined submit: resolve the context, submit with admission
+/// backpressure, register the route (or deliver a stashed early
+/// completion).
+fn submit_frame(
+    shared: &Arc<ServerShared>,
+    conn: u64,
+    req: u64,
+    context: u32,
+    embedding: Vec<f32>,
+    out: &mpsc::Sender<Frame>,
+) {
+    let engine = &shared.engine;
+    let handle = match engine.lookup_context(context) {
+        Ok(h) => h,
+        Err(error) => {
+            let _ = out.send(Frame::Error { req, error });
+            return;
+        }
+    };
+    // checked: a huge admission_wait (Duration::MAX = "block forever")
+    // must park indefinitely, not panic on Instant overflow
+    let deadline = Instant::now().checked_add(shared.cfg.admission_wait);
+    // stamped before the admission loop: time parked on backpressure
+    // is latency the client experiences, and the attribution window
+    // must charge it (stamping after the park would report ~0 latency
+    // exactly when the server is saturated)
+    let submitted_ns = shared.epoch.elapsed().as_nanos() as u64;
+    let mut embedding = embedding;
+    loop {
+        // submit_reclaim hands the embedding back on admission
+        // failure, so retries never clone the query payload
+        match engine.submit_reclaim(&handle, embedding) {
+            Ok(ticket) => {
+                let mut router = shared.router.lock().unwrap();
+                if let Some(r) = router.stash.remove(&ticket.id) {
+                    drop(router);
+                    shared.attribute(conn, submitted_ns, &r);
+                    let _ = out.send(Frame::from_response(req, &r));
+                } else if let Some(error) = router.dead.remove(&ticket.id) {
+                    // dispatched and already failed before we got here
+                    drop(router);
+                    let _ = out.send(Frame::Error { req, error });
+                } else {
+                    router.routes.insert(
+                        ticket.id,
+                        RouteEntry { req, conn, submitted_ns, out: out.clone() },
+                    );
+                }
+                return;
+            }
+            Err((A3Error::QueueFull { .. }, Some(reclaimed)))
+                if deadline.is_none_or(|d| Instant::now() < d) =>
+            {
+                embedding = reclaimed;
+                // park on the engine's admission condvar; while we
+                // wait the socket buffer fills and the client stalls
+                match engine.wait_for_admission(Duration::from_millis(5)) {
+                    Ok(_) => continue,
+                    Err(error) => {
+                        let _ = out.send(Frame::Error { req, error });
+                        return;
+                    }
+                }
+            }
+            Err((error, _)) => {
+                let _ = out.send(Frame::Error { req, error });
+                return;
+            }
+        }
+    }
+}
+
+/// Flatten a drain barrier's [`EngineStats`] for the wire.
+fn wire_stats(stats: &EngineStats) -> WireStats {
+    let report = stats.metrics.report();
+    WireStats {
+        completed: stats.metrics.completed,
+        sim_makespan: stats.sim_makespan,
+        mean_ns: report.mean_ns,
+        p50_ns: report.p50_ns,
+        p95_ns: report.p95_ns,
+        p99_ns: report.p99_ns,
+        mean_selected_rows: report.mean_selected_rows,
+    }
+}

@@ -1,0 +1,874 @@
+//! The versioned, length-prefixed binary wire codec.
+//!
+//! Every connection starts with a 6-byte preamble — the `A3NW` magic
+//! plus a little-endian [`WIRE_VERSION`] — so incompatible peers fail
+//! fast with a typed [`WireError`] instead of misparsing each other.
+//! After the preamble the stream is a sequence of frames:
+//!
+//! ```text
+//! | len: u32 LE | opcode: u8 | payload: len-1 bytes |
+//! ```
+//!
+//! `len` covers the opcode byte and the payload. Frames longer than
+//! [`MAX_FRAME_LEN`] are rejected before any allocation, so a hostile
+//! length prefix cannot balloon memory. All integers are little
+//! endian; f32/f64 travel as their LE bit patterns; strings are
+//! u32-length-prefixed UTF-8.
+//!
+//! Decoding never panics: every malformed input — truncated payload,
+//! oversized prefix, unknown opcode, trailing bytes, bad UTF-8, an
+//! unknown error code — comes back as a typed [`WireError`].
+//!
+//! Engine errors cross the wire as explicit [`Frame::Error`] frames
+//! whose payload is a numeric code plus the variant's own fields,
+//! mapping 1:1 onto [`A3Error`]: a remote caller matches on
+//! `A3Error::QueueFull { .. }` exactly like an in-process caller.
+
+use std::io::{Read, Write};
+
+use super::NetError;
+use crate::api::A3Error;
+use crate::coordinator::request::{ContextId, Response};
+
+/// Stream magic: the first four bytes of every connection.
+pub const MAGIC: [u8; 4] = *b"A3NW";
+/// Wire protocol version, bumped on any incompatible frame change.
+pub const WIRE_VERSION: u16 = 1;
+/// Hard cap on one frame's body (opcode + payload). Large enough for a
+/// 2048×512 f32 K/V pair in one register frame, small enough that a
+/// hostile length prefix cannot allocate unbounded memory.
+pub const MAX_FRAME_LEN: usize = 64 << 20;
+
+/// Typed codec failures. Every decode error is one of these — the
+/// codec never panics on wire input.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireError {
+    /// The payload ended before a field's bytes did.
+    Truncated { need: usize, have: usize },
+    /// The length prefix exceeds [`MAX_FRAME_LEN`].
+    Oversized { len: usize, max: usize },
+    /// The opcode byte names no known frame.
+    UnknownOpcode(u8),
+    /// The connection preamble's magic was wrong.
+    BadMagic([u8; 4]),
+    /// The peer speaks a different protocol version.
+    VersionMismatch { got: u16, want: u16 },
+    /// A frame decoded fully but left unconsumed bytes.
+    TrailingBytes { extra: usize },
+    /// A structurally invalid field (bad UTF-8, unknown error code…).
+    Malformed(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { need, have } => {
+                write!(f, "truncated frame: field needs {need} bytes, {have} remain")
+            }
+            WireError::Oversized { len, max } => {
+                write!(f, "oversized frame: length prefix {len} exceeds the {max}-byte cap")
+            }
+            WireError::UnknownOpcode(op) => write!(f, "unknown opcode 0x{op:02x}"),
+            WireError::BadMagic(m) => write!(f, "bad stream magic {m:02x?}"),
+            WireError::VersionMismatch { got, want } => {
+                write!(f, "wire version mismatch: peer speaks {got}, this build speaks {want}")
+            }
+            WireError::TrailingBytes { extra } => {
+                write!(f, "{extra} trailing bytes after a complete frame")
+            }
+            WireError::Malformed(msg) => write!(f, "malformed frame: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Drain/stats summary as it travels over the wire: the merged
+/// [`crate::api::EngineStats`] numbers a remote client needs to build
+/// reports without host-side access.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WireStats {
+    pub completed: u64,
+    /// Simulated accelerator makespan (cycles, max over shards).
+    pub sim_makespan: u64,
+    pub mean_ns: f64,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+    pub mean_selected_rows: f64,
+}
+
+/// One protocol frame. Requests carry a client-chosen `req` id that
+/// the matching reply echoes, so clients can pipeline any number of
+/// in-flight requests per connection; [`Frame::Response`] echoes the
+/// `req` of the [`Frame::Submit`] it completes (completion order, not
+/// submission order).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    // -- requests (client → server) ---------------------------------
+    /// Comprehension time: stage an n×d K/V pair as a context.
+    RegisterContext { req: u64, n: u32, d: u32, key: Vec<f32>, value: Vec<f32> },
+    /// One query against a registered context.
+    Submit { req: u64, context: ContextId, embedding: Vec<f32> },
+    /// Retire a context (its admitted queries are served first).
+    Evict { req: u64, context: ContextId },
+    /// All-shard drain barrier; replies with the merged stats window.
+    Drain { req: u64 },
+    /// Cheap observability snapshot (no barrier, no window reset).
+    Stats { req: u64 },
+    /// Ask the server process to stop accepting and exit its loop.
+    Shutdown { req: u64 },
+    // -- replies (server → client) ----------------------------------
+    Registered { req: u64, context: ContextId },
+    /// A completed query: the served attention output plus the
+    /// observability fields of [`Response`].
+    Response {
+        req: u64,
+        context: ContextId,
+        selected_rows: u32,
+        sim_cycles: u64,
+        completed_ns: u64,
+        output: Vec<f32>,
+    },
+    Evicted { req: u64 },
+    DrainStats { req: u64, stats: WireStats },
+    StatsReply { req: u64, pending: u64, resident_bytes: u64, shards: u32 },
+    ShutdownAck { req: u64 },
+    /// A typed engine error for request `req` — the 1:1 image of
+    /// [`A3Error`] on the wire.
+    Error { req: u64, error: A3Error },
+}
+
+const OP_REGISTER: u8 = 0x01;
+const OP_SUBMIT: u8 = 0x02;
+const OP_EVICT: u8 = 0x03;
+const OP_DRAIN: u8 = 0x04;
+const OP_STATS: u8 = 0x05;
+const OP_SHUTDOWN: u8 = 0x06;
+const OP_REGISTERED: u8 = 0x81;
+const OP_RESPONSE: u8 = 0x82;
+const OP_EVICTED: u8 = 0x83;
+const OP_DRAIN_STATS: u8 = 0x84;
+const OP_STATS_REPLY: u8 = 0x85;
+const OP_SHUTDOWN_ACK: u8 = 0x86;
+const OP_ERROR: u8 = 0x7F;
+
+// -- A3Error <-> wire code mapping (1:1, round-trip tested) ---------
+
+const ERR_CONFIG: u16 = 1;
+const ERR_UNKNOWN_CONTEXT: u16 = 2;
+const ERR_CONTEXT_EVICTED: u16 = 3;
+const ERR_QUEUE_FULL: u16 = 4;
+const ERR_BACKEND_MISMATCH: u16 = 5;
+const ERR_DIMENSION_MISMATCH: u16 = 6;
+const ERR_EMPTY_BATCH: u16 = 7;
+const ERR_MEMORY_BUDGET: u16 = 8;
+const ERR_ENGINE_STOPPED: u16 = 9;
+
+/// Flatten an [`A3Error`] to `(code, a, b, msg)` for the error frame.
+fn error_fields(e: &A3Error) -> (u16, u64, u64, &str) {
+    match e {
+        A3Error::ConfigError(msg) => (ERR_CONFIG, 0, 0, msg.as_str()),
+        A3Error::UnknownContext(id) => (ERR_UNKNOWN_CONTEXT, *id as u64, 0, ""),
+        A3Error::ContextEvicted(id) => (ERR_CONTEXT_EVICTED, *id as u64, 0, ""),
+        A3Error::QueueFull { pending, limit } => {
+            (ERR_QUEUE_FULL, *pending as u64, *limit as u64, "")
+        }
+        A3Error::BackendMismatch(msg) => (ERR_BACKEND_MISMATCH, 0, 0, msg.as_str()),
+        A3Error::DimensionMismatch { expected, got } => {
+            (ERR_DIMENSION_MISMATCH, *expected as u64, *got as u64, "")
+        }
+        A3Error::EmptyBatch => (ERR_EMPTY_BATCH, 0, 0, ""),
+        A3Error::MemoryBudget { required, budget } => {
+            (ERR_MEMORY_BUDGET, *required as u64, *budget as u64, "")
+        }
+        A3Error::EngineStopped => (ERR_ENGINE_STOPPED, 0, 0, ""),
+    }
+}
+
+/// Rebuild the [`A3Error`] from its wire fields.
+fn error_from_fields(code: u16, a: u64, b: u64, msg: String) -> Result<A3Error, WireError> {
+    Ok(match code {
+        ERR_CONFIG => A3Error::ConfigError(msg),
+        ERR_UNKNOWN_CONTEXT => A3Error::UnknownContext(a as ContextId),
+        ERR_CONTEXT_EVICTED => A3Error::ContextEvicted(a as ContextId),
+        ERR_QUEUE_FULL => A3Error::QueueFull { pending: a as usize, limit: b as usize },
+        ERR_BACKEND_MISMATCH => A3Error::BackendMismatch(msg),
+        ERR_DIMENSION_MISMATCH => {
+            A3Error::DimensionMismatch { expected: a as usize, got: b as usize }
+        }
+        ERR_EMPTY_BATCH => A3Error::EmptyBatch,
+        ERR_MEMORY_BUDGET => A3Error::MemoryBudget { required: a as usize, budget: b as usize },
+        ERR_ENGINE_STOPPED => A3Error::EngineStopped,
+        other => return Err(WireError::Malformed(format!("unknown error code {other}"))),
+    })
+}
+
+// -- little-endian put/take primitives ------------------------------
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    buf.reserve(xs.len() * 4);
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked decoding cursor: every take verifies the remaining
+/// length first, so a truncated payload is a typed error, never a
+/// slice panic, and no field allocates more than the bytes actually
+/// present.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cur { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated { need: n, have: self.remaining() });
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.bytes(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    /// `count` f32 values (count fixed by earlier fields, not a
+    /// length prefix of its own).
+    fn f32s(&mut self, count: usize) -> Result<Vec<f32>, WireError> {
+        let need = count
+            .checked_mul(4)
+            .ok_or_else(|| WireError::Malformed(format!("f32 count {count} overflows")))?;
+        let raw = self.bytes(need)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// u32-length-prefixed f32 vector.
+    fn f32_vec(&mut self) -> Result<Vec<f32>, WireError> {
+        let count = self.u32()? as usize;
+        self.f32s(count)
+    }
+
+    fn str(&mut self) -> Result<String, WireError> {
+        let len = self.u32()? as usize;
+        let raw = self.bytes(len)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| WireError::Malformed("non-UTF-8 string".into()))
+    }
+
+    /// A complete decode must consume the whole payload.
+    fn finish(self) -> Result<(), WireError> {
+        if self.remaining() != 0 {
+            return Err(WireError::TrailingBytes { extra: self.remaining() });
+        }
+        Ok(())
+    }
+}
+
+impl Frame {
+    /// Convenience: the reply frame for a completed engine
+    /// [`Response`], echoing the client's request id.
+    pub fn from_response(req: u64, r: &Response) -> Frame {
+        Frame::Response {
+            req,
+            context: r.context,
+            selected_rows: r.selected_rows as u32,
+            sim_cycles: r.sim_cycles,
+            completed_ns: r.completed_ns,
+            output: r.output.clone(),
+        }
+    }
+
+    /// Serialize this frame's body (opcode + payload) into `buf`.
+    pub fn encode_body(&self, buf: &mut Vec<u8>) {
+        match self {
+            Frame::RegisterContext { req, n, d, key, value } => {
+                buf.push(OP_REGISTER);
+                put_u64(buf, *req);
+                put_u32(buf, *n);
+                put_u32(buf, *d);
+                // key/value lengths are implied by n×d — the decoder
+                // recomputes and bounds-checks them
+                put_f32s(buf, key);
+                put_f32s(buf, value);
+            }
+            Frame::Submit { req, context, embedding } => {
+                buf.push(OP_SUBMIT);
+                put_u64(buf, *req);
+                put_u32(buf, *context);
+                put_u32(buf, embedding.len() as u32);
+                put_f32s(buf, embedding);
+            }
+            Frame::Evict { req, context } => {
+                buf.push(OP_EVICT);
+                put_u64(buf, *req);
+                put_u32(buf, *context);
+            }
+            Frame::Drain { req } => {
+                buf.push(OP_DRAIN);
+                put_u64(buf, *req);
+            }
+            Frame::Stats { req } => {
+                buf.push(OP_STATS);
+                put_u64(buf, *req);
+            }
+            Frame::Shutdown { req } => {
+                buf.push(OP_SHUTDOWN);
+                put_u64(buf, *req);
+            }
+            Frame::Registered { req, context } => {
+                buf.push(OP_REGISTERED);
+                put_u64(buf, *req);
+                put_u32(buf, *context);
+            }
+            Frame::Response { req, context, selected_rows, sim_cycles, completed_ns, output } => {
+                buf.push(OP_RESPONSE);
+                put_u64(buf, *req);
+                put_u32(buf, *context);
+                put_u32(buf, *selected_rows);
+                put_u64(buf, *sim_cycles);
+                put_u64(buf, *completed_ns);
+                put_u32(buf, output.len() as u32);
+                put_f32s(buf, output);
+            }
+            Frame::Evicted { req } => {
+                buf.push(OP_EVICTED);
+                put_u64(buf, *req);
+            }
+            Frame::DrainStats { req, stats } => {
+                buf.push(OP_DRAIN_STATS);
+                put_u64(buf, *req);
+                put_u64(buf, stats.completed);
+                put_u64(buf, stats.sim_makespan);
+                put_f64(buf, stats.mean_ns);
+                put_u64(buf, stats.p50_ns);
+                put_u64(buf, stats.p95_ns);
+                put_u64(buf, stats.p99_ns);
+                put_f64(buf, stats.mean_selected_rows);
+            }
+            Frame::StatsReply { req, pending, resident_bytes, shards } => {
+                buf.push(OP_STATS_REPLY);
+                put_u64(buf, *req);
+                put_u64(buf, *pending);
+                put_u64(buf, *resident_bytes);
+                put_u32(buf, *shards);
+            }
+            Frame::ShutdownAck { req } => {
+                buf.push(OP_SHUTDOWN_ACK);
+                put_u64(buf, *req);
+            }
+            Frame::Error { req, error } => {
+                buf.push(OP_ERROR);
+                put_u64(buf, *req);
+                let (code, a, b, msg) = error_fields(error);
+                put_u16(buf, code);
+                put_u64(buf, a);
+                put_u64(buf, b);
+                put_str(buf, msg);
+            }
+        }
+    }
+
+    /// Decode one frame body (opcode + payload). Typed errors on every
+    /// malformed input; trailing bytes after a complete frame are an
+    /// error too (a desynced stream must not be silently resynced).
+    pub fn decode_body(body: &[u8]) -> Result<Frame, WireError> {
+        let mut cur = Cur::new(body);
+        let opcode = cur.u8()?;
+        let frame = match opcode {
+            OP_REGISTER => {
+                let req = cur.u64()?;
+                let n = cur.u32()?;
+                let d = cur.u32()?;
+                let count = (n as u64)
+                    .checked_mul(d as u64)
+                    .filter(|&c| c <= MAX_FRAME_LEN as u64 / 8)
+                    .ok_or_else(|| {
+                        WireError::Malformed(format!("register dims {n}x{d} overflow the cap"))
+                    })? as usize;
+                let key = cur.f32s(count)?;
+                let value = cur.f32s(count)?;
+                Frame::RegisterContext { req, n, d, key, value }
+            }
+            OP_SUBMIT => {
+                let req = cur.u64()?;
+                let context = cur.u32()?;
+                let embedding = cur.f32_vec()?;
+                Frame::Submit { req, context, embedding }
+            }
+            OP_EVICT => Frame::Evict { req: cur.u64()?, context: cur.u32()? },
+            OP_DRAIN => Frame::Drain { req: cur.u64()? },
+            OP_STATS => Frame::Stats { req: cur.u64()? },
+            OP_SHUTDOWN => Frame::Shutdown { req: cur.u64()? },
+            OP_REGISTERED => Frame::Registered { req: cur.u64()?, context: cur.u32()? },
+            OP_RESPONSE => {
+                let req = cur.u64()?;
+                let context = cur.u32()?;
+                let selected_rows = cur.u32()?;
+                let sim_cycles = cur.u64()?;
+                let completed_ns = cur.u64()?;
+                let output = cur.f32_vec()?;
+                Frame::Response { req, context, selected_rows, sim_cycles, completed_ns, output }
+            }
+            OP_EVICTED => Frame::Evicted { req: cur.u64()? },
+            OP_DRAIN_STATS => {
+                let req = cur.u64()?;
+                let stats = WireStats {
+                    completed: cur.u64()?,
+                    sim_makespan: cur.u64()?,
+                    mean_ns: cur.f64()?,
+                    p50_ns: cur.u64()?,
+                    p95_ns: cur.u64()?,
+                    p99_ns: cur.u64()?,
+                    mean_selected_rows: cur.f64()?,
+                };
+                Frame::DrainStats { req, stats }
+            }
+            OP_STATS_REPLY => Frame::StatsReply {
+                req: cur.u64()?,
+                pending: cur.u64()?,
+                resident_bytes: cur.u64()?,
+                shards: cur.u32()?,
+            },
+            OP_SHUTDOWN_ACK => Frame::ShutdownAck { req: cur.u64()? },
+            OP_ERROR => {
+                let req = cur.u64()?;
+                let code = cur.u16()?;
+                let a = cur.u64()?;
+                let b = cur.u64()?;
+                let msg = cur.str()?;
+                Frame::Error { req, error: error_from_fields(code, a, b, msg)? }
+            }
+            other => return Err(WireError::UnknownOpcode(other)),
+        };
+        cur.finish()?;
+        Ok(frame)
+    }
+
+    /// The request id this frame carries (every frame has one).
+    pub fn req(&self) -> u64 {
+        match self {
+            Frame::RegisterContext { req, .. }
+            | Frame::Submit { req, .. }
+            | Frame::Evict { req, .. }
+            | Frame::Drain { req }
+            | Frame::Stats { req }
+            | Frame::Shutdown { req }
+            | Frame::Registered { req, .. }
+            | Frame::Response { req, .. }
+            | Frame::Evicted { req }
+            | Frame::DrainStats { req, .. }
+            | Frame::StatsReply { req, .. }
+            | Frame::ShutdownAck { req }
+            | Frame::Error { req, .. } => *req,
+        }
+    }
+}
+
+// -- stream I/O -----------------------------------------------------
+
+/// Write the connection preamble (magic + version).
+pub fn write_preamble<W: Write>(w: &mut W) -> Result<(), NetError> {
+    w.write_all(&MAGIC)?;
+    w.write_all(&WIRE_VERSION.to_le_bytes())?;
+    Ok(())
+}
+
+/// Read and validate the connection preamble.
+pub fn read_preamble<R: Read>(r: &mut R) -> Result<(), NetError> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic).into());
+    }
+    let mut ver = [0u8; 2];
+    r.read_exact(&mut ver)?;
+    let got = u16::from_le_bytes(ver);
+    if got != WIRE_VERSION {
+        return Err(WireError::VersionMismatch { got, want: WIRE_VERSION }.into());
+    }
+    Ok(())
+}
+
+/// Length-prefix and write an already-encoded frame body.
+fn write_body<W: Write>(w: &mut W, body: &[u8]) -> Result<(), NetError> {
+    if body.len() > MAX_FRAME_LEN {
+        return Err(WireError::Oversized { len: body.len(), max: MAX_FRAME_LEN }.into());
+    }
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(body)?;
+    Ok(())
+}
+
+/// Write one length-prefixed frame. The caller owns flushing (batch
+/// several frames per syscall when pipelining).
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<(), NetError> {
+    let mut body = Vec::new();
+    frame.encode_body(&mut body);
+    write_body(w, &body)
+}
+
+/// Write a RegisterContext frame straight from borrowed K/V planes —
+/// byte-identical to encoding an owned [`Frame::RegisterContext`],
+/// without cloning the two matrices first (the client's registration
+/// path; a paper-dims context is ~160 KB per plane). `key` and
+/// `value` must each hold exactly `n * d` values.
+pub fn write_register_frame<W: Write>(
+    w: &mut W,
+    req: u64,
+    n: u32,
+    d: u32,
+    key: &[f32],
+    value: &[f32],
+) -> Result<(), NetError> {
+    debug_assert_eq!(key.len(), n as usize * d as usize);
+    debug_assert_eq!(value.len(), n as usize * d as usize);
+    let mut body = Vec::with_capacity(1 + 8 + 4 + 4 + (key.len() + value.len()) * 4);
+    body.push(OP_REGISTER);
+    put_u64(&mut body, req);
+    put_u32(&mut body, n);
+    put_u32(&mut body, d);
+    put_f32s(&mut body, key);
+    put_f32s(&mut body, value);
+    write_body(w, &body)
+}
+
+/// Read one length-prefixed frame. A clean EOF at a frame boundary —
+/// or the peer vanishing mid-frame — is [`NetError::Closed`]; a
+/// hostile length prefix is rejected before any allocation.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, NetError> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)?;
+    let len = u32::from_le_bytes(len4) as usize;
+    if len == 0 {
+        return Err(WireError::Malformed("zero-length frame".into()).into());
+    }
+    if len > MAX_FRAME_LEN {
+        return Err(WireError::Oversized { len, max: MAX_FRAME_LEN }.into());
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(Frame::decode_body(&body)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{check, Rng};
+
+    fn round_trip(frame: &Frame) {
+        let mut body = Vec::new();
+        frame.encode_body(&mut body);
+        let decoded = Frame::decode_body(&body).expect("round trip decode");
+        assert_eq!(&decoded, frame);
+        // and through the framed stream layer
+        let mut stream = Vec::new();
+        write_frame(&mut stream, frame).unwrap();
+        let mut cursor = std::io::Cursor::new(stream);
+        assert_eq!(&read_frame(&mut cursor).unwrap(), frame);
+    }
+
+    fn random_error(rng: &mut Rng) -> A3Error {
+        match rng.below(9) {
+            0 => A3Error::ConfigError(format!("cfg-{}", rng.next_u64())),
+            1 => A3Error::UnknownContext(rng.next_u64() as u32),
+            2 => A3Error::ContextEvicted(rng.next_u64() as u32),
+            3 => A3Error::QueueFull { pending: rng.below(1 << 20), limit: rng.below(1 << 20) },
+            4 => A3Error::BackendMismatch(format!("backend-{}", rng.next_u64())),
+            5 => A3Error::DimensionMismatch { expected: rng.below(4096), got: rng.below(4096) },
+            6 => A3Error::EmptyBatch,
+            7 => A3Error::MemoryBudget { required: rng.below(1 << 30), budget: rng.below(1 << 30) },
+            _ => A3Error::EngineStopped,
+        }
+    }
+
+    fn random_frame(rng: &mut Rng) -> Frame {
+        let req = rng.next_u64();
+        match rng.below(13) {
+            0 => {
+                let (n, d) = (rng.range(1, 8) as u32, rng.range(1, 8) as u32);
+                let count = (n * d) as usize;
+                Frame::RegisterContext {
+                    req,
+                    n,
+                    d,
+                    key: rng.normal_vec(count, 1.0),
+                    value: rng.normal_vec(count, 1.0),
+                }
+            }
+            1 => {
+                let len = rng.below(32);
+                Frame::Submit {
+                    req,
+                    context: rng.next_u64() as u32,
+                    embedding: rng.normal_vec(len, 1.0),
+                }
+            }
+            2 => Frame::Evict { req, context: rng.next_u64() as u32 },
+            3 => Frame::Drain { req },
+            4 => Frame::Stats { req },
+            5 => Frame::Shutdown { req },
+            6 => Frame::Registered { req, context: rng.next_u64() as u32 },
+            7 => {
+                let len = rng.below(64);
+                Frame::Response {
+                    req,
+                    context: rng.next_u64() as u32,
+                    selected_rows: rng.below(512) as u32,
+                    sim_cycles: rng.next_u64(),
+                    completed_ns: rng.next_u64(),
+                    output: rng.normal_vec(len, 1.0),
+                }
+            }
+            8 => Frame::Evicted { req },
+            9 => Frame::DrainStats {
+                req,
+                stats: WireStats {
+                    completed: rng.next_u64(),
+                    sim_makespan: rng.next_u64(),
+                    mean_ns: rng.f64() * 1e9,
+                    p50_ns: rng.next_u64(),
+                    p95_ns: rng.next_u64(),
+                    p99_ns: rng.next_u64(),
+                    mean_selected_rows: rng.f64() * 320.0,
+                },
+            },
+            10 => Frame::StatsReply {
+                req,
+                pending: rng.next_u64(),
+                resident_bytes: rng.next_u64(),
+                shards: rng.range(1, 64) as u32,
+            },
+            11 => Frame::ShutdownAck { req },
+            _ => Frame::Error { req, error: random_error(rng) },
+        }
+    }
+
+    #[test]
+    fn every_frame_type_round_trips() {
+        // property test: random instances of all 13 frame kinds
+        check(500, |rng| round_trip(&random_frame(rng)));
+    }
+
+    #[test]
+    fn every_error_variant_round_trips_1_to_1() {
+        // the explicit list, so a new A3Error variant that is not
+        // wired into the codec fails here, not in production
+        let all = vec![
+            A3Error::ConfigError("units must be >= 1".into()),
+            A3Error::UnknownContext(7),
+            A3Error::ContextEvicted(9),
+            A3Error::QueueFull { pending: 128, limit: 64 },
+            A3Error::BackendMismatch("pipe/kind".into()),
+            A3Error::DimensionMismatch { expected: 64, got: 5 },
+            A3Error::EmptyBatch,
+            A3Error::MemoryBudget { required: 4096, budget: 1024 },
+            A3Error::EngineStopped,
+        ];
+        for error in all {
+            round_trip(&Frame::Error { req: 3, error });
+        }
+    }
+
+    #[test]
+    fn req_accessor_matches_every_variant() {
+        check(200, |rng| {
+            let frame = random_frame(rng);
+            let mut body = Vec::new();
+            frame.encode_body(&mut body);
+            // req is always the first field after the opcode
+            let wire_req = u64::from_le_bytes(body[1..9].try_into().unwrap());
+            assert_eq!(frame.req(), wire_req);
+        });
+    }
+
+    #[test]
+    fn truncated_payloads_are_typed_errors_never_panics() {
+        // chop every prefix of every frame type: each must decode to a
+        // typed error (almost always Truncated), never panic
+        check(100, |rng| {
+            let frame = random_frame(rng);
+            let mut body = Vec::new();
+            frame.encode_body(&mut body);
+            for cut in 0..body.len() {
+                match Frame::decode_body(&body[..cut]) {
+                    Err(_) => {}
+                    // a prefix that still decodes must not silently
+                    // reorder fields: it can only be a shorter valid
+                    // frame if the dropped bytes were a length-prefixed
+                    // tail, which finish() rejects — so Ok is a bug
+                    Ok(f) => panic!("prefix of {cut} bytes decoded to {f:?}"),
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_before_allocation() {
+        let mut stream = Vec::new();
+        stream.extend_from_slice(&((MAX_FRAME_LEN as u32) + 1).to_le_bytes());
+        stream.extend_from_slice(&[0u8; 16]); // far fewer than claimed
+        let err = read_frame(&mut std::io::Cursor::new(stream)).unwrap_err();
+        assert_eq!(
+            err,
+            NetError::Wire(WireError::Oversized { len: MAX_FRAME_LEN + 1, max: MAX_FRAME_LEN })
+        );
+        // zero-length frames are malformed, not an infinite loop
+        let mut zero = std::io::Cursor::new(0u32.to_le_bytes().to_vec());
+        assert!(matches!(
+            read_frame(&mut zero),
+            Err(NetError::Wire(WireError::Malformed(_)))
+        ));
+    }
+
+    #[test]
+    fn unknown_opcode_and_trailing_bytes_are_typed() {
+        assert_eq!(
+            Frame::decode_body(&[0xEE, 0, 0, 0, 0, 0, 0, 0, 0]),
+            Err(WireError::UnknownOpcode(0xEE))
+        );
+        let mut body = Vec::new();
+        Frame::Drain { req: 5 }.encode_body(&mut body);
+        body.push(0xAB);
+        assert_eq!(Frame::decode_body(&body), Err(WireError::TrailingBytes { extra: 1 }));
+    }
+
+    #[test]
+    fn borrowed_register_encoding_matches_owned_frame() {
+        let mut rng = Rng::new(17);
+        let (n, d) = (6u32, 4u32);
+        let key = rng.normal_vec((n * d) as usize, 1.0);
+        let value = rng.normal_vec((n * d) as usize, 1.0);
+        let mut owned = Vec::new();
+        write_frame(
+            &mut owned,
+            &Frame::RegisterContext { req: 9, n, d, key: key.clone(), value: value.clone() },
+        )
+        .unwrap();
+        let mut borrowed = Vec::new();
+        write_register_frame(&mut borrowed, 9, n, d, &key, &value).unwrap();
+        assert_eq!(owned, borrowed, "the zero-clone path must stay byte-identical");
+    }
+
+    #[test]
+    fn register_dims_that_overflow_the_cap_are_malformed() {
+        // n×d chosen so n*d*8 bytes would exceed MAX_FRAME_LEN: the
+        // decoder must refuse before allocating anything
+        let mut body = vec![OP_REGISTER];
+        body.extend_from_slice(&7u64.to_le_bytes());
+        body.extend_from_slice(&u32::MAX.to_le_bytes());
+        body.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(Frame::decode_body(&body), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn unknown_error_code_is_malformed() {
+        let mut body = vec![OP_ERROR];
+        body.extend_from_slice(&1u64.to_le_bytes()); // req
+        body.extend_from_slice(&999u16.to_le_bytes()); // unknown code
+        body.extend_from_slice(&0u64.to_le_bytes()); // a
+        body.extend_from_slice(&0u64.to_le_bytes()); // b
+        body.extend_from_slice(&0u32.to_le_bytes()); // empty msg
+        assert!(matches!(Frame::decode_body(&body), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn non_utf8_error_message_is_malformed() {
+        let mut body = vec![OP_ERROR];
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.extend_from_slice(&ERR_CONFIG.to_le_bytes());
+        body.extend_from_slice(&0u64.to_le_bytes());
+        body.extend_from_slice(&0u64.to_le_bytes());
+        body.extend_from_slice(&2u32.to_le_bytes());
+        body.extend_from_slice(&[0xFF, 0xFE]); // invalid UTF-8
+        assert!(matches!(Frame::decode_body(&body), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn preamble_rejects_bad_magic_and_wrong_version() {
+        let mut good = Vec::new();
+        write_preamble(&mut good).unwrap();
+        read_preamble(&mut std::io::Cursor::new(good.clone())).unwrap();
+
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        assert!(matches!(
+            read_preamble(&mut std::io::Cursor::new(bad_magic)),
+            Err(NetError::Wire(WireError::BadMagic(_)))
+        ));
+
+        let mut bad_version = good;
+        bad_version[4] = 0xFF;
+        bad_version[5] = 0xFF;
+        assert_eq!(
+            read_preamble(&mut std::io::Cursor::new(bad_version)),
+            Err(NetError::Wire(WireError::VersionMismatch {
+                got: 0xFFFF,
+                want: WIRE_VERSION
+            }))
+        );
+    }
+
+    #[test]
+    fn closed_stream_is_closed_not_io() {
+        // EOF at a frame boundary
+        let mut empty = std::io::Cursor::new(Vec::new());
+        assert_eq!(read_frame(&mut empty), Err(NetError::Closed));
+        // EOF mid-frame (peer vanished): also Closed
+        let mut body = Vec::new();
+        write_frame(&mut body, &Frame::Drain { req: 1 }).unwrap();
+        body.truncate(body.len() - 2);
+        assert_eq!(read_frame(&mut std::io::Cursor::new(body)), Err(NetError::Closed));
+    }
+}

@@ -22,7 +22,7 @@ use a3::attention::{
     Workspace,
 };
 use a3::bench::{bench, black_box, budget};
-use a3::coordinator::{KvContext, Query, Scheduler, UnitConfig, UnitKind};
+use a3::coordinator::{KvContext, Query, Scheduler, UnitConfig, UnitKind, NO_DEADLINE};
 use a3::model::AttentionBackend;
 use a3::sim::{BasePipeline, Dims, Module, PipelineSim};
 use a3::testutil::Rng;
@@ -167,6 +167,7 @@ fn main() {
             context: 0,
             embedding: vec![0.1; d],
             arrival_ns: 0,
+            deadline_ns: NO_DEADLINE,
         })
         .collect();
     println!("{}", bench("scheduler dispatch batch-8", b, || {
@@ -239,6 +240,35 @@ fn main() {
             while sharded.try_recv().expect("recv").is_some() {}
         }));
     }
+
+    // degraded serve: the same threaded submit+recv loop, but with the
+    // load-shedding knob armed so every batch downgrades exact Base
+    // units to the conservative approximate configuration (paper §V:
+    // M = n/2, T = 5%). Compare against "api engine submit+recv
+    // batch-8" above for the cost the engine pays per batch when it is
+    // trading accuracy for survival under pressure.
+    let degraded = a3::api::EngineBuilder::new()
+        .dims(Dims::paper())
+        .max_batch(8)
+        .degrade_under_pressure(1)
+        .build()
+        .expect("engine");
+    let degraded_ctx = degraded.register_context(kv.clone()).expect("register");
+    println!("{}", bench("degraded serve batch-8 (conservative fallback)", b, || {
+        for qq in batch8.chunks_exact(d) {
+            degraded.submit(&degraded_ctx, qq.to_vec()).expect("submit");
+        }
+        let mut got = 0;
+        while got < 8 {
+            if degraded
+                .recv_timeout(std::time::Duration::from_secs(5))
+                .expect("recv")
+                .is_some()
+            {
+                got += 1;
+            }
+        }
+    }));
 
     // the network front door end to end over loopback TCP: a
     // pipelined batch of 8 through the wire codec, the connection

@@ -35,7 +35,7 @@ use crate::approx::SortedColumns;
 use crate::attention::KvPair;
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{ContextId, KvContext, Query, QueryId, Response};
+use crate::coordinator::request::{ContextId, KvContext, Query, QueryId, Response, NO_DEADLINE};
 use crate::coordinator::scheduler::{Scheduler, UnitConfig, UnitKind};
 use crate::coordinator::store::ContextStore;
 use crate::model::AttentionBackend;
@@ -58,6 +58,7 @@ pub struct EngineBuilder {
     max_pending: usize,
     shards: usize,
     memory_budget: Option<usize>,
+    degrade_pending: Option<usize>,
 }
 
 impl Default for EngineBuilder {
@@ -71,6 +72,7 @@ impl Default for EngineBuilder {
             max_pending: 65_536,
             shards: 1,
             memory_budget: None,
+            degrade_pending: None,
         }
     }
 }
@@ -166,6 +168,21 @@ impl EngineBuilder {
         self
     }
 
+    /// Load-shed through the paper's §V accuracy/throughput knob:
+    /// whenever the engine-wide in-flight count is at least `pending`
+    /// at dispatch time, Base-unit shards serve that batch through the
+    /// conservative approximate backend (M = n/2, T = 5%) instead of
+    /// the exact datapath — trading a bounded, observable accuracy dip
+    /// (`selected_rows < n` on degraded responses) for approximate-
+    /// pipeline cycle costs. Outputs stay bit-identical to running
+    /// [`AttentionBackend::conservative`] directly. Approximate
+    /// engines are unaffected (already on the cheap datapath). Unset =
+    /// always exact.
+    pub fn degrade_under_pressure(mut self, pending: usize) -> Self {
+        self.degrade_pending = Some(pending);
+        self
+    }
+
     /// Validate and start the engine (spawns the shard workers).
     pub fn build(self) -> Result<Engine, A3Error> {
         let cfg = |msg: String| Err(A3Error::ConfigError(msg));
@@ -188,6 +205,9 @@ impl EngineBuilder {
             if !qps.is_finite() || qps <= 0.0 {
                 return cfg(format!("arrival_qps must be finite and positive (got {qps})"));
             }
+        }
+        if self.degrade_pending == Some(0) {
+            return cfg("degrade_under_pressure threshold must be >= 1 (unset it to disable)".into());
         }
         if self.max_pending < self.batch.max_batch {
             return cfg(format!(
@@ -392,6 +412,24 @@ enum Cmd {
     /// is charged to neither (the classic serve loop measured arrivals
     /// from serve start).
     SetArrivalBase(u64),
+    /// Deterministic fault injection (the chaos harness and the
+    /// supervision tests drive these; production clients never send
+    /// them).
+    Chaos(ChaosCmd),
+}
+
+/// Injected faults a shard worker executes at its command loop — the
+/// same safe points where real faults are caught, so recovery is
+/// exercised exactly as it would fire in production.
+pub(crate) enum ChaosCmd {
+    /// Panic the worker thread now. The supervisor catches the unwind,
+    /// fails everything in flight on this shard with
+    /// [`A3Error::ShardFailed`], and respawns the worker state.
+    PanicNow,
+    /// Stall the next dispatched batch by this long before it runs
+    /// (models a straggler unit; deadline shedding still applies to
+    /// the queries behind it).
+    SlowNextBatch(Duration),
 }
 
 /// One shard's drain ack: its metrics window (taken, accumulator
@@ -533,8 +571,11 @@ impl Engine {
             max_pending,
             shards,
             memory_budget,
+            degrade_pending,
         } = builder;
-        let needs_sorted = kind.needs_sorted_contexts();
+        // the degraded fallback runs candidate selection, so contexts
+        // must prewarm their sorted cache even on an exact engine
+        let needs_sorted = kind.needs_sorted_contexts() || degrade_pending.is_some();
         let store = Arc::new(ContextStore::new(shards, memory_budget));
         let registry = Arc::new(Mutex::new(Registry::default()));
         let (resp_tx, resp_rx) = mpsc::channel();
@@ -553,15 +594,14 @@ impl Engine {
         let mut workers = Vec::with_capacity(shards);
         for shard in 0..shards {
             let (cmd_tx, cmd_rx) = mpsc::channel();
+            let unit_config = UnitConfig { kind, dims };
+            let unit_count = units_for_shard(units, shards, shard);
             let mut worker = ShardWorker {
                 shard,
                 cmd_rx,
                 resp_tx: resp_tx.clone(),
                 batcher: Batcher::new(batch),
-                scheduler: Scheduler::replicated(
-                    UnitConfig { kind, dims },
-                    units_for_shard(units, shards, shard),
-                ),
+                scheduler: Scheduler::replicated(unit_config, unit_count),
                 metrics: Metrics::default(),
                 store: Arc::clone(&store),
                 registry: Arc::clone(&registry),
@@ -571,6 +611,12 @@ impl Engine {
                 arrival_base_ns: 0,
                 sim_base_cycles: 0,
                 shared: Arc::clone(&shared),
+                batch_policy: batch,
+                unit_config,
+                unit_count,
+                degrade_pending,
+                slow_next: None,
+                sim_floor: 0,
             };
             let handle = std::thread::Builder::new()
                 .name(format!("a3-shard{shard}"))
@@ -759,9 +805,42 @@ impl Engine {
     /// Drain the per-query dispatch-failure notices (query id + the
     /// typed error that dropped it). The network front door's router
     /// polls this so every stranded remote ticket is answered with an
-    /// error frame instead of a response that can never come.
-    pub(crate) fn take_dropped(&self) -> Vec<(QueryId, A3Error)> {
+    /// error frame instead of a response that can never come;
+    /// in-process consumers that track individual tickets poll it for
+    /// the same per-ticket resolution (deadline sheds, shard-failure
+    /// drops). Notices are bounded at `max_pending` (oldest first), so
+    /// a consumer that drains on every poll never loses one.
+    pub fn take_dropped(&self) -> Vec<(QueryId, A3Error)> {
         std::mem::take(&mut *self.shared.dropped_queries.lock().unwrap())
+    }
+
+    /// Fault injection: panic shard `shard`'s worker thread at its
+    /// next command. The supervisor fails that shard's in-flight
+    /// queries with [`A3Error::ShardFailed`] and respawns the worker
+    /// against the surviving context state; other shards keep serving.
+    /// A chaos-harness instrument — production clients have no reason
+    /// to call it.
+    pub fn chaos_panic_shard(&self, shard: usize) -> Result<(), A3Error> {
+        self.chaos(shard, ChaosCmd::PanicNow)
+    }
+
+    /// Fault injection: stall shard `shard`'s next dispatched batch by
+    /// `delay` (a straggler unit). Deadline-carrying queries behind
+    /// the stall are shed normally once it clears.
+    pub fn chaos_slow_shard(&self, shard: usize, delay: Duration) -> Result<(), A3Error> {
+        self.chaos(shard, ChaosCmd::SlowNextBatch(delay))
+    }
+
+    fn chaos(&self, shard: usize, cmd: ChaosCmd) -> Result<(), A3Error> {
+        if shard >= self.shard_count() {
+            return Err(A3Error::ConfigError(format!(
+                "chaos target shard {shard} out of range (engine has {})",
+                self.shard_count()
+            )));
+        }
+        self.shard_tx(shard)?
+            .send(Cmd::Chaos(cmd))
+            .map_err(|_| A3Error::EngineStopped)
     }
 
     /// Submit one query without blocking. The query joins the
@@ -772,7 +851,30 @@ impl Engine {
     /// [`Engine::recv_timeout`].
     pub fn submit(&self, handle: &ContextHandle, embedding: Vec<f32>) -> Result<Ticket, A3Error> {
         self.check_poison()?;
-        self.submit_reclaim(handle, embedding).map_err(|(e, _)| e)
+        self.submit_reclaim(handle, embedding, 0).map_err(|(e, _)| e)
+    }
+
+    /// [`Engine::submit`] with a per-query deadline: if the query is
+    /// still waiting in an open batch `ttl` after submission, it is
+    /// shed at batch-composition time with
+    /// [`A3Error::DeadlineExceeded`] (reported through
+    /// [`Engine::take_dropped`]) instead of occupying a batch slot it
+    /// can no longer use. A zero `ttl` is rejected as
+    /// [`A3Error::ConfigError`] — it could never be met.
+    pub fn submit_with_ttl(
+        &self,
+        handle: &ContextHandle,
+        embedding: Vec<f32>,
+        ttl: Duration,
+    ) -> Result<Ticket, A3Error> {
+        if ttl.is_zero() {
+            return Err(A3Error::ConfigError(
+                "submit_with_ttl needs a non-zero ttl (use submit for no deadline)".into(),
+            ));
+        }
+        self.check_poison()?;
+        self.submit_reclaim(handle, embedding, ttl.as_nanos().min(u128::from(u64::MAX)) as u64)
+            .map_err(|(e, _)| e)
     }
 
     /// [`Engine::submit`] that hands the embedding back on failures
@@ -786,10 +888,15 @@ impl Engine {
     /// through [`Engine::take_dropped`], and consuming another
     /// connection's poison here would both double-report that failure
     /// and spuriously fail an unrelated client's valid submit.
+    ///
+    /// `ttl_ns` > 0 arms a shed deadline `ttl_ns` after arrival
+    /// (`0` = no deadline) — the wire protocol's TTL convention, so
+    /// the network front door passes the field straight through.
     pub(crate) fn submit_reclaim(
         &self,
         handle: &ContextHandle,
         embedding: Vec<f32>,
+        ttl_ns: u64,
     ) -> Result<Ticket, (A3Error, Option<Vec<f32>>)> {
         // liveness (evicted/unknown) and the home shard are resolved by
         // submit_query — one registry lock per submit, not two
@@ -804,11 +911,18 @@ impl Engine {
             ));
         }
         let id = self.next_ticket.fetch_add(1, Ordering::Relaxed);
+        let arrival_ns = self.epoch.elapsed().as_nanos() as u64;
+        let deadline_ns = if ttl_ns == 0 {
+            NO_DEADLINE
+        } else {
+            arrival_ns.saturating_add(ttl_ns)
+        };
         let query = Query {
             id,
             context: handle.id(),
             embedding,
-            arrival_ns: self.epoch.elapsed().as_nanos() as u64,
+            arrival_ns,
+            deadline_ns,
         };
         self.submit_query(query).map_err(|e| (e, None))?;
         Ok(Ticket { id, context: handle.id() })
@@ -926,7 +1040,13 @@ impl Engine {
             self.validate_submit(&handle, &embedding)?;
             let id = self.next_ticket.fetch_add(1, Ordering::Relaxed);
             tickets.push(Ticket { id, context: handle.id() });
-            queries.push(Query { id, context: handle.id(), embedding, arrival_ns: 0 });
+            queries.push(Query {
+                id,
+                context: handle.id(),
+                embedding,
+                arrival_ns: 0,
+                deadline_ns: NO_DEADLINE,
+            });
         }
         let report = self.run_queries(queries)?;
         Ok((tickets, report))
@@ -1160,15 +1280,43 @@ struct ShardWorker {
     /// measured from here so latencies stay on the run's clock.
     sim_base_cycles: u64,
     shared: Arc<Shared>,
+    /// Blueprint state the supervisor rebuilds a panicked worker from:
+    /// the same batch policy and unit partition it was spawned with.
+    batch_policy: BatchPolicy,
+    unit_config: UnitConfig,
+    unit_count: usize,
+    /// Engine-wide in-flight threshold at which Base-unit dispatch
+    /// degrades to the conservative approximate backend (the builder's
+    /// `degrade_under_pressure` knob); `None` = always exact.
+    degrade_pending: Option<usize>,
+    /// Injected straggler: the next dispatched batch sleeps this long
+    /// first (`Cmd::Chaos(SlowNextBatch)`).
+    slow_next: Option<Duration>,
+    /// Makespan watermark carried across panic respawns: a rebuilt
+    /// scheduler restarts at cycle 0, so drain/flush acks report
+    /// `max(makespan, sim_floor)` to keep the shard clock monotone.
+    sim_floor: u64,
 }
 
 impl ShardWorker {
+    /// Supervised worker entry point: the serve loop runs under
+    /// `catch_unwind`, so a panic — injected by the chaos harness or
+    /// real — is contained to this shard. The supervisor fails every
+    /// query the shard had accepted with [`A3Error::ShardFailed`]
+    /// (typed per-ticket notices, never silent replay: dispatch is not
+    /// idempotent), rebuilds the batcher and scheduler from the spawn
+    /// blueprint, and re-enters the loop against the surviving
+    /// [`ContextStore`] shard state — registered contexts and their
+    /// sorted caches are `Arc`-shared and survive the unwind. Other
+    /// shards never stop serving, and `alive_workers` stays constant
+    /// across respawns so admission waiting keeps working.
     fn run(&mut self) {
         /// Decrements the live-worker count and wakes admission
         /// waiters on any exit from `run` — including an unwinding
-        /// panic — so producers never park on a condvar no one will
-        /// signal. Ignores gate poisoning: a panic elsewhere must not
-        /// turn this cleanup into a double panic.
+        /// panic that escapes the supervisor — so producers never park
+        /// on a condvar no one will signal. Ignores gate poisoning: a
+        /// panic elsewhere must not turn this cleanup into a double
+        /// panic.
         struct AliveGuard(Arc<Shared>);
         impl Drop for AliveGuard {
             fn drop(&mut self) {
@@ -1179,12 +1327,84 @@ impl ShardWorker {
         }
         let _alive = AliveGuard(Arc::clone(&self.shared));
         loop {
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.serve())) {
+                Ok(()) => break, // clean shutdown (command channel closed)
+                Err(_) => self.recover(),
+            }
+        }
+    }
+
+    /// Fail everything in flight on this shard and rebuild the worker
+    /// state after a caught panic. The `arrivals` map is the ground
+    /// truth for accounting: panics are caught at dispatch boundaries,
+    /// where every entry still corresponds to exactly one
+    /// un-decremented `inflight` count — so failing each entry once
+    /// keeps the exactly-one-outcome invariant (a query resolves to a
+    /// response or one typed drop notice, never both, never neither).
+    /// Deliberately does *not* write the engine-wide poison slot: a
+    /// shard failure is scoped to its own tickets, not a reason to
+    /// fail an unrelated client's next submit.
+    fn recover(&mut self) {
+        let e = A3Error::ShardFailed { shard: self.shard };
+        let failed: Vec<QueryId> = self.arrivals.drain().map(|(id, _)| id).collect();
+        if !failed.is_empty() {
+            // poison-tolerant lock: the panic we are recovering from
+            // must not cascade into the notice queue
+            let mut dropped = self
+                .shared
+                .dropped_queries
+                .lock()
+                .unwrap_or_else(|p| p.into_inner());
+            for &id in &failed {
+                if dropped.len() >= self.shared.dropped_cap {
+                    dropped.remove(0);
+                }
+                dropped.push((id, e.clone()));
+            }
+        }
+        self.shared.dropped.fetch_add(failed.len(), Ordering::AcqRel);
+        self.shared.inflight.fetch_sub(failed.len(), Ordering::AcqRel);
+        // rebuild from the spawn blueprint; the store shard (contexts,
+        // sorted caches, byte accounting) survives as shared state
+        self.sim_floor = self.makespan();
+        self.batcher = Batcher::new(self.batch_policy);
+        self.scheduler = Scheduler::replicated(self.unit_config, self.unit_count);
+        self.scheduler.advance_to(self.sim_floor);
+        self.slow_next = None;
+        // admission may have reopened (inflight dropped): wake parked
+        // producers under the gate so the notification cannot be lost
+        let _gate = self
+            .shared
+            .admission_gate
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        self.shared.admission.notify_all();
+    }
+
+    /// Shard makespan with the respawn watermark applied (monotone
+    /// across panic recoveries).
+    fn makespan(&self) -> u64 {
+        self.scheduler.makespan_cycles().max(self.sim_floor)
+    }
+
+    fn serve(&mut self) {
+        loop {
             // sleep until the earliest real size-or-timeout deadline
             // (commands wake recv_timeout immediately); with nothing
             // pending — or an effectively infinite wait budget — block
             // instead of spinning thousands of no-op wakeups/s
             const IDLE: Duration = Duration::from_secs(3600);
-            let timeout = match self.batcher.next_deadline_ns() {
+            // the earlier of the batch-close deadline and the earliest
+            // per-query shed deadline: a TTL passing inside an open
+            // batch must wake the worker too
+            let next_ns = [
+                self.batcher.next_deadline_ns(),
+                self.batcher.min_query_deadline_ns(),
+            ]
+            .into_iter()
+            .flatten()
+            .min();
+            let timeout = match next_ns {
                 None => IDLE,
                 Some(deadline_ns) => {
                     let now_ns = self.epoch.elapsed().as_nanos() as u64;
@@ -1214,7 +1434,7 @@ impl ShardWorker {
                     // rebasing, so all prior work is reflected here;
                     // the metrics window restarts with the clock so
                     // one window never mixes rebased clocks
-                    self.sim_base_cycles = self.scheduler.makespan_cycles();
+                    self.sim_base_cycles = self.makespan();
                     self.metrics = Metrics::default();
                 }
                 Ok(Cmd::Drain(ack)) => {
@@ -1227,14 +1447,20 @@ impl ShardWorker {
                     let metrics = std::mem::take(&mut self.metrics);
                     let _ = ack.send(ShardDrain {
                         metrics,
-                        sim_makespan: self.scheduler.makespan_cycles(),
+                        sim_makespan: self.makespan(),
                     });
                 }
                 Ok(Cmd::Flush(ack)) => {
                     for batch in self.batcher.flush_all() {
                         self.dispatch(batch);
                     }
-                    let _ = ack.send(self.scheduler.makespan_cycles());
+                    let _ = ack.send(self.makespan());
+                }
+                Ok(Cmd::Chaos(ChaosCmd::PanicNow)) => {
+                    panic!("chaos: injected panic on shard {}", self.shard);
+                }
+                Ok(Cmd::Chaos(ChaosCmd::SlowNextBatch(delay))) => {
+                    self.slow_next = Some(delay);
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => self.expire(),
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
@@ -1281,13 +1507,68 @@ impl ShardWorker {
 
     fn expire(&mut self) {
         let now_ns = self.epoch.elapsed().as_nanos() as u64;
+        // shed past-deadline queries out of open batches first, so a
+        // batch that subsequently closes is composed of live queries
+        let shed = self.batcher.shed_expired(now_ns);
+        if !shed.is_empty() {
+            self.shed(shed, now_ns);
+        }
         for batch in self.batcher.expire(now_ns) {
             self.dispatch(batch);
         }
     }
 
+    /// Resolve deadline-expired queries: one
+    /// [`A3Error::DeadlineExceeded`] notice per query through the
+    /// per-ticket channel, counted as dropped so stream drivers
+    /// terminate. Load shedding is an *expected* outcome, so — like a
+    /// shard failure and unlike a dispatch bug — it never writes the
+    /// engine-wide poison slot.
+    fn shed(&mut self, queries: Vec<Query>, now_ns: u64) {
+        let count = queries.len();
+        {
+            let mut dropped = self.shared.dropped_queries.lock().unwrap();
+            for q in &queries {
+                if dropped.len() >= self.shared.dropped_cap {
+                    dropped.remove(0);
+                }
+                dropped.push((
+                    q.id,
+                    A3Error::DeadlineExceeded { deadline_ns: q.deadline_ns, now_ns },
+                ));
+            }
+        }
+        for q in &queries {
+            self.arrivals.remove(&q.id);
+        }
+        self.shared.dropped.fetch_add(count, Ordering::AcqRel);
+        self.shared.inflight.fetch_sub(count, Ordering::AcqRel);
+        let _gate = self.shared.admission_gate.lock().unwrap();
+        self.shared.admission.notify_all();
+    }
+
     fn dispatch(&mut self, batch: Vec<Query>) {
+        // batch-composition-time shedding: a closed batch may still
+        // carry queries whose deadline passed while it filled
+        let now_ns = self.epoch.elapsed().as_nanos() as u64;
+        let (batch, expired): (Vec<Query>, Vec<Query>) =
+            batch.into_iter().partition(|q| !q.expired_at(now_ns));
+        if !expired.is_empty() {
+            self.shed(expired, now_ns);
+        }
+        if batch.is_empty() {
+            return;
+        }
+        if let Some(delay) = self.slow_next.take() {
+            // injected straggler (chaos harness): the stall happens
+            // where a slow unit would — after composition, before
+            // compute — so deadlines behind it shed on the next pass
+            std::thread::sleep(delay);
+        }
         let count = batch.len();
+        let degrade = self
+            .degrade_pending
+            .is_some_and(|at| self.shared.inflight.load(Ordering::Acquire) >= at);
         let outcome = match self.store.get(self.shard, batch[0].context) {
             None => Err(A3Error::ContextEvicted(batch[0].context)),
             Some(ctx) => {
@@ -1296,7 +1577,11 @@ impl ShardWorker {
                     self.scheduler
                         .advance_to(now_ns.saturating_sub(self.arrival_base_ns));
                 }
-                self.scheduler.dispatch(&ctx, &batch)
+                if degrade {
+                    self.scheduler.dispatch_degraded(&ctx, &batch)
+                } else {
+                    self.scheduler.dispatch(&ctx, &batch)
+                }
             }
         };
         match outcome {
@@ -1501,6 +1786,120 @@ mod tests {
         );
         // restore before drop so stop() sees a consistent world
         engine.shared.alive_workers.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Poll the engine's per-ticket drop notices until `pred` finds a
+    /// match (the shard worker resolves failures asynchronously).
+    fn wait_for_notice(
+        engine: &Engine,
+        pred: impl Fn(&(QueryId, A3Error)) -> bool,
+    ) -> (QueryId, A3Error) {
+        let t0 = Instant::now();
+        let mut seen = Vec::new();
+        while t0.elapsed() < Duration::from_secs(10) {
+            seen.extend(engine.take_dropped());
+            if let Some(hit) = seen.iter().find(|n| pred(n)) {
+                return hit.clone();
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        panic!("no matching drop notice within 10s (saw {seen:?})");
+    }
+
+    #[test]
+    fn panicked_shard_fails_inflight_typed_and_respawns() {
+        let engine = EngineBuilder::new()
+            .shards(2)
+            .units(2)
+            .dims(Dims::new(32, 64))
+            .build()
+            .unwrap();
+        let a = engine.register_context(make_kv(32, 1)).unwrap();
+        let b = engine.register_context(make_kv(32, 2)).unwrap();
+        let sa = engine.home_shard(&a).unwrap();
+        let sb = engine.home_shard(&b).unwrap();
+        assert_ne!(sa, sb, "least-loaded placement spreads equal contexts");
+        // a query parked in shard A's open batch when the worker dies
+        let ticket = engine.submit(&a, vec![0.1; 64]).unwrap();
+        engine.chaos_panic_shard(sa).unwrap();
+        let (id, e) = wait_for_notice(&engine, |(id, _)| *id == ticket.id);
+        assert_eq!(id, ticket.id);
+        assert_eq!(e, A3Error::ShardFailed { shard: sa });
+        // the failure is scoped: no engine-wide poison, and the other
+        // shard keeps serving
+        engine.submit(&b, vec![0.2; 64]).unwrap();
+        // the respawned worker serves its surviving context state
+        engine.submit(&a, vec![0.3; 64]).unwrap();
+        let stats = engine.drain().unwrap();
+        assert_eq!(stats.metrics.completed, 2, "both post-panic submits serve");
+        assert_eq!(engine.pending(), 0, "accounting balanced across the respawn");
+        let mut got = 0;
+        while engine.try_recv().unwrap().is_some() {
+            got += 1;
+        }
+        assert_eq!(got, 2);
+    }
+
+    #[test]
+    fn expired_queries_shed_typed_not_served() {
+        let engine = make_engine(1, AttentionBackend::Exact, 32);
+        let ctx = engine.register_context(make_kv(32, 3)).unwrap();
+        assert!(matches!(
+            engine.submit_with_ttl(&ctx, vec![0.0; 64], Duration::ZERO),
+            Err(A3Error::ConfigError(_))
+        ));
+        let doomed = engine
+            .submit_with_ttl(&ctx, vec![0.1; 64], Duration::from_nanos(1))
+            .unwrap();
+        let live = engine.submit(&ctx, vec![0.2; 64]).unwrap();
+        std::thread::sleep(Duration::from_millis(2)); // deadline passes in the open batch
+        let stats = engine.drain().unwrap();
+        assert_eq!(stats.metrics.completed, 1, "only the deadline-free query serves");
+        let r = engine.try_recv().unwrap().expect("live response queued by drain");
+        assert_eq!(r.id, live.id);
+        let (_, e) = wait_for_notice(&engine, |(id, _)| *id == doomed.id);
+        assert!(
+            matches!(e, A3Error::DeadlineExceeded { deadline_ns, now_ns } if now_ns > deadline_ns),
+            "shed must carry the deadline evidence, got {e:?}"
+        );
+        // shedding is load management, not poison: submits still work
+        engine.submit(&ctx, vec![0.3; 64]).unwrap();
+        engine.drain().unwrap();
+        assert_eq!(engine.pending(), 0);
+    }
+
+    #[test]
+    fn degrade_under_pressure_matches_conservative_backend() {
+        let engine = EngineBuilder::new()
+            .dims(Dims::new(96, 64))
+            .degrade_under_pressure(1)
+            .build()
+            .unwrap();
+        assert!(matches!(
+            EngineBuilder::new().degrade_under_pressure(0).build(),
+            Err(A3Error::ConfigError(_))
+        ));
+        let kv = make_kv(96, 4);
+        let ctx = engine.register_context(kv.clone()).unwrap();
+        // the degraded fallback selects candidates, so even this
+        // exact engine prewarms the sorted cache at registration
+        assert!(ctx.prewarmed());
+        let mut rng = Rng::new(5);
+        let embeddings: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(64, 1.0)).collect();
+        for e in &embeddings {
+            engine.submit(&ctx, e.clone()).unwrap();
+        }
+        engine.drain().unwrap();
+        let oracle = AttentionBackend::conservative();
+        let mut got = 0;
+        while let Some(r) = engine.try_recv().unwrap() {
+            let (out, sel) = oracle.run(&kv, Some(ctx.sorted()), &embeddings[r.id as usize]);
+            assert_eq!(r.output, out, "degraded serve must match the §V knob exactly");
+            assert_eq!(r.selected_rows, sel.len());
+            assert!(r.selected_rows < 96, "degraded responses are observable");
+            got += 1;
+        }
+        assert_eq!(got, 8);
     }
 
     #[test]

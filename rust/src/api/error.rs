@@ -38,6 +38,18 @@ pub enum A3Error {
     MemoryBudget { required: usize, budget: usize },
     /// The engine has been stopped (or its worker thread is gone).
     EngineStopped,
+    /// The shard worker serving this query panicked mid-flight. The
+    /// supervisor respawns the worker against the surviving
+    /// [`crate::coordinator::ContextStore`] shard state, so later
+    /// submits to the same shard succeed; the queries that were
+    /// in-flight at the moment of the panic get this error instead of
+    /// hanging (dispatch is not idempotent, so they are never silently
+    /// replayed).
+    ShardFailed { shard: usize },
+    /// The query's deadline elapsed before a unit picked it up; it was
+    /// shed at batch-composition time instead of occupying a batch
+    /// slot.
+    DeadlineExceeded { deadline_ns: u64, now_ns: u64 },
 }
 
 impl fmt::Display for A3Error {
@@ -59,6 +71,13 @@ impl fmt::Display for A3Error {
                 "context needs {required} resident bytes but the per-shard memory budget is {budget}"
             ),
             A3Error::EngineStopped => write!(f, "engine is stopped"),
+            A3Error::ShardFailed { shard } => {
+                write!(f, "shard {shard} worker failed; in-flight queries were dropped")
+            }
+            A3Error::DeadlineExceeded { deadline_ns, now_ns } => write!(
+                f,
+                "deadline exceeded: due at {deadline_ns} ns, shed at {now_ns} ns"
+            ),
         }
     }
 }
@@ -84,6 +103,8 @@ mod tests {
             (A3Error::EmptyBatch, "empty"),
             (A3Error::MemoryBudget { required: 4096, budget: 1024 }, "4096"),
             (A3Error::EngineStopped, "stopped"),
+            (A3Error::ShardFailed { shard: 2 }, "shard 2"),
+            (A3Error::DeadlineExceeded { deadline_ns: 100, now_ns: 250 }, "due at 100"),
         ];
         for (e, needle) in cases {
             assert!(e.to_string().contains(needle), "{e}");

@@ -106,6 +106,46 @@
 //! }
 //! ```
 //!
+//! # Failure model
+//!
+//! Every query submitted to a healthy engine resolves to **exactly one
+//! typed outcome** — a [`Response`], or one [`A3Error`] — never zero
+//! (a hang) and never two (a double completion). The possible
+//! outcomes, and where each is reported:
+//!
+//! * **Success** — the [`Response`] through [`Engine::try_recv`] /
+//!   [`Engine::recv_timeout`].
+//! * **Rejected at submit** — [`Engine::submit`] returns the error
+//!   synchronously (validation, [`A3Error::QueueFull`] admission,
+//!   [`A3Error::ContextEvicted`] / [`A3Error::UnknownContext`]); the
+//!   query never entered the engine and consumed nothing.
+//! * **Shed on deadline** — a query submitted with
+//!   [`Engine::submit_with_ttl`] that is still waiting when its TTL
+//!   passes is dropped at batch-composition time with
+//!   [`A3Error::DeadlineExceeded`], reported per ticket through
+//!   [`Engine::take_dropped`]. Load shedding is an expected outcome:
+//!   it never poisons the engine.
+//! * **Shard failure** — a panicking shard worker is *supervised*:
+//!   the unwind is caught, every query that shard had accepted fails
+//!   with [`A3Error::ShardFailed`] (per ticket, through
+//!   [`Engine::take_dropped`] — dispatch is not idempotent, so failed
+//!   work is never silently replayed), and the worker is rebuilt
+//!   against the surviving context state. Other shards never stop
+//!   serving, and the respawned shard accepts new work immediately.
+//! * **Dispatch error** — a typed per-batch failure (e.g. a context
+//!   evicted between submit and dispatch) drops the batch with
+//!   per-ticket notices and arms the engine-wide poison slot consumed
+//!   by the next [`Engine::submit`] / receive.
+//!
+//! Under sustained overload, [`EngineBuilder::degrade_under_pressure`]
+//! trades accuracy for throughput instead of shedding: past the
+//! configured in-flight threshold, exact (Base) units serve batches
+//! through the paper's conservative approximate setting (§V), with
+//! `selected_rows < n` marking degraded responses. The chaos harness
+//! ([`crate::testutil::chaos`], `a3 chaos` on the CLI) drives panics,
+//! stragglers, and connection faults against these guarantees
+//! deterministically.
+//!
 //! # Remote serving
 //!
 //! The engine's network front door lives in [`crate::net`]: a
@@ -135,7 +175,7 @@ pub use error::A3Error;
 pub use crate::attention::KvPair;
 pub use crate::coordinator::batcher::BatchPolicy;
 pub use crate::coordinator::metrics::{Metrics, MetricsReport};
-pub use crate::coordinator::request::{ContextId, Query, QueryId, Response};
+pub use crate::coordinator::request::{ContextId, Query, QueryId, Response, NO_DEADLINE};
 pub use crate::model::AttentionBackend;
 pub use crate::sim::Dims;
 
@@ -410,6 +450,7 @@ mod tests {
             context: 999,
             embedding: vec![0.0; 8],
             arrival_ns: 0,
+            deadline_ns: crate::coordinator::NO_DEADLINE,
         };
         assert!(matches!(
             engine.submit_query(q),

@@ -16,7 +16,7 @@
 
 use std::collections::HashMap;
 
-use super::request::{ContextId, Query};
+use super::request::{ContextId, Query, NO_DEADLINE};
 
 /// Size-or-timeout batching policy.
 #[derive(Clone, Copy, Debug)]
@@ -102,6 +102,40 @@ impl Batcher {
         self.pending.remove(&ctx)
     }
 
+    /// Shed every pending query whose deadline has passed at `now_ns`
+    /// (batch-composition-time load shedding: an expired query must
+    /// not occupy a batch slot it can no longer use). Buckets keep
+    /// their relative order; emptied buckets are removed so
+    /// [`Batcher::next_deadline_ns`] never tracks a ghost batch.
+    pub fn shed_expired(&mut self, now_ns: u64) -> Vec<Query> {
+        let mut shed = Vec::new();
+        self.pending.retain(|_, qs| {
+            let mut i = 0;
+            while i < qs.len() {
+                if qs[i].expired_at(now_ns) {
+                    shed.push(qs.remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+            !qs.is_empty()
+        });
+        shed
+    }
+
+    /// Earliest per-query shed deadline over all pending queries, or
+    /// `None` when no pending query carries one. The engine worker
+    /// sleeps until `min(next_deadline_ns, min_query_deadline_ns)` so
+    /// a deadline passing inside an open batch wakes it.
+    pub fn min_query_deadline_ns(&self) -> Option<u64> {
+        self.pending
+            .values()
+            .flatten()
+            .map(|q| q.deadline_ns)
+            .filter(|&d| d != NO_DEADLINE)
+            .min()
+    }
+
     pub fn pending_count(&self) -> usize {
         self.pending.values().map(Vec::len).sum()
     }
@@ -112,7 +146,17 @@ mod tests {
     use super::*;
 
     fn q(id: u64, ctx: u32, arrival: u64) -> Query {
-        Query { id, context: ctx, embedding: vec![0.0; 4], arrival_ns: arrival }
+        Query {
+            id,
+            context: ctx,
+            embedding: vec![0.0; 4],
+            arrival_ns: arrival,
+            deadline_ns: NO_DEADLINE,
+        }
+    }
+
+    fn q_ttl(id: u64, ctx: u32, arrival: u64, deadline: u64) -> Query {
+        Query { deadline_ns: deadline, ..q(id, ctx, arrival) }
     }
 
     #[test]
@@ -206,6 +250,37 @@ mod tests {
         let mut sat = Batcher::new(BatchPolicy { max_batch: 8, max_wait_ns: u64::MAX });
         sat.push(q(0, 1, 7));
         assert_eq!(sat.next_deadline_ns(), Some(u64::MAX));
+    }
+
+    #[test]
+    fn shed_expired_drops_only_past_deadline_queries() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait_ns: u64::MAX });
+        b.push(q_ttl(0, 1, 0, 100)); // expires at 100
+        b.push(q_ttl(1, 1, 0, 500)); // survives
+        b.push(q(2, 2, 0)); // no deadline: never shed
+        assert!(b.shed_expired(100).is_empty(), "deadline instant itself is not expiry");
+        let shed = b.shed_expired(101);
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].id, 0);
+        assert_eq!(b.pending_count(), 2, "survivors keep their batch slots");
+        // a bucket fully shed disappears, so next_deadline_ns cannot
+        // track a ghost batch
+        let mut all = Batcher::new(BatchPolicy { max_batch: 8, max_wait_ns: u64::MAX });
+        all.push(q_ttl(3, 7, 0, 50));
+        assert_eq!(all.shed_expired(60).len(), 1);
+        assert_eq!(all.next_deadline_ns(), None);
+        assert_eq!(all.pending_count(), 0);
+    }
+
+    #[test]
+    fn min_query_deadline_skips_deadline_free_queries() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait_ns: u64::MAX });
+        assert_eq!(b.min_query_deadline_ns(), None);
+        b.push(q(0, 1, 0));
+        assert_eq!(b.min_query_deadline_ns(), None, "NO_DEADLINE never wakes the worker");
+        b.push(q_ttl(1, 1, 0, 900));
+        b.push(q_ttl(2, 2, 0, 300));
+        assert_eq!(b.min_query_deadline_ns(), Some(300));
     }
 
     #[test]

@@ -38,6 +38,6 @@ pub mod store;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::{AttributedMetrics, Metrics, MetricsReport};
-pub use request::{KvContext, Query, QueryId, Response};
+pub use request::{KvContext, Query, QueryId, Response, NO_DEADLINE};
 pub use scheduler::{Scheduler, UnitConfig, UnitKind};
 pub use store::ContextStore;

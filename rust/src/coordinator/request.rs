@@ -66,6 +66,9 @@ impl KvContext {
     }
 }
 
+/// Sentinel deadline meaning "no deadline": the query is never shed.
+pub const NO_DEADLINE: u64 = u64::MAX;
+
 /// One attention query against a registered context.
 #[derive(Clone, Debug)]
 pub struct Query {
@@ -74,6 +77,19 @@ pub struct Query {
     pub embedding: Vec<f32>,
     /// Wall-clock arrival (ns since server start) for latency metrics.
     pub arrival_ns: u64,
+    /// Absolute shed deadline (ns since server start, same clock as
+    /// `arrival_ns`). A query still waiting in an open batch past this
+    /// instant is shed at batch-composition time with
+    /// [`crate::api::A3Error::DeadlineExceeded`] instead of occupying
+    /// a batch slot. [`NO_DEADLINE`] (the default) disables shedding.
+    pub deadline_ns: u64,
+}
+
+impl Query {
+    /// Whether this query is past its deadline at `now_ns`.
+    pub fn expired_at(&self, now_ns: u64) -> bool {
+        self.deadline_ns != NO_DEADLINE && now_ns > self.deadline_ns
+    }
 }
 
 /// The served result.

@@ -47,6 +47,11 @@ enum UnitPipe {
 struct Unit {
     config: UnitConfig,
     pipe: UnitPipe,
+    /// Approximate pipeline a Base unit charges while serving
+    /// degraded batches (built on first degraded dispatch). The unit's
+    /// `free_at` is shared across both pipelines — it is one physical
+    /// unit that temporarily reconfigures, not extra hardware.
+    degraded_pipe: Option<ApproxPipeline>,
     /// Simulated cycle at which this unit drains.
     free_at: u64,
     processed: u64,
@@ -67,6 +72,9 @@ pub struct Scheduler {
     flat: Vec<f32>,
     out_flat: Vec<f32>,
     results: Vec<(Vec<f32>, Vec<usize>)>,
+    /// Queries served through [`Scheduler::dispatch_degraded`]'s
+    /// conservative fallback (load-shedding observability).
+    degraded: u64,
 }
 
 impl Scheduler {
@@ -81,6 +89,7 @@ impl Scheduler {
                         UnitPipe::Approx(ApproxPipeline::new_untimed(config.dims))
                     }
                 },
+                degraded_pipe: None,
                 free_at: 0,
                 processed: 0,
             })
@@ -91,6 +100,7 @@ impl Scheduler {
             flat: Vec::new(),
             out_flat: Vec::new(),
             results: Vec::new(),
+            degraded: 0,
         }
     }
 
@@ -140,6 +150,38 @@ impl Scheduler {
         ctx: &KvContext,
         batch: &[Query],
     ) -> Result<Vec<Response>, A3Error> {
+        self.dispatch_inner(ctx, batch, false)
+    }
+
+    /// [`Scheduler::dispatch`] with the paper §V accuracy/throughput
+    /// knob pulled as a load-shedding lever: a **Base** unit serves the
+    /// batch through the conservative approximate backend (M = n/2,
+    /// T = 5%) instead of the exact datapath, charging approximate
+    /// pipeline cycles against the same unit occupancy. Outputs are
+    /// bit-identical to running [`AttentionBackend::conservative`]
+    /// directly (the parity oracle the engine tests hold it to), and
+    /// `selected_rows < n` marks degraded responses for observability.
+    /// Approximate units are already on the cheap datapath, so for
+    /// them this is exactly `dispatch`.
+    pub fn dispatch_degraded(
+        &mut self,
+        ctx: &KvContext,
+        batch: &[Query],
+    ) -> Result<Vec<Response>, A3Error> {
+        self.dispatch_inner(ctx, batch, true)
+    }
+
+    /// Queries served through the degraded conservative fallback.
+    pub fn degraded_count(&self) -> u64 {
+        self.degraded
+    }
+
+    fn dispatch_inner(
+        &mut self,
+        ctx: &KvContext,
+        batch: &[Query],
+        degrade: bool,
+    ) -> Result<Vec<Response>, A3Error> {
         if batch.is_empty() {
             return Err(A3Error::EmptyBatch);
         }
@@ -163,48 +205,79 @@ impl Scheduler {
         let arrival = unit.free_at.max(now);
 
         // per-backend compute + per-query pipeline timing...
-        let computed: Vec<(Vec<f32>, usize, _)> = match (&mut unit.pipe, unit.config.kind) {
-            (UnitPipe::Base(p), UnitKind::Base) => {
-                self.out_flat.clear();
-                self.out_flat.resize(self.flat.len(), 0.0);
-                crate::attention::kernel::parallel_attention_batch_into(
-                    &ctx.kv,
-                    &self.flat,
-                    &mut self.out_flat,
-                    0,
-                );
-                self.out_flat
-                    .chunks_exact(d)
-                    .map(|out| (out.to_vec(), ctx.kv.n, p.push_query(arrival)))
-                    .collect()
-            }
-            (UnitPipe::Approx(p), UnitKind::Approximate { backend }) => {
-                let sorted = backend.needs_sorted().then(|| ctx.sorted());
-                let m = match backend {
-                    AttentionBackend::Approximate { m, .. }
-                    | AttentionBackend::CandidatesOnly { m } => m.resolve(ctx.kv.n),
-                    _ => ctx.kv.n,
-                };
-                backend.try_run_batch_into(&ctx.kv, sorted, &self.flat, &mut self.results)?;
-                self.results
-                    .drain(..)
-                    .map(|(out, sel)| {
-                        let timing = p.push_query(
-                            arrival,
-                            ApproxQuery {
-                                m,
-                                candidates: sel.len().max(1),
-                                kept: sel.len().max(1),
-                            },
-                        );
-                        (out, sel.len(), timing)
-                    })
-                    .collect()
-            }
-            _ => {
-                return Err(A3Error::BackendMismatch(
-                    "unit pipeline does not match its configured kind".into(),
-                ))
+        let degrade_base = degrade && matches!(unit.config.kind, UnitKind::Base);
+        let computed: Vec<(Vec<f32>, usize, _)> = if degrade_base {
+            // load shedding: the exact unit reconfigures to the
+            // conservative approximate datapath for this batch
+            let backend = AttentionBackend::conservative();
+            let sorted = backend.needs_sorted().then(|| ctx.sorted());
+            let m = match backend {
+                AttentionBackend::Approximate { m, .. } => m.resolve(ctx.kv.n),
+                _ => ctx.kv.n,
+            };
+            backend.try_run_batch_into(&ctx.kv, sorted, &self.flat, &mut self.results)?;
+            self.degraded += batch.len() as u64;
+            let p = unit
+                .degraded_pipe
+                .get_or_insert_with(|| ApproxPipeline::new_untimed(unit.config.dims));
+            self.results
+                .drain(..)
+                .map(|(out, sel)| {
+                    let timing = p.push_query(
+                        arrival,
+                        ApproxQuery {
+                            m,
+                            candidates: sel.len().max(1),
+                            kept: sel.len().max(1),
+                        },
+                    );
+                    (out, sel.len(), timing)
+                })
+                .collect()
+        } else {
+            match (&mut unit.pipe, unit.config.kind) {
+                (UnitPipe::Base(p), UnitKind::Base) => {
+                    self.out_flat.clear();
+                    self.out_flat.resize(self.flat.len(), 0.0);
+                    crate::attention::kernel::parallel_attention_batch_into(
+                        &ctx.kv,
+                        &self.flat,
+                        &mut self.out_flat,
+                        0,
+                    );
+                    self.out_flat
+                        .chunks_exact(d)
+                        .map(|out| (out.to_vec(), ctx.kv.n, p.push_query(arrival)))
+                        .collect()
+                }
+                (UnitPipe::Approx(p), UnitKind::Approximate { backend }) => {
+                    let sorted = backend.needs_sorted().then(|| ctx.sorted());
+                    let m = match backend {
+                        AttentionBackend::Approximate { m, .. }
+                        | AttentionBackend::CandidatesOnly { m } => m.resolve(ctx.kv.n),
+                        _ => ctx.kv.n,
+                    };
+                    backend.try_run_batch_into(&ctx.kv, sorted, &self.flat, &mut self.results)?;
+                    self.results
+                        .drain(..)
+                        .map(|(out, sel)| {
+                            let timing = p.push_query(
+                                arrival,
+                                ApproxQuery {
+                                    m,
+                                    candidates: sel.len().max(1),
+                                    kept: sel.len().max(1),
+                                },
+                            );
+                            (out, sel.len(), timing)
+                        })
+                        .collect()
+                }
+                _ => {
+                    return Err(A3Error::BackendMismatch(
+                        "unit pipeline does not match its configured kind".into(),
+                    ))
+                }
             }
         };
 
@@ -238,6 +311,7 @@ impl Scheduler {
 
 #[cfg(test)]
 mod tests {
+    use super::super::request::NO_DEADLINE;
     use super::*;
     use crate::attention::KvPair;
     use crate::testutil::Rng;
@@ -258,6 +332,7 @@ mod tests {
                 context: 0,
                 embedding: rng.normal_vec(d, 1.0),
                 arrival_ns: 0,
+                deadline_ns: NO_DEADLINE,
             })
             .collect()
     }
@@ -390,6 +465,53 @@ mod tests {
     }
 
     #[test]
+    fn degraded_dispatch_bit_matches_conservative_backend_on_base_units() {
+        // parity oracle: the degrade knob is the paper §V setting, not
+        // a different algorithm — outputs must equal running the
+        // conservative backend directly
+        let c = ctx(96, 64, 20);
+        let dims = Dims::new(96, 64);
+        let mut s = Scheduler::new(&[UnitConfig { kind: UnitKind::Base, dims }]);
+        let qs = queries(8, 64, 21);
+        let rs = s.dispatch_degraded(&c, &qs).unwrap();
+        let oracle = AttentionBackend::conservative();
+        for (q, r) in qs.iter().zip(&rs) {
+            let (out, sel) = oracle.run(&c.kv, Some(c.sorted()), &q.embedding);
+            assert_eq!(r.output, out, "degraded serve must be bit-identical");
+            assert_eq!(r.selected_rows, sel.len());
+            assert!(r.selected_rows < 96, "degraded responses are marked by selected_rows < n");
+        }
+        assert_eq!(s.degraded_count(), 8);
+        // the degraded pipeline charges the same unit: occupancy moved
+        assert!(s.makespan_cycles() > 0);
+        // an exact dispatch afterwards still works and is exact
+        let exact = s.dispatch(&c, &qs[..2]).unwrap();
+        assert!(exact.iter().all(|r| r.selected_rows == 96));
+    }
+
+    #[test]
+    fn degraded_dispatch_is_plain_dispatch_for_approximate_units() {
+        let c = ctx(96, 64, 22);
+        let backend = AttentionBackend::aggressive();
+        let mk = || {
+            Scheduler::new(&[UnitConfig {
+                kind: UnitKind::Approximate { backend },
+                dims: Dims::new(96, 64),
+            }])
+        };
+        let qs = queries(4, 64, 23);
+        let mut plain = mk();
+        let mut degraded = mk();
+        let a = plain.dispatch(&c, &qs).unwrap();
+        let b = degraded.dispatch_degraded(&c, &qs).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.output, y.output);
+            assert_eq!(x.sim_cycles, y.sim_cycles);
+        }
+        assert_eq!(degraded.degraded_count(), 0, "approximate units never count as degraded");
+    }
+
+    #[test]
     fn dispatch_errors_are_typed_not_panics() {
         let c = ctx(16, 8, 10);
         let mut s = Scheduler::new(&[UnitConfig {
@@ -397,7 +519,13 @@ mod tests {
             dims: Dims::new(16, 8),
         }]);
         assert!(matches!(s.dispatch(&c, &[]), Err(A3Error::EmptyBatch)));
-        let bad = Query { id: 0, context: 0, embedding: vec![0.0; 5], arrival_ns: 0 };
+        let bad = Query {
+            id: 0,
+            context: 0,
+            embedding: vec![0.0; 5],
+            arrival_ns: 0,
+            deadline_ns: NO_DEADLINE,
+        };
         assert!(matches!(
             s.dispatch(&c, &[bad]),
             Err(A3Error::DimensionMismatch { expected: 8, got: 5 })

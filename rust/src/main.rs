@@ -42,6 +42,14 @@ COMMANDS (system):
                     --connect ADDR [--queries N] [--connections N]
                     [--contexts N] [--n N] [--qps F] [--seed N]
                     [--window N] [--shutdown]
+    chaos           seeded fault-injection smoke over loopback TCP:
+                    kill a shard worker, drop a connection mid-stream,
+                    send a truncated frame, stall a batch — then check
+                    every query resolved to exactly one typed outcome.
+                    [--shards N] [--units N] [--queries N/conn]
+                    [--connections N] [--contexts N/conn] [--n N]
+                    [--seed N] [--ttl-ms N] (0 = no deadlines)
+                    Exits non-zero if the invariant is violated.
     runtime-smoke   load + execute every AOT HLO artifact via PJRT
 
 OPTIONS:
@@ -289,6 +297,104 @@ fn cmd_client(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_chaos(args: &[String]) -> Result<()> {
+    let mut shards = 2usize;
+    let mut units = 2usize;
+    let mut queries = 200usize;
+    let mut connections = 2usize;
+    let mut contexts = 2usize;
+    let mut n = a3::PAPER_N;
+    let mut seed = 0xA3u64;
+    let mut ttl_ms = 0u64;
+    let mut i = 1; // args[0] is the "chaos" command itself
+    while i < args.len() {
+        let flag = args[i].clone();
+        if !matches!(
+            flag.as_str(),
+            "--shards" | "--units" | "--queries" | "--connections" | "--contexts" | "--n"
+                | "--seed" | "--ttl-ms"
+        ) {
+            bail!("chaos: unknown flag {flag:?} (see `a3 --help`)");
+        }
+        let value = match args.get(i + 1) {
+            Some(v) => v,
+            None => bail!("chaos: {flag} needs a value (see `a3 --help`)"),
+        };
+        let invalid = |e: &dyn std::fmt::Display| {
+            anyhow::anyhow!("chaos: invalid value {value:?} for {flag}: {e}")
+        };
+        match flag.as_str() {
+            "--shards" => shards = value.parse().map_err(|e| invalid(&e))?,
+            "--units" => units = value.parse().map_err(|e| invalid(&e))?,
+            "--queries" => queries = value.parse().map_err(|e| invalid(&e))?,
+            "--connections" => connections = value.parse().map_err(|e| invalid(&e))?,
+            "--contexts" => contexts = value.parse().map_err(|e| invalid(&e))?,
+            "--n" => n = value.parse().map_err(|e| invalid(&e))?,
+            "--seed" => seed = value.parse().map_err(|e| invalid(&e))?,
+            "--ttl-ms" => ttl_ms = value.parse().map_err(|e| invalid(&e))?,
+            _ => unreachable!("known flags matched above"),
+        }
+        i += 2;
+    }
+    if shards == 0 || connections == 0 || queries == 0 || contexts == 0 {
+        bail!("chaos: --shards/--connections/--queries/--contexts must all be >= 1");
+    }
+
+    use a3::testutil::chaos::{run_chaos, ChaosEvent, ChaosPlan};
+    let d = a3::PAPER_D;
+    let engine = std::sync::Arc::new(
+        EngineBuilder::new().units(units).shards(shards).dims(Dims::new(n, d)).build()?,
+    );
+    let mut server = a3::net::NetServer::bind(std::sync::Arc::clone(&engine), "127.0.0.1:0")?;
+    let addr = server.local_addr();
+
+    // a fixed schedule derived from the workload size: stall early,
+    // kill a shard at a quarter, probe with garbage at a third, drop
+    // the last connection at the halfway mark
+    let total = queries * connections;
+    let mut events = vec![
+        ChaosEvent::SlowBatch { after_submits: total / 8 + 1, shard: 0, delay_ms: 5 },
+        ChaosEvent::KillShard { after_submits: total / 4 + 1, shard: shards - 1 },
+        ChaosEvent::TruncatedFrame { after_submits: total / 3 + 1 },
+    ];
+    if connections >= 2 {
+        events.push(ChaosEvent::DropConnection {
+            after_submits: total / 2 + 1,
+            conn: connections - 1,
+        });
+    }
+    let plan = ChaosPlan {
+        seed,
+        connections,
+        queries,
+        contexts_per_conn: contexts,
+        n,
+        d,
+        ttl_ns: ttl_ms.saturating_mul(1_000_000),
+        events,
+    };
+    println!(
+        "chaos: {connections} connection(s) x {queries} queries on {shards} shard(s) \
+         ({units} unit(s)/shard, n={n}, seed={seed}, ttl={}) over {addr}",
+        if ttl_ms == 0 { "off".into() } else { format!("{ttl_ms} ms") },
+    );
+    for ev in &plan.events {
+        println!("  scheduled: {ev:?}");
+    }
+    let report = run_chaos(&engine, addr, &plan)?;
+    println!("{}", report.summary());
+
+    let mut control = a3::net::NetClient::connect(addr)?;
+    control.shutdown()?;
+    server.join();
+
+    if let Err(violation) = report.check() {
+        bail!("chaos invariant violated: {violation}");
+    }
+    println!("chaos: every query resolved to exactly one typed outcome");
+    Ok(())
+}
+
 #[cfg(not(feature = "pjrt"))]
 fn cmd_runtime_smoke() -> Result<()> {
     bail!("runtime-smoke needs the PJRT engine: rebuild with `--features pjrt`");
@@ -386,6 +492,7 @@ fn main() -> Result<()> {
         }
         "serve" => cmd_serve(&args)?,
         "client" => cmd_client(&args)?,
+        "chaos" => cmd_chaos(&args)?,
         "runtime-smoke" => cmd_runtime_smoke()?,
         "--help" | "-h" | "help" => print!("{USAGE}"),
         other => {

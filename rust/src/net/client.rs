@@ -14,17 +14,84 @@
 //! Every engine-side failure arrives as [`NetError::Remote`] carrying
 //! the same [`crate::api::A3Error`] variant an in-process caller
 //! would see.
+//!
+//! # Resilience
+//!
+//! The client tracks its in-flight submits: if the server closes the
+//! connection while completions are still owed, the next receive
+//! returns the typed
+//! [`WireError::ConnectionClosed`](super::WireError::ConnectionClosed)
+//! carrying exactly the orphaned request ids — never a hang, and the
+//! caller knows precisely which queries to re-issue (resubmission is
+//! the *caller's* decision: the engine may or may not have served
+//! them, and dispatch is not idempotent). [`Backoff`] is the seeded,
+//! bounded exponential backoff used by
+//! [`NetClient::connect_with_backoff`] to ride out transient
+//! connection failures (refused/reset during a server restart), and
+//! by retry loops around transient typed errors like
+//! [`A3Error::QueueFull`]. [`NetClient::set_read_timeout`] bounds
+//! every receive so a stalled server surfaces as a timeout error
+//! instead of a parked thread.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeSet, VecDeque};
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
 use super::server::NO_REQ;
-use super::wire::{self, Frame, WireStats};
+use super::wire::{self, Frame, WireError, WireStats};
 use super::NetError;
 use crate::api::A3Error;
 use crate::attention::KvPair;
 use crate::coordinator::request::{ContextId, Response};
+use crate::testutil::Rng;
+
+/// Bounded exponential backoff with deterministic, seeded jitter —
+/// the retry pacing for transient network failures (connect refused /
+/// reset during a server restart, [`A3Error::QueueFull`] under load).
+/// Delay for attempt `k` is `min(cap, base * 2^k)`, scaled by a
+/// uniform jitter in `[0.5, 1.0]` so a fleet of retrying clients
+/// decorrelates instead of stampeding. Seeded: the chaos harness
+/// replays identical schedules.
+#[derive(Debug)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    attempt: u32,
+    rng: Rng,
+}
+
+impl Backoff {
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Self {
+        Backoff { base, cap, attempt: 0, rng: Rng::new(seed) }
+    }
+
+    /// Sensible defaults for loopback/LAN serving: 5 ms doubling to a
+    /// 500 ms ceiling.
+    pub fn standard(seed: u64) -> Self {
+        Backoff::new(Duration::from_millis(5), Duration::from_millis(500), seed)
+    }
+
+    /// The next delay (advances the attempt counter).
+    pub fn next_delay(&mut self) -> Duration {
+        let exp = self
+            .base
+            .saturating_mul(1u32.checked_shl(self.attempt.min(31)).unwrap_or(u32::MAX))
+            .min(self.cap);
+        self.attempt = self.attempt.saturating_add(1);
+        exp.mul_f64(0.5 + 0.5 * self.rng.f64())
+    }
+
+    /// Attempts taken so far.
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Back to attempt zero (after a success).
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+}
 
 /// One received completion slot: the response, or the typed engine
 /// error tagged with the request id of the submit that failed — so a
@@ -72,6 +139,11 @@ pub struct NetClient {
     /// Completions (or their req-tagged typed errors) that arrived
     /// while waiting for a synchronous reply, in arrival order.
     inbox: VecDeque<RecvOutcome>,
+    /// Request ids of pipelined submits whose completion (or typed
+    /// failure) has not arrived yet. If the connection closes first,
+    /// these are the orphans reported in
+    /// [`WireError::ConnectionClosed`].
+    inflight: BTreeSet<u64>,
 }
 
 impl NetClient {
@@ -92,13 +164,81 @@ impl NetClient {
             writer,
             next_req: 0,
             inbox: VecDeque::new(),
+            inflight: BTreeSet::new(),
         })
+    }
+
+    /// [`NetClient::connect`] with retries on transient transport
+    /// failures (connection refused/reset — a server mid-restart),
+    /// sleeping `backoff`'s bounded, jittered delays between attempts.
+    /// Gives up after `attempts` tries with the last error. Protocol
+    /// errors are not retried — a version-mismatched server will not
+    /// improve with patience.
+    pub fn connect_with_backoff(
+        addr: impl ToSocketAddrs + Clone,
+        attempts: u32,
+        backoff: &mut Backoff,
+    ) -> super::Result<NetClient> {
+        let mut last = NetError::Io("connect_with_backoff needs attempts >= 1".into());
+        for attempt in 0..attempts.max(1) {
+            match NetClient::connect(addr.clone()) {
+                Ok(client) => return Ok(client),
+                Err(e @ (NetError::Io(_) | NetError::Closed)) => {
+                    last = e;
+                    if attempt + 1 < attempts {
+                        std::thread::sleep(backoff.next_delay());
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Err(last)
+    }
+
+    /// Bound every receive on this connection: a read that sees no
+    /// frame within `timeout` fails with a transport error instead of
+    /// parking the thread forever (the hang detector the chaos harness
+    /// arms on every client). `None` restores blocking reads.
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> super::Result<()> {
+        self.reader.get_ref().set_read_timeout(timeout)?;
+        Ok(())
+    }
+
+    /// Pipelined submits still awaiting their completion or typed
+    /// failure.
+    pub fn inflight(&self) -> usize {
+        self.inflight.len()
     }
 
     fn next_req(&mut self) -> u64 {
         let req = self.next_req;
         self.next_req += 1;
         req
+    }
+
+    /// Read one frame, settling in-flight accounting: a completion or
+    /// req-tagged error retires its submit, and a connection that
+    /// closes while submits are owed becomes the typed
+    /// [`WireError::ConnectionClosed`] carrying the orphaned request
+    /// ids (in submit order) — the caller decides what to re-issue,
+    /// the client never hangs and never double-reports.
+    fn read_settled(&mut self) -> super::Result<Frame> {
+        match wire::read_frame(&mut self.reader) {
+            Ok(frame) => {
+                match &frame {
+                    Frame::Response { req, .. } | Frame::Error { req, .. } => {
+                        self.inflight.remove(req);
+                    }
+                    _ => {}
+                }
+                Ok(frame)
+            }
+            Err(NetError::Closed) if !self.inflight.is_empty() => {
+                let orphaned: Vec<u64> = std::mem::take(&mut self.inflight).into_iter().collect();
+                Err(NetError::Wire(WireError::ConnectionClosed { orphaned }))
+            }
+            Err(e) => Err(e),
+        }
     }
 
     /// Queue one frame on the write buffer. Flushing happens before
@@ -125,7 +265,7 @@ impl NetClient {
     fn wait_for(&mut self, req: u64) -> super::Result<Frame> {
         self.writer.flush()?;
         loop {
-            let frame = wire::read_frame(&mut self.reader)?;
+            let frame = self.read_settled()?;
             match frame {
                 frame @ Frame::Response { .. } => {
                     let r = response_from_frame(frame);
@@ -177,8 +317,40 @@ impl NetClient {
     /// receive or synchronous call (one syscall per burst), or
     /// immediately via [`NetClient::flush`].
     pub fn submit(&mut self, ctx: RemoteContext, embedding: &[f32]) -> super::Result<u64> {
+        self.submit_frame(ctx, embedding, 0)
+    }
+
+    /// [`NetClient::submit`] with a per-query deadline: the engine
+    /// sheds the query with a typed
+    /// [`crate::api::A3Error::DeadlineExceeded`] error frame if it is
+    /// still waiting `ttl` after arrival (the wire carries the TTL;
+    /// the server's clock arms it on receipt). Zero is the "no
+    /// deadline" wire convention, so a sub-nanosecond `ttl` is bumped
+    /// to 1 ns rather than silently disabling shedding.
+    pub fn submit_with_ttl(
+        &mut self,
+        ctx: RemoteContext,
+        embedding: &[f32],
+        ttl: Duration,
+    ) -> super::Result<u64> {
+        let ttl_ns = (ttl.as_nanos().min(u128::from(u64::MAX)) as u64).max(1);
+        self.submit_frame(ctx, embedding, ttl_ns)
+    }
+
+    fn submit_frame(
+        &mut self,
+        ctx: RemoteContext,
+        embedding: &[f32],
+        ttl_ns: u64,
+    ) -> super::Result<u64> {
         let req = self.next_req();
-        self.send(&Frame::Submit { req, context: ctx.id, embedding: embedding.to_vec() })?;
+        self.send(&Frame::Submit {
+            req,
+            context: ctx.id,
+            embedding: embedding.to_vec(),
+            ttl_ns,
+        })?;
+        self.inflight.insert(req);
         Ok(req)
     }
 
@@ -206,7 +378,7 @@ impl NetClient {
         }
         // completions can only arrive for submits that left the buffer
         self.writer.flush()?;
-        match wire::read_frame(&mut self.reader)? {
+        match self.read_settled()? {
             frame @ Frame::Response { .. } => Ok(Ok(response_from_frame(frame))),
             Frame::Error { req, error } if req == NO_REQ => Err(NetError::Remote(error)),
             Frame::Error { req, error } => Ok(Err((req, error))),
@@ -280,5 +452,38 @@ fn response_from_frame(frame: Frame) -> Response {
             }
         }
         _ => unreachable!("callers match Frame::Response first"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_bounded_jittered_and_deterministic() {
+        let base = Duration::from_millis(10);
+        let cap = Duration::from_millis(80);
+        let mut a = Backoff::new(base, cap, 42);
+        let mut b = Backoff::new(base, cap, 42);
+        let da: Vec<Duration> = (0..8).map(|_| a.next_delay()).collect();
+        let db: Vec<Duration> = (0..8).map(|_| b.next_delay()).collect();
+        assert_eq!(da, db, "same seed must replay the same schedule");
+        for (k, d) in da.iter().enumerate() {
+            let exp = base.saturating_mul(1u32 << k).min(cap);
+            assert!(*d >= exp.mul_f64(0.5), "attempt {k}: {d:?} under the jitter floor");
+            assert!(*d <= exp, "attempt {k}: {d:?} above the exponential ceiling");
+        }
+        // the cap bounds the schedule no matter how many attempts
+        for _ in 0..40 {
+            assert!(a.next_delay() <= cap);
+        }
+        let mut c = Backoff::new(base, cap, 43);
+        assert_ne!(
+            (0..4).map(|_| c.next_delay()).collect::<Vec<_>>(),
+            da[..4].to_vec(),
+            "different seeds must decorrelate"
+        );
+        c.reset();
+        assert_eq!(c.attempts(), 0);
     }
 }

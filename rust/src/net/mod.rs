@@ -27,6 +27,16 @@
 //!   `run_stream`/`run_random` pacing over real sockets, returning a
 //!   [`crate::api::ServeReport`].
 //!
+//! The layer is failure-typed end to end (see the "Failure model" in
+//! [`crate::api`]): the client tracks in-flight submits and turns a
+//! mid-stream disconnect into a typed
+//! [`WireError::ConnectionClosed`] carrying the orphaned request ids;
+//! [`Backoff`] gives retry loops seeded, bounded exponential pacing;
+//! the server caps concurrent connections with a typed rejection
+//! frame, idles out silent clients
+//! ([`NetServerConfig::idle_timeout`]), and drains in-flight
+//! completions for a configurable grace window on shutdown.
+//!
 //! # Remote serving
 //!
 //! Serving over TCP is three calls on each side. The server wraps an
@@ -79,7 +89,7 @@ pub mod loadgen;
 pub mod server;
 pub mod wire;
 
-pub use client::{NetClient, RecvOutcome, RemoteContext, RemoteStats};
+pub use client::{Backoff, NetClient, RecvOutcome, RemoteContext, RemoteStats};
 pub use loadgen::{run_loadgen, LoadPlan};
 pub use server::{NetServer, NetServerConfig};
 pub use wire::{Frame, WireError, WireStats, WIRE_VERSION};

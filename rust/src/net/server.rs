@@ -34,7 +34,7 @@
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -49,7 +49,9 @@ use crate::coordinator::request::{QueryId, Response};
 /// request ids at 0 and count up, so this value never collides.
 pub const NO_REQ: u64 = u64::MAX;
 
-/// Knobs for the front door.
+/// Knobs for the front door. Construct with struct-update syntax over
+/// [`NetServerConfig::default`] so added knobs never break call sites:
+/// `NetServerConfig { admission_wait: Duration::ZERO, ..Default::default() }`.
 #[derive(Clone, Copy, Debug)]
 pub struct NetServerConfig {
     /// How long a connection reader parks on the engine's admission
@@ -58,11 +60,33 @@ pub struct NetServerConfig {
     /// [`A3Error::QueueFull`] frame. While it parks, TCP backpressure
     /// stalls the client.
     pub admission_wait: Duration,
+    /// Close a connection whose client sends no frame for this long
+    /// (`None` = never). A closed idle connection's owed completions
+    /// surface client-side as the typed orphan-carrying
+    /// `ConnectionClosed`, so idling out is observable, not a hang.
+    pub idle_timeout: Option<Duration>,
+    /// Accept at most this many concurrent connections (`None` =
+    /// unbounded). A connection over the limit is answered with one
+    /// typed [`A3Error::QueueFull`] error frame (pending = live
+    /// connections, limit = the cap) and closed — a typed rejection
+    /// the client can back off on, never a silent drop.
+    pub max_connections: Option<usize>,
+    /// How long the router keeps draining in-flight completions to
+    /// their connections after a shutdown request before it gives up
+    /// on routes that can no longer complete (queries parked in
+    /// never-closing batches). The graceful-drain window of a rolling
+    /// restart.
+    pub drain_grace: Duration,
 }
 
 impl Default for NetServerConfig {
     fn default() -> Self {
-        NetServerConfig { admission_wait: Duration::from_millis(250) }
+        NetServerConfig {
+            admission_wait: Duration::from_millis(250),
+            idle_timeout: None,
+            max_connections: None,
+            drain_grace: Duration::from_millis(500),
+        }
     }
 }
 
@@ -109,6 +133,8 @@ struct ServerShared {
     /// count is bounded.
     retired: Mutex<Vec<(u64, MetricsReport)>>,
     next_conn: AtomicU64,
+    /// Currently live connections (the `max_connections` gauge).
+    conns: AtomicUsize,
     epoch: Instant,
 }
 
@@ -163,6 +189,7 @@ impl NetServer {
             per_conn: Mutex::new(AttributedMetrics::new()),
             retired: Mutex::new(Vec::new()),
             next_conn: AtomicU64::new(0),
+            conns: AtomicUsize::new(0),
             epoch: Instant::now(),
         });
         let accept = {
@@ -285,13 +312,38 @@ fn accept_loop(listener: TcpListener, shared: Arc<ServerShared>) {
         if shared.stop.load(Ordering::Acquire) {
             break; // the shutdown poke (or a late client) — drop it
         }
+        // connection cap: answer over-limit clients with one typed
+        // error frame (they can back off and retry), never a silent
+        // drop or an unbounded thread-per-connection pile-up
+        if let Some(cap) = shared.cfg.max_connections {
+            let live = shared.conns.load(Ordering::Acquire);
+            if live >= cap {
+                let mut w = BufWriter::new(stream);
+                let _ = wire::write_frame(
+                    &mut w,
+                    &Frame::Error {
+                        req: NO_REQ,
+                        error: A3Error::QueueFull { pending: live, limit: cap },
+                    },
+                );
+                let _ = w.flush();
+                continue;
+            }
+        }
+        shared.conns.fetch_add(1, Ordering::AcqRel);
         let shared = Arc::clone(&shared);
         let conn = shared.next_conn.fetch_add(1, Ordering::Relaxed);
         // readers are detached: they exit when their client closes
         // (read_frame -> Closed) or after answering a Shutdown
-        let _ = std::thread::Builder::new()
+        let spawned = std::thread::Builder::new()
             .name(format!("a3-net-conn{conn}"))
-            .spawn(move || handle_connection(shared, stream, conn));
+            .spawn({
+                let shared = Arc::clone(&shared);
+                move || handle_connection(shared, stream, conn)
+            });
+        if spawned.is_err() {
+            shared.conns.fetch_sub(1, Ordering::AcqRel);
+        }
     }
 }
 
@@ -301,7 +353,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<ServerShared>) {
 /// period, then exits even if routes remain (queries parked in
 /// never-closing batches would otherwise pin the thread forever).
 fn router_loop(shared: Arc<ServerShared>) {
-    const STOP_GRACE: Duration = Duration::from_millis(500);
+    let stop_grace = shared.cfg.drain_grace;
     let mut stop_seen: Option<Instant> = None;
     loop {
         // answer queries lost to failed dispatches (e.g. a submit
@@ -349,7 +401,7 @@ fn router_loop(shared: Arc<ServerShared>) {
                 if shared.stop.load(Ordering::Acquire) {
                     let since = *stop_seen.get_or_insert_with(Instant::now);
                     if shared.router.lock().unwrap().routes.is_empty()
-                        || since.elapsed() >= STOP_GRACE
+                        || since.elapsed() >= stop_grace
                     {
                         break;
                     }
@@ -369,9 +421,24 @@ fn router_loop(shared: Arc<ServerShared>) {
 /// Per-connection reader: preamble, then frames until disconnect,
 /// protocol error, or Shutdown.
 fn handle_connection(shared: Arc<ServerShared>, stream: TcpStream, conn: u64) {
+    /// Releases this connection's slot in the `max_connections` gauge
+    /// on any exit path.
+    struct ConnGuard(Arc<ServerShared>);
+    impl Drop for ConnGuard {
+        fn drop(&mut self) {
+            self.0.conns.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+    let _slot = ConnGuard(Arc::clone(&shared));
     let Ok(read_half) = stream.try_clone() else {
         return;
     };
+    // idle policy: a client that sends nothing for idle_timeout is
+    // disconnected (its reader's blocking read times out); completions
+    // it was owed surface as typed orphans client-side
+    if read_half.set_read_timeout(shared.cfg.idle_timeout).is_err() {
+        return;
+    }
     let mut reader = BufReader::new(read_half);
     let (out_tx, out_rx) = mpsc::channel::<Frame>();
     let writer = std::thread::Builder::new()
@@ -487,8 +554,8 @@ fn handle_frame(
             };
             let _ = out.send(reply);
         }
-        Frame::Submit { req, context, embedding } => {
-            submit_frame(shared, conn, req, context, embedding, out);
+        Frame::Submit { req, context, embedding, ttl_ns } => {
+            submit_frame(shared, conn, req, context, embedding, ttl_ns, out);
         }
         Frame::Evict { req, context } => {
             let reply = match engine.lookup_context(context).and_then(|h| engine.evict(&h)) {
@@ -537,6 +604,7 @@ fn submit_frame(
     req: u64,
     context: u32,
     embedding: Vec<f32>,
+    ttl_ns: u64,
     out: &mpsc::Sender<Frame>,
 ) {
     let engine = &shared.engine;
@@ -558,8 +626,9 @@ fn submit_frame(
     let mut embedding = embedding;
     loop {
         // submit_reclaim hands the embedding back on admission
-        // failure, so retries never clone the query payload
-        match engine.submit_reclaim(&handle, embedding) {
+        // failure, so retries never clone the query payload; the wire
+        // TTL passes straight through (0 = no deadline)
+        match engine.submit_reclaim(&handle, embedding, ttl_ns) {
             Ok(ticket) => {
                 let mut router = shared.router.lock().unwrap();
                 if let Some(r) = router.stash.remove(&ticket.id) {

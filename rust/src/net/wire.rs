@@ -33,7 +33,8 @@ use crate::coordinator::request::{ContextId, Response};
 /// Stream magic: the first four bytes of every connection.
 pub const MAGIC: [u8; 4] = *b"A3NW";
 /// Wire protocol version, bumped on any incompatible frame change.
-pub const WIRE_VERSION: u16 = 1;
+/// v2: [`Frame::Submit`] grew a `ttl_ns` field (per-query deadline).
+pub const WIRE_VERSION: u16 = 2;
 /// Hard cap on one frame's body (opcode + payload). Large enough for a
 /// 2048×512 f32 K/V pair in one register frame, small enough that a
 /// hostile length prefix cannot allocate unbounded memory.
@@ -57,6 +58,11 @@ pub enum WireError {
     TrailingBytes { extra: usize },
     /// A structurally invalid field (bad UTF-8, unknown error code…).
     Malformed(String),
+    /// The peer closed the connection while replies were still owed.
+    /// Carries the request ids that will never be answered, so a
+    /// pipelining caller can fail each orphaned request exactly once
+    /// instead of blocking forever on a reply that cannot come.
+    ConnectionClosed { orphaned: Vec<u64> },
 }
 
 impl std::fmt::Display for WireError {
@@ -77,6 +83,11 @@ impl std::fmt::Display for WireError {
                 write!(f, "{extra} trailing bytes after a complete frame")
             }
             WireError::Malformed(msg) => write!(f, "malformed frame: {msg}"),
+            WireError::ConnectionClosed { orphaned } => write!(
+                f,
+                "connection closed with {} unanswered request(s): {orphaned:?}",
+                orphaned.len()
+            ),
         }
     }
 }
@@ -108,8 +119,11 @@ pub enum Frame {
     // -- requests (client → server) ---------------------------------
     /// Comprehension time: stage an n×d K/V pair as a context.
     RegisterContext { req: u64, n: u32, d: u32, key: Vec<f32>, value: Vec<f32> },
-    /// One query against a registered context.
-    Submit { req: u64, context: ContextId, embedding: Vec<f32> },
+    /// One query against a registered context. `ttl_ns` is the
+    /// query's time-to-live from server-side arrival (0 = no
+    /// deadline): the server sheds the query with
+    /// [`A3Error::DeadlineExceeded`] if no unit picks it up in time.
+    Submit { req: u64, context: ContextId, embedding: Vec<f32>, ttl_ns: u64 },
     /// Retire a context (its admitted queries are served first).
     Evict { req: u64, context: ContextId },
     /// All-shard drain barrier; replies with the merged stats window.
@@ -164,6 +178,8 @@ const ERR_DIMENSION_MISMATCH: u16 = 6;
 const ERR_EMPTY_BATCH: u16 = 7;
 const ERR_MEMORY_BUDGET: u16 = 8;
 const ERR_ENGINE_STOPPED: u16 = 9;
+const ERR_SHARD_FAILED: u16 = 10;
+const ERR_DEADLINE_EXCEEDED: u16 = 11;
 
 /// Flatten an [`A3Error`] to `(code, a, b, msg)` for the error frame.
 fn error_fields(e: &A3Error) -> (u16, u64, u64, &str) {
@@ -183,6 +199,10 @@ fn error_fields(e: &A3Error) -> (u16, u64, u64, &str) {
             (ERR_MEMORY_BUDGET, *required as u64, *budget as u64, "")
         }
         A3Error::EngineStopped => (ERR_ENGINE_STOPPED, 0, 0, ""),
+        A3Error::ShardFailed { shard } => (ERR_SHARD_FAILED, *shard as u64, 0, ""),
+        A3Error::DeadlineExceeded { deadline_ns, now_ns } => {
+            (ERR_DEADLINE_EXCEEDED, *deadline_ns, *now_ns, "")
+        }
     }
 }
 
@@ -200,6 +220,8 @@ fn error_from_fields(code: u16, a: u64, b: u64, msg: String) -> Result<A3Error, 
         ERR_EMPTY_BATCH => A3Error::EmptyBatch,
         ERR_MEMORY_BUDGET => A3Error::MemoryBudget { required: a as usize, budget: b as usize },
         ERR_ENGINE_STOPPED => A3Error::EngineStopped,
+        ERR_SHARD_FAILED => A3Error::ShardFailed { shard: a as usize },
+        ERR_DEADLINE_EXCEEDED => A3Error::DeadlineExceeded { deadline_ns: a, now_ns: b },
         other => return Err(WireError::Malformed(format!("unknown error code {other}"))),
     })
 }
@@ -343,10 +365,11 @@ impl Frame {
                 put_f32s(buf, key);
                 put_f32s(buf, value);
             }
-            Frame::Submit { req, context, embedding } => {
+            Frame::Submit { req, context, embedding, ttl_ns } => {
                 buf.push(OP_SUBMIT);
                 put_u64(buf, *req);
                 put_u32(buf, *context);
+                put_u64(buf, *ttl_ns);
                 put_u32(buf, embedding.len() as u32);
                 put_f32s(buf, embedding);
             }
@@ -444,8 +467,9 @@ impl Frame {
             OP_SUBMIT => {
                 let req = cur.u64()?;
                 let context = cur.u32()?;
+                let ttl_ns = cur.u64()?;
                 let embedding = cur.f32_vec()?;
-                Frame::Submit { req, context, embedding }
+                Frame::Submit { req, context, embedding, ttl_ns }
             }
             OP_EVICT => Frame::Evict { req: cur.u64()?, context: cur.u32()? },
             OP_DRAIN => Frame::Drain { req: cur.u64()? },
@@ -620,7 +644,7 @@ mod tests {
     }
 
     fn random_error(rng: &mut Rng) -> A3Error {
-        match rng.below(9) {
+        match rng.below(11) {
             0 => A3Error::ConfigError(format!("cfg-{}", rng.next_u64())),
             1 => A3Error::UnknownContext(rng.next_u64() as u32),
             2 => A3Error::ContextEvicted(rng.next_u64() as u32),
@@ -629,7 +653,9 @@ mod tests {
             5 => A3Error::DimensionMismatch { expected: rng.below(4096), got: rng.below(4096) },
             6 => A3Error::EmptyBatch,
             7 => A3Error::MemoryBudget { required: rng.below(1 << 30), budget: rng.below(1 << 30) },
-            _ => A3Error::EngineStopped,
+            8 => A3Error::EngineStopped,
+            9 => A3Error::ShardFailed { shard: rng.below(64) },
+            _ => A3Error::DeadlineExceeded { deadline_ns: rng.next_u64(), now_ns: rng.next_u64() },
         }
     }
 
@@ -653,6 +679,7 @@ mod tests {
                     req,
                     context: rng.next_u64() as u32,
                     embedding: rng.normal_vec(len, 1.0),
+                    ttl_ns: if rng.below(2) == 0 { 0 } else { rng.next_u64() },
                 }
             }
             2 => Frame::Evict { req, context: rng.next_u64() as u32 },
@@ -715,10 +742,57 @@ mod tests {
             A3Error::EmptyBatch,
             A3Error::MemoryBudget { required: 4096, budget: 1024 },
             A3Error::EngineStopped,
+            A3Error::ShardFailed { shard: 3 },
+            A3Error::DeadlineExceeded { deadline_ns: 5_000_000, now_ns: 7_500_000 },
         ];
         for error in all {
             round_trip(&Frame::Error { req: 3, error });
         }
+    }
+
+    #[test]
+    fn byte_flip_corruption_never_panics_or_overallocates() {
+        // seeded fuzz: flip 1–4 random bits/bytes of a valid encoded
+        // frame, then decode. Every mutant must either decode to some
+        // well-formed frame (a flip can land in a float payload) or
+        // yield a typed WireError — never a panic, and never an
+        // allocation past MAX_FRAME_LEN (the count fields are bounds-
+        // checked against the bytes actually present before allocating)
+        check(300, |rng| {
+            let frame = random_frame(rng);
+            let mut body = Vec::new();
+            frame.encode_body(&mut body);
+            let mut mutated = body.clone();
+            for _ in 0..rng.range(1, 4) {
+                let i = rng.below(mutated.len());
+                mutated[i] ^= 1 << rng.below(8);
+            }
+            if mutated == body {
+                return; // the flips cancelled out
+            }
+            let _ = Frame::decode_body(&mutated); // must not panic
+        });
+    }
+
+    #[test]
+    fn corrupted_stream_length_prefix_is_typed_never_a_blowup() {
+        // the same fuzz through the framed stream layer, where a flip
+        // can land in the u32 length prefix itself: reads past the cap
+        // are rejected before allocation, short reads surface Closed
+        check(200, |rng| {
+            let frame = random_frame(rng);
+            let mut stream = Vec::new();
+            write_frame(&mut stream, &frame).unwrap();
+            let i = rng.below(stream.len());
+            stream[i] ^= 1 << rng.below(8);
+            let mut cursor = std::io::Cursor::new(stream);
+            match read_frame(&mut cursor) {
+                Ok(_) => {}                    // flip landed in a payload value
+                Err(NetError::Wire(_)) => {}   // typed codec failure
+                Err(NetError::Closed) => {}    // inflated length prefix hit EOF
+                Err(other) => panic!("unexpected error class: {other:?}"),
+            }
+        });
     }
 
     #[test]

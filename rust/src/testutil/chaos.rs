@@ -1,0 +1,535 @@
+//! Seeded fault-injection harness for the serving stack.
+//!
+//! `run_chaos` drives a live engine-behind-`NetServer` with several
+//! client connections while injecting faults at deterministic points
+//! in the submit stream: worker panics ([`ChaosEvent::KillShard`]),
+//! slow batches ([`ChaosEvent::SlowBatch`]), mid-stream client
+//! disconnects ([`ChaosEvent::DropConnection`]), and truncated frames
+//! from a rogue connection ([`ChaosEvent::TruncatedFrame`]).
+//!
+//! The harness exists to prove one invariant — the "Failure model" of
+//! [`crate::api`] — under fire: **every submitted query resolves to
+//! exactly one typed outcome**. A success, a typed engine error
+//! (`ShardFailed`, `DeadlineExceeded`, admission rejection), or a
+//! typed client-side orphan ([`WireError::ConnectionClosed`]) all
+//! count; a hang or a double completion fails
+//! [`ChaosReport::check`].
+//!
+//! Determinism: context K/V tensors and query embeddings derive from
+//! [`ChaosPlan::seed`] alone, and contexts are registered sequentially
+//! on a control connection so ids and shard placement repeat across
+//! runs. Fault *timing* is triggered by a global submit counter, so
+//! which in-flight queries a panic kills can vary with scheduling —
+//! but outputs of queries that succeed are bit-reproducible per
+//! `(connection, request)` pair, which is what
+//! [`ChaosReport::successes`] exposes. Every client arms a read
+//! timeout as a hang detector: a stalled completion stream surfaces as
+//! a counted failure, never a parked thread.
+
+use std::collections::BTreeSet;
+use std::io::Write as _;
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use super::Rng;
+use crate::api::{A3Error, ContextId, Engine, KvPair};
+use crate::net::{wire, Backoff, NetClient, NetError, RemoteContext, WireError};
+
+/// A read that produces no frame within this window is a hang: the
+/// harness stops the connection and counts what is still owed.
+const READ_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Per-connection pipelining window (submits in flight before the
+/// worker settles completions).
+const WINDOW: usize = 32;
+
+/// One deterministic fault, triggered when the global submit counter
+/// (across all connections) reaches `after_submits`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChaosEvent {
+    /// Panic the given shard's worker thread mid-serve
+    /// ([`Engine::chaos_panic_shard`]); its in-flight queries must
+    /// come back as typed `ShardFailed` errors and the shard must
+    /// respawn and keep serving.
+    KillShard { after_submits: usize, shard: usize },
+    /// Stall the given shard's next dispatched batch by `delay_ms`
+    /// ([`Engine::chaos_slow_shard`]) — pressure for deadline
+    /// shedding and the degrade knob.
+    SlowBatch { after_submits: usize, shard: usize, delay_ms: u64 },
+    /// Make connection `conn` vanish mid-stream with submits still in
+    /// flight; the harness accounts those as orphans and the server
+    /// must shrug off the dead socket.
+    DropConnection { after_submits: usize, conn: usize },
+    /// Open a rogue connection, send a valid preamble and a length
+    /// prefix promising more bytes than ever arrive, then disconnect.
+    /// The server must fail that connection typed and keep serving.
+    TruncatedFrame { after_submits: usize },
+}
+
+impl ChaosEvent {
+    fn after_submits(&self) -> usize {
+        match *self {
+            ChaosEvent::KillShard { after_submits, .. }
+            | ChaosEvent::SlowBatch { after_submits, .. }
+            | ChaosEvent::DropConnection { after_submits, .. }
+            | ChaosEvent::TruncatedFrame { after_submits } => after_submits,
+        }
+    }
+}
+
+/// A seeded chaos run: workload shape plus the fault schedule.
+#[derive(Clone, Debug)]
+pub struct ChaosPlan {
+    /// Seeds context tensors, query embeddings, and backoff jitter.
+    pub seed: u64,
+    /// Concurrent client connections (each on its own thread).
+    pub connections: usize,
+    /// Queries submitted *per connection*.
+    pub queries: usize,
+    /// Contexts staged for each connection (registered up front on a
+    /// control connection so placement is deterministic).
+    pub contexts_per_conn: usize,
+    /// Context rows (paper's n).
+    pub n: usize,
+    /// Feature dimension (paper's d).
+    pub d: usize,
+    /// Per-query TTL in nanoseconds; 0 disables deadlines.
+    pub ttl_ns: u64,
+    /// The fault schedule.
+    pub events: Vec<ChaosEvent>,
+}
+
+impl Default for ChaosPlan {
+    fn default() -> Self {
+        ChaosPlan {
+            seed: 0xA3,
+            connections: 2,
+            queries: 64,
+            contexts_per_conn: 1,
+            n: crate::PAPER_N,
+            d: crate::PAPER_D,
+            ttl_ns: 0,
+            events: Vec::new(),
+        }
+    }
+}
+
+/// One successful completion, keyed so reruns of the same plan can be
+/// compared bit-for-bit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SuccessRecord {
+    pub conn: usize,
+    /// The per-connection request id ([`crate::api::Response::id`]).
+    pub req: u64,
+    pub context: ContextId,
+    pub output: Vec<f32>,
+}
+
+/// Aggregated outcome accounting for a chaos run. The five outcome
+/// buckets (`ok`, `shard_failed`, `deadline_exceeded`, `orphaned`,
+/// `rejected`) must partition `submitted` exactly; `hung` and
+/// `double_completions` must be zero.
+#[derive(Clone, Debug, Default)]
+pub struct ChaosReport {
+    pub submitted: usize,
+    pub ok: usize,
+    /// Typed `ShardFailed` completions (killed worker's in-flight).
+    pub shard_failed: usize,
+    /// Typed `DeadlineExceeded` completions (shed at batch time).
+    pub deadline_exceeded: usize,
+    /// Requests owed on a connection that closed mid-stream — either
+    /// a deliberate [`ChaosEvent::DropConnection`] or a typed
+    /// [`WireError::ConnectionClosed`] from the server side.
+    pub orphaned: usize,
+    /// Other typed engine errors (admission `QueueFull`, eviction
+    /// races, …) — still exactly-one-outcome resolutions.
+    pub rejected: usize,
+    /// Requests unresolved when a client's hang detector fired.
+    /// Must be 0.
+    pub hung: usize,
+    /// Requests that resolved more than once. Must be 0.
+    pub double_completions: usize,
+    /// Truncated-frame probes actually delivered to the server.
+    pub truncated_probes: usize,
+    /// Bit-reproducible successful outputs, for cross-run comparison.
+    pub successes: Vec<SuccessRecord>,
+    /// Home shard of each staged context, in registration order
+    /// (context id order) — lets tests restrict the determinism
+    /// comparison to shards that survived a kill.
+    pub context_shards: Vec<usize>,
+}
+
+impl ChaosReport {
+    /// Outcomes accounted (should equal [`ChaosReport::submitted`]).
+    pub fn resolved(&self) -> usize {
+        self.ok + self.shard_failed + self.deadline_exceeded + self.orphaned + self.rejected
+    }
+
+    /// Verify the exactly-one-outcome invariant; `Err` explains the
+    /// violation.
+    pub fn check(&self) -> Result<(), String> {
+        if self.hung != 0 {
+            return Err(format!(
+                "{} request(s) never resolved within {READ_TIMEOUT:?} (hung client)",
+                self.hung
+            ));
+        }
+        if self.double_completions != 0 {
+            return Err(format!("{} request(s) resolved more than once", self.double_completions));
+        }
+        if self.resolved() != self.submitted {
+            return Err(format!(
+                "{} submitted but {} resolved (ok {} + shard_failed {} + deadline {} + \
+                 orphaned {} + rejected {})",
+                self.submitted,
+                self.resolved(),
+                self.ok,
+                self.shard_failed,
+                self.deadline_exceeded,
+                self.orphaned,
+                self.rejected,
+            ));
+        }
+        Ok(())
+    }
+
+    /// One-line summary (the CLI prints it; CI greps it).
+    pub fn summary(&self) -> String {
+        format!(
+            "chaos: submitted {} -> ok {} shard_failed {} deadline_exceeded {} orphaned {} \
+             rejected {} | hung {} double {} (truncated probes {})",
+            self.submitted,
+            self.ok,
+            self.shard_failed,
+            self.deadline_exceeded,
+            self.orphaned,
+            self.rejected,
+            self.hung,
+            self.double_completions,
+            self.truncated_probes,
+        )
+    }
+}
+
+/// One scheduled fault plus its fired latch (CAS so exactly one
+/// worker triggers it, whichever crosses the threshold first).
+struct Armed {
+    event: ChaosEvent,
+    fired: AtomicBool,
+}
+
+/// State shared by every connection worker.
+struct ChaosShared {
+    engine: Arc<Engine>,
+    plan: ChaosPlan,
+    /// All staged context ids, in registration order; worker `c` uses
+    /// the slice `[c * contexts_per_conn, (c + 1) * contexts_per_conn)`.
+    ctx_ids: Vec<ContextId>,
+    armed: Vec<Armed>,
+    /// Global submit counter driving the fault schedule.
+    submits: AtomicUsize,
+    /// Per-connection "vanish now" latches (DropConnection targets).
+    drop_flags: Vec<AtomicBool>,
+    truncated: AtomicUsize,
+    /// All workers connect + arm timeouts, then start together, so
+    /// the submit-counter fault schedule is meaningful.
+    start: Barrier,
+}
+
+#[derive(Default)]
+struct WorkerTally {
+    submitted: usize,
+    ok: usize,
+    shard_failed: usize,
+    deadline_exceeded: usize,
+    orphaned: usize,
+    rejected: usize,
+    hung: usize,
+    double_completions: usize,
+    successes: Vec<SuccessRecord>,
+}
+
+/// Run `plan` against an already-bound server for `engine`, injecting
+/// the scheduled faults, and account every query's outcome. The
+/// caller owns both the engine and the server (see `a3 chaos` in the
+/// CLI, or `tests/chaos.rs`); the harness only opens client
+/// connections — plus one rogue connection per
+/// [`ChaosEvent::TruncatedFrame`].
+pub fn run_chaos(
+    engine: &Arc<Engine>,
+    addr: impl ToSocketAddrs,
+    plan: &ChaosPlan,
+) -> crate::net::Result<ChaosReport> {
+    let addr: SocketAddr = addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| NetError::Io("chaos: address resolved to nothing".into()))?;
+    if plan.connections == 0 || plan.queries == 0 || plan.contexts_per_conn == 0 {
+        return Err(NetError::Protocol(
+            "chaos plan needs >= 1 connection, query, and context per connection".into(),
+        ));
+    }
+    for ev in &plan.events {
+        match *ev {
+            ChaosEvent::KillShard { shard, .. } | ChaosEvent::SlowBatch { shard, .. } => {
+                if shard >= engine.shard_count() {
+                    return Err(NetError::Protocol(format!(
+                        "chaos event targets shard {shard} but the engine has {} shard(s)",
+                        engine.shard_count()
+                    )));
+                }
+            }
+            ChaosEvent::DropConnection { conn, .. } => {
+                if conn >= plan.connections {
+                    return Err(NetError::Protocol(format!(
+                        "chaos event drops connection {conn} but the plan has {}",
+                        plan.connections
+                    )));
+                }
+            }
+            ChaosEvent::TruncatedFrame { .. } => {}
+        }
+    }
+
+    // stage every context sequentially on a control connection:
+    // registration order fixes ids and shard placement, so the same
+    // plan reproduces the same layout run over run
+    let mut control =
+        NetClient::connect_with_backoff(addr, 5, &mut Backoff::standard(plan.seed))?;
+    control.set_read_timeout(Some(READ_TIMEOUT))?;
+    let total_ctxs = plan.connections * plan.contexts_per_conn;
+    let mut kv_rng = Rng::new(plan.seed);
+    let mut ctx_ids = Vec::with_capacity(total_ctxs);
+    for _ in 0..total_ctxs {
+        let kv = KvPair::new(
+            plan.n,
+            plan.d,
+            kv_rng.normal_vec(plan.n * plan.d, 1.0),
+            kv_rng.normal_vec(plan.n * plan.d, 1.0),
+        );
+        ctx_ids.push(control.register_context(&kv)?.id());
+    }
+    let context_shards = ctx_ids
+        .iter()
+        .map(|&id| {
+            let handle = engine.lookup_context(id).map_err(NetError::Remote)?;
+            engine.home_shard(&handle).map_err(NetError::Remote)
+        })
+        .collect::<crate::net::Result<Vec<usize>>>()?;
+
+    let shared = Arc::new(ChaosShared {
+        engine: Arc::clone(engine),
+        plan: plan.clone(),
+        ctx_ids,
+        armed: plan
+            .events
+            .iter()
+            .map(|&event| Armed { event, fired: AtomicBool::new(false) })
+            .collect(),
+        submits: AtomicUsize::new(0),
+        drop_flags: (0..plan.connections).map(|_| AtomicBool::new(false)).collect(),
+        truncated: AtomicUsize::new(0),
+        start: Barrier::new(plan.connections),
+    });
+
+    let mut handles = Vec::with_capacity(plan.connections);
+    for conn in 0..plan.connections {
+        let shared = Arc::clone(&shared);
+        let handle = std::thread::Builder::new()
+            .name(format!("a3-chaos{conn}"))
+            .spawn(move || chaos_worker(&shared, addr, conn))
+            .map_err(|e| NetError::Io(format!("spawning chaos worker thread: {e}")))?;
+        handles.push(handle);
+    }
+
+    let mut report = ChaosReport { context_shards, ..ChaosReport::default() };
+    let mut first_err = None;
+    for handle in handles {
+        match handle.join() {
+            Ok(Ok(tally)) => {
+                report.submitted += tally.submitted;
+                report.ok += tally.ok;
+                report.shard_failed += tally.shard_failed;
+                report.deadline_exceeded += tally.deadline_exceeded;
+                report.orphaned += tally.orphaned;
+                report.rejected += tally.rejected;
+                report.hung += tally.hung;
+                report.double_completions += tally.double_completions;
+                report.successes.extend(tally.successes);
+            }
+            Ok(Err(e)) => first_err = first_err.or(Some(e)),
+            Err(_) => first_err = first_err.or(Some(NetError::Io("chaos worker panicked".into()))),
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    // barrier: in-flight work (including a respawning shard) settles
+    // before the report claims the engine survived
+    control.drain()?;
+    report.truncated_probes = shared.truncated.load(Ordering::Acquire);
+    // deterministic ordering for cross-run comparison
+    report.successes.sort_by_key(|s| (s.conn, s.req));
+    Ok(report)
+}
+
+fn chaos_worker(
+    shared: &ChaosShared,
+    addr: SocketAddr,
+    conn: usize,
+) -> Result<WorkerTally, NetError> {
+    let plan = &shared.plan;
+    let mut client = NetClient::connect_with_backoff(
+        addr,
+        5,
+        &mut Backoff::standard(plan.seed ^ conn as u64),
+    )?;
+    client.set_read_timeout(Some(READ_TIMEOUT))?;
+    let ctxs: Vec<RemoteContext> = shared.ctx_ids
+        [conn * plan.contexts_per_conn..(conn + 1) * plan.contexts_per_conn]
+        .iter()
+        .map(|&id| RemoteContext::from_id(id))
+        .collect();
+    // per-connection embedding stream, decorrelated across connections
+    // but fixed per (conn, i) — the determinism the report exposes
+    let mut rng =
+        Rng::new(plan.seed ^ (conn as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let mut settled: BTreeSet<u64> = BTreeSet::new();
+    let mut tally = WorkerTally::default();
+    // set to false once the connection is finished (closed or
+    // hang-detected): everything owed has been accounted, so no
+    // further settling may run
+    let mut alive = true;
+    shared.start.wait();
+    'stream: for i in 0..plan.queries {
+        let embedding = rng.normal_vec(plan.d, 1.0);
+        let ctx = ctxs[i % ctxs.len()];
+        if plan.ttl_ns > 0 {
+            client.submit_with_ttl(ctx, &embedding, Duration::from_nanos(plan.ttl_ns))?;
+        } else {
+            client.submit(ctx, &embedding)?;
+        }
+        tally.submitted += 1;
+        let total = shared.submits.fetch_add(1, Ordering::AcqRel) + 1;
+        fire_due(shared, addr, total);
+        if shared.drop_flags[conn].load(Ordering::Acquire) {
+            // mid-stream disconnect: flush so the server actually owes
+            // the replies, then vanish — everything still in flight is
+            // an orphan by construction
+            let _ = client.flush();
+            tally.orphaned += client.inflight();
+            drop(client);
+            return Ok(tally);
+        }
+        while alive && client.inflight() >= WINDOW {
+            alive = settle_one(&mut client, conn, &mut settled, &mut tally)?;
+            if !alive {
+                break 'stream;
+            }
+        }
+    }
+    while alive && client.inflight() > 0 {
+        alive = settle_one(&mut client, conn, &mut settled, &mut tally)?;
+    }
+    Ok(tally)
+}
+
+/// Trigger every not-yet-fired event whose threshold the global
+/// submit count has crossed. The CAS on `fired` guarantees exactly
+/// one worker runs each injection.
+fn fire_due(shared: &ChaosShared, addr: SocketAddr, total: usize) {
+    for armed in &shared.armed {
+        if total < armed.event.after_submits() || armed.fired.swap(true, Ordering::AcqRel) {
+            continue;
+        }
+        match armed.event {
+            ChaosEvent::KillShard { shard, .. } => {
+                let _ = shared.engine.chaos_panic_shard(shard);
+            }
+            ChaosEvent::SlowBatch { shard, delay_ms, .. } => {
+                let _ = shared.engine.chaos_slow_shard(shard, Duration::from_millis(delay_ms));
+            }
+            ChaosEvent::DropConnection { conn, .. } => {
+                shared.drop_flags[conn].store(true, Ordering::Release);
+            }
+            ChaosEvent::TruncatedFrame { .. } => {
+                if send_truncated_frame(addr).is_ok() {
+                    shared.truncated.fetch_add(1, Ordering::AcqRel);
+                }
+            }
+        }
+    }
+}
+
+/// Receive and classify one completion. `Ok(true)` = keep going;
+/// `Ok(false)` = this connection is finished (closed or hang-detected)
+/// and all owed requests have been accounted.
+fn settle_one(
+    client: &mut NetClient,
+    conn: usize,
+    settled: &mut BTreeSet<u64>,
+    tally: &mut WorkerTally,
+) -> Result<bool, NetError> {
+    match client.recv_outcome() {
+        Ok(Ok(resp)) => {
+            if settled.insert(resp.id) {
+                tally.ok += 1;
+                tally.successes.push(SuccessRecord {
+                    conn,
+                    req: resp.id,
+                    context: resp.context,
+                    output: resp.output,
+                });
+            } else {
+                tally.double_completions += 1;
+            }
+            Ok(true)
+        }
+        Ok(Err((req, error))) => {
+            if settled.insert(req) {
+                match error {
+                    A3Error::ShardFailed { .. } => tally.shard_failed += 1,
+                    A3Error::DeadlineExceeded { .. } => tally.deadline_exceeded += 1,
+                    _ => tally.rejected += 1,
+                }
+            } else {
+                tally.double_completions += 1;
+            }
+            Ok(true)
+        }
+        Err(NetError::Wire(WireError::ConnectionClosed { orphaned })) => {
+            // server went away mid-stream: each owed request resolves
+            // exactly once, as a typed orphan
+            for req in orphaned {
+                if settled.insert(req) {
+                    tally.orphaned += 1;
+                } else {
+                    tally.double_completions += 1;
+                }
+            }
+            Ok(false)
+        }
+        Err(NetError::Io(_)) => {
+            // the hang detector fired: completions stopped flowing.
+            // Count what is owed and stop instead of parking forever.
+            tally.hung += client.inflight();
+            Ok(false)
+        }
+        Err(e) => Err(e),
+    }
+}
+
+/// The rogue connection: valid preamble, then a length prefix
+/// promising 64 body bytes of which only 9 ever arrive. The handler
+/// must see a typed early-EOF and close this connection without
+/// disturbing the others.
+fn send_truncated_frame(addr: SocketAddr) -> crate::net::Result<()> {
+    let mut stream = TcpStream::connect(addr)?;
+    wire::write_preamble(&mut stream)?;
+    stream.write_all(&64u32.to_le_bytes())?;
+    stream.write_all(&[0x5a; 9])?;
+    stream.flush()?;
+    Ok(())
+}

@@ -7,6 +7,13 @@
 //! Box–Muller, and a `check` runner that executes a property over many
 //! seeded cases and reports the failing seed (no shrinking — the seed
 //! is the reproducer).
+//!
+//! The [`chaos`] submodule is the seeded fault-injection harness for
+//! the serving stack (worker panics, slow batches, dropped
+//! connections, truncated frames), proving the exactly-one-outcome
+//! guarantee of the failure model under fire.
+
+pub mod chaos;
 
 /// SplitMix64 PRNG (Steele, Lea, Flood 2014). Deterministic, seedable,
 /// and good enough for test-data generation and workload synthesis.

@@ -112,7 +112,13 @@ fn scheduler_rejects_malformed_dispatch_with_typed_error_not_wrong_answer() {
     let mut s = Scheduler::new(&[UnitConfig { kind: UnitKind::Base, dims: Dims::new(4, 2) }]);
     // dispatch with a mismatched embedding dimension must surface a
     // typed A3Error (never garbage, never a panic on the serving path)
-    let bad = Query { id: 0, context: 7, embedding: vec![0.0; 5], arrival_ns: 0 };
+    let bad = Query {
+        id: 0,
+        context: 7,
+        embedding: vec![0.0; 5],
+        arrival_ns: 0,
+        deadline_ns: a3::coordinator::NO_DEADLINE,
+    };
     let err = s.dispatch(&ctx, &[bad]).unwrap_err();
     assert_eq!(err, A3Error::DimensionMismatch { expected: 2, got: 5 });
     // and an empty batch is equally typed

@@ -132,7 +132,7 @@ fn queue_full_reaches_the_remote_client_as_typed_code() {
     let server = NetServer::bind_with(
         Arc::new(engine),
         "127.0.0.1:0",
-        NetServerConfig { admission_wait: Duration::ZERO },
+        NetServerConfig { admission_wait: Duration::ZERO, ..Default::default() },
     )
     .unwrap();
     let mut client = NetClient::connect(server.local_addr()).unwrap();

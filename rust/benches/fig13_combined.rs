@@ -17,6 +17,12 @@ fn main() {
     println!("{a}\n{b}");
 
     println!("-- full approximate attention path (n=320, d=64) --");
+    let kplan = a3::attention::plan();
+    println!(
+        "kernel plan: plane={} features={}",
+        kplan.plane.label(),
+        a3::attention::host_feature_summary()
+    );
     let mut rng = Rng::new(4);
     let (n, d) = (a3::PAPER_N, a3::PAPER_D);
     let kv = KvPair::new(n, d, rng.normal_vec(n * d, 1.0), rng.normal_vec(n * d, 1.0));
@@ -24,20 +30,28 @@ fn main() {
     let q = rng.normal_vec(d, 1.0);
     let mut scratch = ApproxScratch::new();
     let mut out = vec![0.0f32; d];
+    // operand footprint per query: K + V + query + output touched once
+    // (approximate schemes touch less — the rate is then an effective
+    // GB/s over the same nominal footprint, making the speedup legible)
+    let query_bytes = (4 * (2 * n * d + 2 * d)) as u64;
+    let query_elems = (n * d) as u64;
     for (name, m, t) in [("conservative", n / 2, 5.0), ("aggressive", n / 8, 10.0)] {
         let r = bench(&format!("approximate_attention {name} (oracle chain)"), budget(), || {
             black_box(approximate_attention(&kv, &sorted, &q, m, t));
-        });
+        })
+        .with_rates(query_bytes, query_elems);
         println!("{r}");
         let plan = SelectivePlan { m_iters: Some(m), t_pct: Some(t) };
         let r = bench(&format!("fused engine {name} (zero-alloc)"), budget(), || {
             selective_attention_into(&kv, Some(&sorted), &q, plan, &mut scratch, &mut out);
             black_box(&mut out);
-        });
+        })
+        .with_rates(query_bytes, query_elems);
         println!("{r}");
     }
     let r = bench("exact attention (for comparison)", budget(), || {
         black_box(a3::attention::attention(&kv, &q));
-    });
+    })
+    .with_rates(query_bytes, query_elems);
     println!("{r}");
 }

@@ -40,6 +40,25 @@ fn main() {
     let q = rng.normal_vec(d, 1.0);
     let b = budget();
 
+    // -- SIMD kernel planes: scalar oracle vs every available plane ---
+    // one line per plane for the score micro-kernel, so the dispatch
+    // win (and the A3_FORCE_SCALAR=1 fallback cost) is visible in-run
+    let plan = kernel::plan();
+    println!(
+        "kernel plan: plane={} features={} tile(d={d})={}",
+        plan.plane.label(),
+        kernel::host_feature_summary(),
+        plan.tile.label(d)
+    );
+    let k0 = kv.key_row(0).to_vec();
+    for plane in kernel::available_planes() {
+        let name = format!("dot simd f32 d={d} [{}]", plane.label());
+        println!("{}", bench(&name, b, || {
+            black_box(kernel::simd::dot_f32_on(plane, black_box(&q), black_box(&k0)));
+        })
+        .with_rates((2 * d * 4) as u64, d as u64));
+    }
+
     // -- single-query attention: wrapper, zero-alloc kernel, seed -----
     println!("{}", bench("attention f32 n=320 d=64", b, || {
         black_box(attention(&kv, &q));
@@ -76,6 +95,26 @@ fn main() {
         kernel::parallel_attention_batch_into(&kv, &batch64, &mut out64, 0);
         black_box(&mut out64);
     }));
+
+    // -- cache-blocked batch executor vs the scalar-tiled oracle ------
+    // operand footprint per iteration: K + V + queries + outputs each
+    // touched once; elements = multiply-accumulates (64·n·d)
+    let batch_bytes = (4 * (2 * n * d + 2 * 64 * d)) as u64;
+    let batch_elems = (64 * n * d) as u64;
+    println!("{}", bench("attention scalar-tiled batch-64 (oracle)", b, || {
+        kernel::attention_batch_scalar_into(&kv, &batch64, &mut out64, &mut ws);
+        black_box(&mut out64);
+    })
+    .with_rates(batch_bytes, batch_elems));
+    for plane in kernel::available_planes().into_iter().filter(|p| p.is_simd()) {
+        let p = kernel::KernelPlan { plane, tile: plan.tile };
+        let name = format!("attention cache-blocked batch-64 [{}]", plane.label());
+        println!("{}", bench(&name, b, || {
+            kernel::attention_batch_blocked_into(&p, &kv, &batch64, &mut out64, &mut ws);
+            black_box(&mut out64);
+        })
+        .with_rates(batch_bytes, batch_elems));
+    }
 
     // -- quantized datapath ------------------------------------------
     println!("{}", bench("quantized_attention (quantize K/V per call)", b, || {

@@ -35,6 +35,13 @@
 //! One scratch per thread — batch executors use [`with_scratch`],
 //! which hands out a thread-local instance that persists across jobs
 //! on pool workers.
+//!
+//! The engine inherits the process-wide kernel plane
+//! ([`kernel::plan`]): scoring and accumulation run on the selected
+//! SIMD plane, while the f64 selection oracle is **bit-identical on
+//! every plane** by the kernel layer's contract — so candidate and
+//! kept sets never depend on which plane a host detected, only the
+//! (tolerance-oracled) f32 output arithmetic does.
 
 use super::greedy::{greedy_select_scratch, GreedyOpts, GreedyScratch, GreedyStats};
 use super::postscore::threshold_t;

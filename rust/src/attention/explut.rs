@@ -13,6 +13,16 @@
 //! with jax's 64-bit mode disabled). Arguments with `u ≥ 16` underflow
 //! to exactly 0 — at 2f = 8 score fraction bits, `e^-16 ≈ 1.1e-7` is
 //! below half an ulp, so this is lossless.
+//!
+//! The lookup ([`ExpLut::exp_neg`]) is deliberately branch-free past
+//! the single underflow clamp — shift, mask, two table reads, one
+//! multiply — so it stays friendly to the SIMD kernel planes
+//! (`attention::kernel::simd`): the surrounding quantized pipeline
+//! vectorizes the dot products around it (the widening-multiply
+//! [`crate::attention::dot_q15`] path) without the exponent stage
+//! forcing lane divergence, echoing Vasyltsov & Chang's
+//! softmax-in-hardware observation that table-based exponents beat
+//! piecewise-branchy ones for parallel datapaths.
 
 /// Fraction bits of the stored table entries.
 pub const TABLE_FRAC: u32 = 15;

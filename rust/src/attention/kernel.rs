@@ -49,12 +49,48 @@
 //!   across cores. A parked-worker pool (not `thread::spawn` per call)
 //!   keeps dispatch overhead in the microseconds, so even the
 //!   coordinator's 8-query batches win.
+//!
+//! # Kernel planes & dispatch
+//!
+//! The micro-kernels above are the *scalar oracle*. The [`simd`]
+//! submodule layers explicit-SIMD implementations over them — AVX2/FMA
+//! on x86_64, NEON on aarch64, a portable 128-bit-lane plane
+//! everywhere — selected **once per process** into a
+//! [`simd::KernelPlan`] (runtime feature detection, no new deps) that
+//! the public `dot_*`, [`OnlineSoftmax`], and batch entry points
+//! consult. The exactness contract:
+//!
+//! * [`dot_f64`], [`dot_i32`], and [`dot_q15`] are **bit-identical on
+//!   every plane** (the SIMD f64 kernels replay the scalar oracle's
+//!   accumulator layout and combine order exactly; integer sums are
+//!   exact). The approximate engine's f64 selection oracle therefore
+//!   picks identical row sets regardless of plane.
+//! * [`dot_f32`] reassociates on SIMD planes (wider unroll + FMA) and
+//!   is covered by the documented tolerance oracle
+//!   [`simd::dot_f32_tolerance`], asserted per plane in
+//!   `tests/kernel_parity.rs`.
+//! * Within one plane, batch / parallel / single-query paths remain
+//!   bit-identical to each other, exactly as before.
+//!
+//! On SIMD planes the batch executor switches from the fixed
+//! [`QUERY_BLOCK`]×[`KV_TILE_ROWS`] tiling to FlashAttention-style
+//! cache blocking: L1-sized query blocks × L2-sized K/V panels from
+//! [`simd::TileConfig`], one panel-max rescale per panel instead of
+//! one per row. Knobs: `A3_FORCE_SCALAR=1` pins the scalar oracle
+//! plane process-wide; `A3_TILE=QxR` overrides the tile geometry.
 
 use std::cell::{Cell, RefCell};
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 use super::KvPair;
+
+pub mod simd;
+
+pub use simd::{
+    available_planes, dot_f32_tolerance, host_feature_summary, plan, KernelPlan, KernelPlane,
+    TileConfig,
+};
 
 /// Key/value rows per cache tile in batch execution. 32 rows at d = 64
 /// is 8 KB of K plus 8 KB of V — comfortably L1-resident alongside a
@@ -76,14 +112,46 @@ pub const PARALLEL_MIN_MACS: usize = 1 << 17;
 // micro-kernels
 // ---------------------------------------------------------------------------
 
-/// Dot product with eight independent accumulators.
+/// Dot product on the process-wide kernel plane (see [`simd::plan`]).
+/// Reassociated relative to [`dot_f32_scalar`] on SIMD planes, within
+/// [`simd::dot_f32_tolerance`].
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    simd::dot_f32_on(plan().plane, a, b)
+}
+
+/// f64-widened dot product on the process-wide kernel plane.
+/// **Bit-identical on every plane** — safe for the selection oracle.
+#[inline]
+pub fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+    simd::dot_f64_on(plan().plane, a, b)
+}
+
+/// Integer dot product on the process-wide kernel plane. Exact, hence
+/// bit-identical on every plane.
+#[inline]
+pub fn dot_i32(a: &[i32], b: &[i32]) -> i32 {
+    simd::dot_i32_on(plan().plane, a, b)
+}
+
+/// Widening i16×i16→i32 dot product on the process-wide kernel plane
+/// (`maddubs`/`smull`-style lanes — the software twin of the paper's
+/// §III-C quantized multiplier bank). Exact under the caller's
+/// no-overflow gate (see [`super::quantized::QuantKv`]), hence
+/// bit-identical on every plane.
+#[inline]
+pub fn dot_q15(a: &[i16], b: &[i16]) -> i32 {
+    simd::dot_q15_on(plan().plane, a, b)
+}
+
+/// Scalar-oracle dot product with eight independent accumulators.
 ///
 /// The unroll explicitly reassociates the reduction, which is what
 /// permits SIMD codegen; the final combine order is fixed (pairwise)
 /// so results are deterministic across calls and platforms with the
 /// same FP semantics.
 #[inline]
-pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+pub fn dot_f32_scalar(a: &[f32], b: &[f32]) -> f32 {
     assert_eq!(a.len(), b.len(), "dot operand length mismatch");
     let split = a.len() - a.len() % 8;
     let mut acc = [0.0f32; 8];
@@ -99,14 +167,15 @@ pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
     ((acc[0] + acc[4]) + (acc[2] + acc[6])) + ((acc[1] + acc[5]) + (acc[3] + acc[7])) + tail
 }
 
-/// f64-plane dot product of two f32 slices, same eight-accumulator
-/// unroll as [`dot_f32`]. This is the *selection oracle* plane of the
-/// approximate engine (§IV-D post-scoring compares candidate scores in
-/// f64, matching the python reference); the combine order is fixed so
-/// the fused engine and the composed reference chain see bit-identical
-/// scores.
+/// Scalar-oracle f64-plane dot product of two f32 slices, same
+/// eight-accumulator unroll as [`dot_f32_scalar`]. This is the
+/// *selection oracle* plane of the approximate engine (§IV-D
+/// post-scoring compares candidate scores in f64, matching the python
+/// reference); the combine order is fixed — and deliberately replayed
+/// by the SIMD planes — so the fused engine and the composed reference
+/// chain see bit-identical scores everywhere.
 #[inline]
-pub fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+pub fn dot_f64_scalar(a: &[f32], b: &[f32]) -> f64 {
     assert_eq!(a.len(), b.len(), "dot operand length mismatch");
     let split = a.len() - a.len() % 8;
     let mut acc = [0.0f64; 8];
@@ -122,11 +191,11 @@ pub fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
     ((acc[0] + acc[4]) + (acc[2] + acc[6])) + ((acc[1] + acc[5]) + (acc[3] + acc[7])) + tail
 }
 
-/// Integer dot product, same unroll. Integer addition is exact, so the
-/// result is identical to a sequential sum — the quantized datapath
-/// stays bit-accurate against the python oracle.
+/// Scalar-oracle integer dot product, same unroll. Integer addition is
+/// exact, so the result is identical to a sequential sum — the
+/// quantized datapath stays bit-accurate against the python oracle.
 #[inline]
-pub fn dot_i32(a: &[i32], b: &[i32]) -> i32 {
+pub fn dot_i32_scalar(a: &[i32], b: &[i32]) -> i32 {
     assert_eq!(a.len(), b.len(), "dot operand length mismatch");
     let split = a.len() - a.len() % 8;
     let mut acc = [0i32; 8];
@@ -143,23 +212,92 @@ pub fn dot_i32(a: &[i32], b: &[i32]) -> i32 {
 }
 
 /// One online-softmax step: fold row (`score`, `value`) into the
-/// running (max, denominator, accumulator) state.
+/// running (max, denominator, accumulator) state. The rescale and
+/// accumulate halves run on `plane` (on the scalar plane this is the
+/// original element-wise loop, unchanged).
 #[inline]
-fn online_update(m: &mut f32, l: &mut f32, acc: &mut [f32], score: f32, value: &[f32]) {
+fn online_update(
+    plane: KernelPlane,
+    m: &mut f32,
+    l: &mut f32,
+    acc: &mut [f32],
+    score: f32,
+    value: &[f32],
+) {
     if score > *m {
         // rescale history to the new max; (m - score).exp() is exactly
         // 0.0 on the first row (m = -inf), zeroing the empty state
         let c = (*m - score).exp();
-        for o in acc.iter_mut() {
-            *o *= c;
-        }
+        simd::scale_on(plane, acc, c);
         *l *= c;
         *m = score;
     }
     let p = (score - *m).exp();
     *l += p;
-    for (o, v) in acc.iter_mut().zip(value) {
-        *o += p * v;
+    simd::axpy_on(plane, acc, p, value);
+}
+
+/// One *panel* online-softmax step: fold the pre-computed scores of
+/// K/V rows `row0 .. row0 + scores.len()` into the running state with
+/// a single rescale against the panel max (the FlashAttention block
+/// recurrence) instead of a rescale per ascending row. Numerically
+/// equivalent to row-by-row [`online_update`] but with a different
+/// (documented) rounding pattern — parity vs the scalar oracle is
+/// tolerance-checked, while repeat runs on one plane stay bit-exact.
+#[inline]
+fn online_block_update(
+    plane: KernelPlane,
+    m: &mut f32,
+    l: &mut f32,
+    acc: &mut [f32],
+    scores: &[f32],
+    kv: &KvPair,
+    row0: usize,
+) {
+    if scores.is_empty() {
+        return;
+    }
+    let bm = simd::max_f32_on(plane, scores);
+    if bm > *m {
+        // exp(m - bm) is exactly 0.0 on the first panel (m = -inf),
+        // zeroing the empty state
+        let c = (*m - bm).exp();
+        simd::scale_on(plane, acc, c);
+        *l *= c;
+        *m = bm;
+    }
+    for (j, &s) in scores.iter().enumerate() {
+        let p = (s - *m).exp();
+        *l += p;
+        simd::axpy_on(plane, acc, p, kv.value_row(row0 + j));
+    }
+}
+
+/// Fill `scores[0 .. t1 - t0]` with `k_i · q` for panel rows
+/// `t0 .. t1`, using the plane's fused multi-row score kernel when it
+/// has one. Every element is bit-identical to
+/// [`simd::dot_f32_on`]`(plane, key_row(i), q)`.
+#[inline]
+fn panel_scores(plane: KernelPlane, kv: &KvPair, q: &[f32], t0: usize, t1: usize, scores: &mut [f32]) {
+    let mut i = t0;
+    while i + 4 <= t1 {
+        let rows = [
+            kv.key_row(i),
+            kv.key_row(i + 1),
+            kv.key_row(i + 2),
+            kv.key_row(i + 3),
+        ];
+        match simd::dot4_f32_on(plane, rows, q) {
+            Some(s4) => {
+                scores[i - t0..i - t0 + 4].copy_from_slice(&s4);
+                i += 4;
+            }
+            None => break,
+        }
+    }
+    while i < t1 {
+        scores[i - t0] = simd::dot_f32_on(plane, kv.key_row(i), q);
+        i += 1;
     }
 }
 
@@ -202,10 +340,13 @@ impl OnlineSoftmax {
         OnlineSoftmax { m: f32::NEG_INFINITY, l: 0.0 }
     }
 
-    /// Fold one (score, value) row into the accumulator.
+    /// Fold one (score, value) row into the accumulator. Runs on the
+    /// process-wide kernel plane (vectorized rescale/accumulate on
+    /// SIMD planes; the original scalar loops under
+    /// `A3_FORCE_SCALAR`).
     #[inline]
     pub fn push(&mut self, score: f32, value: &[f32], acc: &mut [f32]) {
-        online_update(&mut self.m, &mut self.l, acc, score, value);
+        online_update(plan().plane, &mut self.m, &mut self.l, acc, score, value);
     }
 
     /// Normalize the accumulator. Zero rows pushed leaves `acc`
@@ -222,16 +363,26 @@ impl OnlineSoftmax {
 // ---------------------------------------------------------------------------
 
 /// Fused one-pass attention for a single query, writing into `out`.
-/// Reads each K and V row exactly once; performs no heap allocation.
+/// Reads each K and V row exactly once; performs no heap allocation in
+/// steady state.
+///
+/// On SIMD planes this routes through the same cache-blocked panel
+/// recurrence as [`attention_batch_into`] (with a batch of one), so
+/// single-query and batch outputs stay bit-identical per plane; on the
+/// scalar plane it is the original row-by-row fused loop.
 pub fn attention_into(kv: &KvPair, query: &[f32], out: &mut [f32]) {
     assert_eq!(query.len(), kv.d, "query dimension mismatch");
     assert_eq!(out.len(), kv.d, "output dimension mismatch");
+    let plan = plan();
+    if plan.plane.is_simd() {
+        return with_workspace(|ws| attention_batch_blocked_into(plan, kv, query, out, ws));
+    }
     out.fill(0.0);
     let mut m = f32::NEG_INFINITY;
     let mut l = 0.0f32;
     for i in 0..kv.n {
-        let s = dot_f32(kv.key_row(i), query);
-        online_update(&mut m, &mut l, out, s, kv.value_row(i));
+        let s = dot_f32_scalar(kv.key_row(i), query);
+        online_update(KernelPlane::Scalar, &mut m, &mut l, out, s, kv.value_row(i));
     }
     finalize(out, l);
 }
@@ -262,8 +413,13 @@ pub struct Workspace {
     m: Vec<f32>,
     /// Per-query running denominators for the active query block.
     l: Vec<f32>,
+    /// Per-panel score scratch for the cache-blocked SIMD batch path.
+    scores: Vec<f32>,
     /// Quantized query scratch (the `q_q` vector of Fig. 5 module 1).
     pub(crate) qq: Vec<i32>,
+    /// i16-packed quantized query scratch for the widening-multiply
+    /// SIMD path ([`dot_q15`]).
+    pub(crate) qq16: Vec<i16>,
     /// Quantized per-row scratch: dot products, overwritten by scores.
     pub(crate) row_q: Vec<i32>,
     /// Quantized output accumulator (Q(i + log2 n, 3f) plane).
@@ -275,7 +431,9 @@ impl Workspace {
         Workspace {
             m: Vec::new(),
             l: Vec::new(),
+            scores: Vec::new(),
             qq: Vec::new(),
+            qq16: Vec::new(),
             row_q: Vec::new(),
             out_q: Vec::new(),
         }
@@ -293,14 +451,37 @@ pub fn with_workspace<R>(f: impl FnOnce(&mut Workspace) -> R) -> R {
     WORKSPACE.with(|ws| f(&mut ws.borrow_mut()))
 }
 
-/// Query-tiled batch attention: `queries` is row-major `b × d`, `out`
-/// the same shape. Queries are processed in blocks of [`QUERY_BLOCK`]
-/// against K/V tiles of [`KV_TILE_ROWS`] rows, so each K/V tile is
-/// streamed from memory once per block rather than once per query.
+/// Batch attention on the process-wide kernel plane: `queries` is
+/// row-major `b × d`, `out` the same shape. Dispatches to the
+/// cache-blocked executor ([`attention_batch_blocked_into`]) on SIMD
+/// planes, and to the original fixed-tile scalar executor
+/// ([`attention_batch_scalar_into`]) on the scalar oracle plane.
+///
+/// On either plane, every output is bit-identical to
+/// [`attention_into`] on that query (same plane).
+pub fn attention_batch_into(kv: &KvPair, queries: &[f32], out: &mut [f32], ws: &mut Workspace) {
+    let plan = plan();
+    if plan.plane.is_simd() {
+        attention_batch_blocked_into(plan, kv, queries, out, ws);
+    } else {
+        attention_batch_scalar_into(kv, queries, out, ws);
+    }
+}
+
+/// The original query-tiled scalar batch executor — the parity oracle
+/// for the cache-blocked path. Queries are processed in blocks of
+/// [`QUERY_BLOCK`] against K/V tiles of [`KV_TILE_ROWS`] rows, so each
+/// K/V tile is streamed from memory once per block rather than once
+/// per query.
 ///
 /// Per-query row order is still `0..n`, so every output is
-/// bit-identical to [`attention_into`] on that query.
-pub fn attention_batch_into(kv: &KvPair, queries: &[f32], out: &mut [f32], ws: &mut Workspace) {
+/// bit-identical to the scalar-plane [`attention_into`] on that query.
+pub fn attention_batch_scalar_into(
+    kv: &KvPair,
+    queries: &[f32],
+    out: &mut [f32],
+    ws: &mut Workspace,
+) {
     let d = kv.d;
     assert_eq!(queries.len() % d, 0, "queries are not a multiple of d");
     assert_eq!(out.len(), queries.len(), "output shape mismatch");
@@ -322,8 +503,8 @@ pub fn attention_batch_into(kv: &KvPair, queries: &[f32], out: &mut [f32], ws: &
                 let acc = &mut oblock[j * d..(j + 1) * d];
                 let (mut m, mut l) = (ws.m[j], ws.l[j]);
                 for i in t0..t1 {
-                    let s = dot_f32(kv.key_row(i), q);
-                    online_update(&mut m, &mut l, acc, s, kv.value_row(i));
+                    let s = dot_f32_scalar(kv.key_row(i), q);
+                    online_update(KernelPlane::Scalar, &mut m, &mut l, acc, s, kv.value_row(i));
                 }
                 ws.m[j] = m;
                 ws.l[j] = l;
@@ -332,6 +513,57 @@ pub fn attention_batch_into(kv: &KvPair, queries: &[f32], out: &mut [f32], ws: &
         }
         for j in 0..bsz {
             finalize(&mut oblock[j * d..(j + 1) * d], ws.l[j]);
+        }
+    }
+}
+
+/// FlashAttention-style cache-blocked batch executor for SIMD planes:
+/// L1-sized query blocks × L2-sized K/V panels from the plan's
+/// [`TileConfig`], scores for a whole panel computed up front (fused
+/// multi-row kernel where the plane has one), then folded with one
+/// panel-max rescale per panel. Each K/V panel is streamed from memory
+/// once per query *block* and stays L2-resident while every query in
+/// the block passes over it.
+///
+/// Panel boundaries depend only on `(n, tile)`, never on the batch
+/// size, so a batch of one is bit-identical to any other batch shape
+/// on the same plane.
+pub fn attention_batch_blocked_into(
+    plan: &KernelPlan,
+    kv: &KvPair,
+    queries: &[f32],
+    out: &mut [f32],
+    ws: &mut Workspace,
+) {
+    let d = kv.d;
+    assert_eq!(queries.len() % d, 0, "queries are not a multiple of d");
+    assert_eq!(out.len(), queries.len(), "output shape mismatch");
+    let plane = plan.plane;
+    let qrows = plan.tile.query_rows(d);
+    let prows = plan.tile.panel_rows(d);
+    let Workspace { m, l, scores, .. } = ws;
+    for (qblock, oblock) in queries.chunks(qrows * d).zip(out.chunks_mut(qrows * d)) {
+        let bsz = qblock.len() / d;
+        m.clear();
+        m.resize(bsz, f32::NEG_INFINITY);
+        l.clear();
+        l.resize(bsz, 0.0);
+        oblock.fill(0.0);
+        let mut t0 = 0;
+        while t0 < kv.n {
+            let t1 = (t0 + prows).min(kv.n);
+            scores.clear();
+            scores.resize(t1 - t0, 0.0);
+            for j in 0..bsz {
+                let q = &qblock[j * d..(j + 1) * d];
+                let acc = &mut oblock[j * d..(j + 1) * d];
+                panel_scores(plane, kv, q, t0, t1, scores);
+                online_block_update(plane, &mut m[j], &mut l[j], acc, scores, kv, t0);
+            }
+            t0 = t1;
+        }
+        for j in 0..bsz {
+            finalize(&mut oblock[j * d..(j + 1) * d], l[j]);
         }
     }
 }

@@ -1,0 +1,1102 @@
+//! Explicit-SIMD kernel planes with one-time runtime dispatch.
+//!
+//! The paper wins by laying the attention datapath out in silicon:
+//! parallel multiplier lanes feeding an adder tree (§III-A), SRAM
+//! banks sized so operands stream past the arithmetic exactly once
+//! (§III-C). This module is the software analogue: each *kernel plane*
+//! is one lane-width strategy for the dot/softmax micro-kernels, and a
+//! [`KernelPlan`] — selected once at process start — says which plane
+//! the hot paths run on and how the batch executor tiles K/V against
+//! the cache hierarchy (the SRAM-bank analogue).
+//!
+//! Planes:
+//!
+//! * **`Scalar`** — the 8-wide unrolled scalar kernels in the parent
+//!   module, unchanged from before this layer existed. This is the
+//!   *parity oracle*: every other plane is tested against it, and
+//!   `A3_FORCE_SCALAR=1` pins the whole process to it.
+//! * **`Simd128`** — portable 128-bit-lane-structured code (plain
+//!   Rust the autovectorizer can map onto SSE2/NEON/WASM-simd128).
+//!   No intrinsics, always available.
+//! * **`Avx2`** — x86_64 intrinsics (`std::arch`), requires runtime
+//!   `avx2` + `fma` detection. 8-lane f32 FMA, 4-lane f64, 8-lane
+//!   i32, and the 16-lane `madd`-style widening i16 path.
+//! * **`Neon`** — aarch64 intrinsics. 4-lane f32 FMA, 2-lane f64,
+//!   4-lane i32, and the `smull`-style widening i16 path.
+//!
+//! Bit-exactness contract (the tolerance oracle of
+//! `tests/kernel_parity.rs`):
+//!
+//! * `dot_f64`, `dot_i32`, and `dot_q15` are **bit-identical** on
+//!   every plane. The integer sums are exact, and the SIMD f64 kernels
+//!   deliberately map their vector lanes onto the scalar kernel's
+//!   eight accumulators (separate mul + add, same pairwise combine),
+//!   so the selective engine's f64 selection oracle — and therefore
+//!   every kept-row set — is identical no matter which plane runs.
+//! * `dot_f32` reassociates further (wider unroll + FMA) and is
+//!   covered by [`dot_f32_tolerance`]: both the scalar and SIMD sums
+//!   are instances of the classic `|fl(Σab) − Σab| ≤ γ_n·Σ|a·b|`
+//!   forward-error bound (γ_n ≈ n·ε), so any two orderings differ by
+//!   at most `2·n·ε·Σ|a_i·b_i|`.
+//!
+//! Environment knobs (read once, at first kernel use):
+//!
+//! * `A3_FORCE_SCALAR=1` — pin the plan to the scalar oracle plane.
+//! * `A3_TILE=QxR` — override the cache-blocking tile: `Q` query rows
+//!   per block, `R` K/V rows per panel (e.g. `A3_TILE=16x128`).
+
+use std::sync::OnceLock;
+
+// ---------------------------------------------------------------------------
+// plan: plane + tile config, detected once
+// ---------------------------------------------------------------------------
+
+/// One lane-width strategy for the kernel core. See the module docs
+/// for the per-plane exactness contract.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelPlane {
+    /// The unrolled scalar kernels — the parity oracle.
+    Scalar,
+    /// Portable 128-bit-lane-structured code (no intrinsics).
+    Simd128,
+    /// x86_64 AVX2+FMA intrinsics (runtime-detected).
+    Avx2,
+    /// aarch64 NEON intrinsics.
+    Neon,
+}
+
+impl KernelPlane {
+    /// Stable lower-case label for bench lines and JSON snapshots.
+    pub fn label(self) -> &'static str {
+        match self {
+            KernelPlane::Scalar => "scalar",
+            KernelPlane::Simd128 => "simd128",
+            KernelPlane::Avx2 => "avx2",
+            KernelPlane::Neon => "neon",
+        }
+    }
+
+    /// All planes, oracle first.
+    pub fn all() -> [KernelPlane; 4] {
+        [KernelPlane::Scalar, KernelPlane::Simd128, KernelPlane::Avx2, KernelPlane::Neon]
+    }
+
+    /// Can this plane execute on the current host?
+    pub fn available(self) -> bool {
+        match self {
+            KernelPlane::Scalar | KernelPlane::Simd128 => true,
+            KernelPlane::Avx2 => avx2_available(),
+            KernelPlane::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+
+    /// True for every plane except the scalar oracle.
+    pub fn is_simd(self) -> bool {
+        self != KernelPlane::Scalar
+    }
+}
+
+/// The planes that can actually run on this host, oracle first — the
+/// iteration set for per-plane parity tests and bench lines.
+pub fn available_planes() -> Vec<KernelPlane> {
+    KernelPlane::all().into_iter().filter(|p| p.available()).collect()
+}
+
+fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Cache-blocking geometry for the batch executor: query rows per
+/// block (sized so the block's queries + accumulators stay
+/// L1-resident) × K/V rows per panel (sized so one K+V panel stays
+/// L2-resident while every query in the block streams over it).
+///
+/// std cannot probe cache sizes, so the defaults are conservative
+/// (16 KiB of L1 for the query block, 128 KiB of L2 for the panel —
+/// safe on any x86_64/aarch64 of the last decade); `A3_TILE=QxR`
+/// overrides the resolved row counts directly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileConfig {
+    /// L1 budget in bytes for one query block (query row + accumulator
+    /// row per query, f32 each — 8 bytes per element per query).
+    pub l1_block_bytes: usize,
+    /// L2 budget in bytes for one K/V panel (key row + value row per
+    /// panel row, f32 each — 8 bytes per element per row).
+    pub l2_panel_bytes: usize,
+    /// `A3_TILE` query-rows override (wins over the L1 derivation).
+    pub query_override: Option<usize>,
+    /// `A3_TILE` panel-rows override (wins over the L2 derivation).
+    pub panel_override: Option<usize>,
+}
+
+impl Default for TileConfig {
+    fn default() -> Self {
+        TileConfig {
+            l1_block_bytes: 16 * 1024,
+            l2_panel_bytes: 128 * 1024,
+            query_override: None,
+            panel_override: None,
+        }
+    }
+}
+
+impl TileConfig {
+    /// Defaults plus the `A3_TILE=QxR` environment override.
+    pub fn detect() -> Self {
+        let mut cfg = TileConfig::default();
+        if let Ok(spec) = std::env::var("A3_TILE") {
+            if let Some((q, r)) = parse_tile(&spec) {
+                cfg.query_override = Some(q);
+                cfg.panel_override = Some(r);
+            }
+        }
+        cfg
+    }
+
+    /// Queries per block at embedding dimension `d`. Each query costs
+    /// `8·d` bytes of L1 (its row plus its f32 accumulator row).
+    pub fn query_rows(&self, d: usize) -> usize {
+        if let Some(q) = self.query_override {
+            return q.max(1);
+        }
+        (self.l1_block_bytes / (8 * d.max(1))).clamp(4, 64)
+    }
+
+    /// K/V rows per panel at embedding dimension `d`. Each panel row
+    /// costs `8·d` bytes of L2 (its key row plus its value row).
+    pub fn panel_rows(&self, d: usize) -> usize {
+        if let Some(r) = self.panel_override {
+            return r.max(1);
+        }
+        (self.l2_panel_bytes / (8 * d.max(1))).clamp(32, 1024)
+    }
+
+    /// `QxR` label of the resolved tile at dimension `d`.
+    pub fn label(&self, d: usize) -> String {
+        format!("{}x{}", self.query_rows(d), self.panel_rows(d))
+    }
+}
+
+/// Parse an `A3_TILE` spec of the form `QxR` (both ≥ 1).
+pub(crate) fn parse_tile(spec: &str) -> Option<(usize, usize)> {
+    let (q, r) = spec.trim().split_once('x')?;
+    let q: usize = q.trim().parse().ok()?;
+    let r: usize = r.trim().parse().ok()?;
+    (q >= 1 && r >= 1).then_some((q, r))
+}
+
+/// The process-wide kernel execution plan: which plane the dispatched
+/// kernels run on, and how the batch executor tiles K/V. Selected once
+/// (first kernel use) and immutable after — serving never pays a
+/// dispatch branch miss and outputs are deterministic for the process
+/// lifetime.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelPlan {
+    /// The selected lane-width strategy.
+    pub plane: KernelPlane,
+    /// The cache-blocking geometry for SIMD-plane batch execution.
+    pub tile: TileConfig,
+}
+
+impl KernelPlan {
+    /// Detect the best plane for this host, honouring
+    /// `A3_FORCE_SCALAR` and `A3_TILE`.
+    pub fn detect() -> Self {
+        let forced = std::env::var("A3_FORCE_SCALAR")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false);
+        let plane = if forced {
+            KernelPlane::Scalar
+        } else if KernelPlane::Avx2.available() {
+            KernelPlane::Avx2
+        } else if KernelPlane::Neon.available() {
+            KernelPlane::Neon
+        } else {
+            KernelPlane::Simd128
+        };
+        KernelPlan { plane, tile: TileConfig::detect() }
+    }
+}
+
+/// The process-wide [`KernelPlan`], detected on first use.
+pub fn plan() -> &'static KernelPlan {
+    static PLAN: OnceLock<KernelPlan> = OnceLock::new();
+    PLAN.get_or_init(KernelPlan::detect)
+}
+
+/// Short human/JSON summary of the host's detected vector features
+/// (only features the kernels actually dispatch on).
+pub fn host_feature_summary() -> String {
+    #[cfg(target_arch = "x86_64")]
+    {
+        let mut feats = vec!["sse2"];
+        if is_x86_feature_detected!("avx") {
+            feats.push("avx");
+        }
+        if is_x86_feature_detected!("avx2") {
+            feats.push("avx2");
+        }
+        if is_x86_feature_detected!("fma") {
+            feats.push("fma");
+        }
+        format!("x86_64:{}", feats.join("+"))
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        "aarch64:neon".to_string()
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        format!("{}:portable", std::env::consts::ARCH)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// tolerance oracle
+// ---------------------------------------------------------------------------
+
+/// Documented tolerance oracle for reassociated f32 dot products.
+///
+/// Any summation order of `Σ a_i·b_i` in f32 has forward error at most
+/// `γ_n · Σ|a_i·b_i|` with `γ_n ≈ n·ε` (Higham, *Accuracy and
+/// Stability of Numerical Algorithms*, §3.1); FMA variants only
+/// tighten it. Two different orderings therefore differ by at most
+/// twice that, which is the bound parity tests assert between the
+/// scalar oracle and any SIMD plane. The `MIN_POSITIVE` term absorbs
+/// the all-zero / denormal edge.
+pub fn dot_f32_tolerance(a: &[f32], b: &[f32]) -> f32 {
+    let sum_abs: f32 = a.iter().zip(b).map(|(x, y)| (x * y).abs()).sum();
+    2.0 * a.len() as f32 * f32::EPSILON * sum_abs + f32::MIN_POSITIVE
+}
+
+// ---------------------------------------------------------------------------
+// scalar reference for the widening i16 path
+// ---------------------------------------------------------------------------
+
+/// Scalar oracle for the widening-multiply quantized dot: each i16
+/// pair multiplies into i32 before summation (the software twin of
+/// `maddubs`/`smull` lane semantics). Exact — integer addition is
+/// associative — so every plane must match it bit-for-bit.
+///
+/// Callers must guarantee the accumulation cannot exceed i32 (see
+/// [`crate::attention::quantized::QuantKv`]'s eligibility gate).
+pub fn dot_q15_scalar(a: &[i16], b: &[i16]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut sum = 0i32;
+    for (x, y) in a.iter().zip(b) {
+        sum += *x as i32 * *y as i32;
+    }
+    sum
+}
+
+// ---------------------------------------------------------------------------
+// portable simd128 plane (no intrinsics — lane-structured for autovec)
+// ---------------------------------------------------------------------------
+
+/// 4-lane × 4-deep f32 dot: the lane structure a 128-bit autovectorizer
+/// maps onto SSE2/NEON registers. Fixed combine order → deterministic.
+pub(crate) fn dot_f32_simd128(a: &[f32], b: &[f32]) -> f32 {
+    const W: usize = 4;
+    let split = a.len() - a.len() % (4 * W);
+    let mut acc = [[0.0f32; W]; 4];
+    for (ca, cb) in a[..split].chunks_exact(4 * W).zip(b[..split].chunks_exact(4 * W)) {
+        for v in 0..4 {
+            for k in 0..W {
+                acc[v][k] += ca[v * W + k] * cb[v * W + k];
+            }
+        }
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in a[split..].iter().zip(&b[split..]) {
+        tail += x * y;
+    }
+    let mut lanes = [0.0f32; W];
+    for k in 0..W {
+        lanes[k] = (acc[0][k] + acc[2][k]) + (acc[1][k] + acc[3][k]);
+    }
+    ((lanes[0] + lanes[2]) + (lanes[1] + lanes[3])) + tail
+}
+
+// ---------------------------------------------------------------------------
+// x86_64 AVX2+FMA plane
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86 {
+    //! AVX2/FMA kernels. Every `unsafe fn` here requires `avx2` + `fma`
+    //! (checked by the dispatchers via `KernelPlane::Avx2.available()`).
+    //! Horizontal reductions spill lanes to the stack and combine in
+    //! scalar code with a *fixed* order, so results are deterministic —
+    //! and, for the f64 kernel, bit-identical to the scalar oracle.
+
+    use std::arch::x86_64::*;
+
+    /// f32 dot: two 8-lane FMA accumulators (16 elements/iter).
+    /// Reassociated relative to the scalar oracle — covered by
+    /// [`super::dot_f32_tolerance`].
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(pa.add(i + 8)),
+                _mm256_loadu_ps(pb.add(i + 8)),
+                acc1,
+            );
+            i += 16;
+        }
+        if i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+            i += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), _mm256_add_ps(acc0, acc1));
+        let mut sum = ((lanes[0] + lanes[4]) + (lanes[2] + lanes[6]))
+            + ((lanes[1] + lanes[5]) + (lanes[3] + lanes[7]));
+        while i < n {
+            sum += *pa.add(i) * *pb.add(i);
+            i += 1;
+        }
+        sum
+    }
+
+    /// Four keys against one query, sharing every query load — the
+    /// score kernel of the cache-blocked batch path. Each row uses the
+    /// same accumulator shape as [`dot_f32`], so row `r`'s result is
+    /// bit-identical to `dot_f32(k[r], q)`.
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn dot4_f32(k: [&[f32]; 4], q: &[f32]) -> [f32; 4] {
+        let n = q.len();
+        let pq = q.as_ptr();
+        let mut acc = [[_mm256_setzero_ps(); 2]; 4];
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let q0 = _mm256_loadu_ps(pq.add(i));
+            let q1 = _mm256_loadu_ps(pq.add(i + 8));
+            for r in 0..4 {
+                let pk = k[r].as_ptr();
+                acc[r][0] = _mm256_fmadd_ps(_mm256_loadu_ps(pk.add(i)), q0, acc[r][0]);
+                acc[r][1] = _mm256_fmadd_ps(_mm256_loadu_ps(pk.add(i + 8)), q1, acc[r][1]);
+            }
+            i += 16;
+        }
+        if i + 8 <= n {
+            let q0 = _mm256_loadu_ps(pq.add(i));
+            for r in 0..4 {
+                acc[r][0] = _mm256_fmadd_ps(_mm256_loadu_ps(k[r].as_ptr().add(i)), q0, acc[r][0]);
+            }
+            i += 8;
+        }
+        let mut out = [0.0f32; 4];
+        for r in 0..4 {
+            let mut lanes = [0.0f32; 8];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), _mm256_add_ps(acc[r][0], acc[r][1]));
+            let mut sum = ((lanes[0] + lanes[4]) + (lanes[2] + lanes[6]))
+                + ((lanes[1] + lanes[5]) + (lanes[3] + lanes[7]));
+            let mut j = i;
+            while j < n {
+                sum += *k[r].as_ptr().add(j) * *pq.add(j);
+                j += 1;
+            }
+            out[r] = sum;
+        }
+        out
+    }
+
+    /// f64-widened dot, **bit-identical to the scalar oracle**: lanes
+    /// 0..3 of `acc0` and 0..3 of `acc1` are exactly the scalar
+    /// kernel's accumulators 0..7 (separate mul + add — a f32×f32
+    /// product is exact in f64, so only the adds round, per lane in
+    /// the same order), and the final combine reproduces the oracle's
+    /// `((a0+a4)+(a2+a6)) + ((a1+a5)+(a3+a7)) + tail` exactly.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let split = n - n % 8;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        let mut i = 0usize;
+        while i < split {
+            let va0 = _mm256_cvtps_pd(_mm_loadu_ps(pa.add(i)));
+            let vb0 = _mm256_cvtps_pd(_mm_loadu_ps(pb.add(i)));
+            let va1 = _mm256_cvtps_pd(_mm_loadu_ps(pa.add(i + 4)));
+            let vb1 = _mm256_cvtps_pd(_mm_loadu_ps(pb.add(i + 4)));
+            acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(va0, vb0));
+            acc1 = _mm256_add_pd(acc1, _mm256_mul_pd(va1, vb1));
+            i += 8;
+        }
+        // lanewise acc0+acc1 = {a0+a4, a1+a5, a2+a6, a3+a7}: each the
+        // single rounded add the scalar combine performs
+        let mut s = [0.0f64; 4];
+        _mm256_storeu_pd(s.as_mut_ptr(), _mm256_add_pd(acc0, acc1));
+        let mut tail = 0.0f64;
+        while i < n {
+            tail += *pa.add(i) as f64 * *pb.add(i) as f64;
+            i += 1;
+        }
+        ((s[0] + s[2]) + (s[1] + s[3])) + tail
+    }
+
+    /// i32 dot, 8 lanes. Exact (wrapping integer adds), so identical
+    /// to the scalar oracle on every in-range input.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn dot_i32(a: &[i32], b: &[i32]) -> i32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let va = _mm256_loadu_si256(pa.add(i) as *const __m256i);
+            let vb = _mm256_loadu_si256(pb.add(i) as *const __m256i);
+            acc = _mm256_add_epi32(acc, _mm256_mullo_epi32(va, vb));
+            i += 8;
+        }
+        let mut lanes = [0i32; 8];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        let mut sum = lanes.iter().fold(0i32, |s, &x| s.wrapping_add(x));
+        while i < n {
+            sum = sum.wrapping_add((*pa.add(i)).wrapping_mul(*pb.add(i)));
+            i += 1;
+        }
+        sum
+    }
+
+    /// Widening i16 dot via `_mm256_madd_epi16`: 16 lanes multiply
+    /// into 8 i32 pair-sums per iteration — the paper's §III-C
+    /// parallel quantized multiplier bank in one instruction. Exact
+    /// under the caller's no-overflow gate.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn dot_q15(a: &[i16], b: &[i16]) -> i32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let va = _mm256_loadu_si256(pa.add(i) as *const __m256i);
+            let vb = _mm256_loadu_si256(pb.add(i) as *const __m256i);
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(va, vb));
+            i += 16;
+        }
+        let mut lanes = [0i32; 8];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        let mut sum = lanes.iter().fold(0i32, |s, &x| s.wrapping_add(x));
+        while i < n {
+            sum += *pa.add(i) as i32 * *pb.add(i) as i32;
+            i += 1;
+        }
+        sum
+    }
+
+    /// `acc += p · v`, 8 lanes FMA — the vectorized accumulate half of
+    /// the online-softmax step.
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn axpy_f32(acc: &mut [f32], p: f32, v: &[f32]) {
+        debug_assert_eq!(acc.len(), v.len());
+        let n = acc.len();
+        let vp = _mm256_set1_ps(p);
+        let pa = acc.as_mut_ptr();
+        let pv = v.as_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let o = _mm256_loadu_ps(pa.add(i));
+            let x = _mm256_loadu_ps(pv.add(i));
+            _mm256_storeu_ps(pa.add(i), _mm256_fmadd_ps(vp, x, o));
+            i += 8;
+        }
+        while i < n {
+            *pa.add(i) += p * *pv.add(i);
+            i += 1;
+        }
+    }
+
+    /// `acc *= c`, 8 lanes — the rescale half of the online-softmax
+    /// step.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn scale_f32(acc: &mut [f32], c: f32) {
+        let n = acc.len();
+        let vc = _mm256_set1_ps(c);
+        let pa = acc.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            _mm256_storeu_ps(pa.add(i), _mm256_mul_ps(_mm256_loadu_ps(pa.add(i)), vc));
+            i += 8;
+        }
+        while i < n {
+            *pa.add(i) *= c;
+            i += 1;
+        }
+    }
+
+    /// Max over a finite score panel, 8 lanes (max is associative and
+    /// commutative, so the result equals the sequential fold exactly).
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn max_f32(s: &[f32]) -> f32 {
+        let n = s.len();
+        let ps = s.as_ptr();
+        let mut m = f32::NEG_INFINITY;
+        let mut i = 0usize;
+        if n >= 8 {
+            let mut vm = _mm256_loadu_ps(ps);
+            i = 8;
+            while i + 8 <= n {
+                vm = _mm256_max_ps(vm, _mm256_loadu_ps(ps.add(i)));
+                i += 8;
+            }
+            let mut lanes = [0.0f32; 8];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), vm);
+            for &x in &lanes {
+                if x > m {
+                    m = x;
+                }
+            }
+        }
+        while i < n {
+            let x = *ps.add(i);
+            if x > m {
+                m = x;
+            }
+            i += 1;
+        }
+        m
+    }
+}
+
+// ---------------------------------------------------------------------------
+// aarch64 NEON plane
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon {
+    //! NEON kernels (aarch64 baseline — always available there).
+    //! Reductions spill lanes and combine scalar-side in a fixed
+    //! order; the f64 kernel reproduces the scalar oracle's combine
+    //! exactly, mirroring the AVX2 plane.
+
+    use std::arch::aarch64::*;
+
+    /// f32 dot: four 4-lane FMA accumulators (16 elements/iter).
+    /// Reassociated — covered by [`super::dot_f32_tolerance`].
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc = [vdupq_n_f32(0.0); 4];
+        let mut i = 0usize;
+        while i + 16 <= n {
+            for (r, accr) in acc.iter_mut().enumerate() {
+                *accr = vfmaq_f32(*accr, vld1q_f32(pa.add(i + 4 * r)), vld1q_f32(pb.add(i + 4 * r)));
+            }
+            i += 16;
+        }
+        while i + 4 <= n {
+            acc[0] = vfmaq_f32(acc[0], vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+            i += 4;
+        }
+        let mut lanes = [0.0f32; 4];
+        vst1q_f32(
+            lanes.as_mut_ptr(),
+            vaddq_f32(vaddq_f32(acc[0], acc[2]), vaddq_f32(acc[1], acc[3])),
+        );
+        let mut sum = (lanes[0] + lanes[2]) + (lanes[1] + lanes[3]);
+        while i < n {
+            sum += *pa.add(i) * *pb.add(i);
+            i += 1;
+        }
+        sum
+    }
+
+    /// f64-widened dot, bit-identical to the scalar oracle: four
+    /// 2-lane accumulators map onto the oracle's eight, separate
+    /// mul + add, and the combine replays
+    /// `((a0+a4)+(a2+a6)) + ((a1+a5)+(a3+a7)) + tail`.
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let split = n - n % 8;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        // acc[j] holds the oracle's accumulators {2j, 2j+1}
+        let mut acc = [vdupq_n_f64(0.0); 4];
+        let mut i = 0usize;
+        while i < split {
+            for (j, accj) in acc.iter_mut().enumerate() {
+                let va = vcvt_f64_f32(vld1_f32(pa.add(i + 2 * j)));
+                let vb = vcvt_f64_f32(vld1_f32(pb.add(i + 2 * j)));
+                *accj = vaddq_f64(*accj, vmulq_f64(va, vb));
+            }
+            i += 8;
+        }
+        // {a0+a4, a1+a5} and {a2+a6, a3+a7}: the oracle's first-level adds
+        let mut s04 = [0.0f64; 2];
+        let mut s26 = [0.0f64; 2];
+        vst1q_f64(s04.as_mut_ptr(), vaddq_f64(acc[0], acc[2]));
+        vst1q_f64(s26.as_mut_ptr(), vaddq_f64(acc[1], acc[3]));
+        let mut tail = 0.0f64;
+        while i < n {
+            tail += *pa.add(i) as f64 * *pb.add(i) as f64;
+            i += 1;
+        }
+        ((s04[0] + s26[0]) + (s04[1] + s26[1])) + tail
+    }
+
+    /// i32 dot, 4 lanes. Exact.
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn dot_i32(a: &[i32], b: &[i32]) -> i32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc = vdupq_n_s32(0);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            acc = vaddq_s32(acc, vmulq_s32(vld1q_s32(pa.add(i)), vld1q_s32(pb.add(i))));
+            i += 4;
+        }
+        let mut sum = vaddvq_s32(acc);
+        while i < n {
+            sum = sum.wrapping_add((*pa.add(i)).wrapping_mul(*pb.add(i)));
+            i += 1;
+        }
+        sum
+    }
+
+    /// Widening i16 dot via `smull`/`smull2`: 8 lanes multiply into
+    /// i32 per iteration. Exact under the caller's no-overflow gate.
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn dot_q15(a: &[i16], b: &[i16]) -> i32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc = vdupq_n_s32(0);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let va = vld1q_s16(pa.add(i));
+            let vb = vld1q_s16(pb.add(i));
+            acc = vaddq_s32(acc, vmull_s16(vget_low_s16(va), vget_low_s16(vb)));
+            acc = vaddq_s32(acc, vmull_high_s16(va, vb));
+            i += 8;
+        }
+        let mut sum = vaddvq_s32(acc);
+        while i < n {
+            sum += *pa.add(i) as i32 * *pb.add(i) as i32;
+            i += 1;
+        }
+        sum
+    }
+
+    /// `acc += p · v`, 4 lanes FMA.
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn axpy_f32(acc: &mut [f32], p: f32, v: &[f32]) {
+        debug_assert_eq!(acc.len(), v.len());
+        let n = acc.len();
+        let pa = acc.as_mut_ptr();
+        let pv = v.as_ptr();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            vst1q_f32(pa.add(i), vfmaq_n_f32(vld1q_f32(pa.add(i)), vld1q_f32(pv.add(i)), p));
+            i += 4;
+        }
+        while i < n {
+            *pa.add(i) += p * *pv.add(i);
+            i += 1;
+        }
+    }
+
+    /// `acc *= c`, 4 lanes.
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn scale_f32(acc: &mut [f32], c: f32) {
+        let n = acc.len();
+        let pa = acc.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            vst1q_f32(pa.add(i), vmulq_n_f32(vld1q_f32(pa.add(i)), c));
+            i += 4;
+        }
+        while i < n {
+            *pa.add(i) *= c;
+            i += 1;
+        }
+    }
+
+    /// Max over a finite score panel, 4 lanes.
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn max_f32(s: &[f32]) -> f32 {
+        let n = s.len();
+        let ps = s.as_ptr();
+        let mut m = f32::NEG_INFINITY;
+        let mut i = 0usize;
+        if n >= 4 {
+            let mut vm = vld1q_f32(ps);
+            i = 4;
+            while i + 4 <= n {
+                vm = vmaxq_f32(vm, vld1q_f32(ps.add(i)));
+                i += 4;
+            }
+            let vmax = vmaxvq_f32(vm);
+            if vmax > m {
+                m = vmax;
+            }
+        }
+        while i < n {
+            let x = *ps.add(i);
+            if x > m {
+                m = x;
+            }
+            i += 1;
+        }
+        m
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-arch bridge for the NEON plane
+// ---------------------------------------------------------------------------
+
+/// On aarch64 these enter the intrinsic kernels (NEON is a baseline
+/// target feature there, so no runtime check is needed); on every
+/// other arch they are scalar-oracle stand-ins, so dispatch arms stay
+/// plain cross-platform expressions.
+#[cfg(target_arch = "aarch64")]
+mod neon_bridge {
+    use super::neon;
+
+    // Safety (all): NEON is a baseline aarch64 target feature.
+    #[inline]
+    pub(super) fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        unsafe { neon::dot_f32(a, b) }
+    }
+
+    #[inline]
+    pub(super) fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+        unsafe { neon::dot_f64(a, b) }
+    }
+
+    #[inline]
+    pub(super) fn dot_i32(a: &[i32], b: &[i32]) -> i32 {
+        unsafe { neon::dot_i32(a, b) }
+    }
+
+    #[inline]
+    pub(super) fn dot_q15(a: &[i16], b: &[i16]) -> i32 {
+        unsafe { neon::dot_q15(a, b) }
+    }
+
+    #[inline]
+    pub(super) fn axpy_f32(acc: &mut [f32], p: f32, v: &[f32]) {
+        unsafe { neon::axpy_f32(acc, p, v) }
+    }
+
+    #[inline]
+    pub(super) fn scale_f32(acc: &mut [f32], c: f32) {
+        unsafe { neon::scale_f32(acc, c) }
+    }
+
+    #[inline]
+    pub(super) fn max_f32(s: &[f32]) -> f32 {
+        unsafe { neon::max_f32(s) }
+    }
+}
+
+#[cfg(not(target_arch = "aarch64"))]
+mod neon_bridge {
+    #[inline]
+    pub(super) fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        crate::attention::kernel::dot_f32_scalar(a, b)
+    }
+
+    #[inline]
+    pub(super) fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+        crate::attention::kernel::dot_f64_scalar(a, b)
+    }
+
+    #[inline]
+    pub(super) fn dot_i32(a: &[i32], b: &[i32]) -> i32 {
+        crate::attention::kernel::dot_i32_scalar(a, b)
+    }
+
+    #[inline]
+    pub(super) fn dot_q15(a: &[i16], b: &[i16]) -> i32 {
+        super::dot_q15_scalar(a, b)
+    }
+
+    #[inline]
+    pub(super) fn axpy_f32(acc: &mut [f32], p: f32, v: &[f32]) {
+        for (o, x) in acc.iter_mut().zip(v) {
+            *o += p * x;
+        }
+    }
+
+    #[inline]
+    pub(super) fn scale_f32(acc: &mut [f32], c: f32) {
+        for o in acc.iter_mut() {
+            *o *= c;
+        }
+    }
+
+    #[inline]
+    pub(super) fn max_f32(s: &[f32]) -> f32 {
+        s.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// safe per-plane dispatchers
+// ---------------------------------------------------------------------------
+//
+// These are the only entry points into the intrinsic kernels: each
+// verifies operand shapes, and falls back to the scalar oracle when
+// the requested plane cannot run on this host (so parity tests and
+// bench code can request any plane unconditionally).
+
+/// [`super::dot_f32`] on an explicit plane.
+#[inline]
+pub fn dot_f32_on(plane: KernelPlane, a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "dot operand length mismatch");
+    match plane {
+        KernelPlane::Scalar => super::dot_f32_scalar(a, b),
+        KernelPlane::Simd128 => dot_f32_simd128(a, b),
+        KernelPlane::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if avx2_available() {
+                    // Safety: avx2+fma verified on this host.
+                    return unsafe { x86::dot_f32(a, b) };
+                }
+            }
+            super::dot_f32_scalar(a, b)
+        }
+        KernelPlane::Neon => neon_bridge::dot_f32(a, b),
+    }
+}
+
+/// [`super::dot_f64`] on an explicit plane (bit-identical across
+/// planes by construction).
+#[inline]
+pub fn dot_f64_on(plane: KernelPlane, a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "dot operand length mismatch");
+    match plane {
+        KernelPlane::Scalar | KernelPlane::Simd128 => super::dot_f64_scalar(a, b),
+        KernelPlane::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if avx2_available() {
+                    // Safety: avx2 verified on this host.
+                    return unsafe { x86::dot_f64(a, b) };
+                }
+            }
+            super::dot_f64_scalar(a, b)
+        }
+        KernelPlane::Neon => neon_bridge::dot_f64(a, b),
+    }
+}
+
+/// [`super::dot_i32`] on an explicit plane (exact on every plane).
+#[inline]
+pub fn dot_i32_on(plane: KernelPlane, a: &[i32], b: &[i32]) -> i32 {
+    assert_eq!(a.len(), b.len(), "dot operand length mismatch");
+    match plane {
+        KernelPlane::Scalar | KernelPlane::Simd128 => super::dot_i32_scalar(a, b),
+        KernelPlane::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if avx2_available() {
+                    // Safety: avx2 verified on this host.
+                    return unsafe { x86::dot_i32(a, b) };
+                }
+            }
+            super::dot_i32_scalar(a, b)
+        }
+        KernelPlane::Neon => neon_bridge::dot_i32(a, b),
+    }
+}
+
+/// Widening i16 dot ([`dot_q15_scalar`]) on an explicit plane (exact
+/// on every plane under the caller's no-overflow gate).
+#[inline]
+pub fn dot_q15_on(plane: KernelPlane, a: &[i16], b: &[i16]) -> i32 {
+    assert_eq!(a.len(), b.len(), "dot operand length mismatch");
+    match plane {
+        KernelPlane::Scalar | KernelPlane::Simd128 => dot_q15_scalar(a, b),
+        KernelPlane::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if avx2_available() {
+                    // Safety: avx2 verified on this host.
+                    return unsafe { x86::dot_q15(a, b) };
+                }
+            }
+            dot_q15_scalar(a, b)
+        }
+        KernelPlane::Neon => neon_bridge::dot_q15(a, b),
+    }
+}
+
+/// Fused four-keys-one-query score kernel, when the plane has one.
+/// `None` means the caller should fall back to per-row [`dot_f32_on`];
+/// when `Some`, element `r` is bit-identical to
+/// `dot_f32_on(plane, k[r], q)`.
+#[inline]
+pub fn dot4_f32_on(plane: KernelPlane, k: [&[f32]; 4], q: &[f32]) -> Option<[f32; 4]> {
+    for row in &k {
+        assert_eq!(row.len(), q.len(), "dot operand length mismatch");
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if plane == KernelPlane::Avx2 && avx2_available() {
+            // Safety: avx2+fma verified on this host.
+            return Some(unsafe { x86::dot4_f32(k, q) });
+        }
+    }
+    let _ = (plane, k, q);
+    None
+}
+
+/// `acc += p · v` on an explicit plane. Element-wise (no cross-lane
+/// reassociation), so every plane computes the same fused-or-not
+/// per-element arithmetic up to FMA rounding.
+#[inline]
+pub(crate) fn axpy_on(plane: KernelPlane, acc: &mut [f32], p: f32, v: &[f32]) {
+    match plane {
+        KernelPlane::Scalar | KernelPlane::Simd128 => {
+            for (o, x) in acc.iter_mut().zip(v) {
+                *o += p * x;
+            }
+        }
+        KernelPlane::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if avx2_available() {
+                    // Safety: avx2+fma verified on this host.
+                    unsafe { x86::axpy_f32(acc, p, v) };
+                    return;
+                }
+            }
+            for (o, x) in acc.iter_mut().zip(v) {
+                *o += p * x;
+            }
+        }
+        KernelPlane::Neon => neon_bridge::axpy_f32(acc, p, v),
+    }
+}
+
+/// `acc *= c` on an explicit plane. Element-wise; identical results on
+/// every plane.
+#[inline]
+pub(crate) fn scale_on(plane: KernelPlane, acc: &mut [f32], c: f32) {
+    match plane {
+        KernelPlane::Scalar | KernelPlane::Simd128 => {
+            for o in acc.iter_mut() {
+                *o *= c;
+            }
+        }
+        KernelPlane::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if avx2_available() {
+                    // Safety: avx2 verified on this host.
+                    unsafe { x86::scale_f32(acc, c) };
+                    return;
+                }
+            }
+            for o in acc.iter_mut() {
+                *o *= c;
+            }
+        }
+        KernelPlane::Neon => neon_bridge::scale_f32(acc, c),
+    }
+}
+
+/// Max over a finite score slice on an explicit plane
+/// (`NEG_INFINITY` for an empty slice). Max is associative and
+/// commutative, so every plane returns the identical value.
+#[inline]
+pub(crate) fn max_f32_on(plane: KernelPlane, s: &[f32]) -> f32 {
+    let scalar_max = |s: &[f32]| s.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    match plane {
+        KernelPlane::Scalar | KernelPlane::Simd128 => scalar_max(s),
+        KernelPlane::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if avx2_available() {
+                    // Safety: avx2 verified on this host.
+                    return unsafe { x86::max_f32(s) };
+                }
+            }
+            scalar_max(s)
+        }
+        KernelPlane::Neon => neon_bridge::max_f32(s),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_spec_parses() {
+        assert_eq!(parse_tile("16x128"), Some((16, 128)));
+        assert_eq!(parse_tile(" 8 x 32 "), Some((8, 32)));
+        assert_eq!(parse_tile("0x32"), None);
+        assert_eq!(parse_tile("16"), None);
+        assert_eq!(parse_tile("axb"), None);
+    }
+
+    #[test]
+    fn tile_defaults_are_cache_shaped_at_paper_dims() {
+        let t = TileConfig::default();
+        // d=64: 32 queries × 64 × 8B = 16 KiB block; 256 panel rows ×
+        // 64 × 8B = 128 KiB panel
+        assert_eq!(t.query_rows(64), 32);
+        assert_eq!(t.panel_rows(64), 256);
+        // degenerate dims stay clamped and nonzero
+        assert!(t.query_rows(1) >= 4 && t.panel_rows(1) >= 32);
+        assert!(t.query_rows(100_000) >= 4 && t.panel_rows(100_000) >= 32);
+        assert_eq!(t.label(64), "32x256");
+    }
+
+    #[test]
+    fn overrides_win_over_derivation() {
+        let t = TileConfig {
+            query_override: Some(5),
+            panel_override: Some(7),
+            ..TileConfig::default()
+        };
+        assert_eq!((t.query_rows(64), t.panel_rows(64)), (5, 7));
+    }
+
+    #[test]
+    fn scalar_and_simd128_always_available() {
+        let planes = available_planes();
+        assert!(planes.contains(&KernelPlane::Scalar));
+        assert!(planes.contains(&KernelPlane::Simd128));
+        assert!(planes.iter().all(|p| p.available()));
+    }
+
+    #[test]
+    fn plan_plane_is_available() {
+        assert!(plan().plane.available());
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        let labels: Vec<&str> = KernelPlane::all().iter().map(|p| p.label()).collect();
+        assert_eq!(labels, ["scalar", "simd128", "avx2", "neon"]);
+    }
+}

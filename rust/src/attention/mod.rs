@@ -9,9 +9,10 @@ pub mod reference;
 
 pub use explut::ExpLut;
 pub use kernel::{
-    attention_batch_into, attention_into, attention_masked_into, dot_f32, dot_f64, dot_i32,
-    parallel_attention_batch, parallel_attention_batch_into, parallel_map_into, OnlineSoftmax,
-    Pool, Workspace,
+    attention_batch_into, attention_into, attention_masked_into, available_planes, dot_f32,
+    dot_f32_tolerance, dot_f64, dot_i32, dot_q15, host_feature_summary, parallel_attention_batch,
+    parallel_attention_batch_into, parallel_map_into, plan, KernelPlan, KernelPlane,
+    OnlineSoftmax, Pool, TileConfig, Workspace,
 };
 pub use quantized::{
     quantized_attention, quantized_attention_into, quantized_attention_paper,

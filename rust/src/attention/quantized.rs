@@ -4,9 +4,9 @@
 //! integer-for-integer. The cross-language golden test in
 //! `rust/tests/golden.rs` pins this equivalence.
 
-use super::kernel::{dot_i32, Workspace};
+use super::kernel::{dot_i32, dot_q15, plan, Workspace};
 use super::{ExpLut, KvPair};
-use crate::fixedpoint::QFormat;
+use crate::fixedpoint::{log2_ceil, QFormat};
 
 /// Integer-plane intermediates of one pipeline pass — compared against
 /// the python trace in golden tests, and used by the simulator's
@@ -35,16 +35,28 @@ pub struct QuantKv {
     pub fmt: QFormat,
     pub kq: Vec<i32>,
     pub vq: Vec<i32>,
+    /// Half-width (i16) copy of `kq` for the widening-multiply SIMD
+    /// dot ([`dot_q15`] — the software twin of the paper's §III-C
+    /// quantized multiplier bank). Packed only when provably safe: the
+    /// format must fit i16 and the i32 accumulator must be unable to
+    /// overflow at this `d` (`2·(i+f) + ceil(log2 d) ≤ 31`). The paper
+    /// point (i=4, f=4, d=64) qualifies with 9 bits to spare.
+    pub(crate) k16: Option<Vec<i16>>,
 }
 
 impl QuantKv {
     pub fn new(kv: &KvPair, fmt: QFormat) -> Self {
+        let kq = fmt.quantize_slice(&kv.key);
+        let widening_safe = fmt.width() <= 16
+            && 2 * (fmt.int_bits + fmt.frac_bits) + log2_ceil(kv.d.max(1)) <= 31;
+        let k16 = widening_safe.then(|| kq.iter().map(|&x| x as i16).collect());
         QuantKv {
             n: kv.n,
             d: kv.d,
             fmt,
-            kq: fmt.quantize_slice(&kv.key),
+            kq,
             vq: fmt.quantize_slice(&kv.value),
+            k16,
         }
     }
 
@@ -157,14 +169,31 @@ pub fn quantized_attention_into(
     ws.qq.clear();
     ws.qq.extend(query.iter().map(|&x| qkv.fmt.quantize(x)));
 
-    // Module 1: integer dot products + running max.
+    // Module 1: integer dot products + running max. On SIMD planes
+    // with an i16-packed key bank, the widening-multiply kernel
+    // computes the identical exact sums from half-width operands
+    // (double the elements per lane); the quantized outputs stay
+    // bit-identical either way.
     ws.row_q.clear();
     ws.row_q.reserve(qkv.n);
     let mut max_q = i32::MIN;
-    for i in 0..qkv.n {
-        let dot = dot_i32(&qkv.kq[i * qkv.d..(i + 1) * qkv.d], &ws.qq);
-        max_q = max_q.max(dot);
-        ws.row_q.push(dot);
+    match &qkv.k16 {
+        Some(k16) if plan().plane.is_simd() => {
+            ws.qq16.clear();
+            ws.qq16.extend(ws.qq.iter().map(|&x| x as i16));
+            for i in 0..qkv.n {
+                let dot = dot_q15(&k16[i * qkv.d..(i + 1) * qkv.d], &ws.qq16);
+                max_q = max_q.max(dot);
+                ws.row_q.push(dot);
+            }
+        }
+        _ => {
+            for i in 0..qkv.n {
+                let dot = dot_i32(&qkv.kq[i * qkv.d..(i + 1) * qkv.d], &ws.qq);
+                max_q = max_q.max(dot);
+                ws.row_q.push(dot);
+            }
+        }
     }
 
     // Module 2: two-LUT exponent, scores overwrite dots in place.

@@ -1,6 +1,10 @@
 //! Minimal benchmarking harness (criterion is not in the offline
 //! vendor set). Provides warmup + timed iterations with simple robust
-//! statistics, used by every `rust/benches/*.rs` target.
+//! statistics, used by every `rust/benches/*.rs` target, plus the
+//! machine-readable snapshot emitter behind `a3 bench --json`
+//! ([`json`]).
+
+pub mod json;
 
 use std::time::{Duration, Instant};
 
@@ -14,6 +18,10 @@ pub struct BenchResult {
     pub median: Duration,
     pub p95: Duration,
     pub min: Duration,
+    /// Bytes of operand traffic per iteration (0 = unknown/not set).
+    pub bytes_per_iter: u64,
+    /// Elements processed per iteration (0 = unknown/not set).
+    pub elems_per_iter: u64,
 }
 
 impl BenchResult {
@@ -24,6 +32,25 @@ impl BenchResult {
     /// Iterations per second at the mean.
     pub fn throughput(&self) -> f64 {
         1e9 / self.mean_ns()
+    }
+
+    /// Attach per-iteration traffic so [`Self::gbps`] /
+    /// [`Self::elems_per_ns`] (and the Display line) can report
+    /// bandwidth-normalized rates alongside raw latency.
+    pub fn with_rates(mut self, bytes_per_iter: u64, elems_per_iter: u64) -> Self {
+        self.bytes_per_iter = bytes_per_iter;
+        self.elems_per_iter = elems_per_iter;
+        self
+    }
+
+    /// Operand bandwidth in GB/s at the mean, if traffic was recorded.
+    pub fn gbps(&self) -> Option<f64> {
+        (self.bytes_per_iter > 0).then(|| self.bytes_per_iter as f64 / self.mean_ns())
+    }
+
+    /// Elements per nanosecond at the mean, if recorded.
+    pub fn elems_per_ns(&self) -> Option<f64> {
+        (self.elems_per_iter > 0).then(|| self.elems_per_iter as f64 / self.mean_ns())
     }
 }
 
@@ -38,7 +65,14 @@ impl std::fmt::Display for BenchResult {
             self.p95.as_nanos() as f64 / 1e3,
             self.min.as_nanos() as f64 / 1e3,
             self.iters
-        )
+        )?;
+        if let Some(gbps) = self.gbps() {
+            write!(f, "  {gbps:.2} GB/s")?;
+        }
+        if let Some(epns) = self.elems_per_ns() {
+            write!(f, "  {epns:.2} elems/ns")?;
+        }
+        Ok(())
     }
 }
 
@@ -86,6 +120,8 @@ pub fn bench(name: &str, budget: Duration, mut f: impl FnMut()) -> BenchResult {
         median,
         p95,
         min: samples[0],
+        bytes_per_iter: 0,
+        elems_per_iter: 0,
     }
 }
 
@@ -120,5 +156,23 @@ mod tests {
         assert!(r.iters > 0);
         assert!(r.min <= r.median && r.median <= r.p95);
         assert!(r.mean.as_nanos() > 0, "mean rounded to zero: {:?}", r.mean);
+    }
+
+    #[test]
+    fn rates_are_none_until_traffic_is_recorded() {
+        let r = bench("tiny", Duration::from_millis(5), || {
+            black_box(std::hint::black_box(1u64) + 1);
+        });
+        assert!(r.gbps().is_none());
+        assert!(r.elems_per_ns().is_none());
+        let r = r.with_rates(1024, 256);
+        let gbps = r.gbps().expect("bytes recorded");
+        let epns = r.elems_per_ns().expect("elems recorded");
+        assert!(gbps > 0.0 && gbps.is_finite());
+        assert!(epns > 0.0 && epns.is_finite());
+        // GB/s is bytes/ns; 4-byte elements ⇒ gbps = 4 × elems/ns.
+        assert!((gbps - 4.0 * epns).abs() <= 1e-9 * gbps.abs());
+        let line = r.to_string();
+        assert!(line.contains("GB/s") && line.contains("elems/ns"), "{line}");
     }
 }

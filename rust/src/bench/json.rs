@@ -1,0 +1,231 @@
+//! Machine-readable hot-path benchmark snapshots (`a3 bench --json`).
+//!
+//! Emits the `a3-bench-hotpath/v1` schema consumed by the repo's
+//! recorded perf trajectory (`BENCH_hotpath.json` at the repo root):
+//! one timed line per kernel plane for each dispatched micro-kernel
+//! (`dot_*`), the scalar-tiled vs cache-blocked batch executors, and
+//! the online-softmax step — tagged with the host's detected vector
+//! features, the selected [`crate::attention::KernelPlan`], the
+//! resolved tile geometry, and the git revision, so snapshots taken on
+//! different machines or commits stay comparable.
+//!
+//! JSON is hand-rolled (the offline vendor set has no serde); the
+//! shape is fixed and flat, so an escaping helper plus `format!` is
+//! the whole emitter.
+
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
+
+use super::{bench, black_box, BenchResult};
+use crate::attention::kernel::{self, simd};
+use crate::attention::{KvPair, OnlineSoftmax, Workspace};
+use crate::testutil::Rng;
+
+/// Escape a string for inclusion in a JSON string literal.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// `null` for unrecorded rates, a fixed-precision number otherwise.
+fn opt_rate(v: Option<f64>) -> String {
+    match v {
+        Some(x) => format!("{x:.4}"),
+        None => "null".to_string(),
+    }
+}
+
+/// Short git revision of the working tree: `git rev-parse`, falling
+/// back to `GITHUB_SHA` (CI checkouts without a `git` binary on PATH),
+/// then `"unknown"`.
+fn git_rev() -> String {
+    if let Ok(out) = std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+    {
+        if out.status.success() {
+            let s = String::from_utf8_lossy(&out.stdout).trim().to_string();
+            if !s.is_empty() {
+                return s;
+            }
+        }
+    }
+    match std::env::var("GITHUB_SHA") {
+        Ok(sha) if !sha.is_empty() => sha.chars().take(12).collect(),
+        _ => "unknown".to_string(),
+    }
+}
+
+/// One emitted line: the timed result plus the plane it ran on.
+fn line_json(plane: &str, r: &BenchResult, last: bool) -> String {
+    format!(
+        "    {{\"name\": \"{}\", \"plane\": \"{}\", \"mean_ns\": {:.1}, \"median_ns\": {:.1}, \
+         \"p95_ns\": {:.1}, \"min_ns\": {:.1}, \"iters\": {}, \"gbps\": {}, \
+         \"elems_per_ns\": {}}}{}\n",
+        esc(&r.name),
+        esc(plane),
+        r.mean_ns(),
+        r.median.as_nanos() as f64,
+        r.p95.as_nanos() as f64,
+        r.min.as_nanos() as f64,
+        r.iters,
+        opt_rate(r.gbps()),
+        opt_rate(r.elems_per_ns()),
+        if last { "" } else { "," }
+    )
+}
+
+/// Run the per-plane hot-path suite and serialize it as one
+/// `a3-bench-hotpath/v1` document.
+///
+/// Per *available* plane (scalar oracle first): the four dispatched
+/// dot kernels at the paper's `d = 64`, and the batch-64 attention
+/// executor that plane actually runs (`scalar-tiled` for the oracle,
+/// `cache-blocked` for SIMD planes). One extra line times the
+/// online-softmax push on the process-selected plane.
+pub fn hotpath_snapshot(budget: Duration) -> String {
+    let (n, d) = (crate::PAPER_N, crate::PAPER_D);
+    let mut rng = Rng::new(7);
+    let kv = KvPair::new(n, d, rng.normal_vec(n * d, 1.0), rng.normal_vec(n * d, 1.0));
+    let a = rng.normal_vec(d, 1.0);
+    let b = rng.normal_vec(d, 1.0);
+    let ai: Vec<i32> = a.iter().map(|&x| (x * 100.0) as i32).collect();
+    let bi: Vec<i32> = b.iter().map(|&x| (x * 100.0) as i32).collect();
+    let a16: Vec<i16> = ai.iter().map(|&x| x as i16).collect();
+    let b16: Vec<i16> = bi.iter().map(|&x| x as i16).collect();
+    let batch = rng.normal_vec(64 * d, 1.0);
+    let plan = kernel::plan();
+
+    let mut lines: Vec<(&'static str, BenchResult)> = Vec::new();
+    for plane in simd::available_planes() {
+        let pl = plane.label();
+        let f32_bytes = (2 * d * 4) as u64;
+        lines.push((
+            pl,
+            bench(&format!("dot f32 d={d}"), budget, || {
+                black_box(simd::dot_f32_on(plane, black_box(&a), black_box(&b)));
+            })
+            .with_rates(f32_bytes, d as u64),
+        ));
+        lines.push((
+            pl,
+            bench(&format!("dot f64 d={d}"), budget, || {
+                black_box(simd::dot_f64_on(plane, black_box(&a), black_box(&b)));
+            })
+            .with_rates(f32_bytes, d as u64),
+        ));
+        lines.push((
+            pl,
+            bench(&format!("dot i32 d={d}"), budget, || {
+                black_box(simd::dot_i32_on(plane, black_box(&ai), black_box(&bi)));
+            })
+            .with_rates(f32_bytes, d as u64),
+        ));
+        lines.push((
+            pl,
+            bench(&format!("dot q15 d={d}"), budget, || {
+                black_box(simd::dot_q15_on(plane, black_box(&a16), black_box(&b16)));
+            })
+            .with_rates((2 * d * 2) as u64, d as u64),
+        ));
+
+        // batch executor: operand footprint = K + V + queries + outputs
+        // touched once; elements = multiply-accumulates (b·n·d)
+        let batch_bytes = (4 * (2 * n * d + 2 * 64 * d)) as u64;
+        let batch_elems = (64 * n * d) as u64;
+        let mut out = vec![0.0f32; 64 * d];
+        let mut ws = Workspace::new();
+        let r = if plane.is_simd() {
+            let p = kernel::KernelPlan { plane, tile: plan.tile };
+            bench(&format!("attention cache-blocked batch-64 n={n} d={d}"), budget, || {
+                kernel::attention_batch_blocked_into(&p, &kv, &batch, &mut out, &mut ws);
+                black_box(&mut out);
+            })
+        } else {
+            bench(&format!("attention scalar-tiled batch-64 n={n} d={d}"), budget, || {
+                kernel::attention_batch_scalar_into(&kv, &batch, &mut out, &mut ws);
+                black_box(&mut out);
+            })
+        };
+        lines.push((pl, r.with_rates(batch_bytes, batch_elems)));
+    }
+
+    // online-softmax push on the process-selected plane (OnlineSoftmax
+    // always runs on `plan().plane`)
+    let value = rng.normal_vec(d, 1.0);
+    let mut acc = vec![0.0f32; d];
+    let r = bench("online softmax push x8", budget, || {
+        let mut sm = OnlineSoftmax::new();
+        for i in 0..8 {
+            sm.push(black_box(0.1 * i as f32), &value, &mut acc);
+        }
+        black_box(&mut acc);
+    })
+    .with_rates((8 * d * 4) as u64, (8 * d) as u64);
+    lines.push((plan.plane.label(), r));
+
+    let created = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|t| t.as_secs())
+        .unwrap_or(0);
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"a3-bench-hotpath/v1\",\n");
+    s.push_str("  \"status\": \"measured\",\n");
+    s.push_str(&format!("  \"created_unix\": {created},\n"));
+    s.push_str(&format!("  \"git_rev\": \"{}\",\n", esc(&git_rev())));
+    s.push_str(&format!("  \"arch\": \"{}\",\n", esc(std::env::consts::ARCH)));
+    s.push_str(&format!("  \"host_features\": \"{}\",\n", esc(&simd::host_feature_summary())));
+    s.push_str(&format!("  \"plan_plane\": \"{}\",\n", plan.plane.label()));
+    s.push_str(&format!("  \"tile_d{d}\": \"{}\",\n", plan.tile.label(d)));
+    s.push_str(&format!("  \"budget_ms\": {},\n", budget.as_millis()));
+    s.push_str("  \"lines\": [\n");
+    let count = lines.len();
+    for (i, (plane, r)) in lines.iter().enumerate() {
+        s.push_str(&line_json(plane, r, i + 1 == count));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escapes_json_metacharacters() {
+        assert_eq!(esc("plain"), "plain");
+        assert_eq!(esc("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(esc("x\n\t"), "x\\n\\t");
+        assert_eq!(esc("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn snapshot_has_schema_and_per_plane_lines() {
+        let doc = hotpath_snapshot(Duration::from_millis(5));
+        assert!(doc.contains("\"schema\": \"a3-bench-hotpath/v1\""), "{doc}");
+        assert!(doc.contains("\"status\": \"measured\""));
+        assert!(doc.contains("\"plan_plane\""));
+        assert!(doc.contains("dot f32 d=64"));
+        assert!(doc.contains("dot q15 d=64"));
+        assert!(doc.contains("\"plane\": \"scalar\""));
+        assert!(doc.contains("\"plane\": \"simd128\""));
+        assert!(doc.contains("scalar-tiled batch-64"));
+        // braces balance (cheap well-formedness proxy without a parser)
+        let open = doc.matches('{').count();
+        let close = doc.matches('}').count();
+        assert_eq!(open, close, "{doc}");
+        // rates recorded on every line
+        assert!(!doc.contains("\"gbps\": null"));
+    }
+}

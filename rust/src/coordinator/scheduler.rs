@@ -62,6 +62,14 @@ struct Unit {
 /// A scheduler is single-owner state: in the sharded engine each shard
 /// worker owns exactly one (its unit partition), so the dispatch
 /// scratch below is shard-local by construction and never contended.
+///
+/// All compute dispatched from here runs on the process-wide kernel
+/// plane ([`crate::attention::kernel::plan`]): the scratch buffers
+/// feed the plane-dispatched batch kernels directly, and because the
+/// f64 selection oracle is bit-identical across planes, selection
+/// sets, degraded-mode parity, and cross-shard bit-identity are all
+/// plane-independent (only the f32 output arithmetic varies, within
+/// the kernel layer's tolerance contract).
 pub struct Scheduler {
     units: Vec<Unit>,
     /// Simulated "now" advanced by arrivals (1 cycle = 1 ns at 1 GHz).
@@ -174,6 +182,13 @@ impl Scheduler {
     /// Queries served through the degraded conservative fallback.
     pub fn degraded_count(&self) -> u64 {
         self.degraded
+    }
+
+    /// Label of the kernel plane this scheduler's dispatches execute
+    /// on (process-wide, fixed at first kernel use) — surfaced in
+    /// serve startup lines and stats output.
+    pub fn kernel_plane(&self) -> &'static str {
+        crate::attention::kernel::plan().plane.label()
     }
 
     fn dispatch_inner(

@@ -93,7 +93,9 @@ pub struct WidthLadder {
     pub output: QFormat,
 }
 
-fn log2_ceil(x: usize) -> u32 {
+/// `ceil(log2(x))` — the bit-growth of summing `x` terms, used for the
+/// §III-B width ladder and the quantized SIMD path's overflow gate.
+pub fn log2_ceil(x: usize) -> u32 {
     debug_assert!(x > 0);
     usize::BITS - (x - 1).leading_zeros()
 }

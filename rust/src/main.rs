@@ -42,6 +42,13 @@ COMMANDS (system):
                     --connect ADDR [--queries N] [--connections N]
                     [--contexts N] [--n N] [--qps F] [--seed N]
                     [--window N] [--shutdown]
+    bench           print the detected kernel plan (plane, vector
+                    features, tile geometry); with --json, time the
+                    kernel hot paths on every available plane (scalar
+                    oracle vs simd128/avx2/neon) and emit the
+                    machine-readable a3-bench-hotpath/v1 snapshot:
+                    [--json] [--out FILE] (--out implies --json; the
+                    per-line budget honours A3_BENCH_BUDGET_MS)
     chaos           seeded fault-injection smoke over loopback TCP:
                     kill a shard worker, drop a connection mid-stream,
                     send a truncated frame, stall a batch — then check
@@ -297,6 +304,52 @@ fn cmd_client(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_bench(args: &[String]) -> Result<()> {
+    let mut json = false;
+    let mut out: Option<String> = None;
+    let mut i = 1; // args[0] is the "bench" command itself
+    while i < args.len() {
+        let flag = args[i].clone();
+        if flag == "--json" {
+            json = true;
+            i += 1;
+            continue;
+        }
+        if flag != "--out" {
+            bail!("bench: unknown flag {flag:?} (see `a3 --help`)");
+        }
+        let value = match args.get(i + 1) {
+            Some(v) => v,
+            None => bail!("bench: {flag} needs a value (see `a3 --help`)"),
+        };
+        out = Some(value.clone());
+        i += 2;
+    }
+
+    let plan = a3::attention::plan();
+    if !json && out.is_none() {
+        let planes: Vec<&str> =
+            a3::attention::available_planes().iter().map(|p| p.label()).collect();
+        println!("kernel plan : plane={}", plan.plane.label());
+        println!("features    : {}", a3::attention::host_feature_summary());
+        println!("tile (d={}) : {}", a3::PAPER_D, plan.tile.label(a3::PAPER_D));
+        println!("planes      : {}", planes.join(" "));
+        println!("(add --json for the timed a3-bench-hotpath/v1 snapshot)");
+        return Ok(());
+    }
+
+    let doc = a3::bench::json::hotpath_snapshot(a3::bench::budget());
+    match out {
+        Some(path) => {
+            std::fs::write(&path, &doc)
+                .map_err(|e| anyhow::anyhow!("bench: cannot write {path:?}: {e}"))?;
+            println!("wrote {path}");
+        }
+        None => print!("{doc}"),
+    }
+    Ok(())
+}
+
 fn cmd_chaos(args: &[String]) -> Result<()> {
     let mut shards = 2usize;
     let mut units = 2usize;
@@ -492,6 +545,7 @@ fn main() -> Result<()> {
         }
         "serve" => cmd_serve(&args)?,
         "client" => cmd_client(&args)?,
+        "bench" => cmd_bench(&args)?,
         "chaos" => cmd_chaos(&args)?,
         "runtime-smoke" => cmd_runtime_smoke()?,
         "--help" | "-h" | "help" => print!("{USAGE}"),

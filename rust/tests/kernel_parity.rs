@@ -14,11 +14,21 @@
 //! composed reference chain `greedy_select` → `exact_scores` →
 //! `postscore_select` → `attention_masked`, across batch sizes and
 //! M/T corner cases.
+//!
+//! The final section is the per-plane SIMD parity oracle
+//! (`attention::kernel::simd`): on every plane the host can run,
+//! `dot_f64` / `dot_i32` / `dot_q15` must be **bit-identical** to the
+//! scalar oracle, `dot_f32` must sit inside the documented
+//! `dot_f32_tolerance` reassociation bound, and the cache-blocked
+//! batch executor must agree with the scalar-tiled oracle within
+//! `assert_allclose` while staying bit-identical to itself across
+//! batch shapes and deterministic across tile geometries.
 
 use a3::approx::{exact_scores, greedy_select, postscore_select, SortedColumns};
+use a3::attention::kernel::simd;
 use a3::attention::{
-    attention, attention_batch, attention_masked, dot_scores, kernel, softmax_weights,
-    weighted_sum, KvPair, Workspace,
+    attention, attention_batch, attention_masked, available_planes, dot_f32_tolerance, dot_scores,
+    kernel, softmax_weights, weighted_sum, KernelPlan, KvPair, TileConfig, Workspace,
 };
 use a3::model::{AttentionBackend, MIters};
 use a3::testutil::{assert_allclose, check, Rng};
@@ -296,6 +306,165 @@ fn quantized_batches_bit_match_per_query_run() {
                 assert_eq!(got[i].0, want_out, "{} b={b} query {i}", backend.label());
                 assert_eq!(got[i].1, want_sel, "{} b={b} query {i}", backend.label());
             }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SIMD kernel planes vs the scalar oracle
+// ---------------------------------------------------------------------------
+
+/// Operand lengths straddling every lane boundary the planes use:
+/// empty, sub-lane, one lane (4/8/16 ± 1), the paper's d = 64, and a
+/// long vector that exercises main loop + unroll + tail together.
+const DOT_LENS: [usize; 10] = [0, 1, 7, 8, 9, 15, 16, 17, 64, 200];
+
+#[test]
+fn dot_f32_planes_sit_inside_the_tolerance_oracle() {
+    check(20, |rng: &mut Rng| {
+        for len in DOT_LENS {
+            let a = rng.normal_vec(len, 1.0);
+            let b = rng.normal_vec(len, 1.0);
+            let want = kernel::dot_f32_scalar(&a, &b);
+            let tol = dot_f32_tolerance(&a, &b);
+            for plane in available_planes() {
+                let got = simd::dot_f32_on(plane, &a, &b);
+                assert!(
+                    (got - want).abs() <= tol,
+                    "plane {} len {len}: got {got} want {want} tol {tol}",
+                    plane.label()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn dot_f64_i32_q15_bit_identical_on_every_plane() {
+    check(20, |rng: &mut Rng| {
+        for len in DOT_LENS {
+            let a = rng.normal_vec(len, 1.0);
+            let b = rng.normal_vec(len, 1.0);
+            let ai: Vec<i32> = a.iter().map(|&x| (x * 100.0) as i32).collect();
+            let bi: Vec<i32> = b.iter().map(|&x| (x * 100.0) as i32).collect();
+            let a16: Vec<i16> = ai.iter().map(|&x| x as i16).collect();
+            let b16: Vec<i16> = bi.iter().map(|&x| x as i16).collect();
+            let want64 = kernel::dot_f64_scalar(&a, &b);
+            let want_i = kernel::dot_i32_scalar(&ai, &bi);
+            let want_q = simd::dot_q15_scalar(&a16, &b16);
+            for plane in available_planes() {
+                let pl = plane.label();
+                assert_eq!(
+                    simd::dot_f64_on(plane, &a, &b).to_bits(),
+                    want64.to_bits(),
+                    "dot_f64 plane {pl} len {len}"
+                );
+                assert_eq!(simd::dot_i32_on(plane, &ai, &bi), want_i, "dot_i32 plane {pl} len {len}");
+                assert_eq!(simd::dot_q15_on(plane, &a16, &b16), want_q, "dot_q15 plane {pl} len {len}");
+            }
+        }
+    });
+}
+
+#[test]
+fn fused_four_row_scores_bit_match_the_single_row_kernel() {
+    let mut rng = Rng::new(31);
+    for len in DOT_LENS {
+        let q = rng.normal_vec(len, 1.0);
+        let rows: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(len, 1.0)).collect();
+        let k = [rows[0].as_slice(), rows[1].as_slice(), rows[2].as_slice(), rows[3].as_slice()];
+        for plane in available_planes() {
+            // None = the plane has no fused kernel; the blocked executor
+            // then falls back to per-row dot_f32_on, identical by definition
+            if let Some(s4) = simd::dot4_f32_on(plane, k, &q) {
+                for (r, &s) in s4.iter().enumerate() {
+                    assert_eq!(
+                        s.to_bits(),
+                        simd::dot_f32_on(plane, k[r], &q).to_bits(),
+                        "plane {} len {len} row {r}",
+                        plane.label()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn cache_blocked_batch_matches_scalar_batch_within_tolerance() {
+    check(20, |rng: &mut Rng| {
+        let (n, d, b) = (rng.range(1, 300), rng.range(1, 80), rng.range(1, 40));
+        let kv = random_kv(rng, n, d);
+        let queries = rng.normal_vec(b * d, 1.0);
+        let mut ws = Workspace::new();
+        let mut want = vec![0.0f32; b * d];
+        kernel::attention_batch_scalar_into(&kv, &queries, &mut want, &mut ws);
+        for plane in available_planes().into_iter().filter(|p| p.is_simd()) {
+            let plan = KernelPlan { plane, tile: TileConfig::default() };
+            let mut got = vec![0.0f32; b * d];
+            kernel::attention_batch_blocked_into(&plan, &kv, &queries, &mut got, &mut ws);
+            assert_allclose(&got, &want, 1e-5, 1e-5);
+        }
+    });
+}
+
+#[test]
+fn blocked_batch_bit_identical_to_blocked_single_per_plane() {
+    // panel boundaries depend only on (n, tile), so any batch shape
+    // must reproduce the batch-of-one outputs bit for bit
+    check(20, |rng: &mut Rng| {
+        let (n, d, b) = (rng.range(1, 120), rng.range(1, 40), rng.range(1, 12));
+        let kv = random_kv(rng, n, d);
+        let queries = rng.normal_vec(b * d, 1.0);
+        let mut ws = Workspace::new();
+        for plane in available_planes().into_iter().filter(|p| p.is_simd()) {
+            let plan = KernelPlan { plane, tile: TileConfig::default() };
+            let mut batch = vec![0.0f32; b * d];
+            kernel::attention_batch_blocked_into(&plan, &kv, &queries, &mut batch, &mut ws);
+            let mut single = vec![0.0f32; d];
+            for j in 0..b {
+                kernel::attention_batch_blocked_into(
+                    &plan,
+                    &kv,
+                    &queries[j * d..(j + 1) * d],
+                    &mut single,
+                    &mut ws,
+                );
+                assert_eq!(
+                    &batch[j * d..(j + 1) * d],
+                    &single[..],
+                    "plane {} query {j} (n={n} d={d} b={b})",
+                    plane.label()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn blocked_batch_stable_across_tile_geometries() {
+    // A3_TILE semantics: tile geometry moves panel boundaries (and so
+    // the rounding pattern) but must stay within softmax tolerance of
+    // the default geometry on the same plane
+    let mut rng = Rng::new(33);
+    let (n, d, b) = (a3::PAPER_N, a3::PAPER_D, 11);
+    let kv = random_kv(&mut rng, n, d);
+    let queries = rng.normal_vec(b * d, 1.0);
+    let mut ws = Workspace::new();
+    for plane in available_planes().into_iter().filter(|p| p.is_simd()) {
+        let default_plan = KernelPlan { plane, tile: TileConfig::default() };
+        let mut want = vec![0.0f32; b * d];
+        kernel::attention_batch_blocked_into(&default_plan, &kv, &queries, &mut want, &mut ws);
+        for (qr, pr) in [(1usize, 1usize), (3, 33), (64, 1024)] {
+            let tile = TileConfig {
+                query_override: Some(qr),
+                panel_override: Some(pr),
+                ..TileConfig::default()
+            };
+            let plan = KernelPlan { plane, tile };
+            let mut got = vec![0.0f32; b * d];
+            kernel::attention_batch_blocked_into(&plan, &kv, &queries, &mut got, &mut ws);
+            assert_allclose(&got, &want, 1e-5, 1e-5);
         }
     }
 }

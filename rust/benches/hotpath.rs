@@ -330,4 +330,48 @@ fn main() {
             net_client.recv().expect("recv");
         }
     }));
+
+    // tiered serve: 9 contexts against a 3-context memory budget with
+    // the quantized backend — every round-robin pass cycles contexts
+    // through hot → warm (quantized-resident) → cold (disk spill) and
+    // back, so this line prices demotion, serve-from-warm, and cold
+    // re-admission on the real serving path. Compare against
+    // "api engine serve shards=1" above for the tier tax under
+    // memory pressure.
+    let spill = a3::testutil::TempDir::new("hotpath-tier");
+    let ctx_bytes = 2 * n * d * 4;
+    let tiered = a3::api::EngineBuilder::new()
+        .units(2)
+        .backend(AttentionBackend::Quantized)
+        .dims(Dims::paper())
+        .max_batch(8)
+        .memory_budget(3 * ctx_bytes)
+        .spill_dir(spill.path())
+        .build()
+        .expect("engine");
+    let mut tier_rng = Rng::new(15);
+    let tier_handles: Vec<_> = (0..9)
+        .map(|_| {
+            let pair = KvPair::new(
+                n,
+                d,
+                tier_rng.normal_vec(n * d, 1.0),
+                tier_rng.normal_vec(n * d, 1.0),
+            );
+            tiered.register_context(pair).expect("register")
+        })
+        .collect();
+    let tier_q = tier_rng.normal_vec(d, 1.0);
+    println!("{}", bench("tiered serve 9 ctx @ 3-ctx budget (quantized warm)", b, || {
+        for h in &tier_handles {
+            tiered.submit(h, tier_q.clone()).expect("submit");
+        }
+        tiered.drain().expect("drain");
+        while tiered.try_recv().expect("recv").is_some() {}
+    }));
+    let tiers = tiered.tier_stats();
+    println!(
+        "tiered serve stats: {} warm serve(s), {} cold readmission(s), {}+{} demotion(s)",
+        tiers.warm_serves, tiers.cold_readmissions, tiers.demotions_warm, tiers.demotions_cold
+    );
 }

@@ -26,8 +26,9 @@
 //!   the non-blocking primitives.
 
 use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, Weak};
 use std::time::{Duration, Instant};
 
 use super::error::A3Error;
@@ -37,7 +38,8 @@ use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{ContextId, KvContext, Query, QueryId, Response, NO_DEADLINE};
 use crate::coordinator::scheduler::{Scheduler, UnitConfig, UnitKind};
-use crate::coordinator::store::ContextStore;
+use crate::coordinator::store::{ContextStore, WarmServe};
+use crate::coordinator::tier::{Tier, TierPolicy, TierStats};
 use crate::model::AttentionBackend;
 use crate::sim::Dims;
 
@@ -48,7 +50,7 @@ use crate::sim::Dims;
 /// admission window, unbounded context memory);
 /// [`EngineBuilder::build`] rejects inconsistent settings with
 /// [`A3Error::ConfigError`] instead of panicking later.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct EngineBuilder {
     units: usize,
     kind: UnitKind,
@@ -59,6 +61,9 @@ pub struct EngineBuilder {
     shards: usize,
     memory_budget: Option<usize>,
     degrade_pending: Option<usize>,
+    spill_dir: Option<PathBuf>,
+    warm_watermark: f64,
+    cold_watermark: f64,
 }
 
 impl Default for EngineBuilder {
@@ -73,6 +78,9 @@ impl Default for EngineBuilder {
             shards: 1,
             memory_budget: None,
             degrade_pending: None,
+            spill_dir: None,
+            warm_watermark: TierPolicy::DEFAULT_WARM_WATERMARK,
+            cold_watermark: TierPolicy::DEFAULT_COLD_WATERMARK,
         }
     }
 }
@@ -109,6 +117,38 @@ impl EngineBuilder {
     /// Unset = unbounded.
     pub fn memory_budget(mut self, bytes: usize) -> Self {
         self.memory_budget = Some(bytes);
+        self
+    }
+
+    /// Opt in to the hot/warm/cold memory hierarchy: under a
+    /// [`EngineBuilder::memory_budget`], budget pressure **demotes**
+    /// LRU contexts through the tiers (hot f32 → warm
+    /// quantized-resident → cold checksummed spill file under this
+    /// directory) instead of evicting them. Demoted contexts stay
+    /// servable: quantized backends serve warm contexts in place,
+    /// exact backends promote on demand, and cold contexts re-admit
+    /// from disk (prefetched by a background prewarm thread).
+    /// [`A3Error::ContextEvicted`] then only fires when a spill file
+    /// is gone. Without a budget every context simply stays hot.
+    pub fn spill_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.spill_dir = Some(dir.into());
+        self
+    }
+
+    /// Fraction of the per-shard budget the hot tier may occupy before
+    /// LRU hot contexts demote to warm (default 0.6). Only meaningful
+    /// with [`EngineBuilder::spill_dir`].
+    pub fn warm_watermark(mut self, fraction: f64) -> Self {
+        self.warm_watermark = fraction;
+        self
+    }
+
+    /// Fraction of the per-shard budget the hot **plus** warm tiers
+    /// may occupy before LRU warm contexts demote to cold (default
+    /// 1.0 — the budget itself; above 1.0 is a deliberate soft
+    /// budget). Only meaningful with [`EngineBuilder::spill_dir`].
+    pub fn cold_watermark(mut self, fraction: f64) -> Self {
+        self.cold_watermark = fraction;
         self
     }
 
@@ -224,7 +264,27 @@ impl EngineBuilder {
                 ));
             }
         }
+        if let Some(policy) = self.tier_policy() {
+            policy.validate().map_err(A3Error::ConfigError)?;
+        }
         Engine::spawn(self)
+    }
+
+    /// The tier policy this configuration implies: `None` without a
+    /// spill directory (legacy evict-to-nothing store). The warm
+    /// resident format follows the serving backend's quantization so
+    /// warm contexts are servable in place.
+    fn tier_policy(&self) -> Option<TierPolicy> {
+        let dir = self.spill_dir.as_ref()?;
+        let mut policy = TierPolicy::new(dir.clone());
+        policy.warm_watermark = self.warm_watermark;
+        policy.cold_watermark = self.cold_watermark;
+        if let UnitKind::Approximate { backend } = self.kind {
+            if let Some(fmt) = backend.warm_format() {
+                policy.warm_fmt = fmt;
+            }
+        }
+        Some(policy)
     }
 }
 
@@ -252,6 +312,11 @@ pub struct ContextHandle {
     ctx: KvContext,
     /// Identity of the issuing engine (pointer equality).
     engine: Arc<()>,
+    /// The issuing engine's store, weakly: lets [`ContextHandle::tier`]
+    /// answer without keeping the store alive past the engine.
+    store: Weak<ContextStore>,
+    /// Home shard (stable for the context's whole lifetime).
+    shard: usize,
 }
 
 impl ContextHandle {
@@ -296,6 +361,19 @@ impl ContextHandle {
     pub fn resident_bytes(&self) -> usize {
         self.ctx.resident_bytes()
     }
+
+    /// The memory tier this context currently occupies on its home
+    /// shard. Always `Some(Tier::Hot)` on a non-tiered engine while
+    /// the context is live; `None` once it has been evicted (or the
+    /// engine is gone). Snapshot only — a tiered engine may move the
+    /// context concurrently, and a registration that has not yet
+    /// reached its shard worker reads `None` until it lands (a
+    /// [`Engine::drain`] barrier settles it).
+    pub fn tier(&self) -> Option<Tier> {
+        self.store
+            .upgrade()
+            .and_then(|store| store.tier_of(self.shard, self.ctx.id))
+    }
 }
 
 /// Receipt for one submitted query: [`Response::id`] of the matching
@@ -334,6 +412,10 @@ pub struct EngineStats {
     pub sim_makespan: u64,
     /// One entry per shard, in shard order.
     pub per_shard: Vec<ShardStats>,
+    /// Memory-hierarchy snapshot: per-tier resident bytes plus
+    /// monotone transition counters (engine-lifetime, not windowed).
+    /// All zero except `hot_bytes` on a non-tiered engine.
+    pub tiers: TierStats,
 }
 
 /// Result of a serving run ([`Engine::run_stream`] /
@@ -558,10 +640,14 @@ pub struct Engine {
     needs_sorted: bool,
     arrival_qps: Option<f64>,
     max_pending: usize,
+    /// Cold-context prefetch queue feeding the background prewarm
+    /// thread (`Some` only on tiered engines); `None` once stopped.
+    prewarm_tx: Option<mpsc::Sender<(usize, ContextId)>>,
 }
 
 impl Engine {
     fn spawn(builder: EngineBuilder) -> Result<Engine, A3Error> {
+        let tier_policy = builder.tier_policy();
         let EngineBuilder {
             units,
             kind,
@@ -572,11 +658,21 @@ impl Engine {
             shards,
             memory_budget,
             degrade_pending,
+            ..
         } = builder;
         // the degraded fallback runs candidate selection, so contexts
         // must prewarm their sorted cache even on an exact engine
         let needs_sorted = kind.needs_sorted_contexts() || degrade_pending.is_some();
-        let store = Arc::new(ContextStore::new(shards, memory_budget));
+        // quantized units serve warm (quantized-resident) contexts in
+        // place; everyone else needs promotion back to hot f32
+        let warm_servable = match kind {
+            UnitKind::Approximate { backend } => backend.warm_servable(),
+            _ => false,
+        };
+        let store = Arc::new(match tier_policy {
+            Some(policy) => ContextStore::with_tiering(shards, memory_budget, policy),
+            None => ContextStore::new(shards, memory_budget),
+        });
         let registry = Arc::new(Mutex::new(Registry::default()));
         let (resp_tx, resp_rx) = mpsc::channel();
         let shared = Arc::new(Shared {
@@ -617,6 +713,8 @@ impl Engine {
                 degrade_pending,
                 slow_next: None,
                 sim_floor: 0,
+                needs_sorted,
+                warm_servable,
             };
             let handle = std::thread::Builder::new()
                 .name(format!("a3-shard{shard}"))
@@ -627,6 +725,32 @@ impl Engine {
             cmd_txs.push(cmd_tx);
             workers.push(handle);
         }
+        // background prewarm: cold contexts seen at submit time are
+        // re-admitted off the dispatch critical path — to warm for
+        // quantized serving, to hot for everyone else. Best effort:
+        // a failed prefetch just resurfaces typed at dispatch.
+        let prewarm_tx = if store.tiered() {
+            let (tx, rx) = mpsc::channel::<(usize, ContextId)>();
+            let prewarm_store = Arc::clone(&store);
+            let handle = std::thread::Builder::new()
+                .name("a3-tier-prewarm".into())
+                .spawn(move || {
+                    while let Ok((shard, id)) = rx.recv() {
+                        if warm_servable {
+                            let _ = prewarm_store.prewarm_cold(shard, id);
+                        } else {
+                            let _ = prewarm_store.fetch_exact(shard, id, needs_sorted);
+                        }
+                    }
+                })
+                .map_err(|e| {
+                    A3Error::ConfigError(format!("failed to spawn tier prewarm thread: {e}"))
+                })?;
+            workers.push(handle);
+            Some(tx)
+        } else {
+            None
+        };
         Ok(Engine {
             cmd_tx: Some(cmd_txs),
             resp_rx: Mutex::new(resp_rx),
@@ -642,6 +766,7 @@ impl Engine {
             needs_sorted,
             arrival_qps,
             max_pending,
+            prewarm_tx,
         })
     }
 
@@ -667,6 +792,19 @@ impl Engine {
     /// The per-shard slice of the configured memory budget, if any.
     pub fn per_shard_memory_budget(&self) -> Option<usize> {
         self.store.per_shard_budget()
+    }
+
+    /// Whether this engine runs the hot/warm/cold memory hierarchy
+    /// ([`EngineBuilder::spill_dir`]).
+    pub fn tiered(&self) -> bool {
+        self.store.tiered()
+    }
+
+    /// Live memory-hierarchy snapshot (no drain barrier): per-tier
+    /// resident bytes plus engine-lifetime transition counters. The
+    /// network front door reports these in its Stats frame.
+    pub fn tier_stats(&self) -> TierStats {
+        self.store.tier_stats()
     }
 
     /// The home shard a context was placed on (stable for its whole
@@ -726,7 +864,19 @@ impl Engine {
             self.registry.lock().unwrap().live.remove(&id);
             return Err(e);
         }
-        Ok(ContextHandle { ctx, engine: Arc::clone(&self.token) })
+        Ok(self.handle(ctx, shard))
+    }
+
+    /// The one construction rule for client handles: bound to this
+    /// engine's identity token and (weakly) its store, so
+    /// [`ContextHandle::tier`] can answer for the context's home shard.
+    fn handle(&self, ctx: KvContext, shard: usize) -> ContextHandle {
+        ContextHandle {
+            ctx,
+            engine: Arc::clone(&self.token),
+            store: Arc::downgrade(&self.store),
+            shard,
+        }
     }
 
     /// Resolve a live context id to a fresh [`ContextHandle`] bound to
@@ -739,8 +889,12 @@ impl Engine {
     /// not race to "evicted". Errors exactly like a submit would:
     /// typed evicted vs unknown.
     pub fn lookup_context(&self, id: ContextId) -> Result<ContextHandle, A3Error> {
-        let ctx = self.registry.lock().unwrap().resolve(id)?.ctx.clone();
-        Ok(ContextHandle { ctx, engine: Arc::clone(&self.token) })
+        let (ctx, shard) = {
+            let reg = self.registry.lock().unwrap();
+            let live = reg.resolve(id)?;
+            (live.ctx.clone(), live.shard)
+        };
+        Ok(self.handle(ctx, shard))
     }
 
     /// The engine's unit design point (registered contexts must match
@@ -933,6 +1087,14 @@ impl Engine {
     /// live.
     pub(crate) fn submit_query(&self, query: Query) -> Result<(), A3Error> {
         let shard = self.registry.lock().unwrap().resolve_shard(query.context)?;
+        if let Some(prewarm) = &self.prewarm_tx {
+            // hide the cold re-admission behind the batching queue:
+            // by the time this query's batch dispatches, the prewarm
+            // thread has likely already re-admitted the context
+            if self.store.tier_of(shard, query.context) == Some(Tier::Cold) {
+                let _ = prewarm.send((shard, query.context));
+            }
+        }
         let tx = self.shard_tx(shard)?;
         self.shared.inflight.fetch_add(1, Ordering::AcqRel);
         tx.send(Cmd::Submit(query)).map_err(|_| {
@@ -1002,7 +1164,7 @@ impl Engine {
             });
             metrics.absorb(drain.metrics);
         }
-        Ok(EngineStats { metrics, sim_makespan, per_shard })
+        Ok(EngineStats { metrics, sim_makespan, per_shard, tiers: self.store.tier_stats() })
     }
 
     /// [`Engine::drain`] without the metrics snapshot: flush every
@@ -1241,6 +1403,7 @@ impl Engine {
     /// automatically on drop.
     pub fn stop(&mut self) {
         drop(self.cmd_tx.take()); // workers flush + exit on disconnect
+        drop(self.prewarm_tx.take()); // prewarm thread exits on disconnect
         for handle in self.workers.drain(..) {
             let _ = handle.join();
         }
@@ -1296,6 +1459,12 @@ struct ShardWorker {
     /// scheduler restarts at cycle 0, so drain/flush acks report
     /// `max(makespan, sim_floor)` to keep the shard clock monotone.
     sim_floor: u64,
+    /// Whether promoted contexts must rebuild their sorted-key cache
+    /// (mirrors the registration-time prewarm rule).
+    needs_sorted: bool,
+    /// Whether this shard's units serve warm (quantized-resident)
+    /// contexts in place (quantized approximate backends only).
+    warm_servable: bool,
 }
 
 impl ShardWorker {
@@ -1484,25 +1653,40 @@ impl ShardWorker {
         let id = ctx.id;
         let bytes = ctx.resident_bytes();
         self.store.insert(self.shard, ctx, bytes);
-        for victim in self.store.over_budget_victims(self.shard, id) {
-            // registry first: any client that observes the victim's
-            // served responses gets a typed ContextEvicted on its next
-            // submit. (A submit already in the channel behind this
-            // Register is handled like one racing an explicit evict:
-            // its dispatch fails typed and is reported through the
-            // poison slot + dropped counter, so stream drivers
-            // terminate instead of waiting forever.)
-            {
-                let mut reg = self.registry.lock().unwrap();
-                if reg.live.remove(&victim).is_some() {
-                    reg.evicted.insert(victim);
-                }
+        if self.store.tiered() {
+            // eviction becomes demotion: budget pressure pushes LRU
+            // contexts down the hierarchy (they stay servable). Only
+            // contexts whose spill write failed — demotion would lose
+            // data — fall back to a legacy hard eviction.
+            for victim in self.store.rebalance(self.shard, id) {
+                self.retire(victim);
             }
-            if let Some(batch) = self.batcher.take_context(victim) {
-                self.dispatch(batch);
+        } else {
+            for victim in self.store.over_budget_victims(self.shard, id) {
+                self.retire(victim);
             }
-            self.store.remove(self.shard, victim);
         }
+    }
+
+    /// Hard-evict one context with full evict semantics. Registry
+    /// first: any client that observes the victim's served responses
+    /// gets a typed ContextEvicted on its next submit. (A submit
+    /// already in the channel behind the triggering Register is
+    /// handled like one racing an explicit evict: its dispatch fails
+    /// typed and is reported through the poison slot + dropped
+    /// counter, so stream drivers terminate instead of waiting
+    /// forever.)
+    fn retire(&mut self, victim: ContextId) {
+        {
+            let mut reg = self.registry.lock().unwrap();
+            if reg.live.remove(&victim).is_some() {
+                reg.evicted.insert(victim);
+            }
+        }
+        if let Some(batch) = self.batcher.take_context(victim) {
+            self.dispatch(batch);
+        }
+        self.store.remove(self.shard, victim);
     }
 
     fn expire(&mut self) {
@@ -1547,6 +1731,28 @@ impl ShardWorker {
         self.shared.admission.notify_all();
     }
 
+    /// Resolve a batch's context to a servable resident form. Legacy
+    /// engines read the hot store directly (missing = evicted);
+    /// tiered engines promote/re-admit on demand — quantized units
+    /// take the warm resident form in place (cold contexts re-admit
+    /// straight to warm), everyone else promotes back to hot f32.
+    fn fetch_context(&self, id: ContextId) -> Result<WarmServe, A3Error> {
+        if !self.store.tiered() {
+            return self
+                .store
+                .get(self.shard, id)
+                .map(WarmServe::Hot)
+                .ok_or(A3Error::ContextEvicted(id));
+        }
+        if self.warm_servable {
+            self.store.fetch_warm(self.shard, id)
+        } else {
+            self.store
+                .fetch_exact(self.shard, id, self.needs_sorted)
+                .map(WarmServe::Hot)
+        }
+    }
+
     fn dispatch(&mut self, batch: Vec<Query>) {
         // batch-composition-time shedding: a closed batch may still
         // carry queries whose deadline passed while it filled
@@ -1569,18 +1775,25 @@ impl ShardWorker {
         let degrade = self
             .degrade_pending
             .is_some_and(|at| self.shared.inflight.load(Ordering::Acquire) >= at);
-        let outcome = match self.store.get(self.shard, batch[0].context) {
-            None => Err(A3Error::ContextEvicted(batch[0].context)),
-            Some(ctx) => {
+        let outcome = match self.fetch_context(batch[0].context) {
+            Err(e) => Err(e),
+            Ok(resident) => {
                 if self.paced {
                     let now_ns = batch.iter().map(|q| q.arrival_ns).max().unwrap_or(0);
                     self.scheduler
                         .advance_to(now_ns.saturating_sub(self.arrival_base_ns));
                 }
-                if degrade {
-                    self.scheduler.dispatch_degraded(&ctx, &batch)
-                } else {
-                    self.scheduler.dispatch(&ctx, &batch)
+                match resident {
+                    WarmServe::Hot(ctx) => {
+                        if degrade {
+                            self.scheduler.dispatch_degraded(&ctx, &batch)
+                        } else {
+                            self.scheduler.dispatch(&ctx, &batch)
+                        }
+                    }
+                    // quantized-resident serving, no re-hydration:
+                    // bit-identical to the hot path for the same format
+                    WarmServe::Warm(qkv) => self.scheduler.dispatch_warm(&qkv, &batch),
                 }
             }
         };
@@ -1918,6 +2131,33 @@ mod tests {
             engine.lookup_context(ctx.id()),
             Err(A3Error::ContextEvicted(_))
         ));
+    }
+
+    #[test]
+    fn untiered_engine_reports_everything_hot() {
+        let engine = make_engine(1, AttentionBackend::Exact, 32);
+        assert!(!engine.tiered());
+        let ctx = engine.register_context(make_kv(32, 7)).unwrap();
+        let stats = engine.drain().unwrap(); // barrier: the register has run
+        assert_eq!(ctx.tier(), Some(Tier::Hot), "non-tiered contexts are always hot");
+        assert_eq!(stats.tiers.hot_bytes as usize, engine.resident_bytes());
+        assert_eq!(stats.tiers.warm_bytes, 0);
+        assert_eq!(stats.tiers.demotions_warm, 0);
+        engine.evict(&ctx).unwrap();
+        engine.drain().unwrap(); // barrier: the evict command has run
+        assert_eq!(ctx.tier(), None, "evicted contexts have no tier");
+    }
+
+    #[test]
+    fn tier_watermarks_are_validated_at_build() {
+        let bad = EngineBuilder::new()
+            .spill_dir("/tmp/a3-doesnt-matter")
+            .warm_watermark(0.9)
+            .cold_watermark(0.5)
+            .build();
+        assert!(matches!(bad, Err(A3Error::ConfigError(_))));
+        // watermark knobs without a spill dir are inert, not an error
+        EngineBuilder::new().warm_watermark(0.9).cold_watermark(0.5).build().unwrap();
     }
 
     #[test]

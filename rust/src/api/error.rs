@@ -50,6 +50,13 @@ pub enum A3Error {
     /// shed at batch-composition time instead of occupying a batch
     /// slot.
     DeadlineExceeded { deadline_ns: u64, now_ns: u64 },
+    /// A cold context's spill file exists but failed its integrity
+    /// check (checksum mismatch, bad header, wrong dims) during
+    /// re-admission by the tiered
+    /// [`crate::coordinator::ContextStore`]. The context cannot be
+    /// served exactly anymore; a *missing* spill file surfaces as
+    /// [`A3Error::ContextEvicted`] instead.
+    SpillCorrupt { context: ContextId, detail: String },
 }
 
 impl fmt::Display for A3Error {
@@ -78,6 +85,9 @@ impl fmt::Display for A3Error {
                 f,
                 "deadline exceeded: due at {deadline_ns} ns, shed at {now_ns} ns"
             ),
+            A3Error::SpillCorrupt { context, detail } => {
+                write!(f, "context {context} spill file is corrupt: {detail}")
+            }
         }
     }
 }
@@ -105,6 +115,10 @@ mod tests {
             (A3Error::EngineStopped, "stopped"),
             (A3Error::ShardFailed { shard: 2 }, "shard 2"),
             (A3Error::DeadlineExceeded { deadline_ns: 100, now_ns: 250 }, "due at 100"),
+            (
+                A3Error::SpillCorrupt { context: 6, detail: "checksum mismatch".into() },
+                "spill file is corrupt",
+            ),
         ];
         for (e, needle) in cases {
             assert!(e.to_string().contains(needle), "{e}");

@@ -106,6 +106,64 @@
 //! }
 //! ```
 //!
+//! # Memory tiers
+//!
+//! With [`EngineBuilder::spill_dir`], budget pressure **demotes** LRU
+//! contexts through a three-tier hierarchy instead of evicting them —
+//! the paper's comprehension-time quantization (§III-C) turned into a
+//! residency ladder:
+//!
+//! * **hot** — f32 K/V (+ sorted-key cache): servable by every
+//!   backend;
+//! * **warm** — the quantized serving form
+//!   ([`crate::attention::QuantKv`]) held resident: quantized
+//!   backends serve it **in place**, exact backends promote it back
+//!   to hot (bit-identical — the f32 planes round-trip through a
+//!   checksummed spill file);
+//! * **cold** — on disk only, re-admitted on demand and prefetched by
+//!   a background prewarm thread when a submit targets a cold
+//!   context.
+//!
+//! [`A3Error::ContextEvicted`] then only fires when a spill file is
+//! gone; a file that fails its integrity check surfaces as the typed
+//! [`A3Error::SpillCorrupt`]. [`ContextHandle::tier`] reports a
+//! context's current [`Tier`]; [`EngineStats::tiers`] (and
+//! [`Engine::tier_stats`]) report per-tier resident bytes and
+//! transition counts ([`TierStats`]).
+//!
+//! ```
+//! use a3::api::{A3Error, AttentionBackend, Dims, EngineBuilder, KvPair, Tier};
+//! use a3::testutil::{Rng, TempDir};
+//!
+//! fn main() -> Result<(), A3Error> {
+//!     let spill = TempDir::new("api-doc-tiers");
+//!     let mut rng = Rng::new(7);
+//!     let mut kv =
+//!         || KvPair::new(32, 16, rng.normal_vec(32 * 16, 1.0), rng.normal_vec(32 * 16, 1.0));
+//!     let one_ctx = 2 * 32 * 16 * 4; // f32 K/V bytes of one context
+//!     let engine = EngineBuilder::new()
+//!         .backend(AttentionBackend::Quantized) // quantized units serve warm in place
+//!         .dims(Dims::new(32, 16))
+//!         .memory_budget(3 * one_ctx) // far below the 8-context footprint
+//!         .spill_dir(spill.path()) // opt in to tiering
+//!         .build()?;
+//!     let contexts: Vec<_> = (0..8)
+//!         .map(|_| engine.register_context(kv()))
+//!         .collect::<Result<_, _>>()?;
+//!     // budget pressure demoted older contexts down the hierarchy
+//!     // instead of evicting them — every one is still servable
+//!     for ctx in &contexts {
+//!         engine.submit(ctx, rng.normal_vec(16, 1.0))?;
+//!     }
+//!     let stats = engine.drain()?;
+//!     assert_eq!(stats.metrics.completed, 8, "demoted contexts still serve");
+//!     assert!(stats.tiers.demotions_warm > 0);
+//!     assert!(stats.tiers.warm_serves > 0, "served straight from the quantized form");
+//!     assert!(contexts.iter().any(|c| c.tier() != Some(Tier::Hot)));
+//!     Ok(())
+//! }
+//! ```
+//!
 //! # Failure model
 //!
 //! Every query submitted to a healthy engine resolves to **exactly one
@@ -176,6 +234,7 @@ pub use crate::attention::KvPair;
 pub use crate::coordinator::batcher::BatchPolicy;
 pub use crate::coordinator::metrics::{Metrics, MetricsReport};
 pub use crate::coordinator::request::{ContextId, Query, QueryId, Response, NO_DEADLINE};
+pub use crate::coordinator::tier::{Tier, TierStats};
 pub use crate::model::AttentionBackend;
 pub use crate::sim::Dims;
 

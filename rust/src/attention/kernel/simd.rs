@@ -21,8 +21,9 @@
 //! * **`Avx2`** — x86_64 intrinsics (`std::arch`), requires runtime
 //!   `avx2` + `fma` detection. 8-lane f32 FMA, 4-lane f64, 8-lane
 //!   i32, and the 16-lane `madd`-style widening i16 path.
-//! * **`Neon`** — aarch64 intrinsics. 4-lane f32 FMA, 2-lane f64,
-//!   4-lane i32, and the `smull`-style widening i16 path.
+//! * **`Neon`** — aarch64 intrinsics. 4-lane f32 FMA (including the
+//!   fused four-row score kernel), 2-lane f64, 4-lane i32, and the
+//!   `smull`-style widening i16 path.
 //!
 //! Bit-exactness contract (the tolerance oracle of
 //! `tests/kernel_parity.rs`):
@@ -623,6 +624,58 @@ pub(crate) mod neon {
         sum
     }
 
+    /// Four keys against one query, sharing every query load — the
+    /// score kernel of the cache-blocked batch path (the NEON mirror
+    /// of the AVX2 `dot4_f32`). Each row uses the same accumulator
+    /// shape as [`dot_f32`] (four 4-lane accumulators, 16-wide main
+    /// loop, 4-wide remainder into accumulator 0, identical combine),
+    /// so row `r`'s result is bit-identical to `dot_f32(k[r], q)`.
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn dot4_f32(k: [&[f32]; 4], q: &[f32]) -> [f32; 4] {
+        let n = q.len();
+        let pq = q.as_ptr();
+        let mut acc = [[vdupq_n_f32(0.0); 4]; 4];
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let qv = [
+                vld1q_f32(pq.add(i)),
+                vld1q_f32(pq.add(i + 4)),
+                vld1q_f32(pq.add(i + 8)),
+                vld1q_f32(pq.add(i + 12)),
+            ];
+            for r in 0..4 {
+                let pk = k[r].as_ptr();
+                for (v, qlane) in qv.iter().enumerate() {
+                    acc[r][v] = vfmaq_f32(acc[r][v], vld1q_f32(pk.add(i + 4 * v)), *qlane);
+                }
+            }
+            i += 16;
+        }
+        while i + 4 <= n {
+            let qv = vld1q_f32(pq.add(i));
+            for r in 0..4 {
+                acc[r][0] = vfmaq_f32(acc[r][0], vld1q_f32(k[r].as_ptr().add(i)), qv);
+            }
+            i += 4;
+        }
+        let mut out = [0.0f32; 4];
+        for r in 0..4 {
+            let mut lanes = [0.0f32; 4];
+            vst1q_f32(
+                lanes.as_mut_ptr(),
+                vaddq_f32(vaddq_f32(acc[r][0], acc[r][2]), vaddq_f32(acc[r][1], acc[r][3])),
+            );
+            let mut sum = (lanes[0] + lanes[2]) + (lanes[1] + lanes[3]);
+            let mut j = i;
+            while j < n {
+                sum += *k[r].as_ptr().add(j) * *pq.add(j);
+                j += 1;
+            }
+            out[r] = sum;
+        }
+        out
+    }
+
     /// f64-widened dot, bit-identical to the scalar oracle: four
     /// 2-lane accumulators map onto the oracle's eight, separate
     /// mul + add, and the combine replays
@@ -781,6 +834,11 @@ mod neon_bridge {
     #[inline]
     pub(super) fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
         unsafe { neon::dot_f32(a, b) }
+    }
+
+    #[inline]
+    pub(super) fn dot4_f32(k: [&[f32]; 4], q: &[f32]) -> [f32; 4] {
+        unsafe { neon::dot4_f32(k, q) }
     }
 
     #[inline]
@@ -948,10 +1006,10 @@ pub fn dot_q15_on(plane: KernelPlane, a: &[i16], b: &[i16]) -> i32 {
     }
 }
 
-/// Fused four-keys-one-query score kernel, when the plane has one.
-/// `None` means the caller should fall back to per-row [`dot_f32_on`];
-/// when `Some`, element `r` is bit-identical to
-/// `dot_f32_on(plane, k[r], q)`.
+/// Fused four-keys-one-query score kernel, when the plane has one
+/// (AVX2 on x86_64, NEON on aarch64). `None` means the caller should
+/// fall back to per-row [`dot_f32_on`]; when `Some`, element `r` is
+/// bit-identical to `dot_f32_on(plane, k[r], q)`.
 #[inline]
 pub fn dot4_f32_on(plane: KernelPlane, k: [&[f32]; 4], q: &[f32]) -> Option<[f32; 4]> {
     for row in &k {
@@ -962,6 +1020,12 @@ pub fn dot4_f32_on(plane: KernelPlane, k: [&[f32]; 4], q: &[f32]) -> Option<[f32
         if plane == KernelPlane::Avx2 && avx2_available() {
             // Safety: avx2+fma verified on this host.
             return Some(unsafe { x86::dot4_f32(k, q) });
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if plane == KernelPlane::Neon {
+            return Some(neon_bridge::dot4_f32(k, q));
         }
     }
     let _ = (plane, k, q);

@@ -63,6 +63,21 @@ impl QuantKv {
     pub fn paper(kv: &KvPair) -> Self {
         QuantKv::new(kv, QFormat::PAPER_INPUT)
     }
+
+    /// Bytes this pre-quantized K/V bank keeps resident — what the
+    /// tiered [`crate::coordinator::ContextStore`] charges for a
+    /// *warm* context (i32 key + value planes, plus the optional
+    /// i16-packed key copy). Note the i32 planes alone match the f32
+    /// planes byte for byte, so warm is *not* smaller than the bare
+    /// f32 K/V — the win over hot is dropping the f32 planes and the
+    /// `SortedColumns` cache while staying the serving representation
+    /// itself: quantized backends serve a warm context without
+    /// re-hydration.
+    pub fn resident_bytes(&self) -> usize {
+        let i32s = (self.kq.len() + self.vq.len()) * std::mem::size_of::<i32>();
+        let i16s = self.k16.as_ref().map_or(0, |k| k.len() * std::mem::size_of::<i16>());
+        i32s + i16s
+    }
 }
 
 /// Run the fixed-point pipeline for one query. Returns the float output

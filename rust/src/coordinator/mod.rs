@@ -10,7 +10,12 @@
 //! * [`store`] — the sharded, refcounted, memory-accounted
 //!   [`ContextStore`]: least-loaded-by-bytes placement with stable
 //!   context→shard affinity, byte accounting that includes the
-//!   sorted-key cache, and LRU victim selection under a budget;
+//!   sorted-key cache, and LRU victim selection under a budget —
+//!   or, with a [`tier::TierPolicy`], hot/warm/cold demotion instead
+//!   of eviction;
+//! * [`tier`] — the memory-hierarchy policy behind the tiered store:
+//!   quantized-resident warm tier servable in place, checksummed disk
+//!   spill for cold with on-demand re-admission;
 //! * [`batcher`] — dynamic batching: queries for the same KV context
 //!   are grouped (up to the AOT kernel batch of 8, or a timeout) before
 //!   dispatch, vLLM-router style; each shard worker owns one batcher;
@@ -35,9 +40,11 @@ pub mod metrics;
 pub mod request;
 pub mod scheduler;
 pub mod store;
+pub mod tier;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::{AttributedMetrics, Metrics, MetricsReport};
 pub use request::{KvContext, Query, QueryId, Response, NO_DEADLINE};
 pub use scheduler::{Scheduler, UnitConfig, UnitKind};
-pub use store::ContextStore;
+pub use store::{ContextStore, WarmServe};
+pub use tier::{Tier, TierPolicy, TierStats};

@@ -11,6 +11,7 @@
 
 use super::request::{KvContext, Query, Response};
 use crate::api::A3Error;
+use crate::attention::QuantKv;
 use crate::model::AttentionBackend;
 use crate::sim::{ApproxPipeline, ApproxQuery, BasePipeline, Dims};
 
@@ -182,6 +183,79 @@ impl Scheduler {
     /// Queries served through the degraded conservative fallback.
     pub fn degraded_count(&self) -> u64 {
         self.degraded
+    }
+
+    /// Dispatch one batch straight from a **warm** (quantized-resident)
+    /// context — the tiered store's in-place serve path.
+    ///
+    /// The [`QuantKv`] is the serving representation the quantized
+    /// backend would have built from the f32 planes anyway, so outputs
+    /// (and pipeline timing) are bit-identical to [`Scheduler::dispatch`]
+    /// on the hot form; the f32 planes are never touched, which is the
+    /// point — a warm context serves without re-hydration. Only
+    /// quantized approximate units can do this; anything else is a
+    /// typed [`A3Error::BackendMismatch`] (the engine routes those
+    /// through promotion instead).
+    pub fn dispatch_warm(
+        &mut self,
+        qkv: &QuantKv,
+        batch: &[Query],
+    ) -> Result<Vec<Response>, A3Error> {
+        if batch.is_empty() {
+            return Err(A3Error::EmptyBatch);
+        }
+        let now = self.now_cycles;
+        let idx = (0..self.units.len())
+            .min_by_key(|&i| self.units[i].free_at.max(now))
+            .ok_or_else(|| A3Error::ConfigError("scheduler has no units".into()))?;
+        let d = qkv.d;
+        self.flat.clear();
+        for q in batch {
+            if q.embedding.len() != d {
+                return Err(A3Error::DimensionMismatch { expected: d, got: q.embedding.len() });
+            }
+            self.flat.extend_from_slice(&q.embedding);
+        }
+        let unit = &mut self.units[idx];
+        let arrival = unit.free_at.max(now);
+        let computed: Vec<(Vec<f32>, usize, _)> = match (&mut unit.pipe, unit.config.kind) {
+            (UnitPipe::Approx(p), UnitKind::Approximate { backend }) => {
+                backend.try_run_batch_prequant_into(qkv, &self.flat, &mut self.results)?;
+                self.results
+                    .drain(..)
+                    .map(|(out, sel)| {
+                        let timing = p.push_query(
+                            arrival,
+                            ApproxQuery {
+                                m: qkv.n,
+                                candidates: sel.len().max(1),
+                                kept: sel.len().max(1),
+                            },
+                        );
+                        (out, sel.len(), timing)
+                    })
+                    .collect()
+            }
+            _ => {
+                return Err(A3Error::BackendMismatch(
+                    "warm (quantized-resident) serving needs a quantized approximate unit".into(),
+                ))
+            }
+        };
+        let mut responses = Vec::with_capacity(batch.len());
+        for (q, (output, selected_rows, timing)) in batch.iter().zip(computed) {
+            unit.free_at = timing.finish;
+            unit.processed += 1;
+            responses.push(Response {
+                id: q.id,
+                context: q.context,
+                output,
+                selected_rows,
+                sim_cycles: timing.latency(),
+                completed_ns: timing.finish,
+            });
+        }
+        Ok(responses)
     }
 
     /// Label of the kernel plane this scheduler's dispatches execute
@@ -524,6 +598,57 @@ mod tests {
             assert_eq!(x.sim_cycles, y.sim_cycles);
         }
         assert_eq!(degraded.degraded_count(), 0, "approximate units never count as degraded");
+    }
+
+    #[test]
+    fn warm_dispatch_bit_matches_hot_dispatch_for_quantized_units() {
+        // the warm serve contract: a quantized-resident context serves
+        // byte-for-byte like the hot path (which quantizes per batch),
+        // with identical pipeline timing — no re-hydration, no drift
+        for backend in [
+            AttentionBackend::Quantized,
+            AttentionBackend::QuantizedBits { i_bits: 3, f_bits: 5 },
+        ] {
+            let c = ctx(96, 64, 30);
+            let unit = UnitConfig {
+                kind: UnitKind::Approximate { backend },
+                dims: Dims::new(96, 64),
+            };
+            let qs = queries(6, 64, 31);
+            let mut hot = Scheduler::new(&[unit]);
+            let a = hot.dispatch(&c, &qs).unwrap();
+            let qkv = QuantKv::new(&c.kv, backend.warm_format().unwrap());
+            let mut warm = Scheduler::new(&[unit]);
+            let b = warm.dispatch_warm(&qkv, &qs).unwrap();
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.output, y.output, "{backend:?}");
+                assert_eq!(x.selected_rows, y.selected_rows);
+                assert_eq!(x.sim_cycles, y.sim_cycles, "timing parity");
+            }
+        }
+    }
+
+    #[test]
+    fn warm_dispatch_rejects_non_quantized_units() {
+        let c = ctx(16, 8, 32);
+        let qkv = QuantKv::paper(&c.kv);
+        let qs = queries(2, 8, 33);
+        let mut base = Scheduler::new(&[UnitConfig {
+            kind: UnitKind::Base,
+            dims: Dims::new(16, 8),
+        }]);
+        assert!(matches!(
+            base.dispatch_warm(&qkv, &qs),
+            Err(A3Error::BackendMismatch(_))
+        ));
+        let mut selective = Scheduler::new(&[UnitConfig {
+            kind: UnitKind::Approximate { backend: AttentionBackend::conservative() },
+            dims: Dims::new(16, 8),
+        }]);
+        assert!(matches!(
+            selective.dispatch_warm(&qkv, &qs),
+            Err(A3Error::BackendMismatch(_))
+        ));
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Sharded, refcounted, memory-accounted registry of [`KvContext`]s.
+//! Sharded, refcounted, memory-accounted registry of [`KvContext`]s —
+//! optionally a three-tier memory hierarchy (see [`super::tier`]).
 //!
 //! The A³ paper scales serving throughput by replicating approximate
 //! attention units and spreading queries across them (§VII, Fig. 14);
@@ -12,39 +13,100 @@
 //! mutex — a shard worker only ever locks *its* shard, so dispatch on
 //! one shard never contends with dispatch on another (the only other
 //! parties on that lock are the rare client-side register/evict calls
-//! for contexts homed there). Aggregate resident bytes per shard are
-//! mirrored in atomics so placement reads them without taking any
-//! entry lock.
+//! for contexts homed there, and the engine's background prewarm
+//! thread re-admitting cold contexts). Aggregate resident bytes per
+//! shard are mirrored in atomics so placement reads them without
+//! taking any entry lock.
 //!
 //! Memory accounting covers everything a context keeps resident: the
 //! K/V matrices **and** the comprehension-time sorted-key cache
 //! (§IV-C) when it has been built ([`KvContext::resident_bytes`]).
-//! Under a configured budget the store answers "who must go" with
-//! least-recently-used victims ([`ContextStore::over_budget_victims`]);
-//! the *caller* (the shard worker) retires them — dispatching their
-//! already-admitted queries first, exactly like an explicit
-//! [`crate::api::Engine::evict`] — and then calls
-//! [`ContextStore::remove`]. The store never drops in-flight work on
-//! its own.
+//!
+//! Two budget-enforcement modes:
+//!
+//! * **legacy** ([`ContextStore::new`]) — under a configured budget
+//!   the store answers "who must go" with least-recently-used victims
+//!   ([`ContextStore::over_budget_victims`]); the *caller* (the shard
+//!   worker) retires them — dispatching their already-admitted queries
+//!   first, exactly like an explicit [`crate::api::Engine::evict`] —
+//!   and then calls [`ContextStore::remove`]. The store never drops
+//!   in-flight work on its own.
+//! * **tiered** ([`ContextStore::with_tiering`]) — eviction becomes
+//!   *demotion*: the same LRU clock instead drives hot→warm→cold
+//!   transitions inside [`ContextStore::rebalance`], contexts come
+//!   back on demand through [`ContextStore::fetch_exact`] /
+//!   [`ContextStore::fetch_warm`], and a context is only ever *lost*
+//!   if its spill file disappears from disk.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+
+use crate::api::A3Error;
+use crate::attention::QuantKv;
 
 use super::request::{ContextId, KvContext};
+use super::tier::{self, Tier, TierCounters, TierPolicy, TierStats};
+
+/// Which form of a context a shard currently holds resident.
+enum Resident {
+    /// f32 K/V (+ lazily built sorted cache): today's full form.
+    Hot(KvContext),
+    /// Quantized serving representation, directly servable by
+    /// quantized backends ([`ContextStore::fetch_warm`]).
+    Warm(Arc<QuantKv>),
+    /// Nothing resident; the context lives in its spill file.
+    Cold,
+}
 
 struct Entry {
-    ctx: KvContext,
+    resident: Resident,
+    /// Bytes currently charged against the shard's resident gauge for
+    /// this entry (hot or warm form; 0 when cold).
     bytes: usize,
+    /// Size of the on-disk spill file, once written (0 before the
+    /// first demotion). Contexts are immutable, so the file is written
+    /// at most once and stays valid for the context's whole lifetime.
+    spill_bytes: u64,
     /// Logical LRU timestamp (store-wide monotonic tick).
     last_used: u64,
+    /// Registered dims, kept so re-admission can integrity-check the
+    /// spill file's shape even while nothing is resident.
+    n: usize,
+    d: usize,
+}
+
+impl Entry {
+    fn tier(&self) -> Tier {
+        match self.resident {
+            Resident::Hot(_) => Tier::Hot,
+            Resident::Warm(_) => Tier::Warm,
+            Resident::Cold => Tier::Cold,
+        }
+    }
 }
 
 struct Shard {
     entries: Mutex<HashMap<ContextId, Entry>>,
-    /// Resident bytes including placement reservations not yet
-    /// inserted — the lock-free view the placement policy reads.
+    /// Resident bytes (hot + warm) including placement reservations
+    /// not yet inserted — the lock-free view the placement policy
+    /// reads.
     resident: AtomicUsize,
+    /// Bytes of inserted hot entries (no reservations).
+    hot: AtomicUsize,
+    /// Bytes of warm (quantized-resident) entries.
+    warm: AtomicUsize,
+    /// On-disk bytes of entries currently cold.
+    cold: AtomicU64,
+}
+
+/// What [`ContextStore::fetch_warm`] hands the dispatch path.
+pub enum WarmServe {
+    /// The context happens to be hot — serve the f32 path as usual.
+    Hot(KvContext),
+    /// Serve in place from the quantized resident form, no
+    /// re-hydration.
+    Warm(Arc<QuantKv>),
 }
 
 /// Sharded, memory-accounted context registry (see module docs).
@@ -56,6 +118,10 @@ pub struct ContextStore {
     per_shard_budget: Option<usize>,
     /// Monotonic logical clock behind the LRU ordering.
     clock: AtomicU64,
+    /// Tiering policy; `None` keeps the legacy evict-to-nothing
+    /// behavior exactly.
+    tiering: Option<TierPolicy>,
+    counters: TierCounters,
 }
 
 impl ContextStore {
@@ -64,16 +130,32 @@ impl ContextStore {
     /// (`ceil(budget / shards)`), so `shards == 1` enforces exactly
     /// the configured budget.
     pub fn new(shards: usize, memory_budget: Option<usize>) -> Self {
+        Self::build(shards, memory_budget, None)
+    }
+
+    /// A tiered store: over-budget shards demote LRU contexts
+    /// hot→warm→cold per `policy` instead of evicting them (see
+    /// [`super::tier`]).
+    pub fn with_tiering(shards: usize, memory_budget: Option<usize>, policy: TierPolicy) -> Self {
+        Self::build(shards, memory_budget, Some(policy))
+    }
+
+    fn build(shards: usize, memory_budget: Option<usize>, tiering: Option<TierPolicy>) -> Self {
         assert!(shards >= 1, "a store needs at least one shard");
         ContextStore {
             shards: (0..shards)
                 .map(|_| Shard {
                     entries: Mutex::new(HashMap::new()),
                     resident: AtomicUsize::new(0),
+                    hot: AtomicUsize::new(0),
+                    warm: AtomicUsize::new(0),
+                    cold: AtomicU64::new(0),
                 })
                 .collect(),
             per_shard_budget: memory_budget.map(|b| b.div_ceil(shards).max(1)),
             clock: AtomicU64::new(0),
+            tiering,
+            counters: TierCounters::default(),
         }
     }
 
@@ -84,6 +166,15 @@ impl ContextStore {
     /// The per-shard slice of the configured memory budget.
     pub fn per_shard_budget(&self) -> Option<usize> {
         self.per_shard_budget
+    }
+
+    /// Whether this store demotes across tiers instead of evicting.
+    pub fn tiered(&self) -> bool {
+        self.tiering.is_some()
+    }
+
+    pub fn tiering(&self) -> Option<&TierPolicy> {
+        self.tiering.as_ref()
     }
 
     /// Resident bytes on one shard (entries + outstanding placement
@@ -112,6 +203,27 @@ impl ContextStore {
         self.len() == 0
     }
 
+    /// Per-tier resident bytes plus transition counters, aggregated
+    /// across shards. All zeros (except `hot_bytes`) in legacy mode.
+    pub fn tier_stats(&self) -> TierStats {
+        let c = &self.counters;
+        let mut t = TierStats {
+            demotions_warm: c.demotions_warm.load(Ordering::Relaxed),
+            demotions_cold: c.demotions_cold.load(Ordering::Relaxed),
+            promotions: c.promotions.load(Ordering::Relaxed),
+            cold_readmissions: c.cold_readmissions.load(Ordering::Relaxed),
+            warm_serves: c.warm_serves.load(Ordering::Relaxed),
+            spill_failures: c.spill_failures.load(Ordering::Relaxed),
+            ..TierStats::default()
+        };
+        for s in &self.shards {
+            t.hot_bytes += s.hot.load(Ordering::Acquire) as u64;
+            t.warm_bytes += s.warm.load(Ordering::Acquire) as u64;
+            t.cold_bytes += s.cold.load(Ordering::Acquire);
+        }
+        t
+    }
+
     /// Choose the home shard for a new context: least loaded by
     /// resident bytes, reserving `bytes` there immediately so
     /// concurrent placements see each other. The returned shard is
@@ -132,31 +244,277 @@ impl ContextStore {
 
     /// Insert a placed context on its home shard. `bytes` must be the
     /// amount reserved by the matching [`ContextStore::place`] call.
+    /// New contexts always enter hot.
     pub fn insert(&self, shard: usize, ctx: KvContext, bytes: usize) {
         let tick = self.clock.fetch_add(1, Ordering::Relaxed);
-        let mut entries = self.shards[shard].entries.lock().unwrap();
-        entries.insert(ctx.id, Entry { ctx, bytes, last_used: tick });
+        let s = &self.shards[shard];
+        let (n, d) = (ctx.kv.n, ctx.kv.d);
+        let mut entries = s.entries.lock().unwrap();
+        s.hot.fetch_add(bytes, Ordering::AcqRel);
+        entries.insert(
+            ctx.id,
+            Entry { resident: Resident::Hot(ctx), bytes, spill_bytes: 0, last_used: tick, n, d },
+        );
     }
 
     /// Fetch a context for dispatch, touching its LRU recency. The
-    /// clone is cheap: [`KvContext`] is a pair of `Arc`s.
+    /// clone is cheap: [`KvContext`] is a pair of `Arc`s. Returns
+    /// `None` for unknown contexts — and, in a tiered store, for
+    /// contexts not currently hot (tier-aware callers use
+    /// [`ContextStore::fetch_exact`] / [`ContextStore::fetch_warm`]).
     pub fn get(&self, shard: usize, id: ContextId) -> Option<KvContext> {
         let tick = self.clock.fetch_add(1, Ordering::Relaxed);
         let mut entries = self.shards[shard].entries.lock().unwrap();
         let entry = entries.get_mut(&id)?;
         entry.last_used = tick;
-        Some(entry.ctx.clone())
+        match &entry.resident {
+            Resident::Hot(ctx) => Some(ctx.clone()),
+            _ => None,
+        }
+    }
+
+    /// The tier a context currently occupies, if registered.
+    pub fn tier_of(&self, shard: usize, id: ContextId) -> Option<Tier> {
+        let entries = self.shards[shard].entries.lock().unwrap();
+        entries.get(&id).map(Entry::tier)
+    }
+
+    /// Fetch a context in its **hot** (f32) form, promoting it from
+    /// warm or cold if needed — the exact-backend demand path.
+    ///
+    /// Promotion re-reads the checksummed spill file, so the restored
+    /// K/V planes are bit-identical to what was registered; with
+    /// `prewarm_sorted` the sorted-key cache is rebuilt before the
+    /// new bytes are charged, keeping the accounting honest for
+    /// selective backends. After a promotion the shard is rebalanced
+    /// (someone else may demote), protecting the promoted context.
+    pub fn fetch_exact(
+        &self,
+        shard: usize,
+        id: ContextId,
+        prewarm_sorted: bool,
+    ) -> Result<KvContext, A3Error> {
+        let tick = self.clock.fetch_add(1, Ordering::Relaxed);
+        let s = &self.shards[shard];
+        let promoted = {
+            let mut entries = s.entries.lock().unwrap();
+            let entry = entries.get_mut(&id).ok_or(A3Error::ContextEvicted(id))?;
+            entry.last_used = tick;
+            if let Resident::Hot(ctx) = &entry.resident {
+                return Ok(ctx.clone());
+            }
+            let policy = self
+                .tiering
+                .as_ref()
+                .expect("non-hot entries only exist in tiered stores");
+            let was_cold = matches!(entry.resident, Resident::Cold);
+            let kv = tier::read_spill(&policy.spill_dir, id, entry.n, entry.d)?;
+            let ctx = KvContext::new(id, kv);
+            if prewarm_sorted {
+                ctx.prewarm_sorted();
+            }
+            let new_bytes = ctx.resident_bytes();
+            if was_cold {
+                s.cold.fetch_sub(entry.spill_bytes, Ordering::AcqRel);
+            } else {
+                s.resident.fetch_sub(entry.bytes, Ordering::AcqRel);
+                s.warm.fetch_sub(entry.bytes, Ordering::AcqRel);
+            }
+            s.resident.fetch_add(new_bytes, Ordering::AcqRel);
+            s.hot.fetch_add(new_bytes, Ordering::AcqRel);
+            entry.resident = Resident::Hot(ctx.clone());
+            entry.bytes = new_bytes;
+            TierCounters::bump(&self.counters.promotions);
+            if was_cold {
+                TierCounters::bump(&self.counters.cold_readmissions);
+            }
+            ctx
+        };
+        // the promotion may have pushed the shard over its watermarks;
+        // hard-evict fallbacks (spill-write failures) are handled on
+        // the next register — the budget is soft under disk failure
+        let _ = self.rebalance(shard, id);
+        Ok(promoted)
+    }
+
+    /// Fetch a context for a **quantized** backend: a warm context is
+    /// served in place (its [`QuantKv`] *is* the serving
+    /// representation — no re-hydration), a cold one is re-admitted
+    /// straight to warm from its spill file, and a hot one is returned
+    /// as-is for the normal f32 path.
+    pub fn fetch_warm(&self, shard: usize, id: ContextId) -> Result<WarmServe, A3Error> {
+        let tick = self.clock.fetch_add(1, Ordering::Relaxed);
+        let s = &self.shards[shard];
+        let served = {
+            let mut entries = s.entries.lock().unwrap();
+            let entry = entries.get_mut(&id).ok_or(A3Error::ContextEvicted(id))?;
+            entry.last_used = tick;
+            match &entry.resident {
+                Resident::Hot(ctx) => return Ok(WarmServe::Hot(ctx.clone())),
+                Resident::Warm(q) => {
+                    TierCounters::bump(&self.counters.warm_serves);
+                    return Ok(WarmServe::Warm(Arc::clone(q)));
+                }
+                Resident::Cold => {}
+            }
+            let policy = self
+                .tiering
+                .as_ref()
+                .expect("non-hot entries only exist in tiered stores");
+            let kv = tier::read_spill(&policy.spill_dir, id, entry.n, entry.d)?;
+            let q = Arc::new(QuantKv::new(&kv, policy.warm_fmt));
+            let qbytes = q.resident_bytes();
+            s.cold.fetch_sub(entry.spill_bytes, Ordering::AcqRel);
+            s.resident.fetch_add(qbytes, Ordering::AcqRel);
+            s.warm.fetch_add(qbytes, Ordering::AcqRel);
+            entry.resident = Resident::Warm(Arc::clone(&q));
+            entry.bytes = qbytes;
+            TierCounters::bump(&self.counters.cold_readmissions);
+            TierCounters::bump(&self.counters.warm_serves);
+            q
+        };
+        let _ = self.rebalance(shard, id);
+        Ok(WarmServe::Warm(served))
+    }
+
+    /// Background prefetch: re-admit a **cold** context to warm ahead
+    /// of dispatch (the engine's prewarm thread calls this when a
+    /// submit targets a cold context). Counts a cold re-admission but
+    /// — unlike [`ContextStore::fetch_warm`] — not a warm serve, and
+    /// does not touch LRU recency: a prefetch is not a use. A no-op
+    /// for anything not currently cold (including unknown ids — the
+    /// dispatch path owns the typed errors).
+    pub fn prewarm_cold(&self, shard: usize, id: ContextId) -> Result<(), A3Error> {
+        let s = &self.shards[shard];
+        {
+            let mut entries = s.entries.lock().unwrap();
+            let Some(entry) = entries.get_mut(&id) else {
+                return Ok(());
+            };
+            if !matches!(entry.resident, Resident::Cold) {
+                return Ok(());
+            }
+            let policy = self
+                .tiering
+                .as_ref()
+                .expect("cold entries only exist in tiered stores");
+            let kv = tier::read_spill(&policy.spill_dir, id, entry.n, entry.d)?;
+            let q = Arc::new(QuantKv::new(&kv, policy.warm_fmt));
+            let qbytes = q.resident_bytes();
+            s.cold.fetch_sub(entry.spill_bytes, Ordering::AcqRel);
+            s.resident.fetch_add(qbytes, Ordering::AcqRel);
+            s.warm.fetch_add(qbytes, Ordering::AcqRel);
+            entry.resident = Resident::Warm(q);
+            entry.bytes = qbytes;
+            TierCounters::bump(&self.counters.cold_readmissions);
+        }
+        let _ = self.rebalance(shard, id);
+        Ok(())
+    }
+
+    /// Demote LRU contexts on `shard` until it is back under its
+    /// watermarks (tiered stores only; a no-op otherwise):
+    ///
+    /// 1. hot → warm while hot bytes exceed `warm_watermark × budget`
+    ///    (writing the context's checksummed spill file first, so the
+    ///    f32 planes are never only-in-RAM once it leaves hot);
+    /// 2. warm → cold while resident bytes exceed
+    ///    `cold_watermark × budget` (the file is already on disk, so
+    ///    this just drops the quantized form).
+    ///
+    /// `protect` is never demoted. Returns the contexts whose spill
+    /// file could not be written — those cannot be demoted safely and
+    /// must be **hard-evicted** by the caller (the legacy retire path)
+    /// to honor the budget.
+    #[must_use = "spill-write failures must be hard-evicted by the caller"]
+    pub fn rebalance(&self, shard: usize, protect: ContextId) -> Vec<ContextId> {
+        let Some(policy) = &self.tiering else {
+            return Vec::new();
+        };
+        let Some(budget) = self.per_shard_budget else {
+            return Vec::new();
+        };
+        let warm_mark = (budget as f64 * policy.warm_watermark) as usize;
+        let cold_mark = (budget as f64 * policy.cold_watermark) as usize;
+        let s = &self.shards[shard];
+        let mut failed: Vec<ContextId> = Vec::new();
+        let mut entries = s.entries.lock().unwrap();
+        while s.hot.load(Ordering::Acquire) > warm_mark {
+            let Some(id) = lru_in_tier(&entries, Tier::Hot, protect, &failed) else {
+                break;
+            };
+            let entry = entries.get_mut(&id).expect("victim just found in map");
+            let Resident::Hot(ctx) = &entry.resident else {
+                unreachable!("lru_in_tier returned a hot entry");
+            };
+            if entry.spill_bytes == 0 {
+                match tier::write_spill(&policy.spill_dir, id, &ctx.kv) {
+                    Ok(bytes) => entry.spill_bytes = bytes,
+                    Err(_) => {
+                        TierCounters::bump(&self.counters.spill_failures);
+                        failed.push(id);
+                        continue;
+                    }
+                }
+            }
+            let q = Arc::new(QuantKv::new(&ctx.kv, policy.warm_fmt));
+            let qbytes = q.resident_bytes();
+            s.resident.fetch_sub(entry.bytes, Ordering::AcqRel);
+            s.hot.fetch_sub(entry.bytes, Ordering::AcqRel);
+            s.resident.fetch_add(qbytes, Ordering::AcqRel);
+            s.warm.fetch_add(qbytes, Ordering::AcqRel);
+            entry.resident = Resident::Warm(q);
+            entry.bytes = qbytes;
+            TierCounters::bump(&self.counters.demotions_warm);
+        }
+        while s.resident.load(Ordering::Acquire) > cold_mark {
+            let Some(id) = lru_in_tier(&entries, Tier::Warm, protect, &failed) else {
+                break;
+            };
+            let entry = entries.get_mut(&id).expect("victim just found in map");
+            s.resident.fetch_sub(entry.bytes, Ordering::AcqRel);
+            s.warm.fetch_sub(entry.bytes, Ordering::AcqRel);
+            s.cold.fetch_add(entry.spill_bytes, Ordering::AcqRel);
+            entry.resident = Resident::Cold;
+            entry.bytes = 0;
+            TierCounters::bump(&self.counters.demotions_cold);
+        }
+        failed
     }
 
     pub fn contains(&self, shard: usize, id: ContextId) -> bool {
         self.shards[shard].entries.lock().unwrap().contains_key(&id)
     }
 
-    /// Remove a context from its home shard, releasing its bytes.
+    /// Remove a context from its home shard, releasing its bytes and
+    /// (in a tiered store) deleting its spill file. Returns the hot
+    /// context if it was hot; warm/cold entries are removed all the
+    /// same but yield `None`.
     pub fn remove(&self, shard: usize, id: ContextId) -> Option<KvContext> {
-        let entry = self.shards[shard].entries.lock().unwrap().remove(&id)?;
-        self.shards[shard].resident.fetch_sub(entry.bytes, Ordering::AcqRel);
-        Some(entry.ctx)
+        let s = &self.shards[shard];
+        let entry = s.entries.lock().unwrap().remove(&id)?;
+        match &entry.resident {
+            Resident::Hot(_) => {
+                s.resident.fetch_sub(entry.bytes, Ordering::AcqRel);
+                s.hot.fetch_sub(entry.bytes, Ordering::AcqRel);
+            }
+            Resident::Warm(_) => {
+                s.resident.fetch_sub(entry.bytes, Ordering::AcqRel);
+                s.warm.fetch_sub(entry.bytes, Ordering::AcqRel);
+            }
+            Resident::Cold => {
+                s.cold.fetch_sub(entry.spill_bytes, Ordering::AcqRel);
+            }
+        }
+        if entry.spill_bytes > 0 {
+            if let Some(policy) = &self.tiering {
+                let _ = std::fs::remove_file(tier::spill_path(&policy.spill_dir, id));
+            }
+        }
+        match entry.resident {
+            Resident::Hot(ctx) => Some(ctx),
+            _ => None,
+        }
     }
 
     /// Least-recently-used victims that must leave `shard` to bring
@@ -166,7 +524,8 @@ impl ContextStore {
     /// admittable. The caller retires each victim (dispatching its
     /// already-admitted queries first) and then calls
     /// [`ContextStore::remove`]; until it does, the shard is
-    /// transiently over budget.
+    /// transiently over budget. Legacy (non-tiered) budget
+    /// enforcement; tiered stores use [`ContextStore::rebalance`].
     pub fn over_budget_victims(&self, shard: usize, protect: ContextId) -> Vec<ContextId> {
         let Some(budget) = self.per_shard_budget else {
             return Vec::new();
@@ -194,11 +553,36 @@ impl ContextStore {
     }
 }
 
+/// The least-recently-used entry currently in `tier`, skipping
+/// `protect` and `skip` (failed spill writes). Ties break by id for
+/// determinism.
+fn lru_in_tier(
+    entries: &HashMap<ContextId, Entry>,
+    tier: Tier,
+    protect: ContextId,
+    skip: &[ContextId],
+) -> Option<ContextId> {
+    let mut best: Option<(u64, ContextId)> = None;
+    for (&id, e) in entries.iter() {
+        if id == protect || skip.contains(&id) || e.tier() != tier {
+            continue;
+        }
+        let better = match best {
+            None => true,
+            Some(b) => (e.last_used, id) < b,
+        };
+        if better {
+            best = Some((e.last_used, id));
+        }
+    }
+    best.map(|(_, id)| id)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::attention::KvPair;
-    use crate::testutil::Rng;
+    use crate::testutil::{Rng, TempDir};
 
     fn ctx(id: ContextId, n: usize, d: usize) -> KvContext {
         let mut rng = Rng::new(id as u64 + 1);
@@ -310,5 +694,205 @@ mod tests {
         assert_eq!(store.over_budget_victims(0, 2), vec![1]);
         assert_eq!(store.len(), 3);
         assert!(!store.is_empty());
+    }
+
+    // ---- tiered mode ----
+
+    /// A 1-shard tiered store whose budget fits `fit` 16×8 contexts,
+    /// hot watermark at half the budget.
+    fn tiered_store(dir: &TempDir, fit: usize) -> ContextStore {
+        let bytes = ctx(0, 16, 8).resident_bytes();
+        let mut policy = TierPolicy::new(dir.path());
+        policy.warm_watermark = 0.5;
+        policy.cold_watermark = 1.0;
+        ContextStore::with_tiering(1, Some(fit * bytes), policy)
+    }
+
+    #[test]
+    fn eviction_becomes_demotion_under_pressure() {
+        let dir = TempDir::new("store-demote");
+        let store = tiered_store(&dir, 4); // warm mark = 2 contexts
+        for id in 0..4 {
+            admit(&store, ctx(id, 16, 8));
+            assert!(store.rebalance(0, id).is_empty(), "spill writes must succeed");
+        }
+        // LRU pressure pushed older contexts down the hierarchy; the
+        // newest stays hot and nothing was ever lost
+        assert_eq!(store.len(), 4, "demotion never removes entries");
+        assert_eq!(store.tier_of(0, 3), Some(Tier::Hot));
+        let stats = store.tier_stats();
+        assert!(stats.demotions_warm >= 2, "demotions_warm = {}", stats.demotions_warm);
+        assert!(stats.hot_bytes > 0 && stats.warm_bytes > 0);
+        assert_eq!(stats.spill_failures, 0);
+        // every non-hot context still serves exactly
+        for id in 0..3 {
+            assert_ne!(store.tier_of(0, id), None);
+            let back = store.fetch_exact(0, id, false).unwrap();
+            assert_eq!(back.kv.key, ctx(id, 16, 8).kv.key, "context {id}");
+        }
+    }
+
+    #[test]
+    fn hot_warm_cold_round_trip_is_bit_identical() {
+        let dir = TempDir::new("store-roundtrip");
+        let store = tiered_store(&dir, 2);
+        let original = ctx(5, 16, 8);
+        let (okey, ovalue) = (original.kv.key.clone(), original.kv.value.clone());
+        admit(&store, original);
+        // pile on until 5 has been demoted all the way to cold
+        let mut id = 10;
+        while store.tier_of(0, 5) != Some(Tier::Cold) {
+            admit(&store, ctx(id, 16, 8));
+            assert!(store.rebalance(0, id).is_empty());
+            id += 1;
+            assert!(id < 40, "context 5 never reached cold");
+        }
+        let stats = store.tier_stats();
+        assert!(stats.demotions_cold > 0);
+        assert!(stats.cold_bytes > 0);
+        // promotion restores the exact f32 bits (checksummed spill)
+        let back = store.fetch_exact(0, 5, true).unwrap();
+        assert_eq!(back.kv.key, okey);
+        assert_eq!(back.kv.value, ovalue);
+        assert!(back.sorted_ready(), "prewarm_sorted requested on promotion");
+        assert_eq!(store.tier_of(0, 5), Some(Tier::Hot));
+        let stats = store.tier_stats();
+        assert_eq!(stats.promotions, 1);
+        assert_eq!(stats.cold_readmissions, 1);
+    }
+
+    #[test]
+    fn warm_serve_hands_out_the_quantized_resident_form() {
+        let dir = TempDir::new("store-warmserve");
+        let store = tiered_store(&dir, 4);
+        let c5 = ctx(5, 16, 8);
+        let kv5 = (*c5.kv).clone();
+        admit(&store, c5);
+        admit(&store, ctx(6, 16, 8));
+        admit(&store, ctx(7, 16, 8));
+        assert!(store.rebalance(0, 7).is_empty());
+        assert_eq!(store.tier_of(0, 5), Some(Tier::Warm), "LRU context demoted");
+        let WarmServe::Warm(q) = store.fetch_warm(0, 5).unwrap() else {
+            panic!("warm context must serve in place");
+        };
+        // the resident form IS QuantKv::new of the original planes
+        let oracle = QuantKv::new(&kv5, store.tiering().unwrap().warm_fmt);
+        assert_eq!(q.kq, oracle.kq);
+        assert_eq!(q.vq, oracle.vq);
+        assert_eq!(store.tier_stats().warm_serves, 1);
+        // a hot context comes back hot, uncounted
+        let WarmServe::Hot(_) = store.fetch_warm(0, 7).unwrap() else {
+            panic!("hot context must stay on the f32 path");
+        };
+        assert_eq!(store.tier_stats().warm_serves, 1);
+    }
+
+    #[test]
+    fn cold_readmits_straight_to_warm_for_quantized_serving() {
+        let dir = TempDir::new("store-coldwarm");
+        let store = tiered_store(&dir, 2);
+        admit(&store, ctx(1, 16, 8));
+        let mut id = 10;
+        while store.tier_of(0, 1) != Some(Tier::Cold) {
+            admit(&store, ctx(id, 16, 8));
+            assert!(store.rebalance(0, id).is_empty());
+            id += 1;
+            assert!(id < 40, "context 1 never reached cold");
+        }
+        let WarmServe::Warm(q) = store.fetch_warm(0, 1).unwrap() else {
+            panic!("cold context must re-admit to warm");
+        };
+        let kv1 = (*ctx(1, 16, 8).kv).clone();
+        let oracle = QuantKv::new(&kv1, store.tiering().unwrap().warm_fmt);
+        assert_eq!(q.kq, oracle.kq, "spill round trip preserves the quantization");
+        assert_eq!(store.tier_of(0, 1), Some(Tier::Warm));
+        let stats = store.tier_stats();
+        assert_eq!(stats.cold_readmissions, 1);
+        assert_eq!(stats.warm_serves, 1);
+    }
+
+    #[test]
+    fn prewarm_readmits_cold_without_counting_a_serve() {
+        let dir = TempDir::new("store-prewarm");
+        let store = tiered_store(&dir, 2);
+        admit(&store, ctx(1, 16, 8));
+        let mut id = 10;
+        while store.tier_of(0, 1) != Some(Tier::Cold) {
+            admit(&store, ctx(id, 16, 8));
+            assert!(store.rebalance(0, id).is_empty());
+            id += 1;
+            assert!(id < 40, "context 1 never reached cold");
+        }
+        store.prewarm_cold(0, 1).unwrap();
+        assert_eq!(store.tier_of(0, 1), Some(Tier::Warm));
+        let stats = store.tier_stats();
+        assert_eq!(stats.cold_readmissions, 1);
+        assert_eq!(stats.warm_serves, 0, "a prefetch is not a serve");
+        // idempotent: already-warm (and unknown) ids are no-ops
+        store.prewarm_cold(0, 1).unwrap();
+        store.prewarm_cold(0, 999).unwrap();
+        assert_eq!(store.tier_stats().cold_readmissions, 1);
+    }
+
+    #[test]
+    fn corrupt_and_missing_spill_files_surface_typed_errors() {
+        let dir = TempDir::new("store-corrupt");
+        let store = tiered_store(&dir, 2);
+        admit(&store, ctx(1, 16, 8));
+        let mut id = 10;
+        while store.tier_of(0, 1) != Some(Tier::Cold) {
+            admit(&store, ctx(id, 16, 8));
+            assert!(store.rebalance(0, id).is_empty());
+            id += 1;
+            assert!(id < 40);
+        }
+        let path = tier::spill_path(dir.path(), 1);
+        let mut raw = std::fs::read(&path).unwrap();
+        let mid = raw.len() / 2;
+        raw[mid] ^= 0x01;
+        std::fs::write(&path, &raw).unwrap();
+        assert!(matches!(
+            store.fetch_exact(0, 1, false),
+            Err(A3Error::SpillCorrupt { context: 1, .. })
+        ));
+        assert!(matches!(
+            store.fetch_warm(0, 1),
+            Err(A3Error::SpillCorrupt { context: 1, .. })
+        ));
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(store.fetch_exact(0, 1, false).unwrap_err(), A3Error::ContextEvicted(1));
+        // the entry survives the failed fetches: a fixed file serves
+        assert_eq!(store.tier_of(0, 1), Some(Tier::Cold));
+    }
+
+    #[test]
+    fn remove_deletes_the_spill_file() {
+        let dir = TempDir::new("store-removespill");
+        let store = tiered_store(&dir, 2);
+        admit(&store, ctx(1, 16, 8));
+        admit(&store, ctx(2, 16, 8));
+        admit(&store, ctx(3, 16, 8));
+        assert!(store.rebalance(0, 3).is_empty());
+        let path = tier::spill_path(dir.path(), 1);
+        assert!(path.exists(), "demotion wrote the spill file");
+        assert!(store.remove(0, 1).is_none(), "demoted entries yield no hot context");
+        assert!(!store.contains(0, 1));
+        assert!(!path.exists(), "remove cleans up the spill file");
+    }
+
+    #[test]
+    fn legacy_store_never_tiers() {
+        let bytes = ctx(0, 16, 8).resident_bytes();
+        let store = ContextStore::new(1, Some(bytes));
+        admit(&store, ctx(0, 16, 8));
+        admit(&store, ctx(1, 16, 8));
+        assert!(!store.tiered());
+        assert!(store.rebalance(0, 1).is_empty(), "rebalance is a no-op without a policy");
+        assert_eq!(store.tier_of(0, 0), Some(Tier::Hot));
+        let stats = store.tier_stats();
+        assert_eq!(stats.warm_bytes, 0);
+        assert_eq!(stats.cold_bytes, 0);
+        assert_eq!(stats.demotions_warm, 0);
+        assert!(stats.hot_bytes > 0);
     }
 }

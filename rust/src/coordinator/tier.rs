@@ -1,0 +1,320 @@
+//! `coordinator::tier` — the hot/warm/cold memory-hierarchy policy
+//! behind the tiered [`super::ContextStore`].
+//!
+//! The A³ paper quantizes key matrices **once at comprehension time**
+//! so query-time search runs over a cheaper representation (§III-C).
+//! This module turns that into a software memory hierarchy for the
+//! serving store:
+//!
+//! * **hot** — f32 K/V plus the sorted-key cache: exactly today's
+//!   resident form, servable by every backend;
+//! * **warm** — the context's [`crate::attention::QuantKv`]: the
+//!   fixed-point serving representation itself, held resident instead
+//!   of the f32 planes. Quantized backends serve a warm context **in
+//!   place** (no re-hydration — see
+//!   [`crate::model::AttentionBackend::warm_servable`]); exact and
+//!   selective backends trigger promotion back to hot;
+//! * **cold** — nothing resident: the context lives only in its
+//!   checksummed spill file under the configured spill directory,
+//!   re-admitted on demand (to warm for quantized serving, to hot for
+//!   exact serving) and prefetched by the engine's background prewarm
+//!   thread.
+//!
+//! Demotion is driven by the store's existing LRU clock and per-shard
+//! budget accounting: **eviction becomes demotion**. Every hot→warm
+//! demotion first writes the f32 planes to a checksummed spill file
+//! ([`crate::tensorio::write_tensors_checksummed`]), so a later
+//! warm→cold demotion is just dropping the resident bytes, and a
+//! promotion re-reads the exact f32 bits (little-endian f32 round
+//! trips losslessly — re-hydrated exact serving is bit-identical).
+//! [`crate::api::A3Error::ContextEvicted`] only fires when a cold
+//! context's spill file is *gone*; a file that is present but fails
+//! its integrity check surfaces as the typed
+//! [`crate::api::A3Error::SpillCorrupt`] instead of silently wrong
+//! outputs.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::api::A3Error;
+use crate::attention::KvPair;
+use crate::fixedpoint::QFormat;
+use crate::tensorio::{read_tensors_checksummed, write_tensors_checksummed, Tensor, Tensors};
+
+use super::request::ContextId;
+
+/// Which resident form a context currently occupies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Tier {
+    /// f32 K/V (+ sorted-key cache): servable by every backend.
+    Hot,
+    /// Quantized-resident ([`crate::attention::QuantKv`]): servable in
+    /// place by quantized backends, promoted for everyone else.
+    Warm,
+    /// On disk only (checksummed spill file), re-admitted on demand.
+    Cold,
+}
+
+impl Tier {
+    pub fn label(self) -> &'static str {
+        match self {
+            Tier::Hot => "hot",
+            Tier::Warm => "warm",
+            Tier::Cold => "cold",
+        }
+    }
+}
+
+impl std::fmt::Display for Tier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Tiering knobs. Constructed by
+/// [`crate::api::EngineBuilder::spill_dir`] (tiering is opt-in: a
+/// store built without a policy keeps the legacy evict-to-nothing
+/// behavior bit-for-bit).
+#[derive(Clone, Debug)]
+pub struct TierPolicy {
+    /// Directory for cold spill files (one `ctx-{id}.a3tn` per
+    /// spilled context).
+    pub spill_dir: PathBuf,
+    /// Fraction of the per-shard budget the **hot** tier may occupy
+    /// before LRU hot contexts demote to warm. Default 0.6.
+    pub warm_watermark: f64,
+    /// Fraction of the per-shard budget the hot **plus** warm tiers
+    /// may occupy before LRU warm contexts demote to cold. Default
+    /// 1.0 (the budget itself).
+    pub cold_watermark: f64,
+    /// Quantization format for warm residents. Must match the serving
+    /// backend's [`crate::model::AttentionBackend::warm_format`] for
+    /// the in-place warm-serve path; the engine wires this
+    /// automatically.
+    pub warm_fmt: QFormat,
+}
+
+impl TierPolicy {
+    /// Default hot-tier share of the per-shard budget.
+    pub const DEFAULT_WARM_WATERMARK: f64 = 0.6;
+    /// Default hot+warm share of the per-shard budget (the budget
+    /// itself).
+    pub const DEFAULT_COLD_WATERMARK: f64 = 1.0;
+
+    pub fn new(spill_dir: impl Into<PathBuf>) -> Self {
+        TierPolicy {
+            spill_dir: spill_dir.into(),
+            warm_watermark: Self::DEFAULT_WARM_WATERMARK,
+            cold_watermark: Self::DEFAULT_COLD_WATERMARK,
+            warm_fmt: QFormat::PAPER_INPUT,
+        }
+    }
+
+    /// Watermarks must satisfy `0 < warm ≤ cold` and be finite; the
+    /// cold watermark may exceed 1.0 (a deliberate soft budget).
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, v) in [("warm", self.warm_watermark), ("cold", self.cold_watermark)] {
+            if !v.is_finite() || v <= 0.0 {
+                return Err(format!("{name} watermark must be a positive finite fraction, got {v}"));
+            }
+        }
+        if self.warm_watermark > self.cold_watermark {
+            return Err(format!(
+                "warm watermark ({}) must not exceed the cold watermark ({})",
+                self.warm_watermark, self.cold_watermark
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Monotonic tier-transition counters (atomics — shared by shard
+/// workers, the prewarm thread, and stats readers).
+#[derive(Debug, Default)]
+pub struct TierCounters {
+    /// hot → warm demotions.
+    pub demotions_warm: AtomicU64,
+    /// warm → cold demotions (resident bytes dropped; file on disk).
+    pub demotions_cold: AtomicU64,
+    /// Promotions back to hot (exact-backend demand).
+    pub promotions: AtomicU64,
+    /// Cold contexts re-admitted from their spill file (to warm or
+    /// hot).
+    pub cold_readmissions: AtomicU64,
+    /// Queries served straight from a warm (quantized-resident)
+    /// context, no re-hydration.
+    pub warm_serves: AtomicU64,
+    /// Spill-file writes that failed during demotion: the victim falls
+    /// back to a legacy hard eviction instead of silently losing data.
+    pub spill_failures: AtomicU64,
+}
+
+impl TierCounters {
+    pub fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// One coherent snapshot of the tier hierarchy: per-tier resident
+/// bytes plus the transition counters. Reported through
+/// [`crate::api::EngineStats`] and the wire Stats frame.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TierStats {
+    /// f32-resident bytes (K/V + sorted caches) of hot contexts.
+    pub hot_bytes: u64,
+    /// Quantized-resident bytes.
+    pub warm_bytes: u64,
+    /// On-disk spill bytes of contexts currently cold.
+    pub cold_bytes: u64,
+    pub demotions_warm: u64,
+    pub demotions_cold: u64,
+    pub promotions: u64,
+    pub cold_readmissions: u64,
+    pub warm_serves: u64,
+    pub spill_failures: u64,
+}
+
+/// The spill file for context `id` under `dir`.
+pub fn spill_path(dir: &Path, id: ContextId) -> PathBuf {
+    dir.join(format!("ctx-{id}.a3tn"))
+}
+
+/// Write a context's f32 K/V planes to its checksummed spill file,
+/// creating the spill directory on first use. Returns the bytes on
+/// disk. Contexts are immutable, so this happens at most once per
+/// context lifetime (the first hot→warm demotion); a torn write is
+/// caught by the checksum on re-admission, not trusted.
+pub fn write_spill(dir: &Path, id: ContextId, kv: &KvPair) -> anyhow::Result<u64> {
+    std::fs::create_dir_all(dir)?;
+    let mut t = Tensors::new();
+    t.insert(
+        "key".into(),
+        Tensor::F32 { shape: vec![kv.n, kv.d], data: kv.key.clone() },
+    );
+    t.insert(
+        "value".into(),
+        Tensor::F32 { shape: vec![kv.n, kv.d], data: kv.value.clone() },
+    );
+    write_tensors_checksummed(spill_path(dir, id), &t)
+}
+
+/// Re-admit a spilled context: read + integrity-check + rebuild the
+/// exact f32 [`KvPair`] (bit-identical to what was spilled — the
+/// container stores raw little-endian f32).
+///
+/// * missing file → [`A3Error::ContextEvicted`] (the only way a
+///   tiered store truly loses a context);
+/// * checksum/parse/shape failure → [`A3Error::SpillCorrupt`].
+pub fn read_spill(dir: &Path, id: ContextId, n: usize, d: usize) -> Result<KvPair, A3Error> {
+    let path = spill_path(dir, id);
+    if !path.exists() {
+        return Err(A3Error::ContextEvicted(id));
+    }
+    let corrupt = |detail: String| A3Error::SpillCorrupt { context: id, detail };
+    let t = read_tensors_checksummed(&path).map_err(|e| corrupt(e.to_string()))?;
+    let take = |name: &str| -> Result<Vec<f32>, A3Error> {
+        let tensor = t
+            .get(name)
+            .ok_or_else(|| corrupt(format!("missing tensor {name:?}")))?;
+        if tensor.shape() != [n, d] {
+            return Err(corrupt(format!(
+                "{name} shape {:?} does not match the registered {n}x{d}",
+                tensor.shape()
+            )));
+        }
+        Ok(tensor
+            .as_f32()
+            .map_err(|e| corrupt(e.to_string()))?
+            .to_vec())
+    };
+    let key = take("key")?;
+    let value = take("value")?;
+    Ok(KvPair::new(n, d, key, value))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{Rng, TempDir};
+
+    fn kv(seed: u64, n: usize, d: usize) -> KvPair {
+        let mut rng = Rng::new(seed);
+        KvPair::new(n, d, rng.normal_vec(n * d, 1.0), rng.normal_vec(n * d, 1.0))
+    }
+
+    #[test]
+    fn spill_round_trip_is_bit_exact() {
+        let dir = TempDir::new("tier-roundtrip");
+        let original = kv(3, 24, 8);
+        write_spill(dir.path(), 7, &original).unwrap();
+        let back = read_spill(dir.path(), 7, 24, 8).unwrap();
+        // f32 LE bytes round-trip losslessly: exact equality, not close
+        assert_eq!(back.key, original.key);
+        assert_eq!(back.value, original.value);
+        assert_eq!((back.n, back.d), (24, 8));
+    }
+
+    #[test]
+    fn missing_spill_file_is_context_evicted() {
+        let dir = TempDir::new("tier-missing");
+        assert_eq!(
+            read_spill(dir.path(), 42, 8, 4).unwrap_err(),
+            A3Error::ContextEvicted(42)
+        );
+    }
+
+    #[test]
+    fn corrupt_spill_file_is_typed_spill_corrupt() {
+        let dir = TempDir::new("tier-corrupt");
+        let original = kv(5, 8, 4);
+        write_spill(dir.path(), 9, &original).unwrap();
+        let path = spill_path(dir.path(), 9);
+        let mut raw = std::fs::read(&path).unwrap();
+        let mid = raw.len() / 2;
+        raw[mid] ^= 0x40;
+        std::fs::write(&path, &raw).unwrap();
+        match read_spill(dir.path(), 9, 8, 4).unwrap_err() {
+            A3Error::SpillCorrupt { context: 9, detail } => {
+                assert!(detail.contains("checksum"), "detail: {detail}");
+            }
+            other => panic!("expected SpillCorrupt, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dim_skew_is_spill_corrupt_not_wrong_math() {
+        let dir = TempDir::new("tier-dims");
+        write_spill(dir.path(), 1, &kv(6, 8, 4)).unwrap();
+        // registered dims disagree with the file: typed error
+        assert!(matches!(
+            read_spill(dir.path(), 1, 16, 4).unwrap_err(),
+            A3Error::SpillCorrupt { context: 1, .. }
+        ));
+    }
+
+    #[test]
+    fn policy_validation_rejects_bad_watermarks() {
+        let good = TierPolicy::new("/tmp/spill");
+        assert!(good.validate().is_ok());
+        assert_eq!(good.warm_watermark, 0.6);
+        assert_eq!(good.cold_watermark, 1.0);
+        let mut p = TierPolicy::new("/tmp/spill");
+        p.warm_watermark = 0.0;
+        assert!(p.validate().is_err());
+        let mut p = TierPolicy::new("/tmp/spill");
+        p.cold_watermark = f64::NAN;
+        assert!(p.validate().is_err());
+        let mut p = TierPolicy::new("/tmp/spill");
+        p.warm_watermark = 0.9;
+        p.cold_watermark = 0.5;
+        assert!(p.validate().is_err(), "warm above cold must be rejected");
+    }
+
+    #[test]
+    fn tier_labels_are_stable() {
+        // stats printers and CI greps key on these exact strings
+        assert_eq!(Tier::Hot.to_string(), "hot");
+        assert_eq!(Tier::Warm.to_string(), "warm");
+        assert_eq!(Tier::Cold.to_string(), "cold");
+    }
+}

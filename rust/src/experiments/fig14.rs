@@ -221,6 +221,96 @@ pub fn run_shard_sweep(queries: usize, contexts: usize) -> Result<Table> {
     Ok(t)
 }
 
+/// Fig. 14e (ISSUE 8): the tiered context store under budget
+/// pressure. A quantized-unit engine serves the same open-throttle
+/// stream through the TCP front door four ways: unbudgeted (everything
+/// stays hot), then with a memory budget of one third of the context
+/// footprint under three access-popularity models. Uniform round-robin
+/// is the worst case for an LRU hierarchy (every context is always the
+/// coldest when its turn comes back); Zipfian and hotspot skew keep a
+/// hot set resident so most queries are served straight from memory —
+/// the paper's quantize-at-comprehension-time storage story (§III-C)
+/// extended into a serving-time hierarchy. The tier columns come from
+/// [`crate::api::Engine::tier_stats`]; warm serves are queries
+/// answered from the quantized-resident form with no re-hydration.
+pub fn run_tier_sweep(queries: usize, contexts: usize) -> Result<Table> {
+    use crate::net::{run_loadgen, LoadPlan, NetServer, Popularity};
+    let (n, d) = (crate::PAPER_N, crate::PAPER_D);
+    let contexts = contexts.max(3);
+    let ctx_bytes = 2 * n * d * std::mem::size_of::<f32>();
+    let budget_bytes = contexts * ctx_bytes / 3;
+    let mut t = Table::new(
+        format!(
+            "Fig. 14e — tiered serving under budget pressure, {queries} queries over \
+             {contexts} contexts (footprint {} KiB, budget {} KiB, quantized units)",
+            contexts * ctx_bytes / 1024,
+            budget_bytes / 1024,
+        ),
+        &[
+            "popularity",
+            "budget",
+            "host qps (wall)",
+            "p99 latency",
+            "warm serves",
+            "cold readmits",
+            "hot/warm/cold KiB",
+        ],
+    );
+    let cases: [(&str, Option<usize>, Popularity); 4] = [
+        ("uniform", None, Popularity::Uniform),
+        ("uniform", Some(budget_bytes), Popularity::Uniform),
+        ("zipf(s=1)", Some(budget_bytes), Popularity::Zipf { s: 1.0 }),
+        (
+            "hotspot(25% x9)",
+            Some(budget_bytes),
+            Popularity::Hotspot { hot_fraction: 0.25, hot_weight: 9.0 },
+        ),
+    ];
+    for (label, cap, popularity) in cases {
+        let spill = crate::testutil::TempDir::new("fig14-tier");
+        let mut builder = EngineBuilder::new()
+            .units(2)
+            .backend(AttentionBackend::Quantized)
+            .dims(Dims::paper())
+            .max_batch(8);
+        if let Some(cap) = cap {
+            builder = builder.memory_budget(cap).spill_dir(spill.path());
+        }
+        let engine = std::sync::Arc::new(builder.build()?);
+        let server = NetServer::bind(std::sync::Arc::clone(&engine), "127.0.0.1:0")?;
+        let plan = LoadPlan {
+            connections: 1,
+            queries,
+            contexts_per_conn: contexts,
+            n,
+            d,
+            qps: None,
+            seed: 7,
+            window: 64,
+            popularity,
+        };
+        let report = run_loadgen(server.local_addr(), plan)?;
+        let snap = report.metrics.report();
+        let tiers = engine.tier_stats();
+        t.row(vec![
+            label.into(),
+            cap.map_or("none".into(), |b| format!("{} KiB", b / 1024)),
+            fmt_f(report.wall_qps(), 0),
+            format!("{:.1} µs", snap.p99_ns as f64 / 1e3),
+            tiers.warm_serves.to_string(),
+            tiers.cold_readmissions.to_string(),
+            format!(
+                "{}/{}/{}",
+                tiers.hot_bytes / 1024,
+                tiers.warm_bytes / 1024,
+                tiers.cold_bytes / 1024
+            ),
+        ]);
+        drop(server); // joins the handler threads before the spill dir goes
+    }
+    Ok(t)
+}
+
 /// One transport row for the socket-overhead table.
 fn transport_row(t: &mut Table, transport: &str, report: &ServeReport) {
     let snap = report.metrics.report();
@@ -296,6 +386,7 @@ pub fn run_socket_overhead(queries: usize, contexts: usize) -> Result<Table> {
             qps: None,
             seed: 7,
             window: 64,
+            popularity: crate::net::Popularity::Uniform,
         };
         let report = crate::net::run_loadgen(server.local_addr(), plan)?;
         transport_row(&mut t, &format!("loopback TCP x{connections} conn"), &report);

@@ -42,8 +42,10 @@
 //!   `pjrt` cargo feature and the external `xla` bindings).
 //! * [`coordinator`] — the serving internals: query queues, batching,
 //!   multi-unit scheduling, metrics, and the sharded memory-accounted
-//!   [`coordinator::ContextStore`]. Drive them through [`api`], not
-//!   directly.
+//!   [`coordinator::ContextStore`] — optionally a hot/warm/cold
+//!   memory hierarchy with quantized-resident warm contexts and
+//!   checksummed disk spill ([`coordinator::tier`]). Drive them
+//!   through [`api`], not directly.
 //! * [`api`] — the public serving facade: `EngineBuilder` → sharded
 //!   `Engine` → `ContextHandle`/`Ticket`, with the crate-wide typed
 //!   [`api::A3Error`]. The one sanctioned way to serve queries.

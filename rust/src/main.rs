@@ -31,8 +31,13 @@ COMMANDS (paper artifacts):
 COMMANDS (system):
     serve           run the serving engine on a synthetic stream
                     [--units N] [--shards N] [--memory-budget BYTES]
-                    [--approx] [--queries N] [--n N] [--contexts N]
-                    [--seed N] [--max-batch N] [--qps F]
+                    [--approx] [--quantized] [--queries N] [--n N]
+                    [--contexts N] [--seed N] [--max-batch N] [--qps F]
+                    [--spill-dir DIR] [--warm-watermark F]
+                    [--cold-watermark F] (with --spill-dir and a
+                    --memory-budget, the context store becomes a
+                    hot/warm/cold tier hierarchy spilling to DIR;
+                    per-tier stats are printed after the run)
                     [--listen ADDR] (unknown serve flags are an error)
                     With --listen, serve the engine over TCP instead:
                     bind ADDR (port 0 = ephemeral; the bound address is
@@ -42,6 +47,10 @@ COMMANDS (system):
                     --connect ADDR [--queries N] [--connections N]
                     [--contexts N] [--n N] [--qps F] [--seed N]
                     [--window N] [--shutdown]
+                    [--popularity uniform|zipf:S|hotspot:F,W]
+                    (access skew across each connection's contexts:
+                    zipf:1.0 is web-like, hotspot:0.25,9 gives the
+                    first quarter of contexts 9x the draw weight)
     bench           print the detected kernel plan (plane, vector
                     features, tile geometry); with --json, time the
                     kernel hot paths on every available plane (scalar
@@ -83,9 +92,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let mut n = a3::PAPER_N;
     let mut seed: Option<u64> = None;
     let mut approx = false;
+    let mut quantized = false;
     let mut max_batch: Option<usize> = None;
     let mut qps: Option<f64> = None;
     let mut listen: Option<String> = None;
+    let mut spill_dir: Option<String> = None;
+    let mut warm_watermark: Option<f64> = None;
+    let mut cold_watermark: Option<f64> = None;
     let mut i = 1; // args[0] is the "serve" command itself
     while i < args.len() {
         let flag = args[i].clone();
@@ -94,12 +107,18 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             i += 1;
             continue;
         }
+        if flag == "--quantized" {
+            quantized = true;
+            i += 1;
+            continue;
+        }
         // reject unknown flags before demanding a value, so a trailing
         // `--bogus` reports "unknown flag", not "needs a value"
         if !matches!(
             flag.as_str(),
             "--units" | "--shards" | "--memory-budget" | "--queries" | "--contexts" | "--n"
-                | "--seed" | "--max-batch" | "--qps" | "--listen"
+                | "--seed" | "--max-batch" | "--qps" | "--listen" | "--spill-dir"
+                | "--warm-watermark" | "--cold-watermark"
         ) {
             bail!("serve: unknown flag {flag:?} (see `a3 --help`)");
         }
@@ -121,12 +140,21 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             "--max-batch" => max_batch = Some(value.parse().map_err(|e| invalid(&e))?),
             "--qps" => qps = Some(value.parse().map_err(|e| invalid(&e))?),
             "--listen" => listen = Some(value.clone()),
+            "--spill-dir" => spill_dir = Some(value.clone()),
+            "--warm-watermark" => warm_watermark = Some(value.parse().map_err(|e| invalid(&e))?),
+            "--cold-watermark" => cold_watermark = Some(value.parse().map_err(|e| invalid(&e))?),
             _ => unreachable!("known flags matched above"),
         }
         i += 2;
     }
     if contexts == 0 {
         bail!("serve: --contexts must be >= 1");
+    }
+    if approx && quantized {
+        bail!("serve: --approx and --quantized are mutually exclusive");
+    }
+    if spill_dir.is_none() && (warm_watermark.is_some() || cold_watermark.is_some()) {
+        bail!("serve: --warm-watermark/--cold-watermark only apply with --spill-dir");
     }
     // the strict-parsing promise: flags that only drive the in-process
     // synthetic stream must not be silently ignored under --listen
@@ -141,6 +169,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
 
     let backend = if approx {
         AttentionBackend::conservative()
+    } else if quantized {
+        AttentionBackend::Quantized
     } else {
         AttentionBackend::Exact
     };
@@ -159,8 +189,24 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     if let Some(q) = qps {
         builder = builder.arrival_qps(q);
     }
+    if let Some(dir) = &spill_dir {
+        builder = builder.spill_dir(dir);
+    }
+    if let Some(w) = warm_watermark {
+        builder = builder.warm_watermark(w);
+    }
+    if let Some(c) = cold_watermark {
+        builder = builder.cold_watermark(c);
+    }
     let engine = builder.build()?;
 
+    let backend_label = if approx {
+        "approximate"
+    } else if quantized {
+        "quantized"
+    } else {
+        "base"
+    };
     // comprehension time: stage the synthetic knowledge bases (spread
     // across shards by the least-loaded-by-bytes placement)
     let mut rng = Rng::new(1);
@@ -183,7 +229,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             a3::net::WIRE_VERSION,
             handles.len(),
             handles.len(),
-            if approx { "approximate" } else { "base" },
+            backend_label,
         );
         // scripts parse the bound address from the line above
         use std::io::Write as _;
@@ -193,13 +239,14 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         for (conn, report) in server.connection_reports() {
             println!("  conn {conn}: {}", report.summary());
         }
+        print_tier_stats(&engine);
         return Ok(());
     }
 
     println!(
         "serving {queries} queries (n={n}, d={d}, seed={seed}) over {contexts} context(s) on \
          {units} {} unit(s) across {shards} shard(s) ({} resident context bytes{})...",
-        if approx { "approximate" } else { "base" },
+        backend_label,
         engine.resident_bytes(),
         match engine.per_shard_memory_budget() {
             Some(b) => format!(", budget {b} B/shard"),
@@ -217,7 +264,31 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         report.sim_makespan,
         report.sim_throughput_qps()
     );
+    print_tier_stats(&engine);
     Ok(())
+}
+
+/// Per-tier residency and transition counters, printed after a tiered
+/// serve run (the CI tier smoke greps these lines).
+fn print_tier_stats(engine: &a3::api::Engine) {
+    if !engine.tiered() {
+        return;
+    }
+    let t = engine.tier_stats();
+    println!(
+        "tiers  : resident hot {} B / warm {} B / cold {} B (spilled)",
+        t.hot_bytes, t.warm_bytes, t.cold_bytes
+    );
+    println!(
+        "tiers  : {} demotion(s) to warm, {} to cold; {} promotion(s), \
+         {} cold readmission(s), {} warm serve(s), {} spill failure(s)",
+        t.demotions_warm,
+        t.demotions_cold,
+        t.promotions,
+        t.cold_readmissions,
+        t.warm_serves,
+        t.spill_failures
+    );
 }
 
 fn cmd_client(args: &[String]) -> Result<()> {
@@ -230,6 +301,7 @@ fn cmd_client(args: &[String]) -> Result<()> {
     let mut seed = 0xA3u64;
     let mut window = 64usize;
     let mut shutdown = false;
+    let mut popularity = a3::net::Popularity::Uniform;
     let mut i = 1; // args[0] is the "client" command itself
     while i < args.len() {
         let flag = args[i].clone();
@@ -241,7 +313,7 @@ fn cmd_client(args: &[String]) -> Result<()> {
         if !matches!(
             flag.as_str(),
             "--connect" | "--queries" | "--connections" | "--contexts" | "--n" | "--qps"
-                | "--seed" | "--window"
+                | "--seed" | "--window" | "--popularity"
         ) {
             bail!("client: unknown flag {flag:?} (see `a3 --help`)");
         }
@@ -261,6 +333,7 @@ fn cmd_client(args: &[String]) -> Result<()> {
             "--qps" => qps = Some(value.parse().map_err(|e| invalid(&e))?),
             "--seed" => seed = value.parse().map_err(|e| invalid(&e))?,
             "--window" => window = value.parse().map_err(|e| invalid(&e))?,
+            "--popularity" => popularity = parse_popularity(value).map_err(|e| invalid(&e))?,
             _ => unreachable!("known flags matched above"),
         }
         i += 2;
@@ -280,10 +353,11 @@ fn cmd_client(args: &[String]) -> Result<()> {
         qps,
         seed,
         window,
+        popularity,
     };
     println!(
         "driving {addr}: {queries} queries over {connections} connection(s), \
-         {contexts} context(s)/connection (n={n}, seed={seed}{})",
+         {contexts} context(s)/connection (n={n}, seed={seed}, popularity {popularity:?}{})",
         match qps {
             Some(q) => format!(", paced {q} queries/s total"),
             None => ", open throttle".into(),
@@ -302,6 +376,28 @@ fn cmd_client(args: &[String]) -> Result<()> {
         println!("sent shutdown");
     }
     Ok(())
+}
+
+/// `--popularity` grammar: `uniform`, `zipf:S` (Zipf exponent), or
+/// `hotspot:FRACTION,WEIGHT` (hot-set size × per-context weight).
+fn parse_popularity(value: &str) -> std::result::Result<a3::net::Popularity, String> {
+    use a3::net::Popularity;
+    if value == "uniform" {
+        return Ok(Popularity::Uniform);
+    }
+    if let Some(s) = value.strip_prefix("zipf:") {
+        let s: f64 = s.parse().map_err(|e| format!("zipf exponent: {e}"))?;
+        return Ok(Popularity::Zipf { s });
+    }
+    if let Some(rest) = value.strip_prefix("hotspot:") {
+        let (f, w) = rest
+            .split_once(',')
+            .ok_or_else(|| "hotspot needs FRACTION,WEIGHT".to_string())?;
+        let hot_fraction: f64 = f.parse().map_err(|e| format!("hotspot fraction: {e}"))?;
+        let hot_weight: f64 = w.parse().map_err(|e| format!("hotspot weight: {e}"))?;
+        return Ok(Popularity::Hotspot { hot_fraction, hot_weight });
+    }
+    Err("expected uniform, zipf:S, or hotspot:FRACTION,WEIGHT".into())
 }
 
 fn cmd_bench(args: &[String]) -> Result<()> {
@@ -521,7 +617,8 @@ fn main() -> Result<()> {
             let (a, b) = fig14::run(budget)?;
             let c = fig14::run_shard_sweep(2048, 8)?;
             let d = fig14::run_socket_overhead(1024, 4)?;
-            println!("{a}\n{b}\n{c}\n{d}");
+            let e = fig14::run_tier_sweep(512, 9)?;
+            println!("{a}\n{b}\n{c}\n{d}\n{e}");
         }
         "fig15" => {
             let (a, b) = fig15::run(budget)?;

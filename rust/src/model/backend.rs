@@ -108,6 +108,75 @@ impl AttentionBackend {
         }
     }
 
+    /// Whether this backend can serve a *warm* (quantized-resident)
+    /// context in place, with no f32 re-hydration: true exactly for
+    /// the fixed-point variants, whose serving representation *is*
+    /// [`QuantKv`]. The tiered [`crate::coordinator::ContextStore`]
+    /// keys its serve-from-warm fast path on this — a backend that
+    /// returns `false` here (exact and the selective variants, which
+    /// need f32 K/V and the sorted cache) triggers promotion back to
+    /// the hot tier instead.
+    pub fn warm_servable(&self) -> bool {
+        self.quant_params().is_some()
+    }
+
+    /// The quantization format a warm-resident context must be stored
+    /// in for [`Self::try_run_batch_prequant_into`] to serve it
+    /// bit-identically to the hot path; `None` for backends that are
+    /// not [`Self::warm_servable`].
+    pub fn warm_format(&self) -> Option<QFormat> {
+        self.quant_params().map(|(fmt, _)| fmt)
+    }
+
+    /// Serve a row-major `b x d` query batch straight from a
+    /// pre-quantized K/V bank — the warm-tier dispatch path. Outputs
+    /// are bit-identical to [`Self::try_run_batch_into`] on the f32
+    /// original, because that path also quantizes once per batch with
+    /// the same format ([`QuantKv::new`] is deterministic); holding
+    /// the `QuantKv` resident just hoists the once-per-batch step to
+    /// once per context lifetime.
+    ///
+    /// Errors: [`A3Error::BackendMismatch`] when this backend is not
+    /// [`Self::warm_servable`] or `qkv.fmt` differs from
+    /// [`Self::warm_format`]; [`A3Error::DimensionMismatch`] for a
+    /// ragged flat batch.
+    pub fn try_run_batch_prequant_into(
+        &self,
+        qkv: &QuantKv,
+        queries: &[f32],
+        results: &mut Vec<(Vec<f32>, Vec<usize>)>,
+    ) -> Result<(), A3Error> {
+        let Some((fmt, lut)) = self.quant_params() else {
+            return Err(A3Error::BackendMismatch(format!(
+                "{} cannot serve a quantized-resident (warm) context",
+                self.label()
+            )));
+        };
+        if qkv.fmt != fmt {
+            return Err(A3Error::BackendMismatch(format!(
+                "warm context is quantized as {:?} but {} serves {:?}",
+                qkv.fmt,
+                self.label(),
+                fmt
+            )));
+        }
+        let d = qkv.d;
+        if queries.len() % d != 0 {
+            return Err(A3Error::DimensionMismatch { expected: d, got: queries.len() });
+        }
+        let b = queries.len() / d;
+        results.clear();
+        results.resize_with(b, Default::default);
+        let executors = if b * qkv.n * d < kernel::PARALLEL_MIN_MACS { 1 } else { 0 };
+        kernel::parallel_map_into(results, executors, |i, slot| {
+            let q = &queries[i * d..(i + 1) * d];
+            let mut out = vec![0.0f32; d];
+            kernel::with_workspace(|ws| quantized_attention_into(qkv, q, lut, ws, &mut out));
+            *slot = (out, (0..qkv.n).collect());
+        });
+        Ok(())
+    }
+
     /// Run this backend for one query.
     ///
     /// `sorted` contract: only backends with [`Self::needs_sorted`]
@@ -476,6 +545,53 @@ mod tests {
         let (got, got_sel) = backend.run(&kv, Some(&wrong), &q);
         assert_eq!(got, want);
         assert_eq!(got_sel, want_sel);
+    }
+
+    #[test]
+    fn warm_prequant_batch_bit_matches_the_hot_path() {
+        // the warm-serve contract: serving from a resident QuantKv is
+        // bit-identical to the hot path's per-batch quantization
+        let (kv, _) = problem(30, 64, 16);
+        let mut rng = Rng::new(31);
+        let queries = rng.normal_vec(8 * 16, 1.0);
+        for backend in [
+            AttentionBackend::Quantized,
+            AttentionBackend::QuantizedBits { i_bits: 3, f_bits: 5 },
+        ] {
+            assert!(backend.warm_servable());
+            let fmt = backend.warm_format().unwrap();
+            let qkv = QuantKv::new(&kv, fmt);
+            let mut warm = Vec::new();
+            backend.try_run_batch_prequant_into(&qkv, &queries, &mut warm).unwrap();
+            let hot = backend.try_run_batch(&kv, None, &queries).unwrap();
+            assert_eq!(warm, hot, "{}", backend.label());
+        }
+    }
+
+    #[test]
+    fn warm_prequant_rejects_non_quantized_backends_and_format_skew() {
+        let (kv, _) = problem(32, 16, 8);
+        let qkv = QuantKv::paper(&kv);
+        let mut results = Vec::new();
+        for backend in [AttentionBackend::Exact, AttentionBackend::conservative()] {
+            assert!(!backend.warm_servable());
+            assert_eq!(backend.warm_format(), None);
+            assert!(matches!(
+                backend.try_run_batch_prequant_into(&qkv, &[0.0; 8], &mut results),
+                Err(A3Error::BackendMismatch(_))
+            ));
+        }
+        // right backend kind, wrong resident format: typed, not wrong math
+        let skewed = AttentionBackend::QuantizedBits { i_bits: 6, f_bits: 2 };
+        assert!(matches!(
+            skewed.try_run_batch_prequant_into(&qkv, &[0.0; 8], &mut results),
+            Err(A3Error::BackendMismatch(_))
+        ));
+        // ragged batch is the dimension error, as on the hot path
+        assert!(matches!(
+            AttentionBackend::Quantized.try_run_batch_prequant_into(&qkv, &[0.0; 5], &mut results),
+            Err(A3Error::DimensionMismatch { expected: 8, got: 5 })
+        ));
     }
 
     #[test]

@@ -127,6 +127,19 @@ pub struct RemoteStats {
     pub pending: u64,
     /// Resident context bytes across all shards.
     pub resident_bytes: u64,
+    /// Bytes resident as full-precision f32 contexts (hot tier). On
+    /// an untiered server this equals `resident_bytes`.
+    pub hot_bytes: u64,
+    /// Bytes resident in quantized form (warm tier; 0 if untiered).
+    pub warm_bytes: u64,
+    /// Bytes spilled to disk (cold tier; 0 if untiered).
+    pub cold_bytes: u64,
+    /// Engine-lifetime count of queries served straight from the
+    /// quantized-resident warm tier (no re-hydration).
+    pub warm_serves: u64,
+    /// Engine-lifetime count of cold contexts re-admitted from their
+    /// spill files.
+    pub cold_readmissions: u64,
     /// Shard worker count.
     pub shards: u32,
 }
@@ -418,9 +431,26 @@ impl NetClient {
         let req = self.next_req();
         self.send(&Frame::Stats { req })?;
         match self.wait_for(req)? {
-            Frame::StatsReply { pending, resident_bytes, shards, .. } => {
-                Ok(RemoteStats { pending, resident_bytes, shards })
-            }
+            Frame::StatsReply {
+                pending,
+                resident_bytes,
+                hot_bytes,
+                warm_bytes,
+                cold_bytes,
+                warm_serves,
+                cold_readmissions,
+                shards,
+                ..
+            } => Ok(RemoteStats {
+                pending,
+                resident_bytes,
+                hot_bytes,
+                warm_bytes,
+                cold_bytes,
+                warm_serves,
+                cold_readmissions,
+                shards,
+            }),
             frame => Err(NetError::Protocol(format!("stats answered by {frame:?}"))),
         }
     }

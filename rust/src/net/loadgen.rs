@@ -34,6 +34,76 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::Response;
 use crate::testutil::Rng;
 
+/// Which context each query targets — the popularity model of the
+/// stream. Tiered servers live or die by access skew: a uniform sweep
+/// over more contexts than fit the budget thrashes the spill path,
+/// while a skewed stream keeps its hot set resident and lets the tail
+/// ride the warm/cold tiers (the regime the tier-sweep experiment
+/// measures).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Popularity {
+    /// Strict round-robin over the connection's contexts — every
+    /// context equally and deterministically popular (the historical
+    /// behavior, and the worst case for an LRU tier).
+    Uniform,
+    /// Zipfian popularity: rank-`k` context (0-based) drawn with
+    /// weight `1/(k+1)^s`. `s = 0` degenerates to uniform-random;
+    /// `s ≈ 1` is classic web-style skew.
+    Zipf { s: f64 },
+    /// A hot set: the first `ceil(hot_fraction × contexts)` contexts
+    /// each get `hot_weight`× the draw probability of a cold one.
+    Hotspot { hot_fraction: f64, hot_weight: f64 },
+}
+
+/// Per-connection context chooser: the popularity weights collapsed
+/// into a cumulative distribution once, then O(contexts) per draw. An
+/// empty CDF means strict round-robin (no rng draws at all, keeping
+/// [`Popularity::Uniform`] streams bit-reproducible with plans
+/// recorded before popularity existed).
+struct ContextPicker {
+    cdf: Vec<f64>,
+}
+
+impl ContextPicker {
+    fn new(p: Popularity, contexts: usize) -> Self {
+        let weights: Vec<f64> = match p {
+            Popularity::Uniform => Vec::new(),
+            Popularity::Zipf { s } => {
+                (0..contexts).map(|k| 1.0 / ((k + 1) as f64).powf(s)).collect()
+            }
+            Popularity::Hotspot { hot_fraction, hot_weight } => {
+                let hot = ((contexts as f64 * hot_fraction).ceil() as usize).clamp(1, contexts);
+                (0..contexts)
+                    .map(|k| if k < hot { hot_weight.max(0.0) } else { 1.0 })
+                    .collect()
+            }
+        };
+        let total: f64 = weights.iter().sum();
+        // degenerate weights (all zero / NaN) fall back to round-robin
+        // rather than dividing by zero
+        if !(total > 0.0) || !total.is_finite() {
+            return ContextPicker { cdf: Vec::new() };
+        }
+        let mut acc = 0.0;
+        let cdf = weights
+            .iter()
+            .map(|w| {
+                acc += w / total;
+                acc
+            })
+            .collect();
+        ContextPicker { cdf }
+    }
+
+    fn pick(&self, rng: &mut Rng, j: usize, contexts: usize) -> usize {
+        if self.cdf.is_empty() {
+            return j % contexts;
+        }
+        let u = rng.f64();
+        self.cdf.iter().position(|&c| u < c).unwrap_or(contexts - 1)
+    }
+}
+
 /// What to replay against a remote server.
 #[derive(Clone, Copy, Debug)]
 pub struct LoadPlan {
@@ -57,6 +127,8 @@ pub struct LoadPlan {
     /// Max in-flight (submitted, not yet received) queries per
     /// connection before the generator blocks on a completion.
     pub window: usize,
+    /// How queries choose among this connection's contexts.
+    pub popularity: Popularity,
 }
 
 impl Default for LoadPlan {
@@ -70,6 +142,7 @@ impl Default for LoadPlan {
             qps: None,
             seed: 0xA3,
             window: 64,
+            popularity: Popularity::Uniform,
         }
     }
 }
@@ -171,6 +244,7 @@ fn connection_worker(
     // failed — or the others (and the run-clock thread) wait forever
     barrier.wait();
     let (mut client, ctxs) = setup?;
+    let picker = ContextPicker::new(plan.popularity, ctxs.len());
     let t0 = Instant::now();
     let queries = share(plan.queries, connections, conn);
     let window = plan.window.max(1);
@@ -190,7 +264,7 @@ fn connection_worker(
         // stamp before the socket write: client-observed latency
         // includes the wire, exactly what a remote caller experiences
         let submitted_ns = t0.elapsed().as_nanos() as u64;
-        let req = client.submit(ctxs[j % ctxs.len()], &embedding)?;
+        let req = client.submit(ctxs[picker.pick(&mut rng, j, ctxs.len())], &embedding)?;
         // arrivals must reach the server at their due time, not when
         // the window next forces a receive (submits are write-buffered)
         client.flush()?;
@@ -229,6 +303,69 @@ fn recv_one(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn uniform_popularity_is_strict_round_robin_and_draws_no_randomness() {
+        let picker = ContextPicker::new(Popularity::Uniform, 5);
+        assert!(picker.cdf.is_empty());
+        let mut rng = Rng::new(1);
+        let before = rng.next_u64();
+        let mut rng = Rng::new(1);
+        let picks: Vec<usize> = (0..10).map(|j| picker.pick(&mut rng, j, 5)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 3, 4, 0, 1, 2, 3, 4]);
+        // the rng stream was untouched: historical uniform plans stay
+        // bit-reproducible
+        assert_eq!(rng.next_u64(), before);
+    }
+
+    #[test]
+    fn zipf_skews_mass_toward_low_ranks() {
+        let contexts = 8;
+        let picker = ContextPicker::new(Popularity::Zipf { s: 1.0 }, contexts);
+        let mut rng = Rng::new(7);
+        let mut counts = vec![0usize; contexts];
+        for j in 0..20_000 {
+            counts[picker.pick(&mut rng, j, contexts)] += 1;
+        }
+        assert!(
+            counts.windows(2).all(|w| w[0] >= w[1].saturating_sub(w[1] / 4)),
+            "popularity must fall (roughly monotonically) with rank: {counts:?}"
+        );
+        // harmonic weights: rank 0 holds 1/H(8) ≈ 37% of the mass
+        let share0 = counts[0] as f64 / 20_000.0;
+        assert!((0.30..0.45).contains(&share0), "rank-0 share {share0}");
+    }
+
+    #[test]
+    fn hotspot_concentrates_the_requested_mass_on_the_hot_set() {
+        // 2 hot of 8, each 9x a cold context: hot mass = 18/24 = 75%
+        let contexts = 8;
+        let picker = ContextPicker::new(
+            Popularity::Hotspot { hot_fraction: 0.25, hot_weight: 9.0 },
+            contexts,
+        );
+        let mut rng = Rng::new(11);
+        let mut hot = 0usize;
+        for j in 0..20_000 {
+            if picker.pick(&mut rng, j, contexts) < 2 {
+                hot += 1;
+            }
+        }
+        let share = hot as f64 / 20_000.0;
+        assert!((0.70..0.80).contains(&share), "hot-set share {share}");
+    }
+
+    #[test]
+    fn degenerate_weights_fall_back_to_round_robin() {
+        // an all-hot zero-weight plan must not divide by zero
+        let picker = ContextPicker::new(
+            Popularity::Hotspot { hot_fraction: 1.0, hot_weight: 0.0 },
+            4,
+        );
+        assert!(picker.cdf.is_empty());
+        let mut rng = Rng::new(3);
+        assert_eq!(picker.pick(&mut rng, 6, 4), 2);
+    }
 
     #[test]
     fn share_splits_evenly_with_remainder_first() {

@@ -90,7 +90,7 @@ pub mod server;
 pub mod wire;
 
 pub use client::{Backoff, NetClient, RecvOutcome, RemoteContext, RemoteStats};
-pub use loadgen::{run_loadgen, LoadPlan};
+pub use loadgen::{run_loadgen, LoadPlan, Popularity};
 pub use server::{NetServer, NetServerConfig};
 pub use wire::{Frame, WireError, WireStats, WIRE_VERSION};
 

@@ -572,10 +572,16 @@ fn handle_frame(
             let _ = out.send(reply);
         }
         Frame::Stats { req } => {
+            let tiers = engine.tier_stats();
             let _ = out.send(Frame::StatsReply {
                 req,
                 pending: engine.pending() as u64,
                 resident_bytes: engine.resident_bytes() as u64,
+                hot_bytes: tiers.hot_bytes,
+                warm_bytes: tiers.warm_bytes,
+                cold_bytes: tiers.cold_bytes,
+                warm_serves: tiers.warm_serves,
+                cold_readmissions: tiers.cold_readmissions,
                 shards: engine.shard_count() as u32,
             });
         }

@@ -34,7 +34,10 @@ use crate::coordinator::request::{ContextId, Response};
 pub const MAGIC: [u8; 4] = *b"A3NW";
 /// Wire protocol version, bumped on any incompatible frame change.
 /// v2: [`Frame::Submit`] grew a `ttl_ns` field (per-query deadline).
-pub const WIRE_VERSION: u16 = 2;
+/// v3: [`Frame::StatsReply`] grew the per-tier gauges and transition
+/// counters of the tiered context store, and [`A3Error::SpillCorrupt`]
+/// crosses the wire as its own error code.
+pub const WIRE_VERSION: u16 = 3;
 /// Hard cap on one frame's body (opcode + payload). Large enough for a
 /// 2048×512 f32 K/V pair in one register frame, small enough that a
 /// hostile length prefix cannot allocate unbounded memory.
@@ -146,7 +149,22 @@ pub enum Frame {
     },
     Evicted { req: u64 },
     DrainStats { req: u64, stats: WireStats },
-    StatsReply { req: u64, pending: u64, resident_bytes: u64, shards: u32 },
+    /// Observability snapshot. `resident_bytes` is the total accounted
+    /// footprint; the `hot/warm/cold` gauges break it down per tier
+    /// (all three are 0 on an untiered server except `hot_bytes`,
+    /// which equals `resident_bytes`), and `warm_serves` /
+    /// `cold_readmissions` are engine-lifetime transition counters.
+    StatsReply {
+        req: u64,
+        pending: u64,
+        resident_bytes: u64,
+        hot_bytes: u64,
+        warm_bytes: u64,
+        cold_bytes: u64,
+        warm_serves: u64,
+        cold_readmissions: u64,
+        shards: u32,
+    },
     ShutdownAck { req: u64 },
     /// A typed engine error for request `req` — the 1:1 image of
     /// [`A3Error`] on the wire.
@@ -180,6 +198,7 @@ const ERR_MEMORY_BUDGET: u16 = 8;
 const ERR_ENGINE_STOPPED: u16 = 9;
 const ERR_SHARD_FAILED: u16 = 10;
 const ERR_DEADLINE_EXCEEDED: u16 = 11;
+const ERR_SPILL_CORRUPT: u16 = 12;
 
 /// Flatten an [`A3Error`] to `(code, a, b, msg)` for the error frame.
 fn error_fields(e: &A3Error) -> (u16, u64, u64, &str) {
@@ -203,6 +222,9 @@ fn error_fields(e: &A3Error) -> (u16, u64, u64, &str) {
         A3Error::DeadlineExceeded { deadline_ns, now_ns } => {
             (ERR_DEADLINE_EXCEEDED, *deadline_ns, *now_ns, "")
         }
+        A3Error::SpillCorrupt { context, detail } => {
+            (ERR_SPILL_CORRUPT, *context as u64, 0, detail.as_str())
+        }
     }
 }
 
@@ -222,6 +244,7 @@ fn error_from_fields(code: u16, a: u64, b: u64, msg: String) -> Result<A3Error, 
         ERR_ENGINE_STOPPED => A3Error::EngineStopped,
         ERR_SHARD_FAILED => A3Error::ShardFailed { shard: a as usize },
         ERR_DEADLINE_EXCEEDED => A3Error::DeadlineExceeded { deadline_ns: a, now_ns: b },
+        ERR_SPILL_CORRUPT => A3Error::SpillCorrupt { context: a as ContextId, detail: msg },
         other => return Err(WireError::Malformed(format!("unknown error code {other}"))),
     })
 }
@@ -420,11 +443,26 @@ impl Frame {
                 put_u64(buf, stats.p99_ns);
                 put_f64(buf, stats.mean_selected_rows);
             }
-            Frame::StatsReply { req, pending, resident_bytes, shards } => {
+            Frame::StatsReply {
+                req,
+                pending,
+                resident_bytes,
+                hot_bytes,
+                warm_bytes,
+                cold_bytes,
+                warm_serves,
+                cold_readmissions,
+                shards,
+            } => {
                 buf.push(OP_STATS_REPLY);
                 put_u64(buf, *req);
                 put_u64(buf, *pending);
                 put_u64(buf, *resident_bytes);
+                put_u64(buf, *hot_bytes);
+                put_u64(buf, *warm_bytes);
+                put_u64(buf, *cold_bytes);
+                put_u64(buf, *warm_serves);
+                put_u64(buf, *cold_readmissions);
                 put_u32(buf, *shards);
             }
             Frame::ShutdownAck { req } => {
@@ -503,6 +541,11 @@ impl Frame {
                 req: cur.u64()?,
                 pending: cur.u64()?,
                 resident_bytes: cur.u64()?,
+                hot_bytes: cur.u64()?,
+                warm_bytes: cur.u64()?,
+                cold_bytes: cur.u64()?,
+                warm_serves: cur.u64()?,
+                cold_readmissions: cur.u64()?,
                 shards: cur.u32()?,
             },
             OP_SHUTDOWN_ACK => Frame::ShutdownAck { req: cur.u64()? },
@@ -644,7 +687,7 @@ mod tests {
     }
 
     fn random_error(rng: &mut Rng) -> A3Error {
-        match rng.below(11) {
+        match rng.below(12) {
             0 => A3Error::ConfigError(format!("cfg-{}", rng.next_u64())),
             1 => A3Error::UnknownContext(rng.next_u64() as u32),
             2 => A3Error::ContextEvicted(rng.next_u64() as u32),
@@ -655,7 +698,13 @@ mod tests {
             7 => A3Error::MemoryBudget { required: rng.below(1 << 30), budget: rng.below(1 << 30) },
             8 => A3Error::EngineStopped,
             9 => A3Error::ShardFailed { shard: rng.below(64) },
-            _ => A3Error::DeadlineExceeded { deadline_ns: rng.next_u64(), now_ns: rng.next_u64() },
+            10 => {
+                A3Error::DeadlineExceeded { deadline_ns: rng.next_u64(), now_ns: rng.next_u64() }
+            }
+            _ => A3Error::SpillCorrupt {
+                context: rng.next_u64() as u32,
+                detail: format!("spill-{}", rng.next_u64()),
+            },
         }
     }
 
@@ -715,6 +764,11 @@ mod tests {
                 req,
                 pending: rng.next_u64(),
                 resident_bytes: rng.next_u64(),
+                hot_bytes: rng.next_u64(),
+                warm_bytes: rng.next_u64(),
+                cold_bytes: rng.next_u64(),
+                warm_serves: rng.next_u64(),
+                cold_readmissions: rng.next_u64(),
                 shards: rng.range(1, 64) as u32,
             },
             11 => Frame::ShutdownAck { req },
@@ -744,6 +798,7 @@ mod tests {
             A3Error::EngineStopped,
             A3Error::ShardFailed { shard: 3 },
             A3Error::DeadlineExceeded { deadline_ns: 5_000_000, now_ns: 7_500_000 },
+            A3Error::SpillCorrupt { context: 12, detail: "checksum mismatch".into() },
         ];
         for error in all {
             round_trip(&Frame::Error { req: 3, error });

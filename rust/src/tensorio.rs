@@ -68,15 +68,20 @@ pub fn read_tensors(path: impl AsRef<Path>) -> Result<Tensors> {
     let mut f = std::io::BufReader::new(
         std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
     );
-    let magic = read_exact(&mut f, 4)?;
+    read_body(&mut f, &path.display().to_string())
+}
+
+/// Parse one A3TN body from any reader (`what` labels errors).
+fn read_body(f: &mut impl Read, what: &str) -> Result<Tensors> {
+    let magic = read_exact(f, 4)?;
     if magic != MAGIC {
-        bail!("{}: bad magic {:?}", path.display(), magic);
+        bail!("{what}: bad magic {:?}", magic);
     }
-    let version = u32_le(&mut f)?;
+    let version = u32_le(f)?;
     if version != VERSION {
-        bail!("{}: unsupported version {version}", path.display());
+        bail!("{what}: unsupported version {version}");
     }
-    let count = u32_le(&mut f)?;
+    let count = u32_le(f)?;
     let mut out = Tensors::new();
     for _ in 0..count {
         let nlen = {
@@ -117,6 +122,11 @@ pub fn read_tensors(path: impl AsRef<Path>) -> Result<Tensors> {
 /// Write an A3TN container (used by tests and experiment result dumps).
 pub fn write_tensors(path: impl AsRef<Path>, tensors: &Tensors) -> Result<()> {
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write_body(&mut f, tensors)
+}
+
+/// Serialize one A3TN body to any writer.
+fn write_body(f: &mut impl Write, tensors: &Tensors) -> Result<()> {
     f.write_all(MAGIC)?;
     f.write_all(&VERSION.to_le_bytes())?;
     f.write_all(&(tensors.len() as u32).to_le_bytes())?;
@@ -145,6 +155,59 @@ pub fn write_tensors(path: impl AsRef<Path>, tensors: &Tensors) -> Result<()> {
         }
     }
     Ok(())
+}
+
+// -- checksummed container (spill files) ----------------------------
+
+/// FNV-1a 64-bit hash — the spill-file integrity check. Not
+/// cryptographic: it detects torn writes and bit rot, which is the
+/// failure model for a local spill directory.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Write an A3TN container followed by an 8-byte little-endian
+/// FNV-1a 64 trailer over the body — the on-disk form of the tiered
+/// [`crate::coordinator::ContextStore`]'s cold spill files, where a
+/// corrupt re-admission must surface as a typed error, never as
+/// silently wrong attention outputs. Returns the total bytes written.
+pub fn write_tensors_checksummed(path: impl AsRef<Path>, tensors: &Tensors) -> Result<u64> {
+    let mut body = Vec::new();
+    write_body(&mut body, tensors)?;
+    let sum = fnv1a64(&body);
+    body.extend_from_slice(&sum.to_le_bytes());
+    let total = body.len() as u64;
+    std::fs::write(path.as_ref(), body)
+        .with_context(|| format!("write {}", path.as_ref().display()))?;
+    Ok(total)
+}
+
+/// Load a container written by [`write_tensors_checksummed`],
+/// verifying the trailer before parsing: any mismatch (truncation,
+/// bit flips, a trailing-garbage append) is an error up front.
+pub fn read_tensors_checksummed(path: impl AsRef<Path>) -> Result<Tensors> {
+    let path = path.as_ref();
+    let raw = std::fs::read(path).with_context(|| format!("open {}", path.display()))?;
+    if raw.len() < 8 {
+        bail!("{}: too short for a checksum trailer ({} bytes)", path.display(), raw.len());
+    }
+    let (body, trailer) = raw.split_at(raw.len() - 8);
+    let want = u64::from_le_bytes(trailer.try_into().unwrap());
+    let got = fnv1a64(body);
+    if got != want {
+        bail!("{}: checksum mismatch (stored {want:#018x}, computed {got:#018x})", path.display());
+    }
+    let mut cursor = body;
+    let tensors = read_body(&mut cursor, &path.display().to_string())?;
+    if !cursor.is_empty() {
+        bail!("{}: {} trailing bytes after the tensor body", path.display(), cursor.len());
+    }
+    Ok(tensors)
 }
 
 /// Convenience accessors over a loaded container.
@@ -222,6 +285,47 @@ mod tests {
         write_tensors(&p, &t).unwrap();
         let back = read_tensors(&p).unwrap();
         assert!(back.f32s("nope").is_err());
+    }
+
+    #[test]
+    fn checksummed_round_trip_and_corruption_detection() {
+        let mut t = Tensors::new();
+        t.insert(
+            "key".into(),
+            Tensor::F32 { shape: vec![4, 2], data: vec![1.0, -2.5, 3.0, 0.0, 5.5, -6.25, 7.0, 8.0] },
+        );
+        let p = tmpfile("checksummed.bin");
+        let written = write_tensors_checksummed(&p, &t).unwrap();
+        assert_eq!(written, std::fs::metadata(&p).unwrap().len());
+        assert_eq!(read_tensors_checksummed(&p).unwrap(), t);
+
+        // flip one payload bit: the trailer must catch it
+        let mut raw = std::fs::read(&p).unwrap();
+        let mid = raw.len() / 2;
+        raw[mid] ^= 0x10;
+        std::fs::write(&p, &raw).unwrap();
+        let err = read_tensors_checksummed(&p).unwrap_err();
+        assert!(err.to_string().contains("checksum mismatch"), "got: {err}");
+
+        // truncate below the trailer: typed, not a parse panic
+        std::fs::write(&p, &[1, 2, 3]).unwrap();
+        assert!(read_tensors_checksummed(&p)
+            .unwrap_err()
+            .to_string()
+            .contains("too short"));
+    }
+
+    #[test]
+    fn checksummed_trailer_guards_against_appended_garbage() {
+        let mut t = Tensors::new();
+        t.insert("a".into(), Tensor::I32 { shape: vec![2], data: vec![5, -9] });
+        let p = tmpfile("checksummed-append.bin");
+        write_tensors_checksummed(&p, &t).unwrap();
+        let mut raw = std::fs::read(&p).unwrap();
+        raw.extend_from_slice(&[0u8; 16]);
+        std::fs::write(&p, &raw).unwrap();
+        // appended bytes shift the trailer window, so the sum fails
+        assert!(read_tensors_checksummed(&p).is_err());
     }
 
     #[test]

@@ -101,6 +101,39 @@ pub fn check(cases: u64, prop: impl Fn(&mut Rng)) {
     }
 }
 
+/// A unique per-test scratch directory, removed on drop.
+///
+/// std-only stand-in for the `tempfile` crate: uniqueness comes from
+/// the process id plus a process-wide counter, so parallel test
+/// threads and concurrent test binaries never collide. Used by the
+/// tier tests to host spill directories.
+pub struct TempDir {
+    path: std::path::PathBuf,
+}
+
+impl TempDir {
+    pub fn new(label: &str) -> Self {
+        static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let seq = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "a3-{label}-{}-{seq}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&path).expect("create temp dir");
+        TempDir { path }
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
 /// Assert two float slices agree within `atol` + `rtol` * |want|.
 #[track_caller]
 pub fn assert_allclose(got: &[f32], want: &[f32], atol: f32, rtol: f32) {

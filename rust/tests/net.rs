@@ -216,6 +216,12 @@ fn drain_and_stats_frames_report_engine_state() {
     let drained = client.drain().unwrap();
     assert_eq!(drained.completed, 6, "the barrier covers every admitted query");
     assert!(drained.sim_makespan > 0);
+    // after the barrier the register has landed on its shard: an
+    // untiered server reports everything hot and no tier transitions
+    let settled = client.stats().unwrap();
+    assert_eq!(settled.hot_bytes, settled.resident_bytes);
+    assert_eq!(settled.warm_bytes + settled.cold_bytes, 0);
+    assert_eq!(settled.warm_serves + settled.cold_readmissions, 0);
     // the completions are still owed to this connection
     for _ in 0..6 {
         client.recv().unwrap();
@@ -240,6 +246,7 @@ fn loadgen_reproduces_stream_serving_over_sockets() {
         qps: None,
         seed: 5,
         window: 8,
+        popularity: a3::net::Popularity::Uniform,
     };
     let report = run_loadgen(server.local_addr(), plan).unwrap();
     assert_eq!(report.metrics.completed, 40);

@@ -1,0 +1,168 @@
+//! End-to-end tests of the tiered hot/warm/cold `ContextStore` through
+//! the public `a3::api` surface, black-box: a workload whose context
+//! footprint is 3x the memory budget must serve to completion with
+//! outputs bit-identical to an unbudgeted run (demotion is *not*
+//! eviction), warm-tier serving on quantized backends must match the
+//! hot quantized path bit for bit, handles must report their tier, and
+//! a corrupted spill file must surface as a typed `SpillCorrupt` drop
+//! notice — never as a silently wrong answer.
+
+use std::collections::HashMap;
+
+use a3::api::{A3Error, AttentionBackend, Dims, EngineBuilder, Tier, TierStats};
+use a3::coordinator::tier::spill_path;
+use a3::testutil::{Rng, TempDir};
+
+const N: usize = 32;
+const D: usize = 16;
+const CONTEXTS: usize = 9;
+const ROUNDS: usize = 2;
+
+/// f32 K + V planes of one n=32, d=16 context: 4096 bytes.
+const CTX_BYTES: usize = 2 * N * D * 4;
+
+fn kv(seed: u64) -> a3::api::KvPair {
+    let mut rng = Rng::new(seed);
+    a3::api::KvPair::new(N, D, rng.normal_vec(N * D, 1.0), rng.normal_vec(N * D, 1.0))
+}
+
+/// Register `CONTEXTS` seeded contexts and serve `ROUNDS` round-robin
+/// passes of seeded queries over them; identical across calls except
+/// for the builder, so runs are comparable by query id.
+fn serve(builder: EngineBuilder) -> (HashMap<u64, Vec<f32>>, TierStats, usize) {
+    let engine = builder.dims(Dims::new(N, D)).build().unwrap();
+    let handles: Vec<_> = (0..CONTEXTS)
+        .map(|i| engine.register_context(kv(100 + i as u64)).unwrap())
+        .collect();
+    let mut rng = Rng::new(9);
+    let stream: Vec<_> = (0..CONTEXTS * ROUNDS)
+        .map(|i| (handles[i % CONTEXTS].clone(), rng.normal_vec(D, 1.0)))
+        .collect();
+    let (_tickets, report) = engine.run_stream(stream).unwrap();
+    let outputs = report.responses.iter().map(|r| (r.id, r.output.clone())).collect();
+    let dropped = engine.take_dropped().len();
+    (outputs, engine.tier_stats(), dropped)
+}
+
+#[test]
+fn budgeted_exact_run_is_bit_identical_to_unbudgeted() {
+    // footprint 9 contexts x 4096 B = 36864 B against a 3-context
+    // budget: the store must demote through warm to cold and promote
+    // back on demand, and none of that may change a single output bit
+    let spill = TempDir::new("tier-e2e-exact");
+    let (base, base_tiers, base_dropped) = serve(EngineBuilder::new());
+    let (tiered, tiers, dropped) = serve(
+        EngineBuilder::new()
+            .memory_budget(3 * CTX_BYTES)
+            .spill_dir(spill.path()),
+    );
+    assert_eq!(base.len(), CONTEXTS * ROUNDS);
+    assert_eq!(base_dropped, 0);
+    assert_eq!(dropped, 0, "demotion must never drop an admitted query");
+    assert_eq!(tiered.len(), base.len(), "every query must be served");
+    for (id, out) in &base {
+        assert_eq!(tiered[id], *out, "query {id} diverged under tiering");
+    }
+    // the unbudgeted run never leaves the hot tier
+    assert_eq!(base_tiers.demotions_warm, 0);
+    assert_eq!(base_tiers.cold_bytes, 0);
+    // the budgeted run exercised the whole hierarchy
+    assert!(tiers.demotions_warm > 0, "hot contexts were demoted: {tiers:?}");
+    assert!(tiers.demotions_cold > 0, "warm contexts were spilled: {tiers:?}");
+    assert!(tiers.cold_readmissions > 0, "cold contexts were re-admitted: {tiers:?}");
+    assert!(tiers.promotions > 0, "exact serving promotes back to hot: {tiers:?}");
+    assert_eq!(tiers.spill_failures, 0);
+}
+
+#[test]
+fn budgeted_quantized_run_serves_from_warm_bit_identically() {
+    // quantized backends serve warm contexts in their resident
+    // quantized form — no re-hydration — so the warm path must be bit
+    // for bit the hot quantized path, and warm serves must be counted
+    let spill = TempDir::new("tier-e2e-warm");
+    let (base, _, _) = serve(EngineBuilder::new().backend(AttentionBackend::Quantized));
+    let (tiered, tiers, dropped) = serve(
+        EngineBuilder::new()
+            .backend(AttentionBackend::Quantized)
+            .memory_budget(3 * CTX_BYTES)
+            .spill_dir(spill.path()),
+    );
+    assert_eq!(dropped, 0);
+    assert_eq!(tiered.len(), base.len());
+    for (id, out) in &base {
+        assert_eq!(tiered[id], *out, "warm serving diverged from the hot path on {id}");
+    }
+    assert!(tiers.warm_serves > 0, "no query was served from the warm tier: {tiers:?}");
+    assert!(tiers.cold_readmissions > 0, "cold spill was never re-admitted: {tiers:?}");
+    assert!(
+        tiers.hot_bytes + tiers.warm_bytes + tiers.cold_bytes > 0,
+        "per-tier gauges must survive the run: {tiers:?}"
+    );
+}
+
+#[test]
+fn demotion_keeps_contexts_live_and_handles_report_tiers() {
+    let spill = TempDir::new("tier-e2e-handles");
+    let engine = EngineBuilder::new()
+        .dims(Dims::new(N, D))
+        .memory_budget(2 * CTX_BYTES)
+        .spill_dir(spill.path())
+        .build()
+        .unwrap();
+    let handles: Vec<_> = (0..6)
+        .map(|i| engine.register_context(kv(i as u64)).unwrap())
+        .collect();
+    // barrier: the shard worker has applied every registration (and
+    // with it the budget rebalance) before we inspect tiers
+    engine.drain().unwrap();
+    let tiers: Vec<Tier> = handles.iter().map(|h| h.tier().unwrap()).collect();
+    assert!(tiers.contains(&Tier::Cold), "budget pressure never reached cold: {tiers:?}");
+    assert_eq!(tiers.last(), Some(&Tier::Hot), "the newest context must stay hot: {tiers:?}");
+    // under the old regime these would be ContextEvicted; under
+    // tiering every demoted context is still fully servable
+    let mut rng = Rng::new(3);
+    for h in &handles {
+        engine.submit(h, rng.normal_vec(D, 1.0)).unwrap();
+    }
+    let stats = engine.drain().unwrap();
+    assert_eq!(stats.metrics.completed, 6, "a demoted context was lost");
+    assert!(engine.take_dropped().is_empty());
+    assert!(stats.tiers.demotions_cold > 0);
+    // EngineStats carries the same per-tier gauges as the accessor
+    assert_eq!(stats.tiers.hot_bytes, engine.tier_stats().hot_bytes);
+}
+
+#[test]
+fn corrupt_spill_surfaces_a_typed_drop_notice() {
+    let spill = TempDir::new("tier-e2e-corrupt");
+    let engine = EngineBuilder::new()
+        .dims(Dims::new(N, D))
+        .memory_budget(2 * CTX_BYTES)
+        .spill_dir(spill.path())
+        .build()
+        .unwrap();
+    let victim = engine.register_context(kv(1)).unwrap();
+    for i in 2..6 {
+        engine.register_context(kv(i)).unwrap();
+    }
+    engine.drain().unwrap();
+    assert_eq!(victim.tier(), Some(Tier::Cold), "first-registered context must be coldest");
+    // flip one byte in the middle of the checksummed spill file
+    let path = spill_path(spill.path(), victim.id());
+    let mut raw = std::fs::read(&path).unwrap();
+    let mid = raw.len() / 2;
+    raw[mid] ^= 0x10;
+    std::fs::write(&path, &raw).unwrap();
+    let ticket = engine.submit(&victim, vec![0.25; D]).unwrap();
+    engine.drain().unwrap();
+    let notices = engine.take_dropped();
+    let (_, err) = notices
+        .iter()
+        .find(|(id, _)| *id == ticket.id)
+        .unwrap_or_else(|| panic!("no drop notice for the corrupt context: {notices:?}"));
+    assert!(
+        matches!(err, A3Error::SpillCorrupt { context, .. } if *context == victim.id()),
+        "wanted SpillCorrupt for ctx {}, got {err:?}",
+        victim.id()
+    );
+}

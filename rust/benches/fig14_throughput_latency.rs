@@ -69,6 +69,15 @@ fn main() {
     let socket = fig14::run_socket_overhead(1024, 4).expect("socket overhead");
     println!("{socket}");
 
+    // connection scaling through the event-loop front door (Fig. 14f):
+    // the same engine behind 16 → 4096 concurrent sockets, served by
+    // O(shards + 3) threads. Levels the fd limit cannot hold print as
+    // skipped rows rather than failing the bench.
+    println!("-- connection scaling (a3::net event loop) --");
+    let sweep = fig14::run_connection_sweep(8, &fig14::CONNECTION_SWEEP)
+        .expect("connection sweep");
+    println!("{sweep}");
+
     println!("-- cycle simulator throughput --");
     let dims = Dims::paper();
     let r = bench("BasePipeline 1k queries", budget(), || {

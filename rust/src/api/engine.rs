@@ -610,6 +610,10 @@ struct Shared {
     /// admission backpressure observes a dead worker as
     /// [`A3Error::EngineStopped`] instead of waiting forever.
     alive_workers: AtomicUsize,
+    /// Batches served by the degraded (conservative approximate)
+    /// backend under pressure — the observability counter behind the
+    /// `a3_degraded_total` metric.
+    degraded: AtomicUsize,
 }
 
 /// The serving engine: the one sanctioned way to drive the system.
@@ -684,6 +688,7 @@ impl Engine {
             admission_gate: Mutex::new(()),
             admission: Condvar::new(),
             alive_workers: AtomicUsize::new(shards),
+            degraded: AtomicUsize::new(0),
         });
         let epoch = Instant::now();
         let mut cmd_txs = Vec::with_capacity(shards);
@@ -787,6 +792,26 @@ impl Engine {
     /// sorted-key caches).
     pub fn resident_bytes(&self) -> usize {
         self.store.resident_bytes()
+    }
+
+    /// Resident context bytes on one shard (K/V + built sorted-key
+    /// caches). Panics if `shard >= shard_count()`.
+    pub fn shard_resident_bytes(&self, shard: usize) -> usize {
+        self.store.shard_resident_bytes(shard)
+    }
+
+    /// Engine-lifetime count of queries dropped by failed dispatches
+    /// (each also surfaced individually through
+    /// [`Engine::take_dropped`]).
+    pub fn dropped_total(&self) -> u64 {
+        self.shared.dropped.load(Ordering::Relaxed) as u64
+    }
+
+    /// Engine-lifetime count of batches served by the degraded
+    /// backend under admission pressure
+    /// ([`EngineBuilder::degrade_under_pressure`]).
+    pub fn degraded_total(&self) -> u64 {
+        self.shared.degraded.load(Ordering::Relaxed) as u64
     }
 
     /// The per-shard slice of the configured memory budget, if any.
@@ -1786,6 +1811,7 @@ impl ShardWorker {
                 match resident {
                     WarmServe::Hot(ctx) => {
                         if degrade {
+                            self.shared.degraded.fetch_add(1, Ordering::Relaxed);
                             self.scheduler.dispatch_degraded(&ctx, &batch)
                         } else {
                             self.scheduler.dispatch(&ctx, &batch)

@@ -288,6 +288,7 @@ pub fn run_tier_sweep(queries: usize, contexts: usize) -> Result<Table> {
             seed: 7,
             window: 64,
             popularity,
+            workers: 0,
         };
         let report = run_loadgen(server.local_addr(), plan)?;
         let snap = report.metrics.report();
@@ -387,10 +388,86 @@ pub fn run_socket_overhead(queries: usize, contexts: usize) -> Result<Table> {
             seed: 7,
             window: 64,
             popularity: crate::net::Popularity::Uniform,
+            workers: 0,
         };
         let report = crate::net::run_loadgen(server.local_addr(), plan)?;
         transport_row(&mut t, &format!("loopback TCP x{connections} conn"), &report);
         // Drop joins the server threads before the next engine binds
+    }
+    Ok(t)
+}
+
+/// Concurrent-connection counts the serving sweep walks — the range
+/// where a thread-pair-per-connection front door dies (thread
+/// explosion around 1k) and the event loop keeps going.
+pub const CONNECTION_SWEEP: [usize; 4] = [16, 256, 1024, 4096];
+
+/// Fig. 14f (ISSUE 9): connection scaling through the event-loop
+/// front door. The same per-connection workload is replayed at each
+/// concurrency level, so the column isolates how serving degrades
+/// with connection count alone: the server holds every socket in one
+/// event-loop thread (O(shards + 3) threads total) and the load
+/// generator drives its side from a bounded worker pool, so the row
+/// cost is sockets and scheduling, never threads. Rows whose fd
+/// requirement (2 per connection + headroom) exceeds what
+/// `RLIMIT_NOFILE` could be raised to are reported as skipped rather
+/// than dying mid-accept.
+pub fn run_connection_sweep(queries_per_conn: usize, connections: &[usize]) -> Result<Table> {
+    use crate::net::{raise_nofile_limit, run_loadgen, LoadPlan, NetServer, Popularity};
+    let mut t = Table::new(
+        format!(
+            "Fig. 14f — connection scaling, {queries_per_conn} queries per connection \
+             (event-loop front door, 2 units)"
+        ),
+        &["connections", "gen workers", "host qps (wall)", "p50 latency", "p99 latency", "completed"],
+    );
+    // each connection costs one client fd and one server fd; the
+    // listener, poller, and spill paths need headroom on top
+    let want = connections.iter().copied().max().unwrap_or(0) as u64 * 2 + 128;
+    let limit = raise_nofile_limit(want).unwrap_or(0);
+    let d = crate::PAPER_D;
+    for &conns in connections {
+        if conns as u64 * 2 + 128 > limit {
+            t.row(vec![
+                conns.to_string(),
+                "-".into(),
+                format!("skipped (nofile {limit})"),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+            continue;
+        }
+        let engine = std::sync::Arc::new(
+            EngineBuilder::new().units(2).dims(Dims::paper()).max_batch(8).build()?,
+        );
+        let server = NetServer::bind(engine, "127.0.0.1:0")?;
+        let workers = conns.min(32);
+        let plan = LoadPlan {
+            connections: conns,
+            queries: queries_per_conn * conns,
+            contexts_per_conn: 1,
+            // small contexts: the row cost under study is connection
+            // count, not context footprint (4k × paper-sized K/V
+            // would measure the allocator instead)
+            n: 64,
+            d,
+            qps: None,
+            seed: 7,
+            window: 16,
+            popularity: Popularity::Uniform,
+            workers,
+        };
+        let report = run_loadgen(server.local_addr(), plan)?;
+        let snap = report.metrics.report();
+        t.row(vec![
+            conns.to_string(),
+            workers.to_string(),
+            fmt_f(report.wall_qps(), 0),
+            format!("{:.1} µs", snap.p50_ns as f64 / 1e3),
+            format!("{:.1} µs", snap.p99_ns as f64 / 1e3),
+            snap.completed.to_string(),
+        ]);
     }
     Ok(t)
 }
@@ -533,6 +610,22 @@ mod tests {
         assert_eq!(t.rows[0][0], "in-process");
         for row in &t.rows {
             assert_eq!(row[4], "48", "{} must serve the whole stream", row[0]);
+        }
+    }
+
+    #[test]
+    fn connection_sweep_serves_every_query_at_every_level() {
+        // small-scale levels so the sweep is tier-1-cheap; the real
+        // 16/256/1k/4k table is the `a3 fig14` / bench surface
+        let t = run_connection_sweep(4, &[2, 8]).unwrap();
+        assert_eq!(t.rows.len(), 2);
+        for (row, conns) in t.rows.iter().zip([2usize, 8]) {
+            assert_eq!(row[0], conns.to_string());
+            assert_eq!(
+                row[5],
+                (4 * conns).to_string(),
+                "{conns} connections must serve the whole stream: {row:?}"
+            );
         }
     }
 

@@ -38,19 +38,27 @@ COMMANDS (system):
                     --memory-budget, the context store becomes a
                     hot/warm/cold tier hierarchy spilling to DIR;
                     per-tier stats are printed after the run)
-                    [--listen ADDR] (unknown serve flags are an error)
+                    [--listen ADDR] [--metrics ADDR]
+                    (unknown serve flags are an error)
                     With --listen, serve the engine over TCP instead:
                     bind ADDR (port 0 = ephemeral; the bound address is
                     printed), pre-register --contexts synthetic
                     contexts, and run until a client sends Shutdown.
+                    The event-loop front door holds any number of
+                    connections in O(shards) threads. With --metrics,
+                    bind a second listener answering plaintext
+                    Prometheus on GET /metrics.
     client          drive a remote `a3 serve --listen` server:
                     --connect ADDR [--queries N] [--connections N]
                     [--contexts N] [--n N] [--qps F] [--seed N]
-                    [--window N] [--shutdown]
+                    [--window N] [--workers N] [--shutdown]
                     [--popularity uniform|zipf:S|hotspot:F,W]
                     (access skew across each connection's contexts:
                     zipf:1.0 is web-like, hotspot:0.25,9 gives the
-                    first quarter of contexts 9x the draw weight)
+                    first quarter of contexts 9x the draw weight;
+                    --workers bounds the generator thread pool —
+                    0 = min(connections, 32) — so thousand-connection
+                    plans run without a thousand threads)
     bench           print the detected kernel plan (plane, vector
                     features, tile geometry); with --json, time the
                     kernel hot paths on every available plane (scalar
@@ -96,6 +104,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let mut max_batch: Option<usize> = None;
     let mut qps: Option<f64> = None;
     let mut listen: Option<String> = None;
+    let mut metrics: Option<String> = None;
     let mut spill_dir: Option<String> = None;
     let mut warm_watermark: Option<f64> = None;
     let mut cold_watermark: Option<f64> = None;
@@ -117,7 +126,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         if !matches!(
             flag.as_str(),
             "--units" | "--shards" | "--memory-budget" | "--queries" | "--contexts" | "--n"
-                | "--seed" | "--max-batch" | "--qps" | "--listen" | "--spill-dir"
+                | "--seed" | "--max-batch" | "--qps" | "--listen" | "--metrics" | "--spill-dir"
                 | "--warm-watermark" | "--cold-watermark"
         ) {
             bail!("serve: unknown flag {flag:?} (see `a3 --help`)");
@@ -140,6 +149,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             "--max-batch" => max_batch = Some(value.parse().map_err(|e| invalid(&e))?),
             "--qps" => qps = Some(value.parse().map_err(|e| invalid(&e))?),
             "--listen" => listen = Some(value.clone()),
+            "--metrics" => metrics = Some(value.clone()),
             "--spill-dir" => spill_dir = Some(value.clone()),
             "--warm-watermark" => warm_watermark = Some(value.parse().map_err(|e| invalid(&e))?),
             "--cold-watermark" => cold_watermark = Some(value.parse().map_err(|e| invalid(&e))?),
@@ -158,6 +168,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     }
     // the strict-parsing promise: flags that only drive the in-process
     // synthetic stream must not be silently ignored under --listen
+    if metrics.is_some() && listen.is_none() {
+        bail!("serve: --metrics only applies with --listen");
+    }
     if listen.is_some() && (queries.is_some() || seed.is_some() || qps.is_some()) {
         bail!(
             "serve: --queries/--seed/--qps drive the in-process synthetic stream and have \
@@ -221,7 +234,21 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     // synthetic stream; runs until a client sends a Shutdown frame
     if let Some(listen_addr) = listen {
         let engine = std::sync::Arc::new(engine);
-        let mut server = a3::net::NetServer::bind(std::sync::Arc::clone(&engine), listen_addr.as_str())?;
+        let metrics_addr = match &metrics {
+            Some(addr) => {
+                use std::net::ToSocketAddrs as _;
+                Some(addr.to_socket_addrs()?.next().ok_or_else(|| {
+                    anyhow::anyhow!("serve: --metrics {addr:?} resolved to no address")
+                })?)
+            }
+            None => None,
+        };
+        let cfg = a3::net::NetServerConfig { metrics_addr, ..Default::default() };
+        let mut server =
+            a3::net::NetServer::bind_with(std::sync::Arc::clone(&engine), listen_addr.as_str(), cfg)?;
+        if let Some(maddr) = server.metrics_addr() {
+            println!("metrics on {maddr} (GET /metrics)");
+        }
         println!(
             "listening on {} (wire v{}) — {} pre-registered context(s) [ids 0..{}], \
              {units} {} unit(s) across {shards} shard(s)",
@@ -300,6 +327,7 @@ fn cmd_client(args: &[String]) -> Result<()> {
     let mut qps: Option<f64> = None;
     let mut seed = 0xA3u64;
     let mut window = 64usize;
+    let mut workers = 0usize;
     let mut shutdown = false;
     let mut popularity = a3::net::Popularity::Uniform;
     let mut i = 1; // args[0] is the "client" command itself
@@ -313,7 +341,7 @@ fn cmd_client(args: &[String]) -> Result<()> {
         if !matches!(
             flag.as_str(),
             "--connect" | "--queries" | "--connections" | "--contexts" | "--n" | "--qps"
-                | "--seed" | "--window" | "--popularity"
+                | "--seed" | "--window" | "--workers" | "--popularity"
         ) {
             bail!("client: unknown flag {flag:?} (see `a3 --help`)");
         }
@@ -333,6 +361,7 @@ fn cmd_client(args: &[String]) -> Result<()> {
             "--qps" => qps = Some(value.parse().map_err(|e| invalid(&e))?),
             "--seed" => seed = value.parse().map_err(|e| invalid(&e))?,
             "--window" => window = value.parse().map_err(|e| invalid(&e))?,
+            "--workers" => workers = value.parse().map_err(|e| invalid(&e))?,
             "--popularity" => popularity = parse_popularity(value).map_err(|e| invalid(&e))?,
             _ => unreachable!("known flags matched above"),
         }
@@ -354,6 +383,7 @@ fn cmd_client(args: &[String]) -> Result<()> {
         seed,
         window,
         popularity,
+        workers,
     };
     println!(
         "driving {addr}: {queries} queries over {connections} connection(s), \
@@ -618,7 +648,8 @@ fn main() -> Result<()> {
             let c = fig14::run_shard_sweep(2048, 8)?;
             let d = fig14::run_socket_overhead(1024, 4)?;
             let e = fig14::run_tier_sweep(512, 9)?;
-            println!("{a}\n{b}\n{c}\n{d}\n{e}");
+            let f = fig14::run_connection_sweep(8, &fig14::CONNECTION_SWEEP)?;
+            println!("{a}\n{b}\n{c}\n{d}\n{e}\n{f}");
         }
         "fig15" => {
             let (a, b) = fig15::run(budget)?;

@@ -33,7 +33,7 @@
 //! every receive so a stalled server surfaces as a timeout error
 //! instead of a parked thread.
 
-use std::collections::{BTreeSet, VecDeque};
+use std::collections::{BTreeSet, HashMap, VecDeque};
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
@@ -157,6 +157,11 @@ pub struct NetClient {
     /// these are the orphans reported in
     /// [`WireError::ConnectionClosed`].
     inflight: BTreeSet<u64>,
+    /// Streamed replies mid-reassembly: request id → (next expected
+    /// chunk seq, output values so far). A request settles only at its
+    /// `SubmitDone` trailer (or a typed error), so a connection lost
+    /// mid-stream still reports the request as orphaned.
+    partials: HashMap<u64, (u32, Vec<f32>)>,
 }
 
 impl NetClient {
@@ -178,6 +183,7 @@ impl NetClient {
             next_req: 0,
             inbox: VecDeque::new(),
             inflight: BTreeSet::new(),
+            partials: HashMap::new(),
         })
     }
 
@@ -236,21 +242,65 @@ impl NetClient {
     /// ids (in submit order) — the caller decides what to re-issue,
     /// the client never hangs and never double-reports.
     fn read_settled(&mut self) -> super::Result<Frame> {
-        match wire::read_frame(&mut self.reader) {
-            Ok(frame) => {
-                match &frame {
-                    Frame::Response { req, .. } | Frame::Error { req, .. } => {
-                        self.inflight.remove(req);
+        loop {
+            match wire::read_frame(&mut self.reader) {
+                // streamed replies reassemble here, invisibly to the
+                // callers: chunks accumulate, and the trailer settles
+                // the request as a synthesized Response frame
+                Ok(Frame::SubmitChunk { req, seq, data }) => {
+                    let (next_seq, output) = self.partials.entry(req).or_default();
+                    if *next_seq != seq {
+                        return Err(NetError::Protocol(format!(
+                            "streamed reply for request {req} jumped from chunk {next_seq} to {seq}"
+                        )));
                     }
-                    _ => {}
+                    *next_seq += 1;
+                    output.extend_from_slice(&data);
                 }
-                Ok(frame)
+                Ok(Frame::SubmitDone {
+                    req,
+                    context,
+                    selected_rows,
+                    sim_cycles,
+                    completed_ns,
+                    total,
+                }) => {
+                    let (_, output) = self.partials.remove(&req).unwrap_or_default();
+                    if output.len() != total as usize {
+                        return Err(NetError::Protocol(format!(
+                            "streamed reply for request {req} reassembled {} of {total} values",
+                            output.len()
+                        )));
+                    }
+                    self.inflight.remove(&req);
+                    return Ok(Frame::Response {
+                        req,
+                        context,
+                        selected_rows,
+                        sim_cycles,
+                        completed_ns,
+                        output,
+                    });
+                }
+                Ok(frame) => {
+                    match &frame {
+                        Frame::Response { req, .. } | Frame::Error { req, .. } => {
+                            self.inflight.remove(req);
+                            // a typed error mid-stream abandons the partial
+                            self.partials.remove(req);
+                        }
+                        _ => {}
+                    }
+                    return Ok(frame);
+                }
+                Err(NetError::Closed) if !self.inflight.is_empty() => {
+                    let orphaned: Vec<u64> =
+                        std::mem::take(&mut self.inflight).into_iter().collect();
+                    self.partials.clear();
+                    return Err(NetError::Wire(WireError::ConnectionClosed { orphaned }));
+                }
+                Err(e) => return Err(e),
             }
-            Err(NetError::Closed) if !self.inflight.is_empty() => {
-                let orphaned: Vec<u64> = std::mem::take(&mut self.inflight).into_iter().collect();
-                Err(NetError::Wire(WireError::ConnectionClosed { orphaned }))
-            }
-            Err(e) => Err(e),
         }
     }
 
@@ -362,6 +412,31 @@ impl NetClient {
             context: ctx.id,
             embedding: embedding.to_vec(),
             ttl_ns,
+        })?;
+        self.inflight.insert(req);
+        Ok(req)
+    }
+
+    /// [`NetClient::submit`] over the wire-v4 streaming reply path:
+    /// the server answers with `SubmitChunk` slices of at most `chunk`
+    /// f32 values (0 = the whole output as one slice) closed by a
+    /// `SubmitDone` trailer. The client reassembles transparently —
+    /// [`NetClient::recv`] returns the same [`Response`] a plain
+    /// submit would, bit-identical, so this is purely a transport
+    /// shape choice (bounded reply frames for very large outputs).
+    pub fn submit_streamed(
+        &mut self,
+        ctx: RemoteContext,
+        embedding: &[f32],
+        chunk: u32,
+    ) -> super::Result<u64> {
+        let req = self.next_req();
+        self.send(&Frame::SubmitStreamed {
+            req,
+            context: ctx.id,
+            embedding: embedding.to_vec(),
+            ttl_ns: 0,
+            chunk,
         })?;
         self.inflight.insert(req);
         Ok(req)

@@ -1,11 +1,17 @@
 //! Multi-connection load generator: the remote analogue of
 //! [`crate::api::Engine::run_stream`] / `run_random`.
 //!
-//! Opens [`LoadPlan::connections`] sockets, registers each
-//! connection's contexts (comprehension time — completed before the
-//! run clock starts: every worker parks on a barrier after
-//! registration, and the wall window opens only when all of them are
-//! ready), then reproduces the stream-driver pacing over real TCP:
+//! Opens [`LoadPlan::connections`] sockets and drives them from a
+//! **bounded worker pool** ([`LoadPlan::workers`], default
+//! `min(connections, 32)`): worker `w` owns connections
+//! `w, w+W, w+2W, …`, so a 1k–4k-connection plan runs without
+//! spawning thousands of generator threads (the event-loop server
+//! holds that many sockets in one thread; the generator must not be
+//! the side that explodes). Each connection's contexts are registered
+//! first (comprehension time — completed before the run clock starts:
+//! every worker parks on a barrier after registration, and the wall
+//! window opens only when all of them are ready), then the pool
+//! reproduces the stream-driver pacing over real TCP:
 //! paced arrivals interleaved round-robin across connections (query
 //! `g` of the global stream is due at `g / qps`), a bounded in-flight
 //! window per connection (the client-side admission analogue), and
@@ -129,6 +135,10 @@ pub struct LoadPlan {
     pub window: usize,
     /// How queries choose among this connection's contexts.
     pub popularity: Popularity,
+    /// Generator threads driving the connections (each worker owns
+    /// `connections / workers` of them, interleaved). `0` = auto:
+    /// `min(connections, 32)`. Clamped to `connections`.
+    pub workers: usize,
 }
 
 impl Default for LoadPlan {
@@ -143,8 +153,16 @@ impl Default for LoadPlan {
             seed: 0xA3,
             window: 64,
             popularity: Popularity::Uniform,
+            workers: 0,
         }
     }
+}
+
+/// The connections worker `worker` of `workers` owns (the `worker`-th
+/// residue class, so per-connection identity — seed, share, id
+/// prefix — is independent of the pool size).
+fn owned_conns(connections: usize, workers: usize, worker: usize) -> Vec<usize> {
+    (worker..connections).step_by(workers.max(1)).collect()
 }
 
 /// How many of `total` queries connection `conn` sends (even split,
@@ -163,6 +181,10 @@ pub fn run_loadgen(addr: impl ToSocketAddrs, plan: LoadPlan) -> super::Result<Se
         .next()
         .ok_or_else(|| NetError::Io("load generator: address resolved to nothing".into()))?;
     let connections = plan.connections.max(1);
+    let workers = match plan.workers {
+        0 => connections.min(32),
+        w => w.min(connections),
+    };
     // the simulated clock is cumulative across an engine's lifetime:
     // take a drain-to-drain baseline so the report covers *this* run
     let mut control = NetClient::connect(addr)?;
@@ -170,13 +192,13 @@ pub fn run_loadgen(addr: impl ToSocketAddrs, plan: LoadPlan) -> super::Result<Se
     // workers register their contexts, then park here; the run clock
     // starts only when every connection is ready, so comprehension
     // time never pollutes the serving wall window
-    let barrier = Arc::new(Barrier::new(connections + 1));
-    let mut handles = Vec::with_capacity(connections);
-    for conn in 0..connections {
+    let barrier = Arc::new(Barrier::new(workers + 1));
+    let mut handles = Vec::with_capacity(workers);
+    for worker in 0..workers {
         let barrier = Arc::clone(&barrier);
         let handle = std::thread::Builder::new()
-            .name(format!("a3-loadgen{conn}"))
-            .spawn(move || connection_worker(addr, plan, connections, conn, barrier))
+            .name(format!("a3-loadgen{worker}"))
+            .spawn(move || pool_worker(addr, plan, connections, workers, worker, barrier))
             .map_err(|e| NetError::Io(format!("spawning load generator thread: {e}")))?;
         handles.push(handle);
     }
@@ -215,70 +237,124 @@ pub fn run_loadgen(addr: impl ToSocketAddrs, plan: LoadPlan) -> super::Result<Se
 
 type WorkerOut = Result<(Metrics, Vec<Response>), NetError>;
 
-fn connection_worker(
+/// One live connection a pool worker is driving.
+struct ConnState {
+    client: NetClient,
+    ctxs: Vec<RemoteContext>,
+    rng: Rng,
+    conn: usize,
+    queries: usize,
+    picker: ContextPicker,
+    inflight: HashMap<u64, u64>,
+    metrics: Metrics,
+    responses: Vec<Response>,
+}
+
+fn pool_worker(
     addr: SocketAddr,
     plan: LoadPlan,
     connections: usize,
-    conn: usize,
+    workers: usize,
+    worker: usize,
     barrier: Arc<Barrier>,
 ) -> WorkerOut {
-    // per-connection seed stream, decorrelated across connections
-    let mut rng = Rng::new(plan.seed.wrapping_add(conn as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-    // comprehension phase: connect + register, before the run clock
-    let setup = (|| -> super::Result<(NetClient, Vec<RemoteContext>)> {
-        let mut client = NetClient::connect(addr)?;
-        let contexts = plan.contexts_per_conn.max(1);
-        let mut ctxs = Vec::with_capacity(contexts);
-        for _ in 0..contexts {
-            let kv = KvPair::new(
-                plan.n,
-                plan.d,
-                rng.normal_vec(plan.n * plan.d, 1.0),
-                rng.normal_vec(plan.n * plan.d, 1.0),
-            );
-            ctxs.push(client.register_context(&kv)?);
+    let owned = owned_conns(connections, workers, worker);
+    // comprehension phase: connect + register every owned connection,
+    // before the run clock
+    let setup = (|| -> super::Result<Vec<ConnState>> {
+        let mut states = Vec::with_capacity(owned.len());
+        for &conn in &owned {
+            // per-connection seed stream, decorrelated across
+            // connections and independent of the pool size
+            let mut rng =
+                Rng::new(plan.seed.wrapping_add(conn as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let mut client = NetClient::connect(addr)?;
+            let contexts = plan.contexts_per_conn.max(1);
+            let mut ctxs = Vec::with_capacity(contexts);
+            for _ in 0..contexts {
+                let kv = KvPair::new(
+                    plan.n,
+                    plan.d,
+                    rng.normal_vec(plan.n * plan.d, 1.0),
+                    rng.normal_vec(plan.n * plan.d, 1.0),
+                );
+                ctxs.push(client.register_context(&kv)?);
+            }
+            let queries = share(plan.queries, connections, conn);
+            states.push(ConnState {
+                picker: ContextPicker::new(plan.popularity, ctxs.len()),
+                client,
+                ctxs,
+                rng,
+                conn,
+                queries,
+                inflight: HashMap::with_capacity(plan.window.max(1)),
+                metrics: Metrics::default(),
+                responses: Vec::with_capacity(queries),
+            });
         }
-        Ok((client, ctxs))
+        Ok(states)
     })();
     // every worker must reach the barrier — even one whose setup
     // failed — or the others (and the run-clock thread) wait forever
     barrier.wait();
-    let (mut client, ctxs) = setup?;
-    let picker = ContextPicker::new(plan.popularity, ctxs.len());
+    let mut states = setup?;
     let t0 = Instant::now();
-    let queries = share(plan.queries, connections, conn);
     let window = plan.window.max(1);
-    let mut inflight: HashMap<u64, u64> = HashMap::with_capacity(window);
-    let mut metrics = Metrics::default();
-    let mut responses = Vec::with_capacity(queries);
-    for j in 0..queries {
-        if let Some(qps) = plan.qps {
-            // the global stream interleaves connections round-robin:
-            // this connection's j-th query is global query j*C + conn
-            let due = Duration::from_secs_f64((j * connections + conn) as f64 / qps);
-            if let Some(sleep) = due.checked_sub(t0.elapsed()) {
-                std::thread::sleep(sleep);
+    // round j visits the worker's connections in ascending order —
+    // exactly the global round-robin stream order restricted to the
+    // owned residue class, so pacing due times stay monotone
+    let rounds = states.iter().map(|s| s.queries).max().unwrap_or(0);
+    for j in 0..rounds {
+        for s in &mut states {
+            if j >= s.queries {
+                continue;
             }
-        }
-        let embedding = rng.normal_vec(plan.d, 1.0);
-        // stamp before the socket write: client-observed latency
-        // includes the wire, exactly what a remote caller experiences
-        let submitted_ns = t0.elapsed().as_nanos() as u64;
-        let req = client.submit(ctxs[picker.pick(&mut rng, j, ctxs.len())], &embedding)?;
-        // arrivals must reach the server at their due time, not when
-        // the window next forces a receive (submits are write-buffered)
-        client.flush()?;
-        inflight.insert(req, submitted_ns);
-        while inflight.len() >= window {
-            recv_one(&mut client, &mut inflight, &mut metrics, &mut responses, t0, conn)?;
+            if let Some(qps) = plan.qps {
+                // the global stream interleaves connections
+                // round-robin: connection `c`'s j-th query is global
+                // query j*C + c
+                let due = Duration::from_secs_f64((j * connections + s.conn) as f64 / qps);
+                if let Some(sleep) = due.checked_sub(t0.elapsed()) {
+                    std::thread::sleep(sleep);
+                }
+            }
+            let embedding = s.rng.normal_vec(plan.d, 1.0);
+            // stamp before the socket write: client-observed latency
+            // includes the wire, exactly what a remote caller
+            // experiences
+            let submitted_ns = t0.elapsed().as_nanos() as u64;
+            let pick = s.picker.pick(&mut s.rng, j, s.ctxs.len());
+            let req = s.client.submit(s.ctxs[pick], &embedding)?;
+            // arrivals must reach the server at their due time, not
+            // when the window next forces a receive (submits are
+            // write-buffered)
+            s.client.flush()?;
+            s.inflight.insert(req, submitted_ns);
+            while s.inflight.len() >= window {
+                recv_one(
+                    &mut s.client,
+                    &mut s.inflight,
+                    &mut s.metrics,
+                    &mut s.responses,
+                    t0,
+                    s.conn,
+                )?;
+            }
         }
     }
     // tail: a drain barrier forces open batches out, then collect
-    if !inflight.is_empty() {
-        client.drain()?;
-    }
-    while !inflight.is_empty() {
-        recv_one(&mut client, &mut inflight, &mut metrics, &mut responses, t0, conn)?;
+    let mut metrics = Metrics::default();
+    let mut responses = Vec::new();
+    for mut s in states {
+        if !s.inflight.is_empty() {
+            s.client.drain()?;
+        }
+        while !s.inflight.is_empty() {
+            recv_one(&mut s.client, &mut s.inflight, &mut s.metrics, &mut s.responses, t0, s.conn)?;
+        }
+        metrics.absorb(s.metrics);
+        responses.append(&mut s.responses);
     }
     Ok((metrics, responses))
 }
@@ -365,6 +441,16 @@ mod tests {
         assert!(picker.cdf.is_empty());
         let mut rng = Rng::new(3);
         assert_eq!(picker.pick(&mut rng, 6, 4), 2);
+    }
+
+    #[test]
+    fn worker_partition_covers_every_connection_exactly_once() {
+        for (connections, workers) in [(7usize, 3usize), (4, 4), (9, 1), (3, 8), (1000, 32)] {
+            let mut seen: Vec<usize> =
+                (0..workers).flat_map(|w| owned_conns(connections, workers, w)).collect();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..connections).collect::<Vec<_>>(), "C={connections} W={workers}");
+        }
     }
 
     #[test]

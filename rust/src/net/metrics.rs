@@ -1,0 +1,147 @@
+//! Plaintext Prometheus exposition for the serving loop.
+//!
+//! The event-loop server optionally binds a second listener and
+//! answers `GET /metrics` with the text exposition format
+//! (`text/plain; version=0.0.4`) — gauges and counters only, no
+//! client library, scrape-ready. This module holds the side-effect
+//! free pieces: a tiny line builder and just enough HTTP/1.1 to parse
+//! a request line and frame a response, so both are unit-testable
+//! without sockets. The server assembles the actual numbers (queue
+//! depth, per-shard tier bytes, connection windows) and closes each
+//! scrape connection after the reply, so no HTTP state machine is
+//! needed beyond "read until the blank line".
+
+use std::fmt::Write as _;
+
+/// Builder for the exposition body: `# HELP`/`# TYPE` headers plus
+/// one sample per line, labels pre-escaped by construction (label
+/// values here are only shard/connection indices).
+#[derive(Debug, Default)]
+pub struct PromText {
+    out: String,
+}
+
+impl PromText {
+    /// Fresh, empty body.
+    pub fn new() -> PromText {
+        PromText { out: String::new() }
+    }
+
+    /// Emit the `# HELP` / `# TYPE` header pair for a metric family.
+    pub fn header(&mut self, name: &str, kind: &str, help: &str) {
+        let _ = writeln!(self.out, "# HELP {name} {help}");
+        let _ = writeln!(self.out, "# TYPE {name} {kind}");
+    }
+
+    /// Emit an unlabeled sample.
+    pub fn sample(&mut self, name: &str, value: u64) {
+        let _ = writeln!(self.out, "{name} {value}");
+    }
+
+    /// Emit a sample with one `key="value"` label (value must not
+    /// need escaping — indices and enum words only).
+    pub fn labeled(&mut self, name: &str, key: &str, label: &str, value: u64) {
+        let _ = writeln!(self.out, "{name}{{{key}=\"{label}\"}} {value}");
+    }
+
+    /// The finished exposition body.
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// Whether a buffered HTTP request is complete (header terminator
+/// seen). Scrape requests have no body, so the blank line is the end.
+pub fn request_complete(buf: &[u8]) -> bool {
+    buf.windows(4).any(|w| w == b"\r\n\r\n")
+}
+
+/// Parse the request line out of a buffered request:
+/// `(method, path)`, or `None` if it is not parseable HTTP.
+pub fn request_line(buf: &[u8]) -> Option<(String, String)> {
+    let line_end = buf.windows(2).position(|w| w == b"\r\n")?;
+    let line = std::str::from_utf8(&buf[..line_end]).ok()?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next()?.to_string();
+    let path = parts.next()?.to_string();
+    Some((method, path))
+}
+
+/// Frame a `200 OK` exposition reply (connection closes after it).
+pub fn http_ok(body: &str) -> Vec<u8> {
+    let mut out = String::with_capacity(body.len() + 128);
+    let _ = write!(
+        out,
+        "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    out.into_bytes()
+}
+
+/// Frame a `404 Not Found` reply for any path other than `/metrics`.
+pub fn http_not_found() -> Vec<u8> {
+    let body = "not found; scrape /metrics\n";
+    let mut out = String::new();
+    let _ = write!(
+        out,
+        "HTTP/1.1 404 Not Found\r\nContent-Type: text/plain\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    out.into_bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_emits_scrapeable_lines() {
+        let mut p = PromText::new();
+        p.header("a3_connections", "gauge", "live connections");
+        p.sample("a3_connections", 3);
+        p.labeled("a3_shard_resident_bytes", "shard", "1", 4096);
+        let body = p.finish();
+        assert!(body.contains("# HELP a3_connections live connections\n"));
+        assert!(body.contains("# TYPE a3_connections gauge\n"));
+        assert!(body.contains("\na3_connections 3\n"));
+        assert!(body.contains("a3_shard_resident_bytes{shard=\"1\"} 4096\n"));
+        // every line is either a comment or `name[{labels}] value`
+        for line in body.lines() {
+            assert!(line.starts_with('#') || line.split(' ').count() == 2, "bad line: {line}");
+        }
+    }
+
+    #[test]
+    fn request_parsing_handles_split_and_garbage_input() {
+        let req = b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n";
+        assert!(!request_complete(&req[..10]));
+        assert!(request_complete(req));
+        assert_eq!(
+            request_line(req),
+            Some(("GET".to_string(), "/metrics".to_string()))
+        );
+        assert_eq!(request_line(b"\xFF\xFE\r\n\r\n"), None);
+        assert_eq!(request_line(b"GET\r\n\r\n"), None, "a request line needs a path");
+    }
+
+    #[test]
+    fn responses_carry_exact_content_length() {
+        let ok = http_ok("a3_up 1\n");
+        let text = String::from_utf8(ok).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Length: 8\r\n"));
+        assert!(text.ends_with("\r\n\r\na3_up 1\n"));
+        let nf = String::from_utf8(http_not_found()).unwrap();
+        assert!(nf.starts_with("HTTP/1.1 404 Not Found\r\n"));
+        let body = nf.split("\r\n\r\n").nth(1).unwrap();
+        let declared: usize = nf
+            .lines()
+            .find_map(|l| l.strip_prefix("Content-Length: "))
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert_eq!(body.len(), declared);
+    }
+}

@@ -5,27 +5,41 @@
 //! The paper motivates A³ with attention-serving workloads (QA over
 //! knowledge bases, §II) where queries arrive from many concurrent
 //! clients; this module is the host-side network contract for that
-//! shape, built entirely on `std::net` + threads (tokio is not in the
-//! offline vendor set):
+//! shape, built entirely on `std` (raw `libc` epoll / `poll(2)` — no
+//! tokio/mio in the offline vendor set):
 //!
 //! * [`wire`] — a versioned, length-prefixed binary codec for the
 //!   full request/response surface (register context with K/V
-//!   tensors, submit, evict, drain/stats, shutdown), with explicit
-//!   error frames that map 1:1 onto [`A3Error`] variants — remote
-//!   callers see `QueueFull`/`MemoryBudget`/`UnknownContext` as typed
-//!   codes, not strings;
-//! * [`server`] — a `TcpListener` accept loop spawning per-connection
-//!   handler threads that translate frames into engine calls,
-//!   pipelining any number of in-flight tickets per connection (one
-//!   router thread demultiplexes engine completions back to their
-//!   connections) and exerting backpressure through the engine's
-//!   condvar admission path (a blocked reader stalls the client's
-//!   socket — TCP backpressure end to end);
+//!   tensors, submit — plain or streamed in `SubmitChunk` slices —
+//!   evict, drain/stats, shutdown), with explicit error frames that
+//!   map 1:1 onto [`A3Error`] variants — remote callers see
+//!   `QueueFull`/`MemoryBudget`/`UnknownContext` as typed codes, not
+//!   strings. [`wire::FrameDecoder`] is the incremental push-parser
+//!   the event loop feeds from nonblocking reads;
+//! * [`poll`] — the std-only readiness layer: an epoll-backed
+//!   [`Poller`] (with a portable `poll(2)` fallback), per-fd interest
+//!   registration, and an eventfd/pipe [`Waker`] other threads use to
+//!   poke the loop;
+//! * [`server`] — the event-driven front door: **one** event-loop
+//!   thread multiplexes every connection (nonblocking accept,
+//!   per-connection read/write frame state machines, a deadline heap
+//!   for idle timeouts), a router thread demultiplexes engine
+//!   completions back to their connections through the loop's
+//!   inbox + waker, and an ops thread absorbs the blocking engine
+//!   calls — O(shards + 3) threads total regardless of connection
+//!   count. Backpressure is end to end: a connection whose submit
+//!   hits closed admission is parked (its reads stop, the client's
+//!   socket stalls) until admission reopens or its `admission_wait`
+//!   expires into a typed `QueueFull`. An optional second listener
+//!   serves plaintext Prometheus on `GET /metrics`
+//!   ([`NetServerConfig::metrics_addr`]);
 //! * [`client`] — a blocking client with the same typed API shape as
-//!   [`crate::api`] (`register_context` → `submit` → `recv`), plus
+//!   [`crate::api`] (`register_context` → `submit` → `recv`),
+//!   transparently reassembling streamed replies, plus
 //! * [`loadgen`] — a multi-connection load generator reproducing the
-//!   `run_stream`/`run_random` pacing over real sockets, returning a
-//!   [`crate::api::ServeReport`].
+//!   `run_stream`/`run_random` pacing over real sockets from a
+//!   bounded worker pool (thousands of connections, dozens of
+//!   threads), returning a [`crate::api::ServeReport`].
 //!
 //! The layer is failure-typed end to end (see the "Failure model" in
 //! [`crate::api`]): the client tracks in-flight submits and turns a
@@ -86,13 +100,16 @@
 
 pub mod client;
 pub mod loadgen;
+pub mod metrics;
+pub mod poll;
 pub mod server;
 pub mod wire;
 
 pub use client::{Backoff, NetClient, RecvOutcome, RemoteContext, RemoteStats};
 pub use loadgen::{run_loadgen, LoadPlan, Popularity};
+pub use poll::{raise_nofile_limit, Interest, PollEvent, Poller, Waker};
 pub use server::{NetServer, NetServerConfig};
-pub use wire::{Frame, WireError, WireStats, WIRE_VERSION};
+pub use wire::{Frame, FrameDecoder, WireError, WireStats, WIRE_VERSION};
 
 use std::fmt;
 

@@ -1,0 +1,674 @@
+//! `net::poll` — a minimal std-only readiness poller: the event-loop
+//! substrate of [`crate::net::server`].
+//!
+//! No `mio`/`tokio` (not in the offline vendor set): on Linux this is
+//! raw `epoll(7)` through inline FFI — std already links libc, so the
+//! symbols resolve without adding any dependency — and on other unix
+//! platforms it falls back to `poll(2)` over the same API. Both
+//! backends are **level-triggered**: an event repeats every wait while
+//! the condition holds, so the owner never has to read/write to
+//! exhaustion inside one wakeup. Non-unix platforms compile but
+//! [`Poller::new`] returns a typed error — the event-driven server is
+//! gated at runtime, not with a `compile_error!`.
+//!
+//! A [`Waker`] — an `eventfd(2)` on Linux, a pipe elsewhere — lets
+//! other threads (the engine-response router, a shutdown call) pull a
+//! parked [`Poller::wait`] out of its sleep. The wake fd is drained
+//! inside `wait` and never surfaces as a user event: a wake shows up
+//! as a normally-returning `wait` whose caller re-checks its inboxes.
+//! An atomic pending flag coalesces wake bursts into at most one
+//! in-flight byte, so the fd can never fill and `wake` never blocks.
+
+use std::io;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Raw file descriptor (matches `std::os::unix::io::RawFd` on unix; a
+/// placeholder alias elsewhere so the serving stack still compiles on
+/// unsupported platforms — [`Poller::new`] is the runtime gate).
+pub type RawFd = i32;
+
+/// The raw fd of a bound listener, for [`Poller::register`].
+#[cfg(unix)]
+pub fn listener_fd(l: &TcpListener) -> RawFd {
+    use std::os::unix::io::AsRawFd;
+    l.as_raw_fd()
+}
+
+/// Non-unix placeholder (a [`Poller`] cannot be constructed there).
+#[cfg(not(unix))]
+pub fn listener_fd(_l: &TcpListener) -> RawFd {
+    -1
+}
+
+/// The raw fd of a connected stream, for [`Poller::register`].
+#[cfg(unix)]
+pub fn stream_fd(s: &TcpStream) -> RawFd {
+    use std::os::unix::io::AsRawFd;
+    s.as_raw_fd()
+}
+
+/// Non-unix placeholder (a [`Poller`] cannot be constructed there).
+#[cfg(not(unix))]
+pub fn stream_fd(_s: &TcpStream) -> RawFd {
+    -1
+}
+
+/// What a registered fd should be watched for. Re-register with
+/// [`Poller::modify`] as the interest set changes (e.g. add WRITE
+/// while a write queue is non-empty, drop READ while backpressure
+/// parks a connection).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interest {
+    pub readable: bool,
+    pub writable: bool,
+}
+
+impl Interest {
+    /// Read-only interest.
+    pub const READ: Interest = Interest { readable: true, writable: false };
+    /// Write-only interest.
+    pub const WRITE: Interest = Interest { readable: false, writable: true };
+    /// No interest: the fd stays registered but reports nothing (a
+    /// fully-parked connection).
+    pub const NONE: Interest = Interest { readable: false, writable: false };
+}
+
+/// One readiness event from [`Poller::wait`].
+#[derive(Clone, Copy, Debug)]
+pub struct PollEvent {
+    /// The token the fd was registered with.
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    /// Error or hangup on the fd; the owner should try a read (which
+    /// reports EOF / the error) and close.
+    pub error: bool,
+}
+
+// -- shared unix FFI (std links libc; the symbols resolve without a
+// -- libc crate dependency) -----------------------------------------
+
+#[cfg(unix)]
+mod cffi {
+    extern "C" {
+        pub fn close(fd: i32) -> i32;
+        pub fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        pub fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+    }
+}
+
+/// The wakeup fd pair shared between a [`Poller`] and its [`Waker`]s.
+/// On Linux `read == write` (one eventfd); elsewhere it is a pipe.
+/// The `pending` flag keeps at most one unconsumed wake byte in the
+/// fd, so `signal` can never block on a full pipe.
+#[cfg(unix)]
+struct WakeFds {
+    read: RawFd,
+    write: RawFd,
+    pending: AtomicBool,
+}
+
+#[cfg(unix)]
+impl WakeFds {
+    fn signal(&self) {
+        if self.pending.swap(true, Ordering::AcqRel) {
+            return; // a wake byte is already in flight
+        }
+        // 8 bytes for eventfd semantics; a pipe just delivers the
+        // first byte and the drain read consumes whatever arrived
+        let one: u64 = 1;
+        let buf = one.to_ne_bytes();
+        let n = if self.read == self.write { 8 } else { 1 };
+        // SAFETY: valid fd + valid buffer of `n` bytes
+        unsafe { cffi::write(self.write, buf.as_ptr(), n) };
+    }
+
+    /// Consume the pending wake byte(s). Only called when the poller
+    /// reported the read side readable, so the read cannot block.
+    fn drain(&self) {
+        let mut buf = [0u8; 16];
+        // SAFETY: valid fd + valid buffer
+        unsafe { cffi::read(self.read, buf.as_mut_ptr(), buf.len()) };
+        self.pending.store(false, Ordering::Release);
+    }
+}
+
+#[cfg(unix)]
+impl Drop for WakeFds {
+    fn drop(&mut self) {
+        // SAFETY: fds are owned by this pair and closed exactly once
+        unsafe {
+            cffi::close(self.read);
+            if self.write != self.read {
+                cffi::close(self.write);
+            }
+        }
+    }
+}
+
+/// A clonable handle that pulls [`Poller::wait`] out of its sleep from
+/// any thread. Cheap (one atomic check + at most one `write(2)`), and
+/// coalescing: any number of wakes between two waits cost one byte.
+#[derive(Clone)]
+pub struct Waker {
+    #[cfg(unix)]
+    fds: Arc<WakeFds>,
+    #[cfg(not(unix))]
+    _nothing: std::marker::PhantomData<()>,
+}
+
+impl Waker {
+    /// Wake the poller (idempotent between waits; never blocks).
+    pub fn wake(&self) {
+        #[cfg(unix)]
+        self.fds.signal();
+    }
+}
+
+impl std::fmt::Debug for Waker {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Waker")
+    }
+}
+
+/// Clamp a wait timeout to the millisecond `int` the syscalls take:
+/// `None` = block forever (-1), sub-millisecond sleeps round up to
+/// 1 ms so a short deadline never busy-spins at timeout 0.
+fn timeout_ms(timeout: Option<Duration>) -> i32 {
+    match timeout {
+        None => -1,
+        Some(d) if d.is_zero() => 0,
+        Some(d) => u64::max(1, d.as_millis().min(i32::MAX as u128) as u64) as i32,
+    }
+}
+
+// -- Linux backend: epoll -------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use super::{cffi, timeout_ms, Interest, PollEvent, RawFd, WakeFds};
+    use std::io;
+    use std::time::Duration;
+
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+    const EFD_CLOEXEC: i32 = 0o2000000;
+    const EFD_NONBLOCK: i32 = 0o4000;
+
+    /// `struct epoll_event` with the kernel's exact layout: packed on
+    /// x86-64 (the historical ABI quirk), naturally aligned elsewhere.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        fn eventfd(initval: u32, flags: i32) -> i32;
+    }
+
+    /// Token the wake fd registers under; never observable (drained
+    /// inside `wait`), so user tokens keep the full `u64` space.
+    const WAKE_TOKEN: u64 = u64::MAX;
+
+    pub struct Backend {
+        epfd: RawFd,
+        buf: Vec<EpollEvent>,
+    }
+
+    impl Backend {
+        pub fn new() -> io::Result<(Backend, WakeFds)> {
+            // SAFETY: plain syscalls; results checked below
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            // SAFETY: plain syscall
+            let efd = unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) };
+            if efd < 0 {
+                let e = io::Error::last_os_error();
+                // SAFETY: epfd was just opened by us
+                unsafe { cffi::close(epfd) };
+                return Err(e);
+            }
+            let mut backend = Backend { epfd, buf: vec![EpollEvent { events: 0, data: 0 }; 1024] };
+            let wake = WakeFds {
+                read: efd,
+                write: efd,
+                pending: std::sync::atomic::AtomicBool::new(false),
+            };
+            backend.ctl(EPOLL_CTL_ADD, efd, WAKE_TOKEN, Interest::READ)?;
+            Ok((backend, wake))
+        }
+
+        fn ctl(&mut self, op: i32, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            let mut events = 0u32;
+            if interest.readable {
+                events |= EPOLLIN;
+            }
+            if interest.writable {
+                events |= EPOLLOUT;
+            }
+            let mut ev = EpollEvent { events, data: token };
+            // SAFETY: epfd/fd are live fds; ev is a valid epoll_event
+            let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, interest)
+        }
+
+        pub fn modify(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, interest)
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, 0, Interest::NONE)
+        }
+
+        pub fn wait(
+            &mut self,
+            wake: &WakeFds,
+            events: &mut Vec<PollEvent>,
+            timeout: Option<Duration>,
+        ) -> io::Result<()> {
+            events.clear();
+            // SAFETY: buf is a live array of epoll_event; len matches
+            let n = unsafe {
+                epoll_wait(self.epfd, self.buf.as_mut_ptr(), self.buf.len() as i32, timeout_ms(timeout))
+            };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(()); // EINTR: report an empty wakeup
+                }
+                return Err(e);
+            }
+            for slot in &self.buf[..n as usize] {
+                // copy out of the (possibly packed) struct before use
+                let ev = *slot;
+                let flags = ev.events;
+                if ev.data == WAKE_TOKEN {
+                    wake.drain();
+                    continue;
+                }
+                events.push(PollEvent {
+                    token: ev.data,
+                    readable: flags & EPOLLIN != 0,
+                    writable: flags & EPOLLOUT != 0,
+                    error: flags & (EPOLLERR | EPOLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Backend {
+        fn drop(&mut self) {
+            // SAFETY: epfd is owned by this backend
+            unsafe { cffi::close(self.epfd) };
+        }
+    }
+}
+
+// -- portable unix fallback: poll(2) --------------------------------
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod sys {
+    use super::{cffi, timeout_ms, Interest, PollEvent, RawFd, WakeFds};
+    use std::collections::HashMap;
+    use std::io;
+    use std::time::Duration;
+
+    const POLLIN: i16 = 0x001;
+    const POLLOUT: i16 = 0x004;
+    const POLLERR: i16 = 0x008;
+    const POLLHUP: i16 = 0x010;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct PollFd {
+        fd: i32,
+        events: i16,
+        revents: i16,
+    }
+
+    extern "C" {
+        // nfds_t is `unsigned int` on every non-Linux unix we target
+        fn poll(fds: *mut PollFd, nfds: u32, timeout: i32) -> i32;
+        fn pipe(fds: *mut i32) -> i32;
+    }
+
+    pub struct Backend {
+        regs: HashMap<RawFd, (u64, Interest)>,
+        fds: Vec<PollFd>,
+    }
+
+    impl Backend {
+        pub fn new() -> io::Result<(Backend, WakeFds)> {
+            let mut pair = [0i32; 2];
+            // SAFETY: plain syscall writing two fds into `pair`
+            if unsafe { pipe(pair.as_mut_ptr()) } < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            let wake = WakeFds {
+                read: pair[0],
+                write: pair[1],
+                pending: std::sync::atomic::AtomicBool::new(false),
+            };
+            Ok((Backend { regs: HashMap::new(), fds: Vec::new() }, wake))
+        }
+
+        pub fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            if self.regs.insert(fd, (token, interest)).is_some() {
+                return Err(io::Error::new(io::ErrorKind::AlreadyExists, "fd already registered"));
+            }
+            Ok(())
+        }
+
+        pub fn modify(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            match self.regs.get_mut(&fd) {
+                Some(slot) => {
+                    *slot = (token, interest);
+                    Ok(())
+                }
+                None => Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered")),
+            }
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            match self.regs.remove(&fd) {
+                Some(_) => Ok(()),
+                None => Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered")),
+            }
+        }
+
+        pub fn wait(
+            &mut self,
+            wake: &WakeFds,
+            events: &mut Vec<PollEvent>,
+            timeout: Option<Duration>,
+        ) -> io::Result<()> {
+            events.clear();
+            self.fds.clear();
+            self.fds.push(PollFd { fd: wake.read, events: POLLIN, revents: 0 });
+            for (&fd, &(_token, interest)) in &self.regs {
+                let mut mask = 0i16;
+                if interest.readable {
+                    mask |= POLLIN;
+                }
+                if interest.writable {
+                    mask |= POLLOUT;
+                }
+                self.fds.push(PollFd { fd, events: mask, revents: 0 });
+            }
+            // SAFETY: fds is a live array of pollfd; len matches
+            let n = unsafe { poll(self.fds.as_mut_ptr(), self.fds.len() as u32, timeout_ms(timeout)) };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for slot in &self.fds {
+                if slot.revents == 0 {
+                    continue;
+                }
+                if slot.fd == wake.read {
+                    wake.drain();
+                    continue;
+                }
+                let Some(&(token, _)) = self.regs.get(&slot.fd) else {
+                    continue;
+                };
+                events.push(PollEvent {
+                    token,
+                    readable: slot.revents & POLLIN != 0,
+                    writable: slot.revents & POLLOUT != 0,
+                    error: slot.revents & (POLLERR | POLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+/// The readiness poller: epoll on Linux, poll(2) on other unix. One
+/// instance belongs to one event-loop thread; [`Waker`] handles are
+/// the only cross-thread surface.
+pub struct Poller {
+    #[cfg(unix)]
+    backend: sys::Backend,
+    #[cfg(unix)]
+    wake: Arc<WakeFds>,
+    #[cfg(not(unix))]
+    _nothing: std::marker::PhantomData<()>,
+}
+
+#[cfg(unix)]
+impl Poller {
+    /// Open the platform backend plus its wake channel.
+    pub fn new() -> io::Result<Poller> {
+        let (backend, wake) = sys::Backend::new()?;
+        Ok(Poller { backend, wake: Arc::new(wake) })
+    }
+
+    /// A handle other threads use to interrupt [`Poller::wait`].
+    pub fn waker(&self) -> Waker {
+        Waker { fds: Arc::clone(&self.wake) }
+    }
+
+    /// Start watching `fd` under `token`. The fd must stay open until
+    /// [`Poller::deregister`] (closing a registered fd first is a
+    /// caller bug on the poll(2) backend).
+    pub fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        self.backend.register(fd, token, interest)
+    }
+
+    /// Change an existing registration's token/interest.
+    pub fn modify(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        self.backend.modify(fd, token, interest)
+    }
+
+    /// Stop watching `fd` (call before closing it).
+    pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        self.backend.deregister(fd)
+    }
+
+    /// Block until at least one event, a wake, a timeout, or EINTR —
+    /// the last three all return with `events` empty. Events are
+    /// level-triggered.
+    pub fn wait(&mut self, events: &mut Vec<PollEvent>, timeout: Option<Duration>) -> io::Result<()> {
+        self.backend.wait(&self.wake, events, timeout)
+    }
+}
+
+#[cfg(not(unix))]
+impl Poller {
+    /// Unsupported platform: a typed runtime error, not a build break.
+    pub fn new() -> io::Result<Poller> {
+        Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "the event-driven net server needs epoll (Linux) or poll(2) (unix)",
+        ))
+    }
+
+    pub fn waker(&self) -> Waker {
+        Waker { _nothing: std::marker::PhantomData }
+    }
+
+    pub fn register(&mut self, _fd: RawFd, _token: u64, _interest: Interest) -> io::Result<()> {
+        unreachable!("no Poller can exist on this platform")
+    }
+
+    pub fn modify(&mut self, _fd: RawFd, _token: u64, _interest: Interest) -> io::Result<()> {
+        unreachable!("no Poller can exist on this platform")
+    }
+
+    pub fn deregister(&mut self, _fd: RawFd) -> io::Result<()> {
+        unreachable!("no Poller can exist on this platform")
+    }
+
+    pub fn wait(
+        &mut self,
+        _events: &mut Vec<PollEvent>,
+        _timeout: Option<Duration>,
+    ) -> io::Result<()> {
+        unreachable!("no Poller can exist on this platform")
+    }
+}
+
+// -- fd budget ------------------------------------------------------
+
+#[cfg(unix)]
+mod rlimit {
+    use std::io;
+
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+
+    #[cfg(target_os = "linux")]
+    const RLIMIT_NOFILE: i32 = 7;
+    #[cfg(not(target_os = "linux"))]
+    const RLIMIT_NOFILE: i32 = 8;
+
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+    }
+
+    pub fn raise_nofile(want: u64) -> io::Result<u64> {
+        let mut lim = RLimit { cur: 0, max: 0 };
+        // SAFETY: plain syscall writing into `lim`
+        if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        if lim.cur >= want {
+            return Ok(lim.cur);
+        }
+        let target = want.min(lim.max);
+        let new = RLimit { cur: target, max: lim.max };
+        // SAFETY: plain syscall reading `new`
+        if unsafe { setrlimit(RLIMIT_NOFILE, &new) } < 0 {
+            // best effort: report what we still have, not an error
+            return Ok(lim.cur);
+        }
+        Ok(target)
+    }
+}
+
+/// Best-effort raise of the process `RLIMIT_NOFILE` soft limit toward
+/// `want` (capped at the hard limit). Returns the effective soft
+/// limit, which may be below `want` — callers holding thousands of
+/// sockets (the connection sweep, `a3 serve --listen`) check the
+/// return value rather than discovering EMFILE mid-accept.
+pub fn raise_nofile_limit(want: u64) -> io::Result<u64> {
+    #[cfg(unix)]
+    {
+        rlimit::raise_nofile(want)
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = want;
+        Err(io::Error::new(io::ErrorKind::Unsupported, "RLIMIT_NOFILE is a unix concept"))
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::time::Instant;
+
+    #[test]
+    fn listener_reports_readable_on_pending_accept() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let mut poller = Poller::new().unwrap();
+        poller.register(listener_fd(&listener), 7, Interest::READ).unwrap();
+        let mut events = Vec::new();
+        // idle: a short wait times out with no events
+        poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+        assert!(events.is_empty());
+        let _client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert!(events.iter().any(|e| e.token == 7 && e.readable), "{events:?}");
+    }
+
+    #[test]
+    fn stream_reports_writable_and_interest_changes_apply() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let stream = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        stream.set_nonblocking(true).unwrap();
+        let (mut peer, _) = listener.accept().unwrap();
+        let mut poller = Poller::new().unwrap();
+        let fd = stream_fd(&stream);
+        poller.register(fd, 3, Interest::WRITE).unwrap();
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert!(events.iter().any(|e| e.token == 3 && e.writable), "{events:?}");
+        // drop write interest: an idle wait sees nothing even though
+        // the socket stays writable (level-triggered on interest only)
+        poller.modify(fd, 3, Interest::READ).unwrap();
+        poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+        assert!(events.is_empty(), "{events:?}");
+        // peer data flips the read side
+        peer.write_all(b"x").unwrap();
+        peer.flush().unwrap();
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert!(events.iter().any(|e| e.token == 3 && e.readable), "{events:?}");
+        poller.deregister(fd).unwrap();
+    }
+
+    #[test]
+    fn waker_interrupts_a_parked_wait_and_coalesces() {
+        let mut poller = Poller::new().unwrap();
+        let waker = poller.waker();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            // a burst of wakes costs one in-flight byte
+            for _ in 0..100 {
+                waker.wake();
+            }
+        });
+        let mut events = Vec::new();
+        let t0 = Instant::now();
+        poller.wait(&mut events, Some(Duration::from_secs(10))).unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(5), "wake must interrupt the park");
+        assert!(events.is_empty(), "wakes are not user events: {events:?}");
+        t.join().unwrap();
+        // the coalesced burst was fully drained: the next wait parks
+        // until its timeout instead of spinning on stale wake bytes
+        let t1 = Instant::now();
+        poller.wait(&mut events, Some(Duration::from_millis(20))).unwrap();
+        assert!(t1.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn nofile_raise_reports_a_usable_limit() {
+        let got = raise_nofile_limit(256).unwrap();
+        assert!(got >= 256 || got > 0, "soft limit must be positive: {got}");
+    }
+}

@@ -1,46 +1,60 @@
-//! The TCP front door: accept loop → per-connection handler threads →
-//! one response router.
+//! The TCP front door: one event-loop thread multiplexing every
+//! connection, one response router, one blocking-ops executor.
 //!
-//! Threading model (std threads only):
+//! Threading model (std threads only — thread count is O(shards),
+//! never O(connections)):
 //!
-//! * **accept thread** — blocks on [`std::net::TcpListener::accept`],
-//!   spawning a reader + writer thread pair per connection;
-//! * **reader thread** (per connection) — validates the preamble,
-//!   then translates request frames into [`Engine`] calls. Submits
-//!   are *pipelined*: the reader registers a route for the ticket and
-//!   immediately reads the next frame, so one connection can have any
-//!   number of queries in flight. When the engine's admission limit
-//!   closes, the reader parks on the engine's condvar admission path
-//!   (`Engine::wait_for_admission`) — while it waits it reads no
-//!   more frames, the kernel's socket buffer fills, and the remote
-//!   client's writes stall: backpressure propagates end to end over
-//!   TCP. Only after `admission_wait` of closed admission does the
-//!   client get a typed `QueueFull` error frame;
-//! * **writer thread** (per connection) — serializes reply frames
-//!   from an mpsc channel onto the socket (batching frames per flush),
-//!   so routed completions and direct replies never interleave
-//!   mid-frame;
+//! * **event-loop thread** — owns a [`super::poll::Poller`] (epoll on
+//!   Linux, `poll(2)` elsewhere) with the listener, the optional
+//!   `/metrics` listener, and every connection registered nonblocking.
+//!   Readable connections feed a per-connection incremental
+//!   [`wire::FrameDecoder`]; decoded request frames are translated to
+//!   [`Engine`] calls inline (submit, evict, stats) or handed to the
+//!   ops thread (register, drain — the blocking calls). Reply bytes go
+//!   through a per-connection write queue drained on writability, and
+//!   the loop re-registers each fd's interest set as its state changes:
+//!   READ while the connection may produce frames, WRITE while its
+//!   queue is non-empty, neither while it is parked on backpressure.
 //! * **router thread** — the single consumer of the engine's
 //!   completion queue: it demultiplexes each [`Response`] to the
-//!   connection that submitted it (by ticket id) and attributes
-//!   per-connection latency into a [`AttributedMetrics`] window. A
-//!   completion that arrives before its route is registered is
-//!   stashed and delivered when the submitter catches up.
+//!   connection that submitted it (by ticket id), attributes
+//!   per-connection latency, and injects the encoded reply into the
+//!   loop's inbox, waking the poller through its eventfd/pipe
+//!   [`super::poll::Waker`]. A completion that arrives before its
+//!   route is registered is stashed and delivered when the submitter
+//!   catches up.
+//! * **ops thread** — runs the engine calls that block (context
+//!   registration, the drain barrier) so the event loop never stalls;
+//!   a connection with an op in flight is *deferred* (its frame
+//!   pipeline pauses, preserving per-connection request ordering) and
+//!   resumes when the op's reply arrives through the inbox.
+//!
+//! Backpressure: when the engine's admission limit closes, a
+//! submitting connection is *parked* — its embedding is reclaimed,
+//! its READ interest is dropped, and the kernel's socket buffer fills
+//! until the remote writer stalls; the park is retried every loop
+//! tick until admission reopens or `admission_wait` expires into a
+//! typed `QueueFull`. The wakeup path (router/ops → inbox → waker →
+//! poller) is the only cross-thread signal; nothing ever blocks the
+//! loop.
 //!
 //! The server owns response consumption for its engine: do not call
 //! `try_recv`/`recv_timeout`/`run_stream` on an engine while a
 //! [`NetServer`] is bound to it.
 
-use std::collections::HashMap;
-use std::io::{BufReader, BufWriter, Write};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, HashSet, VecDeque};
+use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use super::wire::{self, Frame, WireStats};
+use super::metrics::{self, PromText};
+use super::poll::{listener_fd, stream_fd, Interest, PollEvent, Poller, Waker};
+use super::wire::{self, Frame, FrameDecoder, WireStats};
 use super::NetError;
-use crate::api::{A3Error, Engine, EngineStats};
+use crate::api::{A3Error, ContextHandle, Engine, EngineStats};
 use crate::coordinator::metrics::{AttributedMetrics, MetricsReport};
 use crate::coordinator::request::{QueryId, Response};
 
@@ -54,11 +68,10 @@ pub const NO_REQ: u64 = u64::MAX;
 /// `NetServerConfig { admission_wait: Duration::ZERO, ..Default::default() }`.
 #[derive(Clone, Copy, Debug)]
 pub struct NetServerConfig {
-    /// How long a connection reader parks on the engine's admission
-    /// condvar (in slices, rechecking worker liveness) before giving
-    /// up and answering the submit with a typed
-    /// [`A3Error::QueueFull`] frame. While it parks, TCP backpressure
-    /// stalls the client.
+    /// How long a submitting connection stays parked on closed
+    /// admission (retried every loop tick) before giving up and
+    /// answering the submit with a typed [`A3Error::QueueFull`]
+    /// frame. While it parks, TCP backpressure stalls the client.
     pub admission_wait: Duration,
     /// Close a connection whose client sends no frame for this long
     /// (`None` = never). A closed idle connection's owed completions
@@ -69,14 +82,18 @@ pub struct NetServerConfig {
     /// unbounded). A connection over the limit is answered with one
     /// typed [`A3Error::QueueFull`] error frame (pending = live
     /// connections, limit = the cap) and closed — a typed rejection
-    /// the client can back off on, never a silent drop.
+    /// the client can back off on, never a silent drop. Rejected
+    /// connections never enter the `conns` gauge.
     pub max_connections: Option<usize>,
-    /// How long the router keeps draining in-flight completions to
-    /// their connections after a shutdown request before it gives up
-    /// on routes that can no longer complete (queries parked in
-    /// never-closing batches). The graceful-drain window of a rolling
-    /// restart.
+    /// How long the server keeps draining in-flight completions and
+    /// pending reply bytes after a shutdown request before it gives up
+    /// on work that can no longer finish (queries parked in
+    /// never-closing batches, clients that stopped reading). The
+    /// graceful-drain window of a rolling restart.
     pub drain_grace: Duration,
+    /// Bind a second listener here and answer `GET /metrics` with the
+    /// plaintext Prometheus exposition (`None` = no metrics listener).
+    pub metrics_addr: Option<SocketAddr>,
 }
 
 impl Default for NetServerConfig {
@@ -86,6 +103,7 @@ impl Default for NetServerConfig {
             idle_timeout: None,
             max_connections: None,
             drain_grace: Duration::from_millis(500),
+            metrics_addr: None,
         }
     }
 }
@@ -99,11 +117,13 @@ struct RouteEntry {
     conn: u64,
     /// Server-clock submit time (ns since server start).
     submitted_ns: u64,
-    out: mpsc::Sender<Frame>,
+    /// Streaming chunk size in f32 values: 0 = plain [`Frame::Response`],
+    /// anything else = `SubmitChunk*`/`SubmitDone` slices of that size.
+    chunk: u32,
 }
 
 /// Ticket → connection demux state, shared by the router thread and
-/// the connection readers (one short lock per submit/completion).
+/// the event loop (one short lock per submit/completion).
 #[derive(Default)]
 struct RouterState {
     routes: HashMap<QueryId, RouteEntry>,
@@ -116,12 +136,30 @@ struct RouterState {
     dead: HashMap<QueryId, A3Error>,
 }
 
+/// Encoded reply bytes bound for one connection, injected into the
+/// event loop by the router or ops thread through the inbox + waker.
+struct Deliver {
+    conn: u64,
+    bytes: Vec<u8>,
+    /// This delivery completes a deferred blocking op: un-defer the
+    /// connection so its frame pipeline resumes.
+    op_done: bool,
+}
+
+/// A blocking engine call handed off the event loop.
+enum OpJob {
+    Register { conn: u64, req: u64, n: u32, d: u32, key: Vec<f32>, value: Vec<f32> },
+    Drain { conn: u64, req: u64 },
+}
+
 struct ServerShared {
     engine: Arc<Engine>,
     cfg: NetServerConfig,
-    /// The bound listen address — the shutdown poke's target.
-    addr: SocketAddr,
     stop: AtomicBool,
+    /// Pokes the poller out of `wait` (inbox deliveries, shutdown).
+    waker: Waker,
+    /// Cross-thread reply bytes for the event loop to enqueue.
+    inbox: Mutex<Vec<Deliver>>,
     router: Mutex<RouterState>,
     /// Per-connection serving metrics for *live* connections (keyed
     /// by connection id). Live windows hold every latency sample for
@@ -133,8 +171,17 @@ struct ServerShared {
     /// count is bounded.
     retired: Mutex<Vec<(u64, MetricsReport)>>,
     next_conn: AtomicU64,
-    /// Currently live connections (the `max_connections` gauge).
+    /// Currently live counted connections (the `max_connections`
+    /// gauge). Incremented once at accept, decremented exactly once on
+    /// the single close path; cap-rejected connections never touch it.
     conns: AtomicUsize,
+    /// Blocking ops sent to the ops thread but not yet delivered —
+    /// keeps the drain-grace exit honest about in-flight replies.
+    ops_pending: AtomicUsize,
+    accepted_total: AtomicU64,
+    rejected_total: AtomicU64,
+    idle_reaped_total: AtomicU64,
+    completed_total: AtomicU64,
     epoch: Instant,
 }
 
@@ -144,6 +191,7 @@ const RETIRED_CAP: usize = 10_000;
 impl ServerShared {
     /// Record one routed completion against its connection's window.
     fn attribute(&self, conn: u64, submitted_ns: u64, r: &Response) {
+        self.completed_total.fetch_add(1, Ordering::Relaxed);
         let now_ns = self.epoch.elapsed().as_nanos() as u64;
         self.per_conn.lock().unwrap().record(
             conn,
@@ -153,6 +201,99 @@ impl ServerShared {
             r.sim_cycles,
         );
     }
+
+    /// Retire a connection's live window into a compact snapshot.
+    fn retire(&self, conn: u64) {
+        if let Some(window) = self.per_conn.lock().unwrap().remove(conn) {
+            let mut retired = self.retired.lock().unwrap();
+            if retired.len() >= RETIRED_CAP {
+                retired.remove(0);
+            }
+            retired.push((conn, window.report()));
+        }
+    }
+
+    /// Queue reply bytes for the loop and wake it if the inbox was
+    /// idle (a non-empty inbox already has a wake in flight).
+    fn push_delivery(&self, d: Deliver) {
+        let was_empty = {
+            let mut inbox = self.inbox.lock().unwrap();
+            let was = inbox.is_empty();
+            inbox.push(d);
+            was
+        };
+        if was_empty {
+            self.waker.wake();
+        }
+    }
+
+    /// The `/metrics` exposition body, assembled from live state.
+    fn metrics_body(&self) -> String {
+        let engine = &self.engine;
+        let mut p = PromText::new();
+        p.header("a3_connections", "gauge", "currently live wire connections");
+        p.sample("a3_connections", self.conns.load(Ordering::Acquire) as u64);
+        p.header("a3_connections_accepted_total", "counter", "wire connections accepted");
+        p.sample("a3_connections_accepted_total", self.accepted_total.load(Ordering::Relaxed));
+        p.header(
+            "a3_connections_rejected_total",
+            "counter",
+            "connections refused at the max_connections cap",
+        );
+        p.sample("a3_connections_rejected_total", self.rejected_total.load(Ordering::Relaxed));
+        p.header(
+            "a3_connections_idle_reaped_total",
+            "counter",
+            "connections closed by the idle timeout",
+        );
+        p.sample("a3_connections_idle_reaped_total", self.idle_reaped_total.load(Ordering::Relaxed));
+        p.header("a3_completed_total", "counter", "query completions routed to clients");
+        p.sample("a3_completed_total", self.completed_total.load(Ordering::Relaxed));
+        p.header("a3_queue_pending", "gauge", "queries admitted but not yet dispatched");
+        p.sample("a3_queue_pending", engine.pending() as u64);
+        p.header("a3_shards", "gauge", "engine shard count");
+        p.sample("a3_shards", engine.shard_count() as u64);
+        p.header("a3_resident_bytes", "gauge", "total accounted context bytes");
+        p.sample("a3_resident_bytes", engine.resident_bytes() as u64);
+        p.header("a3_shard_resident_bytes", "gauge", "resident context bytes per shard");
+        for shard in 0..engine.shard_count() {
+            p.labeled(
+                "a3_shard_resident_bytes",
+                "shard",
+                &shard.to_string(),
+                engine.shard_resident_bytes(shard) as u64,
+            );
+        }
+        let tiers = engine.tier_stats();
+        p.header("a3_tier_bytes", "gauge", "resident context bytes by tier");
+        p.labeled("a3_tier_bytes", "tier", "hot", tiers.hot_bytes);
+        p.labeled("a3_tier_bytes", "tier", "warm", tiers.warm_bytes);
+        p.labeled("a3_tier_bytes", "tier", "cold", tiers.cold_bytes);
+        p.header("a3_tier_warm_serves_total", "counter", "batches served from the warm tier");
+        p.sample("a3_tier_warm_serves_total", tiers.warm_serves);
+        p.header(
+            "a3_tier_cold_readmissions_total",
+            "counter",
+            "contexts re-admitted from the cold tier",
+        );
+        p.sample("a3_tier_cold_readmissions_total", tiers.cold_readmissions);
+        p.header("a3_dropped_total", "counter", "queries dropped by failed dispatches");
+        p.sample("a3_dropped_total", engine.dropped_total());
+        p.header(
+            "a3_degraded_total",
+            "counter",
+            "batches served by the degraded backend under pressure",
+        );
+        p.sample("a3_degraded_total", engine.degraded_total());
+        p.header("a3_connection_completed", "gauge", "completions per live connection window");
+        p.header("a3_connection_p99_ns", "gauge", "p99 latency per live connection window");
+        for (conn, report) in self.per_conn.lock().unwrap().reports() {
+            let key = conn.to_string();
+            p.labeled("a3_connection_completed", "conn", &key, report.completed);
+            p.labeled("a3_connection_p99_ns", "conn", &key, report.p99_ns);
+        }
+        p.finish()
+    }
 }
 
 /// The TCP serving front door over one [`Engine`]. See the module
@@ -160,9 +301,11 @@ impl ServerShared {
 /// example.
 pub struct NetServer {
     addr: SocketAddr,
+    metrics_addr: Option<SocketAddr>,
     shared: Arc<ServerShared>,
-    accept: Option<std::thread::JoinHandle<()>>,
+    event_loop: Option<std::thread::JoinHandle<()>>,
     router: Option<std::thread::JoinHandle<()>>,
+    ops: Option<std::thread::JoinHandle<()>>,
 }
 
 impl NetServer {
@@ -179,25 +322,69 @@ impl NetServer {
         cfg: NetServerConfig,
     ) -> super::Result<NetServer> {
         let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
+        let metrics_listener = match cfg.metrics_addr {
+            Some(maddr) => {
+                let l = TcpListener::bind(maddr)?;
+                l.set_nonblocking(true)?;
+                Some(l)
+            }
+            None => None,
+        };
+        let metrics_addr = match &metrics_listener {
+            Some(l) => Some(l.local_addr()?),
+            None => None,
+        };
+        let mut poller =
+            Poller::new().map_err(|e| NetError::Io(format!("creating poller: {e}")))?;
+        poller
+            .register(listener_fd(&listener), TOKEN_LISTENER, Interest::READ)
+            .map_err(|e| NetError::Io(format!("registering listener: {e}")))?;
+        if let Some(l) = &metrics_listener {
+            poller
+                .register(listener_fd(l), TOKEN_METRICS, Interest::READ)
+                .map_err(|e| NetError::Io(format!("registering metrics listener: {e}")))?;
+        }
         let shared = Arc::new(ServerShared {
             engine,
             cfg,
-            addr,
             stop: AtomicBool::new(false),
+            waker: poller.waker(),
+            inbox: Mutex::new(Vec::new()),
             router: Mutex::new(RouterState::default()),
             per_conn: Mutex::new(AttributedMetrics::new()),
             retired: Mutex::new(Vec::new()),
             next_conn: AtomicU64::new(0),
             conns: AtomicUsize::new(0),
+            ops_pending: AtomicUsize::new(0),
+            accepted_total: AtomicU64::new(0),
+            rejected_total: AtomicU64::new(0),
+            idle_reaped_total: AtomicU64::new(0),
+            completed_total: AtomicU64::new(0),
             epoch: Instant::now(),
         });
-        let accept = {
-            let shared = Arc::clone(&shared);
+        let (ops_tx, ops_rx) = mpsc::channel::<OpJob>();
+        let event_loop = {
+            let ev = EventLoop {
+                shared: Arc::clone(&shared),
+                poller,
+                listener: Some(listener),
+                metrics_listener,
+                ops_tx,
+                conns: HashMap::new(),
+                by_conn: HashMap::new(),
+                parked: HashSet::new(),
+                timers: BinaryHeap::new(),
+                next_token: FIRST_CONN_TOKEN,
+                events: Vec::new(),
+                scratch: vec![0u8; READ_CHUNK],
+                stopping_since: None,
+            };
             std::thread::Builder::new()
-                .name("a3-net-accept".into())
-                .spawn(move || accept_loop(listener, shared))
-                .map_err(|e| NetError::Io(format!("spawning accept thread: {e}")))?
+                .name("a3-net-loop".into())
+                .spawn(move || ev.run())
+                .map_err(|e| NetError::Io(format!("spawning event-loop thread: {e}")))?
         };
         let router = {
             let shared = Arc::clone(&shared);
@@ -206,12 +393,31 @@ impl NetServer {
                 .spawn(move || router_loop(shared))
                 .map_err(|e| NetError::Io(format!("spawning router thread: {e}")))?
         };
-        Ok(NetServer { addr, shared, accept: Some(accept), router: Some(router) })
+        let ops = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("a3-net-ops".into())
+                .spawn(move || ops_loop(shared, ops_rx))
+                .map_err(|e| NetError::Io(format!("spawning ops thread: {e}")))?
+        };
+        Ok(NetServer {
+            addr,
+            metrics_addr,
+            shared,
+            event_loop: Some(event_loop),
+            router: Some(router),
+            ops: Some(ops),
+        })
     }
 
     /// The bound address (with the real port when bound to port 0).
     pub fn local_addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The bound `/metrics` listener address, when one was configured.
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.metrics_addr
     }
 
     /// The engine behind the front door.
@@ -223,6 +429,12 @@ impl NetServer {
     /// frame or [`NetServer::shutdown`]).
     pub fn shutdown_requested(&self) -> bool {
         self.shared.stop.load(Ordering::Acquire)
+    }
+
+    /// Currently live counted connections (the `max_connections`
+    /// gauge; rejected and scrape connections never appear in it).
+    pub fn live_connections(&self) -> usize {
+        self.shared.conns.load(Ordering::Acquire)
     }
 
     /// Per-connection serving snapshots (connection id → sort-once
@@ -245,26 +457,30 @@ impl NetServer {
         self.shared.per_conn.lock().unwrap().merged().report()
     }
 
-    /// Ask the accept loop and router to stop. Idempotent; also
+    /// Ask the event loop and router to stop. Idempotent; also
     /// triggered remotely by a client's Shutdown frame.
     pub fn shutdown(&self) {
-        request_stop(&self.shared, self.addr);
+        request_stop(&self.shared);
     }
 
     /// Block until the server has been asked to stop (via
-    /// [`NetServer::shutdown`] or a remote Shutdown frame) and the
-    /// accept + router threads have exited. The server handle stays
-    /// usable afterwards for final reports
-    /// ([`NetServer::connection_reports`]).
+    /// [`NetServer::shutdown`] or a remote Shutdown frame) and its
+    /// threads have exited. The server handle stays usable afterwards
+    /// for final reports ([`NetServer::connection_reports`]).
     pub fn join(&mut self) {
         self.join_inner();
     }
 
     fn join_inner(&mut self) {
-        if let Some(h) = self.accept.take() {
+        if let Some(h) = self.event_loop.take() {
             let _ = h.join();
         }
         if let Some(h) = self.router.take() {
+            let _ = h.join();
+        }
+        // the ops channel's last sender dies with the event loop, so
+        // the ops thread is guaranteed to be on its way out by now
+        if let Some(h) = self.ops.take() {
             let _ = h.join();
         }
     }
@@ -277,81 +493,59 @@ impl Drop for NetServer {
     }
 }
 
-/// Set the stop flag and poke the accept loop awake with a throwaway
-/// self-connection (it blocks in `accept`). Unspecified bind
-/// addresses (0.0.0.0 / ::) are not connectable on every platform, so
-/// the poke targets loopback at the bound port instead.
-fn request_stop(shared: &ServerShared, addr: SocketAddr) {
-    if shared.stop.swap(true, Ordering::AcqRel) {
-        return;
-    }
-    let mut poke = addr;
-    if poke.ip().is_unspecified() {
-        poke.set_ip(match poke {
-            SocketAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
-            SocketAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
-        });
-    }
-    let _ = TcpStream::connect_timeout(&poke, Duration::from_millis(200));
-}
-
-fn accept_loop(listener: TcpListener, shared: Arc<ServerShared>) {
-    loop {
-        let stream = match listener.accept() {
-            Ok((stream, _peer)) => stream,
-            Err(_) => {
-                if shared.stop.load(Ordering::Acquire) {
-                    break;
-                }
-                // accept errors can be persistent (e.g. fd exhaustion):
-                // back off instead of spinning the core at 100%
-                std::thread::sleep(Duration::from_millis(10));
-                continue;
-            }
-        };
-        if shared.stop.load(Ordering::Acquire) {
-            break; // the shutdown poke (or a late client) — drop it
-        }
-        // connection cap: answer over-limit clients with one typed
-        // error frame (they can back off and retry), never a silent
-        // drop or an unbounded thread-per-connection pile-up
-        if let Some(cap) = shared.cfg.max_connections {
-            let live = shared.conns.load(Ordering::Acquire);
-            if live >= cap {
-                let mut w = BufWriter::new(stream);
-                let _ = wire::write_frame(
-                    &mut w,
-                    &Frame::Error {
-                        req: NO_REQ,
-                        error: A3Error::QueueFull { pending: live, limit: cap },
-                    },
-                );
-                let _ = w.flush();
-                continue;
-            }
-        }
-        shared.conns.fetch_add(1, Ordering::AcqRel);
-        let shared = Arc::clone(&shared);
-        let conn = shared.next_conn.fetch_add(1, Ordering::Relaxed);
-        // readers are detached: they exit when their client closes
-        // (read_frame -> Closed) or after answering a Shutdown
-        let spawned = std::thread::Builder::new()
-            .name(format!("a3-net-conn{conn}"))
-            .spawn({
-                let shared = Arc::clone(&shared);
-                move || handle_connection(shared, stream, conn)
-            });
-        if spawned.is_err() {
-            shared.conns.fetch_sub(1, Ordering::AcqRel);
-        }
+/// Set the stop flag and poke the event loop awake through the
+/// poller's waker (it may be parked in `wait`).
+fn request_stop(shared: &ServerShared) {
+    if !shared.stop.swap(true, Ordering::AcqRel) {
+        shared.waker.wake();
     }
 }
 
-/// The single consumer of the engine's completion queue: demux every
-/// response to its submitter, stashing early arrivals. After a stop
-/// request it keeps routing in-flight completions for a short grace
-/// period, then exits even if routes remain (queries parked in
-/// never-closing batches would otherwise pin the thread forever).
+/// Encode one frame to its wire bytes (length prefix included).
+fn encode(frame: &Frame) -> Vec<u8> {
+    let mut buf = Vec::new();
+    wire::write_frame(&mut buf, frame).expect("encoding to a Vec cannot fail");
+    buf
+}
+
+/// The reply frames for one completion: a plain [`Frame::Response`]
+/// when `chunk == 0`, otherwise `SubmitChunk` slices of at most
+/// `chunk` f32 values closed by a `SubmitDone` trailer.
+fn response_frames(req: u64, chunk: u32, r: &Response) -> Vec<Frame> {
+    if chunk == 0 {
+        return vec![Frame::from_response(req, r)];
+    }
+    let mut frames: Vec<Frame> = r
+        .output
+        .chunks(chunk as usize)
+        .enumerate()
+        .map(|(seq, piece)| Frame::SubmitChunk { req, seq: seq as u32, data: piece.to_vec() })
+        .collect();
+    frames.push(Frame::SubmitDone {
+        req,
+        context: r.context,
+        selected_rows: r.selected_rows as u32,
+        sim_cycles: r.sim_cycles,
+        completed_ns: r.completed_ns,
+        total: r.output.len() as u32,
+    });
+    frames
+}
+
+/// [`response_frames`], pre-encoded into one contiguous byte run.
+fn response_bytes(req: u64, chunk: u32, r: &Response) -> Vec<u8> {
+    let mut buf = Vec::new();
+    for frame in response_frames(req, chunk, r) {
+        wire::write_frame(&mut buf, &frame).expect("encoding to a Vec cannot fail");
+    }
+    buf
+}
+
+/// The single consumer of the engine's completion queue. Deliveries
+/// are pushed into the loop's inbox *while holding the router lock*,
+/// so the loop's drain-grace check (routes empty ∧ inbox empty) can
+/// never observe a completion in the gap between route removal and
+/// inbox insertion.
 fn router_loop(shared: Arc<ServerShared>) {
     let stop_grace = shared.cfg.drain_grace;
     let mut stop_seen: Option<Instant> = None;
@@ -365,9 +559,11 @@ fn router_loop(shared: Arc<ServerShared>) {
             for (id, error) in dropped {
                 state.stash.remove(&id);
                 match state.routes.remove(&id) {
-                    Some(e) => {
-                        let _ = e.out.send(Frame::Error { req: e.req, error });
-                    }
+                    Some(e) => shared.push_delivery(Deliver {
+                        conn: e.conn,
+                        bytes: encode(&Frame::Error { req: e.req, error }),
+                        op_done: false,
+                    }),
                     // the submitter has not registered its route yet:
                     // park the failure for it (same race as `stash`)
                     None => {
@@ -383,19 +579,20 @@ fn router_loop(shared: Arc<ServerShared>) {
                 // the stash insert, the submitter could register its
                 // route in the gap and the stashed response would be
                 // orphaned (client recv hangs forever)
-                let e = {
-                    let mut state = shared.router.lock().unwrap();
-                    match state.routes.remove(&r.id) {
-                        Some(e) => e,
-                        None => {
-                            state.stash.insert(r.id, r);
-                            continue;
-                        }
+                let mut state = shared.router.lock().unwrap();
+                match state.routes.remove(&r.id) {
+                    Some(e) => {
+                        shared.attribute(e.conn, e.submitted_ns, &r);
+                        shared.push_delivery(Deliver {
+                            conn: e.conn,
+                            bytes: response_bytes(e.req, e.chunk, &r),
+                            op_done: false,
+                        });
                     }
-                };
-                shared.attribute(e.conn, e.submitted_ns, &r);
-                // a dead connection just drops its completions
-                let _ = e.out.send(Frame::from_response(e.req, &r));
+                    None => {
+                        state.stash.insert(r.id, r);
+                    }
+                }
             }
             Ok(None) => {
                 if shared.stop.load(Ordering::Acquire) {
@@ -418,258 +615,847 @@ fn router_loop(shared: Arc<ServerShared>) {
     }
 }
 
-/// Per-connection reader: preamble, then frames until disconnect,
-/// protocol error, or Shutdown.
-fn handle_connection(shared: Arc<ServerShared>, stream: TcpStream, conn: u64) {
-    /// Releases this connection's slot in the `max_connections` gauge
-    /// on any exit path.
-    struct ConnGuard(Arc<ServerShared>);
-    impl Drop for ConnGuard {
-        fn drop(&mut self) {
-            self.0.conns.fetch_sub(1, Ordering::AcqRel);
-        }
-    }
-    let _slot = ConnGuard(Arc::clone(&shared));
-    let Ok(read_half) = stream.try_clone() else {
-        return;
-    };
-    // idle policy: a client that sends nothing for idle_timeout is
-    // disconnected (its reader's blocking read times out); completions
-    // it was owed surface as typed orphans client-side
-    if read_half.set_read_timeout(shared.cfg.idle_timeout).is_err() {
-        return;
-    }
-    let mut reader = BufReader::new(read_half);
-    let (out_tx, out_rx) = mpsc::channel::<Frame>();
-    let writer = std::thread::Builder::new()
-        .name(format!("a3-net-conn{conn}-w"))
-        .spawn(move || writer_loop(stream, out_rx));
-    let Ok(writer) = writer else {
-        return;
-    };
-
-    match wire::read_preamble(&mut reader) {
-        Ok(()) => {}
-        Err(NetError::Wire(e)) => {
-            // answer in-protocol so the client sees a typed reason,
-            // then close (we cannot trust the rest of the stream)
-            let _ = out_tx.send(Frame::Error {
-                req: NO_REQ,
-                error: A3Error::ConfigError(format!("preamble rejected: {e}")),
-            });
-            drop(out_tx);
-            let _ = writer.join();
-            return;
-        }
-        Err(_) => {
-            drop(out_tx);
-            let _ = writer.join();
-            return;
-        }
-    }
-
-    loop {
-        match wire::read_frame(&mut reader) {
-            Ok(frame) => {
-                if !handle_frame(&shared, conn, frame, &out_tx) {
-                    break;
-                }
+/// Executor for blocking engine calls. Sequential on purpose: a
+/// connection's frames must not reorder, and it pauses (deferred)
+/// until its op's reply delivers anyway.
+fn ops_loop(shared: Arc<ServerShared>, rx: mpsc::Receiver<OpJob>) {
+    while let Ok(job) = rx.recv() {
+        let (conn, bytes) = match job {
+            OpJob::Register { conn, req, n, d, key, value } => {
+                let kv = crate::attention::KvPair::new(n as usize, d as usize, key, value);
+                let reply = match shared.engine.register_context(kv) {
+                    Ok(handle) => Frame::Registered { req, context: handle.id() },
+                    Err(error) => Frame::Error { req, error },
+                };
+                (conn, encode(&reply))
             }
-            Err(NetError::Wire(e)) => {
-                // a desynced stream cannot be resynced: report + close
-                let _ = out_tx.send(Frame::Error {
-                    req: NO_REQ,
-                    error: A3Error::ConfigError(format!("malformed frame: {e}")),
-                });
-                break;
+            OpJob::Drain { conn, req } => {
+                let reply = match shared.engine.drain() {
+                    Ok(stats) => Frame::DrainStats { req, stats: wire_stats(&stats) },
+                    Err(error) => Frame::Error { req, error },
+                };
+                (conn, encode(&reply))
             }
-            Err(_) => break, // Closed / transport error
-        }
-    }
-    drop(out_tx);
-    let _ = writer.join();
-    // retire this connection's window into a compact snapshot: live
-    // windows keep every latency sample, and a long-lived server must
-    // not grow O(total queries) per disconnected client
-    if let Some(window) = shared.per_conn.lock().unwrap().remove(conn) {
-        let mut retired = shared.retired.lock().unwrap();
-        if retired.len() >= RETIRED_CAP {
-            retired.remove(0);
-        }
-        retired.push((conn, window.report()));
+        };
+        shared.push_delivery(Deliver { conn, bytes, op_done: true });
+        shared.ops_pending.fetch_sub(1, Ordering::AcqRel);
     }
 }
 
-/// Serialize reply frames onto the socket. Batches everything already
-/// queued into one flush. Exits when every sender (reader + routed
-/// entries) is gone or the socket dies.
-fn writer_loop(stream: TcpStream, out_rx: mpsc::Receiver<Frame>) {
-    let mut w = BufWriter::new(stream);
-    'outer: while let Ok(frame) = out_rx.recv() {
-        if wire::write_frame(&mut w, &frame).is_err() {
-            break;
-        }
-        loop {
-            match out_rx.try_recv() {
-                Ok(next) => {
-                    if wire::write_frame(&mut w, &next).is_err() {
-                        break 'outer;
-                    }
-                }
-                Err(mpsc::TryRecvError::Empty) => break,
-                Err(mpsc::TryRecvError::Disconnected) => {
-                    let _ = w.flush();
-                    return;
-                }
-            }
-        }
-        if w.flush().is_err() {
-            break;
-        }
-    }
-}
+// -- the event loop -------------------------------------------------
 
-/// Translate one request frame into engine calls. Returns `false`
-/// when the connection should close (Shutdown answered).
-fn handle_frame(
-    shared: &Arc<ServerShared>,
-    conn: u64,
-    frame: Frame,
-    out: &mpsc::Sender<Frame>,
-) -> bool {
-    let engine = &shared.engine;
-    match frame {
-        Frame::RegisterContext { req, n, d, key, value } => {
-            if n == 0 || d == 0 {
-                let error = A3Error::ConfigError(format!(
-                    "context dims must be non-zero (got n={n}, d={d})"
-                ));
-                let _ = out.send(Frame::Error { req, error });
-                return true;
-            }
-            let kv = crate::attention::KvPair::new(n as usize, d as usize, key, value);
-            let reply = match engine.register_context(kv) {
-                Ok(handle) => Frame::Registered { req, context: handle.id() },
-                Err(error) => Frame::Error { req, error },
-            };
-            let _ = out.send(reply);
-        }
-        Frame::Submit { req, context, embedding, ttl_ns } => {
-            submit_frame(shared, conn, req, context, embedding, ttl_ns, out);
-        }
-        Frame::Evict { req, context } => {
-            let reply = match engine.lookup_context(context).and_then(|h| engine.evict(&h)) {
-                Ok(()) => Frame::Evicted { req },
-                Err(error) => Frame::Error { req, error },
-            };
-            let _ = out.send(reply);
-        }
-        Frame::Drain { req } => {
-            let reply = match engine.drain() {
-                Ok(stats) => Frame::DrainStats { req, stats: wire_stats(&stats) },
-                Err(error) => Frame::Error { req, error },
-            };
-            let _ = out.send(reply);
-        }
-        Frame::Stats { req } => {
-            let tiers = engine.tier_stats();
-            let _ = out.send(Frame::StatsReply {
-                req,
-                pending: engine.pending() as u64,
-                resident_bytes: engine.resident_bytes() as u64,
-                hot_bytes: tiers.hot_bytes,
-                warm_bytes: tiers.warm_bytes,
-                cold_bytes: tiers.cold_bytes,
-                warm_serves: tiers.warm_serves,
-                cold_readmissions: tiers.cold_readmissions,
-                shards: engine.shard_count() as u32,
-            });
-        }
-        Frame::Shutdown { req } => {
-            let _ = out.send(Frame::ShutdownAck { req });
-            request_stop(shared, shared.addr);
-            return false;
-        }
-        // a client sending reply frames is out of protocol
-        other => {
-            let _ = out.send(Frame::Error {
-                req: other.req(),
-                error: A3Error::ConfigError("reply frames are not requests".into()),
-            });
-        }
-    }
-    true
-}
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_METRICS: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+/// Bytes read per readiness event; level-triggered polling re-reports
+/// fds with more pending, so one bounded read per event keeps the
+/// loop fair across connections.
+const READ_CHUNK: usize = 64 * 1024;
+/// Hard lifetime for `/metrics` scrape connections and cap-rejected
+/// connections flushing their one error frame.
+const SHORT_CONN_LIFETIME: Duration = Duration::from_secs(5);
+/// Cap on a buffered HTTP request head.
+const HTTP_BUF_CAP: usize = 8 * 1024;
 
-/// Pipelined submit: resolve the context, submit with admission
-/// backpressure, register the route (or deliver a stashed early
-/// completion).
-fn submit_frame(
-    shared: &Arc<ServerShared>,
-    conn: u64,
+/// A submit parked on closed admission: everything needed to retry
+/// `submit_reclaim` on a later tick without re-decoding the frame.
+struct Parked {
     req: u64,
-    context: u32,
+    handle: ContextHandle,
     embedding: Vec<f32>,
     ttl_ns: u64,
-    out: &mpsc::Sender<Frame>,
-) {
-    let engine = &shared.engine;
-    let handle = match engine.lookup_context(context) {
-        Ok(h) => h,
-        Err(error) => {
-            let _ = out.send(Frame::Error { req, error });
+    chunk: u32,
+    /// Stamped at first attempt: time parked on backpressure is
+    /// latency the client experiences, and the attribution window must
+    /// charge it (stamping at admission would report ~0 latency
+    /// exactly when the server is saturated).
+    submitted_ns: u64,
+    /// `None` = park forever (`admission_wait` too large for the
+    /// clock); past it, the retry gives up with a typed `QueueFull`.
+    deadline: Option<Instant>,
+}
+
+/// Per-frame reply bytes queued for a nonblocking socket, drained on
+/// writability.
+#[derive(Default)]
+struct WriteQueue {
+    frames: VecDeque<Vec<u8>>,
+    /// Bytes of the front buffer already written (partial writes).
+    front_off: usize,
+}
+
+impl WriteQueue {
+    fn push(&mut self, bytes: Vec<u8>) {
+        if !bytes.is_empty() {
+            self.frames.push_back(bytes);
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.frames.is_empty()
+    }
+
+    /// Write as much as the socket takes. `Ok(true)` = fully drained,
+    /// `Ok(false)` = the socket would block with bytes still queued.
+    fn flush<W: Write>(&mut self, w: &mut W) -> io::Result<bool> {
+        loop {
+            let Some(front) = self.frames.front() else {
+                return Ok(true);
+            };
+            let len = front.len();
+            match w.write(&front[self.front_off..]) {
+                Ok(0) => return Err(io::Error::new(io::ErrorKind::WriteZero, "socket wrote zero")),
+                Ok(n) => {
+                    self.front_off += n;
+                    if self.front_off == len {
+                        self.frames.pop_front();
+                        self.front_off = 0;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+/// One multiplexed wire connection's full state.
+struct WireConn {
+    stream: TcpStream,
+    /// Connection id (attribution key). Only meaningful when counted.
+    conn: u64,
+    /// Whether this connection occupies a `conns`-gauge slot (cap
+    /// rejections are served by an uncounted, write-only connection).
+    counted: bool,
+    decoder: FrameDecoder,
+    wq: WriteQueue,
+    /// The interest set currently registered with the poller.
+    registered: Interest,
+    /// Closing: no more reads; flush the write queue, then close.
+    closing: bool,
+    /// A blocking op (register/drain) is in flight on the ops thread;
+    /// the frame pipeline pauses until its reply delivers.
+    deferred: bool,
+    /// A submit parked on admission backpressure (pauses reads too).
+    parked: Option<Parked>,
+    /// Cap-rejection linger: the error frame + FIN are out, and the
+    /// connection now read-drains (discarding) until the client
+    /// closes. Closing outright would leave the client's unread
+    /// preamble in our receive buffer, and a close with unread input
+    /// RSTs the socket — which can destroy the typed error frame
+    /// before the client reads it.
+    lingering: bool,
+    /// Last client frame activity (idle-timeout clock).
+    last_activity: Instant,
+    /// Whether an idle/linger timer entry is in the heap for this
+    /// connection (at most one; re-armed lazily on pop).
+    timer_armed: bool,
+}
+
+/// A `/metrics` scrape connection: read one request head, write one
+/// response, close.
+struct HttpConn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    wq: WriteQueue,
+    registered: Interest,
+    responded: bool,
+}
+
+enum Conn {
+    Wire(WireConn),
+    Http(HttpConn),
+}
+
+impl Conn {
+    fn wq_empty(&self) -> bool {
+        match self {
+            Conn::Wire(w) => w.wq.is_empty(),
+            Conn::Http(h) => h.wq.is_empty(),
+        }
+    }
+}
+
+struct EventLoop {
+    shared: Arc<ServerShared>,
+    poller: Poller,
+    listener: Option<TcpListener>,
+    metrics_listener: Option<TcpListener>,
+    ops_tx: mpsc::Sender<OpJob>,
+    /// Poller token → connection. Tokens are loop-private; connection
+    /// ids (the attribution keys) are allocated only for counted wire
+    /// connections, so ids stay dense for reporting.
+    conns: HashMap<u64, Conn>,
+    /// Connection id → token, for inbox delivery lookup.
+    by_conn: HashMap<u64, u64>,
+    /// Tokens with a parked submit, retried every tick.
+    parked: HashSet<u64>,
+    /// Min-heap of (fire time, token) for idle timeouts and
+    /// short-connection lingers; lazily re-armed, so stale entries for
+    /// closed connections are skipped on pop.
+    timers: BinaryHeap<Reverse<(Instant, u64)>>,
+    next_token: u64,
+    events: Vec<PollEvent>,
+    scratch: Vec<u8>,
+    stopping_since: Option<Instant>,
+}
+
+impl EventLoop {
+    fn run(mut self) {
+        loop {
+            if self.check_stop() {
+                break;
+            }
+            let timeout = self.compute_timeout();
+            let mut events = std::mem::take(&mut self.events);
+            if self.poller.wait(&mut events, Some(timeout)).is_err() {
+                // the poller itself failed: stop serving rather than
+                // spin — the router exits through the stop flag
+                self.events = events;
+                request_stop(&self.shared);
+                break;
+            }
+            for ev in &events {
+                match ev.token {
+                    TOKEN_LISTENER => self.accept_wire(),
+                    TOKEN_METRICS => self.accept_metrics(),
+                    token => self.service(token, ev.readable || ev.error),
+                }
+            }
+            self.events = events;
+            self.deliver_inbox();
+            self.retry_parked();
+            self.tick_timers();
+        }
+        // teardown: every surviving connection closes now; their owed
+        // completions surface client-side as typed ConnectionClosed
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for token in tokens {
+            self.close_token(token);
+        }
+    }
+
+    /// Stop handling: on the first observation drop both listeners
+    /// (no new connections), then exit once all in-flight work has
+    /// drained or the grace window has elapsed.
+    fn check_stop(&mut self) -> bool {
+        if !self.shared.stop.load(Ordering::Acquire) {
+            return false;
+        }
+        if self.stopping_since.is_none() {
+            self.stopping_since = Some(Instant::now());
+            if let Some(l) = self.listener.take() {
+                let _ = self.poller.deregister(listener_fd(&l));
+            }
+            if let Some(l) = self.metrics_listener.take() {
+                let _ = self.poller.deregister(listener_fd(&l));
+            }
+        }
+        let routes_done = self.shared.router.lock().unwrap().routes.is_empty();
+        let inbox_done = self.shared.inbox.lock().unwrap().is_empty();
+        let ops_done = self.shared.ops_pending.load(Ordering::Acquire) == 0;
+        let wqs_done = self.conns.values().all(Conn::wq_empty);
+        if routes_done && inbox_done && ops_done && wqs_done {
+            return true;
+        }
+        self.stopping_since.is_some_and(|s| s.elapsed() >= self.shared.cfg.drain_grace)
+    }
+
+    fn compute_timeout(&self) -> Duration {
+        // 500ms liveness tick; 2ms while a parked submit needs
+        // admission retries; 20ms while draining a stop request
+        let mut t = Duration::from_millis(500);
+        if !self.parked.is_empty() {
+            t = t.min(Duration::from_millis(2));
+        }
+        if self.stopping_since.is_some() {
+            t = t.min(Duration::from_millis(20));
+        }
+        if let Some(&Reverse((when, _))) = self.timers.peek() {
+            t = t.min(when.saturating_duration_since(Instant::now()));
+        }
+        t
+    }
+
+    fn alloc_token(&mut self) -> u64 {
+        let token = self.next_token;
+        self.next_token += 1;
+        token
+    }
+
+    /// Drain the listener: accept until it would block.
+    fn accept_wire(&mut self) {
+        loop {
+            let stream = match self.listener.as_ref().map(TcpListener::accept) {
+                Some(Ok((stream, _peer))) => stream,
+                Some(Err(e)) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Some(Err(_)) => {
+                    // accept errors can be persistent (e.g. fd
+                    // exhaustion): back off instead of spinning
+                    std::thread::sleep(Duration::from_millis(10));
+                    break;
+                }
+                None => break,
+            };
+            if stream.set_nonblocking(true).is_err() {
+                continue;
+            }
+            let _ = stream.set_nodelay(true);
+            // connection cap: answer over-limit clients with one typed
+            // error frame (they can back off and retry), never a
+            // silent drop. The rejection connection is write-only,
+            // uncounted, and allocates no connection id.
+            if let Some(cap) = self.shared.cfg.max_connections {
+                let live = self.shared.conns.load(Ordering::Acquire);
+                if live >= cap {
+                    self.shared.rejected_total.fetch_add(1, Ordering::Relaxed);
+                    let mut w = WireConn {
+                        stream,
+                        conn: NO_REQ,
+                        counted: false,
+                        decoder: FrameDecoder::new(),
+                        wq: WriteQueue::default(),
+                        registered: Interest::NONE,
+                        closing: true,
+                        deferred: false,
+                        parked: None,
+                        lingering: true,
+                        last_activity: Instant::now(),
+                        timer_armed: false,
+                    };
+                    w.wq.push(encode(&Frame::Error {
+                        req: NO_REQ,
+                        error: A3Error::QueueFull { pending: live, limit: cap },
+                    }));
+                    // frame + FIN out now; then linger read-draining
+                    // until the client hangs up (bounded by the short
+                    // lifetime timer)
+                    if self.service_linger(&mut w, true) {
+                        let token = self.alloc_token();
+                        let want = Interest { readable: true, writable: !w.wq.is_empty() };
+                        if self.poller.register(stream_fd(&w.stream), token, want).is_ok() {
+                            w.registered = want;
+                            w.timer_armed = true;
+                            self.arm_timer(token, Instant::now() + SHORT_CONN_LIFETIME);
+                            self.conns.insert(token, Conn::Wire(w));
+                        }
+                    }
+                    continue;
+                }
+            }
+            let token = self.alloc_token();
+            let conn = self.shared.next_conn.fetch_add(1, Ordering::Relaxed);
+            let w = WireConn {
+                stream,
+                conn,
+                counted: true,
+                decoder: FrameDecoder::new(),
+                wq: WriteQueue::default(),
+                registered: Interest::READ,
+                closing: false,
+                deferred: false,
+                parked: None,
+                lingering: false,
+                last_activity: Instant::now(),
+                timer_armed: false,
+            };
+            if self.poller.register(stream_fd(&w.stream), token, Interest::READ).is_err() {
+                continue; // conn was never counted; just drop it
+            }
+            self.shared.conns.fetch_add(1, Ordering::AcqRel);
+            self.shared.accepted_total.fetch_add(1, Ordering::Relaxed);
+            self.by_conn.insert(conn, token);
+            self.conns.insert(token, Conn::Wire(w));
+            if let Some(idle) = self.shared.cfg.idle_timeout {
+                if let Some(Conn::Wire(w)) = self.conns.get_mut(&token) {
+                    if let Some(deadline) = Instant::now().checked_add(idle) {
+                        w.timer_armed = true;
+                        self.timers.push(Reverse((deadline, token)));
+                    }
+                }
+            }
+        }
+    }
+
+    fn accept_metrics(&mut self) {
+        loop {
+            let stream = match self.metrics_listener.as_ref().map(TcpListener::accept) {
+                Some(Ok((stream, _peer))) => stream,
+                Some(Err(e)) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Some(Err(_)) => {
+                    std::thread::sleep(Duration::from_millis(10));
+                    break;
+                }
+                None => break,
+            };
+            if stream.set_nonblocking(true).is_err() {
+                continue;
+            }
+            let token = self.alloc_token();
+            if self.poller.register(stream_fd(&stream), token, Interest::READ).is_err() {
+                continue;
+            }
+            let h = HttpConn {
+                stream,
+                buf: Vec::new(),
+                wq: WriteQueue::default(),
+                registered: Interest::READ,
+                responded: false,
+            };
+            self.conns.insert(token, Conn::Http(h));
+            self.arm_timer(token, Instant::now() + SHORT_CONN_LIFETIME);
+        }
+    }
+
+    fn arm_timer(&mut self, token: u64, when: Instant) {
+        self.timers.push(Reverse((when, token)));
+    }
+
+    /// Drive one connection: read if readable, retry a parked submit,
+    /// decode and handle frames, flush the write queue, then sync the
+    /// registered interest set and the idle timer.
+    fn service(&mut self, token: u64, readable: bool) {
+        let Some(conn) = self.conns.remove(&token) else {
+            return;
+        };
+        match conn {
+            Conn::Wire(mut w) => {
+                let alive = self.service_wire(&mut w, readable);
+                self.finish_wire(token, w, alive);
+            }
+            Conn::Http(mut h) => {
+                let alive = self.service_http(&mut h, readable);
+                self.finish_http(token, h, alive);
+            }
+        }
+    }
+
+    fn service_wire(&mut self, w: &mut WireConn, readable: bool) -> bool {
+        if w.lingering {
+            return self.service_linger(w, readable);
+        }
+        if readable && !w.closing {
+            match w.stream.read(&mut self.scratch) {
+                Ok(0) => return false, // peer closed
+                Ok(n) => {
+                    w.decoder.feed(&self.scratch[..n]);
+                    w.last_activity = Instant::now();
+                }
+                Err(e)
+                    if e.kind() == io::ErrorKind::WouldBlock
+                        || e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => return false,
+            }
+        }
+        if let Some(p) = w.parked.take() {
+            self.try_submit(w, p);
+        }
+        // the pipeline pauses while a blocking op or a parked submit
+        // is outstanding: per-connection frame order is preserved
+        while !w.closing && !w.deferred && w.parked.is_none() {
+            match w.decoder.next() {
+                Ok(Some(frame)) => self.handle_wire_frame(w, frame),
+                Ok(None) => break,
+                Err(e) => {
+                    // a desynced stream cannot be resynced: answer
+                    // in-protocol with a typed reason, then close
+                    let error = if w.decoder.preamble_done() {
+                        A3Error::ConfigError(format!("malformed frame: {e}"))
+                    } else {
+                        A3Error::ConfigError(format!("preamble rejected: {e}"))
+                    };
+                    w.wq.push(encode(&Frame::Error { req: NO_REQ, error }));
+                    w.closing = true;
+                }
+            }
+        }
+        match w.wq.flush(&mut w.stream) {
+            Ok(drained) => !(drained && w.closing),
+            Err(_) => false,
+        }
+    }
+
+    /// Drive a cap-rejected connection: flush the one error frame,
+    /// send FIN, then read-and-discard until the client closes (see
+    /// [`WireConn::lingering`] for why closing outright would race the
+    /// error frame against an RST). Returns false once the connection
+    /// can be dropped cleanly.
+    fn service_linger(&mut self, w: &mut WireConn, readable: bool) -> bool {
+        if readable {
+            loop {
+                match w.stream.read(&mut self.scratch) {
+                    Ok(0) => return false, // client saw the frame and hung up
+                    Ok(_) => continue,     // discard: nothing here will be answered
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => return false,
+                }
+            }
+        }
+        match w.wq.flush(&mut w.stream) {
+            Ok(true) => {
+                // error frame fully out: half-close so the client's
+                // read loop sees frame-then-EOF, never an RST
+                let _ = w.stream.shutdown(std::net::Shutdown::Write);
+                true
+            }
+            Ok(false) => true,
+            Err(_) => false,
+        }
+    }
+
+    /// Translate one request frame into engine calls or op handoffs.
+    fn handle_wire_frame(&mut self, w: &mut WireConn, frame: Frame) {
+        match frame {
+            Frame::RegisterContext { req, n, d, key, value } => {
+                if n == 0 || d == 0 {
+                    let error = A3Error::ConfigError(format!(
+                        "context dims must be non-zero (got n={n}, d={d})"
+                    ));
+                    w.wq.push(encode(&Frame::Error { req, error }));
+                    return;
+                }
+                self.defer_op(w, OpJob::Register { conn: w.conn, req, n, d, key, value });
+            }
+            Frame::Submit { req, context, embedding, ttl_ns } => {
+                self.submit(w, req, context, embedding, ttl_ns, 0);
+            }
+            Frame::SubmitStreamed { req, context, embedding, ttl_ns, chunk } => {
+                // chunk == 0 means "one chunk": stream the whole output
+                // as a single slice + trailer
+                let chunk = if chunk == 0 { u32::MAX } else { chunk };
+                self.submit(w, req, context, embedding, ttl_ns, chunk);
+            }
+            Frame::Evict { req, context } => {
+                let engine = &self.shared.engine;
+                let reply = match engine.lookup_context(context).and_then(|h| engine.evict(&h)) {
+                    Ok(()) => Frame::Evicted { req },
+                    Err(error) => Frame::Error { req, error },
+                };
+                w.wq.push(encode(&reply));
+            }
+            Frame::Drain { req } => {
+                self.defer_op(w, OpJob::Drain { conn: w.conn, req });
+            }
+            Frame::Stats { req } => {
+                let engine = &self.shared.engine;
+                let tiers = engine.tier_stats();
+                w.wq.push(encode(&Frame::StatsReply {
+                    req,
+                    pending: engine.pending() as u64,
+                    resident_bytes: engine.resident_bytes() as u64,
+                    hot_bytes: tiers.hot_bytes,
+                    warm_bytes: tiers.warm_bytes,
+                    cold_bytes: tiers.cold_bytes,
+                    warm_serves: tiers.warm_serves,
+                    cold_readmissions: tiers.cold_readmissions,
+                    shards: engine.shard_count() as u32,
+                }));
+            }
+            Frame::Shutdown { req } => {
+                w.wq.push(encode(&Frame::ShutdownAck { req }));
+                w.closing = true;
+                request_stop(&self.shared);
+            }
+            // a client sending reply frames is out of protocol
+            other => {
+                w.wq.push(encode(&Frame::Error {
+                    req: other.req(),
+                    error: A3Error::ConfigError("reply frames are not requests".into()),
+                }));
+            }
+        }
+    }
+
+    /// Hand a blocking call to the ops thread and pause the
+    /// connection's pipeline until the reply delivers.
+    fn defer_op(&mut self, w: &mut WireConn, job: OpJob) {
+        self.shared.ops_pending.fetch_add(1, Ordering::AcqRel);
+        if self.ops_tx.send(job).is_err() {
+            // unreachable while the loop runs (it owns the sender),
+            // but degrade typed rather than hang
+            self.shared.ops_pending.fetch_sub(1, Ordering::AcqRel);
+            w.wq.push(encode(&Frame::Error { req: NO_REQ, error: A3Error::EngineStopped }));
+            w.closing = true;
             return;
         }
-    };
-    // checked: a huge admission_wait (Duration::MAX = "block forever")
-    // must park indefinitely, not panic on Instant overflow
-    let deadline = Instant::now().checked_add(shared.cfg.admission_wait);
-    // stamped before the admission loop: time parked on backpressure
-    // is latency the client experiences, and the attribution window
-    // must charge it (stamping after the park would report ~0 latency
-    // exactly when the server is saturated)
-    let submitted_ns = shared.epoch.elapsed().as_nanos() as u64;
-    let mut embedding = embedding;
-    loop {
+        w.deferred = true;
+    }
+
+    /// Pipelined submit: resolve the context, then try admission.
+    fn submit(
+        &mut self,
+        w: &mut WireConn,
+        req: u64,
+        context: u32,
+        embedding: Vec<f32>,
+        ttl_ns: u64,
+        chunk: u32,
+    ) {
+        let handle = match self.shared.engine.lookup_context(context) {
+            Ok(h) => h,
+            Err(error) => {
+                w.wq.push(encode(&Frame::Error { req, error }));
+                return;
+            }
+        };
+        // checked: a huge admission_wait (Duration::MAX = "park
+        // forever") must park indefinitely, not panic on overflow
+        let deadline = Instant::now().checked_add(self.shared.cfg.admission_wait);
+        let submitted_ns = self.shared.epoch.elapsed().as_nanos() as u64;
+        let parked = Parked { req, handle, embedding, ttl_ns, chunk, submitted_ns, deadline };
+        self.try_submit(w, parked);
+    }
+
+    /// One admission attempt: register the route (or deliver a stashed
+    /// early completion / failure), or re-park on closed admission.
+    fn try_submit(&mut self, w: &mut WireConn, p: Parked) {
+        let Parked { req, handle, embedding, ttl_ns, chunk, submitted_ns, deadline } = p;
+        let engine = &self.shared.engine;
         // submit_reclaim hands the embedding back on admission
         // failure, so retries never clone the query payload; the wire
         // TTL passes straight through (0 = no deadline)
         match engine.submit_reclaim(&handle, embedding, ttl_ns) {
             Ok(ticket) => {
-                let mut router = shared.router.lock().unwrap();
+                // remove-or-register under ONE router lock (see the
+                // stash invariant in `router_loop`)
+                let mut router = self.shared.router.lock().unwrap();
                 if let Some(r) = router.stash.remove(&ticket.id) {
                     drop(router);
-                    shared.attribute(conn, submitted_ns, &r);
-                    let _ = out.send(Frame::from_response(req, &r));
+                    self.shared.attribute(w.conn, submitted_ns, &r);
+                    w.wq.push(response_bytes(req, chunk, &r));
                 } else if let Some(error) = router.dead.remove(&ticket.id) {
                     // dispatched and already failed before we got here
                     drop(router);
-                    let _ = out.send(Frame::Error { req, error });
+                    w.wq.push(encode(&Frame::Error { req, error }));
                 } else {
                     router.routes.insert(
                         ticket.id,
-                        RouteEntry { req, conn, submitted_ns, out: out.clone() },
+                        RouteEntry { req, conn: w.conn, submitted_ns, chunk },
                     );
                 }
-                return;
             }
             Err((A3Error::QueueFull { .. }, Some(reclaimed)))
                 if deadline.is_none_or(|d| Instant::now() < d) =>
             {
-                embedding = reclaimed;
-                // park on the engine's admission condvar; while we
-                // wait the socket buffer fills and the client stalls
-                match engine.wait_for_admission(Duration::from_millis(5)) {
-                    Ok(_) => continue,
-                    Err(error) => {
-                        let _ = out.send(Frame::Error { req, error });
-                        return;
+                // liveness probe: dead shard workers must surface as a
+                // typed EngineStopped, never an eternal park
+                match engine.wait_for_admission(Duration::ZERO) {
+                    Err(error) => w.wq.push(encode(&Frame::Error { req, error })),
+                    Ok(_) => {
+                        w.parked = Some(Parked {
+                            req,
+                            handle,
+                            embedding: reclaimed,
+                            ttl_ns,
+                            chunk,
+                            submitted_ns,
+                            deadline,
+                        });
                     }
                 }
             }
             Err((error, _)) => {
-                let _ = out.send(Frame::Error { req, error });
+                w.wq.push(encode(&Frame::Error { req, error }));
+            }
+        }
+    }
+
+    fn service_http(&mut self, h: &mut HttpConn, readable: bool) -> bool {
+        if readable && !h.responded {
+            match h.stream.read(&mut self.scratch) {
+                Ok(0) => return false,
+                Ok(n) => {
+                    h.buf.extend_from_slice(&self.scratch[..n]);
+                    if h.buf.len() > HTTP_BUF_CAP {
+                        return false; // no legitimate scrape is this big
+                    }
+                    if metrics::request_complete(&h.buf) {
+                        let reply = match metrics::request_line(&h.buf) {
+                            Some((method, path)) if method == "GET" && path == "/metrics" => {
+                                metrics::http_ok(&self.shared.metrics_body())
+                            }
+                            _ => metrics::http_not_found(),
+                        };
+                        h.wq.push(reply);
+                        h.responded = true;
+                    }
+                }
+                Err(e)
+                    if e.kind() == io::ErrorKind::WouldBlock
+                        || e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => return false,
+            }
+        }
+        match h.wq.flush(&mut h.stream) {
+            Ok(drained) => !(drained && h.responded),
+            Err(_) => false,
+        }
+    }
+
+    /// Reinsert a live wire connection with its interest set and idle
+    /// timer synced, or run the single close path.
+    fn finish_wire(&mut self, token: u64, mut w: WireConn, alive: bool) {
+        if !alive {
+            self.close_wire(token, w);
+            return;
+        }
+        if w.parked.is_some() {
+            self.parked.insert(token);
+        } else {
+            self.parked.remove(&token);
+        }
+        let want = Interest {
+            // lingering conns keep reading (to drain toward the
+            // client's EOF); normal closing conns stop reading
+            readable: w.lingering || (!w.closing && !w.deferred && w.parked.is_none()),
+            writable: !w.wq.is_empty(),
+        };
+        if want != w.registered {
+            if self.poller.modify(stream_fd(&w.stream), token, want).is_err() {
+                self.close_wire(token, w);
                 return;
+            }
+            w.registered = want;
+        }
+        if !w.timer_armed {
+            if let Some(idle) = self.shared.cfg.idle_timeout {
+                if let Some(deadline) = w.last_activity.checked_add(idle) {
+                    w.timer_armed = true;
+                    self.arm_timer(token, deadline);
+                }
+            }
+        }
+        self.conns.insert(token, Conn::Wire(w));
+    }
+
+    fn finish_http(&mut self, token: u64, mut h: HttpConn, alive: bool) {
+        if !alive {
+            let _ = self.poller.deregister(stream_fd(&h.stream));
+            return;
+        }
+        let want =
+            Interest { readable: !h.responded, writable: !h.wq.is_empty() };
+        if want != h.registered {
+            if self.poller.modify(stream_fd(&h.stream), token, want).is_err() {
+                let _ = self.poller.deregister(stream_fd(&h.stream));
+                return;
+            }
+            h.registered = want;
+        }
+        self.conns.insert(token, Conn::Http(h));
+    }
+
+    /// The single close path for wire connections: deregister, release
+    /// the gauge slot (counted connections, exactly once — the
+    /// connection is owned by value here, so a double release cannot
+    /// compile), retire the metrics window.
+    fn close_wire(&mut self, token: u64, w: WireConn) {
+        let _ = self.poller.deregister(stream_fd(&w.stream));
+        self.parked.remove(&token);
+        if w.counted {
+            self.by_conn.remove(&w.conn);
+            self.shared.conns.fetch_sub(1, Ordering::AcqRel);
+            self.shared.retire(w.conn);
+        }
+    }
+
+    fn close_token(&mut self, token: u64) {
+        match self.conns.remove(&token) {
+            Some(Conn::Wire(w)) => self.close_wire(token, w),
+            Some(Conn::Http(h)) => {
+                let _ = self.poller.deregister(stream_fd(&h.stream));
+            }
+            None => {}
+        }
+    }
+
+    /// Route cross-thread reply bytes into their connections' write
+    /// queues and drive the touched connections forward.
+    fn deliver_inbox(&mut self) {
+        let deliveries = std::mem::take(&mut *self.shared.inbox.lock().unwrap());
+        if deliveries.is_empty() {
+            return;
+        }
+        let mut touched: Vec<u64> = Vec::with_capacity(deliveries.len());
+        for d in deliveries {
+            // a dead connection just drops its completions
+            let Some(&token) = self.by_conn.get(&d.conn) else {
+                continue;
+            };
+            if let Some(Conn::Wire(w)) = self.conns.get_mut(&token) {
+                w.wq.push(d.bytes);
+                if d.op_done {
+                    w.deferred = false;
+                    // the op's service time is not client idleness
+                    w.last_activity = Instant::now();
+                }
+                touched.push(token);
+            }
+        }
+        touched.sort_unstable();
+        touched.dedup();
+        for token in touched {
+            self.service(token, false);
+        }
+    }
+
+    /// Retry every parked submit (admission may have reopened).
+    fn retry_parked(&mut self) {
+        if self.parked.is_empty() {
+            return;
+        }
+        let tokens: Vec<u64> = self.parked.iter().copied().collect();
+        for token in tokens {
+            self.service(token, false);
+        }
+    }
+
+    /// Fire due timers: reap idle wire connections (unless they have
+    /// in-flight work, which re-arms instead), close expired short
+    /// connections (scrapes, cap rejections).
+    fn tick_timers(&mut self) {
+        let now = Instant::now();
+        while let Some(&Reverse((when, token))) = self.timers.peek() {
+            if when > now {
+                break;
+            }
+            self.timers.pop();
+            match self.conns.get_mut(&token) {
+                Some(Conn::Wire(w)) => {
+                    w.timer_armed = false;
+                    if w.closing {
+                        // a lingering close-pending connection (cap
+                        // rejection, error flush) ran out its grace
+                        self.close_token(token);
+                        continue;
+                    }
+                    let Some(idle) = self.shared.cfg.idle_timeout else {
+                        continue;
+                    };
+                    let deadline = w.last_activity.checked_add(idle);
+                    let busy = w.deferred || w.parked.is_some() || !w.wq.is_empty();
+                    match deadline {
+                        Some(d) if d > now || busy => {
+                            // not actually idle (or still has work in
+                            // flight): re-arm instead of reaping
+                            let next = if d > now { d } else { now + idle };
+                            w.timer_armed = true;
+                            self.timers.push(Reverse((next, token)));
+                        }
+                        None => {}
+                        Some(_) => {
+                            self.shared.idle_reaped_total.fetch_add(1, Ordering::Relaxed);
+                            self.close_token(token);
+                        }
+                    }
+                }
+                Some(Conn::Http(_)) => {
+                    // scrape connections get one hard lifetime
+                    self.close_token(token);
+                }
+                None => {} // stale entry for a closed connection
             }
         }
     }
@@ -686,5 +1472,103 @@ fn wire_stats(stats: &EngineStats) -> WireStats {
         p95_ns: report.p95_ns,
         p99_ns: report.p99_ns,
         mean_selected_rows: report.mean_selected_rows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn response(output_len: usize) -> Response {
+        Response {
+            id: 7,
+            context: 3,
+            output: (0..output_len).map(|i| i as f32).collect(),
+            selected_rows: 5,
+            sim_cycles: 11,
+            completed_ns: 99,
+        }
+    }
+
+    #[test]
+    fn chunked_response_frames_cover_the_output_exactly() {
+        let r = response(10);
+        // chunk 0 = the plain (non-streamed) reply
+        let plain = response_frames(21, 0, &r);
+        assert_eq!(plain.len(), 1);
+        assert!(matches!(&plain[0], Frame::Response { req: 21, output, .. } if output.len() == 10));
+
+        // chunk 4 over 10 values: 4 + 4 + 2, then the trailer
+        let frames = response_frames(21, 4, &r);
+        assert_eq!(frames.len(), 4);
+        let mut rebuilt = Vec::new();
+        for (i, f) in frames[..3].iter().enumerate() {
+            match f {
+                Frame::SubmitChunk { req: 21, seq, data } => {
+                    assert_eq!(*seq, i as u32, "chunk seq must be consecutive from 0");
+                    rebuilt.extend_from_slice(data);
+                }
+                other => panic!("expected SubmitChunk, got {other:?}"),
+            }
+        }
+        assert_eq!(rebuilt, r.output, "chunks must reassemble the exact output");
+        match &frames[3] {
+            Frame::SubmitDone { req: 21, total, selected_rows, sim_cycles, .. } => {
+                assert_eq!(*total, 10);
+                assert_eq!(*selected_rows, 5);
+                assert_eq!(*sim_cycles, 11);
+            }
+            other => panic!("expected SubmitDone trailer, got {other:?}"),
+        }
+
+        // a giant chunk size = one slice + trailer
+        let frames = response_frames(21, u32::MAX, &r);
+        assert_eq!(frames.len(), 2);
+        assert!(matches!(&frames[0], Frame::SubmitChunk { seq: 0, data, .. } if data.len() == 10));
+
+        // an empty output streams as just the trailer
+        let frames = response_frames(21, 4, &response(0));
+        assert_eq!(frames.len(), 1);
+        assert!(matches!(&frames[0], Frame::SubmitDone { total: 0, .. }));
+    }
+
+    /// A writer that accepts a bounded number of bytes per call, to
+    /// exercise partial-write bookkeeping.
+    struct Dribble {
+        out: Vec<u8>,
+        per_call: usize,
+        calls_until_block: usize,
+    }
+
+    impl Write for Dribble {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            if self.calls_until_block == 0 {
+                return Err(io::Error::new(io::ErrorKind::WouldBlock, "full"));
+            }
+            self.calls_until_block -= 1;
+            let n = buf.len().min(self.per_call);
+            self.out.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn write_queue_survives_partial_writes_and_wouldblock() {
+        let mut wq = WriteQueue::default();
+        wq.push(vec![1, 2, 3, 4, 5]);
+        wq.push(vec![6, 7]);
+        wq.push(Vec::new()); // empty frames are dropped, not queued
+        let mut w = Dribble { out: Vec::new(), per_call: 3, calls_until_block: 2 };
+        assert!(!wq.flush(&mut w).unwrap(), "short writer must report not-drained");
+        assert_eq!(w.out, vec![1, 2, 3, 4, 5], "partial progress is kept across calls");
+        assert!(!wq.is_empty());
+        w.calls_until_block = usize::MAX;
+        assert!(wq.flush(&mut w).unwrap());
+        assert_eq!(w.out, vec![1, 2, 3, 4, 5, 6, 7], "frame boundaries never reorder");
+        assert!(wq.is_empty());
     }
 }

@@ -37,7 +37,10 @@ pub const MAGIC: [u8; 4] = *b"A3NW";
 /// v3: [`Frame::StatsReply`] grew the per-tier gauges and transition
 /// counters of the tiered context store, and [`A3Error::SpillCorrupt`]
 /// crosses the wire as its own error code.
-pub const WIRE_VERSION: u16 = 3;
+/// v4: streaming partial results — [`Frame::SubmitStreamed`] asks for
+/// the reply as [`Frame::SubmitChunk`] slices closed by a
+/// [`Frame::SubmitDone`] trailer.
+pub const WIRE_VERSION: u16 = 4;
 /// Hard cap on one frame's body (opcode + payload). Large enough for a
 /// 2048×512 f32 K/V pair in one register frame, small enough that a
 /// hostile length prefix cannot allocate unbounded memory.
@@ -135,6 +138,20 @@ pub enum Frame {
     Stats { req: u64 },
     /// Ask the server process to stop accepting and exit its loop.
     Shutdown { req: u64 },
+    /// Like [`Frame::Submit`], but the reply streams back as
+    /// [`Frame::SubmitChunk`] slices of at most `chunk` f32 values
+    /// each (`chunk == 0` means one chunk), closed by a
+    /// [`Frame::SubmitDone`] trailer that carries the observability
+    /// fields. A client starts consuming the head of a large output
+    /// while the tail is still in flight.
+    SubmitStreamed {
+        req: u64,
+        context: ContextId,
+        embedding: Vec<f32>,
+        ttl_ns: u64,
+        /// Max f32 values per [`Frame::SubmitChunk`] (0 = one chunk).
+        chunk: u32,
+    },
     // -- replies (server → client) ----------------------------------
     Registered { req: u64, context: ContextId },
     /// A completed query: the served attention output plus the
@@ -166,6 +183,20 @@ pub enum Frame {
         shards: u32,
     },
     ShutdownAck { req: u64 },
+    /// One slice of a streamed reply: chunk `seq` (0-based, strictly
+    /// consecutive per request) of the output for `req`.
+    SubmitChunk { req: u64, seq: u32, data: Vec<f32> },
+    /// The trailer of a streamed reply: observability fields plus the
+    /// total output length, which must equal the sum of the chunks.
+    SubmitDone {
+        req: u64,
+        context: ContextId,
+        selected_rows: u32,
+        sim_cycles: u64,
+        completed_ns: u64,
+        /// Total f32 count across all chunks (integrity check).
+        total: u32,
+    },
     /// A typed engine error for request `req` — the 1:1 image of
     /// [`A3Error`] on the wire.
     Error { req: u64, error: A3Error },
@@ -177,12 +208,15 @@ const OP_EVICT: u8 = 0x03;
 const OP_DRAIN: u8 = 0x04;
 const OP_STATS: u8 = 0x05;
 const OP_SHUTDOWN: u8 = 0x06;
+const OP_SUBMIT_STREAMED: u8 = 0x07;
 const OP_REGISTERED: u8 = 0x81;
 const OP_RESPONSE: u8 = 0x82;
 const OP_EVICTED: u8 = 0x83;
 const OP_DRAIN_STATS: u8 = 0x84;
 const OP_STATS_REPLY: u8 = 0x85;
 const OP_SHUTDOWN_ACK: u8 = 0x86;
+const OP_SUBMIT_CHUNK: u8 = 0x87;
+const OP_SUBMIT_DONE: u8 = 0x88;
 const OP_ERROR: u8 = 0x7F;
 
 // -- A3Error <-> wire code mapping (1:1, round-trip tested) ---------
@@ -413,6 +447,15 @@ impl Frame {
                 buf.push(OP_SHUTDOWN);
                 put_u64(buf, *req);
             }
+            Frame::SubmitStreamed { req, context, embedding, ttl_ns, chunk } => {
+                buf.push(OP_SUBMIT_STREAMED);
+                put_u64(buf, *req);
+                put_u32(buf, *context);
+                put_u64(buf, *ttl_ns);
+                put_u32(buf, *chunk);
+                put_u32(buf, embedding.len() as u32);
+                put_f32s(buf, embedding);
+            }
             Frame::Registered { req, context } => {
                 buf.push(OP_REGISTERED);
                 put_u64(buf, *req);
@@ -469,6 +512,22 @@ impl Frame {
                 buf.push(OP_SHUTDOWN_ACK);
                 put_u64(buf, *req);
             }
+            Frame::SubmitChunk { req, seq, data } => {
+                buf.push(OP_SUBMIT_CHUNK);
+                put_u64(buf, *req);
+                put_u32(buf, *seq);
+                put_u32(buf, data.len() as u32);
+                put_f32s(buf, data);
+            }
+            Frame::SubmitDone { req, context, selected_rows, sim_cycles, completed_ns, total } => {
+                buf.push(OP_SUBMIT_DONE);
+                put_u64(buf, *req);
+                put_u32(buf, *context);
+                put_u32(buf, *selected_rows);
+                put_u64(buf, *sim_cycles);
+                put_u64(buf, *completed_ns);
+                put_u32(buf, *total);
+            }
             Frame::Error { req, error } => {
                 buf.push(OP_ERROR);
                 put_u64(buf, *req);
@@ -508,6 +567,14 @@ impl Frame {
                 let ttl_ns = cur.u64()?;
                 let embedding = cur.f32_vec()?;
                 Frame::Submit { req, context, embedding, ttl_ns }
+            }
+            OP_SUBMIT_STREAMED => {
+                let req = cur.u64()?;
+                let context = cur.u32()?;
+                let ttl_ns = cur.u64()?;
+                let chunk = cur.u32()?;
+                let embedding = cur.f32_vec()?;
+                Frame::SubmitStreamed { req, context, embedding, ttl_ns, chunk }
             }
             OP_EVICT => Frame::Evict { req: cur.u64()?, context: cur.u32()? },
             OP_DRAIN => Frame::Drain { req: cur.u64()? },
@@ -549,6 +616,20 @@ impl Frame {
                 shards: cur.u32()?,
             },
             OP_SHUTDOWN_ACK => Frame::ShutdownAck { req: cur.u64()? },
+            OP_SUBMIT_CHUNK => {
+                let req = cur.u64()?;
+                let seq = cur.u32()?;
+                let data = cur.f32_vec()?;
+                Frame::SubmitChunk { req, seq, data }
+            }
+            OP_SUBMIT_DONE => Frame::SubmitDone {
+                req: cur.u64()?,
+                context: cur.u32()?,
+                selected_rows: cur.u32()?,
+                sim_cycles: cur.u64()?,
+                completed_ns: cur.u64()?,
+                total: cur.u32()?,
+            },
             OP_ERROR => {
                 let req = cur.u64()?;
                 let code = cur.u16()?;
@@ -572,12 +653,15 @@ impl Frame {
             | Frame::Drain { req }
             | Frame::Stats { req }
             | Frame::Shutdown { req }
+            | Frame::SubmitStreamed { req, .. }
             | Frame::Registered { req, .. }
             | Frame::Response { req, .. }
             | Frame::Evicted { req }
             | Frame::DrainStats { req, .. }
             | Frame::StatsReply { req, .. }
             | Frame::ShutdownAck { req }
+            | Frame::SubmitChunk { req, .. }
+            | Frame::SubmitDone { req, .. }
             | Frame::Error { req, .. } => *req,
         }
     }
@@ -669,6 +753,125 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, NetError> {
     Ok(Frame::decode_body(&body)?)
 }
 
+// -- incremental decoding -------------------------------------------
+
+/// The nonblocking counterpart of [`read_preamble`] + [`read_frame`]:
+/// a push-based frame state machine for the event-loop server. Feed
+/// whatever bytes `read(2)` produced — a lone length-prefix byte, half
+/// a payload, three coalesced frames — and pull complete frames out as
+/// they materialize. The decode is bit-identical to the blocking path
+/// (pinned by property tests over adversarial split points), and every
+/// corruption comes back as the same typed [`WireError`].
+///
+/// Validation is eager: the magic/version are checked the moment six
+/// bytes exist, and a hostile length prefix is rejected as soon as its
+/// four bytes arrive — before any payload is buffered, so a peer
+/// cannot balloon memory by announcing a huge frame.
+#[derive(Debug)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    /// Consumed prefix of `buf` (compacted once it grows).
+    pos: usize,
+    /// The 6 preamble bytes are still owed (decoders created with
+    /// [`FrameDecoder::without_preamble`] start past them).
+    preamble_pending: bool,
+}
+
+impl Default for FrameDecoder {
+    fn default() -> Self {
+        FrameDecoder::new()
+    }
+}
+
+impl FrameDecoder {
+    /// A decoder for the server side of a fresh connection: the first
+    /// six bytes must be the magic + version preamble.
+    pub fn new() -> FrameDecoder {
+        FrameDecoder { buf: Vec::new(), pos: 0, preamble_pending: true }
+    }
+
+    /// A decoder for a stream whose preamble was already consumed (or
+    /// that never carries one, like a reply stream under test).
+    pub fn without_preamble() -> FrameDecoder {
+        FrameDecoder { buf: Vec::new(), pos: 0, preamble_pending: false }
+    }
+
+    /// Append freshly-read bytes. Cheap; all validation happens in
+    /// [`FrameDecoder::next`].
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Whether the preamble has been fully consumed and validated —
+    /// lets an error handler distinguish "preamble rejected" from
+    /// "malformed frame" without inspecting the [`WireError`].
+    pub fn preamble_done(&self) -> bool {
+        !self.preamble_pending
+    }
+
+    /// Unconsumed byte count (partial frames waiting for more input).
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn pending(&self) -> &[u8] {
+        &self.buf[self.pos..]
+    }
+
+    fn consume(&mut self, n: usize) {
+        self.pos += n;
+        // compact once the dead prefix dominates, so a long-lived
+        // connection doesn't grow its buffer without bound
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos > 64 * 1024 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+    }
+
+    /// Pull the next complete frame, `Ok(None)` if more bytes are
+    /// needed. After an `Err` the stream is desynced by definition;
+    /// the owner must close the connection (matching the blocking
+    /// reader, which also never resyncs).
+    pub fn next(&mut self) -> Result<Option<Frame>, WireError> {
+        if self.preamble_pending {
+            let pending = self.pending();
+            if pending.len() < 6 {
+                return Ok(None);
+            }
+            let magic: [u8; 4] = pending[..4].try_into().unwrap();
+            if magic != MAGIC {
+                return Err(WireError::BadMagic(magic));
+            }
+            let got = u16::from_le_bytes(pending[4..6].try_into().unwrap());
+            if got != WIRE_VERSION {
+                return Err(WireError::VersionMismatch { got, want: WIRE_VERSION });
+            }
+            self.consume(6);
+            self.preamble_pending = false;
+        }
+        let pending = self.pending();
+        if pending.len() < 4 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(pending[..4].try_into().unwrap()) as usize;
+        if len == 0 {
+            return Err(WireError::Malformed("zero-length frame".into()));
+        }
+        if len > MAX_FRAME_LEN {
+            return Err(WireError::Oversized { len, max: MAX_FRAME_LEN });
+        }
+        if pending.len() < 4 + len {
+            return Ok(None);
+        }
+        let frame = Frame::decode_body(&pending[4..4 + len])?;
+        self.consume(4 + len);
+        Ok(Some(frame))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -710,7 +913,7 @@ mod tests {
 
     fn random_frame(rng: &mut Rng) -> Frame {
         let req = rng.next_u64();
-        match rng.below(13) {
+        match rng.below(16) {
             0 => {
                 let (n, d) = (rng.range(1, 8) as u32, rng.range(1, 8) as u32);
                 let count = (n * d) as usize;
@@ -772,13 +975,39 @@ mod tests {
                 shards: rng.range(1, 64) as u32,
             },
             11 => Frame::ShutdownAck { req },
+            12 => {
+                let len = rng.below(32);
+                Frame::SubmitStreamed {
+                    req,
+                    context: rng.next_u64() as u32,
+                    embedding: rng.normal_vec(len, 1.0),
+                    ttl_ns: if rng.below(2) == 0 { 0 } else { rng.next_u64() },
+                    chunk: rng.below(64) as u32,
+                }
+            }
+            13 => {
+                let len = rng.below(48);
+                Frame::SubmitChunk {
+                    req,
+                    seq: rng.below(1 << 16) as u32,
+                    data: rng.normal_vec(len, 1.0),
+                }
+            }
+            14 => Frame::SubmitDone {
+                req,
+                context: rng.next_u64() as u32,
+                selected_rows: rng.below(512) as u32,
+                sim_cycles: rng.next_u64(),
+                completed_ns: rng.next_u64(),
+                total: rng.below(1 << 20) as u32,
+            },
             _ => Frame::Error { req, error: random_error(rng) },
         }
     }
 
     #[test]
     fn every_frame_type_round_trips() {
-        // property test: random instances of all 13 frame kinds
+        // property test: random instances of all 16 frame kinds
         check(500, |rng| round_trip(&random_frame(rng)));
     }
 
@@ -987,6 +1216,173 @@ mod tests {
                 want: WIRE_VERSION
             }))
         );
+    }
+
+    // -- incremental FrameDecoder vs the blocking reader ------------
+
+    /// Encode a preamble plus `frames` into one contiguous stream.
+    fn stream_of(frames: &[Frame]) -> Vec<u8> {
+        let mut stream = Vec::new();
+        write_preamble(&mut stream).unwrap();
+        for f in frames {
+            write_frame(&mut stream, f).unwrap();
+        }
+        stream
+    }
+
+    /// Drain every complete frame currently decodable.
+    fn drain(dec: &mut FrameDecoder, out: &mut Vec<Frame>) -> Result<(), WireError> {
+        while let Some(f) = dec.next()? {
+            out.push(f);
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn byte_at_a_time_decode_matches_whole_frame_decode() {
+        check(60, |rng| {
+            let count = rng.range(1, 5);
+            let frames: Vec<Frame> = (0..count).map(|_| random_frame(rng)).collect();
+            let stream = stream_of(&frames);
+            let mut dec = FrameDecoder::new();
+            let mut got = Vec::new();
+            for &b in &stream {
+                dec.feed(&[b]);
+                drain(&mut dec, &mut got).unwrap();
+            }
+            assert_eq!(got, frames);
+            assert_eq!(dec.buffered(), 0, "a clean stream leaves no residue");
+            assert!(dec.preamble_done());
+        });
+    }
+
+    #[test]
+    fn every_two_way_split_point_decodes_identically() {
+        // one short stream, cut at EVERY byte boundary: mid-preamble,
+        // mid-length-prefix, mid-opcode, mid-payload, and the frame
+        // boundaries themselves (the coalesced case: part two carries
+        // several whole frames at once)
+        let frames = vec![
+            Frame::Drain { req: 1 },
+            Frame::Submit { req: 2, context: 7, embedding: vec![1.0, -2.5, 3.25], ttl_ns: 99 },
+            Frame::Evicted { req: 3 },
+        ];
+        let stream = stream_of(&frames);
+        for cut in 0..=stream.len() {
+            let mut dec = FrameDecoder::new();
+            let mut got = Vec::new();
+            dec.feed(&stream[..cut]);
+            drain(&mut dec, &mut got).unwrap();
+            dec.feed(&stream[cut..]);
+            drain(&mut dec, &mut got).unwrap();
+            assert_eq!(got, frames, "split at byte {cut}");
+        }
+    }
+
+    #[test]
+    fn random_split_points_decode_identically() {
+        check(100, |rng| {
+            let count = rng.range(1, 6);
+            let frames: Vec<Frame> = (0..count).map(|_| random_frame(rng)).collect();
+            let stream = stream_of(&frames);
+            let mut dec = FrameDecoder::new();
+            let mut got = Vec::new();
+            let mut at = 0;
+            while at < stream.len() {
+                let take = usize::min(1 + rng.below(97), stream.len() - at);
+                dec.feed(&stream[at..at + take]);
+                at += take;
+                drain(&mut dec, &mut got).unwrap();
+            }
+            assert_eq!(got, frames);
+        });
+    }
+
+    #[test]
+    fn incremental_corruption_matches_the_blocking_reader() {
+        // flip one byte anywhere in the stream; the incremental
+        // decoder must recover the same frame prefix as the blocking
+        // reader and fail (when it fails) with the same typed error
+        check(150, |rng| {
+            let count = rng.range(1, 4);
+            let frames: Vec<Frame> = (0..count).map(|_| random_frame(rng)).collect();
+            let mut stream = stream_of(&frames);
+            let i = rng.below(stream.len());
+            stream[i] ^= 1 << rng.below(8);
+
+            // blocking reference: preamble, then frames until error/EOF
+            let mut cursor = std::io::Cursor::new(stream.clone());
+            let mut blocking_frames = Vec::new();
+            let blocking_err: Option<WireError> = match read_preamble(&mut cursor) {
+                Err(NetError::Wire(e)) => Some(e),
+                Err(other) => panic!("preamble can only fail typed: {other:?}"),
+                Ok(()) => loop {
+                    match read_frame(&mut cursor) {
+                        Ok(f) => blocking_frames.push(f),
+                        Err(NetError::Closed) => break None, // truncated tail
+                        Err(NetError::Wire(e)) => break Some(e),
+                        Err(other) => panic!("unexpected error class: {other:?}"),
+                    }
+                },
+            };
+
+            let mut dec = FrameDecoder::new();
+            let mut inc_frames = Vec::new();
+            let mut inc_err = None;
+            for chunk in stream.chunks(1 + rng.below(13)) {
+                dec.feed(chunk);
+                if let Err(e) = drain(&mut dec, &mut inc_frames) {
+                    inc_err = Some(e);
+                    break;
+                }
+            }
+            assert_eq!(inc_frames, blocking_frames);
+            // a flipped length prefix can inflate the frame past the
+            // bytes present: the blocking reader hits EOF (Closed),
+            // the incremental decoder just waits for more — both mean
+            // "no further frames". Every other failure is identical.
+            match (&inc_err, &blocking_err) {
+                (None, None) => {}
+                (Some(e), Some(b)) => assert_eq!(e, b),
+                (Some(e), None) => panic!("incremental-only error {e:?}"),
+                (None, Some(b)) => panic!("blocking-only error {b:?}"),
+            }
+        });
+    }
+
+    #[test]
+    fn hostile_length_prefix_is_rejected_before_the_body_arrives() {
+        let mut dec = FrameDecoder::new();
+        let mut stream = Vec::new();
+        write_preamble(&mut stream).unwrap();
+        stream.extend_from_slice(&((MAX_FRAME_LEN as u32) + 1).to_le_bytes());
+        dec.feed(&stream); // the announced 64 MiB body never arrives
+        assert_eq!(
+            dec.next(),
+            Err(WireError::Oversized { len: MAX_FRAME_LEN + 1, max: MAX_FRAME_LEN })
+        );
+        // zero-length frames are malformed immediately too
+        let mut dec = FrameDecoder::without_preamble();
+        dec.feed(&0u32.to_le_bytes());
+        assert!(matches!(dec.next(), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn incremental_preamble_rejection_is_typed() {
+        let mut dec = FrameDecoder::new();
+        dec.feed(b"XYZW\x03\x00");
+        assert_eq!(dec.next(), Err(WireError::BadMagic(*b"XYZW")));
+        assert!(!dec.preamble_done());
+
+        let mut dec = FrameDecoder::new();
+        dec.feed(&MAGIC);
+        assert_eq!(dec.next(), Ok(None), "magic alone is not enough to judge");
+        dec.feed(&0xFFFFu16.to_le_bytes());
+        assert_eq!(
+            dec.next(),
+            Err(WireError::VersionMismatch { got: 0xFFFF, want: WIRE_VERSION })
+        );
+        assert!(!dec.preamble_done());
     }
 
     #[test]

@@ -247,6 +247,7 @@ fn loadgen_reproduces_stream_serving_over_sockets() {
         seed: 5,
         window: 8,
         popularity: a3::net::Popularity::Uniform,
+        workers: 0,
     };
     let report = run_loadgen(server.local_addr(), plan).unwrap();
     assert_eq!(report.metrics.completed, 40);
@@ -291,4 +292,197 @@ fn shutdown_frame_stops_the_server() {
     client.shutdown().unwrap();
     server.join(); // unblocks because the remote client asked to stop
     assert!(server.shutdown_requested());
+}
+
+/// Poll until `f` holds (5 s ceiling) — for conditions that settle
+/// through the event loop's timers rather than a reply frame.
+fn wait_until(what: &str, mut f: impl FnMut() -> bool) {
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while !f() {
+        assert!(std::time::Instant::now() < deadline, "not reached within 5s: {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+#[test]
+fn streamed_replies_are_bit_identical_to_plain_submits() {
+    let (n, d) = (32usize, 16usize);
+    let engine =
+        EngineBuilder::new().units(2).dims(Dims::new(n, d)).max_batch(1).build().unwrap();
+    let server = NetServer::bind(Arc::new(engine), "127.0.0.1:0").unwrap();
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    let ctx = client.register_context(&kv(n, d, 9)).unwrap();
+    let mut rng = Rng::new(17);
+    for chunk in [0u32, 1, 3, 7, 1024] {
+        let embedding = rng.normal_vec(d, 1.0);
+        let plain_req = client.submit(ctx, &embedding).unwrap();
+        let plain = client.recv().unwrap();
+        assert_eq!(plain.id, plain_req);
+        let req = client.submit_streamed(ctx, &embedding, chunk).unwrap();
+        let streamed = client.recv().unwrap();
+        assert_eq!(streamed.id, req);
+        assert_eq!(streamed.context, plain.context);
+        assert_eq!(streamed.selected_rows, plain.selected_rows);
+        assert_eq!(
+            streamed.output, plain.output,
+            "chunk={chunk}: streamed reassembly must be bit-identical"
+        );
+    }
+    // streamed and plain submits interleave on one connection
+    let e1 = rng.normal_vec(d, 1.0);
+    let e2 = rng.normal_vec(d, 1.0);
+    let r1 = client.submit_streamed(ctx, &e1, 2).unwrap();
+    let r2 = client.submit(ctx, &e2).unwrap();
+    let mut got: Vec<u64> = (0..2).map(|_| client.recv().unwrap().id).collect();
+    got.sort_unstable();
+    assert_eq!(got, vec![r1, r2]);
+}
+
+#[test]
+fn conns_gauge_decrements_exactly_once_on_cap_reject_and_idle_reap() {
+    let engine = EngineBuilder::new().dims(Dims::new(16, 8)).max_batch(1).build().unwrap();
+    let server = NetServer::bind_with(
+        Arc::new(engine),
+        "127.0.0.1:0",
+        NetServerConfig {
+            max_connections: Some(2),
+            idle_timeout: Some(Duration::from_millis(150)),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut c1 = NetClient::connect(server.local_addr()).unwrap();
+    let _c2 = NetClient::connect(server.local_addr()).unwrap();
+    wait_until("both counted connections live", || server.live_connections() == 2);
+
+    // over the cap: one typed QueueFull frame, then close — and the
+    // rejected connection must never enter (or leave) the gauge
+    let mut rejected = NetClient::connect(server.local_addr()).unwrap();
+    match rejected.register_context(&kv(16, 8, 1)) {
+        Err(NetError::Remote(A3Error::QueueFull { pending: 2, limit: 2 })) => {}
+        other => panic!("expected the typed cap rejection, got {other:?}"),
+    }
+    assert_eq!(server.live_connections(), 2, "a rejected connection must not move the gauge");
+
+    // keep c1 busy past the first reap so both decrement paths run:
+    // c2 idles out while c1 still serves…
+    let ctx = c1.register_context(&kv(16, 8, 2)).unwrap();
+    wait_until("idle c2 reaped", || {
+        c1.submit(ctx, &[0.1; 8]).unwrap();
+        c1.recv().unwrap();
+        server.live_connections() == 1
+    });
+    // …then c1 goes idle and is reaped too
+    wait_until("idle c1 reaped", || server.live_connections() == 0);
+    std::thread::sleep(Duration::from_millis(200));
+    assert_eq!(server.live_connections(), 0, "the gauge must settle at zero, not wrap");
+
+    // the freed slots are reusable: a fresh connection is counted again
+    let mut c4 = NetClient::connect(server.local_addr()).unwrap();
+    let ctx = c4.register_context(&kv(16, 8, 3)).unwrap();
+    c4.submit(ctx, &[0.2; 8]).unwrap();
+    c4.recv().unwrap();
+    assert_eq!(server.live_connections(), 1);
+    drop(c4);
+    wait_until("closed connection leaves the gauge", || server.live_connections() == 0);
+}
+
+#[test]
+fn metrics_listener_serves_prometheus_text() {
+    use std::io::{Read as _, Write as _};
+    let engine =
+        EngineBuilder::new().shards(2).units(2).dims(Dims::new(16, 8)).build().unwrap();
+    let server = NetServer::bind_with(
+        Arc::new(engine),
+        "127.0.0.1:0",
+        NetServerConfig { metrics_addr: Some("127.0.0.1:0".parse().unwrap()), ..Default::default() },
+    )
+    .unwrap();
+    let maddr = server.metrics_addr().expect("metrics listener must be bound");
+
+    // one served query so the counters are non-trivial
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    let ctx = client.register_context(&kv(16, 8, 5)).unwrap();
+    client.submit(ctx, &[0.1; 8]).unwrap();
+    client.recv().unwrap();
+
+    let scrape = |path: &str| -> String {
+        let mut s = std::net::TcpStream::connect(maddr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: a3\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap(); // server closes after the reply
+        out
+    };
+    let body = scrape("/metrics");
+    assert!(body.starts_with("HTTP/1.1 200 OK\r\n"), "{body}");
+    assert!(body.contains("# TYPE a3_connections gauge"), "{body}");
+    assert!(body.contains("a3_connections 1\n"), "{body}");
+    assert!(body.contains("a3_completed_total 1\n"), "{body}");
+    assert!(body.contains("a3_shards 2\n"), "{body}");
+    assert!(body.contains("a3_shard_resident_bytes{shard=\"0\"}"), "{body}");
+    assert!(body.contains("a3_shard_resident_bytes{shard=\"1\"}"), "{body}");
+    assert!(body.contains("a3_tier_bytes{tier=\"hot\"}"), "{body}");
+    assert!(body.contains("a3_connection_completed{conn=\"0\"} 1\n"), "{body}");
+    assert!(scrape("/nope").starts_with("HTTP/1.1 404 Not Found\r\n"));
+    // scrapes never perturb the serving gauge
+    assert_eq!(server.live_connections(), 1);
+}
+
+#[test]
+fn one_event_loop_multiplexes_many_concurrent_connections() {
+    let (n, d) = (16usize, 8usize);
+    let engine =
+        EngineBuilder::new().units(2).dims(Dims::new(n, d)).max_batch(4).build().unwrap();
+    let server = NetServer::bind(Arc::new(engine), "127.0.0.1:0").unwrap();
+    // hold 64 connections open at once, each with its own context and
+    // pipelined queries — all served by the single loop thread
+    let mut clients: Vec<(NetClient, RemoteContext)> = (0..64)
+        .map(|i| {
+            let mut c = NetClient::connect(server.local_addr()).unwrap();
+            let ctx = c.register_context(&kv(n, d, 1000 + i)).unwrap();
+            (c, ctx)
+        })
+        .collect();
+    assert_eq!(server.live_connections(), 64);
+    for (c, ctx) in &mut clients {
+        for _ in 0..2 {
+            c.submit(*ctx, &[0.3; 8]).unwrap();
+        }
+        c.flush().unwrap();
+    }
+    for (c, _) in &mut clients {
+        for _ in 0..2 {
+            c.recv().unwrap();
+        }
+    }
+    assert_eq!(server.merged_report().completed, 128);
+}
+
+#[test]
+fn pooled_loadgen_drives_more_connections_than_workers() {
+    let engine = EngineBuilder::new()
+        .units(2)
+        .dims(Dims::new(32, 8))
+        .max_batch(4)
+        .build()
+        .unwrap();
+    let server = NetServer::bind(Arc::new(engine), "127.0.0.1:0").unwrap();
+    let plan = LoadPlan {
+        connections: 48,
+        queries: 96,
+        contexts_per_conn: 1,
+        n: 32,
+        d: 8,
+        qps: None,
+        seed: 11,
+        window: 4,
+        popularity: a3::net::Popularity::Uniform,
+        workers: 4, // 12 connections per generator thread
+    };
+    let report = run_loadgen(server.local_addr(), plan).unwrap();
+    assert_eq!(report.metrics.completed, 96);
+    let mut ids: Vec<u64> = report.responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 96, "globalized ids stay unique across pooled connections");
 }

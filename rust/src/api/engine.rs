@@ -34,13 +34,14 @@ use std::time::{Duration, Instant};
 use super::error::A3Error;
 use crate::approx::SortedColumns;
 use crate::attention::KvPair;
-use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::coordinator::batcher::{BatchPolicy, Batcher, CloseCounts};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{ContextId, KvContext, Query, QueryId, Response, NO_DEADLINE};
 use crate::coordinator::scheduler::{Scheduler, UnitConfig, UnitKind};
 use crate::coordinator::store::{ContextStore, WarmServe};
 use crate::coordinator::tier::{Tier, TierPolicy, TierStats};
 use crate::model::AttentionBackend;
+use crate::obs::{self, QueryTrace, ServeFacts, Telemetry, TraceSink};
 use crate::sim::Dims;
 
 /// Typed, validated configuration for an [`Engine`].
@@ -64,6 +65,7 @@ pub struct EngineBuilder {
     spill_dir: Option<PathBuf>,
     warm_watermark: f64,
     cold_watermark: f64,
+    trace_sample: Option<u64>,
 }
 
 impl Default for EngineBuilder {
@@ -81,6 +83,7 @@ impl Default for EngineBuilder {
             spill_dir: None,
             warm_watermark: TierPolicy::DEFAULT_WARM_WATERMARK,
             cold_watermark: TierPolicy::DEFAULT_COLD_WATERMARK,
+            trace_sample: None,
         }
     }
 }
@@ -220,6 +223,18 @@ impl EngineBuilder {
     /// always exact.
     pub fn degrade_under_pressure(mut self, pending: usize) -> Self {
         self.degrade_pending = Some(pending);
+        self
+    }
+
+    /// Span-trace sampling rate: trace 1 in every `n` queries
+    /// (deterministically, by query id) into the per-shard
+    /// [`crate::obs::TraceSink`] rings; `0` disables the sampler.
+    /// Unset, the `A3_TRACE` environment knob decides, falling back
+    /// to [`crate::obs::DEFAULT_TRACE_SAMPLE`]. Tracing is
+    /// bookkeeping-only: outputs are bit-identical at any rate
+    /// (pinned by `tests/obs.rs`).
+    pub fn trace_sample(mut self, n: u64) -> Self {
+        self.trace_sample = Some(n);
         self
     }
 
@@ -647,6 +662,11 @@ pub struct Engine {
     /// Cold-context prefetch queue feeding the background prewarm
     /// thread (`Some` only on tiered engines); `None` once stopped.
     prewarm_tx: Option<mpsc::Sender<(usize, ContextId)>>,
+    /// Per-shard span-trace rings (sampled + force-flagged queries).
+    sink: Arc<TraceSink>,
+    /// Mid-run histogram telemetry shared with the shard workers and
+    /// the `/metrics` listener.
+    telemetry: Arc<Telemetry>,
 }
 
 impl Engine {
@@ -662,8 +682,15 @@ impl Engine {
             shards,
             memory_budget,
             degrade_pending,
+            trace_sample,
             ..
         } = builder;
+        // builder knob > A3_TRACE env > crate default
+        let trace_sample = trace_sample
+            .or_else(obs::trace_sample_from_env)
+            .unwrap_or(obs::DEFAULT_TRACE_SAMPLE);
+        let sink = Arc::new(TraceSink::new(trace_sample, shards, obs::TRACE_RING_CAP));
+        let telemetry = Arc::new(Telemetry::new());
         // the degraded fallback runs candidate selection, so contexts
         // must prewarm their sorted cache even on an exact engine
         let needs_sorted = kind.needs_sorted_contexts() || degrade_pending.is_some();
@@ -720,6 +747,9 @@ impl Engine {
                 sim_floor: 0,
                 needs_sorted,
                 warm_servable,
+                sink: Arc::clone(&sink),
+                telemetry: Arc::clone(&telemetry),
+                synced_closes: CloseCounts::default(),
             };
             let handle = std::thread::Builder::new()
                 .name(format!("a3-shard{shard}"))
@@ -772,6 +802,8 @@ impl Engine {
             arrival_qps,
             max_pending,
             prewarm_tx,
+            sink,
+            telemetry,
         })
     }
 
@@ -812,6 +844,40 @@ impl Engine {
     /// ([`EngineBuilder::degrade_under_pressure`]).
     pub fn degraded_total(&self) -> u64 {
         self.shared.degraded.load(Ordering::Relaxed) as u64
+    }
+
+    /// Mid-run histogram telemetry (latency, queue wait, batch size,
+    /// selected-rows %, kernel time, tier/batch-close counters) —
+    /// what the `/metrics` listener serves as native histogram
+    /// families, readable at any moment without a drain barrier.
+    pub fn telemetry(&self) -> &Arc<Telemetry> {
+        &self.telemetry
+    }
+
+    /// The span-trace sink: per-shard rings of resolved
+    /// [`QueryTrace`]s. The network front door stamps route/reply
+    /// times and reads wire breakdowns through this.
+    pub fn trace_sink(&self) -> &Arc<TraceSink> {
+        &self.sink
+    }
+
+    /// Snapshot of every resolved span trace (newest
+    /// [`crate::obs::TRACE_RING_CAP`] per shard).
+    pub fn traces(&self) -> Vec<QueryTrace> {
+        self.sink.snapshot()
+    }
+
+    /// The effective 1-in-N trace sampling rate (0 = sampler off).
+    pub fn trace_sample(&self) -> u64 {
+        self.sink.sample()
+    }
+
+    /// Nanoseconds since this engine's epoch — the host clock every
+    /// [`QueryTrace`] stage stamp is on. External consumers (the net
+    /// router stamping route/reply) must use this, not their own
+    /// epoch, so stamps stay on one monotone time axis.
+    pub fn trace_now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
     }
 
     /// The per-shard slice of the configured memory budget, if any.
@@ -1077,6 +1143,21 @@ impl Engine {
         embedding: Vec<f32>,
         ttl_ns: u64,
     ) -> Result<Ticket, (A3Error, Option<Vec<f32>>)> {
+        self.submit_reclaim_traced(handle, embedding, ttl_ns, false)
+    }
+
+    /// [`Engine::submit_reclaim`] with an explicit trace request: the
+    /// wire protocol's per-query trace flag forces a
+    /// [`crate::obs::QueryTrace`] for this query regardless of the
+    /// engine's 1-in-N sampler, so a client asking for a breakdown
+    /// always gets one.
+    pub(crate) fn submit_reclaim_traced(
+        &self,
+        handle: &ContextHandle,
+        embedding: Vec<f32>,
+        ttl_ns: u64,
+        force_trace: bool,
+    ) -> Result<Ticket, (A3Error, Option<Vec<f32>>)> {
         // liveness (evicted/unknown) and the home shard are resolved by
         // submit_query — one registry lock per submit, not two
         if let Err(e) = self.validate_submit(handle, &embedding) {
@@ -1103,15 +1184,21 @@ impl Engine {
             arrival_ns,
             deadline_ns,
         };
-        self.submit_query(query).map_err(|e| (e, None))?;
+        self.submit_query(query, force_trace).map_err(|e| (e, None))?;
         Ok(Ticket { id, context: handle.id() })
     }
 
     /// Raw-query submit: routes to the context's home shard. The
     /// caller owns id assignment and arrival stamping; context must be
-    /// live.
-    pub(crate) fn submit_query(&self, query: Query) -> Result<(), A3Error> {
+    /// live. `force_trace` opens a [`crate::obs::QueryTrace`] even for
+    /// ids the sampler would skip (the wire trace flag); sampled ids
+    /// are traced either way. Tracing is pure bookkeeping — it never
+    /// changes routing, batching, or results.
+    pub(crate) fn submit_query(&self, query: Query, force_trace: bool) -> Result<(), A3Error> {
         let shard = self.registry.lock().unwrap().resolve_shard(query.context)?;
+        if force_trace || self.sink.sampled(query.id) {
+            self.sink.begin(shard, query.id, query.context, query.arrival_ns, force_trace);
+        }
         if let Some(prewarm) = &self.prewarm_tx {
             // hide the cold re-admission behind the batching queue:
             // by the time this query's batch dispatches, the prewarm
@@ -1351,7 +1438,7 @@ impl Engine {
                 }
                 self.collect_run(&arrivals, &mut responses)?;
             }
-            self.submit_query(q)?;
+            self.submit_query(q, false)?;
             self.collect_run(&arrivals, &mut responses)?;
         }
         let end_makespans = self.flush()?;
@@ -1490,6 +1577,16 @@ struct ShardWorker {
     /// Whether this shard's units serve warm (quantized-resident)
     /// contexts in place (quantized approximate backends only).
     warm_servable: bool,
+    /// Shared per-query trace sink: sampled/forced queries get their
+    /// stage stamps and approximation facts recorded here. Pure
+    /// bookkeeping — never consulted for scheduling decisions.
+    sink: Arc<TraceSink>,
+    /// Always-on aggregate histograms + counters, recorded once per
+    /// dispatched batch (independent of the trace sampler).
+    telemetry: Arc<Telemetry>,
+    /// Batch-close counts already published to `telemetry` — dispatch
+    /// publishes only the delta since this watermark.
+    synced_closes: CloseCounts,
 }
 
 impl ShardWorker {
@@ -1556,12 +1653,22 @@ impl ShardWorker {
                 dropped.push((id, e.clone()));
             }
         }
+        if self.sink.enabled() {
+            let now_ns = self.epoch.elapsed().as_nanos() as u64;
+            for &id in &failed {
+                self.sink.drop_query(self.shard, id, "shard_failed", now_ns);
+            }
+        }
         self.shared.dropped.fetch_add(failed.len(), Ordering::AcqRel);
         self.shared.inflight.fetch_sub(failed.len(), Ordering::AcqRel);
         // rebuild from the spawn blueprint; the store shard (contexts,
         // sorted caches, byte accounting) survives as shared state
         self.sim_floor = self.makespan();
         self.batcher = Batcher::new(self.batch_policy);
+        // the fresh batcher restarts close counts at zero, so the
+        // telemetry watermark must restart with it (delta would
+        // otherwise underflow)
+        self.synced_closes = CloseCounts::default();
         self.scheduler = Scheduler::replicated(self.unit_config, self.unit_count);
         self.scheduler.advance_to(self.sim_floor);
         self.slow_next = None;
@@ -1616,6 +1723,10 @@ impl ShardWorker {
                     self.store.remove(self.shard, id);
                 }
                 Ok(Cmd::Submit(q)) => {
+                    if self.sink.enabled() {
+                        let now_ns = self.epoch.elapsed().as_nanos() as u64;
+                        self.sink.admit(self.shard, q.id, now_ns);
+                    }
                     self.arrivals.insert(q.id, q.arrival_ns);
                     if let Some(batch) = self.batcher.push(q) {
                         self.dispatch(batch);
@@ -1750,6 +1861,11 @@ impl ShardWorker {
         for q in &queries {
             self.arrivals.remove(&q.id);
         }
+        if self.sink.enabled() {
+            for q in &queries {
+                self.sink.drop_query(self.shard, q.id, "deadline_exceeded", now_ns);
+            }
+        }
         self.shared.dropped.fetch_add(count, Ordering::AcqRel);
         self.shared.inflight.fetch_sub(count, Ordering::AcqRel);
         let _gate = self.shared.admission_gate.lock().unwrap();
@@ -1790,6 +1906,8 @@ impl ShardWorker {
         if batch.is_empty() {
             return;
         }
+        // host-side stage stamp: the batch is composed here (post-shed)
+        let batch_host_ns = now_ns;
         if let Some(delay) = self.slow_next.take() {
             // injected straggler (chaos harness): the stall happens
             // where a slow unit would — after composition, before
@@ -1797,9 +1915,16 @@ impl ShardWorker {
             std::thread::sleep(delay);
         }
         let count = batch.len();
+        // kernel window brackets the context fetch + scheduler call,
+        // so the injected stall above shows up in the compose→kernel
+        // gap rather than inflating compute time
+        let kernel_start_host_ns = self.epoch.elapsed().as_nanos() as u64;
         let degrade = self
             .degrade_pending
             .is_some_and(|at| self.shared.inflight.load(Ordering::Acquire) >= at);
+        let mut context_rows = 0u32;
+        let mut warm_tier = false;
+        let mut was_degraded = false;
         let outcome = match self.fetch_context(batch[0].context) {
             Err(e) => Err(e),
             Ok(resident) => {
@@ -1810,7 +1935,9 @@ impl ShardWorker {
                 }
                 match resident {
                     WarmServe::Hot(ctx) => {
+                        context_rows = ctx.kv.n as u32;
                         if degrade {
+                            was_degraded = true;
                             self.shared.degraded.fetch_add(1, Ordering::Relaxed);
                             self.scheduler.dispatch_degraded(&ctx, &batch)
                         } else {
@@ -1819,24 +1946,77 @@ impl ShardWorker {
                     }
                     // quantized-resident serving, no re-hydration:
                     // bit-identical to the hot path for the same format
-                    WarmServe::Warm(qkv) => self.scheduler.dispatch_warm(&qkv, &batch),
+                    WarmServe::Warm(qkv) => {
+                        context_rows = qkv.n as u32;
+                        warm_tier = true;
+                        self.scheduler.dispatch_warm(&qkv, &batch)
+                    }
                 }
             }
         };
+        let kernel_end_host_ns = self.epoch.elapsed().as_nanos() as u64;
         match outcome {
             Ok(responses) => {
+                let traced = self.sink.enabled();
+                let plane = self.scheduler.kernel_plane();
+                let tier = if warm_tier { "warm" } else { "hot" };
+                let mut latencies = Vec::with_capacity(responses.len());
+                let mut queue_waits = Vec::with_capacity(responses.len());
+                let mut selected_pct = Vec::with_capacity(responses.len());
                 for r in responses {
-                    let arrival = self
-                        .arrivals
-                        .remove(&r.id)
-                        .unwrap_or(0)
-                        .saturating_sub(self.arrival_base_ns);
+                    let raw_arrival = self.arrivals.remove(&r.id).unwrap_or(0);
+                    let arrival = raw_arrival.saturating_sub(self.arrival_base_ns);
                     let completed = r.completed_ns.saturating_sub(self.sim_base_cycles);
+                    latencies.push(completed.saturating_sub(arrival));
+                    queue_waits.push(batch_host_ns.saturating_sub(raw_arrival));
+                    selected_pct.push(if context_rows == 0 {
+                        0
+                    } else {
+                        r.selected_rows as u64 * 100 / u64::from(context_rows)
+                    });
                     record_response(&mut self.metrics, &r, completed, arrival);
+                    if traced {
+                        self.sink.complete(
+                            self.shard,
+                            r.id,
+                            ServeFacts {
+                                batch_ns: batch_host_ns,
+                                kernel_start_ns: kernel_start_host_ns,
+                                kernel_end_ns: kernel_end_host_ns,
+                                batch_size: count as u32,
+                                selected_rows: r.selected_rows as u32,
+                                context_rows,
+                                sim_cycles: r.sim_cycles,
+                                plane,
+                                tier,
+                                degraded: was_degraded,
+                            },
+                        );
+                    }
                     let _ = self.resp_tx.send(r);
                 }
+                // always-on aggregates: one telemetry record per batch,
+                // independent of the trace sampler
+                self.telemetry.record_batch(
+                    &latencies,
+                    &queue_waits,
+                    &selected_pct,
+                    kernel_end_host_ns.saturating_sub(kernel_start_host_ns),
+                );
+                self.telemetry.tier_serve(warm_tier, latencies.len() as u64);
+                let closes = self.batcher.close_counts();
+                let delta = closes.delta_since(&self.synced_closes);
+                self.synced_closes = closes;
+                self.telemetry
+                    .add_batch_closes(delta.full, delta.timeout, delta.flush, delta.evict);
             }
             Err(e) => {
+                if self.sink.enabled() {
+                    let kind = e.kind();
+                    for q in &batch {
+                        self.sink.drop_query(self.shard, q.id, kind, kernel_end_host_ns);
+                    }
+                }
                 {
                     // per-query notices for ticket-tracking consumers
                     // (the net router); capped at max_pending so an

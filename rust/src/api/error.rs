@@ -59,6 +59,28 @@ pub enum A3Error {
     SpillCorrupt { context: ContextId, detail: String },
 }
 
+impl A3Error {
+    /// Stable snake_case kind label, payload-free — used as the
+    /// dropped-terminal tag in [`crate::obs::QueryTrace`]s and as a
+    /// grouping key anywhere the payload would explode cardinality.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            A3Error::ConfigError(_) => "config_error",
+            A3Error::UnknownContext(_) => "unknown_context",
+            A3Error::ContextEvicted(_) => "context_evicted",
+            A3Error::QueueFull { .. } => "queue_full",
+            A3Error::BackendMismatch(_) => "backend_mismatch",
+            A3Error::DimensionMismatch { .. } => "dimension_mismatch",
+            A3Error::EmptyBatch => "empty_batch",
+            A3Error::MemoryBudget { .. } => "memory_budget",
+            A3Error::EngineStopped => "engine_stopped",
+            A3Error::ShardFailed { .. } => "shard_failed",
+            A3Error::DeadlineExceeded { .. } => "deadline_exceeded",
+            A3Error::SpillCorrupt { .. } => "spill_corrupt",
+        }
+    }
+}
+
 impl fmt::Display for A3Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
@@ -122,6 +144,29 @@ mod tests {
         ];
         for (e, needle) in cases {
             assert!(e.to_string().contains(needle), "{e}");
+        }
+    }
+
+    #[test]
+    fn kinds_are_distinct_snake_case_labels() {
+        let all = [
+            A3Error::ConfigError(String::new()),
+            A3Error::UnknownContext(0),
+            A3Error::ContextEvicted(0),
+            A3Error::QueueFull { pending: 0, limit: 0 },
+            A3Error::BackendMismatch(String::new()),
+            A3Error::DimensionMismatch { expected: 0, got: 0 },
+            A3Error::EmptyBatch,
+            A3Error::MemoryBudget { required: 0, budget: 0 },
+            A3Error::EngineStopped,
+            A3Error::ShardFailed { shard: 0 },
+            A3Error::DeadlineExceeded { deadline_ns: 0, now_ns: 0 },
+            A3Error::SpillCorrupt { context: 0, detail: String::new() },
+        ];
+        let kinds: std::collections::HashSet<&str> = all.iter().map(|e| e.kind()).collect();
+        assert_eq!(kinds.len(), all.len(), "kind labels must be unique");
+        for k in kinds {
+            assert!(k.chars().all(|c| c.is_ascii_lowercase() || c == '_'), "{k}");
         }
     }
 

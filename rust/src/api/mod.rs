@@ -218,6 +218,63 @@
 //! binds the front door and `a3 client --connect ADDR` drives it.
 //! Outputs served over the wire are bit-identical to in-process
 //! serving (`rust/tests/net.rs`).
+//!
+//! # Tracing & metrics
+//!
+//! Observability lives in [`crate::obs`] and is wired through every
+//! serving layer; none of it changes what gets computed — outputs are
+//! bit-identical with tracing on or off (`rust/tests/obs.rs`).
+//!
+//! * **Telemetry is always on.** Every shard worker feeds the shared
+//!   [`crate::obs::Telemetry`]: fixed-bucket log2 histograms (latency,
+//!   queue wait, batch size, selected-rows ratio, kernel time) plus
+//!   per-tier serve and batch-close counters, readable mid-run through
+//!   [`Engine::telemetry`] and exported as native Prometheus histogram
+//!   families on the `a3 serve --metrics` endpoint. Cost per query is
+//!   a few relaxed atomics.
+//! * **Span tracing is sampled.** [`EngineBuilder::trace_sample`]
+//!   picks the 1-in-N rate (`1` = every query, `0` = off); when the
+//!   builder is silent the `A3_TRACE` environment knob decides, and
+//!   when both are silent the default is 1-in-64. Sampled queries
+//!   leave a [`crate::obs::QueryTrace`] — monotonic stage stamps from
+//!   submit through kernel (and route/reply when served over the
+//!   wire) plus approximation-quality facts (selected rows, kernel
+//!   plane, serving tier, degraded flag) — in fixed per-shard rings
+//!   read by [`Engine::traces`] and exported by `a3 trace` as Chrome
+//!   trace-event JSON. A remote client can force a trace for one query
+//!   regardless of sampling ([`crate::net::NetClient::submit_traced`])
+//!   and split its observed latency into network / queue / compute
+//!   from the returned breakdown.
+//!
+//! ```
+//! use a3::api::{A3Error, Dims, EngineBuilder, KvPair};
+//! use a3::obs::Terminal;
+//! use a3::testutil::Rng;
+//!
+//! fn main() -> Result<(), A3Error> {
+//!     let engine = EngineBuilder::new()
+//!         .dims(Dims::new(32, 16))
+//!         .max_batch(4)
+//!         .trace_sample(1) // trace every query
+//!         .build()?;
+//!     let mut rng = Rng::new(7);
+//!     let kv = KvPair::new(32, 16, rng.normal_vec(32 * 16, 1.0), rng.normal_vec(32 * 16, 1.0));
+//!     let ctx = engine.register_context(kv)?;
+//!     let stream = (0..4).map(|_| (ctx.clone(), rng.normal_vec(16, 1.0))).collect();
+//!     let (_tickets, report) = engine.run_stream(stream)?;
+//!
+//!     // always-on histograms account every completed query…
+//!     let telemetry = engine.telemetry();
+//!     let (_, _, latency) = &telemetry.histograms()[0];
+//!     assert_eq!(latency.count(), report.responses.len() as u64);
+//!     // …and each sampled query left a terminal span trace
+//!     let traces = engine.traces();
+//!     assert_eq!(traces.len(), 4);
+//!     assert!(traces.iter().all(|t| t.terminal == Terminal::Completed));
+//!     assert!(traces.iter().all(|t| t.selected_rows > 0));
+//!     Ok(())
+//! }
+//! ```
 
 pub mod engine;
 pub mod error;
@@ -512,7 +569,7 @@ mod tests {
             deadline_ns: crate::coordinator::NO_DEADLINE,
         };
         assert!(matches!(
-            engine.submit_query(q),
+            engine.submit_query(q, false),
             Err(A3Error::UnknownContext(999))
         ));
     }

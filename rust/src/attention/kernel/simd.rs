@@ -77,6 +77,28 @@ impl KernelPlane {
         }
     }
 
+    /// Compact stable code for the wire trace breakdown (`a3::obs`
+    /// propagates which plane served a query back to remote clients).
+    pub fn code(self) -> u8 {
+        match self {
+            KernelPlane::Scalar => 0,
+            KernelPlane::Simd128 => 1,
+            KernelPlane::Avx2 => 2,
+            KernelPlane::Neon => 3,
+        }
+    }
+
+    /// Inverse of [`KernelPlane::code`] for decoding trace frames.
+    pub fn from_code(code: u8) -> Option<KernelPlane> {
+        match code {
+            0 => Some(KernelPlane::Scalar),
+            1 => Some(KernelPlane::Simd128),
+            2 => Some(KernelPlane::Avx2),
+            3 => Some(KernelPlane::Neon),
+            _ => None,
+        }
+    }
+
     /// All planes, oracle first.
     pub fn all() -> [KernelPlane; 4] {
         [KernelPlane::Scalar, KernelPlane::Simd128, KernelPlane::Avx2, KernelPlane::Neon]

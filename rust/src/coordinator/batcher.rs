@@ -32,16 +32,46 @@ impl Default for BatchPolicy {
     }
 }
 
+/// Why batches closed, as lifetime counters — the batching-health
+/// signal behind the `a3_batch_close_total{reason=...}` metric family
+/// (a timeout-dominated mix means arrival rate is too low to fill
+/// `max_batch` and latency is paying the full wait budget).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CloseCounts {
+    /// Closed by reaching `max_batch`.
+    pub full: u64,
+    /// Closed by the oldest member exceeding `max_wait_ns`.
+    pub timeout: u64,
+    /// Closed by drain/shutdown ([`Batcher::flush_all`]).
+    pub flush: u64,
+    /// Closed by context eviction ([`Batcher::take_context`]).
+    pub evict: u64,
+}
+
+impl CloseCounts {
+    /// Per-field difference since an earlier snapshot (counters are
+    /// monotonic, so this never underflows in correct use).
+    pub fn delta_since(&self, earlier: &CloseCounts) -> CloseCounts {
+        CloseCounts {
+            full: self.full - earlier.full,
+            timeout: self.timeout - earlier.timeout,
+            flush: self.flush - earlier.flush,
+            evict: self.evict - earlier.evict,
+        }
+    }
+}
+
 /// Per-context pending queues with the size-or-timeout close rule.
 #[derive(Debug, Default)]
 pub struct Batcher {
     policy: BatchPolicy,
     pending: HashMap<ContextId, Vec<Query>>,
+    closes: CloseCounts,
 }
 
 impl Batcher {
     pub fn new(policy: BatchPolicy) -> Self {
-        Batcher { policy, pending: HashMap::new() }
+        Batcher { policy, pending: HashMap::new(), closes: CloseCounts::default() }
     }
 
     /// Add a query; returns a closed batch if this push filled one.
@@ -50,9 +80,15 @@ impl Batcher {
         bucket.push(q);
         if bucket.len() >= self.policy.max_batch {
             let ctx = bucket[0].context;
+            self.closes.full += 1;
             return self.pending.remove(&ctx);
         }
         None
+    }
+
+    /// Lifetime batch-close counters by reason.
+    pub fn close_counts(&self) -> CloseCounts {
+        self.closes
     }
 
     /// Close every batch whose oldest query exceeded the wait budget.
@@ -66,10 +102,10 @@ impl Batcher {
             })
             .map(|(&c, _)| c)
             .collect();
-        expired
-            .into_iter()
-            .filter_map(|c| self.pending.remove(&c))
-            .collect()
+        let batches: Vec<Vec<Query>> =
+            expired.into_iter().filter_map(|c| self.pending.remove(&c)).collect();
+        self.closes.timeout += batches.len() as u64;
+        batches
     }
 
     /// Drain everything (shutdown / engine drain): every partially
@@ -80,6 +116,7 @@ impl Batcher {
     pub fn flush_all(&mut self) -> Vec<Vec<Query>> {
         let mut batches: Vec<Vec<Query>> = self.pending.drain().map(|(_, qs)| qs).collect();
         batches.sort_by_key(|qs| qs.first().map_or(u64::MAX, |q| q.arrival_ns));
+        self.closes.flush += batches.len() as u64;
         batches
     }
 
@@ -99,7 +136,11 @@ impl Batcher {
     /// already-admitted queries are dispatched before the context
     /// leaves the engine).
     pub fn take_context(&mut self, ctx: ContextId) -> Option<Vec<Query>> {
-        self.pending.remove(&ctx)
+        let taken = self.pending.remove(&ctx);
+        if taken.is_some() {
+            self.closes.evict += 1;
+        }
+        taken
     }
 
     /// Shed every pending query whose deadline has passed at `now_ns`
@@ -281,6 +322,27 @@ mod tests {
         b.push(q_ttl(1, 1, 0, 900));
         b.push(q_ttl(2, 2, 0, 300));
         assert_eq!(b.min_query_deadline_ns(), Some(300));
+    }
+
+    #[test]
+    fn close_counts_attribute_every_close_reason() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait_ns: 100 });
+        assert_eq!(b.close_counts(), CloseCounts::default());
+        b.push(q(0, 1, 0));
+        b.push(q(1, 1, 0)); // closes full
+        b.push(q(2, 2, 0));
+        assert_eq!(b.expire(500).len(), 1); // closes timeout
+        b.push(q(3, 3, 0));
+        b.push(q(4, 4, 0));
+        assert!(b.take_context(3).is_some()); // closes evict
+        assert!(b.take_context(3).is_none(), "a miss must not count");
+        assert_eq!(b.flush_all().len(), 1); // closes flush
+        let counts = b.close_counts();
+        assert_eq!(counts, CloseCounts { full: 1, timeout: 1, flush: 1, evict: 1 });
+        assert_eq!(
+            counts.delta_since(&CloseCounts { full: 1, timeout: 0, flush: 1, evict: 0 }),
+            CloseCounts { full: 0, timeout: 1, flush: 0, evict: 1 }
+        );
     }
 
     #[test]

@@ -1,10 +1,20 @@
 //! Streaming serving metrics: counts, throughput, latency percentiles.
 
 /// Latency/throughput accumulator. Latencies are kept exactly (the
-//  serving runs here are ≤ millions of queries) and sorted on demand.
+/// serving runs here are ≤ millions of queries) and sorted on demand.
+///
+/// Dual accounting: every latency is recorded twice — pushed onto the
+/// exact vector *and* bucketed into a bounded log2
+/// [`crate::obs::Histogram`]. The vector is the precision path
+/// (drain-time reports, exact percentiles for the paper figures); the
+/// histogram is the bounded path, cheap to merge across shards and
+/// snapshot mid-run for the Prometheus `/metrics` families. Both are
+/// fed by the same [`Metrics::record`] call, so they can never
+/// disagree on the sample population.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     latencies_ns: Vec<u64>,
+    latency_hist: crate::obs::Histogram,
     pub completed: u64,
     pub selected_rows_total: u64,
     pub sim_cycles_total: u64,
@@ -20,8 +30,15 @@ impl Metrics {
         self.completed += 1;
         self.last_ns = self.last_ns.max(completed_ns);
         self.latencies_ns.push(latency_ns);
+        self.latency_hist.record(latency_ns);
         self.selected_rows_total += selected_rows as u64;
         self.sim_cycles_total += sim_cycles;
+    }
+
+    /// The bounded log2 side of the dual accounting (see the struct
+    /// docs) — same sample population as the exact vector.
+    pub fn latency_histogram(&self) -> &crate::obs::Histogram {
+        &self.latency_hist
     }
 
     pub fn merge(&mut self, other: &Metrics) {
@@ -36,6 +53,7 @@ impl Metrics {
         self.completed += other.completed;
         self.last_ns = self.last_ns.max(other.last_ns);
         self.latencies_ns.extend_from_slice(&other.latencies_ns);
+        self.latency_hist.merge(&other.latency_hist);
         self.selected_rows_total += other.selected_rows_total;
         self.sim_cycles_total += other.sim_cycles_total;
     }
@@ -58,6 +76,7 @@ impl Metrics {
         self.completed += other.completed;
         self.last_ns = self.last_ns.max(other.last_ns);
         self.latencies_ns.append(&mut other.latencies_ns);
+        self.latency_hist.merge(&other.latency_hist);
         self.selected_rows_total += other.selected_rows_total;
         self.sim_cycles_total += other.sim_cycles_total;
     }
@@ -305,6 +324,31 @@ mod tests {
         let snapshot = absorbed.report();
         absorbed.absorb(Metrics::default());
         assert_eq!(absorbed.report(), snapshot);
+    }
+
+    #[test]
+    fn histogram_shadows_exact_vector() {
+        // dual accounting: the bounded histogram and the exact vec see
+        // the same population, through record, merge, and absorb alike
+        let mut shard_a = Metrics::default();
+        let mut shard_b = Metrics::default();
+        for i in 0..80u64 {
+            shard_a.record(i * 13 % 257, 10 + i, 1, 1);
+            shard_b.record(i * 37 % 509, 600 + i, 1, 1);
+        }
+        let mut merged = Metrics::default();
+        merged.merge(&shard_a);
+        merged.merge(&shard_b);
+        let sum: u64 = [&shard_a, &shard_b]
+            .iter()
+            .flat_map(|m| m.latencies_ns.iter())
+            .sum();
+        assert_eq!(merged.latency_histogram().count(), merged.completed);
+        assert_eq!(merged.latency_histogram().sum(), sum);
+        let mut absorbed = Metrics::default();
+        absorbed.absorb(shard_a);
+        absorbed.absorb(shard_b);
+        assert_eq!(absorbed.latency_histogram(), merged.latency_histogram());
     }
 
     #[test]

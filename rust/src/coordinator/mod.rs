@@ -42,7 +42,7 @@ pub mod scheduler;
 pub mod store;
 pub mod tier;
 
-pub use batcher::{BatchPolicy, Batcher};
+pub use batcher::{BatchPolicy, Batcher, CloseCounts};
 pub use metrics::{AttributedMetrics, Metrics, MetricsReport};
 pub use request::{KvContext, Query, QueryId, Response, NO_DEADLINE};
 pub use scheduler::{Scheduler, UnitConfig, UnitKind};

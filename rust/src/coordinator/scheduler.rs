@@ -84,6 +84,9 @@ pub struct Scheduler {
     /// Queries served through [`Scheduler::dispatch_degraded`]'s
     /// conservative fallback (load-shedding observability).
     degraded: u64,
+    /// Unit index chosen by the most recent successful dispatch
+    /// (span-trace attribution: which replica served the batch).
+    last_unit: Option<usize>,
 }
 
 impl Scheduler {
@@ -110,7 +113,14 @@ impl Scheduler {
             out_flat: Vec::new(),
             results: Vec::new(),
             degraded: 0,
+            last_unit: None,
         }
+    }
+
+    /// Unit index of the most recent successful dispatch, if any —
+    /// recorded for the per-query span traces (`a3::obs`).
+    pub fn last_dispatch_unit(&self) -> Option<usize> {
+        self.last_unit
     }
 
     /// Replicated homogeneous units.
@@ -255,6 +265,7 @@ impl Scheduler {
                 completed_ns: timing.finish,
             });
         }
+        self.last_unit = Some(idx);
         Ok(responses)
     }
 
@@ -384,6 +395,7 @@ impl Scheduler {
                 completed_ns: timing.finish, // 1 cycle == 1 ns at 1 GHz
             });
         }
+        self.last_unit = Some(idx);
         Ok(responses)
     }
 

@@ -289,6 +289,7 @@ pub fn run_tier_sweep(queries: usize, contexts: usize) -> Result<Table> {
             window: 64,
             popularity,
             workers: 0,
+            trace_every: 0,
         };
         let report = run_loadgen(server.local_addr(), plan)?;
         let snap = report.metrics.report();
@@ -312,14 +313,33 @@ pub fn run_tier_sweep(queries: usize, contexts: usize) -> Result<Table> {
     Ok(t)
 }
 
-/// One transport row for the socket-overhead table.
-fn transport_row(t: &mut Table, transport: &str, report: &ServeReport) {
+/// One transport row for the socket-overhead table. `split` is the
+/// traced-subsample latency split for the TCP rows (mean ns per stage
+/// over the traced queries); the in-process row has no wire and no
+/// breakdown, so it prints `-`.
+fn transport_row(
+    t: &mut Table,
+    transport: &str,
+    report: &ServeReport,
+    split: Option<&crate::net::LatencySplit>,
+) {
     let snap = report.metrics.report();
+    let stage = |ns: u64| format!("{:.1}", ns as f64 / 1e3);
+    let split_cell = match split {
+        Some(s) if s.samples > 0 => format!(
+            "{}/{}/{} µs",
+            stage(s.mean_network_ns()),
+            stage(s.mean_queue_ns()),
+            stage(s.mean_compute_ns())
+        ),
+        _ => "-".into(),
+    };
     t.row(vec![
         transport.into(),
         fmt_f(report.wall_qps(), 0),
         format!("{:.1} µs", snap.p50_ns as f64 / 1e3),
         format!("{:.1} µs", snap.p99_ns as f64 / 1e3),
+        split_cell,
         snap.completed.to_string(),
     ]);
 }
@@ -331,16 +351,29 @@ fn transport_row(t: &mut Table, transport: &str, report: &ServeReport) {
 /// connections — against identically configured engines, so the
 /// column isolates the socket + codec overhead from the serving
 /// runtime itself. Latencies are client-observed (they include the
-/// wire on the TCP rows). Pass a `contexts` count divisible by every
-/// swept connection count (1 and 4) so each transport serves the
-/// stream over the *same* total context population.
+/// wire on the TCP rows). The TCP rows submit every 4th query with
+/// the wire-v5 trace flag, so the net/queue/compute column splits
+/// that client-observed latency into the wire share, the server-side
+/// queue wait, and kernel compute ([`crate::net::LatencySplit`]
+/// means over the traced subsample) — the observability answer to
+/// "is the front door or the engine the bottleneck". Pass a
+/// `contexts` count divisible by every swept connection count (1 and
+/// 4) so each transport serves the stream over the *same* total
+/// context population.
 pub fn run_socket_overhead(queries: usize, contexts: usize) -> Result<Table> {
     let mut t = Table::new(
         format!(
             "Fig. 14d — socket vs in-process serving, {queries} synthetic queries over \
              {contexts} contexts (2 units)"
         ),
-        &["transport", "host qps (wall)", "p50 latency", "p99 latency", "completed"],
+        &[
+            "transport",
+            "host qps (wall)",
+            "p50 latency",
+            "p99 latency",
+            "net/queue/compute",
+            "completed",
+        ],
     );
     let (n, d) = (crate::PAPER_N, crate::PAPER_D);
     let build = || {
@@ -370,7 +403,7 @@ pub fn run_socket_overhead(queries: usize, contexts: usize) -> Result<Table> {
             .map(|i| (handles[i % handles.len()].clone(), q_rng.normal_vec(d, 1.0)))
             .collect();
         let (_tickets, report) = engine.run_stream(stream)?;
-        transport_row(&mut t, "in-process", &report);
+        transport_row(&mut t, "in-process", &report, None);
     }
     // loopback TCP through the full front door (wire codec + router)
     for connections in [1usize, 4] {
@@ -389,9 +422,12 @@ pub fn run_socket_overhead(queries: usize, contexts: usize) -> Result<Table> {
             window: 64,
             popularity: crate::net::Popularity::Uniform,
             workers: 0,
+            // every 4th query traced: enough samples for stable
+            // stage means without perturbing the row it measures
+            trace_every: 4,
         };
-        let report = crate::net::run_loadgen(server.local_addr(), plan)?;
-        transport_row(&mut t, &format!("loopback TCP x{connections} conn"), &report);
+        let (report, split) = crate::net::run_loadgen_split(server.local_addr(), plan)?;
+        transport_row(&mut t, &format!("loopback TCP x{connections} conn"), &report, Some(&split));
         // Drop joins the server threads before the next engine binds
     }
     Ok(t)
@@ -457,6 +493,7 @@ pub fn run_connection_sweep(queries_per_conn: usize, connections: &[usize]) -> R
             window: 16,
             popularity: Popularity::Uniform,
             workers,
+            trace_every: 0,
         };
         let report = run_loadgen(server.local_addr(), plan)?;
         let snap = report.metrics.report();
@@ -609,7 +646,13 @@ mod tests {
         assert_eq!(t.rows.len(), 3);
         assert_eq!(t.rows[0][0], "in-process");
         for row in &t.rows {
-            assert_eq!(row[4], "48", "{} must serve the whole stream", row[0]);
+            assert_eq!(row[5], "48", "{} must serve the whole stream", row[0]);
+        }
+        // the in-process row has no wire breakdown; the TCP rows
+        // trace every 4th query, so their split column is populated
+        assert_eq!(t.rows[0][4], "-");
+        for row in &t.rows[1..] {
+            assert!(row[4].ends_with("µs"), "{}: split cell {:?}", row[0], row[4]);
         }
     }
 

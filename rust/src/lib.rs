@@ -53,6 +53,11 @@
 //!   wire protocol ([`net::wire`]), a multiplexed multi-connection
 //!   server ([`net::server`]), and the remote client + load generator
 //!   ([`net::client`], [`net::loadgen`]). std-only (no tokio).
+//! * [`obs`] — crate-wide observability: sampled per-query span
+//!   traces (Chrome trace-event / JSONL export via `a3 trace`),
+//!   bounded log2 histogram telemetry feeding native Prometheus
+//!   histogram families on `/metrics`, and the exposition checker
+//!   the property tests validate every scrape body against.
 //! * [`experiments`] — one driver per paper table/figure, shared by the
 //!   CLI (`a3 <fig...>`) and the bench harnesses.
 
@@ -67,6 +72,7 @@ pub mod experiments;
 pub mod fixedpoint;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod tensorio;

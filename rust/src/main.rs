@@ -53,12 +53,28 @@ COMMANDS (system):
                     [--contexts N] [--n N] [--qps F] [--seed N]
                     [--window N] [--workers N] [--shutdown]
                     [--popularity uniform|zipf:S|hotspot:F,W]
+                    [--trace-every N]
                     (access skew across each connection's contexts:
                     zipf:1.0 is web-like, hotspot:0.25,9 gives the
                     first quarter of contexts 9x the draw weight;
                     --workers bounds the generator thread pool —
                     0 = min(connections, 32) — so thousand-connection
-                    plans run without a thousand threads)
+                    plans run without a thousand threads;
+                    --trace-every submits every N-th query with the
+                    wire-v5 trace flag and prints the network / queue
+                    / compute latency split from the server's stage
+                    breakdowns, 0 = off)
+    trace           run a seeded synthetic stream with every query
+                    traced (sample rate 1) and write the spans as
+                    Chrome trace-event JSON — load the file in
+                    chrome://tracing or Perfetto:
+                    [--queries N] [--contexts N] [--n N] [--shards N]
+                    [--units N] [--seed N] [--out FILE] [--jsonl]
+                    (--jsonl emits one JSON object per query instead
+                    of the Chrome event array; without --out the
+                    document goes to stdout. Sampling for long-lived
+                    `a3 serve` runs is set by A3_TRACE=N: trace every
+                    N-th query, 0 = off, unset = every 64th)
     bench           print the detected kernel plan (plane, vector
                     features, tile geometry); with --json, time the
                     kernel hot paths on every available plane (scalar
@@ -330,6 +346,7 @@ fn cmd_client(args: &[String]) -> Result<()> {
     let mut workers = 0usize;
     let mut shutdown = false;
     let mut popularity = a3::net::Popularity::Uniform;
+    let mut trace_every = 0usize;
     let mut i = 1; // args[0] is the "client" command itself
     while i < args.len() {
         let flag = args[i].clone();
@@ -341,7 +358,7 @@ fn cmd_client(args: &[String]) -> Result<()> {
         if !matches!(
             flag.as_str(),
             "--connect" | "--queries" | "--connections" | "--contexts" | "--n" | "--qps"
-                | "--seed" | "--window" | "--workers" | "--popularity"
+                | "--seed" | "--window" | "--workers" | "--popularity" | "--trace-every"
         ) {
             bail!("client: unknown flag {flag:?} (see `a3 --help`)");
         }
@@ -363,6 +380,7 @@ fn cmd_client(args: &[String]) -> Result<()> {
             "--window" => window = value.parse().map_err(|e| invalid(&e))?,
             "--workers" => workers = value.parse().map_err(|e| invalid(&e))?,
             "--popularity" => popularity = parse_popularity(value).map_err(|e| invalid(&e))?,
+            "--trace-every" => trace_every = value.parse().map_err(|e| invalid(&e))?,
             _ => unreachable!("known flags matched above"),
         }
         i += 2;
@@ -384,6 +402,7 @@ fn cmd_client(args: &[String]) -> Result<()> {
         window,
         popularity,
         workers,
+        trace_every,
     };
     println!(
         "driving {addr}: {queries} queries over {connections} connection(s), \
@@ -393,13 +412,25 @@ fn cmd_client(args: &[String]) -> Result<()> {
             None => ", open throttle".into(),
         }
     );
-    let report = a3::net::run_loadgen(addr.as_str(), plan)?;
+    let (report, split) = a3::net::run_loadgen_split(addr.as_str(), plan)?;
     println!("client : {} ({:.0} queries/s wall)", report.summary(), report.wall_qps());
     println!(
         "sim    : makespan {} cycles -> {:.0} queries/s on the accelerator",
         report.sim_makespan,
         report.sim_throughput_qps()
     );
+    if split.samples > 0 {
+        // client-observed latency decomposed by the server's wire-v5
+        // stage breakdowns, means over the traced subsample
+        println!(
+            "split  : {} traced — network {:.1} µs / queue {:.1} µs / compute {:.1} µs \
+             (means over traced queries)",
+            split.samples,
+            split.mean_network_ns() as f64 / 1e3,
+            split.mean_queue_ns() as f64 / 1e3,
+            split.mean_compute_ns() as f64 / 1e3,
+        );
+    }
     if shutdown {
         let mut control = a3::net::NetClient::connect(addr.as_str())?;
         control.shutdown()?;
@@ -428,6 +459,95 @@ fn parse_popularity(value: &str) -> std::result::Result<a3::net::Popularity, Str
         return Ok(Popularity::Hotspot { hot_fraction, hot_weight });
     }
     Err("expected uniform, zipf:S, or hotspot:FRACTION,WEIGHT".into())
+}
+
+fn cmd_trace(args: &[String]) -> Result<()> {
+    let mut queries = 256usize;
+    let mut contexts = 4usize;
+    let mut n = a3::PAPER_N;
+    let mut shards = 2usize;
+    let mut units = 2usize;
+    let mut seed = 0xA3u64;
+    let mut out: Option<String> = None;
+    let mut jsonl = false;
+    let mut i = 1; // args[0] is the "trace" command itself
+    while i < args.len() {
+        let flag = args[i].clone();
+        if flag == "--jsonl" {
+            jsonl = true;
+            i += 1;
+            continue;
+        }
+        if !matches!(
+            flag.as_str(),
+            "--queries" | "--contexts" | "--n" | "--shards" | "--units" | "--seed" | "--out"
+        ) {
+            bail!("trace: unknown flag {flag:?} (see `a3 --help`)");
+        }
+        let value = match args.get(i + 1) {
+            Some(v) => v,
+            None => bail!("trace: {flag} needs a value (see `a3 --help`)"),
+        };
+        let invalid = |e: &dyn std::fmt::Display| {
+            anyhow::anyhow!("trace: invalid value {value:?} for {flag}: {e}")
+        };
+        match flag.as_str() {
+            "--queries" => queries = value.parse().map_err(|e| invalid(&e))?,
+            "--contexts" => contexts = value.parse().map_err(|e| invalid(&e))?,
+            "--n" => n = value.parse().map_err(|e| invalid(&e))?,
+            "--shards" => shards = value.parse().map_err(|e| invalid(&e))?,
+            "--units" => units = value.parse().map_err(|e| invalid(&e))?,
+            "--seed" => seed = value.parse().map_err(|e| invalid(&e))?,
+            "--out" => out = Some(value.clone()),
+            _ => unreachable!("known flags matched above"),
+        }
+        i += 2;
+    }
+    if queries == 0 || contexts == 0 {
+        bail!("trace: --queries and --contexts must be >= 1");
+    }
+
+    // sample rate 1: every query gets a span, so the exported
+    // document covers the whole stream (the per-shard rings hold
+    // TRACE_RING_CAP spans each; a run longer than that keeps the
+    // most recent ones)
+    let d = a3::PAPER_D;
+    let engine = EngineBuilder::new()
+        .units(units)
+        .shards(shards)
+        .dims(Dims::new(n, d))
+        .max_batch(8)
+        .trace_sample(1)
+        .build()?;
+    let mut rng = Rng::new(1);
+    let handles: Vec<_> = (0..contexts)
+        .map(|_| {
+            let kv = KvPair::new(n, d, rng.normal_vec(n * d, 1.0), rng.normal_vec(n * d, 1.0));
+            engine.register_context(kv)
+        })
+        .collect::<Result<_, _>>()?;
+    let mut q_rng = Rng::new(seed);
+    let stream: Vec<_> = (0..queries)
+        .map(|i| (handles[i % handles.len()].clone(), q_rng.normal_vec(d, 1.0)))
+        .collect();
+    let (_tickets, report) = engine.run_stream(stream)?;
+
+    let mut traces = engine.traces();
+    traces.sort_by_key(|t| (t.submit_ns, t.id));
+    let doc = if jsonl { a3::obs::trace_jsonl(&traces) } else { a3::obs::chrome_trace_json(&traces) };
+    match out {
+        Some(path) => {
+            std::fs::write(&path, &doc)
+                .map_err(|e| anyhow::anyhow!("trace: cannot write {path:?}: {e}"))?;
+            eprintln!(
+                "traced {} of {queries} queries ({}) -> wrote {path}",
+                traces.len(),
+                report.summary()
+            );
+        }
+        None => print!("{doc}"),
+    }
+    Ok(())
 }
 
 fn cmd_bench(args: &[String]) -> Result<()> {
@@ -519,10 +639,18 @@ fn cmd_chaos(args: &[String]) -> Result<()> {
         bail!("chaos: --shards/--connections/--queries/--contexts must all be >= 1");
     }
 
-    use a3::testutil::chaos::{run_chaos, ChaosEvent, ChaosPlan};
+    use a3::testutil::chaos::{check_trace_witness, run_chaos, ChaosEvent, ChaosPlan};
     let d = a3::PAPER_D;
+    // sample rate 1: every admitted query gets a trace, so the
+    // exactly-one-outcome invariant can be cross-checked against the
+    // engine's own span rings after the run
     let engine = std::sync::Arc::new(
-        EngineBuilder::new().units(units).shards(shards).dims(Dims::new(n, d)).build()?,
+        EngineBuilder::new()
+            .units(units)
+            .shards(shards)
+            .dims(Dims::new(n, d))
+            .trace_sample(1)
+            .build()?,
     );
     let mut server = a3::net::NetServer::bind(std::sync::Arc::clone(&engine), "127.0.0.1:0")?;
     let addr = server.local_addr();
@@ -570,7 +698,15 @@ fn cmd_chaos(args: &[String]) -> Result<()> {
     if let Err(violation) = report.check() {
         bail!("chaos invariant violated: {violation}");
     }
+    if let Err(violation) = check_trace_witness(&engine, &report) {
+        bail!("chaos trace witness violated: {violation}");
+    }
     println!("chaos: every query resolved to exactly one typed outcome");
+    println!(
+        "chaos: {} trace witness(es) — every admitted query reached exactly one terminal \
+         trace state",
+        engine.traces().len()
+    );
     Ok(())
 }
 
@@ -673,6 +809,7 @@ fn main() -> Result<()> {
         }
         "serve" => cmd_serve(&args)?,
         "client" => cmd_client(&args)?,
+        "trace" => cmd_trace(&args)?,
         "bench" => cmd_bench(&args)?,
         "chaos" => cmd_chaos(&args)?,
         "runtime-smoke" => cmd_runtime_smoke()?,

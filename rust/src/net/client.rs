@@ -39,7 +39,7 @@ use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 use super::server::NO_REQ;
-use super::wire::{self, Frame, WireError, WireStats};
+use super::wire::{self, Frame, WireBreakdown, WireError, WireStats};
 use super::NetError;
 use crate::api::A3Error;
 use crate::attention::KvPair;
@@ -162,6 +162,12 @@ pub struct NetClient {
     /// `SubmitDone` trailer (or a typed error), so a connection lost
     /// mid-stream still reports the request as orphaned.
     partials: HashMap<u64, (u32, Vec<f32>)>,
+    /// Server-side stage breakdowns ([`Frame::Trace`]) received for
+    /// traced submits, keyed by request id. A `Trace` frame is
+    /// informational — it precedes the actual reply and never settles
+    /// its request — so it parks here until the caller collects it
+    /// with [`NetClient::take_breakdown`] after the completion.
+    breakdowns: HashMap<u64, WireBreakdown>,
 }
 
 impl NetClient {
@@ -184,6 +190,7 @@ impl NetClient {
             inbox: VecDeque::new(),
             inflight: BTreeSet::new(),
             partials: HashMap::new(),
+            breakdowns: HashMap::new(),
         })
     }
 
@@ -244,6 +251,13 @@ impl NetClient {
     fn read_settled(&mut self) -> super::Result<Frame> {
         loop {
             match wire::read_frame(&mut self.reader) {
+                // a traced submit's server-side stage breakdown: it
+                // precedes the actual reply on the wire, so it parks
+                // in `breakdowns` and does NOT settle the request —
+                // the Response (or typed error) that follows does
+                Ok(Frame::Trace { req, breakdown }) => {
+                    self.breakdowns.insert(req, breakdown);
+                }
                 // streamed replies reassemble here, invisibly to the
                 // callers: chunks accumulate, and the trailer settles
                 // the request as a synthesized Response frame
@@ -297,6 +311,7 @@ impl NetClient {
                     let orphaned: Vec<u64> =
                         std::mem::take(&mut self.inflight).into_iter().collect();
                     self.partials.clear();
+                    self.breakdowns.clear();
                     return Err(NetError::Wire(WireError::ConnectionClosed { orphaned }));
                 }
                 Err(e) => return Err(e),
@@ -380,7 +395,17 @@ impl NetClient {
     /// receive or synchronous call (one syscall per burst), or
     /// immediately via [`NetClient::flush`].
     pub fn submit(&mut self, ctx: RemoteContext, embedding: &[f32]) -> super::Result<u64> {
-        self.submit_frame(ctx, embedding, 0)
+        self.submit_frame(ctx, embedding, 0, false)
+    }
+
+    /// [`NetClient::submit`] with the wire-v5 trace flag set: the
+    /// server samples this query unconditionally and prepends a
+    /// [`Frame::Trace`] stage breakdown to the reply. Collect it with
+    /// [`NetClient::take_breakdown`] after the completion arrives —
+    /// the breakdown is informational and never changes completion
+    /// order or the response payload.
+    pub fn submit_traced(&mut self, ctx: RemoteContext, embedding: &[f32]) -> super::Result<u64> {
+        self.submit_frame(ctx, embedding, 0, true)
     }
 
     /// [`NetClient::submit`] with a per-query deadline: the engine
@@ -397,7 +422,7 @@ impl NetClient {
         ttl: Duration,
     ) -> super::Result<u64> {
         let ttl_ns = (ttl.as_nanos().min(u128::from(u64::MAX)) as u64).max(1);
-        self.submit_frame(ctx, embedding, ttl_ns)
+        self.submit_frame(ctx, embedding, ttl_ns, false)
     }
 
     fn submit_frame(
@@ -405,6 +430,7 @@ impl NetClient {
         ctx: RemoteContext,
         embedding: &[f32],
         ttl_ns: u64,
+        trace: bool,
     ) -> super::Result<u64> {
         let req = self.next_req();
         self.send(&Frame::Submit {
@@ -412,6 +438,7 @@ impl NetClient {
             context: ctx.id,
             embedding: embedding.to_vec(),
             ttl_ns,
+            trace,
         })?;
         self.inflight.insert(req);
         Ok(req)
@@ -437,9 +464,22 @@ impl NetClient {
             embedding: embedding.to_vec(),
             ttl_ns: 0,
             chunk,
+            trace: false,
         })?;
         self.inflight.insert(req);
         Ok(req)
+    }
+
+    /// Collect the server-side stage breakdown for a traced submit
+    /// (by its request id), if one has arrived. Breakdowns ride ahead
+    /// of their reply on the wire, so this is reliable immediately
+    /// after the completion for `req` was received; it returns `None`
+    /// for untraced submits, for ids whose reply has not been read
+    /// yet, and in the rare case the server's trace ring overwrote
+    /// the entry before reply time. Taking is destructive — each
+    /// breakdown is handed out once.
+    pub fn take_breakdown(&mut self, req: u64) -> Option<WireBreakdown> {
+        self.breakdowns.remove(&req)
     }
 
     /// Block for the next completed query on this connection

@@ -33,6 +33,7 @@ use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
 use super::client::{NetClient, RemoteContext};
+use super::wire::WireBreakdown;
 use super::NetError;
 use crate::api::ServeReport;
 use crate::attention::KvPair;
@@ -139,6 +140,13 @@ pub struct LoadPlan {
     /// `connections / workers` of them, interleaved). `0` = auto:
     /// `min(connections, 32)`. Clamped to `connections`.
     pub workers: usize,
+    /// Submit every `trace_every`-th query per connection with the
+    /// wire-v5 trace flag, so its reply carries a server-side stage
+    /// breakdown and the report can split client-observed latency
+    /// into network / queue / compute ([`LatencySplit`]). `0` = no
+    /// traced submits (the historical wire behavior; the split comes
+    /// back empty).
+    pub trace_every: usize,
 }
 
 impl Default for LoadPlan {
@@ -154,7 +162,77 @@ impl Default for LoadPlan {
             window: 64,
             popularity: Popularity::Uniform,
             workers: 0,
+            trace_every: 0,
         }
+    }
+}
+
+/// Where client-observed latency went, aggregated over the traced
+/// subsample of a load run ([`LoadPlan::trace_every`]). Each traced
+/// completion contributes its server-reported queue and compute
+/// stage times; `network_ns` is the remainder of the client-observed
+/// latency not accounted for by the server (`client latency −
+/// server-side total`): wire transit, socket buffers, and client
+/// scheduling. Sums, not means — callers divide by `samples` (the
+/// `mean_*` accessors do) so splits from many connections merge by
+/// addition, exactly like [`Metrics`] windows.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LatencySplit {
+    /// Traced completions that carried a breakdown.
+    pub samples: u64,
+    /// Σ client-observed latency minus server-side total.
+    pub network_ns: u64,
+    /// Σ server-side queue wait (submit → kernel start).
+    pub queue_ns: u64,
+    /// Σ kernel compute (kernel start → kernel end).
+    pub compute_ns: u64,
+    /// Σ server-side time outside queue+compute (routing, reply
+    /// composition).
+    pub server_other_ns: u64,
+}
+
+impl LatencySplit {
+    /// Fold one traced completion in: `latency_ns` is the
+    /// client-observed latency, `b` the server's stage breakdown.
+    pub fn record(&mut self, latency_ns: u64, b: &WireBreakdown) {
+        self.samples += 1;
+        self.network_ns += latency_ns.saturating_sub(b.server_ns);
+        self.queue_ns += b.queue_ns;
+        self.compute_ns += b.compute_ns;
+        self.server_other_ns +=
+            b.server_ns.saturating_sub(b.queue_ns.saturating_add(b.compute_ns));
+    }
+
+    /// Merge another connection's split (sums add).
+    pub fn absorb(&mut self, other: LatencySplit) {
+        self.samples += other.samples;
+        self.network_ns += other.network_ns;
+        self.queue_ns += other.queue_ns;
+        self.compute_ns += other.compute_ns;
+        self.server_other_ns += other.server_other_ns;
+    }
+
+    fn mean(sum: u64, samples: u64) -> u64 {
+        if samples == 0 {
+            0
+        } else {
+            sum / samples
+        }
+    }
+
+    /// Mean network share per traced query (0 with no samples).
+    pub fn mean_network_ns(&self) -> u64 {
+        Self::mean(self.network_ns, self.samples)
+    }
+
+    /// Mean server queue wait per traced query (0 with no samples).
+    pub fn mean_queue_ns(&self) -> u64 {
+        Self::mean(self.queue_ns, self.samples)
+    }
+
+    /// Mean kernel compute per traced query (0 with no samples).
+    pub fn mean_compute_ns(&self) -> u64 {
+        Self::mean(self.compute_ns, self.samples)
     }
 }
 
@@ -176,6 +254,17 @@ fn share(total: usize, connections: usize, conn: usize) -> usize {
 /// `(connection << 32) | request_id` so they stay unique across
 /// connections.
 pub fn run_loadgen(addr: impl ToSocketAddrs, plan: LoadPlan) -> super::Result<ServeReport> {
+    run_loadgen_split(addr, plan).map(|(report, _)| report)
+}
+
+/// [`run_loadgen`] that also returns the [`LatencySplit`] aggregated
+/// over the traced subsample ([`LoadPlan::trace_every`]; an empty
+/// split when tracing is off or no breakdown survived the server's
+/// trace ring).
+pub fn run_loadgen_split(
+    addr: impl ToSocketAddrs,
+    plan: LoadPlan,
+) -> super::Result<(ServeReport, LatencySplit)> {
     let addr: SocketAddr = addr
         .to_socket_addrs()?
         .next()
@@ -206,12 +295,14 @@ pub fn run_loadgen(addr: impl ToSocketAddrs, plan: LoadPlan) -> super::Result<Se
     let t0 = Instant::now();
     let mut metrics = Metrics::default();
     let mut responses: Vec<Response> = Vec::with_capacity(plan.queries);
+    let mut split = LatencySplit::default();
     let mut first_err = None;
     for handle in handles {
         match handle.join() {
-            Ok(Ok((m, mut r))) => {
+            Ok(Ok((m, mut r, s))) => {
                 metrics.absorb(m);
                 responses.append(&mut r);
+                split.absorb(s);
             }
             Ok(Err(e)) => first_err = first_err.or(Some(e)),
             Err(_) => {
@@ -227,15 +318,18 @@ pub fn run_loadgen(addr: impl ToSocketAddrs, plan: LoadPlan) -> super::Result<Se
         return Err(e);
     }
     let end_makespan = control.drain()?.sim_makespan;
-    Ok(ServeReport {
-        metrics,
-        sim_makespan: end_makespan.saturating_sub(base_makespan),
-        wall,
-        responses,
-    })
+    Ok((
+        ServeReport {
+            metrics,
+            sim_makespan: end_makespan.saturating_sub(base_makespan),
+            wall,
+            responses,
+        },
+        split,
+    ))
 }
 
-type WorkerOut = Result<(Metrics, Vec<Response>), NetError>;
+type WorkerOut = Result<(Metrics, Vec<Response>, LatencySplit), NetError>;
 
 /// One live connection a pool worker is driving.
 struct ConnState {
@@ -248,6 +342,7 @@ struct ConnState {
     inflight: HashMap<u64, u64>,
     metrics: Metrics,
     responses: Vec<Response>,
+    split: LatencySplit,
 }
 
 fn pool_worker(
@@ -291,6 +386,7 @@ fn pool_worker(
                 inflight: HashMap::with_capacity(plan.window.max(1)),
                 metrics: Metrics::default(),
                 responses: Vec::with_capacity(queries),
+                split: LatencySplit::default(),
             });
         }
         Ok(states)
@@ -325,54 +421,56 @@ fn pool_worker(
             // experiences
             let submitted_ns = t0.elapsed().as_nanos() as u64;
             let pick = s.picker.pick(&mut s.rng, j, s.ctxs.len());
-            let req = s.client.submit(s.ctxs[pick], &embedding)?;
+            // every trace_every-th query asks the server for its
+            // stage breakdown; the reply's Trace frame feeds the
+            // latency split in recv_one
+            let traced = plan.trace_every > 0 && j % plan.trace_every == 0;
+            let req = if traced {
+                s.client.submit_traced(s.ctxs[pick], &embedding)?
+            } else {
+                s.client.submit(s.ctxs[pick], &embedding)?
+            };
             // arrivals must reach the server at their due time, not
             // when the window next forces a receive (submits are
             // write-buffered)
             s.client.flush()?;
             s.inflight.insert(req, submitted_ns);
             while s.inflight.len() >= window {
-                recv_one(
-                    &mut s.client,
-                    &mut s.inflight,
-                    &mut s.metrics,
-                    &mut s.responses,
-                    t0,
-                    s.conn,
-                )?;
+                recv_one(s, t0)?;
             }
         }
     }
     // tail: a drain barrier forces open batches out, then collect
     let mut metrics = Metrics::default();
     let mut responses = Vec::new();
+    let mut split = LatencySplit::default();
     for mut s in states {
         if !s.inflight.is_empty() {
             s.client.drain()?;
         }
         while !s.inflight.is_empty() {
-            recv_one(&mut s.client, &mut s.inflight, &mut s.metrics, &mut s.responses, t0, s.conn)?;
+            recv_one(&mut s, t0)?;
         }
         metrics.absorb(s.metrics);
         responses.append(&mut s.responses);
+        split.absorb(s.split);
     }
-    Ok((metrics, responses))
+    Ok((metrics, responses, split))
 }
 
-fn recv_one(
-    client: &mut NetClient,
-    inflight: &mut HashMap<u64, u64>,
-    metrics: &mut Metrics,
-    responses: &mut Vec<Response>,
-    t0: Instant,
-    conn: usize,
-) -> super::Result<()> {
-    let mut r = client.recv()?;
+fn recv_one(s: &mut ConnState, t0: Instant) -> super::Result<()> {
+    let mut r = s.client.recv()?;
     let now_ns = t0.elapsed().as_nanos() as u64;
-    let submitted_ns = inflight.remove(&r.id).unwrap_or(now_ns);
-    metrics.record(now_ns.saturating_sub(submitted_ns), now_ns, r.selected_rows, r.sim_cycles);
-    r.id = ((conn as u64) << 32) | r.id;
-    responses.push(r);
+    let submitted_ns = s.inflight.remove(&r.id).unwrap_or(now_ns);
+    let latency_ns = now_ns.saturating_sub(submitted_ns);
+    s.metrics.record(latency_ns, now_ns, r.selected_rows, r.sim_cycles);
+    // a traced submit's breakdown rode ahead of this reply; fold it
+    // into the split against the client-observed latency
+    if let Some(b) = s.client.take_breakdown(r.id) {
+        s.split.record(latency_ns, &b);
+    }
+    r.id = ((s.conn as u64) << 32) | r.id;
+    s.responses.push(r);
     Ok(())
 }
 
@@ -451,6 +549,35 @@ mod tests {
             seen.sort_unstable();
             assert_eq!(seen, (0..connections).collect::<Vec<_>>(), "C={connections} W={workers}");
         }
+    }
+
+    #[test]
+    fn latency_split_records_and_merges_by_addition() {
+        let b = WireBreakdown {
+            queue_ns: 300,
+            compute_ns: 200,
+            server_ns: 600,
+            ..WireBreakdown::default()
+        };
+        let mut a = LatencySplit::default();
+        // client saw 1000 ns; server accounts 600 → 400 on the wire,
+        // and 600 − (300+200) = 100 of server-side overhead
+        a.record(1000, &b);
+        assert_eq!(
+            (a.samples, a.network_ns, a.queue_ns, a.compute_ns, a.server_other_ns),
+            (1, 400, 300, 200, 100)
+        );
+        // clock skew / ring races must clamp, not underflow: client
+        // latency below the server total yields zero network share
+        a.record(500, &b);
+        assert_eq!(a.network_ns, 400);
+        let mut merged = LatencySplit::default();
+        merged.absorb(a);
+        merged.absorb(a);
+        assert_eq!(merged.samples, 4);
+        assert_eq!(merged.queue_ns, 2 * a.queue_ns);
+        assert_eq!(merged.mean_queue_ns(), 300);
+        assert_eq!(LatencySplit::default().mean_network_ns(), 0);
     }
 
     #[test]

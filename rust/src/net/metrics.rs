@@ -2,8 +2,10 @@
 //!
 //! The event-loop server optionally binds a second listener and
 //! answers `GET /metrics` with the text exposition format
-//! (`text/plain; version=0.0.4`) — gauges and counters only, no
-//! client library, scrape-ready. This module holds the side-effect
+//! (`text/plain; version=0.0.4`) — gauges, counters, and native
+//! histogram families (`_bucket`/`_sum`/`_count` from the bounded
+//! log2 [`crate::obs::Histogram`]), no client library, scrape-ready.
+//! This module holds the side-effect
 //! free pieces: a tiny line builder and just enough HTTP/1.1 to parse
 //! a request line and frame a response, so both are unit-testable
 //! without sockets. The server assembles the actual numbers (queue
@@ -42,6 +44,22 @@ impl PromText {
     /// need escaping — indices and enum words only).
     pub fn labeled(&mut self, name: &str, key: &str, label: &str, value: u64) {
         let _ = writeln!(self.out, "{name}{{{key}=\"{label}\"}} {value}");
+    }
+
+    /// Emit a full native histogram family: `# HELP`/`# TYPE
+    /// histogram`, one cumulative `_bucket` line per occupied
+    /// power-of-two bound, the `+Inf` bucket, `_sum`, and `_count`.
+    /// The body stays parseable by [`crate::obs::check_exposition`]
+    /// by construction (bounds increase, counts are cumulative,
+    /// `+Inf == _count`).
+    pub fn histogram(&mut self, name: &str, help: &str, h: &crate::obs::Histogram) {
+        self.header(name, "histogram", help);
+        for (upper, cum) in h.cumulative() {
+            let _ = writeln!(self.out, "{name}_bucket{{le=\"{upper}\"}} {cum}");
+        }
+        let _ = writeln!(self.out, "{name}_bucket{{le=\"+Inf\"}} {}", h.count());
+        let _ = writeln!(self.out, "{name}_sum {}", h.sum());
+        let _ = writeln!(self.out, "{name}_count {}", h.count());
     }
 
     /// The finished exposition body.
@@ -111,6 +129,58 @@ mod tests {
         for line in body.lines() {
             assert!(line.starts_with('#') || line.split(' ').count() == 2, "bad line: {line}");
         }
+    }
+
+    #[test]
+    fn histogram_family_is_native_and_checkable() {
+        use crate::obs::{check_exposition, Histogram};
+        let mut h = Histogram::new();
+        for v in [5u64, 9, 120, 4000] {
+            h.record(v);
+        }
+        let mut p = PromText::new();
+        p.header("a3_up", "gauge", "liveness");
+        p.sample("a3_up", 1);
+        p.histogram("a3_latency_ns", "per-query latency", &h);
+        p.histogram("a3_empty", "no samples yet", &Histogram::new());
+        let body = p.finish();
+        assert!(body.contains("# TYPE a3_latency_ns histogram\n"));
+        assert!(body.contains("a3_latency_ns_bucket{le=\"+Inf\"} 4\n"));
+        assert!(body.contains("a3_latency_ns_sum 4134\n"));
+        assert!(body.contains("a3_latency_ns_count 4\n"));
+        // an empty histogram still exposes the family (all-zero)
+        assert!(body.contains("a3_empty_bucket{le=\"+Inf\"} 0\n"));
+        assert!(body.contains("a3_empty_count 0\n"));
+        // the body passes the in-repo exposition checker and keeps the
+        // crate-wide line shape (comment or `name[{labels}] value`)
+        check_exposition(&body).unwrap();
+        for line in body.lines() {
+            assert!(line.starts_with('#') || line.split(' ').count() == 2, "bad line: {line}");
+        }
+    }
+
+    #[test]
+    fn histogram_emission_stays_checkable_under_random_samples() {
+        use crate::obs::{check_exposition, Histogram};
+        crate::testutil::check(25, |rng| {
+            let mut hot = Histogram::new();
+            let mut warm = Histogram::new();
+            for _ in 0..rng.below(400) {
+                let v = rng.next_u64() >> rng.below(64);
+                if rng.below(2) == 0 {
+                    hot.record(v);
+                } else {
+                    warm.record(v);
+                }
+            }
+            // shard-merged family, the way the server scrapes it
+            let mut merged = hot.clone();
+            merged.merge(&warm);
+            let mut p = PromText::new();
+            p.histogram("a3_latency_ns", "latency", &merged);
+            p.histogram("a3_queue_wait_ns", "queue wait", &hot);
+            check_exposition(&p.finish()).unwrap();
+        });
     }
 
     #[test]

@@ -106,10 +106,10 @@ pub mod server;
 pub mod wire;
 
 pub use client::{Backoff, NetClient, RecvOutcome, RemoteContext, RemoteStats};
-pub use loadgen::{run_loadgen, LoadPlan, Popularity};
+pub use loadgen::{run_loadgen, run_loadgen_split, LatencySplit, LoadPlan, Popularity};
 pub use poll::{raise_nofile_limit, Interest, PollEvent, Poller, Waker};
 pub use server::{NetServer, NetServerConfig};
-pub use wire::{Frame, FrameDecoder, WireError, WireStats, WIRE_VERSION};
+pub use wire::{Frame, FrameDecoder, WireBreakdown, WireError, WireStats, WIRE_VERSION};
 
 use std::fmt;
 

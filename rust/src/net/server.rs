@@ -52,7 +52,7 @@ use std::time::{Duration, Instant};
 
 use super::metrics::{self, PromText};
 use super::poll::{listener_fd, stream_fd, Interest, PollEvent, Poller, Waker};
-use super::wire::{self, Frame, FrameDecoder, WireStats};
+use super::wire::{self, Frame, FrameDecoder, WireBreakdown, WireStats};
 use super::NetError;
 use crate::api::{A3Error, ContextHandle, Engine, EngineStats};
 use crate::coordinator::metrics::{AttributedMetrics, MetricsReport};
@@ -120,6 +120,9 @@ struct RouteEntry {
     /// Streaming chunk size in f32 values: 0 = plain [`Frame::Response`],
     /// anything else = `SubmitChunk*`/`SubmitDone` slices of that size.
     chunk: u32,
+    /// The client asked for a trace: prepend a [`Frame::Trace`]
+    /// breakdown to the reply.
+    trace: bool,
 }
 
 /// Ticket → connection demux state, shared by the router thread and
@@ -277,6 +280,22 @@ impl ServerShared {
             "contexts re-admitted from the cold tier",
         );
         p.sample("a3_tier_cold_readmissions_total", tiers.cold_readmissions);
+        // native histogram families from the engine's always-on
+        // telemetry: scrape-readable mid-run, no drain barrier
+        for (name, help, h) in engine.telemetry().histograms() {
+            p.histogram(name, help, &h);
+        }
+        let (hot_serves, warm_serves) = engine.telemetry().tier_serves();
+        p.header("a3_tier_serve_total", "counter", "queries served, by serving tier");
+        p.labeled("a3_tier_serve_total", "tier", "hot", hot_serves);
+        p.labeled("a3_tier_serve_total", "tier", "warm", warm_serves);
+        let closes = engine.telemetry().batch_closes();
+        p.header("a3_batch_close_total", "counter", "batch closes, by close reason");
+        for (reason, count) in crate::obs::CLOSE_REASONS.iter().zip(closes) {
+            p.labeled("a3_batch_close_total", "reason", reason, count);
+        }
+        p.header("a3_trace_sample", "gauge", "1-in-N trace sampling rate (0 = off)");
+        p.sample("a3_trace_sample", engine.trace_sample());
         p.header("a3_dropped_total", "counter", "queries dropped by failed dispatches");
         p.sample("a3_dropped_total", engine.dropped_total());
         p.header(
@@ -541,6 +560,42 @@ fn response_bytes(req: u64, chunk: u32, r: &Response) -> Vec<u8> {
     buf
 }
 
+/// Flatten a resolved [`crate::obs::QueryTrace`] into the wire
+/// breakdown a remote client splits its observed latency with.
+fn breakdown_of(t: &crate::obs::QueryTrace) -> WireBreakdown {
+    WireBreakdown {
+        queue_ns: t.kernel_start_ns.saturating_sub(t.submit_ns),
+        compute_ns: t.kernel_end_ns.saturating_sub(t.kernel_start_ns),
+        server_ns: t.end_ns().saturating_sub(t.submit_ns),
+        batch_size: t.batch_size,
+        selected_rows: t.selected_rows,
+        context_rows: t.context_rows,
+        plane: crate::attention::kernel::KernelPlane::all()
+            .iter()
+            .find(|p| p.label() == t.plane)
+            .map_or(0, |p| p.code()),
+        tier: u8::from(t.tier == "warm"),
+        degraded: u8::from(t.degraded),
+    }
+}
+
+/// Encoded [`Frame::Trace`] bytes for a trace-flagged completion:
+/// stamps the route and reply stages (reply time is reply-*enqueue*
+/// time — the server cannot observe the socket flush from here) on
+/// the engine's trace clock, then flattens the trace. Empty when the
+/// trace has already been overwritten by ring turnover, in which case
+/// the reply simply arrives without a breakdown.
+fn trace_bytes(engine: &Engine, req: u64, id: QueryId) -> Vec<u8> {
+    let sink = engine.trace_sink();
+    let now_ns = engine.trace_now_ns();
+    sink.stamp_route(id, now_ns);
+    sink.stamp_reply(id, now_ns);
+    match sink.lookup(id) {
+        Some(t) => encode(&Frame::Trace { req, breakdown: breakdown_of(&t) }),
+        None => Vec::new(),
+    }
+}
+
 /// The single consumer of the engine's completion queue. Deliveries
 /// are pushed into the loop's inbox *while holding the router lock*,
 /// so the loop's drain-grace check (routes empty ∧ inbox empty) can
@@ -583,11 +638,16 @@ fn router_loop(shared: Arc<ServerShared>) {
                 match state.routes.remove(&r.id) {
                     Some(e) => {
                         shared.attribute(e.conn, e.submitted_ns, &r);
-                        shared.push_delivery(Deliver {
-                            conn: e.conn,
-                            bytes: response_bytes(e.req, e.chunk, &r),
-                            op_done: false,
-                        });
+                        // a trace-flagged reply is preceded by its
+                        // breakdown frame in the same delivery, so the
+                        // client always sees Trace-then-Response order
+                        let mut bytes = if e.trace {
+                            trace_bytes(&shared.engine, e.req, r.id)
+                        } else {
+                            Vec::new()
+                        };
+                        bytes.extend_from_slice(&response_bytes(e.req, e.chunk, &r));
+                        shared.push_delivery(Deliver { conn: e.conn, bytes, op_done: false });
                     }
                     None => {
                         state.stash.insert(r.id, r);
@@ -665,6 +725,8 @@ struct Parked {
     embedding: Vec<f32>,
     ttl_ns: u64,
     chunk: u32,
+    /// Wire trace flag, preserved across admission retries.
+    trace: bool,
     /// Stamped at first attempt: time parked on backpressure is
     /// latency the client experiences, and the attribution window must
     /// charge it (stamping at admission would report ~0 latency
@@ -1118,14 +1180,14 @@ impl EventLoop {
                 }
                 self.defer_op(w, OpJob::Register { conn: w.conn, req, n, d, key, value });
             }
-            Frame::Submit { req, context, embedding, ttl_ns } => {
-                self.submit(w, req, context, embedding, ttl_ns, 0);
+            Frame::Submit { req, context, embedding, ttl_ns, trace } => {
+                self.submit(w, req, context, embedding, ttl_ns, 0, trace);
             }
-            Frame::SubmitStreamed { req, context, embedding, ttl_ns, chunk } => {
+            Frame::SubmitStreamed { req, context, embedding, ttl_ns, chunk, trace } => {
                 // chunk == 0 means "one chunk": stream the whole output
                 // as a single slice + trailer
                 let chunk = if chunk == 0 { u32::MAX } else { chunk };
-                self.submit(w, req, context, embedding, ttl_ns, chunk);
+                self.submit(w, req, context, embedding, ttl_ns, chunk, trace);
             }
             Frame::Evict { req, context } => {
                 let engine = &self.shared.engine;
@@ -1184,6 +1246,7 @@ impl EventLoop {
     }
 
     /// Pipelined submit: resolve the context, then try admission.
+    #[allow(clippy::too_many_arguments)]
     fn submit(
         &mut self,
         w: &mut WireConn,
@@ -1192,6 +1255,7 @@ impl EventLoop {
         embedding: Vec<f32>,
         ttl_ns: u64,
         chunk: u32,
+        trace: bool,
     ) {
         let handle = match self.shared.engine.lookup_context(context) {
             Ok(h) => h,
@@ -1204,19 +1268,20 @@ impl EventLoop {
         // forever") must park indefinitely, not panic on overflow
         let deadline = Instant::now().checked_add(self.shared.cfg.admission_wait);
         let submitted_ns = self.shared.epoch.elapsed().as_nanos() as u64;
-        let parked = Parked { req, handle, embedding, ttl_ns, chunk, submitted_ns, deadline };
+        let parked = Parked { req, handle, embedding, ttl_ns, chunk, trace, submitted_ns, deadline };
         self.try_submit(w, parked);
     }
 
     /// One admission attempt: register the route (or deliver a stashed
     /// early completion / failure), or re-park on closed admission.
     fn try_submit(&mut self, w: &mut WireConn, p: Parked) {
-        let Parked { req, handle, embedding, ttl_ns, chunk, submitted_ns, deadline } = p;
+        let Parked { req, handle, embedding, ttl_ns, chunk, trace, submitted_ns, deadline } = p;
         let engine = &self.shared.engine;
         // submit_reclaim hands the embedding back on admission
         // failure, so retries never clone the query payload; the wire
-        // TTL passes straight through (0 = no deadline)
-        match engine.submit_reclaim(&handle, embedding, ttl_ns) {
+        // TTL passes straight through (0 = no deadline), and the trace
+        // flag forces a span trace past the engine's sampler
+        match engine.submit_reclaim_traced(&handle, embedding, ttl_ns, trace) {
             Ok(ticket) => {
                 // remove-or-register under ONE router lock (see the
                 // stash invariant in `router_loop`)
@@ -1224,6 +1289,9 @@ impl EventLoop {
                 if let Some(r) = router.stash.remove(&ticket.id) {
                     drop(router);
                     self.shared.attribute(w.conn, submitted_ns, &r);
+                    if trace {
+                        w.wq.push(trace_bytes(engine, req, ticket.id));
+                    }
                     w.wq.push(response_bytes(req, chunk, &r));
                 } else if let Some(error) = router.dead.remove(&ticket.id) {
                     // dispatched and already failed before we got here
@@ -1232,7 +1300,7 @@ impl EventLoop {
                 } else {
                     router.routes.insert(
                         ticket.id,
-                        RouteEntry { req, conn: w.conn, submitted_ns, chunk },
+                        RouteEntry { req, conn: w.conn, submitted_ns, chunk, trace },
                     );
                 }
             }
@@ -1250,6 +1318,7 @@ impl EventLoop {
                             embedding: reclaimed,
                             ttl_ns,
                             chunk,
+                            trace,
                             submitted_ns,
                             deadline,
                         });

@@ -40,7 +40,12 @@ pub const MAGIC: [u8; 4] = *b"A3NW";
 /// v4: streaming partial results — [`Frame::SubmitStreamed`] asks for
 /// the reply as [`Frame::SubmitChunk`] slices closed by a
 /// [`Frame::SubmitDone`] trailer.
-pub const WIRE_VERSION: u16 = 4;
+/// v5: per-query tracing — [`Frame::Submit`] / [`Frame::SubmitStreamed`]
+/// grew a `trace` flag, and a flagged query's reply is preceded by a
+/// [`Frame::Trace`] carrying the server-side stage breakdown
+/// ([`WireBreakdown`]), so clients can split observed latency into
+/// network vs queue vs compute.
+pub const WIRE_VERSION: u16 = 5;
 /// Hard cap on one frame's body (opcode + payload). Large enough for a
 /// 2048×512 f32 K/V pair in one register frame, small enough that a
 /// hostile length prefix cannot allocate unbounded memory.
@@ -115,6 +120,34 @@ pub struct WireStats {
     pub mean_selected_rows: f64,
 }
 
+/// Server-side stage breakdown for one traced query, carried by
+/// [`Frame::Trace`] immediately before that query's reply frame.
+/// Durations are host nanoseconds on the *server's* clock — a client
+/// subtracts `server_ns` from its own observed latency to isolate the
+/// network share without any clock synchronization.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireBreakdown {
+    /// Submit→kernel-start wait (admission + batch composition).
+    pub queue_ns: u64,
+    /// Kernel window (context fetch + scheduler dispatch).
+    pub compute_ns: u64,
+    /// Total server residency: submit→reply enqueue.
+    pub server_ns: u64,
+    /// Queries in the batch this one was served with.
+    pub batch_size: u32,
+    /// Rows that entered the softmax (approximation observability).
+    pub selected_rows: u32,
+    /// Rows the context holds (`selected/context` = work saved).
+    pub context_rows: u32,
+    /// Kernel plane code
+    /// ([`crate::attention::kernel::KernelPlane::code`]).
+    pub plane: u8,
+    /// Serving tier: 0 = hot (f32-resident), 1 = warm (quantized).
+    pub tier: u8,
+    /// 1 if served through the degraded conservative fallback.
+    pub degraded: u8,
+}
+
 /// One protocol frame. Requests carry a client-chosen `req` id that
 /// the matching reply echoes, so clients can pipeline any number of
 /// in-flight requests per connection; [`Frame::Response`] echoes the
@@ -129,7 +162,9 @@ pub enum Frame {
     /// query's time-to-live from server-side arrival (0 = no
     /// deadline): the server sheds the query with
     /// [`A3Error::DeadlineExceeded`] if no unit picks it up in time.
-    Submit { req: u64, context: ContextId, embedding: Vec<f32>, ttl_ns: u64 },
+    /// `trace` asks the server to force a span trace for this query
+    /// and prepend a [`Frame::Trace`] breakdown to the reply.
+    Submit { req: u64, context: ContextId, embedding: Vec<f32>, ttl_ns: u64, trace: bool },
     /// Retire a context (its admitted queries are served first).
     Evict { req: u64, context: ContextId },
     /// All-shard drain barrier; replies with the merged stats window.
@@ -151,6 +186,9 @@ pub enum Frame {
         ttl_ns: u64,
         /// Max f32 values per [`Frame::SubmitChunk`] (0 = one chunk).
         chunk: u32,
+        /// Force a span trace; the [`Frame::Trace`] breakdown arrives
+        /// before the first [`Frame::SubmitChunk`].
+        trace: bool,
     },
     // -- replies (server → client) ----------------------------------
     Registered { req: u64, context: ContextId },
@@ -197,6 +235,10 @@ pub enum Frame {
         /// Total f32 count across all chunks (integrity check).
         total: u32,
     },
+    /// The server-side stage breakdown for a trace-flagged query,
+    /// sent immediately before that query's [`Frame::Response`] (or
+    /// first [`Frame::SubmitChunk`]) on the same connection.
+    Trace { req: u64, breakdown: WireBreakdown },
     /// A typed engine error for request `req` — the 1:1 image of
     /// [`A3Error`] on the wire.
     Error { req: u64, error: A3Error },
@@ -217,6 +259,7 @@ const OP_STATS_REPLY: u8 = 0x85;
 const OP_SHUTDOWN_ACK: u8 = 0x86;
 const OP_SUBMIT_CHUNK: u8 = 0x87;
 const OP_SUBMIT_DONE: u8 = 0x88;
+const OP_TRACE: u8 = 0x89;
 const OP_ERROR: u8 = 0x7F;
 
 // -- A3Error <-> wire code mapping (1:1, round-trip tested) ---------
@@ -422,11 +465,12 @@ impl Frame {
                 put_f32s(buf, key);
                 put_f32s(buf, value);
             }
-            Frame::Submit { req, context, embedding, ttl_ns } => {
+            Frame::Submit { req, context, embedding, ttl_ns, trace } => {
                 buf.push(OP_SUBMIT);
                 put_u64(buf, *req);
                 put_u32(buf, *context);
                 put_u64(buf, *ttl_ns);
+                buf.push(u8::from(*trace));
                 put_u32(buf, embedding.len() as u32);
                 put_f32s(buf, embedding);
             }
@@ -447,12 +491,13 @@ impl Frame {
                 buf.push(OP_SHUTDOWN);
                 put_u64(buf, *req);
             }
-            Frame::SubmitStreamed { req, context, embedding, ttl_ns, chunk } => {
+            Frame::SubmitStreamed { req, context, embedding, ttl_ns, chunk, trace } => {
                 buf.push(OP_SUBMIT_STREAMED);
                 put_u64(buf, *req);
                 put_u32(buf, *context);
                 put_u64(buf, *ttl_ns);
                 put_u32(buf, *chunk);
+                buf.push(u8::from(*trace));
                 put_u32(buf, embedding.len() as u32);
                 put_f32s(buf, embedding);
             }
@@ -528,6 +573,19 @@ impl Frame {
                 put_u64(buf, *completed_ns);
                 put_u32(buf, *total);
             }
+            Frame::Trace { req, breakdown } => {
+                buf.push(OP_TRACE);
+                put_u64(buf, *req);
+                put_u64(buf, breakdown.queue_ns);
+                put_u64(buf, breakdown.compute_ns);
+                put_u64(buf, breakdown.server_ns);
+                put_u32(buf, breakdown.batch_size);
+                put_u32(buf, breakdown.selected_rows);
+                put_u32(buf, breakdown.context_rows);
+                buf.push(breakdown.plane);
+                buf.push(breakdown.tier);
+                buf.push(breakdown.degraded);
+            }
             Frame::Error { req, error } => {
                 buf.push(OP_ERROR);
                 put_u64(buf, *req);
@@ -565,16 +623,18 @@ impl Frame {
                 let req = cur.u64()?;
                 let context = cur.u32()?;
                 let ttl_ns = cur.u64()?;
+                let trace = cur.u8()? != 0;
                 let embedding = cur.f32_vec()?;
-                Frame::Submit { req, context, embedding, ttl_ns }
+                Frame::Submit { req, context, embedding, ttl_ns, trace }
             }
             OP_SUBMIT_STREAMED => {
                 let req = cur.u64()?;
                 let context = cur.u32()?;
                 let ttl_ns = cur.u64()?;
                 let chunk = cur.u32()?;
+                let trace = cur.u8()? != 0;
                 let embedding = cur.f32_vec()?;
-                Frame::SubmitStreamed { req, context, embedding, ttl_ns, chunk }
+                Frame::SubmitStreamed { req, context, embedding, ttl_ns, chunk, trace }
             }
             OP_EVICT => Frame::Evict { req: cur.u64()?, context: cur.u32()? },
             OP_DRAIN => Frame::Drain { req: cur.u64()? },
@@ -630,6 +690,21 @@ impl Frame {
                 completed_ns: cur.u64()?,
                 total: cur.u32()?,
             },
+            OP_TRACE => {
+                let req = cur.u64()?;
+                let breakdown = WireBreakdown {
+                    queue_ns: cur.u64()?,
+                    compute_ns: cur.u64()?,
+                    server_ns: cur.u64()?,
+                    batch_size: cur.u32()?,
+                    selected_rows: cur.u32()?,
+                    context_rows: cur.u32()?,
+                    plane: cur.u8()?,
+                    tier: cur.u8()?,
+                    degraded: cur.u8()?,
+                };
+                Frame::Trace { req, breakdown }
+            }
             OP_ERROR => {
                 let req = cur.u64()?;
                 let code = cur.u16()?;
@@ -662,6 +737,7 @@ impl Frame {
             | Frame::ShutdownAck { req }
             | Frame::SubmitChunk { req, .. }
             | Frame::SubmitDone { req, .. }
+            | Frame::Trace { req, .. }
             | Frame::Error { req, .. } => *req,
         }
     }
@@ -913,7 +989,7 @@ mod tests {
 
     fn random_frame(rng: &mut Rng) -> Frame {
         let req = rng.next_u64();
-        match rng.below(16) {
+        match rng.below(17) {
             0 => {
                 let (n, d) = (rng.range(1, 8) as u32, rng.range(1, 8) as u32);
                 let count = (n * d) as usize;
@@ -932,6 +1008,7 @@ mod tests {
                     context: rng.next_u64() as u32,
                     embedding: rng.normal_vec(len, 1.0),
                     ttl_ns: if rng.below(2) == 0 { 0 } else { rng.next_u64() },
+                    trace: rng.below(2) == 1,
                 }
             }
             2 => Frame::Evict { req, context: rng.next_u64() as u32 },
@@ -983,6 +1060,7 @@ mod tests {
                     embedding: rng.normal_vec(len, 1.0),
                     ttl_ns: if rng.below(2) == 0 { 0 } else { rng.next_u64() },
                     chunk: rng.below(64) as u32,
+                    trace: rng.below(2) == 1,
                 }
             }
             13 => {
@@ -1001,14 +1079,66 @@ mod tests {
                 completed_ns: rng.next_u64(),
                 total: rng.below(1 << 20) as u32,
             },
+            15 => Frame::Trace {
+                req,
+                breakdown: WireBreakdown {
+                    queue_ns: rng.next_u64(),
+                    compute_ns: rng.next_u64(),
+                    server_ns: rng.next_u64(),
+                    batch_size: rng.range(1, 8) as u32,
+                    selected_rows: rng.below(512) as u32,
+                    context_rows: rng.below(2048) as u32,
+                    plane: rng.below(4) as u8,
+                    tier: rng.below(2) as u8,
+                    degraded: rng.below(2) as u8,
+                },
+            },
             _ => Frame::Error { req, error: random_error(rng) },
         }
     }
 
     #[test]
     fn every_frame_type_round_trips() {
-        // property test: random instances of all 16 frame kinds
+        // property test: random instances of all 17 frame kinds
         check(500, |rng| round_trip(&random_frame(rng)));
+    }
+
+    #[test]
+    fn trace_flag_and_breakdown_round_trip_exactly() {
+        // the v5 additions, pinned explicitly (beyond the property
+        // sweep): both polarities of the submit trace flag and a
+        // fully-populated breakdown frame
+        for trace in [false, true] {
+            round_trip(&Frame::Submit {
+                req: 11,
+                context: 3,
+                embedding: vec![0.5, -0.5],
+                ttl_ns: 1_000,
+                trace,
+            });
+            round_trip(&Frame::SubmitStreamed {
+                req: 12,
+                context: 3,
+                embedding: vec![0.25; 8],
+                ttl_ns: 0,
+                chunk: 4,
+                trace,
+            });
+        }
+        round_trip(&Frame::Trace {
+            req: 13,
+            breakdown: WireBreakdown {
+                queue_ns: 1_500,
+                compute_ns: 700,
+                server_ns: 2_400,
+                batch_size: 8,
+                selected_rows: 37,
+                context_rows: 320,
+                plane: 2,
+                tier: 1,
+                degraded: 0,
+            },
+        });
     }
 
     #[test]
@@ -1264,7 +1394,13 @@ mod tests {
         // several whole frames at once)
         let frames = vec![
             Frame::Drain { req: 1 },
-            Frame::Submit { req: 2, context: 7, embedding: vec![1.0, -2.5, 3.25], ttl_ns: 99 },
+            Frame::Submit {
+                req: 2,
+                context: 7,
+                embedding: vec![1.0, -2.5, 3.25],
+                ttl_ns: 99,
+                trace: true,
+            },
             Frame::Evicted { req: 3 },
         ];
         let stream = stream_of(&frames);

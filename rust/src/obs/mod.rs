@@ -1,0 +1,1128 @@
+//! Observability: per-query span traces, bounded histogram telemetry,
+//! and a Prometheus-exposition checker.
+//!
+//! A³'s whole thesis is that approximation makes attention cheap
+//! *because most computation is skipped* — so the serving stack has to
+//! be able to show an operator how much was skipped and where a
+//! query's latency went. This module is the crate-wide observability
+//! layer behind that, three pillars:
+//!
+//! 1. **Span tracing** — a [`QueryTrace`] of monotonic stage
+//!    timestamps (submit → admit → batch-compose → kernel-start/end →
+//!    route → reply) plus approximation-quality facts (selected rows
+//!    M, context rows n, kernel plane, serving tier, degraded flag),
+//!    recorded into fixed-capacity per-shard rings by a [`TraceSink`]
+//!    under a deterministic 1-in-N sampler
+//!    (`EngineBuilder::trace_sample`, `A3_TRACE` env). Exported as
+//!    Chrome trace-event JSON ([`chrome_trace_json`]) and JSONL
+//!    ([`trace_jsonl`]) by `a3 trace`.
+//! 2. **Histogram telemetry** — a fixed-bucket log2 [`Histogram`]
+//!    (65 buckets, bounded memory, mergeable across shards) that runs
+//!    *alongside* the exact drain-time latency vec in
+//!    [`crate::coordinator::Metrics`], aggregated mid-run in a shared
+//!    [`Telemetry`] registry and served as native Prometheus
+//!    `histogram` families by the `/metrics` listener.
+//! 3. **An exposition checker** — [`check_exposition`] validates any
+//!    Prometheus text body this crate emits (HELP/TYPE before samples,
+//!    bucket monotonicity, `+Inf` bucket == `_count`), used by the
+//!    property tests.
+//!
+//! Tracing is sampling-only bookkeeping: it never touches the compute
+//! path, so outputs are bit-identical with tracing on or off (pinned
+//! by `tests/obs.rs`).
+//!
+//! ```
+//! use a3::obs::Histogram;
+//!
+//! let mut h = Histogram::new();
+//! for v in [100, 1_000, 100_000] {
+//!     h.record(v);
+//! }
+//! let mut other = Histogram::new();
+//! other.record(1_000_000);
+//! h.merge(&other);
+//! assert_eq!(h.count(), 4);
+//! assert_eq!(h.sum(), 1_101_100);
+//! // cumulative buckets end at the highest occupied power-of-two bound
+//! let (upper, cum) = *h.cumulative().last().unwrap();
+//! assert!(upper >= 1_000_000 && cum == 4);
+//! ```
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+// ---------------------------------------------------------------------------
+// log2 histogram
+// ---------------------------------------------------------------------------
+
+/// Number of buckets in a [`Histogram`]: one per power-of-two upper
+/// bound `2^i - 1` for `i in 0..64`, plus a final bucket for values
+/// with the top bit set.
+pub const HISTOGRAM_BUCKETS: usize = 65;
+
+/// Fixed-bucket log2 histogram: bounded memory, O(1) record, mergeable
+/// across shards.
+///
+/// Bucket `i` holds values `v` with `64 - v.leading_zeros() == i`,
+/// i.e. values up to `2^i - 1`; bucket 0 holds exactly `v == 0`. The
+/// sum saturates instead of wrapping so a long-running serving process
+/// can never panic in telemetry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Histogram {
+    counts: [u64; HISTOGRAM_BUCKETS],
+    count: u64,
+    sum: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { counts: [0; HISTOGRAM_BUCKETS], count: 0, sum: 0 }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket_index(v: u64) -> usize {
+        (64 - v.leading_zeros()) as usize
+    }
+
+    /// Inclusive upper bound of bucket `i` (`2^i - 1`; the last bucket
+    /// is unbounded and reports `u64::MAX`).
+    pub fn bucket_upper(i: usize) -> u64 {
+        if i >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Cumulative `(upper_bound, count_le)` pairs, trimmed to the
+    /// highest occupied bucket (empty for an empty histogram). The
+    /// Prometheus emitter appends the `+Inf` bucket itself.
+    pub fn cumulative(&self) -> Vec<(u64, u64)> {
+        let last = match self.counts.iter().rposition(|&c| c > 0) {
+            Some(i) => i,
+            None => return Vec::new(),
+        };
+        let mut out = Vec::with_capacity(last + 1);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate().take(last + 1) {
+            cum += c;
+            out.push((Self::bucket_upper(i), cum));
+        }
+        out
+    }
+
+    /// Bucket-upper-bound estimate of the `q`-quantile (`0.0..=1.0`).
+    /// An upper bound on the true quantile, within one power of two.
+    pub fn quantile_upper(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return Self::bucket_upper(i);
+            }
+        }
+        u64::MAX
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-query span traces
+// ---------------------------------------------------------------------------
+
+/// How a traced query left the system. Every resolved query has
+/// exactly one terminal state (the chaos harness asserts this).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Terminal {
+    /// Still in flight (only visible in `pending_count`, never in a
+    /// ring snapshot).
+    Pending,
+    /// Served: a `Response` left the shard worker.
+    Completed,
+    /// Failed with the named typed-error kind
+    /// ([`crate::api::A3Error::kind`]).
+    Dropped(&'static str),
+}
+
+/// One sampled query's trip through the pipeline: monotonic stage
+/// timestamps (host nanoseconds since the engine epoch; `0` = stage
+/// not reached) plus the approximation-quality facts of the batch
+/// that served it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueryTrace {
+    pub id: u64,
+    pub context: u32,
+    pub shard: usize,
+    /// Stamped by `Engine::submit*` once the shard is resolved.
+    pub submit_ns: u64,
+    /// Stamped when the shard worker dequeues the submit command.
+    pub admit_ns: u64,
+    /// Stamped when batch composition hands the batch to dispatch.
+    pub batch_ns: u64,
+    /// Host-clock window around the scheduler/kernel dispatch.
+    pub kernel_start_ns: u64,
+    pub kernel_end_ns: u64,
+    /// Stamped when the net router picks up the response (0 for
+    /// in-process serving).
+    pub route_ns: u64,
+    /// Stamped when the reply frames are handed to the connection
+    /// writer (enqueue time, not socket flush; 0 in-process).
+    pub reply_ns: u64,
+    /// Stamped when a query resolves as `Dropped` instead of served.
+    pub dropped_ns: u64,
+    /// Size of the batch this query was served in.
+    pub batch_size: u32,
+    /// Post-score survivors actually attended (the paper's M′).
+    pub selected_rows: u32,
+    /// Rows in the registered context (n) — `selected_rows / context_rows`
+    /// is the fraction of the context the approximation touched.
+    pub context_rows: u32,
+    /// Simulated accelerator cycles for this query (1 cycle = 1 ns).
+    pub sim_cycles: u64,
+    /// Kernel plane that executed the batch (`scalar`/`simd128`/...).
+    pub plane: &'static str,
+    /// Serving tier (`hot` or `warm`).
+    pub tier: &'static str,
+    /// Served by the degraded (conservative-approximation) pipe.
+    pub degraded: bool,
+    pub terminal: Terminal,
+}
+
+impl QueryTrace {
+    fn begun(id: u64, context: u32, shard: usize, submit_ns: u64) -> Self {
+        QueryTrace {
+            id,
+            context,
+            shard,
+            submit_ns,
+            admit_ns: 0,
+            batch_ns: 0,
+            kernel_start_ns: 0,
+            kernel_end_ns: 0,
+            route_ns: 0,
+            reply_ns: 0,
+            dropped_ns: 0,
+            batch_size: 0,
+            selected_rows: 0,
+            context_rows: 0,
+            sim_cycles: 0,
+            plane: "",
+            tier: "",
+            degraded: false,
+            terminal: Terminal::Pending,
+        }
+    }
+
+    /// Last stamp on the trace (the resolution time).
+    pub fn end_ns(&self) -> u64 {
+        self.reply_ns
+            .max(self.route_ns)
+            .max(self.kernel_end_ns)
+            .max(self.dropped_ns)
+            .max(self.batch_ns)
+            .max(self.admit_ns)
+            .max(self.submit_ns)
+    }
+
+    /// Consecutive `(stage, start_ns, end_ns)` spans between the
+    /// stamps that were actually reached. Together the spans cover
+    /// submit → resolution with no gaps.
+    pub fn spans(&self) -> Vec<(&'static str, u64, u64)> {
+        let stamps = [
+            ("admit", self.admit_ns),
+            ("compose", self.batch_ns),
+            ("kernel", self.kernel_end_ns.max(self.kernel_start_ns)),
+            ("route", self.route_ns),
+            ("reply", self.reply_ns),
+            ("drop", self.dropped_ns),
+        ];
+        let mut out = Vec::new();
+        let mut prev = self.submit_ns;
+        for (name, t) in stamps {
+            if t > 0 {
+                out.push((name, prev, t.max(prev)));
+                prev = t.max(prev);
+            }
+        }
+        out
+    }
+}
+
+#[derive(Default)]
+struct ShardTraces {
+    pending: HashMap<u64, QueryTrace>,
+    done: VecDeque<QueryTrace>,
+}
+
+/// Facts recorded when a traced query's batch finishes dispatch.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeFacts {
+    pub batch_ns: u64,
+    pub kernel_start_ns: u64,
+    pub kernel_end_ns: u64,
+    pub batch_size: u32,
+    pub selected_rows: u32,
+    pub context_rows: u32,
+    pub sim_cycles: u64,
+    pub plane: &'static str,
+    pub tier: &'static str,
+    pub degraded: bool,
+}
+
+/// Default 1-in-N sampling rate when neither
+/// `EngineBuilder::trace_sample` nor `A3_TRACE` says otherwise.
+pub const DEFAULT_TRACE_SAMPLE: u64 = 64;
+
+/// Per-shard ring capacity: the newest `TRACE_RING_CAP` resolved
+/// traces per shard are retained.
+pub const TRACE_RING_CAP: usize = 4096;
+
+/// Crate-wide trace recorder: per-shard pending maps (in-flight
+/// traced queries) and fixed-capacity rings of resolved
+/// [`QueryTrace`]s.
+///
+/// Sampling is deterministic — `id % sample == 0` — so the same run
+/// always traces the same queries. Queries outside the sample can
+/// still be traced by force (the wire-level per-query trace flag);
+/// the first forced trace flips a sink-wide latch so the untraced
+/// fast path stays lock-free until tracing is actually in use.
+pub struct TraceSink {
+    sample: u64,
+    cap: usize,
+    forced: AtomicBool,
+    shards: Vec<Mutex<ShardTraces>>,
+}
+
+impl TraceSink {
+    pub fn new(sample: u64, shards: usize, cap: usize) -> Self {
+        TraceSink {
+            sample,
+            cap: cap.max(1),
+            forced: AtomicBool::new(false),
+            shards: (0..shards.max(1)).map(|_| Mutex::new(ShardTraces::default())).collect(),
+        }
+    }
+
+    /// The configured 1-in-N rate (0 = sampler off).
+    pub fn sample(&self) -> u64 {
+        self.sample
+    }
+
+    /// Is `id` in the deterministic sample?
+    pub fn sampled(&self, id: u64) -> bool {
+        self.sample != 0 && id % self.sample == 0
+    }
+
+    /// Cheap guard for the serving path: false only when no query can
+    /// possibly be traced (sampler off and no forced trace ever
+    /// began), in which case workers skip the sink entirely.
+    pub fn enabled(&self) -> bool {
+        self.sample != 0 || self.forced.load(Ordering::Relaxed)
+    }
+
+    fn shard(&self, shard: usize) -> &Mutex<ShardTraces> {
+        &self.shards[shard.min(self.shards.len() - 1)]
+    }
+
+    /// Open a trace for `id` (call only for sampled or force-flagged
+    /// queries).
+    pub fn begin(&self, shard: usize, id: u64, context: u32, submit_ns: u64, forced: bool) {
+        if forced {
+            self.forced.store(true, Ordering::Relaxed);
+        }
+        let mut s = self.shard(shard).lock().unwrap();
+        s.pending.insert(id, QueryTrace::begun(id, context, shard, submit_ns));
+    }
+
+    /// Stamp the shard-worker admission time. No-op for untraced ids.
+    pub fn admit(&self, shard: usize, id: u64, now_ns: u64) {
+        let mut s = self.shard(shard).lock().unwrap();
+        if let Some(t) = s.pending.get_mut(&id) {
+            t.admit_ns = now_ns;
+        }
+    }
+
+    fn resolve(&self, shard: usize, id: u64, fill: impl FnOnce(&mut QueryTrace)) -> bool {
+        let mut s = self.shard(shard).lock().unwrap();
+        let Some(mut t) = s.pending.remove(&id) else { return false };
+        fill(&mut t);
+        if s.done.len() >= self.cap {
+            s.done.pop_front();
+        }
+        s.done.push_back(t);
+        true
+    }
+
+    /// Resolve a traced query as served. No-op (false) for untraced
+    /// ids.
+    pub fn complete(&self, shard: usize, id: u64, facts: ServeFacts) -> bool {
+        self.resolve(shard, id, |t| {
+            t.batch_ns = facts.batch_ns;
+            t.kernel_start_ns = facts.kernel_start_ns;
+            t.kernel_end_ns = facts.kernel_end_ns;
+            t.batch_size = facts.batch_size;
+            t.selected_rows = facts.selected_rows;
+            t.context_rows = facts.context_rows;
+            t.sim_cycles = facts.sim_cycles;
+            t.plane = facts.plane;
+            t.tier = facts.tier;
+            t.degraded = facts.degraded;
+            t.terminal = Terminal::Completed;
+        })
+    }
+
+    /// Resolve a traced query as dropped with a typed-error kind.
+    pub fn drop_query(&self, shard: usize, id: u64, kind: &'static str, now_ns: u64) -> bool {
+        self.resolve(shard, id, |t| {
+            t.dropped_ns = now_ns;
+            t.terminal = Terminal::Dropped(kind);
+        })
+    }
+
+    fn stamp_done(&self, id: u64, stamp: impl Fn(&mut QueryTrace)) -> bool {
+        for shard in &self.shards {
+            let mut s = shard.lock().unwrap();
+            if let Some(t) = s.done.iter_mut().rev().find(|t| t.id == id) {
+                stamp(t);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Stamp the net-router pickup time on a resolved trace.
+    pub fn stamp_route(&self, id: u64, now_ns: u64) -> bool {
+        self.stamp_done(id, |t| t.route_ns = now_ns)
+    }
+
+    /// Stamp the reply-enqueue time on a resolved trace.
+    pub fn stamp_reply(&self, id: u64, now_ns: u64) -> bool {
+        self.stamp_done(id, |t| t.reply_ns = now_ns)
+    }
+
+    /// Look up a resolved trace by id (newest first).
+    pub fn lookup(&self, id: u64) -> Option<QueryTrace> {
+        for shard in &self.shards {
+            let s = shard.lock().unwrap();
+            if let Some(t) = s.done.iter().rev().find(|t| t.id == id) {
+                return Some(t.clone());
+            }
+        }
+        None
+    }
+
+    /// All resolved traces, shard-major, oldest first within a shard.
+    pub fn snapshot(&self) -> Vec<QueryTrace> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            out.extend(shard.lock().unwrap().done.iter().cloned());
+        }
+        out
+    }
+
+    /// Traced queries still in flight.
+    pub fn pending_count(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().pending.len()).sum()
+    }
+}
+
+/// Resolve the `A3_TRACE` environment knob: unset/invalid → `None`,
+/// `"0"` → `Some(0)` (sampler off), `"N"` → `Some(N)` (1-in-N).
+pub fn trace_sample_from_env() -> Option<u64> {
+    std::env::var("A3_TRACE").ok().and_then(|v| v.trim().parse::<u64>().ok())
+}
+
+// ---------------------------------------------------------------------------
+// shared histogram telemetry
+// ---------------------------------------------------------------------------
+
+/// Mid-run telemetry registry shared by every shard worker and the
+/// `/metrics` listener: five log2 histograms plus labeled counters.
+///
+/// Unlike the exact per-shard [`crate::coordinator::Metrics`] (which
+/// surfaces only at the drain barrier), `Telemetry` is written as
+/// batches dispatch and is scrape-readable at any moment. Workers
+/// take one uncontended mutex per histogram per *batch*, so the cost
+/// is amortized across the batch and independent of trace sampling.
+#[derive(Default)]
+pub struct Telemetry {
+    latency_ns: Mutex<Histogram>,
+    queue_wait_ns: Mutex<Histogram>,
+    batch_size: Mutex<Histogram>,
+    selected_rows_pct: Mutex<Histogram>,
+    kernel_ns: Mutex<Histogram>,
+    tier_hot: AtomicU64,
+    tier_warm: AtomicU64,
+    close_full: AtomicU64,
+    close_timeout: AtomicU64,
+    close_flush: AtomicU64,
+    close_evict: AtomicU64,
+}
+
+/// Batch-close reason labels, in the order of
+/// [`Telemetry::batch_closes`].
+pub const CLOSE_REASONS: [&str; 4] = ["full", "timeout", "flush", "evict"];
+
+impl Telemetry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one batch worth of per-query latencies (sim-clock ns,
+    /// same values the exact vec keeps) and queue waits (host ns).
+    pub fn record_batch(
+        &self,
+        latencies_ns: &[u64],
+        queue_waits_ns: &[u64],
+        selected_pct: &[u64],
+        kernel_ns: u64,
+    ) {
+        {
+            let mut h = self.latency_ns.lock().unwrap();
+            for &v in latencies_ns {
+                h.record(v);
+            }
+        }
+        {
+            let mut h = self.queue_wait_ns.lock().unwrap();
+            for &v in queue_waits_ns {
+                h.record(v);
+            }
+        }
+        {
+            let mut h = self.selected_rows_pct.lock().unwrap();
+            for &v in selected_pct {
+                h.record(v);
+            }
+        }
+        self.batch_size.lock().unwrap().record(latencies_ns.len() as u64);
+        self.kernel_ns.lock().unwrap().record(kernel_ns);
+    }
+
+    /// Count a batch served from the hot (f32) or warm
+    /// (quantized-resident) tier.
+    pub fn tier_serve(&self, warm: bool, queries: u64) {
+        let ctr = if warm { &self.tier_warm } else { &self.tier_hot };
+        ctr.fetch_add(queries, Ordering::Relaxed);
+    }
+
+    /// `(hot, warm)` per-tier served-query counters.
+    pub fn tier_serves(&self) -> (u64, u64) {
+        (self.tier_hot.load(Ordering::Relaxed), self.tier_warm.load(Ordering::Relaxed))
+    }
+
+    /// Add batch-close deltas (order: full, timeout, flush, evict —
+    /// see [`CLOSE_REASONS`]).
+    pub fn add_batch_closes(&self, full: u64, timeout: u64, flush: u64, evict: u64) {
+        self.close_full.fetch_add(full, Ordering::Relaxed);
+        self.close_timeout.fetch_add(timeout, Ordering::Relaxed);
+        self.close_flush.fetch_add(flush, Ordering::Relaxed);
+        self.close_evict.fetch_add(evict, Ordering::Relaxed);
+    }
+
+    /// Batch-close counters, ordered as [`CLOSE_REASONS`].
+    pub fn batch_closes(&self) -> [u64; 4] {
+        [
+            self.close_full.load(Ordering::Relaxed),
+            self.close_timeout.load(Ordering::Relaxed),
+            self.close_flush.load(Ordering::Relaxed),
+            self.close_evict.load(Ordering::Relaxed),
+        ]
+    }
+
+    /// Point-in-time copies of the five histograms, in `/metrics`
+    /// family order: latency, queue-wait, batch-size,
+    /// selected-rows-%, kernel.
+    pub fn histograms(&self) -> [(&'static str, &'static str, Histogram); 5] {
+        [
+            (
+                "a3_latency_ns",
+                "Per-query serving latency (simulated accelerator ns)",
+                self.latency_ns.lock().unwrap().clone(),
+            ),
+            (
+                "a3_queue_wait_ns",
+                "Host ns between submit and batch dispatch",
+                self.queue_wait_ns.lock().unwrap().clone(),
+            ),
+            (
+                "a3_batch_size",
+                "Queries per dispatched batch",
+                self.batch_size.lock().unwrap().clone(),
+            ),
+            (
+                "a3_selected_rows_pct",
+                "Post-score survivors as % of context rows",
+                self.selected_rows_pct.lock().unwrap().clone(),
+            ),
+            (
+                "a3_kernel_ns",
+                "Host ns spent inside scheduler dispatch per batch",
+                self.kernel_ns.lock().unwrap().clone(),
+            ),
+        ]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// trace export: Chrome trace-event JSON + JSONL
+// ---------------------------------------------------------------------------
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn terminal_label(t: &Terminal) -> String {
+    match t {
+        Terminal::Pending => "pending".into(),
+        Terminal::Completed => "completed".into(),
+        Terminal::Dropped(kind) => format!("dropped:{kind}"),
+    }
+}
+
+fn trace_args_json(t: &QueryTrace) -> String {
+    format!(
+        "{{\"context\":{},\"batch_size\":{},\"selected_rows\":{},\"context_rows\":{},\
+         \"sim_cycles\":{},\"plane\":\"{}\",\"tier\":\"{}\",\"degraded\":{},\"terminal\":\"{}\"}}",
+        t.context,
+        t.batch_size,
+        t.selected_rows,
+        t.context_rows,
+        t.sim_cycles,
+        json_escape(t.plane),
+        json_escape(t.tier),
+        t.degraded,
+        json_escape(&terminal_label(&t.terminal)),
+    )
+}
+
+fn us(ns: u64) -> f64 {
+    ns as f64 / 1_000.0
+}
+
+/// Render traces in the Chrome trace-event format (load via
+/// `chrome://tracing` or <https://ui.perfetto.dev>): one enclosing
+/// `query` span per trace (pid = shard, tid = query id) plus the
+/// consecutive stage sub-spans from [`QueryTrace::spans`].
+pub fn chrome_trace_json(traces: &[QueryTrace]) -> String {
+    let mut events = Vec::new();
+    for t in traces {
+        let args = trace_args_json(t);
+        let end = t.end_ns().max(t.submit_ns);
+        events.push(format!(
+            "{{\"name\":\"query\",\"cat\":\"a3\",\"ph\":\"X\",\"pid\":{},\"tid\":{},\
+             \"ts\":{:.3},\"dur\":{:.3},\"args\":{}}}",
+            t.shard,
+            t.id,
+            us(t.submit_ns),
+            us(end - t.submit_ns),
+            args
+        ));
+        for (name, start, stop) in t.spans() {
+            events.push(format!(
+                "{{\"name\":\"{}\",\"cat\":\"a3\",\"ph\":\"X\",\"pid\":{},\"tid\":{},\
+                 \"ts\":{:.3},\"dur\":{:.3},\"args\":{}}}",
+                name,
+                t.shard,
+                t.id,
+                us(start),
+                us(stop - start),
+                args
+            ));
+        }
+    }
+    format!("{{\"displayTimeUnit\":\"ns\",\"traceEvents\":[{}]}}\n", events.join(","))
+}
+
+/// Render traces as JSONL: one self-contained object per line, every
+/// stamp and fact included (the greppable counterpart of the Chrome
+/// view).
+pub fn trace_jsonl(traces: &[QueryTrace]) -> String {
+    let mut out = String::new();
+    for t in traces {
+        out.push_str(&format!(
+            "{{\"id\":{},\"shard\":{},\"submit_ns\":{},\"admit_ns\":{},\"batch_ns\":{},\
+             \"kernel_start_ns\":{},\"kernel_end_ns\":{},\"route_ns\":{},\"reply_ns\":{},\
+             \"dropped_ns\":{},\"args\":{}}}\n",
+            t.id,
+            t.shard,
+            t.submit_ns,
+            t.admit_ns,
+            t.batch_ns,
+            t.kernel_start_ns,
+            t.kernel_end_ns,
+            t.route_ns,
+            t.reply_ns,
+            t.dropped_ns,
+            trace_args_json(t),
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus exposition checker
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct FamilyState {
+    kind: String,
+    help: bool,
+    samples: u64,
+    last_le: Option<f64>,
+    last_bucket_cum: Option<f64>,
+    inf_bucket: Option<f64>,
+    count: Option<f64>,
+    sum_seen: bool,
+}
+
+fn sample_family(name: &str, families: &HashMap<String, FamilyState>) -> String {
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = name.strip_suffix(suffix) {
+            if families.get(base).is_some_and(|f| f.kind == "histogram") {
+                return base.to_string();
+            }
+        }
+    }
+    name.to_string()
+}
+
+/// Validate a Prometheus text-exposition body (the 0.0.4 format this
+/// crate emits). Enforced rules:
+///
+/// * every line is `# HELP`, `# TYPE`, or `name[{labels}] value`;
+/// * `# HELP` precedes `# TYPE` precedes the family's samples;
+/// * values parse as finite-or-+Inf floats;
+/// * histogram families: `le` labels strictly increase, cumulative
+///   bucket counts never decrease, the `+Inf` bucket exists and
+///   equals `_count`, and `_sum` is present.
+pub fn check_exposition(body: &str) -> Result<(), String> {
+    let mut families: HashMap<String, FamilyState> = HashMap::new();
+    for (lineno, line) in body.lines().enumerate() {
+        let err = |msg: String| Err(format!("line {}: {}: {:?}", lineno + 1, msg, line));
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            let mut parts = rest.splitn(3, ' ');
+            let keyword = parts.next().unwrap_or("");
+            let Some(name) = parts.next() else {
+                return err("comment without a metric name".into());
+            };
+            let payload = parts.next().unwrap_or("");
+            let fam = families.entry(name.to_string()).or_default();
+            match keyword {
+                "HELP" => {
+                    if payload.is_empty() {
+                        return err("HELP without text".into());
+                    }
+                    if !fam.kind.is_empty() || fam.samples > 0 {
+                        return err("HELP must precede TYPE and samples".into());
+                    }
+                    fam.help = true;
+                }
+                "TYPE" => {
+                    if !fam.help {
+                        return err("TYPE without a preceding HELP".into());
+                    }
+                    if fam.samples > 0 {
+                        return err("TYPE after samples".into());
+                    }
+                    if !["counter", "gauge", "histogram", "summary", "untyped"]
+                        .contains(&payload)
+                    {
+                        return err(format!("unknown TYPE {payload:?}"));
+                    }
+                    fam.kind = payload.to_string();
+                }
+                _ => return err(format!("unknown comment keyword {keyword:?}")),
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            return err("comment must start with '# '".into());
+        }
+        // sample: name[{labels}] value
+        let Some((metric, value)) = line.rsplit_once(' ') else {
+            return err("sample without a value".into());
+        };
+        if value.is_empty() || metric.contains(' ') {
+            return err("sample must be `name[{labels}] value`".into());
+        }
+        let v = if value == "+Inf" {
+            f64::INFINITY
+        } else {
+            match value.parse::<f64>() {
+                Ok(v) if v.is_finite() => v,
+                _ => return err(format!("unparseable value {value:?}")),
+            }
+        };
+        let (name, labels) = match metric.split_once('{') {
+            Some((n, rest)) => match rest.strip_suffix('}') {
+                Some(l) => (n, Some(l)),
+                None => return err("unterminated label block".into()),
+            },
+            None => (metric, None),
+        };
+        if name.is_empty() {
+            return err("empty metric name".into());
+        }
+        let fam_name = sample_family(name, &families);
+        let Some(fam) = families.get_mut(&fam_name) else {
+            return err(format!("sample for undeclared family {fam_name:?}"));
+        };
+        if fam.kind.is_empty() {
+            return err(format!("sample for family {fam_name:?} before its TYPE"));
+        }
+        fam.samples += 1;
+        if fam.kind == "histogram" {
+            if name.ends_with("_bucket") {
+                let le = labels
+                    .and_then(|l| {
+                        l.split(',').find_map(|kv| kv.trim().strip_prefix("le=\""))
+                    })
+                    .and_then(|rest| rest.strip_suffix('"'));
+                let Some(le) = le else {
+                    return err("histogram bucket without an le label".into());
+                };
+                let le_v = if le == "+Inf" {
+                    f64::INFINITY
+                } else {
+                    match le.parse::<f64>() {
+                        Ok(b) => b,
+                        Err(_) => return err(format!("unparseable le bound {le:?}")),
+                    }
+                };
+                if let Some(prev) = fam.last_le {
+                    if le_v <= prev {
+                        return err(format!("le bounds not increasing ({prev} -> {le_v})"));
+                    }
+                }
+                if let Some(prev) = fam.last_bucket_cum {
+                    if v < prev {
+                        return err(format!("bucket counts not cumulative ({prev} -> {v})"));
+                    }
+                }
+                fam.last_le = Some(le_v);
+                fam.last_bucket_cum = Some(v);
+                if le_v.is_infinite() {
+                    fam.inf_bucket = Some(v);
+                }
+            } else if name.ends_with("_sum") {
+                fam.sum_seen = true;
+            } else if name.ends_with("_count") {
+                fam.count = Some(v);
+            } else {
+                return err("bare sample inside a histogram family".into());
+            }
+        }
+    }
+    for (name, fam) in &families {
+        if fam.kind == "histogram" && fam.samples > 0 {
+            let Some(inf) = fam.inf_bucket else {
+                return Err(format!("histogram {name:?} has no +Inf bucket"));
+            };
+            let Some(count) = fam.count else {
+                return Err(format!("histogram {name:?} has no _count"));
+            };
+            if inf != count {
+                return Err(format!(
+                    "histogram {name:?}: +Inf bucket {inf} != _count {count}"
+                ));
+            }
+            if !fam.sum_seen {
+                return Err(format!("histogram {name:?} has no _sum"));
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{check, Rng};
+
+    #[test]
+    fn histogram_buckets_and_bounds() {
+        let mut h = Histogram::new();
+        h.record(0); // bucket 0, upper 0
+        h.record(1); // bucket 1, upper 1
+        h.record(2);
+        h.record(3); // bucket 2, upper 3
+        h.record(u64::MAX); // last bucket
+        assert_eq!(h.count(), 5);
+        let cum = h.cumulative();
+        assert_eq!(cum[0], (0, 1));
+        assert_eq!(cum[1], (1, 2));
+        assert_eq!(cum[2], (3, 4));
+        assert_eq!(*cum.last().unwrap(), (u64::MAX, 5));
+        assert_eq!(cum.len(), HISTOGRAM_BUCKETS);
+    }
+
+    #[test]
+    fn histogram_trims_and_saturates() {
+        let mut h = Histogram::new();
+        assert!(h.cumulative().is_empty());
+        h.record(100);
+        let cum = h.cumulative();
+        assert_eq!(cum.last(), Some(&(127, 1)));
+        h.record(u64::MAX);
+        h.record(u64::MAX);
+        assert_eq!(h.sum(), u64::MAX); // saturated, not wrapped
+    }
+
+    #[test]
+    fn histogram_merge_matches_sequential_record() {
+        check(50, |rng: &mut Rng| {
+            let mut merged = Histogram::new();
+            let mut sequential = Histogram::new();
+            let mut part = Histogram::new();
+            for _ in 0..rng.below(200) {
+                let v = rng.next_u64() >> rng.below(64);
+                sequential.record(v);
+                part.record(v);
+                if rng.below(10) == 0 {
+                    merged.merge(&part);
+                    part = Histogram::new();
+                }
+            }
+            merged.merge(&part);
+            assert_eq!(merged, sequential);
+        });
+    }
+
+    #[test]
+    fn quantile_upper_brackets_exact_values() {
+        let mut h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        assert!(h.quantile_upper(0.5) >= 500);
+        assert!(h.quantile_upper(0.5) <= 1023);
+        assert!(h.quantile_upper(1.0) >= 1000);
+        assert_eq!(Histogram::new().quantile_upper(0.99), 0);
+    }
+
+    fn facts() -> ServeFacts {
+        ServeFacts {
+            batch_ns: 30,
+            kernel_start_ns: 40,
+            kernel_end_ns: 50,
+            batch_size: 4,
+            selected_rows: 24,
+            context_rows: 320,
+            sim_cycles: 1234,
+            plane: "scalar",
+            tier: "hot",
+            degraded: false,
+        }
+    }
+
+    #[test]
+    fn sink_lifecycle_and_sampling() {
+        let sink = TraceSink::new(2, 2, 8);
+        assert!(sink.sampled(0) && sink.sampled(4) && !sink.sampled(3));
+        assert!(sink.enabled());
+        sink.begin(1, 4, 7, 10, false);
+        assert_eq!(sink.pending_count(), 1);
+        sink.admit(1, 4, 20);
+        assert!(sink.complete(1, 4, facts()));
+        assert!(!sink.complete(1, 99, facts())); // untraced id: no-op
+        assert_eq!(sink.pending_count(), 0);
+        assert!(sink.stamp_route(4, 60));
+        assert!(sink.stamp_reply(4, 70));
+        assert!(!sink.stamp_route(99, 60));
+        let traces = sink.snapshot();
+        assert_eq!(traces.len(), 1);
+        let t = &traces[0];
+        assert_eq!(
+            (t.submit_ns, t.admit_ns, t.batch_ns, t.kernel_start_ns, t.kernel_end_ns),
+            (10, 20, 30, 40, 50)
+        );
+        assert_eq!((t.route_ns, t.reply_ns), (60, 70));
+        assert_eq!(t.terminal, Terminal::Completed);
+        assert_eq!(t.end_ns(), 70);
+        // spans are consecutive: submit -> ... -> reply with no gaps
+        let spans = t.spans();
+        assert_eq!(spans.first().unwrap().1, t.submit_ns);
+        assert_eq!(spans.last().unwrap().2, t.reply_ns);
+        for w in spans.windows(2) {
+            assert_eq!(w[0].2, w[1].1);
+        }
+    }
+
+    #[test]
+    fn sink_off_until_forced() {
+        let sink = TraceSink::new(0, 1, 8);
+        assert!(!sink.enabled());
+        assert!(!sink.sampled(0));
+        sink.begin(0, 5, 1, 10, true);
+        assert!(sink.enabled());
+        sink.drop_query(0, 5, "deadline_exceeded", 25);
+        let t = &sink.snapshot()[0];
+        assert_eq!(t.terminal, Terminal::Dropped("deadline_exceeded"));
+        assert_eq!(t.dropped_ns, 25);
+        assert_eq!(t.end_ns(), 25);
+    }
+
+    #[test]
+    fn ring_caps_at_capacity() {
+        let sink = TraceSink::new(1, 1, 4);
+        for id in 0..10u64 {
+            sink.begin(0, id, 0, id, false);
+            sink.complete(0, id, facts());
+        }
+        let traces = sink.snapshot();
+        assert_eq!(traces.len(), 4);
+        assert_eq!(traces.iter().map(|t| t.id).collect::<Vec<_>>(), vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn chrome_json_shape() {
+        let sink = TraceSink::new(1, 1, 8);
+        sink.begin(0, 0, 3, 10, false);
+        sink.admit(0, 0, 20);
+        sink.complete(0, 0, facts());
+        let json = chrome_trace_json(&sink.snapshot());
+        assert!(json.starts_with("{\"displayTimeUnit\":\"ns\",\"traceEvents\":["));
+        assert!(json.contains("\"name\":\"query\""));
+        assert!(json.contains("\"name\":\"kernel\""));
+        assert!(json.contains("\"plane\":\"scalar\""));
+        assert!(json.contains("\"terminal\":\"completed\""));
+        let jsonl = trace_jsonl(&sink.snapshot());
+        assert_eq!(jsonl.lines().count(), 1);
+        assert!(jsonl.contains("\"kernel_end_ns\":50"));
+    }
+
+    #[test]
+    fn telemetry_records_and_snapshots() {
+        let t = Telemetry::new();
+        t.record_batch(&[100, 200], &[10, 20], &[7, 7], 500);
+        t.tier_serve(false, 2);
+        t.tier_serve(true, 1);
+        t.add_batch_closes(1, 2, 0, 0);
+        let [(name, _, lat), _, (_, _, batch), ..] = t.histograms();
+        assert_eq!(name, "a3_latency_ns");
+        assert_eq!(lat.count(), 2);
+        assert_eq!(lat.sum(), 300);
+        assert_eq!(batch.count(), 1);
+        assert_eq!(t.tier_serves(), (2, 1));
+        assert_eq!(t.batch_closes(), [1, 2, 0, 0]);
+    }
+
+    #[test]
+    fn checker_accepts_valid_exposition() {
+        let body = "\
+# HELP a3_up whether the process is up
+# TYPE a3_up gauge
+a3_up 1
+# HELP a3_lat latency
+# TYPE a3_lat histogram
+a3_lat_bucket{le=\"127\"} 3
+a3_lat_bucket{le=\"255\"} 5
+a3_lat_bucket{le=\"+Inf\"} 6
+a3_lat_sum 900
+a3_lat_count 6
+";
+        check_exposition(body).unwrap();
+    }
+
+    #[test]
+    fn checker_rejects_malformed_bodies() {
+        // sample before any TYPE
+        assert!(check_exposition("a3_up 1\n").is_err());
+        // TYPE without HELP
+        assert!(check_exposition("# TYPE a3_up gauge\na3_up 1\n").is_err());
+        // non-monotonic le bounds
+        let bad_le = "# HELP h h\n# TYPE h histogram\n\
+             h_bucket{le=\"255\"} 1\nh_bucket{le=\"127\"} 2\n\
+             h_bucket{le=\"+Inf\"} 2\nh_sum 1\nh_count 2\n";
+        assert!(check_exposition(bad_le).is_err());
+        // decreasing cumulative counts
+        let bad_cum = "# HELP h h\n# TYPE h histogram\n\
+             h_bucket{le=\"127\"} 3\nh_bucket{le=\"255\"} 2\n\
+             h_bucket{le=\"+Inf\"} 3\nh_sum 1\nh_count 3\n";
+        assert!(check_exposition(bad_cum).is_err());
+        // +Inf bucket != _count
+        let bad_inf = "# HELP h h\n# TYPE h histogram\n\
+             h_bucket{le=\"+Inf\"} 3\nh_sum 1\nh_count 4\n";
+        assert!(check_exposition(bad_inf).is_err());
+        // missing +Inf bucket entirely
+        let no_inf = "# HELP h h\n# TYPE h histogram\n\
+             h_bucket{le=\"127\"} 3\nh_sum 1\nh_count 3\n";
+        assert!(check_exposition(no_inf).is_err());
+        // unparseable value
+        assert!(check_exposition("# HELP g g\n# TYPE g gauge\ng one\n").is_err());
+    }
+
+    #[test]
+    fn histogram_emission_roundtrips_through_checker() {
+        check(25, |rng: &mut Rng| {
+            let mut h = Histogram::new();
+            for _ in 0..rng.below(300) {
+                h.record(rng.next_u64() >> rng.below(64));
+            }
+            let mut body = String::new();
+            body.push_str("# HELP a3_x x\n# TYPE a3_x histogram\n");
+            for (upper, cum) in h.cumulative() {
+                body.push_str(&format!("a3_x_bucket{{le=\"{upper}\"}} {cum}\n"));
+            }
+            body.push_str(&format!("a3_x_bucket{{le=\"+Inf\"}} {}\n", h.count()));
+            body.push_str(&format!("a3_x_sum {}\n", h.sum()));
+            body.push_str(&format!("a3_x_count {}\n", h.count()));
+            check_exposition(&body).unwrap();
+        });
+    }
+}

@@ -213,6 +213,64 @@ impl ChaosReport {
     }
 }
 
+/// The trace-side mirror of [`ChaosReport::check`]: every query the
+/// engine admitted during the run must be witnessed by exactly one
+/// [`crate::obs::QueryTrace`] in exactly one terminal state —
+/// completed or dropped with a typed reason, never still pending
+/// after the post-run drain, and never recorded twice. Requires the
+/// engine to have been built with
+/// [`crate::api::EngineBuilder::trace_sample`]`(1)` so the witness
+/// set is the full population, not a sample. Admission rejections
+/// (`QueueFull`, unknown/evicted contexts) resolve *before* a trace
+/// is opened, so they are — correctly — not witnessed.
+pub fn check_trace_witness(engine: &Engine, report: &ChaosReport) -> Result<(), String> {
+    use crate::obs::Terminal;
+    if engine.trace_sample() != 1 {
+        return Err(format!(
+            "trace witness needs trace_sample(1), engine samples 1-in-{}",
+            engine.trace_sample()
+        ));
+    }
+    let traces = engine.traces();
+    let mut ids = BTreeSet::new();
+    let mut completed = 0usize;
+    for t in &traces {
+        if !ids.insert(t.id) {
+            return Err(format!("query {} witnessed by two traces", t.id));
+        }
+        match t.terminal {
+            Terminal::Completed => {
+                completed += 1;
+                let stages =
+                    [t.submit_ns, t.admit_ns, t.batch_ns, t.kernel_start_ns, t.kernel_end_ns];
+                if stages.windows(2).any(|w| w[0] > w[1]) {
+                    return Err(format!(
+                        "query {}: completed with non-monotone stage stamps {stages:?}",
+                        t.id
+                    ));
+                }
+            }
+            Terminal::Dropped(_) => {}
+            Terminal::Pending => {
+                return Err(format!(
+                    "query {} never reached a terminal trace state (hung witness)",
+                    t.id
+                ));
+            }
+        }
+    }
+    // every client-observed success was served by the engine, so it
+    // must be witnessed as completed — comparable only while the
+    // per-shard rings cannot have overwritten older spans
+    if report.submitted <= crate::obs::TRACE_RING_CAP && completed < report.ok {
+        return Err(format!(
+            "{completed} completed trace(s) < {} client-observed successes",
+            report.ok
+        ));
+    }
+    Ok(())
+}
+
 /// One scheduled fault plus its fired latch (CAS so exactly one
 /// worker triggers it, whichever crosses the threshold first).
 struct Armed {

@@ -12,7 +12,7 @@ use a3::api::{A3Error, Dims, EngineBuilder, KvPair};
 use a3::net::{
     Backoff, NetClient, NetError, NetServer, NetServerConfig, RemoteContext, WireError,
 };
-use a3::testutil::chaos::{run_chaos, ChaosEvent, ChaosPlan};
+use a3::testutil::chaos::{check_trace_witness, run_chaos, ChaosEvent, ChaosPlan};
 use a3::testutil::Rng;
 
 const N: usize = 32;
@@ -36,6 +36,9 @@ fn chaos_fixture() -> (Arc<a3::api::Engine>, NetServer, ChaosPlan) {
             .dims(Dims::new(N, D))
             .max_batch(4)
             .max_pending(4096)
+            // full-population tracing: every admitted query leaves a
+            // span witness the tests cross-check against the report
+            .trace_sample(1)
             .build()
             .expect("engine"),
     );
@@ -66,6 +69,19 @@ fn chaos_every_query_resolves_to_exactly_one_typed_outcome() {
     // the invariant: no hangs, no double completions, and the five
     // outcome buckets partition every submitted query exactly
     report.check().unwrap_or_else(|violation| panic!("{violation}\n{}", report.summary()));
+    // its trace-side mirror: every admitted query is witnessed by
+    // exactly one span in exactly one terminal state — including the
+    // ones the killed shard dropped and the orphans whose client
+    // vanished
+    check_trace_witness(&engine, &report)
+        .unwrap_or_else(|violation| panic!("trace witness: {violation}\n{}", report.summary()));
+    let witnesses = engine.traces();
+    assert!(
+        witnesses.len() >= report.ok,
+        "{} spans < {} successes",
+        witnesses.len(),
+        report.ok
+    );
     // the rogue connection actually delivered its garbage
     assert_eq!(report.truncated_probes, 1, "{}", report.summary());
     // the dropped connection vanished with submits still in flight

@@ -248,11 +248,21 @@ fn loadgen_reproduces_stream_serving_over_sockets() {
         window: 8,
         popularity: a3::net::Popularity::Uniform,
         workers: 0,
+        // every 4th query per connection asks for a wire-v5 stage
+        // breakdown; the split below is aggregated from those replies
+        trace_every: 4,
     };
-    let report = run_loadgen(server.local_addr(), plan).unwrap();
+    let (report, split) = a3::net::run_loadgen_split(server.local_addr(), plan).unwrap();
     assert_eq!(report.metrics.completed, 40);
     assert_eq!(report.responses.len(), 40);
     assert!(report.sim_makespan > 0);
+    // 2 connections x 20 queries, every 4th traced → 5 per connection
+    assert_eq!(split.samples, 10, "traced subsample size");
+    assert!(split.compute_ns > 0, "traced replies must carry kernel compute time");
+    assert!(
+        split.queue_ns + split.compute_ns + split.server_other_ns + split.network_ns > 0,
+        "the split must account the client-observed latency somewhere"
+    );
     // globalized response ids stay unique across connections
     let mut ids: Vec<u64> = report.responses.iter().map(|r| r.id).collect();
     ids.sort_unstable();
@@ -423,6 +433,27 @@ fn metrics_listener_serves_prometheus_text() {
     assert!(body.contains("a3_shard_resident_bytes{shard=\"1\"}"), "{body}");
     assert!(body.contains("a3_tier_bytes{tier=\"hot\"}"), "{body}");
     assert!(body.contains("a3_connection_completed{conn=\"0\"} 1\n"), "{body}");
+    // the five native histogram families, scrape-readable mid-run
+    for family in [
+        "a3_latency_ns",
+        "a3_queue_wait_ns",
+        "a3_batch_size",
+        "a3_selected_rows_pct",
+        "a3_kernel_ns",
+    ] {
+        assert!(body.contains(&format!("# TYPE {family} histogram")), "{family}\n{body}");
+        assert!(body.contains(&format!("{family}_bucket{{le=\"+Inf\"}}")), "{family}\n{body}");
+        assert!(body.contains(&format!("{family}_sum ")), "{family}\n{body}");
+        assert!(body.contains(&format!("{family}_count ")), "{family}\n{body}");
+    }
+    // one query, one batch: per-query vs per-batch family counts
+    assert!(body.contains("a3_latency_ns_count 1\n"), "{body}");
+    assert!(body.contains("a3_batch_size_count 1\n"), "{body}");
+    assert!(body.contains("a3_tier_serve_total{tier=\"hot\"} 1\n"), "{body}");
+    assert!(body.contains("a3_trace_sample "), "{body}");
+    // the whole exposition parses under the in-repo 0.0.4 checker
+    let text = body.split("\r\n\r\n").nth(1).expect("header/body split");
+    a3::obs::check_exposition(text).unwrap_or_else(|e| panic!("{e}\n{body}"));
     assert!(scrape("/nope").starts_with("HTTP/1.1 404 Not Found\r\n"));
     // scrapes never perturb the serving gauge
     assert_eq!(server.live_connections(), 1);
@@ -478,6 +509,7 @@ fn pooled_loadgen_drives_more_connections_than_workers() {
         window: 4,
         popularity: a3::net::Popularity::Uniform,
         workers: 4, // 12 connections per generator thread
+        trace_every: 0,
     };
     let report = run_loadgen(server.local_addr(), plan).unwrap();
     assert_eq!(report.metrics.completed, 96);

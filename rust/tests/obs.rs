@@ -1,0 +1,166 @@
+//! Observability acceptance tests: tracing must be pure bookkeeping
+//! (bit-identical serving outputs with the sampler on or off), sampled
+//! traces must cover submit → resolution gap-free, the wire-v5 trace
+//! flag must stamp the route/reply stages and return a stage
+//! breakdown, and the always-on telemetry histograms must account
+//! every completed query.
+
+use std::collections::HashMap;
+
+use a3::api::{Dims, EngineBuilder, KvPair};
+use a3::net::{NetClient, NetServer};
+use a3::obs::{self, Terminal};
+use a3::testutil::Rng;
+
+const N: usize = 32;
+const D: usize = 16;
+const QUERIES: usize = 48;
+const CONTEXTS: usize = 3;
+
+/// One seeded synthetic run: identical contexts and embeddings for
+/// every caller, so two engines differing only in `trace_sample` serve
+/// the very same stream.
+fn run_seeded(trace_sample: u64) -> (a3::api::Engine, Vec<a3::api::Response>) {
+    let engine = EngineBuilder::new()
+        .units(2)
+        .shards(2)
+        .dims(Dims::new(N, D))
+        .max_batch(4)
+        .trace_sample(trace_sample)
+        .build()
+        .unwrap();
+    let mut kv_rng = Rng::new(0xA3);
+    let handles: Vec<_> = (0..CONTEXTS)
+        .map(|_| {
+            let kv = KvPair::new(
+                N,
+                D,
+                kv_rng.normal_vec(N * D, 1.0),
+                kv_rng.normal_vec(N * D, 1.0),
+            );
+            engine.register_context(kv).unwrap()
+        })
+        .collect();
+    let mut q_rng = Rng::new(7);
+    let stream: Vec<_> = (0..QUERIES)
+        .map(|i| (handles[i % handles.len()].clone(), q_rng.normal_vec(D, 1.0)))
+        .collect();
+    let (_tickets, report) = engine.run_stream(stream).unwrap();
+    (engine, report.responses)
+}
+
+#[test]
+fn tracing_is_bookkeeping_only_outputs_bit_identical() {
+    // sampler off vs full-population tracing: per-query results must
+    // not move by a single bit
+    let (off_engine, off) = run_seeded(0);
+    let (on_engine, on) = run_seeded(1);
+    assert_eq!(off.len(), QUERIES);
+    assert_eq!(on.len(), QUERIES);
+    let key = |rs: &[a3::api::Response]| -> HashMap<u64, (Vec<f32>, usize)> {
+        rs.iter().map(|r| (r.id, (r.output.clone(), r.selected_rows))).collect()
+    };
+    assert_eq!(key(&off), key(&on), "tracing changed serving outputs");
+    // and the sinks did what their sample rate says
+    assert!(off_engine.traces().is_empty(), "sample 0 must record nothing");
+    assert_eq!(on_engine.traces().len(), QUERIES, "sample 1 must record everything");
+}
+
+#[test]
+fn sampled_traces_cover_submit_to_resolution_gap_free() {
+    let (engine, _responses) = run_seeded(1);
+    let traces = engine.traces();
+    assert_eq!(traces.len(), QUERIES);
+    for t in &traces {
+        assert_eq!(t.terminal, Terminal::Completed, "query {}", t.id);
+        // stage stamps are monotone on one clock
+        let stages = [t.submit_ns, t.admit_ns, t.batch_ns, t.kernel_start_ns, t.kernel_end_ns];
+        assert!(stages.windows(2).all(|w| w[0] <= w[1]), "query {}: {stages:?}", t.id);
+        // spans tile submit → resolution with no gaps
+        let spans = t.spans();
+        assert!(!spans.is_empty(), "query {}", t.id);
+        assert_eq!(spans[0].1, t.submit_ns, "query {}: first span must start at submit", t.id);
+        for w in spans.windows(2) {
+            assert_eq!(w[0].2, w[1].1, "query {}: gap between {:?} and {:?}", t.id, w[0], w[1]);
+        }
+        assert_eq!(spans.last().unwrap().2, t.end_ns(), "query {}", t.id);
+        // approximation-quality facts are filled in
+        assert_eq!(t.context_rows as usize, N, "query {}", t.id);
+        assert!(t.selected_rows > 0 && t.batch_size > 0 && t.sim_cycles > 0, "query {}", t.id);
+        assert!(!t.plane.is_empty() && t.tier == "hot", "query {}", t.id);
+    }
+    // the exports carry one record per witnessed query
+    assert_eq!(obs::trace_jsonl(&traces).lines().count(), QUERIES);
+    let chrome = obs::chrome_trace_json(&traces);
+    assert!(chrome.starts_with("{\"displayTimeUnit\":\"ns\",\"traceEvents\":["), "{chrome}");
+    assert!(chrome.ends_with("]}\n"), "{chrome}");
+    assert_eq!(chrome.matches("\"name\":\"query\"").count(), QUERIES);
+}
+
+#[test]
+fn telemetry_histograms_account_every_completed_query() {
+    let (engine, responses) = run_seeded(0); // telemetry is always on, sampler off
+    let telemetry = engine.telemetry();
+    let families = telemetry.histograms();
+    let latency = &families.iter().find(|(name, ..)| *name == "a3_latency_ns").unwrap().2;
+    let queue = &families.iter().find(|(name, ..)| *name == "a3_queue_wait_ns").unwrap().2;
+    let batch = &families.iter().find(|(name, ..)| *name == "a3_batch_size").unwrap().2;
+    // per-query families count queries; per-batch families count
+    // batches (each of which holds at least one query)
+    assert_eq!(latency.count(), responses.len() as u64);
+    assert_eq!(queue.count(), responses.len() as u64);
+    assert!(batch.count() >= 1 && batch.count() <= responses.len() as u64);
+    assert_eq!(batch.sum(), responses.len() as u64, "batch sizes must sum to the stream");
+    // upper-bound quantiles are monotone in q
+    assert!(latency.quantile_upper(0.5) <= latency.quantile_upper(0.99));
+    // every serve on this untiered engine is a hot-tier serve
+    assert_eq!(telemetry.tier_serves(), (responses.len() as u64, 0));
+    let closes = telemetry.batch_closes();
+    assert!(closes.iter().sum::<u64>() >= 1, "{closes:?}");
+}
+
+#[test]
+fn wire_trace_flag_stamps_route_and_reply_and_returns_breakdown() {
+    let engine = std::sync::Arc::new(
+        EngineBuilder::new()
+            .units(2)
+            .dims(Dims::new(N, D))
+            .max_batch(1)
+            // sampler off: only the wire flag forces these traces, so
+            // the test proves per-query forcing works without sampling
+            .trace_sample(0)
+            .build()
+            .unwrap(),
+    );
+    let server = NetServer::bind(std::sync::Arc::clone(&engine), "127.0.0.1:0").unwrap();
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    let mut rng = Rng::new(5);
+    let kv = KvPair::new(N, D, rng.normal_vec(N * D, 1.0), rng.normal_vec(N * D, 1.0));
+    let ctx = client.register_context(&kv).unwrap();
+
+    // an untraced submit first: no breakdown may come back for it
+    let plain = client.submit(ctx, &rng.normal_vec(D, 1.0)).unwrap();
+    let traced = client.submit_traced(ctx, &rng.normal_vec(D, 1.0)).unwrap();
+    let r1 = client.recv().unwrap();
+    let r2 = client.recv().unwrap();
+    assert_eq!([r1.id, r2.id], [plain, traced], "completion order");
+    assert!(client.take_breakdown(plain).is_none(), "untraced submit grew a breakdown");
+    let b = client.take_breakdown(traced).expect("traced submit must carry a breakdown");
+    assert!(client.take_breakdown(traced).is_none(), "breakdowns are handed out once");
+    assert!(b.server_ns >= b.compute_ns, "{b:?}");
+    assert!(b.compute_ns > 0, "{b:?}");
+    assert_eq!(b.batch_size, 1, "{b:?}");
+    assert_eq!(b.context_rows as usize, N, "{b:?}");
+    assert!(b.selected_rows > 0, "{b:?}");
+    assert_eq!((b.tier, b.degraded), (0, 0), "hot-tier undegraded serve: {b:?}");
+
+    // engine-side: exactly the forced query is witnessed, through reply
+    let traces = engine.traces();
+    assert_eq!(traces.len(), 1, "only the wire-flagged query is traced");
+    let t = &traces[0];
+    assert_eq!(t.terminal, Terminal::Completed);
+    assert!(t.route_ns >= t.kernel_end_ns && t.reply_ns >= t.route_ns, "{t:?}");
+    assert!(t.route_ns > 0, "the router must stamp the route stage");
+    let names: Vec<&str> = t.spans().iter().map(|s| s.0).collect();
+    assert_eq!(names, ["admit", "compose", "kernel", "route", "reply"]);
+}
